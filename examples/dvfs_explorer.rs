@@ -1,0 +1,78 @@
+//! DVFS explorer: sweep the supply voltage and print the Fig. 8 curves
+//! for any core count, plus Monte-Carlo die sampling and an operating-
+//! point chooser ("best efficiency at ≥ X Gflop/s").
+//!
+//! Run: `cargo run --release --example dvfs_explorer -- \
+//!        [--cores 24] [--points 9] [--dies 8] [--min-gflops 40]`
+
+use manticore::power::DvfsModel;
+use manticore::util::bench::{fmt_si, Table};
+use manticore::util::cli;
+use manticore::util::rng::Rng;
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let (_, args) = cli::parse(&raw);
+    let cores = args.get_usize("cores", 24);
+    let points = args.get_usize("points", 9);
+    let dies = args.get_usize("dies", 8);
+    let min_gflops = args.get_f64("min-gflops", 40.0);
+
+    let m = DvfsModel::default();
+    let util = 0.9;
+
+    let mut t = Table::new(
+        &format!("DVFS sweep — {cores} cores, matmul @ 90 % FPU util"),
+        &["VDD [V]", "freq", "achieved", "power", "efficiency"],
+    );
+    for p in m.sweep(0.5, 0.9, points, cores, util) {
+        t.row(vec![
+            format!("{:.2}", p.vdd),
+            format!("{:.2} GHz", p.freq_hz / 1e9),
+            fmt_si(p.achieved_flops, "flop/s"),
+            format!("{:.3} W", p.power_w),
+            fmt_si(p.efficiency, "flop/s/W"),
+        ]);
+    }
+    t.print();
+
+    // Operating-point chooser: max efficiency subject to a perf floor.
+    let target = min_gflops * 1e9;
+    let best = m
+        .sweep(0.5, 0.9, 81, cores, util)
+        .into_iter()
+        .filter(|p| p.achieved_flops >= target)
+        .max_by(|a, b| a.efficiency.partial_cmp(&b.efficiency).unwrap());
+    match best {
+        Some(p) => println!(
+            "\nbest operating point with >= {} : {:.2} V ({:.2} GHz), \
+             {} at {}",
+            fmt_si(target, "flop/s"),
+            p.vdd,
+            p.freq_hz / 1e9,
+            fmt_si(p.achieved_flops, "flop/s"),
+            fmt_si(p.efficiency, "flop/s/W")
+        ),
+        None => println!(
+            "\nno operating point reaches {}",
+            fmt_si(target, "flop/s")
+        ),
+    }
+
+    // Die-to-die spread at the max-efficiency point (paper: 8 dies).
+    let mut td = Table::new(
+        &format!("{dies} Monte-Carlo dies @ 0.6 V"),
+        &["die", "freq", "efficiency"],
+    );
+    let mut rng = Rng::new(2020);
+    for d in 0..dies {
+        let die = m.die_sample(&mut rng);
+        let p = die.op_point(0.6, cores, util);
+        td.row(vec![
+            d.to_string(),
+            format!("{:.3} GHz", p.freq_hz / 1e9),
+            fmt_si(p.efficiency, "flop/s/W"),
+        ]);
+    }
+    td.print();
+}

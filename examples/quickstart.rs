@@ -1,0 +1,82 @@
+//! Quickstart: the three layers in one page.
+//!
+//! 1. Load an AOT-compiled JAX/Pallas GEMM artifact and execute it via
+//!    PJRT (real numerics, Python not involved at runtime).
+//! 2. Run the same GEMM shape on the cycle-level Snitch cluster
+//!    simulator (the paper's SSR+FREP kernel).
+//! 3. Price the full-size version on the 4096-core system model
+//!    (time, energy, efficiency).
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use anyhow::Result;
+use manticore::asm::kernels::gemm_ssr_frep;
+use manticore::config::Config;
+use manticore::coordinator::Coordinator;
+use manticore::mem::{ICache, Tcdm};
+use manticore::runtime::{Runtime, Tensor};
+use manticore::snitch::{run_single, SnitchCore};
+use manticore::util::bench::fmt_si;
+use manticore::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let cfg = Config::default();
+
+    // ---- 1. Real numerics through the AOT artifact ------------------
+    println!("== L2/L1: AOT'd JAX+Pallas matmul via PJRT ==");
+    let mut rt = Runtime::new("artifacts")?;
+    let mut rng = Rng::new(7);
+    let a: Vec<f64> = rng.normal_vec(64 * 64);
+    let b: Vec<f64> = rng.normal_vec(64 * 64);
+    let out = rt.execute(
+        "matmul_f64_64",
+        &[
+            Tensor::F64(a.clone(), vec![64, 64]),
+            Tensor::F64(b.clone(), vec![64, 64]),
+        ],
+    )?;
+    let c = out[0].as_f64().unwrap();
+    // spot-check one element against a host-side dot product
+    let want: f64 = (0..64).map(|l| a[l] * b[l * 64]).sum();
+    println!(
+        "  c[0][0] = {:.6} (host check {:.6}), platform = {}",
+        c[0],
+        want,
+        rt.platform()
+    );
+
+    // ---- 2. The same kernel on the cycle-level Snitch model ---------
+    println!("\n== L3: cycle-level SSR+FREP GEMM on one Snitch core ==");
+    let (m, k, n) = (16u32, 64u32, 16u32);
+    let b_addr = m * k * 8;
+    let c_addr = b_addr + k * n * 8 + 8;
+    let mut core = SnitchCore::new(
+        0,
+        cfg.cluster.core,
+        gemm_ssr_frep(m, k, n, 0, b_addr, c_addr),
+    );
+    let mut tcdm = Tcdm::new(cfg.cluster.tcdm_bytes, cfg.cluster.tcdm_banks);
+    let mut ic = ICache::new(cfg.cluster.icache_bytes, 10);
+    tcdm.write_f64_slice(0, &vec![1.0; (m * k + k * n + 8) as usize]);
+    let cycles = run_single(&mut core, &mut tcdm, &mut ic, 10_000_000);
+    println!(
+        "  {m}x{k}x{n} GEMM: {cycles} cycles, FPU utilization {:.1} % \
+         (paper: >90 %), fetched {} vs FPU-executed {}",
+        100.0 * core.flop_utilization(),
+        core.stats.fetched,
+        core.fpu.stats.issued
+    );
+
+    // ---- 3. Full-system estimate ------------------------------------
+    println!("\n== System model: 4096-core Manticore, 4096^3 GEMM ==");
+    let co = Coordinator::new(cfg.system, cfg.vdd);
+    let (time, perf) = co.schedule_gemm(4096, 4096, 4096);
+    println!(
+        "  est. {:.2} ms at {} ({:.0} % of peak), {} DP efficiency",
+        time * 1e3,
+        fmt_si(perf, "flop/s"),
+        100.0 * perf / cfg.system.peak_dp(cfg.vdd),
+        fmt_si(co.dp_linalg_efficiency(), "flop/s/W"),
+    );
+    Ok(())
+}

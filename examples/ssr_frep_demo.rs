@@ -1,0 +1,63 @@
+//! SSR/FREP walk-through: disassembles the four dot-product variants of
+//! Fig. 5, runs each on the cycle-level core, and shows where the
+//! cycles go — the paper's §Programming story, executable.
+//!
+//! Run: `cargo run --release --example ssr_frep_demo -- [--n 2048]`
+
+use manticore::asm::disassemble;
+use manticore::asm::kernels::*;
+use manticore::mem::{ICache, Tcdm};
+use manticore::snitch::{run_single, CoreConfig, SnitchCore};
+use manticore::util::cli;
+
+fn run(name: &str, prog: Vec<manticore::isa::Inst>, n: u32, show: bool) {
+    if show {
+        println!("--- {name} (first 24 instructions) ---");
+        let d = disassemble(&prog);
+        for line in d.lines().take(24) {
+            println!("  {line}");
+        }
+        println!();
+    }
+    let p = DotParams { n, x: 0, y: n * 8 + 8, out: 2 * n * 8 + 16 };
+    let mut core = SnitchCore::new(0, CoreConfig::default(), prog);
+    let mut tcdm = Tcdm::new(256 * 1024, 32);
+    let mut ic = ICache::new(8 * 1024, 10);
+    tcdm.write_f64_slice(p.x, &vec![1.5; n as usize]);
+    tcdm.write_f64_slice(p.y, &vec![2.0; n as usize]);
+    let cycles = run_single(&mut core, &mut tcdm, &mut ic, 100_000_000);
+    let s = &core.fpu.stats;
+    println!(
+        "{name:16} {cycles:>8} cycles | util {:>5.1} % | fetched {:>6} | \
+         fpu {:>6} (replayed {:>6}) | result {}",
+        100.0 * core.flop_utilization(),
+        core.stats.fetched,
+        s.issued,
+        s.replayed,
+        tcdm.read_f64(p.out),
+    );
+}
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let (_, args) = cli::parse(&raw);
+    let n = args.get_usize("n", 2048) as u32;
+    let show = !args.has_flag("quiet");
+    let p = DotParams { n, x: 0, y: n * 8 + 8, out: 2 * n * 8 + 16 };
+
+    println!(
+        "dot product of {n} f64 elements — the Fig. 5 ISA-extension story\n"
+    );
+    run("baseline", dot_baseline(p), n, show);
+    run("unrolled x4", dot_unrolled(p, 4), n, false);
+    run("+SSR", dot_ssr(p, 4), n, show);
+    run("+SSR +FREP", dot_ssr_frep(p, 4), n, show);
+    println!(
+        "\nexpected result: {n} x 1.5 x 2.0 = {}",
+        n as f64 * 3.0
+    );
+    println!(
+        "paper: baseline <=33 % even fully unrolled; SSR elides the \
+         loads; FREP removes the remaining bookkeeping -> >90 %."
+    );
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: L2 JAX model + L1 Pallas kernels + AOT lowering.
+
+Nothing in this package is imported at Rust runtime; `make artifacts`
+runs `compile.aot` once and the Rust binary is self-contained afterwards.
+"""

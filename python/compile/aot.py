@@ -1,0 +1,213 @@
+"""AOT lowering: JAX/L2 graphs → XLA HLO *text* artifacts for the Rust L3.
+
+Run once at build time (`make artifacts`). Emits, per entry point:
+
+    artifacts/<name>.hlo.txt     HLO text (the interchange format — jax
+                                 >= 0.5 emits protos with 64-bit ids that
+                                 xla_extension 0.5.1 rejects; the text
+                                 parser reassigns ids and round-trips)
+    artifacts/manifest.json      input/output shapes+dtypes per artifact
+    artifacts/testvec/<name>.json   small input/expected-output vectors
+                                 cross-checked by Rust integration tests
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import axpy, dot, matmul
+from .kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+BATCH = 32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Entry points. Each returns a *tuple* so every artifact has uniform
+# tuple-output calling convention on the Rust side.
+# ---------------------------------------------------------------------------
+
+def entry_matmul(m, k, n, dtype):
+    def fn(a, b):
+        return (matmul(a, b),)
+    return fn, (spec((m, k), dtype), spec((k, n), dtype))
+
+
+def entry_matmul_xla(m, k, n, dtype):
+    """Native jnp.matmul (no Pallas tiling): the L2 perf baseline that
+    quantifies what the structure-preserving interpret-mode lowering
+    costs on CPU (EXPERIMENTS.md §Perf)."""
+    def fn(a, b):
+        return (jnp.matmul(a, b),)
+    return fn, (spec((m, k), dtype), spec((k, n), dtype))
+
+
+def entry_matvec48(dtype=jnp.float64):
+    # The paper's Fig. 6 kernel: y = A x with N = 48.
+    def fn(a, x):
+        return (matmul(a, x.reshape(48, 1)).reshape(48),)
+    return fn, (spec((48, 48), dtype), spec((48,), dtype))
+
+
+def entry_dot(n, dtype):
+    def fn(x, y):
+        return (dot(x, y),)
+    return fn, (spec((n,), dtype), spec((n,), dtype))
+
+
+def entry_axpy(n, dtype):
+    def fn(a, x, y):
+        return (axpy(a, x, y),)
+    return fn, (spec((), dtype), spec((n,), dtype), spec((n,), dtype))
+
+
+def entry_conv2d(b, hw, cin, cout):
+    from .kernels import conv2d as conv_fn
+    def fn(x, w):
+        return (conv_fn(x, w),)
+    return fn, (spec((b, hw, hw, cin), jnp.float32),
+                spec((3, 3, cin, cout), jnp.float32))
+
+
+def entry_cnn_init():
+    def fn(seed):
+        return tuple(model.init(seed))
+    return fn, (spec((), jnp.uint32),)
+
+
+def entry_cnn_train_step(batch=BATCH):
+    def fn(*args):
+        p = model.Params(*args[:8])
+        x, y, lr = args[8], args[9], args[10]
+        new, loss = model.train_step(p, x, y, lr)
+        return tuple(new) + (loss,)
+    args = tuple(spec(s, jnp.float32) for _, s in model.PARAM_SHAPES) + (
+        spec((batch, model.IMG, model.IMG, 1), jnp.float32),
+        spec((batch,), jnp.int32),
+        spec((), jnp.float32),
+    )
+    return fn, args
+
+
+def entry_cnn_predict(batch=BATCH):
+    def fn(*args):
+        p = model.Params(*args[:8])
+        return (model.predict_batch(p, args[8]),)
+    args = tuple(spec(s, jnp.float32) for _, s in model.PARAM_SHAPES) + (
+        spec((batch, model.IMG, model.IMG, 1), jnp.float32),
+    )
+    return fn, args
+
+
+ENTRIES = {
+    "matmul_f64_64": entry_matmul(64, 64, 64, jnp.float64),
+    "matmul_f64_128": entry_matmul(128, 128, 128, jnp.float64),
+    "matmul_f32_256": entry_matmul(256, 256, 256, jnp.float32),
+    "matmul_xla_f32_256": entry_matmul_xla(256, 256, 256, jnp.float32),
+    "matvec_f64_48": entry_matvec48(),
+    "dot_f64_4096": entry_dot(4096, jnp.float64),
+    "axpy_f64_4096": entry_axpy(4096, jnp.float64),
+    "conv2d_f32_8x16x1x8": entry_conv2d(8, 16, 1, 8),
+    "cnn_init": entry_cnn_init(),
+    "cnn_train_step": entry_cnn_train_step(),
+    "cnn_predict": entry_cnn_predict(),
+}
+
+# Artifacts with small enough I/O to get JSON test vectors for the Rust
+# integration tests (name -> rng seed).
+TESTVEC = {
+    "matmul_f64_64": 0,
+    "matvec_f64_48": 1,
+    "dot_f64_4096": 2,
+    "axpy_f64_4096": 3,
+}
+
+
+def _dtype_name(d) -> str:
+    return np.dtype(d).name
+
+
+def emit(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "testvec"), exist_ok=True)
+    manifest = {}
+    for name, (fn, args) in ENTRIES.items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_specs = jax.eval_shape(fn, *args)
+        manifest[name] = {
+            "inputs": [
+                {"shape": list(a.shape), "dtype": _dtype_name(a.dtype)}
+                for a in args
+            ],
+            "outputs": [
+                {"shape": list(o.shape), "dtype": _dtype_name(o.dtype)}
+                for o in out_specs
+            ],
+        }
+        print(f"  {name}: {len(text)} chars, "
+              f"{len(args)} inputs -> {len(out_specs)} outputs")
+
+    for name, seed in TESTVEC.items():
+        fn, args = ENTRIES[name]
+        rng = np.random.default_rng(seed)
+        concrete = []
+        for a in args:
+            if np.issubdtype(a.dtype, np.floating):
+                v = rng.standard_normal(a.shape).astype(a.dtype)
+            else:
+                v = rng.integers(0, 10, a.shape).astype(a.dtype)
+            concrete.append(v)
+        outs = fn(*[jnp.asarray(v) for v in concrete])
+        vec = {
+            "inputs": [np.asarray(v).ravel().tolist() for v in concrete],
+            "outputs": [np.asarray(o).ravel().tolist() for o in outs],
+        }
+        with open(os.path.join(out_dir, "testvec", f"{name}.json"), "w") as f:
+            json.dump(vec, f)
+        print(f"  testvec {name}")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(ENTRIES)} artifacts to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of entry names")
+    args = ap.parse_args()
+    global ENTRIES
+    if args.only:
+        ENTRIES = {k: v for k, v in ENTRIES.items() if k in args.only}
+    emit(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

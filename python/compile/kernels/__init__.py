@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (build-time only) + pure-jnp oracles in ref.py."""
+from . import ref  # noqa: F401
+from .axpy import axpy  # noqa: F401
+from .conv2d import conv2d, conv2d_grad  # noqa: F401
+from .dot import dot  # noqa: F401
+from .matmul import matmul, matmul_grad  # noqa: F401
+from .pool import maxpool2x2  # noqa: F401

@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: axpy (y' = a*x + y) — the memory-bound streamer.
+
+The paper uses memory-bound kernels (linear/pooling layers) to exercise
+the bandwidth half of the roofline; axpy is the minimal such kernel:
+1 fma per 3 words of traffic. No accumulation across grid steps — each
+block is an independent stream tile, i.e. a pure 1-D SSR write stream.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+
+
+def _axpy_kernel(a_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = a_ref[0] * x_ref[...] + y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def axpy(alpha: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray, *,
+         block: int = BLOCK) -> jnp.ndarray:
+    (n,) = x.shape
+    block = min(block, max(n, 1))
+    pad = (-n) % block
+    xp = jnp.pad(x, (0, pad)) if pad else x
+    yp = jnp.pad(y, (0, pad)) if pad else y
+    a = jnp.reshape(alpha, (1,)).astype(x.dtype)
+    grid = (xp.shape[0] // block,)
+    out = pl.pallas_call(
+        _axpy_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0],), x.dtype),
+        interpret=True,
+    )(a, xp, yp)
+    return out[:n]

@@ -1,0 +1,32 @@
+"""L1 Pallas path for conv2d: im2col (DMA analogue) + Pallas matmul.
+
+The paper's convolution layers are lowered onto the cluster as
+DMA-rearranged patch streams fed to the SSR/FREP GEMM — exactly im2col +
+matmul. We keep im2col in plain (differentiable) jnp — it is the *DMA*,
+not the *FPU*, side of the paper's split — and run the GEMM itself on the
+Pallas tile kernel so convs exercise the same hot spot as linear layers.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ref
+from .matmul import matmul, matmul_grad
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """SAME conv, NHWC × (KH,KW,C,F) → NHWC. Forward only."""
+    n, h, ww, c = x.shape
+    kh, kw, _, f = w.shape
+    cols = ref.im2col(x, kh, kw)
+    out = matmul(cols, w.reshape(kh * kw * c, f))
+    return out.reshape(n, h, ww, f)
+
+
+def conv2d_grad(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable conv: GEMM fwd+bwd both on the Pallas kernel."""
+    n, h, ww, c = x.shape
+    kh, kw, _, f = w.shape
+    cols = ref.im2col(x, kh, kw)
+    out = matmul_grad(cols, w.reshape(kh * kw * c, f))
+    return out.reshape(n, h, ww, f)

@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: streaming dot product (the paper's Fig. 5 kernel).
+
+On Manticore, dot saturates the FPU only after SSRs elide the two loads
+per fmadd and FREP elides the loop bookkeeping. The Pallas analogue
+streams fixed-size chunks (the "SSR burst") from HBM and reduces them in
+a scalar accumulator held across grid steps — sequential-grid revisiting
+of the same output ref is the FREP of the TPU pipeline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024  # elements per grid step — one "SSR burst" of the stream
+
+
+def _dot_kernel(x_ref, y_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(x_ref[...] * y_ref[...], dtype=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def dot(x: jnp.ndarray, y: jnp.ndarray, *, block: int = BLOCK) -> jnp.ndarray:
+    """<x, y> for 1-D x, y of equal length (zero-padded to the block)."""
+    (n,) = x.shape
+    assert x.shape == y.shape
+    block = min(block, max(n, 1))
+    pad = (-n) % block
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        y = jnp.pad(y, (0, pad))
+    grid = (x.shape[0] // block,)
+    # NOTE: the accumulator ref is (1,), not scalar — a rank-0 output ref
+    # makes the sequential-grid lowering emit a rank-0 stablehlo
+    # dynamic_slice whose textual form cannot be re-parsed by the HLO
+    # converter on the AOT path (see aot.py docstring).
+    out = pl.pallas_call(
+        _dot_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        interpret=True,
+    )(x, y)
+    return out[0]

@@ -1,0 +1,106 @@
+"""L1 Pallas kernel: tiled matmul — the Manticore hot spot, adapted to TPU.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper keeps a
+Snitch FPU saturated by (a) streaming operands out of the 128 kB TCDM via
+SSRs and (b) repeating the FMA via FREP so the issue pipe carries no
+loads/branches. On TPU the same insight becomes:
+
+  * TCDM          -> VMEM tile residency, sized by BlockSpec;
+  * SSR streams   -> BlockSpec index_maps (affine HBM->VMEM schedules);
+  * FREP'd FMA    -> a full MXU contraction per tile (`jnp.dot`), i.e.
+                     FREP unrolled in space across the systolic array.
+
+The kernel accumulates over the K grid dimension in the output ref —
+the exact analogue of the paper's Fig. 6 unrolled accumulator chain.
+Lowered with interpret=True (CPU PJRT); on real TPU the same BlockSpecs
+define the Mosaic pipeline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 128^2 * 4 B * 3 tiles ≈ 196 kB — comfortably inside
+# a TPU VMEM budget (16 MB) and MXU-shaped (128x128 systolic array);
+# also the footprint discipline of the paper's TCDM double-buffering,
+# scaled to the TPU memory ratio. Perf note (EXPERIMENTS.md §Perf, L1
+# iteration): 128 tiles cut the grid-step count 8x vs 64 tiles, which
+# both reduces the interpret-mode while-loop overhead on CPU and feeds
+# the MXU full-width tiles on real hardware.
+BM, BN, BK = 128, 128, 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (bm, bn) output tile; K arrives over the last grid dimension."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # The MXU contraction == the FREP'd fmadd chain of Fig. 6.
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _pad_to(x: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = BM, bn: int = BN,
+           bk: int = BK) -> jnp.ndarray:
+    """C = A @ B via the Pallas tile pipeline. Arbitrary shapes (padded)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm, bn, bk = min(bm, max(m, 1)), min(bn, max(n, 1)), min(bk, max(k, 1))
+    ap = _pad_to(a, bm, bk)
+    bp = _pad_to(b, bk, bn)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper: backward pass also runs on the Pallas kernel
+# (dx = g @ w^T, dw = x^T @ g), mirroring how the paper's training step
+# keeps *all* GEMMs on the SSR/FREP path.
+# ---------------------------------------------------------------------------
+@jax.custom_vjp
+def matmul_grad(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return matmul(a, b)
+
+
+def _mm_fwd(a, b):
+    return matmul(a, b), (a, b)
+
+
+def _mm_bwd(res, g):
+    a, b = res
+    da = matmul(g, b.T)
+    db = matmul(a.T, g)
+    return da, db
+
+
+matmul_grad.defvjp(_mm_fwd, _mm_bwd)

@@ -1,0 +1,35 @@
+"""L1 Pallas kernel: 2x2/stride-2 max pooling over NHWC.
+
+A pure memory-bound layer in the paper's Fig. 9 roofline (the
+"linear/pooling" group that reaches >90 % of peak bandwidth). One image
+row-pair per grid step keeps the block shapes static.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_kernel(x_ref, o_ref):
+    x = x_ref[...]  # (1, 2, W, C)
+    n, two, w, c = x.shape
+    x = x.reshape(n, 1, 2, w // 2, 2, c)
+    o_ref[...] = x.max(axis=(2, 4))
+
+
+@jax.jit
+def maxpool2x2(x: jnp.ndarray) -> jnp.ndarray:
+    n, h, w, c = x.shape
+    assert h % 2 == 0 and w % 2 == 0, "maxpool2x2 needs even H, W"
+    grid = (n, h // 2)
+    return pl.pallas_call(
+        _pool_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 2, w, c), lambda i, j: (i, j, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, w // 2, c), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h // 2, w // 2, c), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,77 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the CORE correctness signal: each L1 kernel in this package is
+checked against the function of the same name here by pytest/hypothesis
+(see python/tests/). They are deliberately written in the most obvious
+jnp style — no tiling, no tricks — so that a mismatch always indicts the
+kernel, not the oracle.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C = A @ B with accumulation in the dtype's natural precision."""
+    acc = jnp.float64 if a.dtype == jnp.float64 else jnp.float32
+    return jnp.matmul(a.astype(acc), b.astype(acc)).astype(a.dtype)
+
+
+def dot(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Dot product — the paper's Fig. 5 kernel (2 loads : 1 fma)."""
+    return jnp.sum(x * y, dtype=x.dtype)
+
+
+def axpy(alpha: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """y' = alpha * x + y (memory-bound streaming kernel)."""
+    return alpha * x + y
+
+
+def matvec(a: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """y = A x — the paper's Fig. 6 kernel (N=48 in the paper)."""
+    return jnp.matmul(a, x)
+
+
+def relu(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(x, 0)
+
+
+def maxpool2x2(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2/stride-2 max pooling over NHWC."""
+    n, h, w, c = x.shape
+    x = x.reshape(n, h // 2, 2, w // 2, 2, c)
+    return x.max(axis=(2, 4))
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int) -> jnp.ndarray:
+    """SAME-padded im2col over NHWC → (N*H*W, KH*KW*C) patch matrix.
+
+    This is the data rearrangement the paper performs with the cluster
+    DMA engine before streaming patches through the SSRs.
+    """
+    n, h, w, c = x.shape
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(xp[:, i : i + h, j : j + w, :])
+    patches = jnp.concatenate(cols, axis=-1)  # N,H,W,KH*KW*C
+    return patches.reshape(n * h * w, kh * kw * c)
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """SAME conv, NHWC x (KH,KW,C,F) → NHWC, via im2col + matmul."""
+    n, h, ww, c = x.shape
+    kh, kw, _, f = w.shape
+    cols = im2col(x, kh, kw)
+    out = matmul(cols, w.reshape(kh * kw * c, f))
+    return out.reshape(n, h, ww, f)
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy with integer labels."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,94 @@
+"""L2: the DNN training-step compute graph, in JAX, on the L1 kernels.
+
+This is the workload of the paper's Figs. 9/10 (DNN training steps built
+from convolution, linear and pooling layers), shrunk to a small CNN that
+the interpret-mode Pallas pipeline can execute quickly on CPU. Every GEMM
+— conv (via im2col), linear, and all their backward passes — runs through
+the Pallas matmul kernel (`matmul_grad`), so the AOT'd training step
+exercises the L1 hot spot end to end.
+
+Architecture (NHWC, SAME convs, 16×16 synthetic "images"):
+    conv 3x3x1→8  + relu + maxpool2   (16→8)
+    conv 3x3x8→16 + relu + maxpool2   (8→4)
+    flatten → linear 256→64 + relu → linear 64→10
+    softmax cross-entropy, SGD update fused into the step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.conv2d import conv2d_grad
+from .kernels.matmul import matmul_grad
+
+IMG = 16        # input spatial size
+NCLASS = 10
+
+
+class Params(NamedTuple):
+    """Flat, fixed-order parameter record (order == HLO argument order)."""
+    w1: jnp.ndarray  # (3,3,1,8)
+    b1: jnp.ndarray  # (8,)
+    w2: jnp.ndarray  # (3,3,8,16)
+    b2: jnp.ndarray  # (16,)
+    w3: jnp.ndarray  # (256,64)
+    b3: jnp.ndarray  # (64,)
+    w4: jnp.ndarray  # (64,10)
+    b4: jnp.ndarray  # (10,)
+
+
+PARAM_SHAPES = [
+    ("w1", (3, 3, 1, 8)), ("b1", (8,)),
+    ("w2", (3, 3, 8, 16)), ("b2", (16,)),
+    ("w3", (IMG * IMG, 64)), ("b3", (64,)),
+    ("w4", (64, NCLASS)), ("b4", (NCLASS,)),
+]
+
+
+def init(seed: jnp.ndarray) -> Params:
+    """He-style init from a scalar uint32 seed (lowered into the artifact)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    def he(k, shape, fan_in):
+        return jax.random.normal(k, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+    return Params(
+        w1=he(ks[0], (3, 3, 1, 8), 9),
+        b1=jnp.zeros((8,), jnp.float32),
+        w2=he(ks[1], (3, 3, 8, 16), 72),
+        b2=jnp.zeros((16,), jnp.float32),
+        w3=he(ks[2], (IMG * IMG, 64), IMG * IMG),
+        b3=jnp.zeros((64,), jnp.float32),
+        w4=he(ks[3], (64, NCLASS), 64),
+        b4=jnp.zeros((NCLASS,), jnp.float32),
+    )
+
+
+def forward(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits for a batch of NHWC images. All GEMMs on the Pallas kernel."""
+    h = ref.relu(conv2d_grad(x, p.w1) + p.b1)
+    h = ref.maxpool2x2(h)                      # B,8,8,8
+    h = ref.relu(conv2d_grad(h, p.w2) + p.b2)
+    h = ref.maxpool2x2(h)                      # B,4,4,16
+    h = h.reshape(h.shape[0], -1)              # B,256
+    h = ref.relu(matmul_grad(h, p.w3) + p.b3)
+    return matmul_grad(h, p.w4) + p.b4
+
+
+def loss_fn(p: Params, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return ref.softmax_xent(forward(p, x), y)
+
+
+def train_step(p: Params, x: jnp.ndarray, y: jnp.ndarray,
+               lr: jnp.ndarray):
+    """One fused SGD step: returns (new_params..., loss)."""
+    loss, grads = jax.value_and_grad(loss_fn)(p, x, y)
+    new = Params(*(w - lr * g for w, g in zip(p, grads)))
+    return new, loss
+
+
+def predict_batch(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Argmax class per image — the inference entry point."""
+    return jnp.argmax(forward(p, x), axis=-1).astype(jnp.int32)

@@ -1,0 +1,3 @@
+import jax
+
+jax.config.update("jax_enable_x64", True)

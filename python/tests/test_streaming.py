@@ -1,0 +1,68 @@
+"""dot / axpy / pooling Pallas kernels vs oracles (hypothesis sweeps)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import axpy, dot, maxpool2x2, ref
+
+N = st.integers(min_value=1, max_value=5000)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=N, dtype=st.sampled_from([np.float32, np.float64]))
+def test_dot_matches_ref(n, dtype):
+    rng = np.random.default_rng(n)
+    x = rng.standard_normal(n).astype(dtype)
+    y = rng.standard_normal(n).astype(dtype)
+    tol = 1e-3 if dtype == np.float32 else 1e-9
+    np.testing.assert_allclose(dot(x, y), ref.dot(x, y),
+                               rtol=tol, atol=tol * max(1, n) ** 0.5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(block=st.sampled_from([1, 7, 64, 1024, 4096]))
+def test_dot_block_invariance(block):
+    """The SSR burst size must not change the value."""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(2048)
+    y = rng.standard_normal(2048)
+    np.testing.assert_allclose(dot(x, y, block=block), ref.dot(x, y),
+                               rtol=1e-9)
+
+
+def test_dot_orthogonal():
+    x = np.array([1.0, 0.0, 1.0, 0.0])
+    y = np.array([0.0, 1.0, 0.0, 1.0])
+    assert float(dot(x, y)) == 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=N, alpha=st.floats(-10, 10, allow_nan=False))
+def test_axpy_matches_ref(n, alpha):
+    rng = np.random.default_rng(n + 1)
+    x = rng.standard_normal(n)
+    y = rng.standard_normal(n)
+    np.testing.assert_allclose(
+        axpy(jnp.float64(alpha), x, y), ref.axpy(alpha, x, y), rtol=1e-12)
+
+
+def test_axpy_alpha_zero_is_identity():
+    y = np.random.default_rng(3).standard_normal(100)
+    np.testing.assert_array_equal(
+        np.asarray(axpy(jnp.float64(0.0), np.ones(100), y)), y)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 4), h=st.sampled_from([2, 4, 8, 16]),
+       w=st.sampled_from([2, 4, 8, 16]), c=st.integers(1, 8))
+def test_maxpool_matches_ref(n, h, w, c):
+    rng = np.random.default_rng(n * h * w * c)
+    x = rng.standard_normal((n, h, w, c)).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(maxpool2x2(x)), np.asarray(ref.maxpool2x2(x)))
+
+
+def test_maxpool_odd_raises():
+    with pytest.raises(AssertionError):
+        maxpool2x2(np.zeros((1, 3, 4, 1), np.float32))

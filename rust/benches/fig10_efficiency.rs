@@ -1,0 +1,10 @@
+//! Bench: Fig. 10 — SP/DP energy-efficiency comparison against
+//! V100 / A100 / i9-9900K / Neoverse N1 / Celerity.
+
+use manticore::repro;
+
+fn main() {
+    let (sp, dp) = repro::fig10();
+    sp.print();
+    dp.print();
+}

@@ -1,0 +1,39 @@
+//! Bench: Fig. 3 — bandwidth-thinned interconnect: HBM saturation,
+//! intra-S1 locality, cross-level thinning, NUMA, plus a demand sweep
+//! and allocation-throughput timing.
+
+use manticore::interconnect::{Endpoint, Flow, Tree, TreeConfig};
+use manticore::repro;
+use manticore::util::bench::{bench, Table};
+
+fn main() {
+    repro::fig3().print();
+
+    // Demand sweep: per-cluster HBM demand vs achieved total — shows
+    // the saturation knee of the memory system.
+    let tree = Tree::new(TreeConfig::default());
+    let mut t = Table::new(
+        "HBM demand sweep (per-cluster demand vs achieved aggregate)",
+        &["demand/cluster [B/c]", "achieved [B/c]", "of HBM peak"],
+    );
+    for d in [0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0] {
+        let got = tree.hbm_saturation(d);
+        t.row(vec![
+            format!("{d}"),
+            format!("{got:.0}"),
+            format!("{:.0} %", 100.0 * got / tree.cfg.aggregate_hbm()),
+        ]);
+    }
+    t.print();
+
+    // Timing of the max-min-fair allocator with 512 flows.
+    let flows: Vec<Flow> = (0..tree.cfg.total_clusters())
+        .map(|c| {
+            let (ch, ..) = tree.cfg.cluster_coords(c);
+            Flow { src: c, dst: Endpoint::Hbm(ch), demand: 64.0 }
+        })
+        .collect();
+    bench("interconnect/allocate_512_flows", || {
+        std::hint::black_box(tree.allocate(&flows));
+    });
+}

@@ -1,0 +1,29 @@
+//! Bench: Fig. 5 — dot-product FPU utilization across ISA variants,
+//! plus simulator-throughput timing for the hot variant.
+
+use manticore::repro;
+use manticore::util::bench::bench;
+
+fn main() {
+    // The figure itself (several sizes to show the asymptote).
+    for n in [256u32, 1024, 4096] {
+        repro::fig5(n).print();
+    }
+
+    // Timing: how fast the cycle-level model runs the hot variant.
+    use manticore::asm::kernels::{dot_ssr_frep, DotParams};
+    use manticore::mem::{ICache, Tcdm};
+    use manticore::snitch::{run_single, CoreConfig, SnitchCore};
+    let n = 4096u32;
+    let p = DotParams { n, x: 0, y: n * 8 + 8, out: 2 * n * 8 + 16 };
+    let prog = dot_ssr_frep(p, 4);
+    bench("sim/dot_ssr_frep_4096", || {
+        let mut core = SnitchCore::new(0, CoreConfig::default(), prog.clone());
+        let mut tcdm = Tcdm::new(256 * 1024, 32);
+        let mut ic = ICache::new(8 * 1024, 10);
+        tcdm.write_f64_slice(p.x, &vec![1.0; n as usize]);
+        tcdm.write_f64_slice(p.y, &vec![1.0; n as usize]);
+        let cycles = run_single(&mut core, &mut tcdm, &mut ic, 10_000_000);
+        std::hint::black_box(cycles);
+    });
+}

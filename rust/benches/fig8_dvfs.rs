@@ -1,0 +1,14 @@
+//! Bench: Fig. 8 — DVFS sweep (perf/efficiency/power vs VDD) on the
+//! 24-core prototype model, nominal + 8 Monte-Carlo dies.
+
+use manticore::repro;
+
+fn main() {
+    let (sweep, dies) = repro::fig8(9, 8);
+    sweep.print();
+    dies.print();
+
+    // Fine sweep for the curve shape (the figure's x-axis density).
+    let (fine, _) = repro::fig8(17, 0);
+    fine.print();
+}

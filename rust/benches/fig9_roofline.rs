@@ -1,0 +1,24 @@
+//! Bench: Fig. 9 — roofline of DNN training workloads on the full
+//! 4096-core system, with the calibration *measured* on the
+//! cycle-level cluster simulator (DMA vs compute bank conflicts).
+
+use manticore::coordinator::measure_calibration;
+use manticore::repro;
+use manticore::util::bench::bench;
+
+fn main() {
+    // Analytical-calibration table first (fast), then measured.
+    repro::fig9(false).print();
+
+    println!("\nmeasuring calibration on the cycle-level cluster …");
+    let c = measure_calibration();
+    println!(
+        "  compute util {:.3}, mem util {:.3}, ridge dip {:.3}",
+        c.compute_util, c.mem_util, c.ridge_dip
+    );
+    repro::fig9(true).print();
+
+    bench("sim/cluster_calibration", || {
+        std::hint::black_box(measure_calibration());
+    });
+}

@@ -1,0 +1,134 @@
+//! Perf bench: the hot paths of the stack (EXPERIMENTS.md §Perf).
+//!   * simulator throughput (simulated core-cycles per host second);
+//!   * cluster step throughput (8 cores + arbiter + DMA);
+//!   * interconnect allocator;
+//!   * PJRT execute latency for small and training-step artifacts.
+
+use manticore::asm::kernels::*;
+use manticore::mem::{ICache, Tcdm};
+use manticore::snitch::{run_single, CoreConfig, SnitchCore};
+use manticore::util::bench::{bench, fmt_si};
+
+fn main() {
+    // 1. Single-core simulator throughput on the Fig. 6 kernel.
+    const N: u32 = 48;
+    let prog = matvec48_fig6(0, N * N * 8, N * N * 8 + N * 8 + 8);
+    let mut sim_cycles = 0u64;
+    let s = bench("sim/single_core_matvec48", || {
+        let mut core = SnitchCore::new(0, CoreConfig::default(), prog.clone());
+        let mut tcdm = Tcdm::new(128 * 1024, 32);
+        let mut ic = ICache::new(8 * 1024, 10);
+        tcdm.write_f64_slice(0, &vec![1.0; (N * N + N) as usize]);
+        sim_cycles = run_single(&mut core, &mut tcdm, &mut ic, 1_000_000);
+        std::hint::black_box(sim_cycles);
+    });
+    println!(
+        "  -> simulator speed: {} simulated cycles/s\n",
+        fmt_si(sim_cycles as f64 / (s.mean_ns * 1e-9), "cyc/s")
+    );
+
+    // 2. Cluster (8 cores + DMA) throughput.
+    use manticore::cluster::{ClusterConfig, ClusterSim, DmaXfer};
+    let mut cluster_cycles = 0u64;
+    let s = bench("sim/cluster_8core_gemm", || {
+        let (m, k, n) = (8u32, 64u32, 16u32);
+        let mut programs = Vec::new();
+        for core in 0..8u32 {
+            let base = core * 16384;
+            programs.push(gemm_ssr_frep(
+                m, k, n,
+                base,
+                base + m * k * 8,
+                base + m * k * 8 + k * n * 8 + 8,
+            ));
+        }
+        let mut sim = ClusterSim::new(ClusterConfig::default(), programs);
+        for i in 0..(16 * 1024) {
+            sim.tcdm.write_f64(i * 8, 1.0);
+        }
+        sim.dma.enqueue(DmaXfer {
+            tcdm_addr: 110 * 1024,
+            ext_offset: 0,
+            words: 2048,
+            to_tcdm: true,
+        });
+        cluster_cycles = sim.run(10_000_000);
+        std::hint::black_box(cluster_cycles);
+    });
+    println!(
+        "  -> cluster speed: {} simulated core-cycles/s (8 cores)\n",
+        fmt_si(
+            (cluster_cycles * 8) as f64 / (s.mean_ns * 1e-9),
+            "cyc/s"
+        )
+    );
+
+    // 3. PJRT execute latency.
+    use manticore::runtime::{Runtime, Tensor};
+    use manticore::util::rng::Rng;
+    match Runtime::new("artifacts") {
+        Ok(mut rt) => {
+            let mut rng = Rng::new(3);
+            let a = Tensor::F64(rng.normal_vec(64 * 64), vec![64, 64]);
+            let b = Tensor::F64(rng.normal_vec(64 * 64), vec![64, 64]);
+            rt.execute("matmul_f64_64", &[a.clone(), b.clone()]).unwrap();
+            bench("pjrt/matmul_f64_64", || {
+                std::hint::black_box(
+                    rt.execute("matmul_f64_64", &[a.clone(), b.clone()])
+                        .unwrap(),
+                );
+            });
+
+            let a = Tensor::F32(
+                rng.normal_vec(256 * 256)
+                    .into_iter()
+                    .map(|v| v as f32)
+                    .collect(),
+                vec![256, 256],
+            );
+            let b2 = Tensor::F32(
+                rng.normal_vec(256 * 256)
+                    .into_iter()
+                    .map(|v| v as f32)
+                    .collect(),
+                vec![256, 256],
+            );
+            rt.execute("matmul_f32_256", &[a.clone(), b2.clone()]).unwrap();
+            bench("pjrt/matmul_f32_256", || {
+                std::hint::black_box(
+                    rt.execute("matmul_f32_256", &[a.clone(), b2.clone()])
+                        .unwrap(),
+                );
+            });
+            // L2 ablation: same shape through native XLA dot (no
+            // Pallas grid) — what interpret-mode tiling costs on CPU.
+            if rt.meta("matmul_xla_f32_256").is_some() {
+                rt.execute("matmul_xla_f32_256", &[a.clone(), b2.clone()])
+                    .unwrap();
+                bench("pjrt/matmul_xla_f32_256 (no pallas grid)", || {
+                    std::hint::black_box(
+                        rt.execute(
+                            "matmul_xla_f32_256",
+                            &[a.clone(), b2.clone()],
+                        )
+                        .unwrap(),
+                    );
+                });
+            }
+        }
+        Err(e) => println!("(skipping PJRT benches: {e})"),
+    }
+
+    // 4. Interconnect allocator (also in fig3 bench; here for §Perf).
+    use manticore::interconnect::{Endpoint, Flow, Tree, TreeConfig};
+    let tree = Tree::new(TreeConfig::default());
+    let flows: Vec<Flow> = (0..tree.cfg.total_clusters())
+        .map(|c| {
+            let (ch, ..) = tree.cfg.cluster_coords(c);
+            Flow { src: c, dst: Endpoint::Hbm(ch), demand: 64.0 }
+        })
+        .collect();
+    bench("interconnect/allocate_512_hbm_flows", || {
+        std::hint::black_box(tree.allocate(&flows));
+    });
+}

@@ -1,0 +1,335 @@
+//! Ariane management-core model: the offload control plane.
+//!
+//! Paper: "The four Ariane management cores run a general-purpose
+//! operating system such as Linux and manage the Snitch clusters and
+//! program off-loading." We model the *protocol*, not the RV64GC core:
+//! jobs are submitted to per-chiplet run queues, an Ariane dispatches
+//! each job's kernel binary + argument frame to idle clusters, tracks
+//! completion (the cluster barrier), and reclaims the clusters. This is
+//! the substrate the coordinator's GEMM/layer schedules execute on.
+
+use std::collections::VecDeque;
+
+/// A kernel offload request: which program, how many clusters, and the
+/// DMA bytes that must move before/after compute.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: u64,
+    pub name: String,
+    pub clusters_needed: usize,
+    /// Estimated compute cycles per cluster (from the kernel model).
+    pub compute_cycles: u64,
+    pub dma_in_bytes: u64,
+    pub dma_out_bytes: u64,
+}
+
+/// Lifecycle of a job in the control plane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    /// Dispatched to clusters; DMA-in in flight.
+    Loading,
+    Running,
+    /// Compute finished; DMA-out draining.
+    Draining,
+    Done,
+}
+
+#[derive(Debug, Clone)]
+struct ActiveJob {
+    job: Job,
+    state: JobState,
+    clusters: Vec<usize>,
+    /// Cycle at which the current phase completes.
+    phase_end: u64,
+    finished_at: u64,
+}
+
+/// Completion record returned to the caller.
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    pub id: u64,
+    pub name: String,
+    pub queued_cycles: u64,
+    pub total_cycles: u64,
+    pub clusters: usize,
+}
+
+/// One chiplet's management core + its cluster pool.
+#[derive(Debug)]
+pub struct OffloadManager {
+    /// Per-cluster busy-until cycle (0 = idle).
+    cluster_free_at: Vec<u64>,
+    queue: VecDeque<(Job, u64)>,
+    active: Vec<ActiveJob>,
+    done: Vec<JobReport>,
+    now: u64,
+    next_id: u64,
+    /// DMA bandwidth available per cluster for job loading [B/cycle].
+    pub dma_bytes_per_cycle: f64,
+    /// Dispatch overhead per job (Ariane runtime cost), cycles.
+    pub dispatch_overhead: u64,
+}
+
+impl OffloadManager {
+    pub fn new(n_clusters: usize) -> Self {
+        OffloadManager {
+            cluster_free_at: vec![0; n_clusters],
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            done: Vec::new(),
+            now: 0,
+            next_id: 0,
+            dma_bytes_per_cycle: 64.0,
+            dispatch_overhead: 200,
+        }
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.cluster_free_at.len()
+    }
+
+    /// Submit a job; returns its id.
+    pub fn submit(&mut self, mut job: Job) -> u64 {
+        assert!(
+            job.clusters_needed >= 1
+                && job.clusters_needed <= self.n_clusters(),
+            "job wants {} of {} clusters",
+            job.clusters_needed,
+            self.n_clusters()
+        );
+        job.id = self.next_id;
+        self.next_id += 1;
+        let id = job.id;
+        self.queue.push_back((job, self.now));
+        id
+    }
+
+    fn idle_clusters(&self) -> Vec<usize> {
+        self.cluster_free_at
+            .iter()
+            .enumerate()
+            .filter(|(_, &f)| f <= self.now)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Advance the control plane by `cycles` (event-driven: jump from
+    /// phase boundary to phase boundary).
+    pub fn tick(&mut self, cycles: u64) {
+        let end = self.now + cycles;
+        loop {
+            // Retire/advance anything due now, then fill idle clusters.
+            self.advance_phases();
+            self.dispatch();
+            // Jump to the next phase boundary within this tick window.
+            let next = self
+                .active
+                .iter()
+                .map(|a| a.phase_end)
+                .filter(|&t| t > self.now)
+                .min();
+            match next {
+                Some(t) if t <= end => self.now = t,
+                _ => {
+                    self.now = end;
+                    self.advance_phases();
+                    self.dispatch();
+                    return;
+                }
+            }
+        }
+    }
+
+    fn advance_phases(&mut self) {
+        let now = self.now;
+        let dma = self.dma_bytes_per_cycle;
+        for a in &mut self.active {
+            if a.phase_end > now {
+                continue;
+            }
+            match a.state {
+                JobState::Loading => {
+                    a.state = JobState::Running;
+                    a.phase_end = now + a.job.compute_cycles;
+                }
+                JobState::Running => {
+                    a.state = JobState::Draining;
+                    let per_cluster = a.job.dma_out_bytes as f64
+                        / a.clusters.len() as f64;
+                    a.phase_end = now + (per_cluster / dma).ceil() as u64;
+                }
+                JobState::Draining => {
+                    a.state = JobState::Done;
+                    a.finished_at = now;
+                }
+                _ => {}
+            }
+        }
+        // Retire finished jobs and free their clusters.
+        let mut retired = Vec::new();
+        self.active.retain(|a| {
+            if a.state == JobState::Done {
+                retired.push(a.clone());
+                false
+            } else {
+                true
+            }
+        });
+        for a in retired {
+            for &c in &a.clusters {
+                self.cluster_free_at[c] = now;
+            }
+            self.done.push(JobReport {
+                id: a.job.id,
+                name: a.job.name.clone(),
+                queued_cycles: 0, // filled by caller-side accounting
+                total_cycles: a.finished_at,
+                clusters: a.clusters.len(),
+            });
+        }
+    }
+
+    fn dispatch(&mut self) {
+        loop {
+            let Some((job, _queued_at)) = self.queue.front() else {
+                return;
+            };
+            let idle = self.idle_clusters();
+            if idle.len() < job.clusters_needed {
+                return; // head-of-line blocking, like a simple runtime
+            }
+            let (job, _queued_at) = self.queue.pop_front().unwrap();
+            let clusters: Vec<usize> =
+                idle.into_iter().take(job.clusters_needed).collect();
+            for &c in &clusters {
+                self.cluster_free_at[c] = u64::MAX; // busy
+            }
+            let per_cluster =
+                job.dma_in_bytes as f64 / clusters.len() as f64;
+            let load =
+                (per_cluster / self.dma_bytes_per_cycle).ceil() as u64;
+            self.active.push(ActiveJob {
+                phase_end: self.now + self.dispatch_overhead + load,
+                state: JobState::Loading,
+                clusters,
+                job,
+                finished_at: 0,
+            });
+        }
+    }
+
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len() + self.active.len()
+    }
+
+    pub fn completed(&self) -> &[JobReport] {
+        &self.done
+    }
+
+    /// Run until every submitted job completes; returns the makespan
+    /// (time from start until the last completion, not the tick
+    /// granularity).
+    pub fn drain(&mut self, max_cycles: u64) -> u64 {
+        let start = self.now;
+        while self.pending() > 0 {
+            assert!(
+                self.now - start < max_cycles,
+                "offload queue did not drain in {max_cycles} cycles"
+            );
+            self.tick(1_000_000);
+        }
+        self.done
+            .iter()
+            .map(|r| r.total_cycles)
+            .max()
+            .unwrap_or(start)
+            .saturating_sub(start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(clusters: usize, compute: u64) -> Job {
+        Job {
+            id: 0,
+            name: "gemm".into(),
+            clusters_needed: clusters,
+            compute_cycles: compute,
+            dma_in_bytes: 64 * 1024,
+            dma_out_bytes: 16 * 1024,
+        }
+    }
+
+    #[test]
+    fn single_job_runs_through_all_phases() {
+        let mut m = OffloadManager::new(4);
+        m.submit(job(2, 10_000));
+        let makespan = m.drain(1_000_000);
+        assert_eq!(m.completed().len(), 1);
+        // dispatch + load + compute + drain
+        assert!(makespan > 10_000, "{makespan}");
+        assert!(makespan < 20_000, "{makespan}");
+    }
+
+    #[test]
+    fn jobs_run_in_parallel_when_clusters_allow() {
+        let mut m = OffloadManager::new(8);
+        for _ in 0..4 {
+            m.submit(job(2, 100_000));
+        }
+        let makespan = m.drain(10_000_000);
+        // 4 × 2-cluster jobs on 8 clusters: run concurrently, so the
+        // makespan is ~one job, not four.
+        assert!(makespan < 150_000, "{makespan}");
+        assert_eq!(m.completed().len(), 4);
+    }
+
+    #[test]
+    fn serialisation_when_oversubscribed() {
+        let mut m = OffloadManager::new(2);
+        for _ in 0..3 {
+            m.submit(job(2, 100_000));
+        }
+        let makespan = m.drain(10_000_000);
+        // Three full-width jobs must serialise: ≥ 3 × compute.
+        assert!(makespan >= 300_000, "{makespan}");
+        assert_eq!(m.completed().len(), 3);
+    }
+
+    #[test]
+    fn makespan_scales_with_dma_for_memory_heavy_jobs() {
+        let mk = |dma_bpc: f64| {
+            let mut m = OffloadManager::new(4);
+            m.dma_bytes_per_cycle = dma_bpc;
+            let mut j = job(4, 1000);
+            j.dma_in_bytes = 10 * 1024 * 1024;
+            m.submit(j);
+            m.drain(100_000_000)
+        };
+        let slow = mk(8.0);
+        let fast = mk(64.0);
+        assert!(slow > 4 * fast, "slow {slow} fast {fast}");
+    }
+
+    #[test]
+    #[should_panic(expected = "job wants")]
+    fn oversized_job_rejected() {
+        let mut m = OffloadManager::new(2);
+        m.submit(job(3, 1000));
+    }
+
+    #[test]
+    fn ids_are_unique_and_ordered() {
+        let mut m = OffloadManager::new(4);
+        let a = m.submit(job(1, 10));
+        let b = m.submit(job(1, 10));
+        assert!(b > a);
+    }
+}

@@ -1,0 +1,379 @@
+//! Canned Snitch kernels — the paper's listings, parameterised.
+//!
+//! * `dot_*`: the four variants of the Fig. 5 dot-product study
+//!   (baseline → unrolled → +SSR → +SSR+FREP);
+//! * `matvec48_fig6`: the exact mat-vec kernel of Fig. 6 (N=48,
+//!   unroll 4, SSR + FREP; 16 fetched instructions per outer iteration);
+//! * `gemm_ssr_frep`: the general GEMM used by cluster-level workloads;
+//! * `axpy_ssr_frep`: 3-stream memory kernel (read, read, write).
+//!
+//! All kernels use TCDM byte addresses passed by the caller and `halt`
+//! when done. Matrices are row-major f64.
+
+use super::{a, fa, ft, t, Asm, ZERO};
+use crate::isa::{FReg, IReg, Inst, SsrCfg};
+
+/// Emit the SSR configuration sequence for stream `ssr`:
+/// `dims` = [(trip_count, byte_stride); innermost first].
+/// Writing the read/write pointer arms the stream.
+pub fn ssr_cfg(
+    asm: &mut Asm,
+    scratch: IReg,
+    ssr: u8,
+    repeat: u32,
+    dims: &[(u32, i32)],
+    base: u32,
+    write: bool,
+) {
+    assert!(!dims.is_empty() && dims.len() <= crate::isa::SSR_DIMS);
+    if repeat > 0 {
+        asm.li(scratch, repeat as i64);
+        asm.scfgwi(scratch, ssr, SsrCfg::Repeat.word());
+    }
+    for (d, &(bound, stride)) in dims.iter().enumerate() {
+        assert!(bound >= 1);
+        asm.li(scratch, (bound - 1) as i64);
+        asm.scfgwi(scratch, ssr, SsrCfg::Bound(d as u8).word());
+        asm.li(scratch, stride as i64);
+        asm.scfgwi(scratch, ssr, SsrCfg::Stride(d as u8).word());
+    }
+    let last = (dims.len() - 1) as u8;
+    asm.li(scratch, base as i64);
+    let w = if write {
+        SsrCfg::WritePtr(last).word()
+    } else {
+        SsrCfg::ReadPtr(last).word()
+    };
+    asm.scfgwi(scratch, ssr, w);
+}
+
+/// Dot-product parameters: `n` f64 elements at `x`/`y`, result to `out`.
+#[derive(Debug, Clone, Copy)]
+pub struct DotParams {
+    pub n: u32,
+    pub x: u32,
+    pub y: u32,
+    pub out: u32,
+}
+
+/// Fig. 5a *left*: straightforward loop, explicit loads, single
+/// accumulator. 2 loads + 1 fma + bookkeeping per element.
+pub fn dot_baseline(p: DotParams) -> Vec<Inst> {
+    let mut asm = Asm::new();
+    asm.li(a(0), p.x as i64); // x pointer
+    asm.li(a(1), p.y as i64); // y pointer
+    asm.li(a(2), (p.x + 8 * p.n) as i64); // x end
+    asm.fzero(fa(0));
+    asm.label("loop");
+    asm.fld(ft(3), a(0), 0);
+    asm.fld(ft(4), a(1), 0);
+    asm.fmadd_d(fa(0), ft(3), ft(4), fa(0));
+    asm.addi(a(0), a(0), 8);
+    asm.addi(a(1), a(1), 8);
+    asm.bltu(a(0), a(2), "loop");
+    asm.li(a(3), p.out as i64);
+    asm.fsd(fa(0), a(3), 0);
+    asm.halt();
+    asm.assemble()
+}
+
+/// Fig. 5a left, unrolled by `u` with `u` accumulators: the "at most
+/// 33 %" configuration (2 loads : 1 fma per element stays).
+pub fn dot_unrolled(p: DotParams, u: u32) -> Vec<Inst> {
+    assert!(u >= 1 && u <= 4 && p.n % u == 0);
+    let mut asm = Asm::new();
+    asm.li(a(0), p.x as i64);
+    asm.li(a(1), p.y as i64);
+    asm.li(a(2), (p.x + 8 * p.n) as i64);
+    for i in 0..u {
+        asm.fzero(fa(i as u8));
+    }
+    asm.label("loop");
+    for i in 0..u {
+        asm.fld(ft(3 + i as u8), a(0), 8 * i as i32);
+        asm.fld(fa(4 + i as u8), a(1), 8 * i as i32);
+        asm.fmadd_d(fa(i as u8), ft(3 + i as u8), fa(4 + i as u8), fa(i as u8));
+    }
+    asm.addi(a(0), a(0), 8 * u as i32);
+    asm.addi(a(1), a(1), 8 * u as i32);
+    asm.bltu(a(0), a(2), "loop");
+    // reduce
+    for i in 1..u {
+        asm.fadd_d(fa(0), fa(0), fa(i as u8));
+    }
+    asm.li(a(3), p.out as i64);
+    asm.fsd(fa(0), a(3), 0);
+    asm.halt();
+    asm.assemble()
+}
+
+/// Fig. 5a *right*: SSRs elide the loads; loop body = `u` fmadds +
+/// bookkeeping (no FREP yet).
+pub fn dot_ssr(p: DotParams, u: u32) -> Vec<Inst> {
+    assert!(u >= 1 && u <= 8 && p.n % u == 0);
+    let mut asm = Asm::new();
+    ssr_cfg(&mut asm, t(0), 0, 0, &[(p.n, 8)], p.x, false);
+    ssr_cfg(&mut asm, t(0), 1, 0, &[(p.n, 8)], p.y, false);
+    for i in 0..u {
+        asm.fzero(fa(i as u8));
+    }
+    asm.ssr_enable();
+    asm.li(a(0), (p.n / u) as i64);
+    asm.label("loop");
+    for i in 0..u {
+        asm.fmadd_d(fa(i as u8), ft(0), ft(1), fa(i as u8));
+    }
+    asm.addi(a(0), a(0), -1);
+    asm.bne(a(0), ZERO, "loop");
+    for i in 1..u {
+        asm.fadd_d(fa(0), fa(0), fa(i as u8));
+    }
+    asm.ssr_disable();
+    asm.li(a(3), p.out as i64);
+    asm.fsd(fa(0), a(3), 0);
+    asm.halt();
+    asm.assemble()
+}
+
+/// Fig. 5b *right*: SSR + FREP — the loop body is a single FREP'd block
+/// of `u` fmadds; no integer instructions remain in the hot loop.
+pub fn dot_ssr_frep(p: DotParams, u: u32) -> Vec<Inst> {
+    assert!(u >= 1 && u <= 8 && p.n % u == 0);
+    let mut asm = Asm::new();
+    ssr_cfg(&mut asm, t(0), 0, 0, &[(p.n, 8)], p.x, false);
+    ssr_cfg(&mut asm, t(0), 1, 0, &[(p.n, 8)], p.y, false);
+    for i in 0..u {
+        asm.fzero(fa(i as u8));
+    }
+    asm.ssr_enable();
+    asm.li(t(1), (p.n / u - 1) as i64);
+    asm.frep_o(t(1), u as u8);
+    for i in 0..u {
+        asm.fmadd_d(fa(i as u8), ft(0), ft(1), fa(i as u8));
+    }
+    for i in 1..u {
+        asm.fadd_d(fa(0), fa(0), fa(i as u8));
+    }
+    asm.ssr_disable();
+    asm.li(a(3), p.out as i64);
+    asm.fsd(fa(0), a(3), 0);
+    asm.halt();
+    asm.assemble()
+}
+
+/// The paper's Fig. 6 kernel, verbatim: y = A·x with N = 48, SSR + FREP,
+/// unrolled ×4. Per outer iteration the integer pipe fetches 16
+/// instructions while the FPU executes ~200 (4 fmv + 192 fmadd + 4 fsd).
+///
+/// `a`, `x`, `y` are TCDM byte addresses of A (48×48 row-major), x (48)
+/// and y (48).
+pub fn matvec48_fig6(a_addr: u32, x_addr: u32, y_addr: u32) -> Vec<Inst> {
+    const N: u32 = 48;
+    let mut asm = Asm::new();
+    // ft0 ← A stream: serve rows in groups of 4:
+    //   dim0: r in 0..4   (stride = one row = N*8)
+    //   dim1: j in 0..N   (stride = 8)
+    //   dim2: i in 0..N/4 (stride = 4 rows = 4*N*8)
+    ssr_cfg(
+        &mut asm,
+        t(0),
+        0,
+        0,
+        &[(4, (N * 8) as i32), (N, 8), (N / 4, (4 * N * 8) as i32)],
+        a_addr,
+        false,
+    );
+    // ft1 ← x stream: each x[j] is served 4× (repeat=3), re-read for
+    // every group of rows (outer stride 0).
+    ssr_cfg(
+        &mut asm,
+        t(0),
+        1,
+        3,
+        &[(N, 8), (N / 4, 0)],
+        x_addr,
+        false,
+    );
+    asm.fzero(fa(1)); // fa1 = 0.0 (the paper's zero source)
+    asm.ssr_enable();
+    asm.li(a(4), 0); // i counter (groups of 4 rows)
+    asm.li(a(1), (N / 4) as i64); // trip count
+    asm.li(a(5), y_addr as i64); // y pointer
+    asm.li(t(1), (N - 1) as i64); // frep repetitions - 1
+    asm.label("loop");
+    // -- the 16 fetched instructions of Fig. 6b --
+    asm.fmv_d(fa(5), fa(1));
+    asm.fmv_d(fa(2), fa(1));
+    asm.fmv_d(fa(3), fa(1));
+    asm.fmv_d(fa(4), fa(1));
+    asm.frep_o(t(1), 4);
+    asm.fmadd_d(fa(5), ft(0), ft(1), fa(5));
+    asm.fmadd_d(fa(2), ft(0), ft(1), fa(2));
+    asm.fmadd_d(fa(3), ft(0), ft(1), fa(3));
+    asm.fmadd_d(fa(4), ft(0), ft(1), fa(4));
+    asm.fsd(fa(5), a(5), 0);
+    asm.fsd(fa(2), a(5), 8);
+    asm.fsd(fa(3), a(5), 16);
+    asm.fsd(fa(4), a(5), 24);
+    asm.addi(a(4), a(4), 1);
+    asm.addi(a(5), a(5), 32);
+    asm.bltu(a(4), a(1), "loop");
+    asm.ssr_disable();
+    asm.halt();
+    asm.assemble()
+}
+
+/// General GEMM C = A·B (row-major f64), SSR + FREP, 4-column unroll.
+/// Shapes: A is m×k, B is k×n, C is m×n; `n % 4 == 0`.
+///
+/// Streams:
+///   ft0 ← A: a[i][l] served 4× (repeat=3), l fastest, then per column
+///            block (stride 0), then per row;
+///   ft1 ← B: b[l][jj*4+c], c fastest (8), then l (row, 8n), then jj
+///            (32), then i (0).
+pub fn gemm_ssr_frep(
+    m: u32,
+    k: u32,
+    n: u32,
+    a_addr: u32,
+    b_addr: u32,
+    c_addr: u32,
+) -> Vec<Inst> {
+    assert!(n % 4 == 0, "gemm kernel needs n % 4 == 0");
+    assert!(m >= 1 && k >= 1);
+    let mut asm = Asm::new();
+    ssr_cfg(
+        &mut asm,
+        t(0),
+        0,
+        3,
+        &[(k, 8), (n / 4, 0), (m, (k * 8) as i32)],
+        a_addr,
+        false,
+    );
+    ssr_cfg(
+        &mut asm,
+        t(0),
+        1,
+        0,
+        &[(4, 8), (k, (n * 8) as i32), (n / 4, 32), (m, 0)],
+        b_addr,
+        false,
+    );
+    asm.fzero(fa(1));
+    asm.ssr_enable();
+    asm.li(a(3), 0); // i
+    asm.li(a(6), m as i64);
+    asm.li(a(5), c_addr as i64); // &C[i][jj*4]
+    asm.li(t(1), (k - 1) as i64); // frep count
+    asm.li(a(7), (n / 4) as i64);
+    asm.label("row");
+    asm.li(a(4), 0); // jj
+    asm.label("col");
+    asm.fmv_d(fa(5), fa(1));
+    asm.fmv_d(fa(2), fa(1));
+    asm.fmv_d(fa(3), fa(1));
+    asm.fmv_d(fa(4), fa(1));
+    asm.frep_o(t(1), 4);
+    asm.fmadd_d(fa(5), ft(0), ft(1), fa(5));
+    asm.fmadd_d(fa(2), ft(0), ft(1), fa(2));
+    asm.fmadd_d(fa(3), ft(0), ft(1), fa(3));
+    asm.fmadd_d(fa(4), ft(0), ft(1), fa(4));
+    asm.fsd(fa(5), a(5), 0);
+    asm.fsd(fa(2), a(5), 8);
+    asm.fsd(fa(3), a(5), 16);
+    asm.fsd(fa(4), a(5), 24);
+    asm.addi(a(5), a(5), 32);
+    asm.addi(a(4), a(4), 1);
+    asm.bltu(a(4), a(7), "col");
+    asm.addi(a(3), a(3), 1);
+    asm.bltu(a(3), a(6), "row");
+    asm.ssr_disable();
+    asm.halt();
+    asm.assemble()
+}
+
+/// Streaming axpy: out[i] = alpha·x[i] + y[i], all three operands as
+/// SSR streams (ft0=x read, ft1=y read, ft2=out write), one FREP'd fma.
+/// `alpha_addr` holds alpha in TCDM.
+pub fn axpy_ssr_frep(
+    n: u32,
+    alpha_addr: u32,
+    x_addr: u32,
+    y_addr: u32,
+    out_addr: u32,
+) -> Vec<Inst> {
+    let mut asm = Asm::new();
+    ssr_cfg(&mut asm, t(0), 0, 0, &[(n, 8)], x_addr, false);
+    ssr_cfg(&mut asm, t(0), 1, 0, &[(n, 8)], y_addr, false);
+    ssr_cfg(&mut asm, t(0), 2, 0, &[(n, 8)], out_addr, true);
+    asm.li(t(2), alpha_addr as i64);
+    asm.fld(fa(0), t(2), 0);
+    asm.ssr_enable();
+    asm.li(t(1), (n - 1) as i64);
+    asm.frep_o(t(1), 1);
+    asm.fmadd_d(ft(2), fa(0), ft(0), ft(1));
+    asm.ssr_disable();
+    asm.halt();
+    asm.assemble()
+}
+
+/// GEMM with explicit loads (no SSR, no FREP): the baseline used by the
+/// ablation benches. Unrolled ×4 over columns like the SSR variant so
+/// the comparison isolates the ISA extensions, not the blocking.
+pub fn gemm_baseline(
+    m: u32,
+    k: u32,
+    n: u32,
+    a_addr: u32,
+    b_addr: u32,
+    c_addr: u32,
+) -> Vec<Inst> {
+    assert!(n % 4 == 0);
+    let mut asm = Asm::new();
+    asm.fzero(fa(1)); // zero source (once; fcvt is a draining crossing op)
+    asm.li(a(3), 0); // i
+    asm.li(a(6), m as i64);
+    asm.li(a(5), c_addr as i64);
+    asm.li(a(7), (n / 4) as i64);
+    asm.label("row");
+    asm.li(a(4), 0); // jj
+    asm.label("col");
+    for c in 0..4 {
+        asm.fmv_d(fa(2 + c), fa(1));
+    }
+    // t2 = &A[i][0] = a + i*k*8 ; t3 = &B[0][jj*4] = b + jj*32
+    asm.li(t(4), (k * 8) as i64);
+    asm.i(Inst::Mul { rd: t(2), rs1: a(3), rs2: t(4) });
+    asm.li(t(4), a_addr as i64);
+    asm.i(Inst::Add { rd: t(2), rs1: t(2), rs2: t(4) });
+    asm.i(Inst::Slli { rd: t(3), rs1: a(4), shamt: 5 });
+    asm.li(t(4), b_addr as i64);
+    asm.i(Inst::Add { rd: t(3), rs1: t(3), rs2: t(4) });
+    asm.li(t(5), k as i64);
+    asm.label("inner");
+    asm.fld(ft(3), t(2), 0); // a[i][l]
+    for c in 0..4 {
+        asm.fld(ft(4), t(3), 8 * c as i32);
+        asm.fmadd_d(fa(2 + c), ft(3), ft(4), fa(2 + c));
+    }
+    asm.addi(t(2), t(2), 8);
+    asm.addi(t(3), t(3), (n * 8) as i32);
+    asm.addi(t(5), t(5), -1);
+    asm.bne(t(5), ZERO, "inner");
+    for c in 0..4 {
+        asm.fsd(fa(2 + c), a(5), 8 * c as i32);
+    }
+    asm.addi(a(5), a(5), 32);
+    asm.addi(a(4), a(4), 1);
+    asm.bltu(a(4), a(7), "col");
+    asm.addi(a(3), a(3), 1);
+    asm.bltu(a(3), a(6), "row");
+    asm.halt();
+    asm.assemble()
+}
+
+/// Helper: FP register list used as accumulators by the dot kernels.
+pub fn dot_accumulators(u: u32) -> Vec<FReg> {
+    (0..u).map(|i| fa(i as u8)).collect()
+}

@@ -1,0 +1,390 @@
+//! A small assembler for Snitch kernel programs: labels, branches,
+//! pseudo-instructions, and the RISC-V ABI register names.
+//!
+//! Programs are built instruction-by-instruction (the paper's Figs. 5/6
+//! listings are encoded in kernels.rs with this builder) and assembled
+//! into a flat `Vec<Inst>` with byte-offset branch immediates, exactly
+//! what `SnitchCore` executes and `isa::encode` can serialize.
+
+pub mod kernels;
+
+use crate::isa::{FCmp, FReg, IReg, Inst};
+use std::collections::HashMap;
+
+// ---- ABI register names ----
+
+/// Argument/temporary integer registers `a0..a7` = x10..x17.
+pub fn a(n: u8) -> IReg {
+    assert!(n < 8);
+    IReg(10 + n)
+}
+
+/// Temporaries `t0..t6` = x5,x6,x7,x28..x31.
+pub fn t(n: u8) -> IReg {
+    match n {
+        0..=2 => IReg(5 + n),
+        3..=6 => IReg(28 + n - 3),
+        _ => panic!("t{n} out of range"),
+    }
+}
+
+/// Saved `s0..s1` = x8, x9 (enough for kernels).
+pub fn s(n: u8) -> IReg {
+    assert!(n < 2);
+    IReg(8 + n)
+}
+
+pub const ZERO: IReg = IReg(0);
+
+/// FP temporaries `ft0..ft7` = f0..f7 (ft0..ft2 are the SSRs).
+pub fn ft(n: u8) -> FReg {
+    assert!(n < 8);
+    FReg(n)
+}
+
+/// FP arguments `fa0..fa7` = f10..f17.
+pub fn fa(n: u8) -> FReg {
+    assert!(n < 8);
+    FReg(10 + n)
+}
+
+/// FP saved `fs0..fs1` = f8, f9.
+pub fn fs(n: u8) -> FReg {
+    assert!(n < 2);
+    FReg(8 + n)
+}
+
+#[derive(Debug, Clone)]
+enum Item {
+    Inst(Inst),
+    /// Branch to a label; patched at assembly.
+    Branch { kind: BranchKind, rs1: IReg, rs2: IReg, label: String },
+    JalLabel { rd: IReg, label: String },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BranchKind {
+    Beq,
+    Bne,
+    Blt,
+    Bge,
+    Bltu,
+    Bgeu,
+}
+
+/// Program builder.
+#[derive(Debug, Default, Clone)]
+pub struct Asm {
+    items: Vec<Item>,
+    labels: HashMap<String, usize>,
+}
+
+impl Asm {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current instruction index (for size accounting).
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Define a label at the current position.
+    pub fn label(&mut self, name: &str) -> &mut Self {
+        let prev = self.labels.insert(name.to_string(), self.items.len());
+        assert!(prev.is_none(), "duplicate label {name}");
+        self
+    }
+
+    /// Push a raw instruction.
+    pub fn i(&mut self, inst: Inst) -> &mut Self {
+        self.items.push(Item::Inst(inst));
+        self
+    }
+
+    // ---- pseudo-instructions ----
+
+    /// Load a 32-bit immediate (1 or 2 instructions).
+    pub fn li(&mut self, rd: IReg, imm: i64) -> &mut Self {
+        let imm = imm as i32;
+        if (-2048..2048).contains(&imm) {
+            self.i(Inst::Addi { rd, rs1: ZERO, imm })
+        } else {
+            // lui + addi with sign-adjustment of the low 12 bits.
+            let lo = (imm << 20) >> 20;
+            let hi = imm.wrapping_sub(lo) as u32;
+            self.i(Inst::Lui { rd, imm: hi as i32 });
+            if lo != 0 {
+                self.i(Inst::Addi { rd, rs1: rd, imm: lo });
+            }
+            self
+        }
+    }
+
+    /// `mv rd, rs`.
+    pub fn mv(&mut self, rd: IReg, rs: IReg) -> &mut Self {
+        self.i(Inst::Addi { rd, rs1: rs, imm: 0 })
+    }
+
+    /// `fmv.d rd, rs` (fsgnj.d rd, rs, rs).
+    pub fn fmv_d(&mut self, rd: FReg, rs: FReg) -> &mut Self {
+        self.i(Inst::FsgnjD { rd, rs1: rs, rs2: rs })
+    }
+
+    /// Zero an FP register: `fcvt.d.w rd, x0`.
+    pub fn fzero(&mut self, rd: FReg) -> &mut Self {
+        self.i(Inst::FcvtDW { rd, rs1: ZERO })
+    }
+
+    pub fn addi(&mut self, rd: IReg, rs1: IReg, imm: i32) -> &mut Self {
+        self.i(Inst::Addi { rd, rs1, imm })
+    }
+
+    pub fn fld(&mut self, rd: FReg, base: IReg, imm: i32) -> &mut Self {
+        self.i(Inst::Fld { rd, rs1: base, imm })
+    }
+
+    pub fn fsd(&mut self, rs2: FReg, base: IReg, imm: i32) -> &mut Self {
+        self.i(Inst::Fsd { rs1: base, rs2, imm })
+    }
+
+    pub fn fmadd_d(
+        &mut self,
+        rd: FReg,
+        rs1: FReg,
+        rs2: FReg,
+        rs3: FReg,
+    ) -> &mut Self {
+        self.i(Inst::FmaddD { rd, rs1, rs2, rs3 })
+    }
+
+    pub fn fadd_d(&mut self, rd: FReg, rs1: FReg, rs2: FReg) -> &mut Self {
+        self.i(Inst::FaddD { rd, rs1, rs2 })
+    }
+
+    pub fn fmul_d(&mut self, rd: FReg, rs1: FReg, rs2: FReg) -> &mut Self {
+        self.i(Inst::FmulD { rd, rs1, rs2 })
+    }
+
+    /// `frep.o rpt_reg, n_instr` — repeat the next `n_instr` FP
+    /// instructions (rpt_reg)+1 times.
+    pub fn frep_o(&mut self, rpt: IReg, n_instr: u8) -> &mut Self {
+        self.i(Inst::FrepO { rpt, n_instr })
+    }
+
+    /// Write an SSR config word from a register.
+    pub fn scfgwi(&mut self, rs1: IReg, ssr: u8, word: u8) -> &mut Self {
+        self.i(Inst::Scfgwi { rs1, ssr, word })
+    }
+
+    pub fn ssr_enable(&mut self) -> &mut Self {
+        self.i(Inst::SsrEnable)
+    }
+
+    pub fn ssr_disable(&mut self) -> &mut Self {
+        self.i(Inst::SsrDisable)
+    }
+
+    pub fn barrier(&mut self) -> &mut Self {
+        self.i(Inst::Barrier)
+    }
+
+    pub fn halt(&mut self) -> &mut Self {
+        self.i(Inst::Halt)
+    }
+
+    pub fn fcmp(
+        &mut self,
+        op: FCmp,
+        rd: IReg,
+        rs1: FReg,
+        rs2: FReg,
+    ) -> &mut Self {
+        self.i(Inst::Fcmp { op, rd, rs1, rs2 })
+    }
+
+    // ---- label branches ----
+
+    pub fn beq(&mut self, rs1: IReg, rs2: IReg, label: &str) -> &mut Self {
+        self.items.push(Item::Branch {
+            kind: BranchKind::Beq,
+            rs1,
+            rs2,
+            label: label.to_string(),
+        });
+        self
+    }
+
+    pub fn bne(&mut self, rs1: IReg, rs2: IReg, label: &str) -> &mut Self {
+        self.items.push(Item::Branch {
+            kind: BranchKind::Bne,
+            rs1,
+            rs2,
+            label: label.to_string(),
+        });
+        self
+    }
+
+    pub fn blt(&mut self, rs1: IReg, rs2: IReg, label: &str) -> &mut Self {
+        self.items.push(Item::Branch {
+            kind: BranchKind::Blt,
+            rs1,
+            rs2,
+            label: label.to_string(),
+        });
+        self
+    }
+
+    pub fn bltu(&mut self, rs1: IReg, rs2: IReg, label: &str) -> &mut Self {
+        self.items.push(Item::Branch {
+            kind: BranchKind::Bltu,
+            rs1,
+            rs2,
+            label: label.to_string(),
+        });
+        self
+    }
+
+    pub fn bge(&mut self, rs1: IReg, rs2: IReg, label: &str) -> &mut Self {
+        self.items.push(Item::Branch {
+            kind: BranchKind::Bge,
+            rs1,
+            rs2,
+            label: label.to_string(),
+        });
+        self
+    }
+
+    pub fn jal(&mut self, rd: IReg, label: &str) -> &mut Self {
+        self.items.push(Item::JalLabel { rd, label: label.to_string() });
+        self
+    }
+
+    /// Resolve labels and produce the final program.
+    pub fn assemble(&self) -> Vec<Inst> {
+        self.items
+            .iter()
+            .enumerate()
+            .map(|(idx, item)| match item {
+                Item::Inst(i) => *i,
+                Item::Branch { kind, rs1, rs2, label } => {
+                    let target = *self
+                        .labels
+                        .get(label)
+                        .unwrap_or_else(|| panic!("undefined label {label}"));
+                    let imm = (target as i64 - idx as i64) as i32 * 4;
+                    let (rs1, rs2) = (*rs1, *rs2);
+                    match kind {
+                        BranchKind::Beq => Inst::Beq { rs1, rs2, imm },
+                        BranchKind::Bne => Inst::Bne { rs1, rs2, imm },
+                        BranchKind::Blt => Inst::Blt { rs1, rs2, imm },
+                        BranchKind::Bge => Inst::Bge { rs1, rs2, imm },
+                        BranchKind::Bltu => Inst::Bltu { rs1, rs2, imm },
+                        BranchKind::Bgeu => Inst::Bgeu { rs1, rs2, imm },
+                    }
+                }
+                Item::JalLabel { rd, label } => {
+                    let target = *self
+                        .labels
+                        .get(label)
+                        .unwrap_or_else(|| panic!("undefined label {label}"));
+                    let imm = (target as i64 - idx as i64) as i32 * 4;
+                    Inst::Jal { rd: *rd, imm }
+                }
+            })
+            .collect()
+    }
+
+    /// Assemble to machine code words (for encode/decode round-trips).
+    pub fn assemble_words(&self) -> Vec<u32> {
+        self.assemble().into_iter().map(crate::isa::encode).collect()
+    }
+}
+
+/// Disassemble a program for debugging / docs.
+pub fn disassemble(prog: &[Inst]) -> String {
+    prog.iter()
+        .enumerate()
+        .map(|(i, inst)| format!("{i:4}: {inst}"))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{decode, encode};
+
+    #[test]
+    fn label_branch_resolves_backwards() {
+        let mut asm = Asm::new();
+        asm.li(a(0), 0);
+        asm.label("loop");
+        asm.addi(a(0), a(0), 1);
+        asm.li(a(1), 10);
+        asm.bne(a(0), a(1), "loop");
+        asm.halt();
+        let prog = asm.assemble();
+        // branch at index 3 targets index 1 → imm = -2 words = -8 bytes
+        match prog[3] {
+            Inst::Bne { imm, .. } => assert_eq!(imm, -8),
+            ref other => panic!("expected bne, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn li_small_and_large() {
+        let mut asm = Asm::new();
+        asm.li(a(0), 42);
+        asm.li(a(1), 0x12345678);
+        asm.li(a(2), -1);
+        let prog = asm.assemble();
+        assert!(matches!(prog[0], Inst::Addi { imm: 42, .. }));
+        assert!(matches!(prog[1], Inst::Lui { .. }));
+    }
+
+    #[test]
+    fn assembled_words_decode_back() {
+        let mut asm = Asm::new();
+        asm.li(t(0), 100);
+        asm.label("l");
+        asm.fmadd_d(fa(0), ft(0), ft(1), fa(0));
+        asm.addi(t(0), t(0), -1);
+        asm.bne(t(0), ZERO, "l");
+        asm.halt();
+        let prog = asm.assemble();
+        for inst in &prog {
+            let w = encode(*inst);
+            assert_eq!(decode(w).unwrap(), *inst);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "undefined label")]
+    fn undefined_label_panics() {
+        let mut asm = Asm::new();
+        asm.bne(a(0), a(1), "nowhere");
+        asm.assemble();
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate label")]
+    fn duplicate_label_panics() {
+        let mut asm = Asm::new();
+        asm.label("x");
+        asm.label("x");
+    }
+
+    #[test]
+    fn abi_register_names() {
+        assert_eq!(a(0), IReg(10));
+        assert_eq!(t(0), IReg(5));
+        assert_eq!(t(3), IReg(28));
+        assert_eq!(ft(0), FReg(0));
+        assert_eq!(fa(0), FReg(10));
+    }
+}

@@ -1,0 +1,186 @@
+//! Configuration system: named presets + JSON overrides for every
+//! architecture parameter (the "real config system" a framework needs).
+//!
+//! A config file is a JSON object with any subset of the keys below;
+//! unknown keys are rejected so typos fail loudly.
+
+use crate::cluster::ClusterConfig;
+use crate::system::SystemConfig;
+use crate::util::json::{self, Value};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Bundle of everything configurable.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub system: SystemConfig,
+    pub cluster: ClusterConfig,
+    /// Operating voltage for simulations.
+    pub vdd: f64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            system: SystemConfig::default(),
+            cluster: ClusterConfig::default(),
+            vdd: 0.9,
+        }
+    }
+}
+
+impl Config {
+    /// Named presets.
+    pub fn preset(name: &str) -> Result<Config> {
+        Ok(match name {
+            "manticore" | "full" => Config::default(),
+            "prototype" => Config {
+                system: SystemConfig::prototype(),
+                ..Config::default()
+            },
+            "max-efficiency" => Config { vdd: 0.6, ..Config::default() },
+            other => bail!(
+                "unknown preset '{other}' \
+                 (try: manticore, prototype, max-efficiency)"
+            ),
+        })
+    }
+
+    /// Apply JSON overrides (`{"vdd": 0.7, "tcdm_banks": 16, ...}`).
+    pub fn apply_json(&mut self, text: &str) -> Result<()> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let Some(obj) = v.as_obj() else {
+            bail!("config must be a JSON object");
+        };
+        for (k, val) in obj {
+            self.apply_kv(k, val)?;
+        }
+        Ok(())
+    }
+
+    fn apply_kv(&mut self, key: &str, val: &Value) -> Result<()> {
+        let num = || -> Result<f64> {
+            val.as_f64()
+                .ok_or_else(|| anyhow::anyhow!("'{key}' must be a number"))
+        };
+        match key {
+            "vdd" => self.vdd = num()?,
+            "n_cores" => self.cluster.n_cores = num()? as usize,
+            "tcdm_bytes" => self.cluster.tcdm_bytes = num()? as usize,
+            "tcdm_banks" => self.cluster.tcdm_banks = num()? as usize,
+            "icache_bytes" => self.cluster.icache_bytes = num()? as usize,
+            "fpu_latency" => self.cluster.core.fpu_latency = num()? as u32,
+            "frep_buffer" => self.cluster.core.frep_buffer = num()? as usize,
+            "seq_queue" => self.cluster.core.seq_queue = num()? as usize,
+            "branch_penalty" => {
+                self.cluster.core.branch_penalty = num()? as u32
+            }
+            "icache_miss_penalty" => {
+                self.cluster.core.icache_miss_penalty = num()? as u32
+            }
+            "dma_bus_words" => self.cluster.dma_bus_words = num()? as u32,
+            "dma_ext_words" => self.cluster.dma_ext_words = num()? as u32,
+            "chiplets" => self.system.tree.chiplets = num()? as usize,
+            "clusters_per_s1" => {
+                self.system.tree.clusters_per_s1 = num()? as usize
+            }
+            "s1_per_s2" => self.system.tree.s1_per_s2 = num()? as usize,
+            "s2_per_s3" => self.system.tree.s2_per_s3 = num()? as usize,
+            "s3_per_chiplet" => {
+                self.system.tree.s3_per_chiplet = num()? as usize
+            }
+            "cluster_link" => self.system.tree.cluster_link = num()?,
+            "s1_uplink" => self.system.tree.s1_uplink = num()?,
+            "s2_uplink" => self.system.tree.s2_uplink = num()?,
+            "s3_uplink" => self.system.tree.s3_uplink = num()?,
+            "hbm_per_chiplet" => self.system.tree.hbm_per_chiplet = num()?,
+            "d2d_link" => self.system.tree.d2d_link = num()?,
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Serialize the tunable keys back to JSON.
+    pub fn to_json(&self) -> String {
+        let mut o = BTreeMap::new();
+        let mut n = |k: &str, v: f64| {
+            o.insert(k.to_string(), Value::Num(v));
+        };
+        n("vdd", self.vdd);
+        n("n_cores", self.cluster.n_cores as f64);
+        n("tcdm_bytes", self.cluster.tcdm_bytes as f64);
+        n("tcdm_banks", self.cluster.tcdm_banks as f64);
+        n("icache_bytes", self.cluster.icache_bytes as f64);
+        n("fpu_latency", self.cluster.core.fpu_latency as f64);
+        n("frep_buffer", self.cluster.core.frep_buffer as f64);
+        n("seq_queue", self.cluster.core.seq_queue as f64);
+        n("branch_penalty", self.cluster.core.branch_penalty as f64);
+        n(
+            "icache_miss_penalty",
+            self.cluster.core.icache_miss_penalty as f64,
+        );
+        n("dma_bus_words", self.cluster.dma_bus_words as f64);
+        n("dma_ext_words", self.cluster.dma_ext_words as f64);
+        n("chiplets", self.system.tree.chiplets as f64);
+        n("clusters_per_s1", self.system.tree.clusters_per_s1 as f64);
+        n("s1_per_s2", self.system.tree.s1_per_s2 as f64);
+        n("s2_per_s3", self.system.tree.s2_per_s3 as f64);
+        n("s3_per_chiplet", self.system.tree.s3_per_chiplet as f64);
+        n("cluster_link", self.system.tree.cluster_link);
+        n("s1_uplink", self.system.tree.s1_uplink);
+        n("s2_uplink", self.system.tree.s2_uplink);
+        n("s3_uplink", self.system.tree.s3_uplink);
+        n("hbm_per_chiplet", self.system.tree.hbm_per_chiplet);
+        n("d2d_link", self.system.tree.d2d_link);
+        json::write(&Value::Obj(o))
+    }
+
+    pub fn load_file(&mut self, path: &str) -> Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        self.apply_json(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_exist() {
+        assert_eq!(Config::preset("manticore").unwrap().vdd, 0.9);
+        assert_eq!(
+            Config::preset("prototype").unwrap().system.total_cores(),
+            24
+        );
+        assert_eq!(Config::preset("max-efficiency").unwrap().vdd, 0.6);
+        assert!(Config::preset("nope").is_err());
+    }
+
+    #[test]
+    fn json_overrides_apply() {
+        let mut c = Config::default();
+        c.apply_json(r#"{"vdd": 0.7, "tcdm_banks": 16, "chiplets": 2}"#)
+            .unwrap();
+        assert_eq!(c.vdd, 0.7);
+        assert_eq!(c.cluster.tcdm_banks, 16);
+        assert_eq!(c.system.tree.chiplets, 2);
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let mut c = Config::default();
+        assert!(c.apply_json(r#"{"tcdm_banksz": 16}"#).is_err());
+    }
+
+    #[test]
+    fn roundtrip_through_json() {
+        let mut c = Config::default();
+        c.vdd = 0.65;
+        c.cluster.core.frep_buffer = 32;
+        let text = c.to_json();
+        let mut c2 = Config::default();
+        c2.apply_json(&text).unwrap();
+        assert_eq!(c2.vdd, 0.65);
+        assert_eq!(c2.cluster.core.frep_buffer, 32);
+    }
+}

@@ -1,0 +1,176 @@
+//! GEMM tiling for cluster TCDMs with double-buffering.
+//!
+//! A tile (A: mt×kt, B: kt×nt, C: mt×nt in f64) must fit *twice* in the
+//! 128 kB TCDM (ping/pong) minus a scratch margin, mirroring how the
+//! paper's DMA engine overlaps the next tile's transfer with compute.
+
+/// One unit of work for one cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tile {
+    pub i0: usize,
+    pub j0: usize,
+    pub mt: usize,
+    pub nt: usize,
+    /// K is streamed in slabs of `kt` with accumulation in TCDM.
+    pub kt: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct GemmPlan {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub tiles: Vec<Tile>,
+    pub tile_mt: usize,
+    pub tile_nt: usize,
+    pub tile_kt: usize,
+    /// Total HBM traffic [bytes] including K-slab re-reads.
+    pub total_dma_bytes: f64,
+}
+
+/// Choose tile sizes and enumerate tiles covering the iteration space.
+pub fn plan_gemm(
+    m: usize,
+    k: usize,
+    n: usize,
+    tcdm_bytes: usize,
+    elem_bytes: usize,
+) -> GemmPlan {
+    // Budget: double-buffered A+B slabs + resident C tile ≤ 80 % TCDM.
+    let budget = (tcdm_bytes as f64 * 0.8) as usize / elem_bytes;
+    // Square-ish C tile, kt chosen to fill the remainder.
+    let mut mt = 64.min(m.max(1));
+    let mut nt = 64.min(n.max(4));
+    // n must cover the 4-column unroll of the kernel.
+    nt = nt.max(4.min(n.max(1)));
+    loop {
+        let c_elems = mt * nt;
+        let rem = budget.saturating_sub(c_elems);
+        // 2·(mt·kt + kt·nt) ≤ rem  →  kt ≤ rem / (2(mt+nt))
+        let kt = (rem / (2 * (mt + nt))).min(k.max(1)).max(1);
+        if kt >= 8 || (mt <= 8 && nt <= 8) {
+            let tiles = enumerate(m, k, n, mt, nt, kt);
+            let slabs_per_tile = k.div_ceil(kt) as f64;
+            let a_bytes = (mt * k * elem_bytes) as f64;
+            let b_bytes = (k * nt * elem_bytes) as f64;
+            let c_bytes = (mt * nt * elem_bytes) as f64;
+            let _ = slabs_per_tile;
+            let total_dma_bytes = tiles
+                .iter()
+                .map(|t| {
+                    (t.mt * k + k * t.nt + t.mt * t.nt) as f64
+                        * elem_bytes as f64
+                })
+                .sum::<f64>()
+                .max(a_bytes + b_bytes + c_bytes);
+            return GemmPlan {
+                m,
+                k,
+                n,
+                tiles,
+                tile_mt: mt,
+                tile_nt: nt,
+                tile_kt: kt,
+                total_dma_bytes,
+            };
+        }
+        // Shrink the C tile until a useful kt fits.
+        if mt >= nt && mt > 8 {
+            mt /= 2;
+        } else if nt > 8 {
+            nt /= 2;
+        } else {
+            mt = mt.max(1);
+        }
+    }
+}
+
+fn enumerate(m: usize, k: usize, n: usize, mt: usize, nt: usize, kt: usize) -> Vec<Tile> {
+    let mut tiles = Vec::new();
+    let mut i0 = 0;
+    while i0 < m {
+        let tm = mt.min(m - i0);
+        let mut j0 = 0;
+        while j0 < n {
+            let tn = nt.min(n - j0);
+            tiles.push(Tile { i0, j0, mt: tm, nt: tn, kt: kt.min(k) });
+            j0 += tn;
+        }
+        i0 += tm;
+    }
+    tiles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn tiles_cover_iteration_space_exactly_once() {
+        let plan = plan_gemm(300, 500, 260, 128 * 1024, 8);
+        let mut covered = vec![vec![false; 260]; 300];
+        for t in &plan.tiles {
+            for i in t.i0..t.i0 + t.mt {
+                for j in t.j0..t.j0 + t.nt {
+                    assert!(!covered[i][j], "double cover at ({i},{j})");
+                    covered[i][j] = true;
+                }
+            }
+        }
+        assert!(covered.iter().all(|row| row.iter().all(|&c| c)));
+    }
+
+    #[test]
+    fn tile_fits_tcdm_with_double_buffering() {
+        let tcdm = 128 * 1024;
+        let plan = plan_gemm(4096, 4096, 4096, tcdm, 8);
+        let elems = 2 * (plan.tile_mt * plan.tile_kt + plan.tile_kt * plan.tile_nt)
+            + plan.tile_mt * plan.tile_nt;
+        assert!(
+            elems * 8 <= tcdm,
+            "tile footprint {} exceeds TCDM {tcdm}",
+            elems * 8
+        );
+    }
+
+    #[test]
+    fn property_tiling_covers_any_shape() {
+        forall(
+            0xC0FFEE,
+            60,
+            |g| {
+                (
+                    g.usize(1, 700),
+                    g.usize(1, 700),
+                    g.usize(1, 700),
+                )
+            },
+            |&(m, k, n)| {
+                let plan = plan_gemm(m, k, n, 128 * 1024, 8);
+                let area: usize =
+                    plan.tiles.iter().map(|t| t.mt * t.nt).sum();
+                if area != m * n {
+                    return Err(format!("area {area} != {}", m * n));
+                }
+                for t in &plan.tiles {
+                    if t.i0 + t.mt > m || t.j0 + t.nt > n {
+                        return Err(format!("tile out of bounds: {t:?}"));
+                    }
+                    if t.kt == 0 || t.kt > k {
+                        return Err(format!("bad kt: {t:?}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn dma_bytes_at_least_compulsory_traffic() {
+        let (m, k, n) = (512, 512, 512);
+        let plan = plan_gemm(m, k, n, 128 * 1024, 8);
+        let compulsory = ((m * k + k * n + m * n) * 8) as f64;
+        assert!(plan.total_dma_bytes >= compulsory);
+    }
+}

@@ -1,0 +1,147 @@
+//! Shared end-to-end driver logic: the tiny-CNN training loop over the
+//! AOT artifacts (real numerics via PJRT) combined with the Manticore
+//! system model (simulated time/energy per step). Used by the
+//! `manticore train` subcommand and `examples/dnn_training.rs`.
+
+use crate::config::Config;
+use crate::coordinator::Coordinator;
+use crate::runtime::{Runtime, Tensor};
+use crate::util::rng::Rng;
+use crate::workload::example_cnn;
+use anyhow::{bail, Context, Result};
+
+pub const IMG: usize = 16;
+pub const NCLASS: usize = 10;
+
+/// Synthetic-but-learnable data: each image is noise plus a bright
+/// blob in one of `NCLASS` fixed 4×4 patches; the label is the patch
+/// index. Spatially local → a small conv net fits it quickly, so the
+/// loss curve is a real learning signal.
+pub struct DataGen {
+    rng: Rng,
+}
+
+impl DataGen {
+    pub fn new(seed: u64) -> Self {
+        DataGen { rng: Rng::new(seed) }
+    }
+
+    /// One batch: (x: [b,16,16,1] f32, y: [b] i32).
+    pub fn batch(&mut self, b: usize) -> (Tensor, Tensor) {
+        let mut xs = Vec::with_capacity(b * IMG * IMG);
+        let mut ys = Vec::with_capacity(b);
+        for _ in 0..b {
+            let label = self.rng.below(NCLASS as u64) as usize;
+            // Patches tile the image 4x4; classes use the first 10.
+            let (pi, pj) = (label / 4, label % 4);
+            let mut img = vec![0.0f32; IMG * IMG];
+            for v in img.iter_mut() {
+                *v = 0.3 * self.rng.normal() as f32;
+            }
+            for di in 0..4 {
+                for dj in 0..4 {
+                    img[(pi * 4 + di) * IMG + pj * 4 + dj] +=
+                        1.5 + 0.2 * self.rng.normal() as f32;
+                }
+            }
+            xs.extend_from_slice(&img);
+            ys.push(label as i32);
+        }
+        (
+            Tensor::F32(xs, vec![b, IMG, IMG, 1]),
+            Tensor::I32(ys, vec![b]),
+        )
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub initial_loss: f64,
+    pub final_loss: f64,
+    pub losses: Vec<f64>,
+    /// Simulated wall-clock on the Manticore model per step [s].
+    pub sim_step_time_s: f64,
+    /// Simulated energy per step [J].
+    pub sim_step_energy_j: f64,
+    /// Wall time of the real PJRT execution, total [s].
+    pub host_time_s: f64,
+    /// Training accuracy on a held-out synthetic batch.
+    pub accuracy: f64,
+}
+
+/// Run the end-to-end training loop.
+pub fn train_loop(
+    artifacts_dir: &str,
+    steps: usize,
+    batch: usize,
+    lr: f32,
+    cfg: &Config,
+    seed: u64,
+    verbose: bool,
+) -> Result<TrainReport> {
+    let mut rt = Runtime::new(artifacts_dir)?;
+    if batch != 32 {
+        bail!("artifacts are lowered for batch 32 (got {batch})");
+    }
+
+    // 1. Initialise parameters on-device (cnn_init artifact).
+    let mut params = rt
+        .execute("cnn_init", &[Tensor::U32(vec![seed as u32], vec![])])
+        .context("cnn_init")?;
+    assert_eq!(params.len(), 8, "8 parameter tensors");
+
+    // 2. The system model prices one training step (time + energy).
+    let co = Coordinator::new(cfg.system, cfg.vdd);
+    let net = example_cnn(batch);
+    let rep = co.simulate_network(&net);
+
+    // 3. SGD loop: all numerics through the AOT'd training step.
+    let mut data = DataGen::new(seed.wrapping_add(1));
+    let mut losses = Vec::with_capacity(steps);
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let (x, y) = data.batch(batch);
+        let mut io = params.clone();
+        io.push(x);
+        io.push(y);
+        io.push(Tensor::scalar_f32(lr));
+        let mut out = rt.execute("cnn_train_step", &io)?;
+        let loss = out
+            .pop()
+            .and_then(|t| t.as_f32().map(|v| v[0] as f64))
+            .context("loss output")?;
+        params = out;
+        losses.push(loss);
+        if verbose && (step % 10 == 0 || step + 1 == steps) {
+            println!(
+                "step {step:4}  loss {loss:.4}  (sim: {:.3} ms, {:.3} mJ per step)",
+                rep.total_time_s * 1e3,
+                rep.total_energy_j * 1e3
+            );
+        }
+    }
+    let host_time_s = t0.elapsed().as_secs_f64();
+
+    // 4. Accuracy on a fresh batch via the predict artifact.
+    let (x, y) = data.batch(batch);
+    let mut io = params.clone();
+    io.push(x);
+    let pred = rt.execute("cnn_predict", &io)?;
+    let labels = pred[0].as_i32().context("labels")?;
+    let truth = y.as_i32().unwrap();
+    let correct = labels
+        .iter()
+        .zip(truth)
+        .filter(|(a, b)| a == b)
+        .count();
+
+    Ok(TrainReport {
+        initial_loss: losses.first().copied().unwrap_or(f64::NAN),
+        final_loss: losses.last().copied().unwrap_or(f64::NAN),
+        losses,
+        sim_step_time_s: rep.total_time_s,
+        sim_step_energy_j: rep.total_energy_j,
+        host_time_s,
+        accuracy: correct as f64 / batch as f64,
+    })
+}

@@ -1,0 +1,475 @@
+//! The bandwidth-thinned hierarchical interconnect (paper, Fig. 3).
+//!
+//! Topology per chiplet: 4 clusters → S1 quadrant (shared uplink) →
+//! 4 S1 → S2 → 2 S2 → S3 → 4 S3 share the HBM controller; four chiplets
+//! interconnect with die-to-die (D2D) links for NUMA access to sibling
+//! HBMs. Bandwidth *thins* toward the root: sibling clusters talk at
+//! full cluster bandwidth while the HBM uplink is provisioned to just
+//! sustain the memory system — the paper's "benign to floorplanning"
+//! low-diameter scheme.
+//!
+//! The model is a capacity tree + max-min-fair flow allocation: given a
+//! set of (src, dst, demand) flows it computes achieved throughputs and
+//! link utilisations without simulating individual packets (the paper's
+//! own evaluation is analytical at this level, too).
+
+use std::collections::BTreeMap;
+
+/// Tree levels, leaf to root.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Cluster,
+    S1,
+    S2,
+    S3,
+    Hbm,
+}
+
+/// Interconnect geometry + link capacities (bytes/cycle at 1 GHz ⇒
+/// B/cycle numerically equals GB/s).
+#[derive(Debug, Clone, Copy)]
+pub struct TreeConfig {
+    /// Clusters per S1 quadrant.
+    pub clusters_per_s1: usize,
+    /// S1 quadrants per S2.
+    pub s1_per_s2: usize,
+    /// S2 quadrants per S3.
+    pub s2_per_s3: usize,
+    /// S3 quadrants per chiplet.
+    pub s3_per_chiplet: usize,
+    /// Chiplets in the package.
+    pub chiplets: usize,
+    /// Cluster ↔ S1 crossbar port bandwidth [B/cycle] (512-bit DMA).
+    pub cluster_link: f64,
+    /// S1 uplink into S2 [B/cycle].
+    pub s1_uplink: f64,
+    /// S2 uplink into S3 [B/cycle].
+    pub s2_uplink: f64,
+    /// S3 uplink into the HBM controller [B/cycle].
+    pub s3_uplink: f64,
+    /// HBM bandwidth per chiplet [B/cycle] (256 GB/s @ 1 GHz = 256).
+    pub hbm_per_chiplet: f64,
+    /// Die-to-die link bandwidth between a chiplet pair [B/cycle].
+    pub d2d_link: f64,
+}
+
+impl Default for TreeConfig {
+    fn default() -> Self {
+        // Paper values (per chiplet: 32 clusters = 4×4×2 quadrant tree).
+        TreeConfig {
+            clusters_per_s1: 4,
+            s1_per_s2: 4,
+            s2_per_s3: 2,
+            s3_per_chiplet: 4,
+            chiplets: 4,
+            cluster_link: 64.0, // 512 bit/cycle
+            s1_uplink: 128.0,   // thinning 4·64 → 128 (2:1)
+            s2_uplink: 128.0,   // 4·128 → 128 (4:1)
+            s3_uplink: 128.0,   // 2·128 → 128 (2:1)
+            hbm_per_chiplet: 256.0,
+            d2d_link: 64.0,
+        }
+    }
+}
+
+impl TreeConfig {
+    pub fn clusters_per_chiplet(&self) -> usize {
+        self.clusters_per_s1 * self.s1_per_s2 * self.s2_per_s3
+            * self.s3_per_chiplet
+    }
+
+    pub fn total_clusters(&self) -> usize {
+        self.clusters_per_chiplet() * self.chiplets
+    }
+
+    /// Aggregate intra-S1 bandwidth of the whole package [B/cycle]:
+    /// every cluster port can be busy simultaneously for local traffic.
+    pub fn aggregate_intra_s1(&self) -> f64 {
+        self.cluster_link * self.total_clusters() as f64
+    }
+
+    /// Aggregate HBM bandwidth of the package [B/cycle].
+    pub fn aggregate_hbm(&self) -> f64 {
+        self.hbm_per_chiplet * self.chiplets as f64
+    }
+
+    /// Identify a cluster globally.
+    pub fn cluster_id(&self, chiplet: usize, s3: usize, s2: usize, s1: usize, c: usize) -> usize {
+        (((chiplet * self.s3_per_chiplet + s3) * self.s2_per_s3 + s2)
+            * self.s1_per_s2
+            + s1)
+            * self.clusters_per_s1
+            + c
+    }
+
+    /// Decompose a global cluster id into (chiplet, s3, s2, s1, c).
+    pub fn cluster_coords(&self, id: usize) -> (usize, usize, usize, usize, usize) {
+        let c = id % self.clusters_per_s1;
+        let id = id / self.clusters_per_s1;
+        let s1 = id % self.s1_per_s2;
+        let id = id / self.s1_per_s2;
+        let s2 = id % self.s2_per_s3;
+        let id = id / self.s2_per_s3;
+        let s3 = id % self.s3_per_chiplet;
+        let chiplet = id / self.s3_per_chiplet;
+        (chiplet, s3, s2, s1, c)
+    }
+}
+
+/// One traffic flow: cluster → cluster, or cluster → its chiplet's HBM
+/// (dst = Hbm(chiplet)), with a demand in B/cycle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Endpoint {
+    Cluster(usize),
+    Hbm(usize),
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Flow {
+    pub src: usize, // global cluster id
+    pub dst: Endpoint,
+    pub demand: f64, // B/cycle
+}
+
+/// A link in the tree, identified canonically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Link {
+    /// Cluster port of cluster `id`.
+    ClusterPort(usize),
+    /// Uplink of S1 quadrant `id` (global S1 index).
+    S1Up(usize),
+    /// Uplink of S2 quadrant `id`.
+    S2Up(usize),
+    /// Uplink of S3 quadrant `id`.
+    S3Up(usize),
+    /// HBM controller of chiplet `id`.
+    HbmCtl(usize),
+    /// D2D link between chiplet pair (lo, hi).
+    D2d(usize, usize),
+}
+
+/// Result of a flow allocation.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    /// Achieved rate per flow [B/cycle], same order as input.
+    pub achieved: Vec<f64>,
+    /// Utilisation per link in [0, 1].
+    pub link_util: BTreeMap<Link, f64>,
+}
+
+/// The interconnect model.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Tree {
+    pub cfg: TreeConfig,
+}
+
+impl Tree {
+    pub fn new(cfg: TreeConfig) -> Self {
+        Tree { cfg }
+    }
+
+    fn link_capacity(&self, l: Link) -> f64 {
+        match l {
+            Link::ClusterPort(_) => self.cfg.cluster_link,
+            Link::S1Up(_) => self.cfg.s1_uplink,
+            Link::S2Up(_) => self.cfg.s2_uplink,
+            Link::S3Up(_) => self.cfg.s3_uplink,
+            Link::HbmCtl(_) => self.cfg.hbm_per_chiplet,
+            Link::D2d(_, _) => self.cfg.d2d_link,
+        }
+    }
+
+    /// The sequence of links a flow traverses (unique tree path; both
+    /// endpoints' cluster ports are included for cluster↔cluster).
+    pub fn path(&self, src: usize, dst: Endpoint) -> Vec<Link> {
+        let (sch, ss3, ss2, ss1, _) = self.cfg.cluster_coords(src);
+        let g_s1 = |ch: usize, s3: usize, s2: usize, s1: usize| {
+            ((ch * self.cfg.s3_per_chiplet + s3) * self.cfg.s2_per_s3 + s2)
+                * self.cfg.s1_per_s2
+                + s1
+        };
+        let g_s2 = |ch: usize, s3: usize, s2: usize| {
+            (ch * self.cfg.s3_per_chiplet + s3) * self.cfg.s2_per_s3 + s2
+        };
+        let g_s3 =
+            |ch: usize, s3: usize| ch * self.cfg.s3_per_chiplet + s3;
+
+        let mut links = vec![Link::ClusterPort(src)];
+        match dst {
+            Endpoint::Cluster(d) => {
+                let (dch, ds3, ds2, ds1, _) = self.cfg.cluster_coords(d);
+                if (sch, ss3, ss2, ss1) == (dch, ds3, ds2, ds1) {
+                    // same S1: through the local crossbar only
+                } else if (sch, ss3, ss2) == (dch, ds3, ds2) {
+                    links.push(Link::S1Up(g_s1(sch, ss3, ss2, ss1)));
+                    links.push(Link::S1Up(g_s1(dch, ds3, ds2, ds1)));
+                } else if (sch, ss3) == (dch, ds3) {
+                    links.push(Link::S1Up(g_s1(sch, ss3, ss2, ss1)));
+                    links.push(Link::S2Up(g_s2(sch, ss3, ss2)));
+                    links.push(Link::S2Up(g_s2(dch, ds3, ds2)));
+                    links.push(Link::S1Up(g_s1(dch, ds3, ds2, ds1)));
+                } else if sch == dch {
+                    links.push(Link::S1Up(g_s1(sch, ss3, ss2, ss1)));
+                    links.push(Link::S2Up(g_s2(sch, ss3, ss2)));
+                    links.push(Link::S3Up(g_s3(sch, ss3)));
+                    links.push(Link::S3Up(g_s3(dch, ds3)));
+                    links.push(Link::S2Up(g_s2(dch, ds3, ds2)));
+                    links.push(Link::S1Up(g_s1(dch, ds3, ds2, ds1)));
+                } else {
+                    // cross-chiplet NUMA: up to the root, over D2D, down.
+                    links.push(Link::S1Up(g_s1(sch, ss3, ss2, ss1)));
+                    links.push(Link::S2Up(g_s2(sch, ss3, ss2)));
+                    links.push(Link::S3Up(g_s3(sch, ss3)));
+                    links.push(Link::D2d(sch.min(dch), sch.max(dch)));
+                    links.push(Link::S3Up(g_s3(dch, ds3)));
+                    links.push(Link::S2Up(g_s2(dch, ds3, ds2)));
+                    links.push(Link::S1Up(g_s1(dch, ds3, ds2, ds1)));
+                }
+                links.push(Link::ClusterPort(d));
+            }
+            Endpoint::Hbm(hch) => {
+                links.push(Link::S1Up(g_s1(sch, ss3, ss2, ss1)));
+                links.push(Link::S2Up(g_s2(sch, ss3, ss2)));
+                links.push(Link::S3Up(g_s3(sch, ss3)));
+                if hch != sch {
+                    links.push(Link::D2d(sch.min(hch), sch.max(hch)));
+                }
+                links.push(Link::HbmCtl(hch));
+            }
+        }
+        links
+    }
+
+    /// Max-min-fair allocation by progressive filling: repeatedly find
+    /// the bottleneck link, freeze the flows through it at their fair
+    /// share, subtract, repeat.
+    pub fn allocate(&self, flows: &[Flow]) -> Allocation {
+        let paths: Vec<Vec<Link>> =
+            flows.iter().map(|f| self.path(f.src, f.dst)).collect();
+        let mut achieved: Vec<f64> = vec![0.0; flows.len()];
+        let mut remaining: Vec<f64> =
+            flows.iter().map(|f| f.demand).collect();
+        let mut frozen: Vec<bool> = flows.iter().map(|f| f.demand <= 0.0).collect();
+        let mut cap_left: BTreeMap<Link, f64> = BTreeMap::new();
+        for p in &paths {
+            for &l in p {
+                cap_left.entry(l).or_insert_with(|| self.link_capacity(l));
+            }
+        }
+
+        for _round in 0..flows.len() + 8 {
+            if frozen.iter().all(|&f| f) {
+                break;
+            }
+            // Fair share per link = cap_left / active flows through it.
+            let mut active_per_link: BTreeMap<Link, usize> = BTreeMap::new();
+            for (i, p) in paths.iter().enumerate() {
+                if frozen[i] {
+                    continue;
+                }
+                for &l in p {
+                    *active_per_link.entry(l).or_insert(0) += 1;
+                }
+            }
+            // The global increment is limited by the tightest link share
+            // and by the smallest remaining demand.
+            let mut inc = f64::INFINITY;
+            for (l, &n) in &active_per_link {
+                inc = inc.min(cap_left[l] / n as f64);
+            }
+            for (i, r) in remaining.iter().enumerate() {
+                if !frozen[i] {
+                    inc = inc.min(*r);
+                }
+            }
+            if !inc.is_finite() || inc <= 1e-12 {
+                // Freeze everything passing through an exhausted link.
+                for (i, p) in paths.iter().enumerate() {
+                    if frozen[i] {
+                        continue;
+                    }
+                    if p.iter().any(|l| cap_left[l] <= 1e-12) {
+                        frozen[i] = true;
+                    }
+                }
+                if inc <= 1e-12 {
+                    continue;
+                }
+                break;
+            }
+            // Apply the increment to all active flows.
+            for i in 0..flows.len() {
+                if frozen[i] {
+                    continue;
+                }
+                achieved[i] += inc;
+                remaining[i] -= inc;
+                for &l in &paths[i] {
+                    *cap_left.get_mut(&l).unwrap() -= inc;
+                }
+                if remaining[i] <= 1e-12 {
+                    frozen[i] = true;
+                }
+            }
+            // Freeze flows on saturated links.
+            for (i, p) in paths.iter().enumerate() {
+                if frozen[i] {
+                    continue;
+                }
+                if p.iter().any(|l| cap_left[l] <= 1e-12) {
+                    frozen[i] = true;
+                }
+            }
+        }
+
+        let mut link_util = BTreeMap::new();
+        for (l, left) in &cap_left {
+            let cap = self.link_capacity(*l);
+            link_util.insert(*l, 1.0 - left / cap);
+        }
+        Allocation { achieved, link_util }
+    }
+
+    /// Total achieved HBM read bandwidth when every cluster streams from
+    /// its local HBM with `demand` B/cycle each.
+    pub fn hbm_saturation(&self, demand_per_cluster: f64) -> f64 {
+        let flows: Vec<Flow> = (0..self.cfg.total_clusters())
+            .map(|c| {
+                let (ch, ..) = self.cfg.cluster_coords(c);
+                Flow {
+                    src: c,
+                    dst: Endpoint::Hbm(ch),
+                    demand: demand_per_cluster,
+                }
+            })
+            .collect();
+        self.allocate(&flows).achieved.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tree() -> Tree {
+        Tree::new(TreeConfig::default())
+    }
+
+    #[test]
+    fn geometry_counts() {
+        let t = tree();
+        // Fig. 3: 4 clusters/S1 × 4 S1/S2 × 2 S2/S3 = 32 clusters per
+        // S3 quadrant; 4 S3 per chiplet → 128 clusters per chiplet.
+        assert_eq!(t.cfg.clusters_per_chiplet(), 128);
+        assert_eq!(t.cfg.total_clusters(), 512);
+        // 1024 cores per chiplet, 4096 total (paper).
+        assert_eq!(t.cfg.clusters_per_chiplet() * 8, 1024);
+        assert_eq!(t.cfg.total_clusters() * 8, 4096);
+    }
+
+    #[test]
+    fn coords_roundtrip() {
+        let t = tree();
+        for id in 0..t.cfg.total_clusters() {
+            let (ch, s3, s2, s1, c) = t.cfg.cluster_coords(id);
+            assert_eq!(t.cfg.cluster_id(ch, s3, s2, s1, c), id);
+        }
+    }
+
+    #[test]
+    fn sibling_clusters_do_not_touch_uplinks() {
+        let t = tree();
+        let p = t.path(0, Endpoint::Cluster(1));
+        assert_eq!(
+            p,
+            vec![Link::ClusterPort(0), Link::ClusterPort(1)],
+            "same-S1 traffic stays in the local crossbar"
+        );
+    }
+
+    #[test]
+    fn hbm_path_climbs_the_tree() {
+        let t = tree();
+        let p = t.path(0, Endpoint::Hbm(0));
+        assert!(p.contains(&Link::S1Up(0)));
+        assert!(p.contains(&Link::S3Up(0)));
+        assert!(p.contains(&Link::HbmCtl(0)));
+    }
+
+    #[test]
+    fn cross_chiplet_uses_d2d() {
+        let t = tree();
+        let far = t.cfg.cluster_id(3, 0, 0, 0, 0);
+        let p = t.path(0, Endpoint::Cluster(far));
+        assert!(p.contains(&Link::D2d(0, 3)));
+    }
+
+    #[test]
+    fn hbm_saturates_at_aggregate_bandwidth() {
+        let t = tree();
+        // Ample demand: every cluster wants 64 B/cycle from HBM.
+        let total = t.hbm_saturation(64.0);
+        let agg = t.cfg.aggregate_hbm();
+        assert!(
+            (total / agg - 1.0).abs() < 0.02,
+            "achieved {total} vs aggregate {agg}"
+        );
+    }
+
+    #[test]
+    fn local_traffic_far_exceeds_hbm_bandwidth() {
+        // The paper's claim: cluster-to-cluster internal bandwidth by
+        // far exceeds the bandwidth into memory.
+        let t = tree();
+        // Pair up siblings within each S1: 64 flows of 64 B/cycle.
+        let mut flows = Vec::new();
+        for s1 in 0..(t.cfg.total_clusters() / t.cfg.clusters_per_s1) {
+            let base = s1 * t.cfg.clusters_per_s1;
+            flows.push(Flow {
+                src: base,
+                dst: Endpoint::Cluster(base + 1),
+                demand: 64.0,
+            });
+            flows.push(Flow {
+                src: base + 2,
+                dst: Endpoint::Cluster(base + 3),
+                demand: 64.0,
+            });
+        }
+        let alloc = t.allocate(&flows);
+        let local_total: f64 = alloc.achieved.iter().sum();
+        let hbm_total = t.hbm_saturation(64.0);
+        assert!(
+            local_total > 3.0 * hbm_total,
+            "local {local_total} vs hbm {hbm_total}"
+        );
+    }
+
+    #[test]
+    fn thinning_ratios_are_positive_and_decreasing() {
+        let c = TreeConfig::default();
+        let lvl0 = c.cluster_link * c.clusters_per_s1 as f64;
+        let lvl1 = c.s1_uplink * c.s1_per_s2 as f64;
+        let lvl2 = c.s2_uplink * c.s2_per_s3 as f64;
+        // Injected capacity shrinks (or stays) toward the root.
+        assert!(lvl0 >= c.s1_uplink);
+        assert!(lvl1 >= c.s2_uplink);
+        assert!(lvl2 >= c.s3_uplink);
+    }
+
+    #[test]
+    fn max_min_fairness_splits_bottleneck_evenly() {
+        let t = tree();
+        // Two clusters in the same S1 both stream from HBM: they share
+        // the S1 uplink fairly.
+        let flows = vec![
+            Flow { src: 0, dst: Endpoint::Hbm(0), demand: 1e9 },
+            Flow { src: 1, dst: Endpoint::Hbm(0), demand: 1e9 },
+        ];
+        let a = t.allocate(&flows);
+        assert!((a.achieved[0] - a.achieved[1]).abs() < 1e-6);
+        let total = a.achieved[0] + a.achieved[1];
+        assert!(total <= t.cfg.s1_uplink + 1e-6);
+        assert!(total > t.cfg.s1_uplink * 0.99);
+    }
+}

@@ -1,0 +1,325 @@
+//! Binary decoding of 32-bit instruction words (inverse of `encode`).
+
+use super::encode::*;
+use super::{FCmp, FReg, IReg, Inst};
+
+/// Decoding failure: the word is not part of the supported subset.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DecodeError {
+    pub word: u32,
+    pub reason: &'static str,
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cannot decode {:#010x}: {}", self.word, self.reason)
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+fn err(word: u32, reason: &'static str) -> Result<Inst, DecodeError> {
+    Err(DecodeError { word, reason })
+}
+
+fn sext(v: u32, bits: u32) -> i32 {
+    let shift = 32 - bits;
+    ((v << shift) as i32) >> shift
+}
+
+fn i_imm(w: u32) -> i32 {
+    sext(w >> 20, 12)
+}
+
+fn s_imm(w: u32) -> i32 {
+    sext(((w >> 25) << 5) | ((w >> 7) & 0x1F), 12)
+}
+
+fn b_imm(w: u32) -> i32 {
+    let imm = (((w >> 31) & 1) << 12)
+        | (((w >> 7) & 1) << 11)
+        | (((w >> 25) & 0x3F) << 5)
+        | (((w >> 8) & 0xF) << 1);
+    sext(imm, 13)
+}
+
+fn j_imm(w: u32) -> i32 {
+    let imm = (((w >> 31) & 1) << 20)
+        | (((w >> 12) & 0xFF) << 12)
+        | (((w >> 20) & 1) << 11)
+        | (((w >> 21) & 0x3FF) << 1);
+    sext(imm, 21)
+}
+
+/// Decode a 32-bit word into an instruction.
+pub fn decode(w: u32) -> Result<Inst, DecodeError> {
+    use Inst::*;
+    let op = w & 0x7F;
+    let rd = ((w >> 7) & 0x1F) as u8;
+    let f3 = (w >> 12) & 0x7;
+    let rs1 = ((w >> 15) & 0x1F) as u8;
+    let rs2 = ((w >> 20) & 0x1F) as u8;
+    let f7 = w >> 25;
+    let ird = IReg(rd);
+    let irs1 = IReg(rs1);
+    let irs2 = IReg(rs2);
+    let frd = FReg(rd);
+    let frs1 = FReg(rs1);
+    let frs2 = FReg(rs2);
+
+    Ok(match op {
+        OP_LUI => Lui { rd: ird, imm: (w & 0xFFFFF000) as i32 },
+        OP_AUIPC => Auipc { rd: ird, imm: (w & 0xFFFFF000) as i32 },
+        OP_JAL => Jal { rd: ird, imm: j_imm(w) },
+        OP_JALR => Jalr { rd: ird, rs1: irs1, imm: i_imm(w) },
+        OP_BRANCH => {
+            let imm = b_imm(w);
+            match f3 {
+                0 => Beq { rs1: irs1, rs2: irs2, imm },
+                1 => Bne { rs1: irs1, rs2: irs2, imm },
+                4 => Blt { rs1: irs1, rs2: irs2, imm },
+                5 => Bge { rs1: irs1, rs2: irs2, imm },
+                6 => Bltu { rs1: irs1, rs2: irs2, imm },
+                7 => Bgeu { rs1: irs1, rs2: irs2, imm },
+                _ => return err(w, "branch funct3"),
+            }
+        }
+        OP_LOAD => match f3 {
+            2 => Lw { rd: ird, rs1: irs1, imm: i_imm(w) },
+            _ => return err(w, "load funct3 (only lw)"),
+        },
+        OP_STORE => match f3 {
+            2 => Sw { rs1: irs1, rs2: irs2, imm: s_imm(w) },
+            _ => return err(w, "store funct3 (only sw)"),
+        },
+        OP_IMM => match f3 {
+            0 => Addi { rd: ird, rs1: irs1, imm: i_imm(w) },
+            1 => Slli { rd: ird, rs1: irs1, shamt: (rs2 & 0x1F) as u8 },
+            2 => Slti { rd: ird, rs1: irs1, imm: i_imm(w) },
+            3 => Sltiu { rd: ird, rs1: irs1, imm: i_imm(w) },
+            4 => Xori { rd: ird, rs1: irs1, imm: i_imm(w) },
+            5 => {
+                if f7 & 0x20 != 0 {
+                    Srai { rd: ird, rs1: irs1, shamt: (rs2 & 0x1F) as u8 }
+                } else {
+                    Srli { rd: ird, rs1: irs1, shamt: (rs2 & 0x1F) as u8 }
+                }
+            }
+            6 => Ori { rd: ird, rs1: irs1, imm: i_imm(w) },
+            7 => Andi { rd: ird, rs1: irs1, imm: i_imm(w) },
+            _ => unreachable!(),
+        },
+        OP_OP => match (f7, f3) {
+            (0x00, 0) => Add { rd: ird, rs1: irs1, rs2: irs2 },
+            (0x20, 0) => Sub { rd: ird, rs1: irs1, rs2: irs2 },
+            (0x00, 1) => Sll { rd: ird, rs1: irs1, rs2: irs2 },
+            (0x00, 2) => Slt { rd: ird, rs1: irs1, rs2: irs2 },
+            (0x00, 3) => Sltu { rd: ird, rs1: irs1, rs2: irs2 },
+            (0x00, 4) => Xor { rd: ird, rs1: irs1, rs2: irs2 },
+            (0x00, 5) => Srl { rd: ird, rs1: irs1, rs2: irs2 },
+            (0x20, 5) => Sra { rd: ird, rs1: irs1, rs2: irs2 },
+            (0x00, 6) => Or { rd: ird, rs1: irs1, rs2: irs2 },
+            (0x00, 7) => And { rd: ird, rs1: irs1, rs2: irs2 },
+            (0x01, 0) => Mul { rd: ird, rs1: irs1, rs2: irs2 },
+            (0x01, 1) => Mulh { rd: ird, rs1: irs1, rs2: irs2 },
+            _ => return err(w, "OP funct7/funct3"),
+        },
+        OP_LOAD_FP => match f3 {
+            3 => Fld { rd: frd, rs1: irs1, imm: i_imm(w) },
+            _ => return err(w, "load-fp funct3 (only fld)"),
+        },
+        OP_STORE_FP => match f3 {
+            3 => Fsd { rs1: irs1, rs2: frs2, imm: s_imm(w) },
+            _ => return err(w, "store-fp funct3 (only fsd)"),
+        },
+        OP_MADD | OP_MSUB | OP_NMADD => {
+            if (f7 & 0x3) != FMT_D {
+                return err(w, "R4 fmt (only D)");
+            }
+            let rs3 = FReg(((w >> 27) & 0x1F) as u8);
+            match op {
+                OP_MADD => FmaddD { rd: frd, rs1: frs1, rs2: frs2, rs3 },
+                OP_MSUB => FmsubD { rd: frd, rs1: frs1, rs2: frs2, rs3 },
+                _ => FnmaddD { rd: frd, rs1: frs1, rs2: frs2, rs3 },
+            }
+        }
+        OP_FP => match (f7, f3) {
+            (0x01, _) => FaddD { rd: frd, rs1: frs1, rs2: frs2 },
+            (0x05, _) => FsubD { rd: frd, rs1: frs1, rs2: frs2 },
+            (0x09, _) => FmulD { rd: frd, rs1: frs1, rs2: frs2 },
+            (0x0D, _) => FdivD { rd: frd, rs1: frs1, rs2: frs2 },
+            (0x11, 0) => FsgnjD { rd: frd, rs1: frs1, rs2: frs2 },
+            (0x15, 0) => FminD { rd: frd, rs1: frs1, rs2: frs2 },
+            (0x15, 1) => FmaxD { rd: frd, rs1: frs1, rs2: frs2 },
+            (0x69, _) => FcvtDW { rd: frd, rs1: irs1 },
+            (0x61, _) => FcvtWD { rd: ird, rs1: frs1 },
+            (0x71, _) => FmvXD { rd: ird, rs1: frs1 },
+            (0x79, _) => FmvDX { rd: frd, rs1: irs1 },
+            (0x51, 0) => Fcmp { op: FCmp::Le, rd: ird, rs1: frs1, rs2: frs2 },
+            (0x51, 1) => Fcmp { op: FCmp::Lt, rd: ird, rs1: frs1, rs2: frs2 },
+            (0x51, 2) => Fcmp { op: FCmp::Eq, rd: ird, rs1: frs1, rs2: frs2 },
+            _ => return err(w, "OP-FP funct7/funct3"),
+        },
+        OP_CUSTOM0 => {
+            let n_instr = (i_imm(w) & 0xFF) as u8;
+            match f3 {
+                0 => FrepO { rpt: irs1, n_instr },
+                1 => FrepI { rpt: irs1, n_instr },
+                _ => return err(w, "custom-0 funct3"),
+            }
+        }
+        OP_CUSTOM1 => {
+            let imm = i_imm(w);
+            let ssr = (imm & 0x1F) as u8;
+            let word = ((imm >> 5) & 0x3F) as u8;
+            match f3 {
+                0 => Scfgwi { rs1: irs1, ssr, word },
+                1 => Scfgri { rd: ird, ssr, word },
+                2 => {
+                    if imm & 1 == 1 {
+                        SsrEnable
+                    } else {
+                        SsrDisable
+                    }
+                }
+                3 => Barrier,
+                4 => Halt,
+                _ => return err(w, "custom-1 funct3"),
+            }
+        }
+        _ => return err(w, "unknown major opcode"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::encode;
+    use super::*;
+
+    fn all_sample_insts() -> Vec<Inst> {
+        use Inst::*;
+        let x = |n| IReg(n);
+        let f = |n| FReg(n);
+        vec![
+            Lui { rd: x(5), imm: 0x12345 << 12 },
+            Auipc { rd: x(6), imm: 0x1 << 12 },
+            Addi { rd: x(10), rs1: x(10), imm: -4 },
+            Slti { rd: x(1), rs1: x(2), imm: 100 },
+            Sltiu { rd: x(1), rs1: x(2), imm: 100 },
+            Andi { rd: x(3), rs1: x(4), imm: 0xF },
+            Ori { rd: x(3), rs1: x(4), imm: 0xF },
+            Xori { rd: x(3), rs1: x(4), imm: -1 },
+            Slli { rd: x(7), rs1: x(8), shamt: 3 },
+            Srli { rd: x(7), rs1: x(8), shamt: 31 },
+            Srai { rd: x(7), rs1: x(8), shamt: 1 },
+            Add { rd: x(1), rs1: x(2), rs2: x(3) },
+            Sub { rd: x(1), rs1: x(2), rs2: x(3) },
+            Sll { rd: x(1), rs1: x(2), rs2: x(3) },
+            Srl { rd: x(1), rs1: x(2), rs2: x(3) },
+            Sra { rd: x(1), rs1: x(2), rs2: x(3) },
+            And { rd: x(1), rs1: x(2), rs2: x(3) },
+            Or { rd: x(1), rs1: x(2), rs2: x(3) },
+            Xor { rd: x(1), rs1: x(2), rs2: x(3) },
+            Slt { rd: x(1), rs1: x(2), rs2: x(3) },
+            Sltu { rd: x(1), rs1: x(2), rs2: x(3) },
+            Mul { rd: x(5), rs1: x(6), rs2: x(7) },
+            Mulh { rd: x(5), rs1: x(6), rs2: x(7) },
+            Lw { rd: x(9), rs1: x(2), imm: -8 },
+            Sw { rs1: x(2), rs2: x(9), imm: 2044 },
+            Jal { rd: x(1), imm: -2048 },
+            Jalr { rd: x(0), rs1: x(1), imm: 0 },
+            Beq { rs1: x(1), rs2: x(2), imm: -16 },
+            Bne { rs1: x(1), rs2: x(2), imm: 16 },
+            Blt { rs1: x(1), rs2: x(2), imm: 4094 },
+            Bge { rs1: x(1), rs2: x(2), imm: -4096 },
+            Bltu { rs1: x(14), rs2: x(11), imm: -52 },
+            Bgeu { rs1: x(1), rs2: x(2), imm: 8 },
+            Fld { rd: f(10), rs1: x(5), imm: 24 },
+            Fsd { rs1: x(15), rs2: f(10), imm: 16 },
+            FmaddD { rd: f(15), rs1: f(0), rs2: f(1), rs3: f(15) },
+            FmsubD { rd: f(4), rs1: f(5), rs2: f(6), rs3: f(7) },
+            FnmaddD { rd: f(4), rs1: f(5), rs2: f(6), rs3: f(7) },
+            FaddD { rd: f(1), rs1: f(2), rs2: f(3) },
+            FsubD { rd: f(1), rs1: f(2), rs2: f(3) },
+            FmulD { rd: f(1), rs1: f(2), rs2: f(3) },
+            FdivD { rd: f(1), rs1: f(2), rs2: f(3) },
+            FsgnjD { rd: f(11), rs1: f(12), rs2: f(12) },
+            FminD { rd: f(1), rs1: f(2), rs2: f(3) },
+            FmaxD { rd: f(1), rs1: f(2), rs2: f(3) },
+            FcvtDW { rd: f(3), rs1: x(4) },
+            FcvtWD { rd: x(3), rs1: f(4) },
+            FmvXD { rd: x(8), rs1: f(9) },
+            FmvDX { rd: f(8), rs1: x(9) },
+            Fcmp { op: FCmp::Eq, rd: x(5), rs1: f(6), rs2: f(7) },
+            Fcmp { op: FCmp::Lt, rd: x(5), rs1: f(6), rs2: f(7) },
+            Fcmp { op: FCmp::Le, rd: x(5), rs1: f(6), rs2: f(7) },
+            FrepO { rpt: x(20), n_instr: 1 },
+            FrepI { rpt: x(21), n_instr: 16 },
+            Scfgwi { rs1: x(5), ssr: 0, word: 2 },
+            Scfgwi { rs1: x(6), ssr: 2, word: 31 },
+            Scfgri { rd: x(7), ssr: 1, word: 6 },
+            SsrEnable,
+            SsrDisable,
+            Barrier,
+            Halt,
+            Nop,
+        ]
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_all() {
+        for inst in all_sample_insts() {
+            let w = encode(inst);
+            let back = decode(w).unwrap_or_else(|e| {
+                panic!("decode failed for {inst:?}: {e}")
+            });
+            // Nop is canonically `addi x0,x0,0`.
+            let expect = match inst {
+                Inst::Nop => Inst::Addi {
+                    rd: IReg(0),
+                    rs1: IReg(0),
+                    imm: 0,
+                },
+                other => other,
+            };
+            assert_eq!(back, expect, "word {w:#010x}");
+        }
+    }
+
+    #[test]
+    fn branch_immediates_are_even_and_signed() {
+        let i = Inst::Bne { rs1: IReg(1), rs2: IReg(2), imm: -52 };
+        let w = encode(i);
+        assert_eq!(decode(w).unwrap(), i);
+    }
+
+    #[test]
+    fn jal_large_offsets() {
+        for imm in [-1048576, -2, 0, 2, 1048574] {
+            let i = Inst::Jal { rd: IReg(1), imm };
+            assert_eq!(decode(encode(i)).unwrap(), i, "imm={imm}");
+        }
+    }
+
+    #[test]
+    fn unknown_opcode_is_error() {
+        assert!(decode(0x0000_007F).is_err());
+        assert!(decode(0xFFFF_FFFF).is_err());
+    }
+
+    #[test]
+    fn real_riscv_encodings_match_spec_examples() {
+        // addi x0, x0, 0 == canonical NOP 0x00000013
+        assert_eq!(encode(Inst::Nop), 0x0000_0013);
+        // add x1, x2, x3 == 0x003100B3
+        assert_eq!(
+            encode(Inst::Add { rd: IReg(1), rs1: IReg(2), rs2: IReg(3) }),
+            0x0031_00B3
+        );
+        // lw x5, 8(x2) == 0x00812283
+        assert_eq!(
+            encode(Inst::Lw { rd: IReg(5), rs1: IReg(2), imm: 8 }),
+            0x0081_2283
+        );
+    }
+}

@@ -1,0 +1,195 @@
+//! Binary encoding to 32-bit RISC-V instruction words.
+//!
+//! Standard extensions use the ratified RV32 encodings; `Xfrep` lives on
+//! the custom-0 major opcode (`0x0B`) and `Xssr` (+ our barrier/halt
+//! system ops) on custom-1 (`0x2B`).
+
+use super::{FCmp, FReg, IReg, Inst};
+
+pub(crate) const OP_LUI: u32 = 0x37;
+pub(crate) const OP_AUIPC: u32 = 0x17;
+pub(crate) const OP_JAL: u32 = 0x6F;
+pub(crate) const OP_JALR: u32 = 0x67;
+pub(crate) const OP_BRANCH: u32 = 0x63;
+pub(crate) const OP_LOAD: u32 = 0x03;
+pub(crate) const OP_STORE: u32 = 0x23;
+pub(crate) const OP_IMM: u32 = 0x13;
+pub(crate) const OP_OP: u32 = 0x33;
+pub(crate) const OP_LOAD_FP: u32 = 0x07;
+pub(crate) const OP_STORE_FP: u32 = 0x27;
+pub(crate) const OP_MADD: u32 = 0x43;
+pub(crate) const OP_MSUB: u32 = 0x47;
+pub(crate) const OP_NMADD: u32 = 0x4F;
+pub(crate) const OP_FP: u32 = 0x53;
+pub(crate) const OP_CUSTOM0: u32 = 0x0B; // Xfrep
+pub(crate) const OP_CUSTOM1: u32 = 0x2B; // Xssr + system
+
+/// D-extension fmt field (bits 26:25 of funct7 region).
+pub(crate) const FMT_D: u32 = 0b01;
+
+fn r_type(op: u32, f3: u32, f7: u32, rd: u8, rs1: u8, rs2: u8) -> u32 {
+    (f7 << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (f3 << 12)
+        | ((rd as u32) << 7)
+        | op
+}
+
+fn i_type(op: u32, f3: u32, rd: u8, rs1: u8, imm: i32) -> u32 {
+    let imm = (imm as u32) & 0xFFF;
+    (imm << 20) | ((rs1 as u32) << 15) | (f3 << 12) | ((rd as u32) << 7) | op
+}
+
+fn s_type(op: u32, f3: u32, rs1: u8, rs2: u8, imm: i32) -> u32 {
+    let imm = imm as u32;
+    (((imm >> 5) & 0x7F) << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (f3 << 12)
+        | ((imm & 0x1F) << 7)
+        | op
+}
+
+fn b_type(op: u32, f3: u32, rs1: u8, rs2: u8, imm: i32) -> u32 {
+    let imm = imm as u32;
+    (((imm >> 12) & 1) << 31)
+        | (((imm >> 5) & 0x3F) << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (f3 << 12)
+        | (((imm >> 1) & 0xF) << 8)
+        | (((imm >> 11) & 1) << 7)
+        | op
+}
+
+fn u_type(op: u32, rd: u8, imm: i32) -> u32 {
+    ((imm as u32) & 0xFFFFF000) | ((rd as u32) << 7) | op
+}
+
+fn j_type(op: u32, rd: u8, imm: i32) -> u32 {
+    let imm = imm as u32;
+    (((imm >> 20) & 1) << 31)
+        | (((imm >> 1) & 0x3FF) << 21)
+        | (((imm >> 11) & 1) << 20)
+        | (((imm >> 12) & 0xFF) << 12)
+        | ((rd as u32) << 7)
+        | op
+}
+
+fn r4_type(op: u32, rd: u8, rs1: u8, rs2: u8, rs3: u8) -> u32 {
+    ((rs3 as u32) << 27)
+        | (FMT_D << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        // rm = 000 (RNE)
+        | ((rd as u32) << 7)
+        | op
+}
+
+fn fp_op(f7: u32, f3: u32, rd: u8, rs1: u8, rs2: u8) -> u32 {
+    r_type(OP_FP, f3, f7, rd, rs1, rs2)
+}
+
+/// Encode an instruction to its 32-bit word.
+pub fn encode(inst: Inst) -> u32 {
+    use Inst::*;
+    match inst {
+        Lui { rd, imm } => u_type(OP_LUI, rd.0, imm),
+        Auipc { rd, imm } => u_type(OP_AUIPC, rd.0, imm),
+        Addi { rd, rs1, imm } => i_type(OP_IMM, 0, rd.0, rs1.0, imm),
+        Slti { rd, rs1, imm } => i_type(OP_IMM, 2, rd.0, rs1.0, imm),
+        Sltiu { rd, rs1, imm } => i_type(OP_IMM, 3, rd.0, rs1.0, imm),
+        Xori { rd, rs1, imm } => i_type(OP_IMM, 4, rd.0, rs1.0, imm),
+        Ori { rd, rs1, imm } => i_type(OP_IMM, 6, rd.0, rs1.0, imm),
+        Andi { rd, rs1, imm } => i_type(OP_IMM, 7, rd.0, rs1.0, imm),
+        Slli { rd, rs1, shamt } => i_type(OP_IMM, 1, rd.0, rs1.0, shamt as i32),
+        Srli { rd, rs1, shamt } => i_type(OP_IMM, 5, rd.0, rs1.0, shamt as i32),
+        Srai { rd, rs1, shamt } => {
+            i_type(OP_IMM, 5, rd.0, rs1.0, (shamt as i32) | (0x20 << 5))
+        }
+        Add { rd, rs1, rs2 } => r_type(OP_OP, 0, 0x00, rd.0, rs1.0, rs2.0),
+        Sub { rd, rs1, rs2 } => r_type(OP_OP, 0, 0x20, rd.0, rs1.0, rs2.0),
+        Sll { rd, rs1, rs2 } => r_type(OP_OP, 1, 0x00, rd.0, rs1.0, rs2.0),
+        Slt { rd, rs1, rs2 } => r_type(OP_OP, 2, 0x00, rd.0, rs1.0, rs2.0),
+        Sltu { rd, rs1, rs2 } => r_type(OP_OP, 3, 0x00, rd.0, rs1.0, rs2.0),
+        Xor { rd, rs1, rs2 } => r_type(OP_OP, 4, 0x00, rd.0, rs1.0, rs2.0),
+        Srl { rd, rs1, rs2 } => r_type(OP_OP, 5, 0x00, rd.0, rs1.0, rs2.0),
+        Sra { rd, rs1, rs2 } => r_type(OP_OP, 5, 0x20, rd.0, rs1.0, rs2.0),
+        Or { rd, rs1, rs2 } => r_type(OP_OP, 6, 0x00, rd.0, rs1.0, rs2.0),
+        And { rd, rs1, rs2 } => r_type(OP_OP, 7, 0x00, rd.0, rs1.0, rs2.0),
+        Mul { rd, rs1, rs2 } => r_type(OP_OP, 0, 0x01, rd.0, rs1.0, rs2.0),
+        Mulh { rd, rs1, rs2 } => r_type(OP_OP, 1, 0x01, rd.0, rs1.0, rs2.0),
+        Lw { rd, rs1, imm } => i_type(OP_LOAD, 2, rd.0, rs1.0, imm),
+        Sw { rs1, rs2, imm } => s_type(OP_STORE, 2, rs1.0, rs2.0, imm),
+        Jal { rd, imm } => j_type(OP_JAL, rd.0, imm),
+        Jalr { rd, rs1, imm } => i_type(OP_JALR, 0, rd.0, rs1.0, imm),
+        Beq { rs1, rs2, imm } => b_type(OP_BRANCH, 0, rs1.0, rs2.0, imm),
+        Bne { rs1, rs2, imm } => b_type(OP_BRANCH, 1, rs1.0, rs2.0, imm),
+        Blt { rs1, rs2, imm } => b_type(OP_BRANCH, 4, rs1.0, rs2.0, imm),
+        Bge { rs1, rs2, imm } => b_type(OP_BRANCH, 5, rs1.0, rs2.0, imm),
+        Bltu { rs1, rs2, imm } => b_type(OP_BRANCH, 6, rs1.0, rs2.0, imm),
+        Bgeu { rs1, rs2, imm } => b_type(OP_BRANCH, 7, rs1.0, rs2.0, imm),
+        Fld { rd, rs1, imm } => i_type(OP_LOAD_FP, 3, rd.0, rs1.0, imm),
+        Fsd { rs1, rs2, imm } => s_type(OP_STORE_FP, 3, rs1.0, rs2.0, imm),
+        FmaddD { rd, rs1, rs2, rs3 } => {
+            r4_type(OP_MADD, rd.0, rs1.0, rs2.0, rs3.0)
+        }
+        FmsubD { rd, rs1, rs2, rs3 } => {
+            r4_type(OP_MSUB, rd.0, rs1.0, rs2.0, rs3.0)
+        }
+        FnmaddD { rd, rs1, rs2, rs3 } => {
+            r4_type(OP_NMADD, rd.0, rs1.0, rs2.0, rs3.0)
+        }
+        FaddD { rd, rs1, rs2 } => fp_op(0x01, 0, rd.0, rs1.0, rs2.0),
+        FsubD { rd, rs1, rs2 } => fp_op(0x05, 0, rd.0, rs1.0, rs2.0),
+        FmulD { rd, rs1, rs2 } => fp_op(0x09, 0, rd.0, rs1.0, rs2.0),
+        FdivD { rd, rs1, rs2 } => fp_op(0x0D, 0, rd.0, rs1.0, rs2.0),
+        FsgnjD { rd, rs1, rs2 } => fp_op(0x11, 0, rd.0, rs1.0, rs2.0),
+        FminD { rd, rs1, rs2 } => fp_op(0x15, 0, rd.0, rs1.0, rs2.0),
+        FmaxD { rd, rs1, rs2 } => fp_op(0x15, 1, rd.0, rs1.0, rs2.0),
+        FcvtDW { rd, rs1 } => fp_op(0x69, 0, rd.0, rs1.0, 0),
+        FcvtWD { rd, rs1 } => fp_op(0x61, 0, rd.0, rs1.0, 0),
+        FmvXD { rd, rs1 } => fp_op(0x71, 0, rd.0, rs1.0, 0),
+        FmvDX { rd, rs1 } => fp_op(0x79, 0, rd.0, rs1.0, 0),
+        Fcmp { op, rd, rs1, rs2 } => {
+            let f3 = match op {
+                FCmp::Le => 0,
+                FCmp::Lt => 1,
+                FCmp::Eq => 2,
+            };
+            fp_op(0x51, f3, rd.0, rs1.0, rs2.0)
+        }
+        FrepO { rpt, n_instr } => {
+            i_type(OP_CUSTOM0, 0, 0, rpt.0, n_instr as i32)
+        }
+        FrepI { rpt, n_instr } => {
+            i_type(OP_CUSTOM0, 1, 0, rpt.0, n_instr as i32)
+        }
+        Scfgwi { rs1, ssr, word } => i_type(
+            OP_CUSTOM1,
+            0,
+            0,
+            rs1.0,
+            (((word as i32) << 5) | ssr as i32),
+        ),
+        Scfgri { rd, ssr, word } => i_type(
+            OP_CUSTOM1,
+            1,
+            rd.0,
+            0,
+            (((word as i32) << 5) | ssr as i32),
+        ),
+        SsrEnable => i_type(OP_CUSTOM1, 2, 0, 0, 1),
+        SsrDisable => i_type(OP_CUSTOM1, 2, 0, 0, 0),
+        Barrier => i_type(OP_CUSTOM1, 3, 0, 0, 0),
+        Halt => i_type(OP_CUSTOM1, 4, 0, 0, 0),
+        Nop => i_type(OP_IMM, 0, 0, 0, 0),
+    }
+}
+
+#[allow(unused_imports)]
+mod keep {
+    // FReg/IReg are used in the signature via Inst pattern bindings.
+    use super::{FReg, IReg};
+}

@@ -1,0 +1,417 @@
+//! RISC-V RV32IM + D-extension subset + the paper's two custom extensions
+//! (`Xssr`, `Xfrep`), with full binary encode/decode round-tripping.
+//!
+//! This is the substrate the paper builds on: Snitch executes RV32IMAFD
+//! plus Stream Semantic Registers (SSR) and Floating-point Repetition
+//! (FREP). We implement the subset needed by every kernel in the paper
+//! (dot product, mat-vec, GEMM, streaming axpy) plus enough integer
+//! scaffolding for loop bookkeeping, address arithmetic and offload glue.
+//!
+//! Standard instructions use the real RISC-V encodings (opcode/funct3/
+//! funct7), so any textbook RV32 assembler agrees with ours. The custom
+//! extensions use the custom-0 (`0x0B`, FREP) and custom-1 (`0x2B`, SSR
+//! config) major opcodes, mirroring where the real Snitch puts them.
+
+mod decode;
+mod encode;
+
+pub use decode::{decode, DecodeError};
+pub use encode::encode;
+
+use std::fmt;
+
+/// Integer register `x0..x31`. `x0` is hard-wired zero.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct IReg(pub u8);
+
+/// Floating-point register `f0..f31`.
+///
+/// When the SSR extension is *enabled*, reads/writes of `f0`/`f1`/`f2`
+/// (`ft0`/`ft1`/`ft2` in the ABI) carry stream semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FReg(pub u8);
+
+impl IReg {
+    pub const ZERO: IReg = IReg(0);
+    pub const RA: IReg = IReg(1);
+    pub const SP: IReg = IReg(2);
+}
+
+/// Number of architectural SSR data movers per core (paper: ft0..ft2).
+pub const NUM_SSRS: usize = 3;
+
+/// SSR stream registers are the first `NUM_SSRS` FP registers.
+pub fn ssr_index(f: FReg) -> Option<usize> {
+    if (f.0 as usize) < NUM_SSRS {
+        Some(f.0 as usize)
+    } else {
+        None
+    }
+}
+
+/// Maximum loop nest depth of one SSR address generator (4-D affine).
+pub const SSR_DIMS: usize = 4;
+
+/// SSR configuration word indices for `scfgwi`/`scfgri`
+/// (mirrors the Snitch SSR register map).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SsrCfg {
+    /// Stream status / enable word.
+    Status,
+    /// Repetition count: each datum is served `repeat+1` times.
+    Repeat,
+    /// Loop bound for dimension d (trip count - 1).
+    Bound(u8),
+    /// Byte stride for dimension d.
+    Stride(u8),
+    /// Writing `ReadPtr(d)` arms a d-dimensional *read* stream at this
+    /// base address; `WritePtr(d)` arms a write stream.
+    ReadPtr(u8),
+    WritePtr(u8),
+}
+
+impl SsrCfg {
+    /// Flat register-file index used in the instruction immediate.
+    pub fn word(self) -> u8 {
+        match self {
+            SsrCfg::Status => 0,
+            SsrCfg::Repeat => 1,
+            SsrCfg::Bound(d) => 2 + d,
+            SsrCfg::Stride(d) => 6 + d,
+            SsrCfg::ReadPtr(d) => 24 + d,
+            SsrCfg::WritePtr(d) => 28 + d,
+        }
+    }
+
+    pub fn from_word(w: u8) -> Option<SsrCfg> {
+        Some(match w {
+            0 => SsrCfg::Status,
+            1 => SsrCfg::Repeat,
+            2..=5 => SsrCfg::Bound(w - 2),
+            6..=9 => SsrCfg::Stride(w - 6),
+            24..=27 => SsrCfg::ReadPtr(w - 24),
+            28..=31 => SsrCfg::WritePtr(w - 28),
+            _ => return None,
+        })
+    }
+}
+
+/// FP comparison predicates (domain-crossing ops: FP in, int out).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FCmp {
+    Eq,
+    Lt,
+    Le,
+}
+
+/// The instruction set understood by the Snitch core model.
+///
+/// Grouped by pipeline: integer-only, memory, control, FP-only (eligible
+/// for FREP), and domain-crossing (synchronise both pipes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Inst {
+    // ---- RV32I integer ----
+    Lui { rd: IReg, imm: i32 },
+    Auipc { rd: IReg, imm: i32 },
+    Addi { rd: IReg, rs1: IReg, imm: i32 },
+    Slti { rd: IReg, rs1: IReg, imm: i32 },
+    Sltiu { rd: IReg, rs1: IReg, imm: i32 },
+    Andi { rd: IReg, rs1: IReg, imm: i32 },
+    Ori { rd: IReg, rs1: IReg, imm: i32 },
+    Xori { rd: IReg, rs1: IReg, imm: i32 },
+    Slli { rd: IReg, rs1: IReg, shamt: u8 },
+    Srli { rd: IReg, rs1: IReg, shamt: u8 },
+    Srai { rd: IReg, rs1: IReg, shamt: u8 },
+    Add { rd: IReg, rs1: IReg, rs2: IReg },
+    Sub { rd: IReg, rs1: IReg, rs2: IReg },
+    Sll { rd: IReg, rs1: IReg, rs2: IReg },
+    Srl { rd: IReg, rs1: IReg, rs2: IReg },
+    Sra { rd: IReg, rs1: IReg, rs2: IReg },
+    And { rd: IReg, rs1: IReg, rs2: IReg },
+    Or { rd: IReg, rs1: IReg, rs2: IReg },
+    Xor { rd: IReg, rs1: IReg, rs2: IReg },
+    Slt { rd: IReg, rs1: IReg, rs2: IReg },
+    Sltu { rd: IReg, rs1: IReg, rs2: IReg },
+    // ---- RV32M (subset) ----
+    Mul { rd: IReg, rs1: IReg, rs2: IReg },
+    Mulh { rd: IReg, rs1: IReg, rs2: IReg },
+    // ---- loads/stores ----
+    Lw { rd: IReg, rs1: IReg, imm: i32 },
+    Sw { rs1: IReg, rs2: IReg, imm: i32 },
+    // ---- control transfer ----
+    Jal { rd: IReg, imm: i32 },
+    Jalr { rd: IReg, rs1: IReg, imm: i32 },
+    Beq { rs1: IReg, rs2: IReg, imm: i32 },
+    Bne { rs1: IReg, rs2: IReg, imm: i32 },
+    Blt { rs1: IReg, rs2: IReg, imm: i32 },
+    Bge { rs1: IReg, rs2: IReg, imm: i32 },
+    Bltu { rs1: IReg, rs2: IReg, imm: i32 },
+    Bgeu { rs1: IReg, rs2: IReg, imm: i32 },
+    // ---- D extension: FP memory ----
+    Fld { rd: FReg, rs1: IReg, imm: i32 },
+    Fsd { rs1: IReg, rs2: FReg, imm: i32 },
+    // ---- D extension: FP compute (FREP-eligible) ----
+    FmaddD { rd: FReg, rs1: FReg, rs2: FReg, rs3: FReg },
+    FmsubD { rd: FReg, rs1: FReg, rs2: FReg, rs3: FReg },
+    FnmaddD { rd: FReg, rs1: FReg, rs2: FReg, rs3: FReg },
+    FaddD { rd: FReg, rs1: FReg, rs2: FReg },
+    FsubD { rd: FReg, rs1: FReg, rs2: FReg },
+    FmulD { rd: FReg, rs1: FReg, rs2: FReg },
+    FdivD { rd: FReg, rs1: FReg, rs2: FReg },
+    /// `fsgnj.d rd, rs, rs` is the canonical `fmv.d`.
+    FsgnjD { rd: FReg, rs1: FReg, rs2: FReg },
+    FminD { rd: FReg, rs1: FReg, rs2: FReg },
+    FmaxD { rd: FReg, rs1: FReg, rs2: FReg },
+    // ---- domain crossing (synchronise int + FP pipes) ----
+    FcvtDW { rd: FReg, rs1: IReg },
+    FcvtWD { rd: IReg, rs1: FReg },
+    FmvXD { rd: IReg, rs1: FReg },
+    FmvDX { rd: FReg, rs1: IReg },
+    Fcmp { op: FCmp, rd: IReg, rs1: FReg, rs2: FReg },
+    // ---- Xfrep (custom-0) ----
+    /// `frep.o rs1, n_instr`: repeat the next `n_instr` FP instructions
+    /// `(rs1)+1` times ("outer" repetition: the whole block loops).
+    FrepO { rpt: IReg, n_instr: u8 },
+    /// `frep.i rs1, n_instr`: "inner" repetition — each of the next
+    /// `n_instr` instructions is emitted `(rs1)+1` times consecutively.
+    FrepI { rpt: IReg, n_instr: u8 },
+    // ---- Xssr (custom-1) ----
+    /// `scfgwi rs1, ssr, word`: write SSR config word from integer reg.
+    Scfgwi { rs1: IReg, ssr: u8, word: u8 },
+    /// `scfgri rd, ssr, word`: read SSR config word into integer reg.
+    Scfgri { rd: IReg, ssr: u8, word: u8 },
+    /// Enable stream semantics on ft0..ft2 (CSR set in real Snitch).
+    SsrEnable,
+    SsrDisable,
+    // ---- system ----
+    /// Cluster-level barrier (maps to a CSR/hw-barrier in real Snitch).
+    Barrier,
+    /// End of kernel: core halts and raises "done".
+    Halt,
+    Nop,
+}
+
+/// Pipeline class of an instruction — drives issue rules in the core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipeClass {
+    /// Integer ALU / branches / int loads+stores: int pipe, 1 cycle.
+    Int,
+    /// FP compute and FP loads/stores: offloaded to the FPU sequencer.
+    Fp,
+    /// Reads FP state into the int domain (or vice versa): must drain
+    /// the FPU sequencer before issuing.
+    Crossing,
+    /// FREP configuration: consumed by the sequencer frontend.
+    Frep,
+    /// SSR configuration / enable: int pipe but orders against streams.
+    SsrCfg,
+    /// Barrier / halt.
+    Sys,
+}
+
+impl Inst {
+    pub fn pipe_class(&self) -> PipeClass {
+        use Inst::*;
+        match self {
+            Fld { .. } | Fsd { .. } | FmaddD { .. } | FmsubD { .. }
+            | FnmaddD { .. } | FaddD { .. } | FsubD { .. } | FmulD { .. }
+            | FdivD { .. } | FsgnjD { .. } | FminD { .. } | FmaxD { .. } => {
+                PipeClass::Fp
+            }
+            FcvtDW { .. } | FcvtWD { .. } | FmvXD { .. } | FmvDX { .. }
+            | Fcmp { .. } => PipeClass::Crossing,
+            FrepO { .. } | FrepI { .. } => PipeClass::Frep,
+            Scfgwi { .. } | Scfgri { .. } | SsrEnable | SsrDisable => {
+                PipeClass::SsrCfg
+            }
+            Barrier | Halt => PipeClass::Sys,
+            _ => PipeClass::Int,
+        }
+    }
+
+    /// Does this FP instruction perform useful FLOPs (for utilization
+    /// accounting)? FMA counts 2, add/sub/mul count 1, moves count 0.
+    pub fn flops(&self) -> u32 {
+        use Inst::*;
+        match self {
+            FmaddD { .. } | FmsubD { .. } | FnmaddD { .. } => 2,
+            FaddD { .. } | FsubD { .. } | FmulD { .. } | FdivD { .. } => 1,
+            _ => 0,
+        }
+    }
+}
+
+impl fmt::Display for IReg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "x{}", self.0)
+    }
+}
+
+impl fmt::Display for FReg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "f{}", self.0)
+    }
+}
+
+impl fmt::Display for Inst {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use Inst::*;
+        match *self {
+            Lui { rd, imm } => write!(f, "lui {rd}, {imm:#x}"),
+            Auipc { rd, imm } => write!(f, "auipc {rd}, {imm:#x}"),
+            Addi { rd, rs1, imm } => write!(f, "addi {rd}, {rs1}, {imm}"),
+            Slti { rd, rs1, imm } => write!(f, "slti {rd}, {rs1}, {imm}"),
+            Sltiu { rd, rs1, imm } => write!(f, "sltiu {rd}, {rs1}, {imm}"),
+            Andi { rd, rs1, imm } => write!(f, "andi {rd}, {rs1}, {imm}"),
+            Ori { rd, rs1, imm } => write!(f, "ori {rd}, {rs1}, {imm}"),
+            Xori { rd, rs1, imm } => write!(f, "xori {rd}, {rs1}, {imm}"),
+            Slli { rd, rs1, shamt } => write!(f, "slli {rd}, {rs1}, {shamt}"),
+            Srli { rd, rs1, shamt } => write!(f, "srli {rd}, {rs1}, {shamt}"),
+            Srai { rd, rs1, shamt } => write!(f, "srai {rd}, {rs1}, {shamt}"),
+            Add { rd, rs1, rs2 } => write!(f, "add {rd}, {rs1}, {rs2}"),
+            Sub { rd, rs1, rs2 } => write!(f, "sub {rd}, {rs1}, {rs2}"),
+            Sll { rd, rs1, rs2 } => write!(f, "sll {rd}, {rs1}, {rs2}"),
+            Srl { rd, rs1, rs2 } => write!(f, "srl {rd}, {rs1}, {rs2}"),
+            Sra { rd, rs1, rs2 } => write!(f, "sra {rd}, {rs1}, {rs2}"),
+            And { rd, rs1, rs2 } => write!(f, "and {rd}, {rs1}, {rs2}"),
+            Or { rd, rs1, rs2 } => write!(f, "or {rd}, {rs1}, {rs2}"),
+            Xor { rd, rs1, rs2 } => write!(f, "xor {rd}, {rs1}, {rs2}"),
+            Slt { rd, rs1, rs2 } => write!(f, "slt {rd}, {rs1}, {rs2}"),
+            Sltu { rd, rs1, rs2 } => write!(f, "sltu {rd}, {rs1}, {rs2}"),
+            Mul { rd, rs1, rs2 } => write!(f, "mul {rd}, {rs1}, {rs2}"),
+            Mulh { rd, rs1, rs2 } => write!(f, "mulh {rd}, {rs1}, {rs2}"),
+            Lw { rd, rs1, imm } => write!(f, "lw {rd}, {imm}({rs1})"),
+            Sw { rs1, rs2, imm } => write!(f, "sw {rs2}, {imm}({rs1})"),
+            Jal { rd, imm } => write!(f, "jal {rd}, {imm}"),
+            Jalr { rd, rs1, imm } => write!(f, "jalr {rd}, {imm}({rs1})"),
+            Beq { rs1, rs2, imm } => write!(f, "beq {rs1}, {rs2}, {imm}"),
+            Bne { rs1, rs2, imm } => write!(f, "bne {rs1}, {rs2}, {imm}"),
+            Blt { rs1, rs2, imm } => write!(f, "blt {rs1}, {rs2}, {imm}"),
+            Bge { rs1, rs2, imm } => write!(f, "bge {rs1}, {rs2}, {imm}"),
+            Bltu { rs1, rs2, imm } => write!(f, "bltu {rs1}, {rs2}, {imm}"),
+            Bgeu { rs1, rs2, imm } => write!(f, "bgeu {rs1}, {rs2}, {imm}"),
+            Fld { rd, rs1, imm } => write!(f, "fld {rd}, {imm}({rs1})"),
+            Fsd { rs1, rs2, imm } => write!(f, "fsd {rs2}, {imm}({rs1})"),
+            FmaddD { rd, rs1, rs2, rs3 } => {
+                write!(f, "fmadd.d {rd}, {rs1}, {rs2}, {rs3}")
+            }
+            FmsubD { rd, rs1, rs2, rs3 } => {
+                write!(f, "fmsub.d {rd}, {rs1}, {rs2}, {rs3}")
+            }
+            FnmaddD { rd, rs1, rs2, rs3 } => {
+                write!(f, "fnmadd.d {rd}, {rs1}, {rs2}, {rs3}")
+            }
+            FaddD { rd, rs1, rs2 } => write!(f, "fadd.d {rd}, {rs1}, {rs2}"),
+            FsubD { rd, rs1, rs2 } => write!(f, "fsub.d {rd}, {rs1}, {rs2}"),
+            FmulD { rd, rs1, rs2 } => write!(f, "fmul.d {rd}, {rs1}, {rs2}"),
+            FdivD { rd, rs1, rs2 } => write!(f, "fdiv.d {rd}, {rs1}, {rs2}"),
+            FsgnjD { rd, rs1, rs2 } if rs1 == rs2 => {
+                write!(f, "fmv.d {rd}, {rs1}")
+            }
+            FsgnjD { rd, rs1, rs2 } => {
+                write!(f, "fsgnj.d {rd}, {rs1}, {rs2}")
+            }
+            FminD { rd, rs1, rs2 } => write!(f, "fmin.d {rd}, {rs1}, {rs2}"),
+            FmaxD { rd, rs1, rs2 } => write!(f, "fmax.d {rd}, {rs1}, {rs2}"),
+            FcvtDW { rd, rs1 } => write!(f, "fcvt.d.w {rd}, {rs1}"),
+            FcvtWD { rd, rs1 } => write!(f, "fcvt.w.d {rd}, {rs1}"),
+            FmvXD { rd, rs1 } => write!(f, "fmv.x.d {rd}, {rs1}"),
+            FmvDX { rd, rs1 } => write!(f, "fmv.d.x {rd}, {rs1}"),
+            Fcmp { op, rd, rs1, rs2 } => {
+                let n = match op {
+                    FCmp::Eq => "feq.d",
+                    FCmp::Lt => "flt.d",
+                    FCmp::Le => "fle.d",
+                };
+                write!(f, "{n} {rd}, {rs1}, {rs2}")
+            }
+            FrepO { rpt, n_instr } => write!(f, "frep.o {rpt}, {n_instr}"),
+            FrepI { rpt, n_instr } => write!(f, "frep.i {rpt}, {n_instr}"),
+            Scfgwi { rs1, ssr, word } => {
+                write!(f, "scfgwi {rs1}, {ssr}, {word}")
+            }
+            Scfgri { rd, ssr, word } => {
+                write!(f, "scfgri {rd}, {ssr}, {word}")
+            }
+            SsrEnable => write!(f, "ssr.enable"),
+            SsrDisable => write!(f, "ssr.disable"),
+            Barrier => write!(f, "barrier"),
+            Halt => write!(f, "halt"),
+            Nop => write!(f, "nop"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ssr_cfg_word_roundtrip() {
+        let cases = [
+            SsrCfg::Status,
+            SsrCfg::Repeat,
+            SsrCfg::Bound(0),
+            SsrCfg::Bound(3),
+            SsrCfg::Stride(2),
+            SsrCfg::ReadPtr(1),
+            SsrCfg::WritePtr(3),
+        ];
+        for c in cases {
+            assert_eq!(SsrCfg::from_word(c.word()), Some(c));
+        }
+    }
+
+    #[test]
+    fn ssr_cfg_rejects_unused_words() {
+        assert_eq!(SsrCfg::from_word(15), None);
+        assert_eq!(SsrCfg::from_word(23), None);
+    }
+
+    #[test]
+    fn pipe_classes() {
+        assert_eq!(
+            Inst::FmaddD { rd: FReg(4), rs1: FReg(0), rs2: FReg(1), rs3: FReg(4) }
+                .pipe_class(),
+            PipeClass::Fp
+        );
+        assert_eq!(
+            Inst::Addi { rd: IReg(5), rs1: IReg(5), imm: 1 }.pipe_class(),
+            PipeClass::Int
+        );
+        assert_eq!(
+            Inst::FmvDX { rd: FReg(3), rs1: IReg(3) }.pipe_class(),
+            PipeClass::Crossing
+        );
+        assert_eq!(
+            Inst::FrepO { rpt: IReg(5), n_instr: 1 }.pipe_class(),
+            PipeClass::Frep
+        );
+    }
+
+    #[test]
+    fn fma_counts_two_flops() {
+        let fma = Inst::FmaddD {
+            rd: FReg(4),
+            rs1: FReg(0),
+            rs2: FReg(1),
+            rs3: FReg(4),
+        };
+        assert_eq!(fma.flops(), 2);
+        let mv = Inst::FsgnjD { rd: FReg(4), rs1: FReg(5), rs2: FReg(5) };
+        assert_eq!(mv.flops(), 0);
+    }
+
+    #[test]
+    fn ssr_register_mapping() {
+        assert_eq!(ssr_index(FReg(0)), Some(0));
+        assert_eq!(ssr_index(FReg(2)), Some(2));
+        assert_eq!(ssr_index(FReg(3)), None);
+    }
+
+    #[test]
+    fn display_fmv_alias() {
+        let i = Inst::FsgnjD { rd: FReg(10), rs1: FReg(11), rs2: FReg(11) };
+        assert_eq!(i.to_string(), "fmv.d f10, f11");
+    }
+}

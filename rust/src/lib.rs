@@ -1,0 +1,37 @@
+//! # Manticore reproduction
+//!
+//! A production-style reproduction of *"Manticore: A 4096-core RISC-V
+//! Chiplet Architecture for Ultra-efficient Floating-point Computing"*
+//! (Zaruba, Schuiki, Benini — 2020) as a three-layer Rust + JAX/Pallas
+//! stack:
+//!
+//! * **L3 (this crate)** — the architecture simulator (Snitch cores with
+//!   SSR + FREP, banked TCDM, clusters, the bandwidth-thinned quadrant
+//!   tree, HBM, DVFS/power), the offload coordinator, and the PJRT
+//!   runtime that executes AOT-compiled JAX artifacts;
+//! * **L2 (python/compile)** — the DNN training-step compute graph;
+//! * **L1 (python/compile/kernels)** — Pallas kernels mirroring the
+//!   SSR/FREP execution discipline on TPU-shaped hardware.
+//!
+//! See DESIGN.md for the full system inventory and the experiment index
+//! mapping every paper figure to a bench target.
+
+pub mod ariane;
+pub mod asm;
+pub mod baselines;
+pub mod cluster;
+pub mod codegen;
+pub mod config;
+pub mod coordinator;
+pub mod examples_support;
+pub mod interconnect;
+pub mod isa;
+pub mod mem;
+pub mod power;
+pub mod repro;
+pub mod roofline;
+pub mod runtime;
+pub mod snitch;
+pub mod system;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,269 @@
+//! `manticore` CLI — the L3 entry point.
+//!
+//! Subcommands:
+//!   repro <fig5|fig6|fig8|fig9|fig10|fig3|area|peaks|all>
+//!   run <artifact> [--iters N]          execute an AOT artifact via PJRT
+//!   simulate gemm --m --k --n           schedule a GEMM on the system model
+//!   simulate kernel --name <dot|matvec|gemm|axpy>   cycle-level run
+//!   train [--steps N] [--lr F]          tiny end-to-end training loop
+//!   info                                list artifacts + config
+//!
+//! Global options: --preset <manticore|prototype|max-efficiency>,
+//! --config <file.json>, --artifacts <dir>.
+
+use anyhow::{bail, Context, Result};
+use manticore::config::Config;
+use manticore::coordinator::Coordinator;
+use manticore::repro;
+use manticore::runtime::{tensor_for_spec, Runtime, Tensor};
+use manticore::util::bench::fmt_si;
+use manticore::util::cli;
+use manticore::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let (sub, args) = cli::parse(&raw);
+
+    let mut cfg = Config::preset(&args.get_or("preset", "manticore"))?;
+    if let Some(path) = args.get("config") {
+        cfg.load_file(path)
+            .with_context(|| format!("loading config {path}"))?;
+    }
+    let artifacts_dir = args.get_or("artifacts", "artifacts");
+
+    match sub.as_deref() {
+        Some("repro") => cmd_repro(&args),
+        Some("run") => cmd_run(&args, &artifacts_dir),
+        Some("simulate") => cmd_simulate(&args, &cfg),
+        Some("train") => cmd_train(&args, &artifacts_dir, &cfg),
+        Some("info") => cmd_info(&artifacts_dir, &cfg),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "manticore — reproduction of the Manticore 4096-core RISC-V \
+         chiplet architecture\n\n\
+         USAGE: manticore <COMMAND> [OPTIONS]\n\n\
+         COMMANDS:\n  \
+         repro <fig5|fig6|fig8|fig9|fig10|fig3|area|peaks|all>\n  \
+         run <artifact> [--iters N]\n  \
+         simulate gemm --m M --k K --n N | simulate kernel --name <..>\n  \
+         train [--steps N] [--lr F]\n  \
+         info\n\n\
+         OPTIONS: --preset <name> --config <file.json> --artifacts <dir>"
+    );
+}
+
+fn cmd_repro(args: &cli::Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    match which {
+        "fig5" => repro::fig5(args.get_usize("n", 2048) as u32).print(),
+        "fig6" => repro::fig6().print(),
+        "fig8" => {
+            let (a, b) = repro::fig8(
+                args.get_usize("points", 9),
+                args.get_usize("dies", 8),
+            );
+            a.print();
+            b.print();
+        }
+        "fig9" => repro::fig9(args.has_flag("measured")).print(),
+        "fig10" => {
+            let (a, b) = repro::fig10();
+            a.print();
+            b.print();
+        }
+        "fig3" => repro::fig3().print(),
+        "area" => repro::area().print(),
+        "peaks" => repro::peaks_table().print(),
+        "all" => {
+            for t in repro::all() {
+                t.print();
+            }
+        }
+        other => bail!("unknown figure '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &cli::Args, artifacts_dir: &str) -> Result<()> {
+    let Some(name) = args.positional.first() else {
+        bail!("usage: manticore run <artifact> [--iters N]");
+    };
+    let mut rt = Runtime::new(artifacts_dir)?;
+    println!("platform: {}", rt.platform());
+    let meta = rt
+        .meta(name)
+        .with_context(|| format!("unknown artifact {name}"))?
+        .clone();
+    let mut rng = Rng::new(args.get_usize("seed", 0) as u64);
+    let inputs: Vec<Tensor> = meta
+        .inputs
+        .iter()
+        .map(|spec| {
+            let mut local = Rng::new(rng.next_u64());
+            tensor_for_spec(spec, move |_| local.normal() * 0.1)
+        })
+        .collect::<Result<_>>()?;
+    let iters = args.get_usize("iters", 10);
+    let (_, first) = rt.execute_timed(name, &inputs)?;
+    let mut total = std::time::Duration::ZERO;
+    for _ in 0..iters {
+        let (_, d) = rt.execute_timed(name, &inputs)?;
+        total += d;
+    }
+    println!(
+        "{name}: first {first:?}, steady {:?}/call over {iters} iters",
+        total / iters as u32
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &cli::Args, cfg: &Config) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("gemm") => {
+            let (m, k, n) = (
+                args.get_usize("m", 4096),
+                args.get_usize("k", 4096),
+                args.get_usize("n", 4096),
+            );
+            let co = Coordinator::new(cfg.system, cfg.vdd);
+            let (time, perf) = co.schedule_gemm(m, k, n);
+            let peak = cfg.system.peak_dp(cfg.vdd);
+            println!(
+                "GEMM {m}x{k}x{n} @ {:.2} V on {} cores:",
+                cfg.vdd,
+                cfg.system.total_cores()
+            );
+            println!("  est. time      {:.3} ms", time * 1e3);
+            println!("  achieved       {}", fmt_si(perf, "flop/s"));
+            println!("  peak           {}", fmt_si(peak, "flop/s"));
+            println!("  utilization    {:.1} %", 100.0 * perf / peak);
+            Ok(())
+        }
+        Some("kernel") => cmd_simulate_kernel(args, cfg),
+        _ => bail!("usage: manticore simulate <gemm|kernel> [options]"),
+    }
+}
+
+fn cmd_simulate_kernel(args: &cli::Args, cfg: &Config) -> Result<()> {
+    use manticore::asm::kernels::*;
+    use manticore::mem::{ICache, Tcdm};
+    use manticore::snitch::{run_single, SnitchCore};
+
+    let name = args.get_or("name", "dot");
+    let n = args.get_usize("n", 2048) as u32;
+    let (prog, fill): (Vec<manticore::isa::Inst>, Box<dyn Fn(&mut Tcdm)>) =
+        match name.as_str() {
+            "dot" => {
+                let p = DotParams { n, x: 0, y: n * 8 + 8, out: 2 * n * 8 + 16 };
+                (
+                    dot_ssr_frep(p, 4),
+                    Box::new(move |t: &mut Tcdm| {
+                        t.write_f64_slice(p.x, &vec![1.0; n as usize]);
+                        t.write_f64_slice(p.y, &vec![2.0; n as usize]);
+                    }),
+                )
+            }
+            "matvec" => (
+                matvec48_fig6(0, 48 * 48 * 8, 48 * 48 * 8 + 48 * 8 + 8),
+                Box::new(|t: &mut Tcdm| {
+                    t.write_f64_slice(0, &vec![1.0; 48 * 48 + 48]);
+                }),
+            ),
+            "gemm" => {
+                let (m, k, nn) = (16u32, 32u32, 16u32);
+                let b = m * k * 8;
+                let c = b + k * nn * 8 + 8;
+                (
+                    gemm_ssr_frep(m, k, nn, 0, b, c),
+                    Box::new(move |t: &mut Tcdm| {
+                        t.write_f64_slice(
+                            0,
+                            &vec![1.0; (m * k + k * nn + 8) as usize],
+                        );
+                    }),
+                )
+            }
+            "axpy" => (
+                axpy_ssr_frep(n, 0, 8, n * 8 + 16, 2 * n * 8 + 24),
+                Box::new(move |t: &mut Tcdm| {
+                    t.write_f64(0, 2.0);
+                    t.write_f64_slice(8, &vec![1.0; 2 * n as usize]);
+                }),
+            ),
+            other => bail!("unknown kernel '{other}'"),
+        };
+
+    let mut core = SnitchCore::new(0, cfg.cluster.core, prog);
+    let mut tcdm =
+        Tcdm::new(cfg.cluster.tcdm_bytes * 2, cfg.cluster.tcdm_banks);
+    let mut ic = ICache::new(
+        cfg.cluster.icache_bytes,
+        cfg.cluster.core.icache_miss_penalty,
+    );
+    fill(&mut tcdm);
+    let cycles = run_single(&mut core, &mut tcdm, &mut ic, 1_000_000_000);
+    println!("kernel {name} (n={n}):");
+    println!("  cycles           {cycles}");
+    println!("  fetched          {}", core.stats.fetched);
+    println!("  FPU issued       {}", core.fpu.stats.issued);
+    println!("  flops            {}", core.fpu.stats.flops);
+    println!(
+        "  FPU utilization  {:.1} %",
+        100.0 * core.flop_utilization()
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> {
+    let steps = args.get_usize("steps", 50);
+    let lr = args.get_f64("lr", 0.05) as f32;
+    let report = manticore::examples_support::train_loop(
+        artifacts_dir,
+        steps,
+        32,
+        lr,
+        cfg,
+        args.get_usize("seed", 0) as u64,
+        true,
+    )?;
+    println!(
+        "final loss {:.4} (initial {:.4}), accuracy {:.0} %, \
+         sim {:.3} ms + {:.3} mJ per step",
+        report.final_loss,
+        report.initial_loss,
+        report.accuracy * 100.0,
+        report.sim_step_time_s * 1e3,
+        report.sim_step_energy_j * 1e3,
+    );
+    Ok(())
+}
+
+fn cmd_info(artifacts_dir: &str, cfg: &Config) -> Result<()> {
+    println!("config:\n{}", cfg.to_json());
+    match Runtime::new(artifacts_dir) {
+        Ok(rt) => {
+            println!("\nartifacts in {artifacts_dir} ({}):", rt.platform());
+            for a in rt.artifacts() {
+                println!(
+                    "  {:24} {} inputs -> {} outputs",
+                    a.name,
+                    a.inputs.len(),
+                    a.outputs.len()
+                );
+            }
+        }
+        Err(e) => println!("\n(no artifacts: {e})"),
+    }
+    Ok(())
+}

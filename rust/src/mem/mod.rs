@@ -1,0 +1,9 @@
+//! Memory substrates: banked TCDM scratchpad, shared instruction cache,
+//! and the simple flat backing stores (L2 / HBM are *modeled* at the
+//! interconnect level; inside a cluster the TCDM is the real thing).
+
+pub mod icache;
+pub mod tcdm;
+
+pub use icache::ICache;
+pub use tcdm::{BankArbiter, MemReq, ReqSource, Tcdm};

@@ -1,0 +1,237 @@
+//! DVFS + power/energy model, calibrated to the paper's measured silicon
+//! (Fig. 8: eight sample dies, matmul at 90 % FPU utilization).
+//!
+//! Anchor points (24-core prototype, GF 22FDX):
+//!   * high-performance: 0.9 V, ~1.125 GHz → 54 GDPflop/s peak;
+//!   * max-efficiency:   0.6 V,  0.5  GHz → 25 GDPflop/s achieved at
+//!     188 GDPflop/s/W.
+//!
+//! Model:
+//!   f(V)   = k · (V - Vt)                   (alpha-power, α≈1 in FDSOI)
+//!   P(V)   = Ceff · V² · f · activity · n_cores/24  +  leak · V · n/24
+//!
+//! The two anchors pin (k, Vt) from the frequency pair and
+//! (Ceff, leak) from the power pair — see DESIGN.md §Substitutions.
+
+use crate::util::rng::Rng;
+
+/// Voltage/frequency/power model of one Manticore compute die region.
+#[derive(Debug, Clone, Copy)]
+pub struct DvfsModel {
+    /// Threshold-ish voltage of the linear f(V) fit [V].
+    pub vt: f64,
+    /// Frequency slope [Hz/V].
+    pub k_hz_per_v: f64,
+    /// Effective switched capacitance term [W / (V²·Hz)] for 24 cores.
+    pub ceff: f64,
+    /// Leakage slope [W/V] for 24 cores.
+    pub leak_w_per_v: f64,
+    /// Cores in the calibration unit (the prototype's 24).
+    pub calib_cores: f64,
+    /// DP FLOPs per core per cycle at peak (1 FMA = 2).
+    pub flops_per_cycle: f64,
+}
+
+/// One evaluated operating point.
+#[derive(Debug, Clone, Copy)]
+pub struct OpPoint {
+    pub vdd: f64,
+    pub freq_hz: f64,
+    /// Peak DP performance at this point [flop/s].
+    pub peak_flops: f64,
+    /// Achieved DP performance at the given utilization [flop/s].
+    pub achieved_flops: f64,
+    pub power_w: f64,
+    /// Achieved efficiency [flop/s/W].
+    pub efficiency: f64,
+}
+
+impl Default for DvfsModel {
+    fn default() -> Self {
+        // Calibration (see module docs): f(0.6)=0.5 GHz, f(0.9)=1.125 GHz
+        //   → Vt = 0.36 V, k = 2.0833 GHz/V.
+        // P(0.6)=25/188 W=0.133 W, P(0.9)=54/94 W≈0.574 W (efficiency
+        // halves across the range, paper Fig. 8)
+        //   → Ceff = 5.84e-10, leak = 0.0466 W/V.
+        DvfsModel {
+            vt: 0.36,
+            k_hz_per_v: 2.0833e9,
+            ceff: 5.84e-10,
+            leak_w_per_v: 0.0466,
+            calib_cores: 24.0,
+            flops_per_cycle: 2.0,
+        }
+    }
+}
+
+impl DvfsModel {
+    pub fn freq(&self, vdd: f64) -> f64 {
+        (self.k_hz_per_v * (vdd - self.vt)).max(0.0)
+    }
+
+    /// Peak DP flop/s for `n_cores` at `vdd`.
+    pub fn peak_flops(&self, vdd: f64, n_cores: usize) -> f64 {
+        self.freq(vdd) * self.flops_per_cycle * n_cores as f64
+    }
+
+    /// Total power for `n_cores` running at `utilization` (activity
+    /// scales the dynamic part; leakage is always on).
+    pub fn power(&self, vdd: f64, n_cores: usize, utilization: f64) -> f64 {
+        let scale = n_cores as f64 / self.calib_cores;
+        let dynamic = self.ceff * vdd * vdd * self.freq(vdd)
+            * (0.1 + 0.9 * utilization);
+        (dynamic + self.leak_w_per_v * vdd) * scale
+    }
+
+    /// Evaluate a full operating point.
+    pub fn op_point(&self, vdd: f64, n_cores: usize, utilization: f64) -> OpPoint {
+        let peak = self.peak_flops(vdd, n_cores);
+        let achieved = peak * utilization;
+        let power = self.power(vdd, n_cores, utilization);
+        OpPoint {
+            vdd,
+            freq_hz: self.freq(vdd),
+            peak_flops: peak,
+            achieved_flops: achieved,
+            power_w: power,
+            efficiency: if power > 0.0 { achieved / power } else { 0.0 },
+        }
+    }
+
+    /// Voltage sweep (the Fig. 8 x-axis).
+    pub fn sweep(
+        &self,
+        v_lo: f64,
+        v_hi: f64,
+        points: usize,
+        n_cores: usize,
+        utilization: f64,
+    ) -> Vec<OpPoint> {
+        (0..points)
+            .map(|i| {
+                let v = v_lo + (v_hi - v_lo) * i as f64 / (points - 1) as f64;
+                self.op_point(v, n_cores, utilization)
+            })
+            .collect()
+    }
+
+    /// Monte-Carlo die sample (process variation): ±σ_f on frequency,
+    /// lognormal-ish on leakage — the paper measured eight dies.
+    pub fn die_sample(&self, rng: &mut Rng) -> DvfsModel {
+        let mut m = *self;
+        m.k_hz_per_v *= 1.0 + 0.03 * rng.normal();
+        m.leak_w_per_v *= (0.10 * rng.normal()).exp();
+        m.ceff *= 1.0 + 0.02 * rng.normal();
+        m
+    }
+
+    /// Energy per DP flop at an operating point [J/flop].
+    pub fn energy_per_flop(&self, vdd: f64, utilization: f64) -> f64 {
+        let p = self.op_point(vdd, 24, utilization);
+        if p.achieved_flops > 0.0 {
+            p.power_w / p.achieved_flops
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const UTIL: f64 = 0.90; // paper: matmul at 90 % FPU utilization
+
+    #[test]
+    fn max_efficiency_anchor_reproduced() {
+        let m = DvfsModel::default();
+        let p = m.op_point(0.6, 24, UTIL);
+        // 0.5 GHz, ~25 GDPflop/s‐ish achieved, ~188 Gflop/s/W.
+        assert!((p.freq_hz / 0.5e9 - 1.0).abs() < 0.01, "{}", p.freq_hz);
+        assert!(
+            (p.achieved_flops / 21.6e9 - 1.0).abs() < 0.05,
+            "{}",
+            p.achieved_flops
+        );
+        assert!(
+            (p.efficiency / 169e9 - 1.0).abs() < 0.15,
+            "eff {}",
+            p.efficiency
+        );
+    }
+
+    #[test]
+    fn high_performance_anchor_reproduced() {
+        let m = DvfsModel::default();
+        let p = m.op_point(0.9, 24, UTIL);
+        assert!(p.freq_hz > 1.0e9, "over 1 GHz: {}", p.freq_hz);
+        // Peak 54 GDPflop/s across 24 cores.
+        assert!(
+            (p.peak_flops / 54e9 - 1.0).abs() < 0.05,
+            "{}",
+            p.peak_flops
+        );
+    }
+
+    #[test]
+    fn performance_and_efficiency_double_across_range() {
+        // Paper Fig. 8 caption: "Performance and efficiency doubles
+        // across range."
+        let m = DvfsModel::default();
+        let lo = m.op_point(0.6, 24, UTIL);
+        let hi = m.op_point(0.9, 24, UTIL);
+        let perf_ratio = hi.achieved_flops / lo.achieved_flops;
+        let eff_ratio = lo.efficiency / hi.efficiency;
+        assert!((1.8..2.8).contains(&perf_ratio), "perf x{perf_ratio}");
+        assert!((1.5..2.5).contains(&eff_ratio), "eff x{eff_ratio}");
+    }
+
+    #[test]
+    fn full_system_peaks_match_paper() {
+        let m = DvfsModel::default();
+        // 9.2 TDPflop/s at high performance, 4.3 at max efficiency
+        // across 4096 cores.
+        let hi = m.peak_flops(0.9, 4096);
+        let lo = m.peak_flops(0.6, 4096) * UTIL; // "respectable" achieved
+        assert!((hi / 9.2e12 - 1.0).abs() < 0.05, "hi {hi}");
+        assert!((lo / 3.7e12 - 1.0).abs() < 0.15, "lo {lo}");
+    }
+
+    #[test]
+    fn efficiency_monotonically_decreases_with_voltage() {
+        let m = DvfsModel::default();
+        let sweep = m.sweep(0.5, 0.9, 9, 24, UTIL);
+        for w in sweep.windows(2) {
+            assert!(w[0].efficiency >= w[1].efficiency);
+            assert!(w[0].achieved_flops <= w[1].achieved_flops);
+            assert!(w[0].power_w <= w[1].power_w);
+        }
+    }
+
+    #[test]
+    fn die_samples_vary_but_cluster_near_nominal() {
+        let m = DvfsModel::default();
+        let mut rng = Rng::new(8);
+        let effs: Vec<f64> = (0..8)
+            .map(|_| m.die_sample(&mut rng).op_point(0.6, 24, UTIL).efficiency)
+            .collect();
+        let mean = effs.iter().sum::<f64>() / effs.len() as f64;
+        assert!((mean / 169e9 - 1.0).abs() < 0.2, "mean {mean}");
+        let spread = effs
+            .iter()
+            .fold(0.0f64, |a, &e| a.max((e - mean).abs() / mean));
+        assert!(spread > 0.001 && spread < 0.4, "spread {spread}");
+    }
+
+    #[test]
+    fn utilization_lowers_power_but_raises_energy_per_flop() {
+        let m = DvfsModel::default();
+        let busy = m.power(0.7, 24, 0.9);
+        let idle = m.power(0.7, 24, 0.1);
+        assert!(busy > idle);
+        assert!(
+            m.energy_per_flop(0.7, 0.3) > m.energy_per_flop(0.7, 0.9),
+            "amortising leakage needs utilization"
+        );
+    }
+}

@@ -1,0 +1,528 @@
+//! Figure-reproduction harnesses: one function per paper figure/table,
+//! each returning the markdown `Table`s that the CLI (`manticore repro
+//! <fig>`) and the bench targets print. Paper expectations are carried
+//! in the tables so paper-vs-measured is visible in one place
+//! (EXPERIMENTS.md is generated from these).
+
+use crate::asm::kernels::*;
+use crate::baselines::comparison_chips;
+use crate::coordinator::{measure_calibration, Coordinator};
+use crate::interconnect::{Endpoint, Flow, Tree, TreeConfig};
+use crate::mem::{ICache, Tcdm};
+use crate::power::DvfsModel;
+use crate::snitch::{run_single, CoreConfig, SnitchCore};
+use crate::system::{area::AreaModel, peaks, SystemConfig};
+use crate::util::bench::{fmt_si, Table};
+use crate::util::rng::Rng;
+use crate::workload::{dnn_suite, LayerClass};
+
+/// Run a single-core kernel and report (cycles, flop-util, fetched,
+/// fpu-issued).
+fn run_kernel(prog: Vec<crate::isa::Inst>, init: impl FnOnce(&mut Tcdm)) -> (u64, f64, u64, u64) {
+    let mut core = SnitchCore::new(0, CoreConfig::default(), prog);
+    let mut tcdm = Tcdm::new(256 * 1024, 32);
+    let mut ic = ICache::new(8 * 1024, 10);
+    init(&mut tcdm);
+    let cycles = run_single(&mut core, &mut tcdm, &mut ic, 100_000_000);
+    (
+        cycles,
+        core.flop_utilization(),
+        core.stats.fetched,
+        core.fpu.stats.issued,
+    )
+}
+
+/// Fig. 5: the dot-product ISA-extension study.
+pub fn fig5(n: u32) -> Table {
+    let mut t = Table::new(
+        &format!("Fig. 5 — dot product (n={n}): FPU utilization by ISA variant"),
+        &["variant", "cycles", "flop util", "fetched", "fpu ops", "paper"],
+    );
+    let p = DotParams { n, x: 0, y: n * 8 + 8, out: 2 * n * 8 + 16 };
+    let fill = |tcdm: &mut Tcdm| {
+        let x: Vec<f64> = (0..n).map(|i| (i % 7) as f64).collect();
+        let y: Vec<f64> = (0..n).map(|i| (i % 5) as f64).collect();
+        tcdm.write_f64_slice(p.x, &x);
+        tcdm.write_f64_slice(p.y, &y);
+    };
+    let variants: Vec<(&str, Vec<crate::isa::Inst>, &str)> = vec![
+        ("baseline", dot_baseline(p), "low (loads+bookkeeping)"),
+        ("unrolled x4", dot_unrolled(p, 4), "<= 33 %"),
+        ("+SSR (x4)", dot_ssr(p, 4), "loads elided"),
+        ("+SSR+FREP (x4)", dot_ssr_frep(p, 4), ">90 % (paper: ~100 % loop)"),
+    ];
+    for (name, prog, paper) in variants {
+        let (cycles, util, fetched, fpu) = run_kernel(prog, fill);
+        t.row(vec![
+            name.to_string(),
+            cycles.to_string(),
+            format!("{:.1} %", util * 100.0),
+            fetched.to_string(),
+            fpu.to_string(),
+            paper.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Fig. 6: the 48×48 mat-vec instruction-expansion study.
+pub fn fig6() -> Table {
+    const N: u32 = 48;
+    let a_addr = 0u32;
+    let x_addr = N * N * 8;
+    let y_addr = x_addr + N * 8 + 8;
+    let (cycles, util, fetched, fpu_issued) =
+        run_kernel(matvec48_fig6(a_addr, x_addr, y_addr), |tcdm| {
+            tcdm.write_f64_slice(a_addr, &vec![1.0; (N * N) as usize]);
+            tcdm.write_f64_slice(x_addr, &vec![1.0; N as usize]);
+        });
+    let iters = (N / 4) as u64;
+    let mut t = Table::new(
+        "Fig. 6 — mat-vec N=48, SSR+FREP, unroll 4 (per outer iteration)",
+        &["metric", "measured", "paper"],
+    );
+    t.row(vec![
+        "fetched instructions / iter".into(),
+        format!("{:.1}", (fetched as f64 - 8.0) / iters as f64),
+        "16".into(),
+    ]);
+    t.row(vec![
+        "FPU-executed instructions / iter".into(),
+        format!("{:.1}", fpu_issued as f64 / iters as f64),
+        "~204 (4 fmv + 192 fmadd + 4 fsd + overhead)".into(),
+    ]);
+    t.row(vec![
+        "fmadd / iter".into(),
+        format!("{}", (N as u64 * N as u64 / iters)),
+        "192".into(),
+    ]);
+    t.row(vec![
+        "FPU utilization".into(),
+        format!("{:.1} %", util * 100.0),
+        "94 %".into(),
+    ]);
+    t.row(vec![
+        "cycles / fetched instruction".into(),
+        format!("{:.1}", cycles as f64 / fetched as f64),
+        "~13".into(),
+    ]);
+    t
+}
+
+/// Fig. 8: DVFS sweep (performance / efficiency / frequency / power vs
+/// VDD), nominal die + 8 Monte-Carlo dies.
+pub fn fig8(points: usize, dies: usize) -> (Table, Table) {
+    let m = DvfsModel::default();
+    let util = 0.90; // paper: matmul at 90 % FPU utilization
+    let mut t = Table::new(
+        "Fig. 8 — 24-core prototype DVFS sweep (nominal die)",
+        &["VDD [V]", "freq", "perf (DP)", "power", "efficiency", "paper anchor"],
+    );
+    for p in m.sweep(0.5, 0.9, points, 24, util) {
+        let anchor = if (p.vdd - 0.6).abs() < 0.026 {
+            "188 Gflop/s/W @ 0.6 V"
+        } else if (p.vdd - 0.9).abs() < 0.026 {
+            "54 Gflop/s peak @ 0.9 V"
+        } else {
+            ""
+        };
+        t.row(vec![
+            format!("{:.2}", p.vdd),
+            format!("{:.2} GHz", p.freq_hz / 1e9),
+            fmt_si(p.achieved_flops, "flop/s"),
+            format!("{:.3} W", p.power_w),
+            fmt_si(p.efficiency, "flop/s/W"),
+            anchor.to_string(),
+        ]);
+    }
+
+    let mut td = Table::new(
+        "Fig. 8 — die-to-die spread (8 sample dies, max-efficiency point)",
+        &["die", "freq @0.6 V", "efficiency @0.6 V"],
+    );
+    let mut rng = Rng::new(2020);
+    for d in 0..dies {
+        let die = m.die_sample(&mut rng);
+        let p = die.op_point(0.6, 24, util);
+        td.row(vec![
+            format!("{d}"),
+            format!("{:.3} GHz", p.freq_hz / 1e9),
+            fmt_si(p.efficiency, "flop/s/W"),
+        ]);
+    }
+    (t, td)
+}
+
+/// Fig. 9: roofline of DNN training workloads on the full system.
+pub fn fig9(measured_calibration: bool) -> Table {
+    let sys = SystemConfig::default();
+    let mut co = Coordinator::new(sys, 0.9);
+    if measured_calibration {
+        co = co.with_calibration(measure_calibration());
+    }
+    let rl = sys.roofline(0.9);
+    let mut t = Table::new(
+        &format!(
+            "Fig. 9 — roofline, DNN training (peak {}, BW {}, ridge {:.1} flop/B)",
+            fmt_si(rl.peak_flops, "flop/s"),
+            fmt_si(rl.peak_bw, "B/s"),
+            rl.ridge()
+        ),
+        &["workload group", "OI [flop/B]", "attainable", "achieved",
+          "detachment", "paper"],
+    );
+    for net in dnn_suite(32) {
+        let rep = co.simulate_network(&net);
+        for (class, label, paper) in [
+            (LayerClass::Conv, "conv", "<=14 % (>80 % of peak)"),
+            (LayerClass::Linear, "linear", "<=5-10 % (>90 % of BW)"),
+            (LayerClass::Pool, "pool", "<=5 % (>90 % of BW)"),
+        ] {
+            let ls: Vec<_> = rep
+                .layers
+                .iter()
+                .filter(|l| l.class == class)
+                .collect();
+            if ls.is_empty() {
+                continue;
+            }
+            let flops: f64 = ls.iter().map(|l| l.achieved * l.time_s).sum();
+            let time: f64 = ls.iter().map(|l| l.time_s).sum();
+            let achieved = flops / time;
+            let oi = net.group_oi(class);
+            t.row(vec![
+                format!("{} / {}", net.name, label),
+                format!("{oi:.2}"),
+                fmt_si(rl.attainable(oi), "flop/s"),
+                fmt_si(achieved, "flop/s"),
+                format!("{:.1} %", rl.detachment(oi, achieved) * 100.0),
+                paper.to_string(),
+            ]);
+        }
+        // overall
+        let oi = net.total_flops() / net.total_bytes();
+        t.row(vec![
+            format!("{} / overall", net.name),
+            format!("{oi:.2}"),
+            fmt_si(rl.attainable(oi), "flop/s"),
+            fmt_si(rep.achieved_flops(), "flop/s"),
+            format!(
+                "{:.1} %",
+                rl.detachment(oi, rep.achieved_flops()) * 100.0
+            ),
+            "~= conv (conv-dominated)".to_string(),
+        ]);
+    }
+    // Ridge-region worst case.
+    let ridge_oi = rl.ridge();
+    let achieved = co.achieved_flops(ridge_oi);
+    t.row(vec![
+        "synthetic @ ridge".into(),
+        format!("{ridge_oi:.2}"),
+        fmt_si(rl.attainable(ridge_oi), "flop/s"),
+        fmt_si(achieved, "flop/s"),
+        format!("{:.1} %", rl.detachment(ridge_oi, achieved) * 100.0),
+        "34 % worst case".into(),
+    ]);
+    t
+}
+
+/// Fig. 10: energy-efficiency comparison vs V100/A100/i9/N1/Celerity.
+pub fn fig10() -> (Table, Table) {
+    let hi = Coordinator::new(SystemConfig::default(), 0.9);
+    let lo = Coordinator::new(SystemConfig::default(), 0.6);
+
+    // Top: SP DNN training.
+    // NOTE: our power model covers the compute complex only (what the
+    // paper's prototype measured); the comparison chips' numbers are
+    // whole-package, which inflates our SP ratios relative to the
+    // paper's chip-level bars. The DP chart (below) is the headline
+    // comparison and tracks the paper's ratios closely.
+    let mut t_sp = Table::new(
+        "Fig. 10 (top) — SP energy efficiency, DNN training step",
+        &["chip", "SP peak eff", "SP train eff", "Manticore/peak", "paper claim"],
+    );
+    let net = &dnn_suite(32)[0];
+    let manticore_sp = hi.sp_training_efficiency(net);
+    t_sp.row(vec![
+        "Manticore (0.9 V, core complex)".into(),
+        fmt_si(2.0 * hi.sys.peak_dp(0.9)
+            / hi.sys.dvfs.power(0.9, hi.sys.total_cores(), 1.0), "flop/s/W"),
+        fmt_si(manticore_sp, "flop/s/W"),
+        "1.00x".into(),
+        "competitive with V100 peak".into(),
+    ]);
+    for c in comparison_chips() {
+        let claim = match c.name {
+            "V100" => "~1x (competitive)",
+            "A100" => "Manticore ~25 % lower SP",
+            "i9-9900K" => "Manticore 2x",
+            "Neoverse N1" => "Manticore 3x",
+            _ => "",
+        };
+        t_sp.row(vec![
+            c.name.to_string(),
+            fmt_si(c.sp_peak_eff(), "flop/s/W"),
+            fmt_si(c.sp_train_eff(), "flop/s/W"),
+            format!("{:.2}x", manticore_sp / c.sp_peak_eff()),
+            claim.to_string(),
+        ]);
+    }
+
+    // Bottom: DP linear algebra at 90 % of peak.
+    let mut t_dp = Table::new(
+        "Fig. 10 (bottom) — DP linear-algebra efficiency (90 % of peak)",
+        &["chip", "DP eff", "Manticore(max-eff)/chip", "paper claim"],
+    );
+    let m_lo = lo.dp_linalg_efficiency();
+    let m_hi = hi.dp_linalg_efficiency();
+    t_dp.row(vec![
+        "Manticore max-eff (0.6 V)".into(),
+        fmt_si(m_lo, "flop/s/W"),
+        "1.00x".into(),
+        "188 Gflop/s/W x 90 %".into(),
+    ]);
+    t_dp.row(vec![
+        "Manticore max-perf (0.9 V)".into(),
+        fmt_si(m_hi, "flop/s/W"),
+        format!("{:.2}x", m_lo / m_hi),
+        "".into(),
+    ]);
+    for c in comparison_chips() {
+        let claim = match c.name {
+            "V100" => "6x",
+            "A100" => "5x",
+            "i9-9900K" => "15x",
+            "Neoverse N1" => "7x",
+            "Celerity" => "9x",
+            _ => "",
+        };
+        t_dp.row(vec![
+            c.name.to_string(),
+            fmt_si(c.dp_linalg_eff(), "flop/s/W"),
+            format!("{:.1}x", m_lo / c.dp_linalg_eff()),
+            format!("paper: {claim}"),
+        ]);
+    }
+    (t_sp, t_dp)
+}
+
+/// Fig. 3: bandwidth-thinning / interconnect study.
+pub fn fig3() -> Table {
+    let tree = Tree::new(TreeConfig::default());
+    let cfg = tree.cfg;
+    let mut t = Table::new(
+        "Fig. 3 — bandwidth-thinned interconnect (B/cycle ~ GB/s @1 GHz)",
+        &["traffic pattern", "aggregate achieved", "limit", "note"],
+    );
+    // 1. All clusters stream from local HBM.
+    let hbm = tree.hbm_saturation(64.0);
+    t.row(vec![
+        "all clusters -> local HBM".into(),
+        format!("{hbm:.0} B/cycle"),
+        format!("{:.0} (4x HBM)", cfg.aggregate_hbm()),
+        "HBM saturated".into(),
+    ]);
+    // 2. Sibling cluster pairs (intra-S1).
+    let mut flows = Vec::new();
+    for s1 in 0..(cfg.total_clusters() / cfg.clusters_per_s1) {
+        let base = s1 * cfg.clusters_per_s1;
+        flows.push(Flow { src: base, dst: Endpoint::Cluster(base + 1), demand: 64.0 });
+        flows.push(Flow { src: base + 2, dst: Endpoint::Cluster(base + 3), demand: 64.0 });
+    }
+    let local: f64 = tree.allocate(&flows).achieved.iter().sum();
+    t.row(vec![
+        "sibling cluster pairs (intra-S1)".into(),
+        format!("{local:.0} B/cycle"),
+        format!("{:.0} (all ports)", cfg.aggregate_intra_s1()),
+        format!("{:.0}x the HBM bandwidth", local / hbm),
+    ]);
+    // 3. Cross-S1 pairs within an S2 (first thinning stage).
+    let mut flows = Vec::new();
+    for s2 in 0..(cfg.total_clusters() / (cfg.clusters_per_s1 * cfg.s1_per_s2)) {
+        let base = s2 * cfg.clusters_per_s1 * cfg.s1_per_s2;
+        flows.push(Flow {
+            src: base,
+            dst: Endpoint::Cluster(base + cfg.clusters_per_s1),
+            demand: 64.0,
+        });
+    }
+    let cross_s1: f64 = tree.allocate(&flows).achieved.iter().sum();
+    t.row(vec![
+        "cross-S1 pairs (one per S2)".into(),
+        format!("{cross_s1:.0} B/cycle"),
+        "S1 uplinks".into(),
+        "thinned but > HBM".into(),
+    ]);
+    // 4. Cross-chiplet NUMA.
+    let far = cfg.cluster_id(1, 0, 0, 0, 0);
+    let flows = vec![Flow { src: 0, dst: Endpoint::Cluster(far), demand: 1e9 }];
+    let numa = tree.allocate(&flows).achieved[0];
+    t.row(vec![
+        "cross-chiplet cluster pair".into(),
+        format!("{numa:.0} B/cycle"),
+        format!("{:.0} (D2D link)", cfg.d2d_link),
+        "NUMA over die-to-die".into(),
+    ]);
+    t
+}
+
+/// Area/peak tables (paper text numbers).
+pub fn area() -> Table {
+    let m = AreaModel::default();
+    let b = m.breakdown();
+    let mut t = Table::new(
+        "Area model — 222 mm2 chiplet (paper: 44/44/12 cluster split)",
+        &["block", "area [mm2]", "share of cluster area", "paper"],
+    );
+    t.row(vec![
+        "compute (cores+FPUs)".into(),
+        format!("{:.1}", b.compute),
+        format!("{:.0} %", 100.0 * b.compute / b.cluster_total),
+        "44 %".into(),
+    ]);
+    t.row(vec![
+        "L1 TCDM".into(),
+        format!("{:.1}", b.l1),
+        format!("{:.0} %", 100.0 * b.l1 / b.cluster_total),
+        "44 %".into(),
+    ]);
+    t.row(vec![
+        "control".into(),
+        format!("{:.1}", b.control),
+        format!("{:.0} %", 100.0 * b.control / b.cluster_total),
+        "12 %".into(),
+    ]);
+    t.row(vec![
+        "uncore (L2/HBM/PCIe/Ariane/NoC)".into(),
+        format!("{:.1}", b.uncore),
+        "-".into(),
+        "".into(),
+    ]);
+    t.row(vec![
+        "FPU share of core complex".into(),
+        "-".into(),
+        format!("{:.0} %", 100.0 * m.fpu_share_of_core),
+        ">40 %".into(),
+    ]);
+    t
+}
+
+pub fn peaks_table() -> Table {
+    let p = peaks(&SystemConfig::default());
+    let mut t = Table::new(
+        "Peak numbers (computed from config vs paper text)",
+        &["quantity", "computed", "paper"],
+    );
+    t.row(vec![
+        "cores".into(),
+        p.cores.to_string(),
+        "4096".into(),
+    ]);
+    t.row(vec![
+        "peak DP @0.9 V".into(),
+        fmt_si(p.peak_dp_hi, "flop/s"),
+        "9.2 Tflop/s".into(),
+    ]);
+    t.row(vec![
+        "achieved DP @0.6 V".into(),
+        fmt_si(p.peak_dp_maxeff, "flop/s"),
+        "4.3 Tflop/s".into(),
+    ]);
+    t.row(vec![
+        "aggregate HBM BW".into(),
+        fmt_si(p.hbm_bw_nominal, "B/s"),
+        "1 TB/s".into(),
+    ]);
+    t.row(vec![
+        "aggregate intra-S1 BW".into(),
+        fmt_si(p.intra_s1_bw, "B/s"),
+        "64 TB/s-class (\"by far exceeds memory\")".into(),
+    ]);
+    t
+}
+
+/// Run every harness (the `repro all` command).
+pub fn all() -> Vec<Table> {
+    let mut out = vec![fig5(2048), fig6()];
+    let (a, b) = fig8(9, 8);
+    out.push(a);
+    out.push(b);
+    out.push(fig9(false));
+    let (sp, dp) = fig10();
+    out.push(sp);
+    out.push(dp);
+    out.push(fig3());
+    out.push(area());
+    out.push(peaks_table());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_shows_utilization_progression() {
+        let t = fig5(512);
+        assert_eq!(t.rows.len(), 4);
+        // Parse the util column and check monotonic improvement.
+        let utils: Vec<f64> = t
+            .rows
+            .iter()
+            .map(|r| r[2].trim_end_matches(" %").parse::<f64>().unwrap())
+            .collect();
+        assert!(utils[0] < utils[1], "{utils:?}");
+        assert!(utils[1] < utils[2], "{utils:?}");
+        assert!(utils[2] < utils[3], "{utils:?}");
+        assert!(utils[3] > 85.0, "{utils:?}");
+    }
+
+    #[test]
+    fn fig6_utilization_above_90() {
+        let t = fig6();
+        let util: f64 = t.rows[3][1].trim_end_matches(" %").parse().unwrap();
+        assert!(util > 85.0, "{util}");
+    }
+
+    #[test]
+    fn fig8_tables_have_anchor_rows() {
+        let (t, td) = fig8(9, 8);
+        assert_eq!(t.rows.len(), 9);
+        assert_eq!(td.rows.len(), 8);
+        assert!(t.rows.iter().any(|r| r[5].contains("188")));
+    }
+
+    #[test]
+    fn fig9_has_all_groups() {
+        let t = fig9(false);
+        assert!(t.rows.iter().any(|r| r[0].contains("conv")));
+        assert!(t.rows.iter().any(|r| r[0].contains("overall")));
+        assert!(t.rows.iter().any(|r| r[0].contains("ridge")));
+    }
+
+    #[test]
+    fn fig10_ratios_in_paper_ballpark() {
+        let (_, dp) = fig10();
+        // Manticore(max-eff) vs V100: paper 6x, accept 4-9x.
+        let v100 = dp
+            .rows
+            .iter()
+            .find(|r| r[0] == "V100")
+            .expect("V100 row");
+        let ratio: f64 = v100[2].trim_end_matches('x').parse().unwrap();
+        assert!((4.0..9.0).contains(&ratio), "V100 ratio {ratio}");
+    }
+
+    #[test]
+    fn fig3_reports_thinning() {
+        let t = fig3();
+        assert_eq!(t.rows.len(), 4);
+    }
+
+    #[test]
+    fn all_runs() {
+        let tables = all();
+        assert!(tables.len() >= 9);
+    }
+}

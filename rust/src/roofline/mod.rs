@@ -1,0 +1,104 @@
+//! Roofline analytics (paper Fig. 9): attainable performance vs
+//! operational intensity, and the detachment metric the paper reports
+//! (5 % memory-bound, 14 % compute-bound, 34 % worst case near the
+//! inflection point).
+
+/// A machine roofline: compute ceiling + memory-bandwidth slant.
+#[derive(Debug, Clone, Copy)]
+pub struct Roofline {
+    /// Peak compute [flop/s].
+    pub peak_flops: f64,
+    /// Peak memory bandwidth [B/s].
+    pub peak_bw: f64,
+}
+
+impl Roofline {
+    pub fn new(peak_flops: f64, peak_bw: f64) -> Self {
+        assert!(peak_flops > 0.0 && peak_bw > 0.0);
+        Roofline { peak_flops, peak_bw }
+    }
+
+    /// Attainable performance at operational intensity `oi` [flop/B].
+    pub fn attainable(&self, oi: f64) -> f64 {
+        (oi * self.peak_bw).min(self.peak_flops)
+    }
+
+    /// The inflection ("ridge") point [flop/B].
+    pub fn ridge(&self) -> f64 {
+        self.peak_flops / self.peak_bw
+    }
+
+    pub fn is_compute_bound(&self, oi: f64) -> bool {
+        oi >= self.ridge()
+    }
+
+    /// Detachment of an achieved performance from the roofline: the
+    /// paper's metric, 0 = on the roof.
+    pub fn detachment(&self, oi: f64, achieved: f64) -> f64 {
+        let att = self.attainable(oi);
+        if att <= 0.0 {
+            return 1.0;
+        }
+        (1.0 - achieved / att).max(0.0)
+    }
+
+    /// Proximity to the ridge in log space, in [0, 1]: 1 = at the
+    /// ridge, 0 = a decade (or more) away. Used by the achieved-
+    /// performance model to apply the bank-conflict dip the paper
+    /// observes near the inflection point.
+    pub fn ridge_proximity(&self, oi: f64) -> f64 {
+        let d = (oi.ln() - self.ridge().ln()).abs();
+        (1.0 - d / std::f64::consts::LN_10).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rl() -> Roofline {
+        // Full Manticore: 4 TDPflop/s per chiplet × 4 ≈ 16 Tflop/s is
+        // not the paper's system number; use the system values:
+        // 8 Tflop/s at 1 GHz (4096 cores × 2) and 1 TB/s HBM.
+        Roofline::new(8.192e12, 1.0e12)
+    }
+
+    #[test]
+    fn memory_bound_region_follows_bandwidth() {
+        let r = rl();
+        assert_eq!(r.attainable(1.0), 1.0e12);
+        assert_eq!(r.attainable(4.0), 4.0e12);
+    }
+
+    #[test]
+    fn compute_bound_region_clamps_to_peak() {
+        let r = rl();
+        assert_eq!(r.attainable(100.0), 8.192e12);
+    }
+
+    #[test]
+    fn ridge_point() {
+        let r = rl();
+        assert!((r.ridge() - 8.192).abs() < 1e-9);
+        assert!(r.is_compute_bound(10.0));
+        assert!(!r.is_compute_bound(4.0));
+    }
+
+    #[test]
+    fn detachment_zero_on_roof() {
+        let r = rl();
+        assert_eq!(r.detachment(4.0, 4.0e12), 0.0);
+        assert!((r.detachment(4.0, 3.6e12) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ridge_proximity_peaks_at_ridge() {
+        let r = rl();
+        let at = r.ridge_proximity(r.ridge());
+        let near = r.ridge_proximity(r.ridge() * 2.0);
+        let far = r.ridge_proximity(r.ridge() * 100.0);
+        assert!((at - 1.0).abs() < 1e-9);
+        assert!(near < at && near > far);
+        assert_eq!(far, 0.0);
+    }
+}

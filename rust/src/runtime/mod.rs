@@ -1,0 +1,278 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`,
+//! produced once by `make artifacts` from the L2 JAX graphs) and
+//! executes them on the XLA CPU client. Python is **never** on this
+//! path — the interchange format is HLO text (see
+//! /opt/xla-example/README.md for why text, not serialized protos).
+
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Tensor spec from the artifact manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Manifest entry of one artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// A host tensor travelling in/out of the runtime.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    F64(Vec<f64>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+    U32(Vec<u32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32(_, s) | Tensor::F64(_, s) | Tensor::I32(_, s)
+            | Tensor::U32(_, s) => s,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Tensor::F32(v, _) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<&[f64]> {
+        match self {
+            Tensor::F64(v, _) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Tensor::I32(v, _) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::F32(vec![v], vec![])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32(v, _) => xla::Literal::vec1(v),
+            Tensor::F64(v, _) => xla::Literal::vec1(v),
+            Tensor::I32(v, _) => xla::Literal::vec1(v),
+            Tensor::U32(v, _) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|&d| d as usize).collect();
+        let t = match shape.ty() {
+            xla::ElementType::F32 => Tensor::F32(lit.to_vec()?, dims),
+            xla::ElementType::F64 => Tensor::F64(lit.to_vec()?, dims),
+            xla::ElementType::S32 => Tensor::I32(lit.to_vec()?, dims),
+            xla::ElementType::U32 => Tensor::U32(lit.to_vec()?, dims),
+            other => bail!("unsupported output element type {other:?}"),
+        };
+        Ok(t)
+    }
+}
+
+/// The artifact runtime: PJRT CPU client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: BTreeMap<String, ArtifactMeta>,
+    cache: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open an artifacts directory (expects `manifest.json`).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(
+            || format!("reading {} (run `make artifacts`)", manifest_path.display()),
+        )?;
+        let v = json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let mut manifest = BTreeMap::new();
+        for (name, meta) in v.as_obj().context("manifest not an object")? {
+            let spec_list = |key: &str| -> Result<Vec<TensorSpec>> {
+                meta.get(key)
+                    .and_then(Value::as_arr)
+                    .context("bad manifest entry")?
+                    .iter()
+                    .map(|t| {
+                        Ok(TensorSpec {
+                            shape: t
+                                .get("shape")
+                                .and_then(Value::as_arr)
+                                .context("shape")?
+                                .iter()
+                                .filter_map(Value::as_usize)
+                                .collect(),
+                            dtype: t
+                                .get("dtype")
+                                .and_then(Value::as_str)
+                                .context("dtype")?
+                                .to_string(),
+                        })
+                    })
+                    .collect()
+            };
+            manifest.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    inputs: spec_list("inputs")?,
+                    outputs: spec_list("outputs")?,
+                },
+            );
+        }
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+            dir,
+            manifest,
+            cache: BTreeMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts(&self) -> Vec<&ArtifactMeta> {
+        self.manifest.values().collect()
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.manifest.get(name)
+    }
+
+    /// Compile (or fetch from cache) an artifact.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        if !self.manifest.contains_key(name) {
+            bail!("unknown artifact '{name}' (not in manifest)");
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact. Inputs are validated against the manifest;
+    /// the tuple output is unpacked into one `Tensor` per output.
+    pub fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.load(name)?;
+        let meta = &self.manifest[name];
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "artifact '{name}' expects {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if t.shape() != spec.shape.as_slice() {
+                bail!(
+                    "input {i} of '{name}': shape {:?} != manifest {:?}",
+                    t.shape(),
+                    spec.shape
+                );
+            }
+        }
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(Tensor::to_literal)
+            .collect::<Result<_>>()?;
+        let exe = &self.cache[name];
+        let result = exe.execute::<xla::Literal>(&lits)?;
+        let out = result[0][0].to_literal_sync()?;
+        // Lowered with return_tuple=True: always a tuple.
+        let elems = out.to_tuple()?;
+        elems.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Execute and time the call (returns outputs + wall time).
+    pub fn execute_timed(
+        &mut self,
+        name: &str,
+        inputs: &[Tensor],
+    ) -> Result<(Vec<Tensor>, std::time::Duration)> {
+        self.load(name)?; // compile outside the timed region
+        let t0 = std::time::Instant::now();
+        let out = self.execute(name, inputs)?;
+        Ok((out, t0.elapsed()))
+    }
+}
+
+/// Build a Tensor filled from a generator, matching a manifest spec —
+/// used by the CLI `run` command and the integration tests.
+pub fn tensor_for_spec(spec: &TensorSpec, mut fill: impl FnMut(usize) -> f64) -> Result<Tensor> {
+    let n = spec.elems();
+    let shape = spec.shape.clone();
+    Ok(match spec.dtype.as_str() {
+        "float32" => {
+            Tensor::F32((0..n).map(|i| fill(i) as f32).collect(), shape)
+        }
+        "float64" => Tensor::F64((0..n).map(|i| fill(i)).collect(), shape),
+        "int32" => {
+            Tensor::I32((0..n).map(|i| fill(i) as i32).collect(), shape)
+        }
+        "uint32" => {
+            Tensor::U32((0..n).map(|i| fill(i) as u32).collect(), shape)
+        }
+        other => bail!("unsupported dtype {other}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_elems() {
+        let s = TensorSpec { shape: vec![4, 8], dtype: "float32".into() };
+        assert_eq!(s.elems(), 32);
+        let scalar = TensorSpec { shape: vec![], dtype: "float32".into() };
+        assert_eq!(scalar.elems(), 1);
+    }
+
+    #[test]
+    fn tensor_for_spec_dtypes() {
+        for (dt, _) in [("float32", 0), ("float64", 1), ("int32", 2), ("uint32", 3)] {
+            let s = TensorSpec { shape: vec![3], dtype: dt.into() };
+            let t = tensor_for_spec(&s, |i| i as f64).unwrap();
+            assert_eq!(t.shape(), &[3]);
+        }
+        let bad = TensorSpec { shape: vec![1], dtype: "complex64".into() };
+        assert!(tensor_for_spec(&bad, |_| 0.0).is_err());
+    }
+}

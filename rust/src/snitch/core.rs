@@ -1,0 +1,637 @@
+//! The Snitch core: a single-stage, single-issue RV32 integer pipe
+//! driving the FPU subsystem (fpu.rs) through a dispatch queue, with
+//! three SSR data-mover lanes (ssr.rs).
+//!
+//! Issue rules (paper, "Compute Cluster" + Snitch TC paper):
+//!   * one instruction leaves the integer pipe per cycle;
+//!   * FP instructions are *dispatched* to the FPU subsystem (1 cycle)
+//!     and the integer pipe moves on — pseudo-dual-issue;
+//!   * domain-crossing instructions (fmv.x.d, fcvt, FP compares) wait
+//!     until the FPU subsystem is drained;
+//!   * taken branches pay a 1-cycle bubble (single-stage core);
+//!   * integer lw/sw and FPU fld/fsd arbitrate for TCDM banks and
+//!     retry on conflict.
+
+use super::fpu::{FpuSubsystem, SeqEntry};
+use super::ssr::SsrLane;
+use crate::isa::{ssr_index, FCmp, Inst, IReg, PipeClass, SsrCfg, NUM_SSRS};
+use crate::mem::{ICache, MemReq, ReqSource, Tcdm};
+
+/// Core micro-architecture parameters (paper values as defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct CoreConfig {
+    /// FPU result latency in cycles (FMA chain length driver).
+    pub fpu_latency: u32,
+    /// FREP micro-loop sequence buffer depth (paper: 16).
+    pub frep_buffer: usize,
+    /// FPU dispatch queue depth.
+    pub seq_queue: usize,
+    /// Extra cycles on a taken branch.
+    pub branch_penalty: u32,
+    /// I$ refill penalty in cycles.
+    pub icache_miss_penalty: u32,
+}
+
+impl Default for CoreConfig {
+    fn default() -> Self {
+        CoreConfig {
+            fpu_latency: 3,
+            frep_buffer: 16,
+            seq_queue: 16,
+            branch_penalty: 1,
+            icache_miss_penalty: 10,
+        }
+    }
+}
+
+/// Integer-pipe statistics (FPU stats live in `FpuSubsystem`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CoreStats {
+    pub cycles: u64,
+    /// Dynamic instructions leaving the integer pipe (fetch+decode
+    /// count; the "16" of Fig. 6).
+    pub fetched: u64,
+    pub int_retired: u64,
+    pub stall_fetch: u64,
+    pub stall_dispatch: u64,
+    pub stall_mem: u64,
+    pub stall_drain: u64,
+    pub branches_taken: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PipeState {
+    /// Fetching the instruction at `pc`; `left` stall cycles remain.
+    Fetch { left: u32 },
+    /// Instruction fetched, ready to execute.
+    Execute,
+    /// Waiting to retry a TCDM access (lw/sw).
+    WaitMem,
+    /// Waiting for the FPU dispatch queue to have room.
+    WaitDispatch,
+    /// Waiting for FPU drain (crossing instruction / halt / ssr off).
+    WaitDrain,
+    /// At a cluster barrier, waiting for release.
+    AtBarrier,
+    Halted,
+}
+
+/// One Snitch core. Stepped by a cluster (or by `run_single` for
+/// standalone kernels) with a two-phase memory handshake:
+/// `mem_intents()` then `step(granted, ...)`.
+#[derive(Debug, Clone)]
+pub struct SnitchCore {
+    pub id: u8,
+    pub cfg: CoreConfig,
+    pub pc: u32,
+    iregs: [u32; 32],
+    pub fpu: FpuSubsystem,
+    pub ssrs: [SsrLane; NUM_SSRS],
+    state: PipeState,
+    program: Vec<Inst>,
+    now: u64,
+    pub stats: CoreStats,
+    /// Set by the cluster when a barrier releases.
+    barrier_release: bool,
+}
+
+impl SnitchCore {
+    pub fn new(id: u8, cfg: CoreConfig, program: Vec<Inst>) -> Self {
+        SnitchCore {
+            id,
+            cfg,
+            pc: 0,
+            iregs: [0; 32],
+            fpu: FpuSubsystem::new(cfg.fpu_latency, cfg.frep_buffer, cfg.seq_queue),
+            ssrs: Default::default(),
+            state: PipeState::Fetch { left: 0 },
+            program,
+            now: 0,
+            stats: CoreStats::default(),
+            barrier_release: false,
+        }
+    }
+
+    pub fn ireg(&self, r: IReg) -> u32 {
+        if r.0 == 0 {
+            0
+        } else {
+            self.iregs[r.0 as usize]
+        }
+    }
+
+    pub fn set_ireg(&mut self, r: IReg, v: u32) {
+        if r.0 != 0 {
+            self.iregs[r.0 as usize] = v;
+        }
+    }
+
+    pub fn halted(&self) -> bool {
+        self.state == PipeState::Halted
+    }
+
+    pub fn at_barrier(&self) -> bool {
+        self.state == PipeState::AtBarrier
+    }
+
+    pub fn release_barrier(&mut self) {
+        self.barrier_release = true;
+    }
+
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    fn cur_inst(&self) -> Inst {
+        let idx = self.pc as usize;
+        if idx < self.program.len() {
+            self.program[idx]
+        } else {
+            Inst::Halt
+        }
+    }
+
+    /// FPU utilization over the run so far: fraction of cycles in which
+    /// the FPU issued an instruction.
+    pub fn fpu_utilization(&self) -> f64 {
+        if self.stats.cycles == 0 {
+            return 0.0;
+        }
+        self.fpu.stats.issued as f64 / self.stats.cycles as f64
+    }
+
+    /// Compute-only FPU utilization: achieved FLOP/cycle over the peak
+    /// (2 flop/cycle for DP FMA) — the paper's >90 % metric.
+    pub fn flop_utilization(&self) -> f64 {
+        if self.stats.cycles == 0 {
+            return 0.0;
+        }
+        self.fpu.stats.flops as f64 / (2.0 * self.stats.cycles as f64)
+    }
+
+    /// Phase 1: memory requests this core would like this cycle.
+    pub fn mem_intents(&self, out: &mut Vec<MemReq>) {
+        if self.state == PipeState::Halted {
+            return;
+        }
+        // FPU-side (fld/fsd head + SSR lanes).
+        self.fpu.mem_intents(self.now, self.id, &self.ssrs, out);
+        // Int-pipe lw/sw.
+        if matches!(self.state, PipeState::Execute | PipeState::WaitMem) {
+            match self.cur_inst() {
+                Inst::Lw { rs1, imm, .. } => out.push(MemReq {
+                    addr: self.ireg(rs1).wrapping_add(imm as u32),
+                    write: false,
+                    src: ReqSource::CoreInt(self.id),
+                }),
+                Inst::Sw { rs1, imm, .. } => out.push(MemReq {
+                    addr: self.ireg(rs1).wrapping_add(imm as u32),
+                    write: true,
+                    src: ReqSource::CoreInt(self.id),
+                }),
+                _ => {}
+            }
+        }
+    }
+
+    /// Phase 2: advance one cycle with the granted memory requests.
+    pub fn step(
+        &mut self,
+        granted: &[MemReq],
+        tcdm: &mut Tcdm,
+        icache: &mut ICache,
+    ) {
+        let now = self.now;
+        self.now += 1;
+        if self.state == PipeState::Halted {
+            return;
+        }
+        self.stats.cycles += 1;
+
+        // FPU subsystem always steps (pseudo-dual-issue).
+        self.fpu.step(now, self.id, granted, tcdm, &mut self.ssrs);
+
+        let int_granted = granted
+            .iter()
+            .any(|g| g.src == ReqSource::CoreInt(self.id));
+
+        match self.state {
+            PipeState::Halted => {}
+            PipeState::Fetch { left } => {
+                if left > 0 {
+                    self.state = PipeState::Fetch { left: left - 1 };
+                    self.stats.stall_fetch += 1;
+                } else {
+                    // Fetch cost was already consumed when the fetch
+                    // started; execute this cycle.
+                    self.state = PipeState::Execute;
+                    self.execute(now, int_granted, tcdm, icache);
+                }
+            }
+            PipeState::Execute
+            | PipeState::WaitMem
+            | PipeState::WaitDispatch
+            | PipeState::WaitDrain => {
+                self.execute(now, int_granted, tcdm, icache);
+            }
+            PipeState::AtBarrier => {
+                if self.barrier_release {
+                    self.barrier_release = false;
+                    self.advance_pc(self.pc + 1, icache, false);
+                } else {
+                    self.stats.stall_drain += 1;
+                }
+            }
+        }
+    }
+
+    /// Start fetching the instruction at `next_pc`. The *current* cycle
+    /// already did work; fetch latency beyond 1 cycle becomes stalls.
+    fn advance_pc(&mut self, next_pc: u32, icache: &mut ICache, taken: bool) {
+        self.pc = next_pc;
+        let lat = icache.access(next_pc);
+        let extra = lat - 1 + if taken { self.cfg.branch_penalty } else { 0 };
+        self.state = PipeState::Fetch { left: extra };
+    }
+
+    fn ssr_write_lanes_drained(&self) -> bool {
+        self.ssrs.iter().all(|l| l.drained())
+    }
+
+    #[allow(clippy::too_many_lines)]
+    fn execute(
+        &mut self,
+        now: u64,
+        int_granted: bool,
+        tcdm: &mut Tcdm,
+        icache: &mut ICache,
+    ) {
+        use Inst::*;
+        let inst = self.cur_inst();
+        // First time we reach Execute for this instruction, count the
+        // fetch+decode.
+        if matches!(self.state, PipeState::Execute | PipeState::Fetch { .. }) {
+            self.stats.fetched += 1;
+        }
+
+        match inst.pipe_class() {
+            PipeClass::Int => {
+                // lw/sw need a grant.
+                match inst {
+                    Lw { rd, rs1, imm } => {
+                        if int_granted {
+                            let a = self.ireg(rs1).wrapping_add(imm as u32);
+                            let v = tcdm.read_u32(a);
+                            self.set_ireg(rd, v);
+                            self.stats.int_retired += 1;
+                            self.advance_pc(self.pc + 1, icache, false);
+                        } else {
+                            self.state = PipeState::WaitMem;
+                            self.stats.stall_mem += 1;
+                        }
+                        return;
+                    }
+                    Sw { rs1, rs2, imm } => {
+                        if int_granted {
+                            let a = self.ireg(rs1).wrapping_add(imm as u32);
+                            self.stats.int_retired += 1;
+                            let v = self.ireg(rs2);
+                            tcdm.write_u32(a, v);
+                            self.advance_pc(self.pc + 1, icache, false);
+                        } else {
+                            self.state = PipeState::WaitMem;
+                            self.stats.stall_mem += 1;
+                        }
+                        return;
+                    }
+                    _ => {}
+                }
+                let (next_pc, taken) = self.execute_int_alu(inst);
+                self.stats.int_retired += 1;
+                if taken {
+                    self.stats.branches_taken += 1;
+                }
+                self.advance_pc(next_pc, icache, taken);
+            }
+            PipeClass::Fp => {
+                if !self.fpu.can_dispatch() {
+                    self.state = PipeState::WaitDispatch;
+                    self.stats.stall_dispatch += 1;
+                    return;
+                }
+                let entry = match inst {
+                    Fld { rd, rs1, imm } => SeqEntry::Fld {
+                        rd,
+                        addr: self.ireg(rs1).wrapping_add(imm as u32),
+                    },
+                    Fsd { rs1, rs2, imm } => SeqEntry::Fsd {
+                        rs2,
+                        addr: self.ireg(rs1).wrapping_add(imm as u32),
+                    },
+                    other => SeqEntry::Fp(other),
+                };
+                self.fpu.dispatch(entry);
+                self.advance_pc(self.pc + 1, icache, false);
+            }
+            PipeClass::Frep => {
+                if !self.fpu.can_dispatch() {
+                    self.state = PipeState::WaitDispatch;
+                    self.stats.stall_dispatch += 1;
+                    return;
+                }
+                let (rpt_reg, n_instr, inner) = match inst {
+                    FrepO { rpt, n_instr } => (rpt, n_instr, false),
+                    FrepI { rpt, n_instr } => (rpt, n_instr, true),
+                    _ => unreachable!(),
+                };
+                self.fpu.dispatch(SeqEntry::FrepCfg {
+                    rpt: self.ireg(rpt_reg),
+                    n_instr,
+                    inner,
+                });
+                self.advance_pc(self.pc + 1, icache, false);
+            }
+            PipeClass::Crossing => {
+                if !self.fpu.idle(now) || !self.ssr_write_lanes_drained() {
+                    self.state = PipeState::WaitDrain;
+                    self.stats.stall_drain += 1;
+                    return;
+                }
+                self.execute_crossing(inst);
+                self.stats.int_retired += 1;
+                self.advance_pc(self.pc + 1, icache, false);
+            }
+            PipeClass::SsrCfg => {
+                match inst {
+                    Scfgwi { rs1, ssr, word } => {
+                        let v = self.ireg(rs1);
+                        if let Some(cfg) = SsrCfg::from_word(word) {
+                            self.ssrs[ssr as usize % NUM_SSRS]
+                                .cfg_write(cfg, v);
+                        }
+                    }
+                    Scfgri { rd, ssr, word } => {
+                        let v = SsrCfg::from_word(word)
+                            .map(|cfg| {
+                                self.ssrs[ssr as usize % NUM_SSRS]
+                                    .cfg_read(cfg)
+                            })
+                            .unwrap_or(0);
+                        self.set_ireg(rd, v);
+                    }
+                    SsrEnable => self.fpu.ssr_enabled = true,
+                    SsrDisable => {
+                        // Disabling waits until streams are quiescent.
+                        if !self.fpu.idle(now)
+                            || !self.ssr_write_lanes_drained()
+                        {
+                            self.state = PipeState::WaitDrain;
+                            self.stats.stall_drain += 1;
+                            return;
+                        }
+                        self.fpu.ssr_enabled = false;
+                    }
+                    _ => unreachable!(),
+                }
+                self.stats.int_retired += 1;
+                self.advance_pc(self.pc + 1, icache, false);
+            }
+            PipeClass::Sys => match inst {
+                Barrier => {
+                    if !self.fpu.idle(now) || !self.ssr_write_lanes_drained()
+                    {
+                        self.state = PipeState::WaitDrain;
+                        self.stats.stall_drain += 1;
+                        return;
+                    }
+                    self.state = PipeState::AtBarrier;
+                }
+                _ => {
+                    if !self.fpu.idle(now) || !self.ssr_write_lanes_drained()
+                    {
+                        self.state = PipeState::WaitDrain;
+                        self.stats.stall_drain += 1;
+                        return;
+                    }
+                    self.state = PipeState::Halted;
+                }
+            },
+        }
+    }
+
+    /// Pure integer ALU / control flow. Returns (next_pc, branch_taken).
+    fn execute_int_alu(&mut self, inst: Inst) -> (u32, bool) {
+        use Inst::*;
+        let pc = self.pc;
+        // Branch/jump immediates are byte offsets (encoding-accurate);
+        // the program counter is word-indexed, so offsets scale by 4.
+        let mut next = pc + 1;
+        let mut taken = false;
+        match inst {
+            Lui { rd, imm } => self.set_ireg(rd, imm as u32),
+            Auipc { rd, imm } => {
+                self.set_ireg(rd, (pc * 4).wrapping_add(imm as u32))
+            }
+            Addi { rd, rs1, imm } => {
+                let v = self.ireg(rs1).wrapping_add(imm as u32);
+                self.set_ireg(rd, v)
+            }
+            Slti { rd, rs1, imm } => {
+                let v = ((self.ireg(rs1) as i32) < imm) as u32;
+                self.set_ireg(rd, v)
+            }
+            Sltiu { rd, rs1, imm } => {
+                let v = (self.ireg(rs1) < imm as u32) as u32;
+                self.set_ireg(rd, v)
+            }
+            Andi { rd, rs1, imm } => {
+                let v = self.ireg(rs1) & imm as u32;
+                self.set_ireg(rd, v)
+            }
+            Ori { rd, rs1, imm } => {
+                let v = self.ireg(rs1) | imm as u32;
+                self.set_ireg(rd, v)
+            }
+            Xori { rd, rs1, imm } => {
+                let v = self.ireg(rs1) ^ imm as u32;
+                self.set_ireg(rd, v)
+            }
+            Slli { rd, rs1, shamt } => {
+                let v = self.ireg(rs1) << shamt;
+                self.set_ireg(rd, v)
+            }
+            Srli { rd, rs1, shamt } => {
+                let v = self.ireg(rs1) >> shamt;
+                self.set_ireg(rd, v)
+            }
+            Srai { rd, rs1, shamt } => {
+                let v = ((self.ireg(rs1) as i32) >> shamt) as u32;
+                self.set_ireg(rd, v)
+            }
+            Add { rd, rs1, rs2 } => {
+                let v = self.ireg(rs1).wrapping_add(self.ireg(rs2));
+                self.set_ireg(rd, v)
+            }
+            Sub { rd, rs1, rs2 } => {
+                let v = self.ireg(rs1).wrapping_sub(self.ireg(rs2));
+                self.set_ireg(rd, v)
+            }
+            Sll { rd, rs1, rs2 } => {
+                let v = self.ireg(rs1) << (self.ireg(rs2) & 31);
+                self.set_ireg(rd, v)
+            }
+            Srl { rd, rs1, rs2 } => {
+                let v = self.ireg(rs1) >> (self.ireg(rs2) & 31);
+                self.set_ireg(rd, v)
+            }
+            Sra { rd, rs1, rs2 } => {
+                let v =
+                    ((self.ireg(rs1) as i32) >> (self.ireg(rs2) & 31)) as u32;
+                self.set_ireg(rd, v)
+            }
+            And { rd, rs1, rs2 } => {
+                let v = self.ireg(rs1) & self.ireg(rs2);
+                self.set_ireg(rd, v)
+            }
+            Or { rd, rs1, rs2 } => {
+                let v = self.ireg(rs1) | self.ireg(rs2);
+                self.set_ireg(rd, v)
+            }
+            Xor { rd, rs1, rs2 } => {
+                let v = self.ireg(rs1) ^ self.ireg(rs2);
+                self.set_ireg(rd, v)
+            }
+            Slt { rd, rs1, rs2 } => {
+                let v =
+                    ((self.ireg(rs1) as i32) < (self.ireg(rs2) as i32)) as u32;
+                self.set_ireg(rd, v)
+            }
+            Sltu { rd, rs1, rs2 } => {
+                let v = (self.ireg(rs1) < self.ireg(rs2)) as u32;
+                self.set_ireg(rd, v)
+            }
+            Mul { rd, rs1, rs2 } => {
+                let v = self.ireg(rs1).wrapping_mul(self.ireg(rs2));
+                self.set_ireg(rd, v)
+            }
+            Mulh { rd, rs1, rs2 } => {
+                let v = ((self.ireg(rs1) as i64 * self.ireg(rs2) as i64)
+                    >> 32) as u32;
+                self.set_ireg(rd, v)
+            }
+            Jal { rd, imm } => {
+                self.set_ireg(rd, (pc + 1) * 4);
+                next = pc.wrapping_add((imm / 4) as u32);
+                taken = true;
+            }
+            Jalr { rd, rs1, imm } => {
+                let t = self.ireg(rs1).wrapping_add(imm as u32) / 4;
+                self.set_ireg(rd, (pc + 1) * 4);
+                next = t;
+                taken = true;
+            }
+            Beq { rs1, rs2, imm } => {
+                if self.ireg(rs1) == self.ireg(rs2) {
+                    next = pc.wrapping_add((imm / 4) as u32);
+                    taken = true;
+                }
+            }
+            Bne { rs1, rs2, imm } => {
+                if self.ireg(rs1) != self.ireg(rs2) {
+                    next = pc.wrapping_add((imm / 4) as u32);
+                    taken = true;
+                }
+            }
+            Blt { rs1, rs2, imm } => {
+                if (self.ireg(rs1) as i32) < (self.ireg(rs2) as i32) {
+                    next = pc.wrapping_add((imm / 4) as u32);
+                    taken = true;
+                }
+            }
+            Bge { rs1, rs2, imm } => {
+                if (self.ireg(rs1) as i32) >= (self.ireg(rs2) as i32) {
+                    next = pc.wrapping_add((imm / 4) as u32);
+                    taken = true;
+                }
+            }
+            Bltu { rs1, rs2, imm } => {
+                if self.ireg(rs1) < self.ireg(rs2) {
+                    next = pc.wrapping_add((imm / 4) as u32);
+                    taken = true;
+                }
+            }
+            Bgeu { rs1, rs2, imm } => {
+                if self.ireg(rs1) >= self.ireg(rs2) {
+                    next = pc.wrapping_add((imm / 4) as u32);
+                    taken = true;
+                }
+            }
+            Nop => {}
+            other => unreachable!("not an int instruction: {other:?}"),
+        }
+        (next, taken)
+    }
+
+    fn execute_crossing(&mut self, inst: Inst) {
+        use Inst::*;
+        match inst {
+            FcvtDW { rd, rs1 } => {
+                let v = self.ireg(rs1) as i32 as f64;
+                self.fpu.set_freg(rd, v);
+            }
+            FcvtWD { rd, rs1 } => {
+                let v = self.fpu.freg(rs1) as i32 as u32;
+                self.set_ireg(rd, v);
+            }
+            FmvXD { rd, rs1 } => {
+                // 32-bit core: move the low 32 bits of the FP value.
+                let v = self.fpu.freg(rs1).to_bits() as u32;
+                self.set_ireg(rd, v);
+            }
+            FmvDX { rd, rs1 } => {
+                // Used by kernels to zero-init accumulators: build a
+                // double from the integer value (as i32 → f64).
+                let v = self.ireg(rs1) as i32 as f64;
+                self.fpu.set_freg(rd, v);
+            }
+            Fcmp { op, rd, rs1, rs2 } => {
+                let (a, b) = (self.fpu.freg(rs1), self.fpu.freg(rs2));
+                let v = match op {
+                    FCmp::Eq => a == b,
+                    FCmp::Lt => a < b,
+                    FCmp::Le => a <= b,
+                } as u32;
+                self.set_ireg(rd, v);
+            }
+            other => unreachable!("not a crossing instruction: {other:?}"),
+        }
+    }
+}
+
+/// Run a single core with a private TCDM until halt (no bank conflicts
+/// with other agents — the standalone kernel path used by Figs. 5/6).
+pub fn run_single(
+    core: &mut SnitchCore,
+    tcdm: &mut Tcdm,
+    icache: &mut ICache,
+    max_cycles: u64,
+) -> u64 {
+    let mut arb = crate::mem::BankArbiter::new(tcdm.nbanks());
+    let mut intents = Vec::with_capacity(8);
+    let mut granted = Vec::with_capacity(8);
+    while !core.halted() {
+        assert!(
+            core.now() < max_cycles,
+            "kernel did not halt within {max_cycles} cycles (pc={})",
+            core.pc
+        );
+        intents.clear();
+        core.mem_intents(&mut intents);
+        arb.arbitrate_into(tcdm, &intents, &mut granted);
+        core.step(&granted, tcdm, icache);
+        if core.at_barrier() {
+            core.release_barrier(); // single core: barrier is trivial
+        }
+    }
+    core.now()
+}

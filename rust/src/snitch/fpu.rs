@@ -1,0 +1,751 @@
+//! The FPU subsystem: dispatch queue, FREP micro-loop sequence buffer,
+//! FP register file + scoreboard, and the FPU pipeline timing model.
+//!
+//! Paper (`Xfrep`): a 16-instruction sequence buffer sits *between* the
+//! Snitch integer core and the FPU. `frep` instructions configure the
+//! buffer to re-emit a range of buffered instructions multiple times.
+//! Because this happens entirely in the FPU subsystem, the integer pipe
+//! runs in parallel — the "pseudo-dual-issue" mode that lets 16 fetched
+//! instructions expand into 204 executed FPU instructions (Fig. 6).
+
+use super::ssr::SsrLane;
+use crate::isa::{ssr_index, FReg, Inst, NUM_SSRS};
+use crate::mem::{MemReq, ReqSource, Tcdm};
+use std::collections::VecDeque;
+
+/// An entry in the dispatch queue from the integer pipe.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SeqEntry {
+    /// Pure FP-datapath instruction (FREP-eligible).
+    Fp(Inst),
+    /// FP load with the address already computed by the integer pipe.
+    Fld { rd: FReg, addr: u32 },
+    /// FP store with the address already computed by the integer pipe.
+    Fsd { rs2: FReg, addr: u32 },
+    /// `frep` configuration captured at dispatch (rpt value read from
+    /// the integer register file at dispatch time).
+    FrepCfg { rpt: u32, n_instr: u8, inner: bool },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FrepPhase {
+    /// Capturing the next `remaining` FP instructions into the buffer.
+    Capture { remaining: u8 },
+    /// Replaying the buffer: `iter` of `rpt` extra iterations done,
+    /// `pos` = next buffer slot to issue.
+    Replay { iter: u32, pos: usize },
+}
+
+#[derive(Debug, Clone)]
+struct FrepState {
+    rpt: u32,
+    inner: bool,
+    buffer: Vec<Inst>,
+    phase: FrepPhase,
+    /// Inner mode: repeats already emitted for the current instruction.
+    inner_emitted: u32,
+}
+
+/// Cumulative FPU-side statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FpuStats {
+    /// Instructions issued into the FPU (incl. moves and fld/fsd).
+    pub issued: u64,
+    /// Of those, issued from the FREP buffer replay (never fetched).
+    pub replayed: u64,
+    /// FLOPs performed (FMA = 2).
+    pub flops: u64,
+    /// Cycles in which the FPU issued nothing while work was pending.
+    pub stall_cycles: u64,
+    ///   ... broken down: waiting for an SSR datum,
+    pub stall_ssr: u64,
+    ///   ... waiting on a register dependency (scoreboard),
+    pub stall_raw: u64,
+    ///   ... waiting for a TCDM bank grant (fld/fsd/ssr-store).
+    pub stall_mem: u64,
+    /// Cycles with nothing to do at all (queue empty).
+    pub idle_cycles: u64,
+}
+
+/// FP register file + scoreboard + sequencer + pipeline.
+#[derive(Debug, Clone)]
+pub struct FpuSubsystem {
+    pub fregs: [f64; 32],
+    /// Cycle at which each FP register's value becomes readable.
+    ready: [u64; 32],
+    queue: VecDeque<SeqEntry>,
+    queue_cap: usize,
+    frep: Option<FrepState>,
+    frep_buffer_cap: usize,
+    latency: u64,
+    in_flight: u32,
+    /// Completion times of in-flight ops (to track drain).
+    completions: VecDeque<u64>,
+    pub ssr_enabled: bool,
+    pub stats: FpuStats,
+}
+
+impl FpuSubsystem {
+    pub fn new(latency: u32, frep_buffer_cap: usize, queue_cap: usize) -> Self {
+        FpuSubsystem {
+            fregs: [0.0; 32],
+            ready: [0; 32],
+            queue: VecDeque::with_capacity(queue_cap),
+            queue_cap,
+            frep: None,
+            frep_buffer_cap,
+            latency: latency as u64,
+            in_flight: 0,
+            completions: VecDeque::new(),
+            ssr_enabled: false,
+            stats: FpuStats::default(),
+        }
+    }
+
+    /// Can the integer pipe dispatch another entry this cycle?
+    pub fn can_dispatch(&self) -> bool {
+        self.queue.len() < self.queue_cap
+    }
+
+    pub fn dispatch(&mut self, e: SeqEntry) {
+        debug_assert!(self.can_dispatch());
+        self.queue.push_back(e);
+    }
+
+    /// Fully drained: no queued work, no active frep, nothing in flight.
+    /// (Domain-crossing instructions and `halt` wait on this.)
+    pub fn idle(&self, now: u64) -> bool {
+        self.queue.is_empty()
+            && self.frep.is_none()
+            && self.completions.iter().all(|&c| c <= now)
+    }
+
+    pub fn freg(&self, r: FReg) -> f64 {
+        self.fregs[r.0 as usize]
+    }
+
+    pub fn set_freg(&mut self, r: FReg, v: f64) {
+        self.fregs[r.0 as usize] = v;
+        // Externally written values (fmv.d.x, fcvt) are ready now.
+    }
+
+    fn reg_ready(&self, r: FReg, now: u64) -> bool {
+        self.ready[r.0 as usize] <= now
+    }
+
+    /// Whether reading register `r` pops SSR lane data.
+    fn is_ssr_read(&self, r: FReg, ssrs: &[SsrLane; NUM_SSRS]) -> bool {
+        self.ssr_enabled
+            && ssr_index(r).map(|i| ssrs[i].is_read()).unwrap_or(false)
+    }
+
+    fn is_ssr_write(&self, r: FReg, ssrs: &[SsrLane; NUM_SSRS]) -> bool {
+        self.ssr_enabled
+            && ssr_index(r).map(|i| ssrs[i].is_write()).unwrap_or(false)
+    }
+
+    /// Sources of a pure-FP instruction, allocation-free (perf: this is
+    /// called once per FPU issue attempt — the simulator's hottest path;
+    /// see EXPERIMENTS.md §Perf iteration 1).
+    #[inline]
+    fn srcs(inst: &Inst) -> ([FReg; 3], usize) {
+        use Inst::*;
+        const Z: FReg = FReg(31);
+        match *inst {
+            FmaddD { rs1, rs2, rs3, .. }
+            | FmsubD { rs1, rs2, rs3, .. }
+            | FnmaddD { rs1, rs2, rs3, .. } => ([rs1, rs2, rs3], 3),
+            FaddD { rs1, rs2, .. }
+            | FsubD { rs1, rs2, .. }
+            | FmulD { rs1, rs2, .. }
+            | FdivD { rs1, rs2, .. }
+            | FsgnjD { rs1, rs2, .. }
+            | FminD { rs1, rs2, .. }
+            | FmaxD { rs1, rs2, .. } => ([rs1, rs2, Z], 2),
+            _ => ([Z, Z, Z], 0),
+        }
+    }
+
+    fn dest(inst: &Inst) -> Option<FReg> {
+        use Inst::*;
+        match *inst {
+            FmaddD { rd, .. } | FmsubD { rd, .. } | FnmaddD { rd, .. }
+            | FaddD { rd, .. } | FsubD { rd, .. } | FmulD { rd, .. }
+            | FdivD { rd, .. } | FsgnjD { rd, .. } | FminD { rd, .. }
+            | FmaxD { rd, .. } => Some(rd),
+            _ => None,
+        }
+    }
+
+    /// Would instruction `inst` be able to issue at `now`? (Register and
+    /// SSR readiness only; memory grants are handled by the caller.)
+    fn fp_can_issue(
+        &self,
+        inst: &Inst,
+        now: u64,
+        ssrs: &[SsrLane; NUM_SSRS],
+    ) -> Result<(), &'static str> {
+        let (srcs, n) = Self::srcs(inst);
+        for &s in &srcs[..n] {
+            if self.is_ssr_read(s, ssrs) {
+                if !ssrs[ssr_index(s).unwrap()].can_pop() {
+                    return Err("ssr");
+                }
+            } else if !self.reg_ready(s, now) {
+                return Err("raw");
+            }
+        }
+        if let Some(d) = Self::dest(inst) {
+            if self.is_ssr_write(d, ssrs) {
+                if !ssrs[ssr_index(d).unwrap()].can_push() {
+                    return Err("ssr");
+                }
+            }
+            // WAW: the pipeline completes in order (same latency), and
+            // reads check readiness, so no WAW stall is needed.
+        }
+        Ok(())
+    }
+
+    /// Execute a pure-FP instruction's dataflow (pops SSRs, computes,
+    /// writes dest / pushes SSR store).
+    fn fp_execute(
+        &mut self,
+        inst: &Inst,
+        now: u64,
+        ssrs: &mut [SsrLane; NUM_SSRS],
+    ) {
+        use Inst::*;
+        let mut read = |fpu: &mut Self, r: FReg, ssrs: &mut [SsrLane; NUM_SSRS]| {
+            if fpu.ssr_enabled {
+                if let Some(i) = ssr_index(r) {
+                    if ssrs[i].is_read() {
+                        return ssrs[i].pop();
+                    }
+                }
+            }
+            fpu.fregs[r.0 as usize]
+        };
+        let (rd, val) = match *inst {
+            FmaddD { rd, rs1, rs2, rs3 } => {
+                let (a, b, c) = (
+                    read(self, rs1, ssrs),
+                    read(self, rs2, ssrs),
+                    read(self, rs3, ssrs),
+                );
+                (rd, a.mul_add(b, c))
+            }
+            FmsubD { rd, rs1, rs2, rs3 } => {
+                let (a, b, c) = (
+                    read(self, rs1, ssrs),
+                    read(self, rs2, ssrs),
+                    read(self, rs3, ssrs),
+                );
+                (rd, a.mul_add(b, -c))
+            }
+            FnmaddD { rd, rs1, rs2, rs3 } => {
+                let (a, b, c) = (
+                    read(self, rs1, ssrs),
+                    read(self, rs2, ssrs),
+                    read(self, rs3, ssrs),
+                );
+                (rd, (-a).mul_add(b, -c))
+            }
+            FaddD { rd, rs1, rs2 } => {
+                let (a, b) = (read(self, rs1, ssrs), read(self, rs2, ssrs));
+                (rd, a + b)
+            }
+            FsubD { rd, rs1, rs2 } => {
+                let (a, b) = (read(self, rs1, ssrs), read(self, rs2, ssrs));
+                (rd, a - b)
+            }
+            FmulD { rd, rs1, rs2 } => {
+                let (a, b) = (read(self, rs1, ssrs), read(self, rs2, ssrs));
+                (rd, a * b)
+            }
+            FdivD { rd, rs1, rs2 } => {
+                let (a, b) = (read(self, rs1, ssrs), read(self, rs2, ssrs));
+                (rd, a / b)
+            }
+            FsgnjD { rd, rs1, rs2 } => {
+                let (a, b) = (read(self, rs1, ssrs), read(self, rs2, ssrs));
+                (rd, a.copysign(b))
+            }
+            FminD { rd, rs1, rs2 } => {
+                let (a, b) = (read(self, rs1, ssrs), read(self, rs2, ssrs));
+                (rd, a.min(b))
+            }
+            FmaxD { rd, rs1, rs2 } => {
+                let (a, b) = (read(self, rs1, ssrs), read(self, rs2, ssrs));
+                (rd, a.max(b))
+            }
+            ref other => unreachable!("not a pure-FP inst: {other:?}"),
+        };
+        if self.is_ssr_write(rd, ssrs) {
+            ssrs[ssr_index(rd).unwrap()].push(val);
+        } else {
+            self.fregs[rd.0 as usize] = val;
+            self.ready[rd.0 as usize] = now + self.latency;
+        }
+        self.in_flight += 1;
+        self.completions.push_back(now + self.latency);
+        self.stats.issued += 1;
+        self.stats.flops += inst.flops() as u64;
+    }
+
+    /// Memory intents from the FPU side this cycle: the head fld/fsd (if
+    /// its operands are ready) and all SSR lane prefetches/stores.
+    pub fn mem_intents(
+        &self,
+        now: u64,
+        core_id: u8,
+        ssrs: &[SsrLane; NUM_SSRS],
+        out: &mut Vec<MemReq>,
+    ) {
+        // SSR lanes always try to prefetch / drain stores.
+        for (i, l) in ssrs.iter().enumerate() {
+            if let Some(addr) = l.prefetch_intent() {
+                out.push(MemReq {
+                    addr,
+                    write: false,
+                    src: ReqSource::Ssr(core_id, i as u8),
+                });
+            }
+            if let Some(addr) = l.store_intent() {
+                out.push(MemReq {
+                    addr,
+                    write: true,
+                    src: ReqSource::Ssr(core_id, i as u8),
+                });
+            }
+        }
+        // Head-of-queue fld/fsd (only when frep is not replaying —
+        // replay issues from the buffer, not the queue).
+        if !matches!(
+            self.frep,
+            Some(FrepState { phase: FrepPhase::Replay { .. }, .. })
+        ) {
+            match self.queue.front() {
+                Some(&SeqEntry::Fld { addr, .. }) => out.push(MemReq {
+                    addr,
+                    write: false,
+                    src: ReqSource::CoreFp(core_id),
+                }),
+                Some(&SeqEntry::Fsd { rs2, addr }) => {
+                    if self.reg_ready(rs2, now) {
+                        out.push(MemReq {
+                            addr,
+                            write: true,
+                            src: ReqSource::CoreFp(core_id),
+                        });
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// One FPU cycle: complete SSR memory grants, then issue at most one
+    /// instruction (from the FREP buffer replay or the dispatch queue).
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &mut self,
+        now: u64,
+        core_id: u8,
+        granted: &[MemReq],
+        tcdm: &mut Tcdm,
+        ssrs: &mut [SsrLane; NUM_SSRS],
+    ) {
+        // Retire old completions.
+        while let Some(&c) = self.completions.front() {
+            if c <= now {
+                self.completions.pop_front();
+                self.in_flight = self.in_flight.saturating_sub(1);
+            } else {
+                break;
+            }
+        }
+
+        // 1. Serve granted SSR memory operations.
+        let mut fp_mem_granted = false;
+        for g in granted {
+            match g.src {
+                ReqSource::Ssr(c, lane) if c == core_id => {
+                    let l = &mut ssrs[lane as usize];
+                    if g.write {
+                        let (addr, v) = l.store_complete();
+                        tcdm.write_f64(addr, v);
+                    } else {
+                        let v = tcdm.read_f64(g.addr);
+                        l.prefetch_complete(v);
+                    }
+                }
+                ReqSource::CoreFp(c) if c == core_id => fp_mem_granted = true,
+                _ => {}
+            }
+        }
+
+        // 2. Issue one instruction.
+        // 2a. FREP replay has priority (it is "in" the FPU already).
+        let replay = match &self.frep {
+            Some(fs) => match fs.phase {
+                FrepPhase::Replay { iter, pos } => Some((
+                    iter,
+                    pos,
+                    fs.buffer[pos],
+                    fs.buffer.len(),
+                    fs.inner,
+                    fs.rpt,
+                )),
+                _ => None,
+            },
+            None => None,
+        };
+        if let Some((iter, pos, inst, blen, inner, rpt)) = replay {
+            match self.fp_can_issue(&inst, now, ssrs) {
+                Ok(()) => {
+                    // Advance the replay cursor, then execute.
+                    if inner {
+                        // frep.i: each buffered instruction is emitted
+                        // `rpt` more times (capture emitted it once).
+                        let fs = self.frep.as_mut().unwrap();
+                        fs.inner_emitted += 1;
+                        let advance = fs.inner_emitted >= rpt;
+                        if advance {
+                            fs.inner_emitted = 0;
+                            if pos + 1 == blen {
+                                self.frep = None;
+                            } else {
+                                fs.phase =
+                                    FrepPhase::Replay { iter, pos: pos + 1 };
+                            }
+                        }
+                    } else {
+                        // frep.o: the whole block loops.
+                        let (mut iter, mut pos) = (iter, pos + 1);
+                        if pos == blen {
+                            pos = 0;
+                            iter += 1;
+                        }
+                        if iter > rpt {
+                            self.frep = None;
+                        } else {
+                            self.frep.as_mut().unwrap().phase =
+                                FrepPhase::Replay { iter, pos };
+                        }
+                    }
+                    self.fp_execute(&inst, now, ssrs);
+                    self.stats.replayed += 1;
+                }
+                Err(kind) => {
+                    self.stats.stall_cycles += 1;
+                    match kind {
+                        "ssr" => self.stats.stall_ssr += 1,
+                        _ => self.stats.stall_raw += 1,
+                    }
+                }
+            }
+            return;
+        }
+
+        // 2b. Consume the dispatch queue. FrepCfg entries are absorbed
+        // for free (they configure, they don't execute).
+        loop {
+            let head = match self.queue.front() {
+                Some(h) => *h,
+                None => {
+                    self.stats.idle_cycles += 1;
+                    return;
+                }
+            };
+            match head {
+                SeqEntry::FrepCfg { rpt, n_instr, inner } => {
+                    self.queue.pop_front();
+                    self.frep = Some(FrepState {
+                        rpt,
+                        inner,
+                        buffer: Vec::with_capacity(n_instr as usize),
+                        phase: FrepPhase::Capture { remaining: n_instr },
+                        inner_emitted: 0,
+                    });
+                    continue;
+                }
+                SeqEntry::Fp(inst) => {
+                    match self.fp_can_issue(&inst, now, ssrs) {
+                        Ok(()) => {
+                            self.queue.pop_front();
+                            // Capture into FREP buffer if capturing.
+                            if let Some(fs) = &mut self.frep {
+                                if let FrepPhase::Capture { remaining } =
+                                    &mut fs.phase
+                                {
+                                    assert!(
+                                        fs.buffer.len() < self.frep_buffer_cap,
+                                        "FREP buffer overflow (>{} instrs)",
+                                        self.frep_buffer_cap
+                                    );
+                                    fs.buffer.push(inst);
+                                    *remaining -= 1;
+                                    let inner = fs.inner;
+                                    if inner {
+                                        // inner mode: replay this instr
+                                        // rpt more times immediately.
+                                        // Emitted once now; replay path
+                                        // handles the rest via a
+                                        // one-instruction buffer view.
+                                    }
+                                    if *remaining == 0 {
+                                        // all captured; iteration 0 is
+                                        // being emitted inline, replay
+                                        // continues at iter 1.
+                                        fs.phase = FrepPhase::Replay {
+                                            iter: 1,
+                                            pos: 0,
+                                        };
+                                        if fs.rpt == 0 {
+                                            self.frep = None;
+                                        }
+                                    }
+                                }
+                            }
+                            self.fp_execute(&inst, now, ssrs);
+                            return;
+                        }
+                        Err(kind) => {
+                            self.stats.stall_cycles += 1;
+                            match kind {
+                                "ssr" => self.stats.stall_ssr += 1,
+                                _ => self.stats.stall_raw += 1,
+                            }
+                            return;
+                        }
+                    }
+                }
+                SeqEntry::Fld { rd, addr } => {
+                    if self.frep.as_ref().map_or(false, |f| {
+                        matches!(f.phase, FrepPhase::Capture { .. })
+                    }) {
+                        panic!("fld inside an FREP block is not repeatable");
+                    }
+                    if fp_mem_granted {
+                        self.queue.pop_front();
+                        let v = tcdm.read_f64(addr);
+                        self.fregs[rd.0 as usize] = v;
+                        self.ready[rd.0 as usize] = now + 2;
+                        self.completions.push_back(now + 2);
+                        self.in_flight += 1;
+                        self.stats.issued += 1;
+                    } else {
+                        self.stats.stall_cycles += 1;
+                        self.stats.stall_mem += 1;
+                    }
+                    return;
+                }
+                SeqEntry::Fsd { rs2, addr } => {
+                    if self.frep.as_ref().map_or(false, |f| {
+                        matches!(f.phase, FrepPhase::Capture { .. })
+                    }) {
+                        panic!("fsd inside an FREP block is not repeatable");
+                    }
+                    if !self.reg_ready(rs2, now) {
+                        self.stats.stall_cycles += 1;
+                        self.stats.stall_raw += 1;
+                        return;
+                    }
+                    if fp_mem_granted {
+                        self.queue.pop_front();
+                        tcdm.write_f64(addr, self.fregs[rs2.0 as usize]);
+                        self.stats.issued += 1;
+                    } else {
+                        self.stats.stall_cycles += 1;
+                        self.stats.stall_mem += 1;
+                    }
+                    return;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{FReg, Inst};
+
+    fn mk() -> (FpuSubsystem, [SsrLane; NUM_SSRS], Tcdm) {
+        (
+            FpuSubsystem::new(3, 16, 16),
+            Default::default(),
+            Tcdm::new(1 << 16, 32),
+        )
+    }
+
+    fn fma(rd: u8, rs1: u8, rs2: u8, rs3: u8) -> Inst {
+        Inst::FmaddD {
+            rd: FReg(rd),
+            rs1: FReg(rs1),
+            rs2: FReg(rs2),
+            rs3: FReg(rs3),
+        }
+    }
+
+    #[test]
+    fn single_fma_computes_and_scoreboards() {
+        let (mut fpu, mut ssrs, mut tcdm) = mk();
+        fpu.fregs[4] = 2.0;
+        fpu.fregs[5] = 3.0;
+        fpu.fregs[6] = 1.0;
+        fpu.dispatch(SeqEntry::Fp(fma(7, 4, 5, 6)));
+        fpu.step(0, 0, &[], &mut tcdm, &mut ssrs);
+        assert_eq!(fpu.fregs[7], 7.0);
+        assert!(!fpu.reg_ready(FReg(7), 0));
+        assert!(fpu.reg_ready(FReg(7), 3));
+    }
+
+    #[test]
+    fn dependent_chain_stalls_for_latency() {
+        let (mut fpu, mut ssrs, mut tcdm) = mk();
+        fpu.fregs[4] = 1.0;
+        fpu.fregs[5] = 1.0;
+        // acc = f6; two dependent FMAs into f6.
+        fpu.dispatch(SeqEntry::Fp(fma(6, 4, 5, 6)));
+        fpu.dispatch(SeqEntry::Fp(fma(6, 4, 5, 6)));
+        let mut issued_at = Vec::new();
+        for now in 0..10 {
+            let before = fpu.stats.issued;
+            fpu.step(now, 0, &[], &mut tcdm, &mut ssrs);
+            if fpu.stats.issued > before {
+                issued_at.push(now);
+            }
+        }
+        assert_eq!(issued_at[0], 0);
+        assert_eq!(issued_at[1], 3, "RAW on accumulator must wait latency");
+        assert_eq!(fpu.fregs[6], 2.0);
+    }
+
+    #[test]
+    fn independent_fmas_issue_back_to_back() {
+        let (mut fpu, mut ssrs, mut tcdm) = mk();
+        for rd in 10..14 {
+            fpu.dispatch(SeqEntry::Fp(fma(rd, 4, 5, rd)));
+        }
+        let mut issued_at = Vec::new();
+        for now in 0..6 {
+            let before = fpu.stats.issued;
+            fpu.step(now, 0, &[], &mut tcdm, &mut ssrs);
+            if fpu.stats.issued > before {
+                issued_at.push(now);
+            }
+        }
+        assert_eq!(issued_at, vec![0, 1, 2, 3], "4 accumulators: no stall");
+    }
+
+    #[test]
+    fn frep_replays_block() {
+        let (mut fpu, mut ssrs, mut tcdm) = mk();
+        // frep.o rpt=2 (3 total iterations), block = 1 fma f10 += 1*1
+        fpu.fregs[4] = 1.0;
+        fpu.fregs[5] = 1.0;
+        fpu.dispatch(SeqEntry::FrepCfg { rpt: 2, n_instr: 1, inner: false });
+        fpu.dispatch(SeqEntry::Fp(fma(10, 4, 5, 10)));
+        for now in 0..20 {
+            fpu.step(now, 0, &[], &mut tcdm, &mut ssrs);
+        }
+        assert_eq!(fpu.fregs[10], 3.0, "3 accumulations");
+        assert_eq!(fpu.stats.issued, 3);
+        assert_eq!(fpu.stats.replayed, 2, "2 of 3 came from the buffer");
+    }
+
+    #[test]
+    fn frep_multi_instruction_block() {
+        let (mut fpu, mut ssrs, mut tcdm) = mk();
+        fpu.fregs[4] = 1.0;
+        fpu.fregs[5] = 1.0;
+        // 4-instruction block (the Fig. 6 unroll), 48 total iterations.
+        fpu.dispatch(SeqEntry::FrepCfg { rpt: 47, n_instr: 4, inner: false });
+        for rd in 10..14 {
+            fpu.dispatch(SeqEntry::Fp(fma(rd, 4, 5, rd)));
+        }
+        let mut now = 0;
+        while !fpu.idle(now) {
+            fpu.step(now, 0, &[], &mut tcdm, &mut ssrs);
+            now += 1;
+            assert!(now < 1000, "must converge");
+        }
+        for rd in 10..14 {
+            assert_eq!(fpu.fregs[rd], 48.0);
+        }
+        assert_eq!(fpu.stats.issued, 192);
+        assert_eq!(fpu.stats.replayed, 188, "192 executed, 4 fetched");
+        // With 4 independent accumulators and latency 3 there are no
+        // RAW stalls: 192 issues in ~192 cycles.
+        assert!(fpu.stats.stall_raw == 0);
+    }
+
+    #[test]
+    fn frep_inner_repeats_each_instruction() {
+        let (mut fpu, mut ssrs, mut tcdm) = mk();
+        fpu.fregs[4] = 1.0;
+        fpu.fregs[5] = 1.0;
+        // frep.i rpt=2: each of the 2 instrs emitted 3x consecutively:
+        // f10 thrice, then f11 thrice.
+        fpu.dispatch(SeqEntry::FrepCfg { rpt: 2, n_instr: 2, inner: true });
+        fpu.dispatch(SeqEntry::Fp(fma(10, 4, 5, 10)));
+        fpu.dispatch(SeqEntry::Fp(fma(11, 4, 5, 11)));
+        let mut now = 0;
+        while !fpu.idle(now) {
+            fpu.step(now, 0, &[], &mut tcdm, &mut ssrs);
+            now += 1;
+            assert!(now < 1000);
+        }
+        assert_eq!(fpu.fregs[10], 3.0);
+        assert_eq!(fpu.fregs[11], 3.0);
+        assert_eq!(fpu.stats.issued, 6);
+    }
+
+    #[test]
+    fn ssr_read_feeds_fma() {
+        let (mut fpu, mut ssrs, mut tcdm) = mk();
+        fpu.ssr_enabled = true;
+        // Arm ft0 as a 2-element read stream at 0x100.
+        tcdm.write_f64(0x100, 5.0);
+        tcdm.write_f64(0x108, 7.0);
+        use crate::isa::SsrCfg;
+        ssrs[0].cfg_write(SsrCfg::Bound(0), 1);
+        ssrs[0].cfg_write(SsrCfg::Stride(0), 8);
+        ssrs[0].cfg_write(SsrCfg::ReadPtr(0), 0x100);
+        fpu.fregs[5] = 1.0;
+        // f10 += ft0 * f5, twice.
+        fpu.dispatch(SeqEntry::Fp(fma(10, 0, 5, 10)));
+        fpu.dispatch(SeqEntry::Fp(fma(10, 0, 5, 10)));
+        let mut now = 0u64;
+        while !fpu.idle(now) {
+            // Emulate the cluster: grant all SSR prefetches.
+            let mut intents = Vec::new();
+            fpu.mem_intents(now, 0, &ssrs, &mut intents);
+            fpu.step(now, 0, &intents, &mut tcdm, &mut ssrs);
+            now += 1;
+            assert!(now < 100);
+        }
+        assert_eq!(fpu.fregs[10], 12.0);
+        assert_eq!(ssrs[0].served, 2);
+    }
+
+    #[test]
+    fn fld_waits_for_grant() {
+        let (mut fpu, mut ssrs, mut tcdm) = mk();
+        tcdm.write_f64(0x40, 9.0);
+        fpu.dispatch(SeqEntry::Fld { rd: FReg(8), addr: 0x40 });
+        // No grant: stalls.
+        fpu.step(0, 0, &[], &mut tcdm, &mut ssrs);
+        assert_eq!(fpu.stats.stall_mem, 1);
+        // Grant: completes.
+        let g = [MemReq {
+            addr: 0x40,
+            write: false,
+            src: ReqSource::CoreFp(0),
+        }];
+        fpu.step(1, 0, &g, &mut tcdm, &mut ssrs);
+        assert_eq!(fpu.fregs[8], 9.0);
+    }
+}

@@ -1,0 +1,356 @@
+//! Stream Semantic Register data movers (the `Xssr` extension).
+//!
+//! Each lane is a 4-deep affine address generator plus a small data FIFO
+//! (reads) or store queue (writes). When SSRs are enabled, FP-register
+//! reads of ft0..ft2 *pop* from the lane and writes *push* — eliding the
+//! explicit load/store instructions of the hot loop (paper, Fig. 5a).
+//!
+//! Address sequence: for an armed d-dimensional stream,
+//! `addr = base + Σ_k idx[k] · stride[k]`, with `idx[0]` fastest and
+//! each datum served `repeat+1` times (the `Repeat` config word — used
+//! by the mat-vec kernel to read x[j] once per unrolled row).
+
+use crate::isa::{SsrCfg, SSR_DIMS};
+use std::collections::VecDeque;
+
+/// Prefetch FIFO depth (reads) / store queue depth (writes).
+pub const SSR_FIFO_DEPTH: usize = 4;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Idle,
+    Read,
+    Write,
+}
+
+#[derive(Debug, Clone)]
+pub struct SsrLane {
+    // --- architectural config (scfgwi-visible) ---
+    bounds: [u32; SSR_DIMS],  // trip count per dim (stored as count-1+1)
+    strides: [i32; SSR_DIMS], // byte strides
+    repeat: u32,              // serve each datum repeat+1 times
+    base: u32,
+    dims: u8,
+    mode: Mode,
+    // --- sequencing state ---
+    idx: [u32; SSR_DIMS],
+    rep_ctr: u32,
+    exhausted: bool,
+    // --- data movement state ---
+    /// Read mode: values prefetched from TCDM, ready to pop.
+    fifo: VecDeque<f64>,
+    /// Read mode: addresses granted & in flight this cycle get pushed
+    /// next cycle (1-cycle TCDM latency is folded into the prefetch
+    /// pipeline; the FIFO hides it in steady state).
+    /// Write mode: (addr, value) stores waiting for a bank grant.
+    store_q: VecDeque<(u32, f64)>,
+    /// Serve-side repeat of the *current* FIFO head.
+    head_reps_left: u32,
+    // --- statistics ---
+    pub served: u64,
+    pub mem_accesses: u64,
+}
+
+impl Default for SsrLane {
+    fn default() -> Self {
+        SsrLane {
+            bounds: [1; SSR_DIMS],
+            strides: [0; SSR_DIMS],
+            repeat: 0,
+            base: 0,
+            dims: 1,
+            mode: Mode::Idle,
+            idx: [0; SSR_DIMS],
+            rep_ctr: 0,
+            exhausted: false,
+            fifo: VecDeque::new(),
+            store_q: VecDeque::new(),
+            head_reps_left: 0,
+            served: 0,
+            mem_accesses: 0,
+        }
+    }
+}
+
+impl SsrLane {
+    /// Apply a `scfgwi` write of config `word` with value `v`.
+    /// Writing a ReadPtr/WritePtr word *arms* the stream.
+    pub fn cfg_write(&mut self, cfg: SsrCfg, v: u32) {
+        match cfg {
+            SsrCfg::Status => { /* status write: reset */ self.reset() }
+            SsrCfg::Repeat => self.repeat = v,
+            SsrCfg::Bound(d) => self.bounds[d as usize] = v + 1,
+            SsrCfg::Stride(d) => self.strides[d as usize] = v as i32,
+            SsrCfg::ReadPtr(d) => {
+                self.base = v;
+                self.dims = d + 1;
+                self.arm(Mode::Read);
+            }
+            SsrCfg::WritePtr(d) => {
+                self.base = v;
+                self.dims = d + 1;
+                self.arm(Mode::Write);
+            }
+        }
+    }
+
+    /// `scfgri` read-back of a config word.
+    pub fn cfg_read(&self, cfg: SsrCfg) -> u32 {
+        match cfg {
+            SsrCfg::Status => {
+                (matches!(self.mode, Mode::Idle) as u32)
+                    | ((self.exhausted as u32) << 1)
+            }
+            SsrCfg::Repeat => self.repeat,
+            SsrCfg::Bound(d) => self.bounds[d as usize].saturating_sub(1),
+            SsrCfg::Stride(d) => self.strides[d as usize] as u32,
+            SsrCfg::ReadPtr(_) | SsrCfg::WritePtr(_) => self.base,
+        }
+    }
+
+    fn reset(&mut self) {
+        self.idx = [0; SSR_DIMS];
+        self.rep_ctr = 0;
+        self.exhausted = false;
+        self.fifo.clear();
+        self.store_q.clear();
+        self.head_reps_left = 0;
+    }
+
+    fn arm(&mut self, mode: Mode) {
+        self.reset();
+        self.mode = mode;
+    }
+
+    pub fn is_read(&self) -> bool {
+        self.mode == Mode::Read
+    }
+
+    pub fn is_write(&self) -> bool {
+        self.mode == Mode::Write
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.mode != Mode::Idle
+    }
+
+    /// Current generator address (valid when `!exhausted`).
+    fn cur_addr(&self) -> u32 {
+        let mut a = self.base as i64;
+        for d in 0..self.dims as usize {
+            a += (self.idx[d] as i64) * (self.strides[d] as i64);
+        }
+        a as u32
+    }
+
+    /// Advance the affine counters by one datum.
+    fn advance(&mut self) {
+        for d in 0..self.dims as usize {
+            self.idx[d] += 1;
+            if self.idx[d] < self.bounds[d] {
+                return;
+            }
+            self.idx[d] = 0;
+        }
+        self.exhausted = true;
+    }
+
+    // ---------------- read-lane interface ----------------
+
+    /// Does the lane want a TCDM read this cycle? Returns the address.
+    pub fn prefetch_intent(&self) -> Option<u32> {
+        if self.mode == Mode::Read
+            && !self.exhausted
+            && self.fifo.len() < SSR_FIFO_DEPTH
+        {
+            Some(self.cur_addr())
+        } else {
+            None
+        }
+    }
+
+    /// The arbiter granted the prefetch: capture the datum.
+    pub fn prefetch_complete(&mut self, value: f64) {
+        debug_assert!(self.mode == Mode::Read && !self.exhausted);
+        self.fifo.push_back(value);
+        self.mem_accesses += 1;
+        self.advance();
+    }
+
+    /// Is a datum available to pop (i.e. can an FP instruction reading
+    /// this stream register issue this cycle)?
+    pub fn can_pop(&self) -> bool {
+        !self.fifo.is_empty()
+    }
+
+    /// Pop the next stream datum (a register *read* with SSRs enabled).
+    pub fn pop(&mut self) -> f64 {
+        let head = *self.fifo.front().expect("ssr pop on empty fifo");
+        if self.head_reps_left == 0 {
+            self.head_reps_left = self.repeat;
+        } else {
+            self.head_reps_left -= 1;
+        }
+        if self.head_reps_left == 0 {
+            self.fifo.pop_front();
+        }
+        // `served` counts architectural reads (incl. repeats).
+        // (self.served increments below)
+        self.served_inc();
+        head
+    }
+
+    fn served_inc(&mut self) {
+        self.served += 1;
+    }
+
+    // ---------------- write-lane interface ----------------
+
+    /// Can the FPU write this stream register (store queue has room)?
+    pub fn can_push(&self) -> bool {
+        self.mode == Mode::Write
+            && !self.exhausted
+            && self.store_q.len() < SSR_FIFO_DEPTH
+    }
+
+    /// A register *write* with SSRs enabled: queue the store.
+    pub fn push(&mut self, value: f64) {
+        debug_assert!(self.can_push());
+        let addr = self.cur_addr();
+        self.store_q.push_back((addr, value));
+        self.advance();
+        self.served += 1;
+    }
+
+    /// Pending store the lane wants to drain this cycle.
+    pub fn store_intent(&self) -> Option<u32> {
+        self.store_q.front().map(|&(a, _)| a)
+    }
+
+    /// The arbiter granted the store: pop it. Returns (addr, value).
+    pub fn store_complete(&mut self) -> (u32, f64) {
+        self.mem_accesses += 1;
+        self.store_q.pop_front().expect("store grant with empty queue")
+    }
+
+    /// Stream fully drained (all data served / stores issued)?
+    pub fn drained(&self) -> bool {
+        match self.mode {
+            Mode::Idle => true,
+            Mode::Read => true, // read lanes never block completion
+            Mode::Write => self.store_q.is_empty(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::SsrCfg;
+
+    fn armed_1d(n: u32, base: u32, stride: i32) -> SsrLane {
+        let mut l = SsrLane::default();
+        l.cfg_write(SsrCfg::Bound(0), n - 1);
+        l.cfg_write(SsrCfg::Stride(0), stride as u32);
+        l.cfg_write(SsrCfg::ReadPtr(0), base);
+        l
+    }
+
+    #[test]
+    fn linear_read_stream_addresses() {
+        let mut l = armed_1d(4, 0x100, 8);
+        let mut addrs = Vec::new();
+        while let Some(a) = l.prefetch_intent() {
+            addrs.push(a);
+            l.prefetch_complete(a as f64);
+        }
+        assert_eq!(addrs, vec![0x100, 0x108, 0x110, 0x118]);
+    }
+
+    #[test]
+    fn fifo_depth_limits_prefetch() {
+        let mut l = armed_1d(100, 0, 8);
+        for _ in 0..SSR_FIFO_DEPTH {
+            let a = l.prefetch_intent().unwrap();
+            l.prefetch_complete(a as f64);
+        }
+        assert!(l.prefetch_intent().is_none(), "fifo full must stop");
+        let _ = l.pop();
+        assert!(l.prefetch_intent().is_some());
+    }
+
+    #[test]
+    fn pop_order_matches_stream() {
+        let mut l = armed_1d(3, 0, 8);
+        for v in [1.0, 2.0, 3.0] {
+            let _ = l.prefetch_intent().unwrap();
+            l.prefetch_complete(v);
+        }
+        assert_eq!(l.pop(), 1.0);
+        assert_eq!(l.pop(), 2.0);
+        assert_eq!(l.pop(), 3.0);
+        assert_eq!(l.served, 3);
+    }
+
+    #[test]
+    fn repeat_serves_datum_multiple_times() {
+        let mut l = SsrLane::default();
+        l.cfg_write(SsrCfg::Repeat, 3); // serve 4x
+        l.cfg_write(SsrCfg::Bound(0), 1); // 2 data
+        l.cfg_write(SsrCfg::Stride(0), 8);
+        l.cfg_write(SsrCfg::ReadPtr(0), 0);
+        for v in [10.0, 20.0] {
+            let _ = l.prefetch_intent().unwrap();
+            l.prefetch_complete(v);
+        }
+        let got: Vec<f64> = (0..8).map(|_| l.pop()).collect();
+        assert_eq!(got, vec![10.0; 4].into_iter()
+            .chain(vec![20.0; 4]).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn two_dim_stream_strides() {
+        // 2-D: inner bound 2 stride 8, outer bound 3 stride 100.
+        let mut l = SsrLane::default();
+        l.cfg_write(SsrCfg::Bound(0), 1);
+        l.cfg_write(SsrCfg::Stride(0), 8);
+        l.cfg_write(SsrCfg::Bound(1), 2);
+        l.cfg_write(SsrCfg::Stride(1), 100);
+        l.cfg_write(SsrCfg::ReadPtr(1), 0);
+        let mut addrs = Vec::new();
+        while let Some(a) = l.prefetch_intent() {
+            addrs.push(a);
+            l.prefetch_complete(0.0);
+            if l.can_pop() {
+                l.pop(); // keep fifo from filling
+            }
+        }
+        assert_eq!(addrs, vec![0, 8, 100, 108, 200, 208]);
+    }
+
+    #[test]
+    fn write_stream_stores_in_order() {
+        let mut l = SsrLane::default();
+        l.cfg_write(SsrCfg::Bound(0), 2);
+        l.cfg_write(SsrCfg::Stride(0), 8);
+        l.cfg_write(SsrCfg::WritePtr(0), 0x40);
+        assert!(l.can_push());
+        l.push(1.5);
+        l.push(2.5);
+        assert_eq!(l.store_intent(), Some(0x40));
+        assert_eq!(l.store_complete(), (0x40, 1.5));
+        assert_eq!(l.store_complete(), (0x48, 2.5));
+        assert!(l.drained());
+    }
+
+    #[test]
+    fn negative_stride_walks_backwards() {
+        let mut l = armed_1d(3, 0x100, -8);
+        let mut addrs = Vec::new();
+        while let Some(a) = l.prefetch_intent() {
+            addrs.push(a);
+            l.prefetch_complete(0.0);
+        }
+        assert_eq!(addrs, vec![0x100, 0xF8, 0xF0]);
+    }
+}

@@ -1,0 +1,195 @@
+//! Micro-benchmark harness (offline stand-in for criterion) plus the
+//! markdown table printer used by every figure-reproduction bench.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary of one benchmark.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+}
+
+/// Run `f` repeatedly: warm up for `warmup`, then time batches until
+/// `measure` wall time has elapsed (or at least `min_iters`).
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> Sample {
+    bench_cfg(name, Duration::from_millis(200), Duration::from_millis(700), 10, &mut f)
+}
+
+pub fn bench_cfg<F: FnMut()>(
+    name: &str,
+    warmup: Duration,
+    measure: Duration,
+    min_iters: u64,
+    f: &mut F,
+) -> Sample {
+    // Warmup.
+    let start = Instant::now();
+    let mut warm_iters = 0u64;
+    while start.elapsed() < warmup || warm_iters < 3 {
+        f();
+        warm_iters += 1;
+    }
+    // Measure individual iterations.
+    let mut times: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < measure || (times.len() as u64) < min_iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_nanos() as f64);
+        if times.len() > 100_000 {
+            break;
+        }
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = times.len() as f64;
+    let mean = times.iter().sum::<f64>() / n;
+    let median = times[times.len() / 2];
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n;
+    let s = Sample {
+        name: name.to_string(),
+        iters: times.len() as u64,
+        mean_ns: mean,
+        median_ns: median,
+        stddev_ns: var.sqrt(),
+        min_ns: times[0],
+    };
+    println!(
+        "bench {:40} {:>12} /iter (median {}, n={})",
+        s.name,
+        fmt_ns(s.mean_ns),
+        fmt_ns(s.median_ns),
+        s.iters
+    );
+    s
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Markdown table builder for the figure harnesses (prints the same
+/// rows/series the paper reports).
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut w: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n## {}\n\n", self.title));
+        let hdr: Vec<String> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| format!("{:w$}", h, w = w[i]))
+            .collect();
+        out.push_str(&format!("| {} |\n", hdr.join(" | ")));
+        let sep: Vec<String> = w.iter().map(|n| "-".repeat(*n)).collect();
+        out.push_str(&format!("|-{}-|\n", sep.join("-|-")));
+        for r in &self.rows {
+            let cells: Vec<String> = r
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = w[i]))
+                .collect();
+            out.push_str(&format!("| {} |\n", cells.join(" | ")));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format helpers shared by the harnesses.
+pub fn fmt_si(v: f64, unit: &str) -> String {
+    let (scaled, prefix) = if v.abs() >= 1e12 {
+        (v / 1e12, "T")
+    } else if v.abs() >= 1e9 {
+        (v / 1e9, "G")
+    } else if v.abs() >= 1e6 {
+        (v / 1e6, "M")
+    } else if v.abs() >= 1e3 {
+        (v / 1e3, "k")
+    } else {
+        (v, "")
+    };
+    format!("{scaled:.2} {prefix}{unit}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_positive_times() {
+        let mut x = 0u64;
+        let s = bench_cfg(
+            "noop-ish",
+            Duration::from_millis(1),
+            Duration::from_millis(5),
+            5,
+            &mut || {
+                x = x.wrapping_add(1);
+                std::hint::black_box(x);
+            },
+        );
+        assert!(s.iters >= 5);
+        assert!(s.mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new("Fig X", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("## Fig X"));
+        assert!(r.contains("| a  | bb |") || r.contains("| a | bb |"));
+        assert!(r.lines().count() >= 5);
+    }
+
+    #[test]
+    fn si_formatting() {
+        assert_eq!(fmt_si(4.3e12, "flop/s"), "4.30 Tflop/s");
+        assert_eq!(fmt_si(188e9, "flop/s/W"), "188.00 Gflop/s/W");
+        assert_eq!(fmt_si(5.0, "x"), "5.00 x");
+    }
+}

@@ -1,0 +1,108 @@
+//! Minimal CLI argument parser (offline stand-in for clap): subcommands
+//! plus `--key value` / `--flag` options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+    /// `--key value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| {
+                panic!("--{key} expects an integer, got '{v}'")
+            }))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| {
+                panic!("--{key} expects a number, got '{v}'")
+            }))
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Split raw args into (subcommand, Args). Keys that are followed by a
+/// value not starting with `--` are options; otherwise flags.
+pub fn parse(raw: &[String]) -> (Option<String>, Args) {
+    let mut args = Args::default();
+    let mut sub = None;
+    let mut i = 0;
+    while i < raw.len() {
+        let a = &raw[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                args.options.insert(key.to_string(), raw[i + 1].clone());
+                i += 2;
+            } else {
+                args.flags.push(key.to_string());
+                i += 1;
+            }
+        } else {
+            if sub.is_none() {
+                sub = Some(a.clone());
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+    }
+    (sub, args)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let (sub, args) = parse(&v(&[
+            "repro", "fig8", "--points", "9", "--verbose", "--out", "x.md",
+        ]));
+        assert_eq!(sub.as_deref(), Some("repro"));
+        assert_eq!(args.positional, vec!["fig8"]);
+        assert_eq!(args.get("points"), Some("9"));
+        assert_eq!(args.get("out"), Some("x.md"));
+        assert!(args.has_flag("verbose"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let (_, args) = parse(&v(&["x", "--n", "128", "--lr", "0.05"]));
+        assert_eq!(args.get_usize("n", 1), 128);
+        assert_eq!(args.get_f64("lr", 0.1), 0.05);
+        assert_eq!(args.get_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let (sub, args) = parse(&v(&["--help"]));
+        assert!(sub.is_none());
+        assert!(args.has_flag("help"));
+    }
+}

@@ -1,0 +1,9 @@
+//! In-tree utility substrates. The build is fully offline (only the
+//! `xla` + `anyhow` crates are vendored), so JSON, PRNG, property
+//! testing, benchmarking and CLI parsing are implemented here.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

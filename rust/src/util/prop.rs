@@ -1,0 +1,126 @@
+//! Tiny property-based testing harness (offline stand-in for proptest).
+//!
+//! `forall(seed, cases, gen, check)` runs `check` on `cases` generated
+//! inputs; on failure it retries with progressively simpler cases from
+//! the generator (no structural shrinking — generators are expected to
+//! take a `size` hint) and panics with the failing seed + debug dump so
+//! the case can be replayed exactly.
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+/// Generation context: a seeded RNG plus a size hint in [0, 1].
+pub struct Gen {
+    pub rng: Rng,
+    pub size: f64,
+}
+
+impl Gen {
+    /// Integer in [lo, hi] scaled so small sizes prefer small values.
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = ((hi - lo) as f64 * self.size).max(0.0) as i64;
+        lo + self.rng.below(span as u64 + 1) as i64
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.int(lo as i64, hi as i64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64(lo, hi)).collect()
+    }
+}
+
+/// Run a property over `cases` random inputs.
+///
+/// Panics with the failing input's debug representation and replay seed.
+pub fn forall<T, G, C>(seed: u64, cases: usize, mut gen: G, mut check: C)
+where
+    T: Debug,
+    G: FnMut(&mut Gen) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        // Ramp size up over the run: early cases are small/simple.
+        let size = ((case + 1) as f64 / cases as f64).min(1.0);
+        let case_seed = seed.wrapping_mul(1_000_003).wrapping_add(case as u64);
+        let mut g = Gen { rng: Rng::new(case_seed), size };
+        let input = gen(&mut g);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property failed at case {case} (replay seed {case_seed}):\n\
+                 input: {input:?}\nreason: {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            1,
+            50,
+            |g| g.int(0, 100),
+            |&x| {
+                count += 1;
+                if (0..=100).contains(&x) {
+                    Ok(())
+                } else {
+                    Err(format!("{x} out of range"))
+                }
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_input() {
+        forall(
+            2,
+            100,
+            |g| g.int(0, 1000),
+            |&x| {
+                if x < 900 {
+                    Ok(())
+                } else {
+                    Err("too big".to_string())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn size_ramps_up() {
+        let mut maxes = Vec::new();
+        forall(
+            3,
+            10,
+            |g| g.int(0, 1_000_000),
+            |&x| {
+                maxes.push(x);
+                Ok(())
+            },
+        );
+        // Early cases must be much smaller than the full range.
+        assert!(maxes[0] <= 100_000, "first case too large: {}", maxes[0]);
+    }
+}

@@ -1,0 +1,252 @@
+//! Workload descriptors: kernels with FLOP/byte accounting and the DNN
+//! training-step layer sets used by the paper's Figs. 9/10.
+
+/// Numeric precision of a workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    Fp64,
+    Fp32,
+}
+
+/// Layer/kernel classes the paper groups in Fig. 9.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerClass {
+    Conv,
+    Linear,
+    Pool,
+}
+
+/// One layer (or kernel) of a workload, with enough geometry to compute
+/// flops, bytes and operational intensity. Training counts fwd + bwd
+/// (≈3× forward flops for conv/linear).
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub class: LayerClass,
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+impl Layer {
+    pub fn oi(&self) -> f64 {
+        self.flops / self.bytes
+    }
+
+    /// SAME conv layer, NHWC × (R,S,C,K), training step (fwd+bwd ≈ 3×).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        name: &str,
+        n: usize,
+        h: usize,
+        w: usize,
+        c: usize,
+        k: usize,
+        r: usize,
+        s: usize,
+        training: bool,
+    ) -> Layer {
+        let fwd = 2.0 * (n * h * w * k * c * r * s) as f64;
+        let flops = if training { 3.0 * fwd } else { fwd };
+        let act_in = (n * h * w * c) as f64 * 4.0;
+        let act_out = (n * h * w * k) as f64 * 4.0;
+        let weights = (r * s * c * k) as f64 * 4.0;
+        // fwd reads in+w, writes out; bwd reads out grad + in + w,
+        // writes in grad + w grad.
+        let bytes = if training {
+            3.0 * (act_in + act_out) + 3.0 * weights
+        } else {
+            act_in + act_out + weights
+        };
+        Layer { name: name.to_string(), class: LayerClass::Conv, flops, bytes }
+    }
+
+    /// Fully-connected layer.
+    pub fn linear(name: &str, n: usize, d_in: usize, d_out: usize, training: bool) -> Layer {
+        let fwd = 2.0 * (n * d_in * d_out) as f64;
+        let flops = if training { 3.0 * fwd } else { fwd };
+        let weights = (d_in * d_out) as f64 * 4.0;
+        let act = ((n * d_in) + (n * d_out)) as f64 * 4.0;
+        let bytes = if training { 3.0 * (weights + act) } else { weights + act };
+        Layer {
+            name: name.to_string(),
+            class: LayerClass::Linear,
+            flops,
+            bytes,
+        }
+    }
+
+    /// 2×2 max-pool layer: pure data movement (1 compare ≈ 1 flop per
+    /// input element, dominated by bytes).
+    pub fn pool(name: &str, n: usize, h: usize, w: usize, c: usize, training: bool) -> Layer {
+        let elems = (n * h * w * c) as f64;
+        let flops = if training { 2.0 * elems } else { elems };
+        let bytes = if training {
+            2.5 * elems * 4.0
+        } else {
+            1.25 * elems * 4.0
+        };
+        Layer { name: name.to_string(), class: LayerClass::Pool, flops, bytes }
+    }
+}
+
+/// A network = named list of layers.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn total_flops(&self) -> f64 {
+        self.layers.iter().map(|l| l.flops).sum()
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.layers.iter().map(|l| l.bytes).sum()
+    }
+
+    pub fn layers_of(&self, class: LayerClass) -> Vec<&Layer> {
+        self.layers.iter().filter(|l| l.class == class).collect()
+    }
+
+    /// Aggregate OI of a layer-class group (the Fig. 9 grouping).
+    pub fn group_oi(&self, class: LayerClass) -> f64 {
+        let ls = self.layers_of(class);
+        let f: f64 = ls.iter().map(|l| l.flops).sum();
+        let b: f64 = ls.iter().map(|l| l.bytes).sum();
+        if b > 0.0 {
+            f / b
+        } else {
+            0.0
+        }
+    }
+}
+
+/// ResNet-18-like training workload (ImageNet geometry, batch `n`).
+pub fn resnet18_like(n: usize) -> Network {
+    let mut layers = vec![Layer::conv("conv1", n, 112, 112, 3, 64, 7, 7, true)];
+    // 4 stages of 2 basic blocks (2 convs each).
+    let stages: [(usize, usize, usize); 4] =
+        [(56, 64, 64), (28, 64, 128), (14, 128, 256), (7, 256, 512)];
+    for (si, (hw, cin, cout)) in stages.iter().enumerate() {
+        for b in 0..2 {
+            let c_in = if b == 0 { *cin } else { *cout };
+            layers.push(Layer::conv(
+                &format!("s{si}b{b}c1"),
+                n,
+                *hw,
+                *hw,
+                c_in,
+                *cout,
+                3,
+                3,
+                true,
+            ));
+            layers.push(Layer::conv(
+                &format!("s{si}b{b}c2"),
+                n,
+                *hw,
+                *hw,
+                *cout,
+                *cout,
+                3,
+                3,
+                true,
+            ));
+        }
+        layers.push(Layer::pool(&format!("s{si}pool"), n, *hw, *hw, *cout, true));
+    }
+    layers.push(Layer::linear("fc", n, 512, 1000, true));
+    Network { name: format!("resnet18-b{n}"), layers }
+}
+
+/// VGG-ish conv-heavy network.
+pub fn vgg_like(n: usize) -> Network {
+    let mut layers = Vec::new();
+    let cfg: [(usize, usize, usize); 5] =
+        [(224, 3, 64), (112, 64, 128), (56, 128, 256), (28, 256, 512), (14, 512, 512)];
+    for (i, (hw, cin, cout)) in cfg.iter().enumerate() {
+        layers.push(Layer::conv(&format!("c{i}a"), n, *hw, *hw, *cin, *cout, 3, 3, true));
+        layers.push(Layer::conv(&format!("c{i}b"), n, *hw, *hw, *cout, *cout, 3, 3, true));
+        layers.push(Layer::pool(&format!("p{i}"), n, *hw, *hw, *cout, true));
+    }
+    layers.push(Layer::linear("fc1", n, 512 * 7 * 7, 4096, true));
+    layers.push(Layer::linear("fc2", n, 4096, 4096, true));
+    layers.push(Layer::linear("fc3", n, 4096, 1000, true));
+    Network { name: format!("vgg-b{n}"), layers }
+}
+
+/// MLP (linear/pool dominated → memory bound).
+pub fn mlp_like(n: usize) -> Network {
+    let layers = vec![
+        Layer::linear("fc1", n, 784, 1024, true),
+        Layer::linear("fc2", n, 1024, 1024, true),
+        Layer::linear("fc3", n, 1024, 512, true),
+        Layer::linear("fc4", n, 512, 10, true),
+    ];
+    Network { name: format!("mlp-b{n}"), layers }
+}
+
+/// The CNN of the end-to-end example (python/compile/model.py), for
+/// cross-layer accounting.
+pub fn example_cnn(n: usize) -> Network {
+    let layers = vec![
+        Layer::conv("conv1", n, 16, 16, 1, 8, 3, 3, true),
+        Layer::pool("pool1", n, 16, 16, 8, true),
+        Layer::conv("conv2", n, 8, 8, 8, 16, 3, 3, true),
+        Layer::pool("pool2", n, 8, 8, 16, true),
+        Layer::linear("fc1", n, 256, 64, true),
+        Layer::linear("fc2", n, 64, 10, true),
+    ];
+    Network { name: format!("example-cnn-b{n}"), layers }
+}
+
+/// The workload set of Fig. 9/10.
+pub fn dnn_suite(batch: usize) -> Vec<Network> {
+    vec![resnet18_like(batch), vgg_like(batch), mlp_like(batch)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_flops_formula() {
+        // 2*N*H*W*K*C*R*S forward; ×3 training.
+        let l = Layer::conv("t", 1, 8, 8, 4, 16, 3, 3, false);
+        assert_eq!(l.flops, 2.0 * (8 * 8 * 16 * 4 * 9) as f64);
+        let lt = Layer::conv("t", 1, 8, 8, 4, 16, 3, 3, true);
+        assert_eq!(lt.flops, 3.0 * l.flops);
+    }
+
+    #[test]
+    fn conv_is_compute_bound_pool_is_memory_bound() {
+        let conv = Layer::conv("c", 32, 56, 56, 64, 64, 3, 3, true);
+        let pool = Layer::pool("p", 32, 56, 56, 64, true);
+        assert!(conv.oi() > 20.0, "conv OI {}", conv.oi());
+        assert!(pool.oi() < 1.0, "pool OI {}", pool.oi());
+    }
+
+    #[test]
+    fn resnet_conv_group_dominates_flops() {
+        let net = resnet18_like(32);
+        let conv: f64 = net.layers_of(LayerClass::Conv).iter().map(|l| l.flops).sum();
+        assert!(
+            conv / net.total_flops() > 0.95,
+            "DNN workloads are conv-dominated (paper)"
+        );
+    }
+
+    #[test]
+    fn group_oi_separation() {
+        // The Fig. 9 grouping must straddle the system ridge (~8).
+        let net = resnet18_like(32);
+        assert!(net.group_oi(LayerClass::Conv) > 8.0);
+        assert!(net.group_oi(LayerClass::Pool) < 8.0);
+    }
+
+    #[test]
+    fn suite_has_three_networks() {
+        assert_eq!(dnn_suite(32).len(), 3);
+    }
+}

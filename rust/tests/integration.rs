@@ -1,0 +1,269 @@
+//! Integration tests across the three layers.
+//!
+//! These need `make artifacts` to have run (they are skipped with a
+//! message when the artifacts directory is absent, so `cargo test`
+//! stays green in a fresh checkout — CI runs `make test` which builds
+//! artifacts first).
+
+use manticore::asm::kernels::{gemm_ssr_frep, matvec48_fig6};
+use manticore::mem::{ICache, Tcdm};
+use manticore::runtime::{Runtime, Tensor};
+use manticore::snitch::{run_single, CoreConfig, SnitchCore};
+use manticore::util::json;
+use manticore::util::rng::Rng;
+
+fn artifacts_dir() -> Option<&'static str> {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        Some("artifacts")
+    } else {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+/// Every artifact with a baked test vector must reproduce it bit-close
+/// through the Rust PJRT path.
+#[test]
+fn testvectors_roundtrip_through_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    let names = ["matmul_f64_64", "matvec_f64_48", "dot_f64_4096", "axpy_f64_4096"];
+    for name in names {
+        let path = format!("{dir}/testvec/{name}.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let vec = json::parse(&text).unwrap();
+        let meta = rt.meta(name).unwrap().clone();
+        let inputs: Vec<Tensor> = vec
+            .get("inputs")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .zip(&meta.inputs)
+            .map(|(flat, spec)| {
+                let vals = flat.as_f64_vec().unwrap();
+                match spec.dtype.as_str() {
+                    "float64" => Tensor::F64(vals, spec.shape.clone()),
+                    "float32" => Tensor::F32(
+                        vals.iter().map(|&v| v as f32).collect(),
+                        spec.shape.clone(),
+                    ),
+                    other => panic!("dtype {other}"),
+                }
+            })
+            .collect();
+        let outs = rt.execute(name, &inputs).unwrap();
+        let wants = vec.get("outputs").unwrap().as_arr().unwrap();
+        for (got, want) in outs.iter().zip(wants) {
+            let want = want.as_f64_vec().unwrap();
+            let got: Vec<f64> = match got {
+                Tensor::F64(v, _) => v.clone(),
+                Tensor::F32(v, _) => v.iter().map(|&x| x as f64).collect(),
+                other => panic!("unexpected output type {other:?}"),
+            };
+            assert_eq!(got.len(), want.len(), "{name} arity");
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() <= 1e-9 * (1.0 + w.abs()),
+                    "{name}[{i}]: {g} vs {w}"
+                );
+            }
+        }
+    }
+}
+
+/// The cycle-level Snitch simulator and the JAX/Pallas artifact must
+/// agree on the numerics of the same mat-vec problem: two completely
+/// independent implementations of the paper's Fig. 6 kernel.
+#[test]
+fn simulator_agrees_with_pjrt_on_matvec48() {
+    let Some(dir) = artifacts_dir() else { return };
+    const N: usize = 48;
+    let mut rng = Rng::new(11);
+    let a: Vec<f64> = rng.normal_vec(N * N);
+    let x: Vec<f64> = rng.normal_vec(N);
+
+    // PJRT path.
+    let mut rt = Runtime::new(dir).unwrap();
+    let out = rt
+        .execute(
+            "matvec_f64_48",
+            &[
+                Tensor::F64(a.clone(), vec![N, N]),
+                Tensor::F64(x.clone(), vec![N]),
+            ],
+        )
+        .unwrap();
+    let y_pjrt = out[0].as_f64().unwrap().to_vec();
+
+    // Simulator path (SSR+FREP machine code).
+    let a_addr = 0u32;
+    let x_addr = (N * N * 8) as u32;
+    let y_addr = x_addr + (N * 8) as u32 + 8;
+    let mut core = SnitchCore::new(
+        0,
+        CoreConfig::default(),
+        matvec48_fig6(a_addr, x_addr, y_addr),
+    );
+    let mut tcdm = Tcdm::new(128 * 1024, 32);
+    let mut ic = ICache::new(8 * 1024, 10);
+    tcdm.write_f64_slice(a_addr, &a);
+    tcdm.write_f64_slice(x_addr, &x);
+    run_single(&mut core, &mut tcdm, &mut ic, 1_000_000);
+    let y_sim = tcdm.read_f64_slice(y_addr, N);
+
+    for i in 0..N {
+        assert!(
+            (y_pjrt[i] - y_sim[i]).abs() < 1e-9,
+            "y[{i}]: pjrt {} vs sim {}",
+            y_pjrt[i],
+            y_sim[i]
+        );
+    }
+}
+
+/// Same cross-check for a GEMM shape (kernel generality).
+#[test]
+fn simulator_agrees_with_pjrt_on_gemm64() {
+    let Some(dir) = artifacts_dir() else { return };
+    const N: usize = 64;
+    let mut rng = Rng::new(13);
+    let a: Vec<f64> = rng.normal_vec(N * N);
+    let b: Vec<f64> = rng.normal_vec(N * N);
+
+    let mut rt = Runtime::new(dir).unwrap();
+    let out = rt
+        .execute(
+            "matmul_f64_64",
+            &[
+                Tensor::F64(a.clone(), vec![N, N]),
+                Tensor::F64(b.clone(), vec![N, N]),
+            ],
+        )
+        .unwrap();
+    let c_pjrt = out[0].as_f64().unwrap().to_vec();
+
+    let a_addr = 0u32;
+    let b_addr = (N * N * 8) as u32;
+    let c_addr = b_addr + (N * N * 8) as u32 + 8;
+    let mut core = SnitchCore::new(
+        0,
+        CoreConfig::default(),
+        gemm_ssr_frep(N as u32, N as u32, N as u32, a_addr, b_addr, c_addr),
+    );
+    let mut tcdm = Tcdm::new(256 * 1024, 32);
+    let mut ic = ICache::new(8 * 1024, 10);
+    tcdm.write_f64_slice(a_addr, &a);
+    tcdm.write_f64_slice(b_addr, &b);
+    run_single(&mut core, &mut tcdm, &mut ic, 100_000_000);
+    let c_sim = tcdm.read_f64_slice(c_addr, N * N);
+
+    let mut max_err = 0.0f64;
+    for i in 0..N * N {
+        max_err = max_err.max((c_pjrt[i] - c_sim[i]).abs());
+    }
+    assert!(max_err < 1e-9, "max |pjrt - sim| = {max_err}");
+}
+
+/// Short end-to-end training run: loss must drop.
+#[test]
+fn training_loop_reduces_loss() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = manticore::config::Config::default();
+    let rep =
+        manticore::examples_support::train_loop(dir, 25, 32, 0.05, &cfg, 1, false)
+            .unwrap();
+    assert!(
+        rep.final_loss < rep.initial_loss * 0.8,
+        "loss {} -> {}",
+        rep.initial_loss,
+        rep.final_loss
+    );
+    assert!(rep.sim_step_time_s > 0.0 && rep.sim_step_energy_j > 0.0);
+}
+
+/// The conv2d artifact agrees with a host-side direct convolution.
+#[test]
+fn conv2d_artifact_matches_host_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (b, hw, cin, cout) = (8usize, 16usize, 1usize, 8usize);
+    let mut rng = Rng::new(5);
+    let x: Vec<f32> =
+        (0..b * hw * hw * cin).map(|_| rng.normal() as f32).collect();
+    let w: Vec<f32> =
+        (0..9 * cin * cout).map(|_| rng.normal() as f32).collect();
+
+    let mut rt = Runtime::new(dir).unwrap();
+    let out = rt
+        .execute(
+            "conv2d_f32_8x16x1x8",
+            &[
+                Tensor::F32(x.clone(), vec![b, hw, hw, cin]),
+                Tensor::F32(w.clone(), vec![3, 3, cin, cout]),
+            ],
+        )
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+
+    // Direct SAME conv on the host.
+    let idx_x = |n: usize, i: i64, j: i64, c: usize| -> f32 {
+        if i < 0 || j < 0 || i >= hw as i64 || j >= hw as i64 {
+            0.0
+        } else {
+            x[((n * hw + i as usize) * hw + j as usize) * cin + c]
+        }
+    };
+    let mut max_err = 0.0f32;
+    for n in 0..b {
+        for i in 0..hw {
+            for j in 0..hw {
+                for f in 0..cout {
+                    let mut acc = 0.0f32;
+                    for di in 0..3i64 {
+                        for dj in 0..3i64 {
+                            for c in 0..cin {
+                                let wv = w[((di as usize * 3 + dj as usize)
+                                    * cin
+                                    + c)
+                                    * cout
+                                    + f];
+                                acc += idx_x(
+                                    n,
+                                    i as i64 + di - 1,
+                                    j as i64 + dj - 1,
+                                    c,
+                                ) * wv;
+                            }
+                        }
+                    }
+                    let g = got[((n * hw + i) * hw + j) * cout + f];
+                    max_err = max_err.max((g - acc).abs());
+                }
+            }
+        }
+    }
+    assert!(max_err < 1e-3, "conv2d max err {max_err}");
+}
+
+/// CLI plumbing: config presets + runtime manifest listing.
+#[test]
+fn runtime_lists_all_manifest_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    let names: Vec<&str> =
+        rt.artifacts().iter().map(|a| a.name.as_str()).collect();
+    for want in [
+        "matmul_f64_64",
+        "matmul_f64_128",
+        "matmul_f32_256",
+        "matvec_f64_48",
+        "dot_f64_4096",
+        "axpy_f64_4096",
+        "conv2d_f32_8x16x1x8",
+        "cnn_init",
+        "cnn_train_step",
+        "cnn_predict",
+    ] {
+        assert!(names.contains(&want), "{want} missing from manifest");
+    }
+}

@@ -1,0 +1,198 @@
+//! Cross-module property tests (the heavier ones that don't belong in
+//! unit-test modules): ISA encode/decode over randomized fields, SSR
+//! stream algebra, and assembled-program execution invariants.
+
+use manticore::isa::{decode, encode, FCmp, FReg, IReg, Inst};
+use manticore::util::prop::{forall, Gen};
+
+fn arb_ireg(g: &mut Gen) -> IReg {
+    IReg(g.usize(0, 31) as u8)
+}
+
+fn arb_freg(g: &mut Gen) -> FReg {
+    FReg(g.usize(0, 31) as u8)
+}
+
+/// Immediates constrained to each format's encodable range.
+fn arb_inst(g: &mut Gen) -> Inst {
+    use Inst::*;
+    let i12 = |g: &mut Gen| g.int(-2048, 2047) as i32;
+    let b13 = |g: &mut Gen| (g.int(-2048, 2047) * 2) as i32;
+    let j21 = |g: &mut Gen| (g.int(-524288, 524287) * 2) as i32;
+    let u20 = |g: &mut Gen| ((g.int(0, 0xFFFFF) as i32) << 12);
+    match g.usize(0, 23) {
+        0 => Addi { rd: arb_ireg(g), rs1: arb_ireg(g), imm: i12(g) },
+        1 => Add { rd: arb_ireg(g), rs1: arb_ireg(g), rs2: arb_ireg(g) },
+        2 => Sub { rd: arb_ireg(g), rs1: arb_ireg(g), rs2: arb_ireg(g) },
+        3 => Lui { rd: arb_ireg(g), imm: u20(g) },
+        4 => Lw { rd: arb_ireg(g), rs1: arb_ireg(g), imm: i12(g) },
+        5 => Sw { rs1: arb_ireg(g), rs2: arb_ireg(g), imm: i12(g) },
+        6 => Beq { rs1: arb_ireg(g), rs2: arb_ireg(g), imm: b13(g) },
+        7 => Bne { rs1: arb_ireg(g), rs2: arb_ireg(g), imm: b13(g) },
+        8 => Bltu { rs1: arb_ireg(g), rs2: arb_ireg(g), imm: b13(g) },
+        9 => Jal { rd: arb_ireg(g), imm: j21(g) },
+        10 => Slli { rd: arb_ireg(g), rs1: arb_ireg(g), shamt: g.usize(0, 31) as u8 },
+        11 => Srai { rd: arb_ireg(g), rs1: arb_ireg(g), shamt: g.usize(0, 31) as u8 },
+        12 => Mul { rd: arb_ireg(g), rs1: arb_ireg(g), rs2: arb_ireg(g) },
+        13 => Fld { rd: arb_freg(g), rs1: arb_ireg(g), imm: i12(g) },
+        14 => Fsd { rs1: arb_ireg(g), rs2: arb_freg(g), imm: i12(g) },
+        15 => FmaddD {
+            rd: arb_freg(g),
+            rs1: arb_freg(g),
+            rs2: arb_freg(g),
+            rs3: arb_freg(g),
+        },
+        16 => FaddD { rd: arb_freg(g), rs1: arb_freg(g), rs2: arb_freg(g) },
+        17 => FmulD { rd: arb_freg(g), rs1: arb_freg(g), rs2: arb_freg(g) },
+        18 => FsgnjD { rd: arb_freg(g), rs1: arb_freg(g), rs2: arb_freg(g) },
+        19 => Fcmp {
+            op: *g.pick(&[FCmp::Eq, FCmp::Lt, FCmp::Le]),
+            rd: arb_ireg(g),
+            rs1: arb_freg(g),
+            rs2: arb_freg(g),
+        },
+        20 => FrepO { rpt: arb_ireg(g), n_instr: g.usize(1, 16) as u8 },
+        21 => Scfgwi {
+            rs1: arb_ireg(g),
+            ssr: g.usize(0, 2) as u8,
+            word: g.usize(0, 31) as u8,
+        },
+        22 => FcvtDW { rd: arb_freg(g), rs1: arb_ireg(g) },
+        _ => FmvDX { rd: arb_freg(g), rs1: arb_ireg(g) },
+    }
+}
+
+#[test]
+fn encode_decode_roundtrips_for_random_instructions() {
+    forall(0x15A, 500, arb_inst, |inst| {
+        let w = encode(*inst);
+        match decode(w) {
+            Ok(back) if back == *inst => Ok(()),
+            Ok(back) => Err(format!("{inst:?} -> {w:#010x} -> {back:?}")),
+            Err(e) => Err(format!("{inst:?} -> {w:#010x}: {e}")),
+        }
+    });
+}
+
+#[test]
+fn decode_never_panics_on_arbitrary_words() {
+    forall(
+        0xF00D,
+        2000,
+        |g| g.rng.next_u64() as u32,
+        |&w| {
+            let _ = decode(w); // Ok or Err, but no panic
+            Ok(())
+        },
+    );
+}
+
+/// Executing a random straight-line integer program must terminate and
+/// keep x0 == 0 (architectural invariant).
+#[test]
+fn straight_line_programs_halt_and_preserve_x0() {
+    use manticore::mem::{ICache, Tcdm};
+    use manticore::snitch::{run_single, CoreConfig, SnitchCore};
+    forall(
+        0xACE,
+        60,
+        |g| {
+            let len = g.usize(1, 40);
+            let mut prog: Vec<Inst> = (0..len)
+                .map(|_| {
+                    // Int ALU only (no branches/memory): always halts.
+                    match g.usize(0, 4) {
+                        0 => Inst::Addi {
+                            rd: arb_ireg(g),
+                            rs1: arb_ireg(g),
+                            imm: g.int(-100, 100) as i32,
+                        },
+                        1 => Inst::Add {
+                            rd: arb_ireg(g),
+                            rs1: arb_ireg(g),
+                            rs2: arb_ireg(g),
+                        },
+                        2 => Inst::Sub {
+                            rd: arb_ireg(g),
+                            rs1: arb_ireg(g),
+                            rs2: arb_ireg(g),
+                        },
+                        3 => Inst::Slli {
+                            rd: arb_ireg(g),
+                            rs1: arb_ireg(g),
+                            shamt: g.usize(0, 31) as u8,
+                        },
+                        _ => Inst::Mul {
+                            rd: arb_ireg(g),
+                            rs1: arb_ireg(g),
+                            rs2: arb_ireg(g),
+                        },
+                    }
+                })
+                .collect();
+            prog.push(Inst::Halt);
+            prog
+        },
+        |prog| {
+            let mut core =
+                SnitchCore::new(0, CoreConfig::default(), prog.clone());
+            let mut tcdm = Tcdm::new(4096, 32);
+            let mut ic = ICache::new(1024, 10);
+            let cycles = run_single(&mut core, &mut tcdm, &mut ic, 100_000);
+            if core.ireg(IReg(0)) != 0 {
+                return Err("x0 modified".into());
+            }
+            if cycles == 0 {
+                return Err("no cycles elapsed".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The offload manager conserves jobs: everything submitted completes
+/// exactly once, regardless of job mix.
+#[test]
+fn offload_manager_conserves_jobs() {
+    use manticore::ariane::{Job, OffloadManager};
+    forall(
+        0x0FF1,
+        40,
+        |g| {
+            let n_clusters = g.usize(1, 16);
+            let jobs: Vec<Job> = (0..g.usize(1, 12))
+                .map(|i| Job {
+                    id: 0,
+                    name: format!("j{i}"),
+                    clusters_needed: g.usize(1, n_clusters),
+                    compute_cycles: g.usize(100, 100_000) as u64,
+                    dma_in_bytes: g.usize(0, 1 << 20) as u64,
+                    dma_out_bytes: g.usize(0, 1 << 18) as u64,
+                })
+                .collect();
+            (n_clusters, jobs)
+        },
+        |(n_clusters, jobs)| {
+            let mut m = OffloadManager::new(*n_clusters);
+            for j in jobs {
+                m.submit(j.clone());
+            }
+            m.drain(10_000_000_000);
+            if m.completed().len() != jobs.len() {
+                return Err(format!(
+                    "{} submitted, {} completed",
+                    jobs.len(),
+                    m.completed().len()
+                ));
+            }
+            let mut ids: Vec<u64> =
+                m.completed().iter().map(|r| r.id).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            if ids.len() != jobs.len() {
+                return Err("duplicate completion ids".into());
+            }
+            Ok(())
+        },
+    );
+}
