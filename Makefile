@@ -1,0 +1,59 @@
+# Top-level driver. `make help` lists targets.
+#
+# The Rust build is hermetic (no network, vendored deps, NativeBackend
+# HLO interpreter by default). `make artifacts` needs Python + JAX and
+# regenerates artifacts/ from the L2 graphs; a pregenerated copy of the
+# artifacts is checked in so build/test work from a fresh clone.
+
+CARGO ?= cargo
+PYTHON ?= python3
+BENCH_OUT ?= bench-results
+
+.PHONY: help build test artifacts fmt fmt-check clippy bench bench-smoke \
+        pytest clean
+
+help:
+	@echo "targets:"
+	@echo "  build        cargo build --release (default features, offline)"
+	@echo "  test         cargo test -q"
+	@echo "  artifacts    regenerate artifacts/ from the L2 JAX graphs"
+	@echo "  fmt          cargo fmt"
+	@echo "  fmt-check    cargo fmt --check"
+	@echo "  clippy       cargo clippy --all-targets -- -D warnings"
+	@echo "  bench        run every bench target"
+	@echo "  bench-smoke  perf_hotpath + ablations with --smoke, JSON to $(BENCH_OUT)/"
+	@echo "  pytest       python L1/L2 tests (skip cleanly when JAX absent)"
+	@echo "  clean        remove build products"
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
+
+fmt:
+	$(CARGO) fmt
+
+fmt-check:
+	$(CARGO) fmt --check
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+bench:
+	$(CARGO) bench
+
+bench-smoke:
+	mkdir -p $(BENCH_OUT)
+	$(CARGO) bench --bench perf_hotpath -- --smoke --json $(BENCH_OUT)/perf_hotpath.json
+	$(CARGO) bench --bench ablations -- --smoke --json $(BENCH_OUT)/ablations.json
+
+pytest:
+	$(PYTHON) -m pytest python/tests -q
+
+clean:
+	$(CARGO) clean
+	rm -rf $(BENCH_OUT)

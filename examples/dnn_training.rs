@@ -3,11 +3,12 @@
 //!
 //! Every GEMM of every training step — conv im2col, linear, and all
 //! backward passes — executes through the AOT'd JAX+Pallas training-step
-//! artifact on PJRT, while the Manticore system model prices each step
-//! in simulated time and energy. The loss curve is written to
-//! `dnn_training_loss.csv` and summarised in EXPERIMENTS.md.
+//! artifact on the runtime backend (native HLO interpreter by default),
+//! while the Manticore system model prices each step in simulated time
+//! and energy. The loss curve is written to `dnn_training_loss.csv`
+//! and summarised in EXPERIMENTS.md.
 //!
-//! Run: `make artifacts && cargo run --release --example dnn_training -- \
+//! Run: `cargo run --release --example dnn_training -- \
 //!        [--steps 300] [--lr 0.05] [--seed 0]`
 
 use anyhow::Result;

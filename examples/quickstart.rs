@@ -1,13 +1,16 @@
 //! Quickstart: the three layers in one page.
 //!
-//! 1. Load an AOT-compiled JAX/Pallas GEMM artifact and execute it via
-//!    PJRT (real numerics, Python not involved at runtime).
+//! 1. Load an AOT-compiled JAX/Pallas GEMM artifact and execute it on
+//!    the runtime backend (real numerics, Python not involved at
+//!    runtime; native HLO interpreter by default, PJRT with the `xla`
+//!    feature).
 //! 2. Run the same GEMM shape on the cycle-level Snitch cluster
 //!    simulator (the paper's SSR+FREP kernel).
 //! 3. Price the full-size version on the 4096-core system model
 //!    (time, energy, efficiency).
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Run: `cargo run --release --example quickstart` (artifacts are
+//! checked in; `make artifacts` regenerates them)
 
 use anyhow::Result;
 use manticore::asm::kernels::gemm_ssr_frep;
@@ -23,7 +26,7 @@ fn main() -> Result<()> {
     let cfg = Config::default();
 
     // ---- 1. Real numerics through the AOT artifact ------------------
-    println!("== L2/L1: AOT'd JAX+Pallas matmul via PJRT ==");
+    println!("== L2/L1: AOT'd JAX+Pallas matmul on the runtime backend ==");
     let mut rt = Runtime::new("artifacts")?;
     let mut rng = Rng::new(7);
     let a: Vec<f64> = rng.normal_vec(64 * 64);
@@ -39,9 +42,10 @@ fn main() -> Result<()> {
     // spot-check one element against a host-side dot product
     let want: f64 = (0..64).map(|l| a[l] * b[l * 64]).sum();
     println!(
-        "  c[0][0] = {:.6} (host check {:.6}), platform = {}",
+        "  c[0][0] = {:.6} (host check {:.6}), backend = {} ({})",
         c[0],
         want,
+        rt.backend_name(),
         rt.platform()
     );
 

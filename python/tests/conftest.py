@@ -1,3 +1,21 @@
-import jax
+"""Shared test config.
 
-jax.config.update("jax_enable_x64", True)
+JAX is optional: modules that need it call
+`pytest.importorskip("jax")` themselves (skip-not-fail, mirroring the
+artifacts-missing skip pattern in rust/tests/integration.rs), so the
+JAX-free tests — e.g. the test_hlo_interp.py testvector round-trip —
+still run on a bare numpy install.
+"""
+import os
+import sys
+
+# Make `compile` (python/compile) and `tools` importable when pytest
+# runs from the repository root (CI: `pytest python/tests -q`).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+try:
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+except ImportError:
+    pass

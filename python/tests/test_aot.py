@@ -4,9 +4,10 @@ arity == manifest arity)."""
 import json
 import re
 
+import pytest
+pytest.importorskip("jax", reason="JAX not installed")
 import jax
 import numpy as np
-import pytest
 
 from compile import aot
 

@@ -1,7 +1,10 @@
 """conv2d kernel + L2 model: shapes, gradients, and a short training run."""
+import pytest
+pytest.importorskip("jax", reason="JAX not installed")
 import jax
 import jax.numpy as jnp
 import numpy as np
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from compile import model

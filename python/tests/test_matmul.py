@@ -3,10 +3,12 @@
 Hypothesis sweeps shapes and dtypes; fixed cases pin the paper-relevant
 configurations (the 48x48 mat-vec of Fig. 6, TCDM-tile-sized blocks).
 """
+import pytest
+pytest.importorskip("jax", reason="JAX not installed")
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import matmul, matmul_grad, ref

@@ -1,7 +1,9 @@
 """dot / axpy / pooling Pallas kernels vs oracles (hypothesis sweeps)."""
+import pytest
+pytest.importorskip("jax", reason="JAX not installed")
 import jax.numpy as jnp
 import numpy as np
-import pytest
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import axpy, dot, maxpool2x2, ref

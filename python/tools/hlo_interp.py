@@ -1,0 +1,768 @@
+"""Reference interpreter for the HLO-text subset emitted by the L2 graphs.
+
+This is the executable specification of the Rust `NativeBackend`
+(rust/src/runtime/native/): same parser structure, same evaluation
+semantics, same storage model (flat row-major f64 buffer per array,
+dtype-aware wrap/round after every op). The Rust code is a direct
+transliteration; when the two disagree, this file plus a JAX ground
+truth decides which is wrong.
+
+Usage:
+    python -m tools.hlo_interp artifacts/matmul_f64_64.hlo.txt \
+        --inputs f64:64,64 f64:64,64
+
+Also used by python/tests/test_hlo_interp.py to cross-check every
+artifact against JAX numerics.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from dataclasses import dataclass, field
+
+import numpy as np
+
+# --------------------------------------------------------------------------
+# Shapes and values
+# --------------------------------------------------------------------------
+
+INT_WIDTH = {
+    "pred": 1, "s8": 8, "s16": 16, "s32": 32, "s64": 64,
+    "u8": 8, "u16": 16, "u32": 32, "u64": 64,
+}
+FLOAT_TYPES = ("f16", "bf16", "f32", "f64")
+
+
+@dataclass
+class Shape:
+    ty: str = ""                    # "" for tuple shapes
+    dims: tuple = ()
+    tuple_shapes: list = field(default_factory=list)
+
+    @property
+    def is_tuple(self):
+        return self.ty == ""
+
+    def elems(self):
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+
+@dataclass
+class Arr:
+    ty: str
+    dims: tuple
+    data: np.ndarray                # flat float64, row-major
+
+    def nd(self):
+        return self.data.reshape(self.dims)
+
+
+def arr(ty, dims, flat):
+    return Arr(ty, tuple(dims), np.asarray(flat, dtype=np.float64).ravel())
+
+
+def finalize(ty, data):
+    """Dtype-aware canonicalisation after an op: round f32, wrap ints."""
+    data = np.asarray(data, dtype=np.float64)
+    if ty == "f32":
+        return data.astype(np.float32).astype(np.float64)
+    if ty in ("f16",):
+        return data.astype(np.float16).astype(np.float64)
+    if ty == "pred":
+        return (data != 0.0).astype(np.float64)
+    w = INT_WIDTH.get(ty)
+    if w is not None and w > 1:
+        m = 1 << w
+        i = np.mod(np.trunc(data), m)
+        if ty.startswith("s"):
+            i = np.where(i >= m // 2, i - m, i)
+        else:
+            i = np.where(i < 0, i + m, i)
+        return i.astype(np.float64)
+    return data
+
+
+# --------------------------------------------------------------------------
+# Parser
+# --------------------------------------------------------------------------
+
+@dataclass
+class Instr:
+    name: str
+    shape: Shape
+    op: str
+    operands: list
+    attrs: dict
+    literal: str | None = None      # raw constant payload
+    root: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list
+    root: str
+
+
+@dataclass
+class Module:
+    name: str
+    entry: str
+    computations: dict
+
+
+def _strip_comments(s):
+    return re.sub(r"/\*.*?\*/", "", s)
+
+
+def _split_top(s, seps=","):
+    """Split on top-level separators (outside (), {} and [])."""
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        if ch in seps and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    out.append("".join(cur))
+    return [p.strip() for p in out if p.strip()]
+
+
+def parse_shape(s):
+    s = s.strip()
+    if s.startswith("("):
+        inner = s[1:s.rindex(")")]
+        return Shape(tuple_shapes=[parse_shape(p) for p in _split_top(inner)])
+    m = re.match(r"([a-z0-9]+)\[([\d,]*)\](?:\{[^}]*\})?$", s)
+    if not m:
+        raise ValueError(f"bad shape {s!r}")
+    dims = tuple(int(d) for d in m.group(2).split(",") if d)
+    return Shape(ty=m.group(1), dims=dims)
+
+
+def _scan_balanced(s, i):
+    """s[i] == '(': return (content, index after closing paren)."""
+    assert s[i] == "("
+    depth, j = 0, i
+    while j < len(s):
+        if s[j] == "(":
+            depth += 1
+        elif s[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return s[i + 1:j], j + 1
+        j += 1
+    raise ValueError(f"unbalanced parens in {s!r}")
+
+
+def parse_instr(line):
+    line = line.strip()
+    root = line.startswith("ROOT ")
+    if root:
+        line = line[5:]
+    name, rhs = line.split(" = ", 1)
+    name = name.strip().lstrip("%")
+    rhs = rhs.strip()
+    # Shape: tuple type -> balanced parens; else up to first space.
+    if rhs.startswith("("):
+        inner, j = _scan_balanced(rhs, 0)
+        shape = parse_shape(rhs[:j])
+        rhs = rhs[j:].strip()
+    else:
+        sp = rhs.index(" ")
+        shape = parse_shape(rhs[:sp])
+        rhs = rhs[sp + 1:].strip()
+    par = rhs.index("(")
+    op = rhs[:par].strip()
+    content, j = _scan_balanced(rhs, par)
+    literal = None
+    if op == "constant":
+        literal = content.strip()
+        operands = []
+    else:
+        operands = [p.split()[-1].lstrip("%") for p in _split_top(content)]
+    attrs = {}
+    rest = rhs[j:].strip()
+    if rest.startswith(","):
+        for part in _split_top(rest[1:]):
+            if "=" in part:
+                k, v = part.split("=", 1)
+                attrs[k.strip()] = v.strip()
+    return Instr(name, shape, op, operands, attrs, literal, root)
+
+
+def parse_module(text):
+    text = _strip_comments(text)
+    lines = text.splitlines()
+    mod = Module(name="", entry="", computations={})
+    m = re.match(r"HloModule\s+([\w.-]+)", lines[0].strip())
+    if m:
+        mod.name = m.group(1)
+    cur_name, cur_instrs, is_entry = None, [], False
+    for line in lines[1:]:
+        s = line.strip()
+        if not s:
+            continue
+        if cur_name is None:
+            hm = re.match(r"(ENTRY\s+)?%?([\w.-]+)\s.*\{$", s)
+            if hm:
+                cur_name = hm.group(2)
+                is_entry = bool(hm.group(1))
+                cur_instrs = []
+            continue
+        if s == "}":
+            root = next(
+                (i.name for i in cur_instrs if i.root),
+                cur_instrs[-1].name if cur_instrs else "",
+            )
+            mod.computations[cur_name] = Computation(cur_name, cur_instrs, root)
+            if is_entry:
+                mod.entry = cur_name
+            cur_name = None
+            continue
+        if " = " in s:
+            cur_instrs.append(parse_instr(s))
+    if not mod.entry:
+        raise ValueError("no ENTRY computation found")
+    return mod
+
+
+def parse_int_list(s):
+    s = s.strip()
+    if s.startswith("{"):
+        s = s[1:-1]
+    return [int(x) for x in s.replace(" ", "").split(",") if x]
+
+
+def parse_literal(ty, text):
+    toks = re.split(r"[\s{},]+", text)
+    vals = []
+    for t in toks:
+        if not t:
+            continue
+        tl = t.lower()
+        if tl == "true":
+            vals.append(1.0)
+        elif tl == "false":
+            vals.append(0.0)
+        elif tl == "nan" or tl == "-nan":
+            vals.append(float("nan"))
+        elif tl == "inf":
+            vals.append(float("inf"))
+        elif tl == "-inf":
+            vals.append(float("-inf"))
+        else:
+            vals.append(float(t))
+    return vals
+
+
+# --------------------------------------------------------------------------
+# Evaluator
+# --------------------------------------------------------------------------
+
+MAX_WHILE_ITERS = 1_000_000
+
+UNARY = {
+    "negate": lambda x: -x,
+    "abs": np.abs,
+    "exponential": np.exp,
+    "log": np.log,
+    "log-plus-one": np.log1p,
+    "sqrt": np.sqrt,
+    "rsqrt": lambda x: 1.0 / np.sqrt(x),
+    "tanh": np.tanh,
+    "floor": np.floor,
+    "ceil": np.ceil,
+    "sign": np.sign,
+    "not": lambda x: (x == 0).astype(np.float64),
+    "is-finite": lambda x: np.isfinite(x).astype(np.float64),
+    "copy": lambda x: x,
+    "convert": lambda x: x,          # finalize() does the cast
+}
+
+BINARY = {
+    "add": lambda a, b: a + b,
+    "subtract": lambda a, b: a - b,
+    "multiply": lambda a, b: a * b,
+    "divide": lambda a, b: np.divide(a, b),
+    "maximum": np.maximum,
+    "minimum": np.minimum,
+    "power": np.power,
+    "remainder": np.fmod,
+    "and": lambda a, b: ((a != 0) & (b != 0)).astype(np.float64),
+    "or": lambda a, b: ((a != 0) | (b != 0)).astype(np.float64),
+    "xor": lambda a, b: ((a != 0) ^ (b != 0)).astype(np.float64),
+}
+
+COMPARE = {
+    "EQ": lambda a, b: a == b,
+    "NE": lambda a, b: a != b,
+    "LT": lambda a, b: a < b,
+    "LE": lambda a, b: a <= b,
+    "GT": lambda a, b: a > b,
+    "GE": lambda a, b: a >= b,
+}
+
+
+def _bitop(op, ty, a, b):
+    """Integer-domain bit ops (shifts, and/or/xor on non-pred ints).
+
+    Shift amounts outside [0, w) yield 0 (logical/left) or the
+    sign-fill (arithmetic), matching the Rust evaluator.
+    """
+    w = INT_WIDTH[ty]
+    mask = (1 << w) - 1
+    ai = a.astype(np.int64) & mask
+    bi = b.astype(np.int64)      # raw: shift amounts range-checked
+    bm = bi & mask               # masked: two's complement for bitwise
+    oob = (bi < 0) | (bi >= w)
+    bs = np.clip(bi, 0, w - 1)
+    if op == "shift-left":
+        r = np.where(oob, 0, np.left_shift(ai, bs)) & mask
+    elif op == "shift-right-logical":
+        r = np.where(oob, 0, np.right_shift(ai, bs))
+    elif op == "shift-right-arithmetic":
+        sa = np.where(ai >= (1 << (w - 1)), ai - (1 << w), ai)
+        r = np.right_shift(sa, bs) & mask
+    elif op == "and":
+        r = ai & bm
+    elif op == "or":
+        r = ai | bm
+    elif op == "xor":
+        r = ai ^ bm
+    else:
+        raise ValueError(op)
+    return r.astype(np.float64)
+
+
+def _bitcast(src_ty, dst_ty, data):
+    np_src = {"f32": np.float32, "f64": np.float64, "u32": np.uint32,
+              "u64": np.uint64, "s32": np.int32, "s64": np.int64,
+              "u16": np.uint16, "s16": np.int16}[src_ty]
+    np_dst = {"f32": np.float32, "f64": np.float64, "u32": np.uint32,
+              "u64": np.uint64, "s32": np.int32, "s64": np.int64,
+              "u16": np.uint16, "s16": np.int16}[dst_ty]
+    return data.astype(np_src).view(np_dst).astype(np.float64)
+
+
+class Evaluator:
+    def __init__(self, module):
+        self.m = module
+
+    def run(self, args):
+        entry = self.m.computations[self.m.entry]
+        n_params = sum(1 for i in entry.instrs if i.op == "parameter")
+        if len(args) != n_params:
+            raise ValueError(
+                f"entry '{entry.name}' expects {n_params} inputs, "
+                f"got {len(args)}")
+        return self.eval_computation(entry, args)
+
+    def eval_computation(self, comp, args):
+        env = {}
+        for ins in comp.instrs:
+            env[ins.name] = self.eval_instr(ins, args, env)
+        return env[comp.root]
+
+    def _finalize_value(self, shape, val):
+        if shape.is_tuple:
+            return val
+        return Arr(shape.ty, shape.dims, finalize(shape.ty, val.data))
+
+    def eval_instr(self, ins, args, env):
+        op = ins.op
+        sh = ins.shape
+        get = lambda i: env[ins.operands[i]]
+
+        if op == "parameter":
+            idx = int(ins.operands[0]) if ins.operands else 0
+            return args[idx]
+        if op == "constant":
+            vals = parse_literal(sh.ty, ins.literal or "")
+            if len(vals) == 1 and sh.elems() > 1:
+                vals = vals * sh.elems()
+            if len(vals) != sh.elems():
+                raise ValueError(
+                    f"constant arity {len(vals)} != shape {sh.dims}")
+            return self._finalize_value(sh, arr(sh.ty, sh.dims, vals))
+        if op == "tuple":
+            return [env[o] for o in ins.operands]
+        if op == "get-tuple-element":
+            return get(0)[int(ins.attrs["index"])]
+        if op == "call":
+            comp = self.m.computations[ins.attrs["to_apply"]]
+            return self.eval_computation(comp, [env[o] for o in ins.operands])
+        if op == "while":
+            cond = self.m.computations[ins.attrs["condition"]]
+            body = self.m.computations[ins.attrs["body"]]
+            state = get(0)
+            for _ in range(MAX_WHILE_ITERS):
+                c = self.eval_computation(cond, [state])
+                if c.data[0] == 0.0:
+                    return state
+                state = self.eval_computation(body, [state])
+            raise RuntimeError("while iteration cap exceeded")
+        if op == "conditional":
+            sel = get(0)
+            if "branch_computations" in ins.attrs:
+                branches = [
+                    b.strip() for b in
+                    ins.attrs["branch_computations"][1:-1].split(",")
+                ]
+                k = int(sel.data[0])
+                k = max(0, min(k, len(branches) - 1))
+                comp = self.m.computations[branches[k]]
+                return self.eval_computation(comp, [get(1 + k)])
+            ct = self.m.computations[ins.attrs["true_computation"]]
+            cf = self.m.computations[ins.attrs["false_computation"]]
+            if sel.data[0] != 0.0:
+                return self.eval_computation(ct, [get(1)])
+            return self.eval_computation(cf, [get(2)])
+
+        if op in UNARY:
+            x = get(0)
+            if op == "convert" and sh.ty in INT_WIDTH and x.ty in FLOAT_TYPES:
+                out = np.trunc(x.data)        # float->int: round toward zero
+            else:
+                out = UNARY[op](x.data)
+            return self._finalize_value(sh, Arr(sh.ty, sh.dims, out))
+        if op in ("shift-left", "shift-right-logical",
+                  "shift-right-arithmetic"):
+            a, b = get(0), get(1)
+            return self._finalize_value(
+                sh, Arr(sh.ty, sh.dims, _bitop(op, sh.ty, a.data, b.data)))
+        if op in BINARY:
+            a, b = get(0), get(1)
+            if op in ("and", "or", "xor") and sh.ty != "pred":
+                out = _bitop(op, sh.ty, a.data, b.data)
+            else:
+                out = BINARY[op](a.data, b.data)
+            return self._finalize_value(sh, Arr(sh.ty, sh.dims, out))
+        if op == "compare":
+            a, b = get(0), get(1)
+            out = COMPARE[ins.attrs["direction"]](a.data, b.data)
+            return Arr("pred", sh.dims, out.astype(np.float64))
+        if op == "select":
+            p, t, f = get(0), get(1), get(2)
+            if p.data.size == 1:
+                out = t.data if p.data[0] != 0.0 else f.data
+            else:
+                out = np.where(p.data != 0.0, t.data, f.data)
+            return self._finalize_value(sh, Arr(sh.ty, sh.dims, out))
+        if op == "bitcast-convert":
+            x = get(0)
+            return Arr(sh.ty, sh.dims, _bitcast(x.ty, sh.ty, x.data))
+
+        if op == "broadcast":
+            x = get(0)
+            bdims = parse_int_list(ins.attrs.get("dimensions", "{}"))
+            src = x.nd()
+            # Place operand dims at positions bdims, expand the rest.
+            shape = [1] * len(sh.dims)
+            for i, d in enumerate(bdims):
+                shape[d] = x.dims[i]
+            out = np.broadcast_to(src.reshape(shape), sh.dims)
+            return Arr(sh.ty, sh.dims, out.ravel().astype(np.float64))
+        if op == "reshape":
+            x = get(0)
+            return Arr(sh.ty, sh.dims, x.data.copy())
+        if op == "transpose":
+            x = get(0)
+            perm = parse_int_list(ins.attrs["dimensions"])
+            out = np.transpose(x.nd(), perm)
+            return Arr(sh.ty, sh.dims, out.ravel().astype(np.float64))
+        if op == "slice":
+            x = get(0)
+            spec = ins.attrs["slice"]
+            ranges = re.findall(r"\[(\d+):(\d+)(?::(\d+))?\]", spec)
+            sl = tuple(
+                slice(int(a), int(b), int(c) if c else 1)
+                for a, b, c in ranges
+            )
+            out = x.nd()[sl]
+            return Arr(sh.ty, sh.dims, out.ravel().astype(np.float64))
+        if op == "concatenate":
+            d = int(ins.attrs["dimensions"].strip("{}"))
+            parts = [env[o].nd() for o in ins.operands]
+            out = np.concatenate(parts, axis=d)
+            return Arr(sh.ty, sh.dims, out.ravel().astype(np.float64))
+        if op == "iota":
+            d = int(ins.attrs["iota_dimension"])
+            idx = np.arange(sh.dims[d], dtype=np.float64)
+            shape = [1] * len(sh.dims)
+            shape[d] = sh.dims[d]
+            out = np.broadcast_to(idx.reshape(shape), sh.dims)
+            return self._finalize_value(
+                sh, Arr(sh.ty, sh.dims, out.ravel().astype(np.float64)))
+        if op == "pad":
+            x, pv = get(0), get(1)
+            cfg = [
+                tuple(int(v) for v in part.split("_"))
+                for part in ins.attrs["padding"].split("x")
+            ]
+            out = np.full(sh.dims, pv.data[0], dtype=np.float64)
+            src = x.nd()
+            # Negative low/high padding truncates: source element j lands
+            # at lo + j*step; keep only the in-bounds range.
+            src_sl, dst_sl = [], []
+            empty = False
+            for (lo, _hi, *inner), n, outn in zip(cfg, x.dims, sh.dims):
+                step = 1 + (inner[0] if inner else 0)
+                j0 = (-lo + step - 1) // step if lo < 0 else 0
+                j1 = min(n - 1, (outn - 1 - lo) // step) if n > 0 else -1
+                if j1 < j0:
+                    empty = True
+                    break
+                src_sl.append(slice(j0, j1 + 1))
+                dst_sl.append(slice(lo + j0 * step, lo + j1 * step + 1, step))
+            if not empty:
+                out[tuple(dst_sl)] = src[tuple(src_sl)]
+            return Arr(sh.ty, sh.dims, out.ravel())
+        if op == "dynamic-slice":
+            x = get(0)
+            sizes = parse_int_list(ins.attrs["dynamic_slice_sizes"])
+            starts = []
+            for d in range(len(x.dims)):
+                i = int(env[ins.operands[1 + d]].data[0])
+                starts.append(max(0, min(i, x.dims[d] - sizes[d])))
+            sl = tuple(slice(s, s + z) for s, z in zip(starts, sizes))
+            out = x.nd()[sl]
+            return Arr(sh.ty, sh.dims, out.ravel().astype(np.float64))
+        if op == "dynamic-update-slice":
+            x, u = get(0), get(1)
+            starts = []
+            for d in range(len(x.dims)):
+                i = int(env[ins.operands[2 + d]].data[0])
+                starts.append(max(0, min(i, x.dims[d] - u.dims[d])))
+            out = x.nd().copy()
+            sl = tuple(slice(s, s + z) for s, z in zip(starts, u.dims))
+            out[sl] = u.nd()
+            return Arr(sh.ty, sh.dims, out.ravel())
+
+        if op == "dot":
+            return self._dot(ins, env)
+        if op == "reduce":
+            return self._reduce(ins, env)
+        if op == "gather":
+            return self._gather(ins, env)
+        if op == "scatter":
+            return self._scatter(ins, env)
+
+        raise ValueError(
+            f"unsupported HLO op '{op}' (instruction {ins.name})")
+
+    # -- contraction ------------------------------------------------------
+
+    def _dot(self, ins, env):
+        sh = ins.shape
+        lhs, rhs = env[ins.operands[0]], env[ins.operands[1]]
+        lc = parse_int_list(ins.attrs.get("lhs_contracting_dims", "{}"))
+        rc = parse_int_list(ins.attrs.get("rhs_contracting_dims", "{}"))
+        lb = parse_int_list(ins.attrs.get("lhs_batch_dims", "{}"))
+        rb = parse_int_list(ins.attrs.get("rhs_batch_dims", "{}"))
+        lfree = [d for d in range(len(lhs.dims)) if d not in lc + lb]
+        rfree = [d for d in range(len(rhs.dims)) if d not in rc + rb]
+        B = int(np.prod([lhs.dims[d] for d in lb])) if lb else 1
+        M = int(np.prod([lhs.dims[d] for d in lfree])) if lfree else 1
+        K = int(np.prod([lhs.dims[d] for d in lc])) if lc else 1
+        N = int(np.prod([rhs.dims[d] for d in rfree])) if rfree else 1
+        a = np.transpose(lhs.nd(), lb + lfree + lc).reshape(B, M, K)
+        b = np.transpose(rhs.nd(), rb + rc + rfree).reshape(B, K, N)
+        out = np.matmul(a, b)
+        return Arr(sh.ty, sh.dims,
+                   finalize(sh.ty, out.ravel().astype(np.float64)))
+
+    # -- reduce (variadic) ------------------------------------------------
+
+    def _reduce(self, ins, env):
+        sh = ins.shape
+        n = len(ins.operands) // 2
+        ops = [env[o] for o in ins.operands[:n]]
+        inits = [env[o] for o in ins.operands[n:]]
+        dims = parse_int_list(ins.attrs["dimensions"])
+        comp = self.m.computations[ins.attrs["to_apply"]]
+        in_dims = ops[0].dims
+        kept = [d for d in range(len(in_dims)) if d not in dims]
+        out_dims = tuple(in_dims[d] for d in kept)
+        red_n = int(np.prod([in_dims[d] for d in dims])) if dims else 1
+        # Move reduced dims last, flatten.
+        nds = [
+            np.transpose(o.nd(), kept + dims).reshape(-1, red_n) for o in ops
+        ]
+        out_n = nds[0].shape[0]
+        elem_ty = [o.ty for o in ops]
+        fast = self._fast_reducer(comp, n)
+        outs = [np.empty(out_n, dtype=np.float64) for _ in range(n)]
+        for i in range(out_n):
+            acc = [init.data[0] for init in inits]
+            for j in range(red_n):
+                xs = [nd[i, j] for nd in nds]
+                if fast is not None:
+                    acc = fast(acc, xs)
+                else:
+                    argv = [Arr(t, (), np.array([v])) for t, v in
+                            zip(elem_ty, acc)] + \
+                           [Arr(t, (), np.array([v])) for t, v in
+                            zip(elem_ty, xs)]
+                    r = self.eval_computation(comp, argv)
+                    rs = r if isinstance(r, list) else [r]
+                    acc = [a.data[0] for a in rs]
+            for k in range(n):
+                outs[k][i] = acc[k]
+        shapes = sh.tuple_shapes if sh.is_tuple else [sh]
+        results = [
+            Arr(s.ty, out_dims, finalize(s.ty, o))
+            for s, o in zip(shapes, outs)
+        ]
+        return results if sh.is_tuple else results[0]
+
+    def _fast_reducer(self, comp, n):
+        """Recognise single-op scalar reducers (add/mul/max/min)."""
+        if n != 1 or len(comp.instrs) != 3:
+            return None
+        root = comp.instrs[-1]
+        if root.op in BINARY and root.op in (
+                "add", "multiply", "maximum", "minimum"):
+            f = BINARY[root.op]
+            return lambda acc, xs: [float(f(np.float64(acc[0]),
+                                            np.float64(xs[0])))]
+        return None
+
+    # -- gather / scatter -------------------------------------------------
+
+    def _gather(self, ins, env):
+        sh = ins.shape
+        operand = env[ins.operands[0]]
+        start = env[ins.operands[1]]
+        offset_dims = parse_int_list(ins.attrs.get("offset_dims", "{}"))
+        collapsed = parse_int_list(
+            ins.attrs.get("collapsed_slice_dims", "{}"))
+        start_map = parse_int_list(ins.attrs.get("start_index_map", "{}"))
+        ob = parse_int_list(ins.attrs.get("operand_batching_dims", "{}"))
+        sb = parse_int_list(
+            ins.attrs.get("start_indices_batching_dims", "{}"))
+        ivd = int(ins.attrs["index_vector_dim"])
+        sizes = parse_int_list(ins.attrs["slice_sizes"])
+        out_rank = len(sh.dims)
+        batch_out = [d for d in range(out_rank) if d not in offset_dims]
+        sidx_dims = [d for d in range(len(start.dims)) if d != ivd]
+        # operand dims that carry within-slice offsets, in order
+        off_operand = [
+            d for d in range(len(operand.dims))
+            if d not in collapsed and d not in ob
+        ]
+        out = np.empty(sh.dims, dtype=np.float64)
+        snd = start.nd()
+        ond = operand.nd()
+        for oidx in np.ndindex(*sh.dims):
+            # start_indices coordinate from the output batch dims
+            scoord = [0] * len(start.dims)
+            for bpos, odim in enumerate(batch_out):
+                scoord[sidx_dims[bpos]] = oidx[odim]
+            full_start = [0] * len(operand.dims)
+            for k, od in enumerate(start_map):
+                c = list(scoord)
+                if ivd < len(start.dims):
+                    c[ivd] = k
+                v = int(snd[tuple(c)])
+                full_start[od] = max(0, min(v, operand.dims[od] - sizes[od]))
+            for obd, sbd in zip(ob, sb):
+                full_start[obd] = scoord[sbd]
+            src = list(full_start)
+            for k, od in enumerate(off_operand):
+                src[od] += oidx[offset_dims[k]]
+            out[oidx] = ond[tuple(src)]
+        return Arr(sh.ty, sh.dims, out.ravel())
+
+    def _scatter(self, ins, env):
+        sh = ins.shape
+        operand = env[ins.operands[0]]
+        indices = env[ins.operands[1]]
+        updates = env[ins.operands[2]]
+        uwd = parse_int_list(ins.attrs.get("update_window_dims", "{}"))
+        iwd = parse_int_list(ins.attrs.get("inserted_window_dims", "{}"))
+        sdod = parse_int_list(
+            ins.attrs.get("scatter_dims_to_operand_dims", "{}"))
+        ib = parse_int_list(ins.attrs.get("input_batching_dims", "{}"))
+        sib = parse_int_list(
+            ins.attrs.get("scatter_indices_batching_dims", "{}"))
+        ivd = int(ins.attrs["index_vector_dim"])
+        comp = self.m.computations[ins.attrs["to_apply"]]
+        sidx_dims = [d for d in range(len(indices.dims)) if d != ivd]
+        batch_upd = [d for d in range(len(updates.dims)) if d not in uwd]
+        win_operand = [
+            d for d in range(len(operand.dims))
+            if d not in iwd and d not in ib
+        ]
+        out = operand.nd().copy()
+        ind = indices.nd()
+        und = updates.nd()
+        for uidx in np.ndindex(*updates.dims):
+            scoord = [0] * len(indices.dims)
+            for bpos, udim in enumerate(batch_upd):
+                scoord[sidx_dims[bpos]] = uidx[udim]
+            full_start = [0] * len(operand.dims)
+            oob = False
+            for k, od in enumerate(sdod):
+                c = list(scoord)
+                if ivd < len(indices.dims):
+                    c[ivd] = k
+                v = int(ind[tuple(c)])
+                full_start[od] = v
+            for obd, sbd in zip(ib, sib):
+                full_start[obd] = scoord[sbd]
+            tgt = list(full_start)
+            for k, od in enumerate(win_operand):
+                tgt[od] += uidx[uwd[k]]
+            for d in range(len(operand.dims)):
+                if tgt[d] < 0 or tgt[d] >= operand.dims[d]:
+                    oob = True
+            if oob:
+                continue
+            cur = out[tuple(tgt)]
+            upd = und[uidx]
+            r = self.eval_computation(comp, [
+                Arr(operand.ty, (), np.array([cur])),
+                Arr(updates.ty, (), np.array([upd])),
+            ])
+            rv = r if isinstance(r, Arr) else r[0]
+            out[tuple(tgt)] = rv.data[0]
+        return Arr(sh.ty, sh.dims,
+                   finalize(sh.ty, out.ravel()))
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+def main(argv):
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("hlo")
+    ap.add_argument("--inputs", nargs="*", default=[],
+                    help="dtype:dims specs, filled with ramp values")
+    ns = ap.parse_args(argv)
+    mod = parse_module(open(ns.hlo).read())
+    args = []
+    for spec in ns.inputs:
+        ty, dims = spec.split(":")
+        dims = tuple(int(d) for d in dims.split(",") if d)
+        n = int(np.prod(dims)) if dims else 1
+        args.append(arr(ty, dims, np.arange(n) % 7 * 0.25))
+    out = Evaluator(mod).run(args)
+    outs = out if isinstance(out, list) else [out]
+    for i, o in enumerate(outs):
+        print(f"output {i}: {o.ty}{list(o.dims)} "
+              f"head={o.data[:8].tolist()}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -3,11 +3,14 @@
 //!   * TCDM bank count (paper: 32);
 //!   * FPU latency × accumulator-unroll interaction;
 //!   * SSR+FREP vs explicit-load GEMM (the extensions' end-to-end win).
+//!
+//! `--smoke` trims each sweep to two points (CI smoke job); `--json
+//! <path>` writes the tables as a machine-readable report.
 
 use manticore::asm::kernels::*;
 use manticore::mem::{ICache, Tcdm};
 use manticore::snitch::{run_single, CoreConfig, SnitchCore};
-use manticore::util::bench::Table;
+use manticore::util::bench::{BenchOpts, Report, Table};
 
 fn run_gemm(cfg: CoreConfig, banks: usize, baseline: bool) -> (u64, f64) {
     let (m, k, n) = (16u32, 64u32, 16u32);
@@ -26,8 +29,7 @@ fn run_gemm(cfg: CoreConfig, banks: usize, baseline: bool) -> (u64, f64) {
     (cycles, core.flop_utilization())
 }
 
-fn run_dot_unroll(latency: u32, unroll: u32) -> f64 {
-    let n = 2048u32;
+fn run_dot_unroll(latency: u32, unroll: u32, n: u32) -> f64 {
     let p = DotParams { n, x: 0, y: n * 8 + 8, out: 2 * n * 8 + 16 };
     let cfg = CoreConfig { fpu_latency: latency, ..CoreConfig::default() };
     let mut core = SnitchCore::new(0, cfg, dot_ssr_frep(p, unroll));
@@ -40,6 +42,10 @@ fn run_dot_unroll(latency: u32, unroll: u32) -> f64 {
 }
 
 fn main() {
+    let mut rep = Report::new(BenchOpts::from_env_args());
+    let smoke = rep.opts.smoke;
+    let dot_n: u32 = if smoke { 256 } else { 2048 };
+
     // 1. SSR+FREP vs baseline GEMM.
     let mut t = Table::new(
         "Ablation — ISA extensions on a 16x64x16 GEMM (one core)",
@@ -59,7 +65,7 @@ fn main() {
         format!("{:.1} %", u1 * 100.0),
         format!("{:.2}x", c0 as f64 / c1 as f64),
     ]);
-    t.print();
+    rep.table(t);
 
     // 2. FREP buffer depth: the Fig. 6 kernel needs 4 slots; a GEMM
     //    with a deeper unroll needs more. Depth ablation via unroll 8
@@ -68,8 +74,9 @@ fn main() {
         "Ablation — FREP sequence-buffer depth (paper: 16 entries)",
         &["buffer depth", "dot unroll 8 runs?", "utilization"],
     );
-    for depth in [4usize, 8, 16, 32] {
-        let n = 2048u32;
+    let depths: &[usize] = if smoke { &[4, 16] } else { &[4, 8, 16, 32] };
+    for &depth in depths {
+        let n = dot_n;
         let p = DotParams { n, x: 0, y: n * 8 + 8, out: 2 * n * 8 + 16 };
         let cfg = CoreConfig { frep_buffer: depth, ..CoreConfig::default() };
         if depth < 8 {
@@ -107,22 +114,31 @@ fn main() {
             ]);
         }
     }
-    t.print();
+    rep.table(t);
 
     // 3. FPU latency × unroll: the accumulator count must cover the
     //    latency or the RAW chain stalls (why Fig. 6 unrolls by 4).
+    let lats: &[u32] = if smoke { &[1, 4] } else { &[1, 2, 3, 4, 6] };
+    let unrolls: &[u32] = if smoke { &[1, 4] } else { &[1, 2, 4, 8] };
+    let headers: Vec<String> = std::iter::once("latency \\ unroll".to_string())
+        .chain(unrolls.iter().map(|u| u.to_string()))
+        .collect();
+    let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
     let mut t = Table::new(
         "Ablation — FPU latency x accumulator unroll (dot, SSR+FREP)",
-        &["latency \\ unroll", "1", "2", "4", "8"],
+        &header_refs,
     );
-    for lat in [1u32, 2, 3, 4, 6] {
+    for &lat in lats {
         let mut row = vec![format!("{lat}")];
-        for unroll in [1u32, 2, 4, 8] {
-            row.push(format!("{:.0} %", 100.0 * run_dot_unroll(lat, unroll)));
+        for &unroll in unrolls {
+            row.push(format!(
+                "{:.0} %",
+                100.0 * run_dot_unroll(lat, unroll, dot_n)
+            ));
         }
         t.row(row);
     }
-    t.print();
+    rep.table(t);
 
     // 4. TCDM banks: conflicts under 8-core load.
     use manticore::cluster::{ClusterConfig, ClusterSim};
@@ -130,7 +146,8 @@ fn main() {
         "Ablation — TCDM bank count (8-core GEMM cluster, paper: 32)",
         &["banks", "cycles", "conflict rate", "cluster FPU util"],
     );
-    for banks in [8usize, 16, 32, 64] {
+    let bank_counts: &[usize] = if smoke { &[16, 32] } else { &[8, 16, 32, 64] };
+    for &banks in bank_counts {
         let mut cfg = ClusterConfig::default();
         cfg.tcdm_banks = banks;
         let (m, k, n) = (8u32, 64u32, 16u32);
@@ -160,5 +177,7 @@ fn main() {
             format!("{:.1} %", 100.0 * sim.flop_utilization()),
         ]);
     }
-    t.print();
+    rep.table(t);
+
+    rep.finish().expect("writing bench report");
 }

@@ -2,19 +2,24 @@
 //!   * simulator throughput (simulated core-cycles per host second);
 //!   * cluster step throughput (8 cores + arbiter + DMA);
 //!   * interconnect allocator;
-//!   * PJRT execute latency for small and training-step artifacts.
+//!   * runtime-backend execute latency for small and GEMM artifacts.
+//!
+//! `--smoke` caps iterations (CI smoke job); `--json <path>` writes the
+//! sample report uploaded as a CI artifact.
 
 use manticore::asm::kernels::*;
 use manticore::mem::{ICache, Tcdm};
 use manticore::snitch::{run_single, CoreConfig, SnitchCore};
-use manticore::util::bench::{bench, fmt_si};
+use manticore::util::bench::{fmt_si, BenchOpts, Report};
 
 fn main() {
+    let mut rep = Report::new(BenchOpts::from_env_args());
+
     // 1. Single-core simulator throughput on the Fig. 6 kernel.
     const N: u32 = 48;
     let prog = matvec48_fig6(0, N * N * 8, N * N * 8 + N * 8 + 8);
     let mut sim_cycles = 0u64;
-    let s = bench("sim/single_core_matvec48", || {
+    let s = rep.bench("sim/single_core_matvec48", || {
         let mut core = SnitchCore::new(0, CoreConfig::default(), prog.clone());
         let mut tcdm = Tcdm::new(128 * 1024, 32);
         let mut ic = ICache::new(8 * 1024, 10);
@@ -30,7 +35,7 @@ fn main() {
     // 2. Cluster (8 cores + DMA) throughput.
     use manticore::cluster::{ClusterConfig, ClusterSim, DmaXfer};
     let mut cluster_cycles = 0u64;
-    let s = bench("sim/cluster_8core_gemm", || {
+    let s = rep.bench("sim/cluster_8core_gemm", || {
         let (m, k, n) = (8u32, 64u32, 16u32);
         let mut programs = Vec::new();
         for core in 0..8u32 {
@@ -63,16 +68,18 @@ fn main() {
         )
     );
 
-    // 3. PJRT execute latency.
+    // 3. Runtime-backend execute latency (NativeBackend by default,
+    //    PJRT when built with the `xla` feature + MANTICORE_BACKEND).
     use manticore::runtime::{Runtime, Tensor};
     use manticore::util::rng::Rng;
     match Runtime::new("artifacts") {
         Ok(mut rt) => {
+            let backend = rt.backend_name();
             let mut rng = Rng::new(3);
             let a = Tensor::F64(rng.normal_vec(64 * 64), vec![64, 64]);
             let b = Tensor::F64(rng.normal_vec(64 * 64), vec![64, 64]);
             rt.execute("matmul_f64_64", &[a.clone(), b.clone()]).unwrap();
-            bench("pjrt/matmul_f64_64", || {
+            rep.bench(&format!("{backend}/matmul_f64_64"), || {
                 std::hint::black_box(
                     rt.execute("matmul_f64_64", &[a.clone(), b.clone()])
                         .unwrap(),
@@ -94,29 +101,32 @@ fn main() {
                 vec![256, 256],
             );
             rt.execute("matmul_f32_256", &[a.clone(), b2.clone()]).unwrap();
-            bench("pjrt/matmul_f32_256", || {
+            rep.bench(&format!("{backend}/matmul_f32_256"), || {
                 std::hint::black_box(
                     rt.execute("matmul_f32_256", &[a.clone(), b2.clone()])
                         .unwrap(),
                 );
             });
             // L2 ablation: same shape through native XLA dot (no
-            // Pallas grid) — what interpret-mode tiling costs on CPU.
+            // Pallas grid) — what interpret-mode tiling costs.
             if rt.meta("matmul_xla_f32_256").is_some() {
                 rt.execute("matmul_xla_f32_256", &[a.clone(), b2.clone()])
                     .unwrap();
-                bench("pjrt/matmul_xla_f32_256 (no pallas grid)", || {
-                    std::hint::black_box(
-                        rt.execute(
-                            "matmul_xla_f32_256",
-                            &[a.clone(), b2.clone()],
-                        )
-                        .unwrap(),
-                    );
-                });
+                rep.bench(
+                    &format!("{backend}/matmul_xla_f32_256 (no pallas grid)"),
+                    || {
+                        std::hint::black_box(
+                            rt.execute(
+                                "matmul_xla_f32_256",
+                                &[a.clone(), b2.clone()],
+                            )
+                            .unwrap(),
+                        );
+                    },
+                );
             }
         }
-        Err(e) => println!("(skipping PJRT benches: {e})"),
+        Err(e) => println!("(skipping runtime benches: {e})"),
     }
 
     // 4. Interconnect allocator (also in fig3 bench; here for §Perf).
@@ -128,7 +138,9 @@ fn main() {
             Flow { src: c, dst: Endpoint::Hbm(ch), demand: 64.0 }
         })
         .collect();
-    bench("interconnect/allocate_512_hbm_flows", || {
+    rep.bench("interconnect/allocate_512_hbm_flows", || {
         std::hint::black_box(tree.allocate(&flows));
     });
+
+    rep.finish().expect("writing bench report");
 }

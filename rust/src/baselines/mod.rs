@@ -1,4 +1,6 @@
-//! Comparator chip models for the Fig. 10 efficiency study.
+//! Comparator chip models for the Fig. 10 efficiency study, plus the
+//! naive reference kernels other implementations are checked against
+//! (e.g. the NativeBackend matmul property test).
 //!
 //! The paper compares Manticore's measured efficiency against
 //! datasheet/measured numbers of contemporary chips. We encode the same
@@ -103,6 +105,25 @@ pub fn chip(name: &str) -> Option<Chip> {
     comparison_chips().into_iter().find(|c| c.name == name)
 }
 
+/// Reference GEMM: `C[m,n] = A[m,k] · B[k,n]`, naive triple loop with
+/// sequential-k accumulation. The ground truth for every other GEMM in
+/// the stack (Snitch SSR+FREP kernels, NativeBackend `dot`).
+pub fn gemm_ref(m: usize, k: usize, n: usize, a: &[f64], b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    let mut c = vec![0.0f64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for l in 0..k {
+                acc += a[i * k + l] * b[l * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,6 +148,18 @@ mod tests {
         let (a, v) = (chip("A100").unwrap(), chip("V100").unwrap());
         let ratio = a.dp_peak_eff() / v.dp_peak_eff();
         assert!((ratio / 1.25 - 1.0).abs() < 0.02, "ratio {ratio}");
+    }
+
+    #[test]
+    fn gemm_ref_identity_and_small_case() {
+        // I * B == B
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        let id = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(gemm_ref(2, 2, 2, &id, &b), b);
+        // [[1,2],[3,4]] x [[5,6],[7,8]]
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let c = gemm_ref(2, 2, 2, &a, &[5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(c, vec![19.0, 22.0, 43.0, 50.0]);
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Shared end-to-end driver logic: the tiny-CNN training loop over the
-//! AOT artifacts (real numerics via PJRT) combined with the Manticore
-//! system model (simulated time/energy per step). Used by the
-//! `manticore train` subcommand and `examples/dnn_training.rs`.
+//! AOT artifacts (real numerics via the runtime backend — the native
+//! HLO interpreter by default, PJRT with the `xla` feature) combined
+//! with the Manticore system model (simulated time/energy per step).
+//! Used by the `manticore train` subcommand and
+//! `examples/dnn_training.rs`.
 
 use crate::config::Config;
 use crate::coordinator::Coordinator;
@@ -69,7 +71,7 @@ pub struct TrainReport {
     pub accuracy: f64,
 }
 
-/// Run the end-to-end training loop.
+/// Run the end-to-end training loop with the default backend.
 pub fn train_loop(
     artifacts_dir: &str,
     steps: usize,
@@ -79,15 +81,29 @@ pub fn train_loop(
     seed: u64,
     verbose: bool,
 ) -> Result<TrainReport> {
-    let mut rt = Runtime::new(artifacts_dir)?;
+    let rt = Runtime::new(artifacts_dir)?;
+    train_loop_on(rt, steps, batch, lr, cfg, seed, verbose)
+}
+
+/// Run the end-to-end training loop on an already-opened runtime
+/// (lets callers pick the backend, e.g. `manticore train --backend`).
+pub fn train_loop_on(
+    mut rt: Runtime,
+    steps: usize,
+    batch: usize,
+    lr: f32,
+    cfg: &Config,
+    seed: u64,
+    verbose: bool,
+) -> Result<TrainReport> {
     if batch != 32 {
         bail!("artifacts are lowered for batch 32 (got {batch})");
     }
 
     // 1. Initialise parameters on-device (cnn_init artifact).
     let mut params = rt
-        .execute("cnn_init", &[Tensor::U32(vec![seed as u32], vec![])])
-        .context("cnn_init")?;
+        .execute("cnn_init", &[Tensor::scalar_u32(seed as u32)])
+        .with_context(|| format!("cnn_init on backend '{}'", rt.backend_name()))?;
     assert_eq!(params.len(), 8, "8 parameter tensors");
 
     // 2. The system model prices one training step (time + energy).

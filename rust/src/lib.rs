@@ -7,8 +7,9 @@
 //!
 //! * **L3 (this crate)** — the architecture simulator (Snitch cores with
 //!   SSR + FREP, banked TCDM, clusters, the bandwidth-thinned quadrant
-//!   tree, HBM, DVFS/power), the offload coordinator, and the PJRT
-//!   runtime that executes AOT-compiled JAX artifacts;
+//!   tree, HBM, DVFS/power), the offload coordinator, and the pluggable
+//!   artifact runtime (pure-Rust HLO interpreter by default, PJRT/XLA
+//!   behind the `xla` feature) that executes AOT-compiled JAX artifacts;
 //! * **L2 (python/compile)** — the DNN training-step compute graph;
 //! * **L1 (python/compile/kernels)** — Pallas kernels mirroring the
 //!   SSR/FREP execution discipline on TPU-shaped hardware.

@@ -2,23 +2,34 @@
 //!
 //! Subcommands:
 //!   repro <fig5|fig6|fig8|fig9|fig10|fig3|area|peaks|all>
-//!   run <artifact> [--iters N]          execute an AOT artifact via PJRT
+//!   run <artifact> [--iters N]          execute an AOT artifact
 //!   simulate gemm --m --k --n           schedule a GEMM on the system model
 //!   simulate kernel --name <dot|matvec|gemm|axpy>   cycle-level run
 //!   train [--steps N] [--lr F]          tiny end-to-end training loop
 //!   info                                list artifacts + config
 //!
 //! Global options: --preset <manticore|prototype|max-efficiency>,
-//! --config <file.json>, --artifacts <dir>.
+//! --config <file.json>, --artifacts <dir>, --backend <native|xla>.
+//! Artifacts execute on the pluggable runtime backend (pure-Rust HLO
+//! interpreter by default; PJRT/XLA behind the `xla` feature).
 
 use anyhow::{bail, Context, Result};
 use manticore::config::Config;
 use manticore::coordinator::Coordinator;
 use manticore::repro;
-use manticore::runtime::{tensor_for_spec, Runtime, Tensor};
+use manticore::runtime::{backend_by_name, tensor_for_spec, Runtime, Tensor};
 use manticore::util::bench::fmt_si;
 use manticore::util::cli;
 use manticore::util::rng::Rng;
+
+/// Open the runtime honouring `--backend` (falls back to
+/// `MANTICORE_BACKEND`, then `native`).
+fn open_runtime(args: &cli::Args, artifacts_dir: &str) -> Result<Runtime> {
+    match args.get("backend") {
+        Some(name) => Runtime::with_backend(artifacts_dir, backend_by_name(name)?),
+        None => Runtime::new(artifacts_dir),
+    }
+}
 
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -36,7 +47,7 @@ fn main() -> Result<()> {
         Some("run") => cmd_run(&args, &artifacts_dir),
         Some("simulate") => cmd_simulate(&args, &cfg),
         Some("train") => cmd_train(&args, &artifacts_dir, &cfg),
-        Some("info") => cmd_info(&artifacts_dir, &cfg),
+        Some("info") => cmd_info(&args, &artifacts_dir, &cfg),
         _ => {
             print_help();
             Ok(())
@@ -55,7 +66,8 @@ fn print_help() {
          simulate gemm --m M --k K --n N | simulate kernel --name <..>\n  \
          train [--steps N] [--lr F]\n  \
          info\n\n\
-         OPTIONS: --preset <name> --config <file.json> --artifacts <dir>"
+         OPTIONS: --preset <name> --config <file.json> --artifacts <dir> \
+         --backend <native|xla>"
     );
 }
 
@@ -99,8 +111,8 @@ fn cmd_run(args: &cli::Args, artifacts_dir: &str) -> Result<()> {
     let Some(name) = args.positional.first() else {
         bail!("usage: manticore run <artifact> [--iters N]");
     };
-    let mut rt = Runtime::new(artifacts_dir)?;
-    println!("platform: {}", rt.platform());
+    let mut rt = open_runtime(args, artifacts_dir)?;
+    println!("backend: {} ({})", rt.backend_name(), rt.platform());
     let meta = rt
         .meta(name)
         .with_context(|| format!("unknown artifact {name}"))?
@@ -228,8 +240,9 @@ fn cmd_simulate_kernel(args: &cli::Args, cfg: &Config) -> Result<()> {
 fn cmd_train(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> {
     let steps = args.get_usize("steps", 50);
     let lr = args.get_f64("lr", 0.05) as f32;
-    let report = manticore::examples_support::train_loop(
-        artifacts_dir,
+    let rt = open_runtime(args, artifacts_dir)?;
+    let report = manticore::examples_support::train_loop_on(
+        rt,
         steps,
         32,
         lr,
@@ -249,11 +262,15 @@ fn cmd_train(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> 
     Ok(())
 }
 
-fn cmd_info(artifacts_dir: &str, cfg: &Config) -> Result<()> {
+fn cmd_info(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> {
     println!("config:\n{}", cfg.to_json());
-    match Runtime::new(artifacts_dir) {
+    match open_runtime(args, artifacts_dir) {
         Ok(rt) => {
-            println!("\nartifacts in {artifacts_dir} ({}):", rt.platform());
+            println!(
+                "\nartifacts in {artifacts_dir} (backend {}, {}):",
+                rt.backend_name(),
+                rt.platform()
+            );
             for a in rt.artifacts() {
                 println!(
                     "  {:24} {} inputs -> {} outputs",

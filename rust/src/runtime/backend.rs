@@ -1,0 +1,58 @@
+//! The pluggable execution backend interface.
+//!
+//! `Runtime` owns a `Box<dyn Backend>`; artifacts are HLO text and a
+//! backend turns them into `Executable`s. Two implementations exist:
+//!
+//! * [`super::native::NativeBackend`] — pure-Rust HLO interpreter,
+//!   always available, the default;
+//! * `PjrtBackend` (feature `xla`) — compiles through the external
+//!   `xla` crate onto the PJRT CPU client.
+//!
+//! Backend selection: `Runtime::new` uses the `MANTICORE_BACKEND`
+//! environment variable (`native` or `xla`), defaulting to `native`.
+
+use super::Tensor;
+use anyhow::{bail, Result};
+
+/// A compiled artifact, ready to execute.
+pub trait Executable {
+    /// Execute with host tensors; returns one tensor per output (the
+    /// artifacts are lowered with `return_tuple=True`, so the tuple is
+    /// unpacked here).
+    fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+}
+
+/// An execution engine that compiles HLO text.
+pub trait Backend {
+    /// Short identifier used in error messages ("native", "xla").
+    fn name(&self) -> &'static str;
+
+    /// Human-readable platform string (e.g. PJRT platform name).
+    fn platform(&self) -> String;
+
+    /// Compile one artifact's HLO text.
+    fn compile(&self, name: &str, hlo_text: &str) -> Result<Box<dyn Executable>>;
+}
+
+/// Construct the backend selected by `MANTICORE_BACKEND` (default:
+/// `native`).
+pub fn default_backend() -> Result<Box<dyn Backend>> {
+    let choice = std::env::var("MANTICORE_BACKEND")
+        .unwrap_or_else(|_| "native".to_string());
+    backend_by_name(&choice)
+}
+
+/// Construct a backend by name.
+pub fn backend_by_name(name: &str) -> Result<Box<dyn Backend>> {
+    match name {
+        "native" => Ok(Box::new(super::native::NativeBackend::new())),
+        #[cfg(feature = "xla")]
+        "xla" | "pjrt" => Ok(Box::new(super::pjrt::PjrtBackend::new()?)),
+        #[cfg(not(feature = "xla"))]
+        "xla" | "pjrt" => bail!(
+            "backend '{name}' requires the `xla` cargo feature (rebuild \
+             with `--features xla`; see DESIGN.md §Runtime backends)"
+        ),
+        other => bail!("unknown backend '{other}' (expected 'native' or 'xla')"),
+    }
+}

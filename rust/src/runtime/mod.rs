@@ -1,8 +1,23 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`,
-//! produced once by `make artifacts` from the L2 JAX graphs) and
-//! executes them on the XLA CPU client. Python is **never** on this
-//! path — the interchange format is HLO text (see
-//! /opt/xla-example/README.md for why text, not serialized protos).
+//! The artifact runtime: loads AOT artifacts (`artifacts/*.hlo.txt`,
+//! produced by `make artifacts` from the L2 JAX graphs; a pregenerated
+//! copy is checked in) and executes them on a pluggable [`Backend`].
+//! Python is **never** on this path — the interchange format is HLO
+//! text.
+//!
+//! Backends:
+//! * [`native::NativeBackend`] (default) — pure-Rust HLO interpreter,
+//!   fully offline;
+//! * `PjrtBackend` (cargo feature `xla`) — the XLA/PJRT CPU client.
+//!
+//! Select with `MANTICORE_BACKEND=native|xla` or
+//! [`Runtime::with_backend`].
+
+pub mod backend;
+pub mod native;
+#[cfg(feature = "xla")]
+pub mod pjrt;
+
+pub use self::backend::{backend_by_name, default_backend, Backend, Executable};
 
 use crate::util::json::{self, Value};
 use anyhow::{anyhow, bail, Context, Result};
@@ -47,6 +62,29 @@ impl Tensor {
         }
     }
 
+    /// Manifest-style dtype name ("float32", ...).
+    pub fn dtype_name(&self) -> &'static str {
+        match self {
+            Tensor::F32(..) => "float32",
+            Tensor::F64(..) => "float64",
+            Tensor::I32(..) => "int32",
+            Tensor::U32(..) => "uint32",
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v, _) => v.len(),
+            Tensor::F64(v, _) => v.len(),
+            Tensor::I32(v, _) => v.len(),
+            Tensor::U32(v, _) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
     pub fn as_f32(&self) -> Option<&[f32]> {
         match self {
             Tensor::F32(v, _) => Some(v),
@@ -68,55 +106,100 @@ impl Tensor {
         }
     }
 
+    pub fn as_u32(&self) -> Option<&[u32]> {
+        match self {
+            Tensor::U32(v, _) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Lossless-as-possible view as f64 (exact for every dtype here:
+    /// f32/i32/u32 embed exactly in f64).
+    pub fn to_f64_vec(&self) -> Vec<f64> {
+        match self {
+            Tensor::F32(v, _) => v.iter().map(|&x| x as f64).collect(),
+            Tensor::F64(v, _) => v.clone(),
+            Tensor::I32(v, _) => v.iter().map(|&x| x as f64).collect(),
+            Tensor::U32(v, _) => v.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    /// Build a tensor of the given manifest dtype from f64 values (the
+    /// inverse of [`Tensor::to_f64_vec`]).
+    pub fn from_f64_vec(
+        dtype: &str,
+        data: Vec<f64>,
+        shape: Vec<usize>,
+    ) -> Result<Tensor> {
+        let want: usize = shape.iter().product::<usize>().max(1);
+        if data.len() != want {
+            bail!(
+                "tensor data length {} does not match shape {:?} ({} elems)",
+                data.len(),
+                shape,
+                want
+            );
+        }
+        Ok(match dtype {
+            "float32" => {
+                Tensor::F32(data.iter().map(|&v| v as f32).collect(), shape)
+            }
+            "float64" => Tensor::F64(data, shape),
+            "int32" => {
+                Tensor::I32(data.iter().map(|&v| v as i32).collect(), shape)
+            }
+            "uint32" => {
+                Tensor::U32(data.iter().map(|&v| v as u32).collect(), shape)
+            }
+            other => bail!("unsupported dtype {other}"),
+        })
+    }
+
     pub fn scalar_f32(v: f32) -> Tensor {
         Tensor::F32(vec![v], vec![])
     }
 
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
-        let lit = match self {
-            Tensor::F32(v, _) => xla::Literal::vec1(v),
-            Tensor::F64(v, _) => xla::Literal::vec1(v),
-            Tensor::I32(v, _) => xla::Literal::vec1(v),
-            Tensor::U32(v, _) => xla::Literal::vec1(v),
-        };
-        Ok(lit.reshape(&dims)?)
-    }
-
-    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> =
-            shape.dims().iter().map(|&d| d as usize).collect();
-        let t = match shape.ty() {
-            xla::ElementType::F32 => Tensor::F32(lit.to_vec()?, dims),
-            xla::ElementType::F64 => Tensor::F64(lit.to_vec()?, dims),
-            xla::ElementType::S32 => Tensor::I32(lit.to_vec()?, dims),
-            xla::ElementType::U32 => Tensor::U32(lit.to_vec()?, dims),
-            other => bail!("unsupported output element type {other:?}"),
-        };
-        Ok(t)
+    pub fn scalar_u32(v: u32) -> Tensor {
+        Tensor::U32(vec![v], vec![])
     }
 }
 
-/// The artifact runtime: PJRT CPU client + compiled-executable cache.
+/// The artifact runtime: backend + manifest + compiled-executable cache.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Box<dyn Backend>,
     dir: PathBuf,
     manifest: BTreeMap<String, ArtifactMeta>,
-    cache: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    cache: BTreeMap<String, Box<dyn Executable>>,
 }
 
 impl Runtime {
-    /// Open an artifacts directory (expects `manifest.json`).
+    /// Open an artifacts directory (expects `manifest.json`) with the
+    /// default backend (`MANTICORE_BACKEND`, or `native`).
     pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        Self::with_backend(dir, default_backend()?)
+    }
+
+    /// Open an artifacts directory with an explicit backend.
+    pub fn with_backend(
+        dir: impl AsRef<Path>,
+        backend: Box<dyn Backend>,
+    ) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path).with_context(
-            || format!("reading {} (run `make artifacts`)", manifest_path.display()),
-        )?;
-        let v = json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "[{}] reading {} (run `make artifacts`)",
+                backend.name(),
+                manifest_path.display()
+            )
+        })?;
+        let v = json::parse(&text).map_err(|e| {
+            anyhow!("[{}] parsing {}: {e}", backend.name(), manifest_path.display())
+        })?;
         let mut manifest = BTreeMap::new();
-        for (name, meta) in v.as_obj().context("manifest not an object")? {
+        for (name, meta) in v.as_obj().with_context(|| {
+            format!("[{}] manifest not an object", backend.name())
+        })? {
             let spec_list = |key: &str| -> Result<Vec<TensorSpec>> {
                 meta.get(key)
                     .and_then(Value::as_arr)
@@ -149,16 +232,16 @@ impl Runtime {
                 },
             );
         }
-        Ok(Runtime {
-            client: xla::PjRtClient::cpu()?,
-            dir,
-            manifest,
-            cache: BTreeMap::new(),
-        })
+        Ok(Runtime { backend, dir, manifest, cache: BTreeMap::new() })
+    }
+
+    /// The active backend's short name ("native", "xla").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform()
     }
 
     pub fn artifacts(&self) -> Vec<&ArtifactMeta> {
@@ -175,14 +258,16 @@ impl Runtime {
             return Ok(());
         }
         if !self.manifest.contains_key(name) {
-            bail!("unknown artifact '{name}' (not in manifest)");
+            bail!(
+                "[{}] unknown artifact '{name}' (not in manifest)",
+                self.backend.name()
+            );
         }
         let path = self.dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("[{}] reading {}", self.backend.name(), path.display())
+        })?;
+        let exe = self.backend.compile(name, &text)?;
         self.cache.insert(name.to_string(), exe);
         Ok(())
     }
@@ -194,7 +279,8 @@ impl Runtime {
         let meta = &self.manifest[name];
         if inputs.len() != meta.inputs.len() {
             bail!(
-                "artifact '{name}' expects {} inputs, got {}",
+                "[{}] artifact '{name}' expects {} inputs, got {}",
+                self.backend.name(),
                 meta.inputs.len(),
                 inputs.len()
             );
@@ -202,22 +288,14 @@ impl Runtime {
         for (i, (t, spec)) in inputs.iter().zip(&meta.inputs).enumerate() {
             if t.shape() != spec.shape.as_slice() {
                 bail!(
-                    "input {i} of '{name}': shape {:?} != manifest {:?}",
+                    "[{}] input {i} of '{name}': shape {:?} != manifest {:?}",
+                    self.backend.name(),
                     t.shape(),
                     spec.shape
                 );
             }
         }
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(Tensor::to_literal)
-            .collect::<Result<_>>()?;
-        let exe = &self.cache[name];
-        let result = exe.execute::<xla::Literal>(&lits)?;
-        let out = result[0][0].to_literal_sync()?;
-        // Lowered with return_tuple=True: always a tuple.
-        let elems = out.to_tuple()?;
-        elems.iter().map(Tensor::from_literal).collect()
+        self.cache[name].execute(inputs)
     }
 
     /// Execute and time the call (returns outputs + wall time).
@@ -237,20 +315,11 @@ impl Runtime {
 /// used by the CLI `run` command and the integration tests.
 pub fn tensor_for_spec(spec: &TensorSpec, mut fill: impl FnMut(usize) -> f64) -> Result<Tensor> {
     let n = spec.elems();
-    let shape = spec.shape.clone();
-    Ok(match spec.dtype.as_str() {
-        "float32" => {
-            Tensor::F32((0..n).map(|i| fill(i) as f32).collect(), shape)
-        }
-        "float64" => Tensor::F64((0..n).map(|i| fill(i)).collect(), shape),
-        "int32" => {
-            Tensor::I32((0..n).map(|i| fill(i) as i32).collect(), shape)
-        }
-        "uint32" => {
-            Tensor::U32((0..n).map(|i| fill(i) as u32).collect(), shape)
-        }
-        other => bail!("unsupported dtype {other}"),
-    })
+    Tensor::from_f64_vec(
+        &spec.dtype,
+        (0..n).map(&mut fill).collect(),
+        spec.shape.clone(),
+    )
 }
 
 #[cfg(test)]
@@ -271,8 +340,50 @@ mod tests {
             let s = TensorSpec { shape: vec![3], dtype: dt.into() };
             let t = tensor_for_spec(&s, |i| i as f64).unwrap();
             assert_eq!(t.shape(), &[3]);
+            assert_eq!(t.dtype_name(), dt);
         }
         let bad = TensorSpec { shape: vec![1], dtype: "complex64".into() };
         assert!(tensor_for_spec(&bad, |_| 0.0).is_err());
+    }
+
+    /// The `as_f64`/`U32` asymmetry fix: every dtype round-trips
+    /// exactly through the f64 view.
+    #[test]
+    fn tensor_f64_roundtrip_is_exact() {
+        let cases = [
+            Tensor::F32(vec![1.5, -0.25, 3.0e7], vec![3]),
+            Tensor::F64(vec![1.5e-300, -2.0, 0.0], vec![3]),
+            Tensor::I32(vec![i32::MIN, -1, i32::MAX], vec![3]),
+            Tensor::U32(vec![0, 7, u32::MAX], vec![3]),
+        ];
+        for t in cases {
+            let back = Tensor::from_f64_vec(
+                t.dtype_name(),
+                t.to_f64_vec(),
+                t.shape().to_vec(),
+            )
+            .unwrap();
+            assert_eq!(t, back);
+        }
+    }
+
+    #[test]
+    fn runtime_new_error_names_backend() {
+        // Pin the backend so an ambient MANTICORE_BACKEND doesn't
+        // change the expected error prefix.
+        let err = Runtime::with_backend(
+            "/nonexistent-artifacts-dir",
+            backend_by_name("native").unwrap(),
+        )
+        .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("[native]"), "{msg}");
+    }
+
+    #[test]
+    fn scalar_constructors() {
+        assert_eq!(Tensor::scalar_f32(2.0).shape(), &[] as &[usize]);
+        assert_eq!(Tensor::scalar_u32(7).as_u32().unwrap(), &[7]);
+        assert!(!Tensor::scalar_f32(0.0).is_empty());
     }
 }

@@ -1,0 +1,1467 @@
+//! Evaluator for parsed HLO modules: the core of `NativeBackend`.
+//!
+//! Storage model: every array is a flat row-major `Vec<f64>` plus dims;
+//! after each op the buffer is canonicalised for the instruction's
+//! result dtype (round-to-f32 for `f32`, truncate-and-wrap for integer
+//! types, 0/1 for `pred`). f64 holds every s32/u32/f32 value exactly,
+//! and products/sums of f32 values are exact in f64 before the final
+//! rounding, so this matches XLA CPU numerics to rounding-order level.
+//! Bit ops (shift/and/or/xor, bitcast-convert) run in the integer
+//! domain so the threefry RNG path is bit-exact.
+//!
+//! `python/tools/hlo_interp.py` is the executable specification of this
+//! file (validated against JAX on every artifact); keep them in
+//! lockstep.
+
+use super::parser::{parse_literal, Computation, DType, Instr, Module, Shape};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+/// Safety cap for `while` loops (the L2 graphs iterate grid steps,
+/// which is orders of magnitude below this).
+const MAX_WHILE_ITERS: u64 = 1_000_000;
+
+/// A runtime value: an array or a tuple.
+#[derive(Debug, Clone)]
+pub enum Value {
+    Arr(ArrayV),
+    Tuple(Vec<Value>),
+}
+
+/// Flat row-major array with element type.
+#[derive(Debug, Clone)]
+pub struct ArrayV {
+    pub ty: DType,
+    pub dims: Vec<usize>,
+    pub data: Vec<f64>,
+}
+
+impl ArrayV {
+    pub fn new(ty: DType, dims: Vec<usize>, data: Vec<f64>) -> ArrayV {
+        debug_assert_eq!(dims.iter().product::<usize>().max(1), data.len());
+        ArrayV { ty, dims, data }
+    }
+
+    pub fn scalar(&self) -> f64 {
+        self.data[0]
+    }
+}
+
+impl Value {
+    pub fn arr(&self) -> Result<&ArrayV> {
+        match self {
+            Value::Arr(a) => Ok(a),
+            Value::Tuple(_) => bail!("expected array value, got tuple"),
+        }
+    }
+
+    pub fn tuple(&self) -> Result<&[Value]> {
+        match self {
+            Value::Tuple(v) => Ok(v),
+            Value::Arr(_) => bail!("expected tuple value, got array"),
+        }
+    }
+}
+
+/// Row-major strides.
+fn strides(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+/// Odometer increment; returns false when iteration wraps around.
+fn next_index(idx: &mut [usize], dims: &[usize]) -> bool {
+    for d in (0..dims.len()).rev() {
+        idx[d] += 1;
+        if idx[d] < dims[d] {
+            return true;
+        }
+        idx[d] = 0;
+    }
+    false
+}
+
+/// Canonicalise a buffer for a result dtype (round f32, wrap ints).
+fn finalize(ty: DType, data: &mut [f64]) {
+    match ty {
+        DType::F64 => {}
+        DType::F32 | DType::F16 | DType::BF16 => {
+            for v in data.iter_mut() {
+                *v = *v as f32 as f64;
+            }
+        }
+        DType::Pred => {
+            for v in data.iter_mut() {
+                *v = if *v != 0.0 { 1.0 } else { 0.0 };
+            }
+        }
+        _ => {
+            let w = ty.int_width().unwrap_or(64);
+            for v in data.iter_mut() {
+                *v = wrap_int(ty, w, *v);
+            }
+        }
+    }
+}
+
+fn wrap_int(ty: DType, width: u32, v: f64) -> f64 {
+    let t = v.trunc();
+    if width >= 64 {
+        return t;
+    }
+    let m = (1u64 << width) as f64;
+    let mut r = t % m;
+    if ty.is_signed() {
+        let half = m / 2.0;
+        if r >= half {
+            r -= m;
+        } else if r < -half {
+            r += m;
+        }
+    } else if r < 0.0 {
+        r += m;
+    }
+    r
+}
+
+/// Integer-domain binary bit op (operands already wrapped into range).
+fn bitop(op: &str, ty: DType, a: f64, b: f64) -> Result<f64> {
+    let w = ty.int_width().context("bit op on float type")? as i64;
+    let mask: i64 = if w >= 64 { -1 } else { (1i64 << w) - 1 };
+    let ai = (a as i64) & mask;
+    // Shift amounts are range-checked raw (not masked), so a negative
+    // operand is out-of-band rather than a huge positive; the bitwise
+    // ops use the masked (two's-complement) value.
+    let bi = b as i64;
+    let bm = bi & mask;
+    // Shift amounts outside [0, w) yield 0 (logical/left) or the
+    // sign-fill (arithmetic) — never a panic on adversarial input.
+    let r = match op {
+        "shift-left" => {
+            if !(0..w).contains(&bi) {
+                0
+            } else {
+                (ai << bi) & mask
+            }
+        }
+        "shift-right-logical" => {
+            if !(0..w).contains(&bi) {
+                0
+            } else {
+                ((ai as u64 & mask as u64) >> bi) as i64
+            }
+        }
+        "shift-right-arithmetic" => {
+            let sa = if ty.is_signed() && w < 64 && ai >= (1i64 << (w - 1)) {
+                ai - (1i64 << w)
+            } else {
+                ai
+            };
+            (sa >> bi.clamp(0, w - 1)) & mask
+        }
+        "and" => ai & bm,
+        "or" => ai | bm,
+        "xor" => ai ^ bm,
+        other => bail!("unknown bit op '{other}'"),
+    };
+    Ok(r as f64)
+}
+
+/// Reinterpret the bit pattern of each element (e.g. u32 -> f32).
+fn bitcast(src: DType, dst: DType, v: f64) -> Result<f64> {
+    let bits: u64 = match src {
+        DType::F32 => (v as f32).to_bits() as u64,
+        DType::F64 => v.to_bits(),
+        _ => {
+            let w = src.int_width().context("bitcast src")?;
+            let mask = if w >= 64 { u64::MAX } else { (1u64 << w) - 1 };
+            (v as i64 as u64) & mask
+        }
+    };
+    Ok(match dst {
+        DType::F32 => f32::from_bits(bits as u32) as f64,
+        DType::F64 => f64::from_bits(bits),
+        _ => {
+            let w = dst.int_width().context("bitcast dst")?;
+            let mask = if w >= 64 { u64::MAX } else { (1u64 << w) - 1 };
+            let b = bits & mask;
+            if dst.is_signed() && w < 64 && b >= (1u64 << (w - 1)) {
+                (b as i64 - (1i64 << w)) as f64
+            } else {
+                b as f64
+            }
+        }
+    })
+}
+
+fn unary(op: &str, x: f64) -> Result<f64> {
+    Ok(match op {
+        "negate" => -x,
+        "abs" => x.abs(),
+        "exponential" => x.exp(),
+        "log" => x.ln(),
+        "log-plus-one" => x.ln_1p(),
+        "sqrt" => x.sqrt(),
+        "rsqrt" => 1.0 / x.sqrt(),
+        "tanh" => x.tanh(),
+        "floor" => x.floor(),
+        "ceil" => x.ceil(),
+        "sign" => {
+            if x == 0.0 || x.is_nan() {
+                x
+            } else {
+                x.signum()
+            }
+        }
+        "not" => {
+            if x == 0.0 {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        "is-finite" => {
+            if x.is_finite() {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        "copy" | "convert" => x,
+        other => bail!("unknown unary op '{other}'"),
+    })
+}
+
+fn binary(op: &str, a: f64, b: f64) -> Result<f64> {
+    Ok(match op {
+        "add" => a + b,
+        "subtract" => a - b,
+        "multiply" => a * b,
+        "divide" => a / b,
+        // NaN-propagating like XLA (Rust's f64::max/min drop NaN).
+        "maximum" => {
+            if a.is_nan() || b.is_nan() {
+                f64::NAN
+            } else {
+                a.max(b)
+            }
+        }
+        "minimum" => {
+            if a.is_nan() || b.is_nan() {
+                f64::NAN
+            } else {
+                a.min(b)
+            }
+        }
+        "power" => a.powf(b),
+        "remainder" => a % b,
+        "and" => {
+            if a != 0.0 && b != 0.0 {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        "or" => {
+            if a != 0.0 || b != 0.0 {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        "xor" => {
+            if (a != 0.0) != (b != 0.0) {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        other => bail!("unknown binary op '{other}'"),
+    })
+}
+
+fn compare(direction: &str, a: f64, b: f64) -> Result<bool> {
+    Ok(match direction {
+        "EQ" => a == b,
+        "NE" => a != b,
+        "LT" => a < b,
+        "LE" => a <= b,
+        "GT" => a > b,
+        "GE" => a >= b,
+        other => bail!("unknown compare direction '{other}'"),
+    })
+}
+
+const UNARY_OPS: &[&str] = &[
+    "negate",
+    "abs",
+    "exponential",
+    "log",
+    "log-plus-one",
+    "sqrt",
+    "rsqrt",
+    "tanh",
+    "floor",
+    "ceil",
+    "sign",
+    "not",
+    "is-finite",
+    "copy",
+    "convert",
+];
+
+const BINARY_OPS: &[&str] = &[
+    "add",
+    "subtract",
+    "multiply",
+    "divide",
+    "maximum",
+    "minimum",
+    "power",
+    "remainder",
+    "and",
+    "or",
+    "xor",
+];
+
+const SHIFT_OPS: &[&str] =
+    &["shift-left", "shift-right-logical", "shift-right-arithmetic"];
+
+/// Every opcode the evaluator implements (used for compile-time
+/// supportedness checks so unsupported artifacts fail at load, not
+/// mid-execution).
+pub fn supported_ops() -> Vec<&'static str> {
+    let mut ops = vec![
+        "parameter",
+        "constant",
+        "tuple",
+        "get-tuple-element",
+        "call",
+        "while",
+        "conditional",
+        "select",
+        "compare",
+        "bitcast-convert",
+        "broadcast",
+        "reshape",
+        "transpose",
+        "slice",
+        "concatenate",
+        "iota",
+        "pad",
+        "dynamic-slice",
+        "dynamic-update-slice",
+        "dot",
+        "reduce",
+        "gather",
+        "scatter",
+    ];
+    ops.extend_from_slice(UNARY_OPS);
+    ops.extend_from_slice(BINARY_OPS);
+    ops.extend_from_slice(SHIFT_OPS);
+    ops
+}
+
+/// The module evaluator.
+pub struct Evaluator<'m> {
+    m: &'m Module,
+}
+
+type Env<'c> = HashMap<&'c str, Value>;
+
+impl<'m> Evaluator<'m> {
+    pub fn new(m: &'m Module) -> Evaluator<'m> {
+        Evaluator { m }
+    }
+
+    /// Evaluate the entry computation.
+    pub fn run(&self, args: &[Value]) -> Result<Value> {
+        self.eval_computation(self.m.entry_computation(), args)
+    }
+
+    fn eval_computation(
+        &self,
+        comp: &Computation,
+        args: &[Value],
+    ) -> Result<Value> {
+        let mut env: Env<'_> = HashMap::with_capacity(comp.instrs.len());
+        for ins in &comp.instrs {
+            let v = self.eval_instr(ins, args, &env).with_context(|| {
+                format!("evaluating {} = {}(..)", ins.name, ins.op)
+            })?;
+            env.insert(ins.name.as_str(), v);
+        }
+        env.remove(comp.root.as_str())
+            .with_context(|| format!("missing root '{}'", comp.root))
+    }
+
+    fn operand<'e>(
+        &self,
+        env: &'e Env<'_>,
+        ins: &Instr,
+        i: usize,
+    ) -> Result<&'e Value> {
+        let name = ins
+            .operands
+            .get(i)
+            .with_context(|| format!("{}: missing operand {i}", ins.name))?;
+        env.get(name.as_str())
+            .with_context(|| format!("{}: unknown operand '{name}'", ins.name))
+    }
+
+    fn operand_arr<'e>(
+        &self,
+        env: &'e Env<'_>,
+        ins: &Instr,
+        i: usize,
+    ) -> Result<&'e ArrayV> {
+        self.operand(env, ins, i)?.arr()
+    }
+
+    fn out_arr(&self, shape: &Shape, data: Vec<f64>) -> Result<Value> {
+        let ty = shape.ty()?;
+        let mut data = data;
+        finalize(ty, &mut data);
+        Ok(Value::Arr(ArrayV::new(ty, shape.dims().to_vec(), data)))
+    }
+
+    fn eval_instr(&self, ins: &Instr, args: &[Value], env: &Env<'_>) -> Result<Value> {
+        let op = ins.op.as_str();
+        match op {
+            "parameter" => {
+                let idx: usize = ins
+                    .operands
+                    .first()
+                    .map(|s| s.parse())
+                    .transpose()
+                    .ok()
+                    .flatten()
+                    .unwrap_or(0);
+                args.get(idx)
+                    .cloned()
+                    .with_context(|| format!("parameter({idx}) out of range"))
+            }
+            "constant" => {
+                let lit = ins.literal.as_deref().unwrap_or("");
+                let mut vals = parse_literal(lit)?;
+                let n = ins.shape.elems();
+                if vals.len() == 1 && n > 1 {
+                    vals = vec![vals[0]; n];
+                }
+                if vals.len() != n {
+                    bail!(
+                        "constant arity {} != shape {:?}",
+                        vals.len(),
+                        ins.shape.dims()
+                    );
+                }
+                self.out_arr(&ins.shape, vals)
+            }
+            "tuple" => {
+                let mut vs = Vec::with_capacity(ins.operands.len());
+                for i in 0..ins.operands.len() {
+                    vs.push(self.operand(env, ins, i)?.clone());
+                }
+                Ok(Value::Tuple(vs))
+            }
+            "get-tuple-element" => {
+                let idx: usize = ins.attr("index")?.parse()?;
+                let t = self.operand(env, ins, 0)?.tuple()?;
+                t.get(idx)
+                    .cloned()
+                    .with_context(|| format!("tuple index {idx} out of range"))
+            }
+            "call" => {
+                let comp = self.m.computation(ins.attr("to_apply")?)?;
+                let mut argv = Vec::with_capacity(ins.operands.len());
+                for i in 0..ins.operands.len() {
+                    argv.push(self.operand(env, ins, i)?.clone());
+                }
+                self.eval_computation(comp, &argv)
+            }
+            "while" => {
+                let cond = self.m.computation(ins.attr("condition")?)?;
+                let body = self.m.computation(ins.attr("body")?)?;
+                let mut state = self.operand(env, ins, 0)?.clone();
+                for _ in 0..MAX_WHILE_ITERS {
+                    let c = self.eval_computation(cond, &[state.clone()])?;
+                    if c.arr()?.scalar() == 0.0 {
+                        return Ok(state);
+                    }
+                    state = self.eval_computation(body, &[state])?;
+                }
+                bail!("while iteration cap ({MAX_WHILE_ITERS}) exceeded")
+            }
+            "conditional" => self.eval_conditional(ins, env),
+            "select" => {
+                let p = self.operand_arr(env, ins, 0)?;
+                let t = self.operand_arr(env, ins, 1)?;
+                let f = self.operand_arr(env, ins, 2)?;
+                let out = if p.data.len() == 1 {
+                    if p.scalar() != 0.0 {
+                        t.data.clone()
+                    } else {
+                        f.data.clone()
+                    }
+                } else {
+                    p.data
+                        .iter()
+                        .zip(t.data.iter().zip(&f.data))
+                        .map(|(&c, (&a, &b))| if c != 0.0 { a } else { b })
+                        .collect()
+                };
+                self.out_arr(&ins.shape, out)
+            }
+            "compare" => {
+                let a = self.operand_arr(env, ins, 0)?;
+                let b = self.operand_arr(env, ins, 1)?;
+                let dir = ins.attr("direction")?;
+                let out = a
+                    .data
+                    .iter()
+                    .zip(&b.data)
+                    .map(|(&x, &y)| {
+                        compare(dir, x, y).map(|c| if c { 1.0 } else { 0.0 })
+                    })
+                    .collect::<Result<Vec<f64>>>()?;
+                self.out_arr(&ins.shape, out)
+            }
+            "bitcast-convert" => {
+                let x = self.operand_arr(env, ins, 0)?;
+                let dst = ins.shape.ty()?;
+                let out = x
+                    .data
+                    .iter()
+                    .map(|&v| bitcast(x.ty, dst, v))
+                    .collect::<Result<Vec<f64>>>()?;
+                // Bit patterns are already canonical for dst.
+                Ok(Value::Arr(ArrayV::new(dst, ins.shape.dims().to_vec(), out)))
+            }
+            "broadcast" => self.eval_broadcast(ins, env),
+            "reshape" => {
+                let x = self.operand_arr(env, ins, 0)?;
+                Ok(Value::Arr(ArrayV::new(
+                    ins.shape.ty()?,
+                    ins.shape.dims().to_vec(),
+                    x.data.clone(),
+                )))
+            }
+            "transpose" => {
+                let x = self.operand_arr(env, ins, 0)?;
+                let perm: Vec<usize> = ins
+                    .attr_ints("dimensions")?
+                    .iter()
+                    .map(|&d| d as usize)
+                    .collect();
+                Ok(Value::Arr(transpose(x, &perm)))
+            }
+            "slice" => self.eval_slice(ins, env),
+            "concatenate" => self.eval_concatenate(ins, env),
+            "iota" => {
+                let d: usize = ins.attr("iota_dimension")?.parse()?;
+                let dims = ins.shape.dims();
+                let mut out = vec![0.0; ins.shape.elems()];
+                let mut idx = vec![0usize; dims.len()];
+                let mut flat = 0usize;
+                loop {
+                    out[flat] = idx[d] as f64;
+                    flat += 1;
+                    if !next_index(&mut idx, dims) {
+                        break;
+                    }
+                }
+                self.out_arr(&ins.shape, out)
+            }
+            "pad" => self.eval_pad(ins, env),
+            "dynamic-slice" => self.eval_dynamic_slice(ins, env),
+            "dynamic-update-slice" => self.eval_dynamic_update_slice(ins, env),
+            "dot" => self.eval_dot(ins, env),
+            "reduce" => self.eval_reduce(ins, env),
+            "gather" => self.eval_gather(ins, env),
+            "scatter" => self.eval_scatter(ins, env),
+            _ if UNARY_OPS.contains(&op) => {
+                let x = self.operand_arr(env, ins, 0)?;
+                let ty = ins.shape.ty()?;
+                let out = if op == "convert" && !ty.is_float() && x.ty.is_float()
+                {
+                    // float -> int converts round toward zero
+                    x.data.iter().map(|v| v.trunc()).collect()
+                } else {
+                    x.data
+                        .iter()
+                        .map(|&v| unary(op, v))
+                        .collect::<Result<Vec<f64>>>()?
+                };
+                self.out_arr(&ins.shape, out)
+            }
+            _ if SHIFT_OPS.contains(&op) => {
+                let a = self.operand_arr(env, ins, 0)?;
+                let b = self.operand_arr(env, ins, 1)?;
+                let ty = ins.shape.ty()?;
+                let out = a
+                    .data
+                    .iter()
+                    .zip(&b.data)
+                    .map(|(&x, &y)| bitop(op, ty, x, y))
+                    .collect::<Result<Vec<f64>>>()?;
+                self.out_arr(&ins.shape, out)
+            }
+            _ if BINARY_OPS.contains(&op) => {
+                let a = self.operand_arr(env, ins, 0)?;
+                let b = self.operand_arr(env, ins, 1)?;
+                let ty = ins.shape.ty()?;
+                let bitwise = matches!(op, "and" | "or" | "xor")
+                    && ty != DType::Pred;
+                let out = a
+                    .data
+                    .iter()
+                    .zip(&b.data)
+                    .map(|(&x, &y)| {
+                        if bitwise {
+                            bitop(op, ty, x, y)
+                        } else {
+                            binary(op, x, y)
+                        }
+                    })
+                    .collect::<Result<Vec<f64>>>()?;
+                self.out_arr(&ins.shape, out)
+            }
+            other => bail!("unsupported HLO op '{other}'"),
+        }
+    }
+
+    fn eval_conditional(&self, ins: &Instr, env: &Env<'_>) -> Result<Value> {
+        let sel = self.operand_arr(env, ins, 0)?;
+        if let Some(branches) = ins.attrs.get("branch_computations") {
+            let names: Vec<&str> = branches
+                .trim_start_matches('{')
+                .trim_end_matches('}')
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .collect();
+            if names.is_empty() {
+                bail!("conditional with no branches");
+            }
+            let k = (sel.scalar() as i64).clamp(0, names.len() as i64 - 1)
+                as usize;
+            let comp = self.m.computation(names[k])?;
+            let arg = self.operand(env, ins, 1 + k)?.clone();
+            return self.eval_computation(comp, &[arg]);
+        }
+        let ct = self.m.computation(ins.attr("true_computation")?)?;
+        let cf = self.m.computation(ins.attr("false_computation")?)?;
+        if sel.scalar() != 0.0 {
+            let arg = self.operand(env, ins, 1)?.clone();
+            self.eval_computation(ct, &[arg])
+        } else {
+            let arg = self.operand(env, ins, 2)?.clone();
+            self.eval_computation(cf, &[arg])
+        }
+    }
+
+    fn eval_broadcast(&self, ins: &Instr, env: &Env<'_>) -> Result<Value> {
+        let x = self.operand_arr(env, ins, 0)?;
+        let bdims: Vec<usize> = ins
+            .attr_ints_or_empty("dimensions")?
+            .iter()
+            .map(|&d| d as usize)
+            .collect();
+        let out_dims = ins.shape.dims();
+        let in_strides = strides(&x.dims);
+        let mut out = vec![0.0; ins.shape.elems()];
+        let mut idx = vec![0usize; out_dims.len()];
+        let mut flat = 0usize;
+        loop {
+            let mut src = 0usize;
+            for (k, &od) in bdims.iter().enumerate() {
+                src += in_strides[k] * idx[od];
+            }
+            out[flat] = x.data[src];
+            flat += 1;
+            if !next_index(&mut idx, out_dims) {
+                break;
+            }
+        }
+        self.out_arr(&ins.shape, out)
+    }
+
+    fn eval_slice(&self, ins: &Instr, env: &Env<'_>) -> Result<Value> {
+        let x = self.operand_arr(env, ins, 0)?;
+        let spec = ins.attr("slice")?;
+        let inner = spec.trim_start_matches('{').trim_end_matches('}');
+        let mut ranges = Vec::new();
+        for part in inner.split(',') {
+            let p = part.trim().trim_start_matches('[').trim_end_matches(']');
+            if p.is_empty() {
+                continue;
+            }
+            let nums: Vec<i64> = p
+                .split(':')
+                .map(|v| v.trim().parse::<i64>())
+                .collect::<std::result::Result<_, _>>()
+                .map_err(|_| anyhow!("bad slice range '{part}'"))?;
+            let (start, limit, stride) = match nums.len() {
+                2 => (nums[0], nums[1], 1),
+                3 => (nums[0], nums[1], nums[2]),
+                _ => bail!("bad slice range '{part}'"),
+            };
+            ranges.push((start as usize, limit as usize, stride as usize));
+        }
+        if ranges.len() != x.dims.len() {
+            bail!("slice rank mismatch");
+        }
+        let out_dims = ins.shape.dims();
+        let in_strides = strides(&x.dims);
+        let mut out = vec![0.0; ins.shape.elems()];
+        let mut idx = vec![0usize; out_dims.len()];
+        let mut flat = 0usize;
+        loop {
+            let mut src = 0usize;
+            for d in 0..out_dims.len() {
+                src += in_strides[d] * (ranges[d].0 + idx[d] * ranges[d].2);
+            }
+            out[flat] = x.data[src];
+            flat += 1;
+            if !next_index(&mut idx, out_dims) {
+                break;
+            }
+        }
+        self.out_arr(&ins.shape, out)
+    }
+
+    fn eval_concatenate(&self, ins: &Instr, env: &Env<'_>) -> Result<Value> {
+        let d: usize = ins
+            .attr("dimensions")?
+            .trim_start_matches('{')
+            .trim_end_matches('}')
+            .trim()
+            .parse()?;
+        let out_dims = ins.shape.dims();
+        let outer: usize = out_dims[..d].iter().product();
+        let inner: usize = out_dims[d + 1..].iter().product();
+        let total_axis = out_dims[d];
+        let mut out = vec![0.0; ins.shape.elems()];
+        let mut axis_off = 0usize;
+        for i in 0..ins.operands.len() {
+            let part = self.operand_arr(env, ins, i)?;
+            let n = part.dims[d];
+            for o in 0..outer {
+                let src0 = o * n * inner;
+                let dst0 = (o * total_axis + axis_off) * inner;
+                out[dst0..dst0 + n * inner]
+                    .copy_from_slice(&part.data[src0..src0 + n * inner]);
+            }
+            axis_off += n;
+        }
+        self.out_arr(&ins.shape, out)
+    }
+
+    fn eval_pad(&self, ins: &Instr, env: &Env<'_>) -> Result<Value> {
+        let x = self.operand_arr(env, ins, 0)?;
+        let pv = self.operand_arr(env, ins, 1)?.scalar();
+        let out_dims = ins.shape.dims();
+        // padding=lo_hi[_interior]x... one group per dimension
+        let mut cfg = Vec::new();
+        for part in ins.attr("padding")?.split('x') {
+            let nums: Vec<i64> = part
+                .split('_')
+                .map(|v| v.trim().parse::<i64>())
+                .collect::<std::result::Result<_, _>>()
+                .map_err(|_| anyhow!("bad padding group '{part}'"))?;
+            let (lo, interior) = match nums.len() {
+                2 => (nums[0], 0),
+                3 => (nums[0], nums[2]),
+                _ => bail!("bad padding group '{part}'"),
+            };
+            cfg.push((lo, 1 + interior));
+        }
+        if cfg.len() != x.dims.len() {
+            bail!("pad rank mismatch");
+        }
+        let mut out = vec![pv; ins.shape.elems()];
+        // Source element j of dim d lands at lo + j*step; keep the
+        // in-bounds j range (negative padding truncates).
+        let mut j0 = vec![0i64; cfg.len()];
+        let mut j1 = vec![0i64; cfg.len()];
+        let mut empty = false;
+        for (d, &(lo, step)) in cfg.iter().enumerate() {
+            let n = x.dims[d] as i64;
+            let outn = out_dims[d] as i64;
+            j0[d] = if lo < 0 { (-lo + step - 1) / step } else { 0 };
+            j1[d] = if n > 0 { ((outn - 1 - lo) / step).min(n - 1) } else { -1 };
+            if j1[d] < j0[d] {
+                empty = true;
+            }
+        }
+        if !empty {
+            let in_strides = strides(&x.dims);
+            let out_strides = strides(out_dims);
+            let span: Vec<usize> = (0..cfg.len())
+                .map(|d| (j1[d] - j0[d] + 1) as usize)
+                .collect();
+            let mut idx = vec![0usize; cfg.len()];
+            loop {
+                let mut src = 0usize;
+                let mut dst = 0usize;
+                for d in 0..cfg.len() {
+                    let j = j0[d] + idx[d] as i64;
+                    src += in_strides[d] * j as usize;
+                    dst += out_strides[d] * (cfg[d].0 + j * cfg[d].1) as usize;
+                }
+                out[dst] = x.data[src];
+                if !next_index(&mut idx, &span) {
+                    break;
+                }
+            }
+        }
+        self.out_arr(&ins.shape, out)
+    }
+
+    fn eval_dynamic_slice(&self, ins: &Instr, env: &Env<'_>) -> Result<Value> {
+        let x = self.operand_arr(env, ins, 0)?;
+        let sizes: Vec<usize> = ins
+            .attr_ints("dynamic_slice_sizes")?
+            .iter()
+            .map(|&v| v as usize)
+            .collect();
+        let mut starts = Vec::with_capacity(x.dims.len());
+        for d in 0..x.dims.len() {
+            let i = self.operand_arr(env, ins, 1 + d)?.scalar() as i64;
+            let max = (x.dims[d] - sizes[d]) as i64;
+            starts.push(i.clamp(0, max) as usize);
+        }
+        let in_strides = strides(&x.dims);
+        let mut out = vec![0.0; ins.shape.elems()];
+        let mut idx = vec![0usize; sizes.len()];
+        let mut flat = 0usize;
+        loop {
+            let mut src = 0usize;
+            for d in 0..sizes.len() {
+                src += in_strides[d] * (starts[d] + idx[d]);
+            }
+            out[flat] = x.data[src];
+            flat += 1;
+            if !next_index(&mut idx, &sizes) {
+                break;
+            }
+        }
+        self.out_arr(&ins.shape, out)
+    }
+
+    fn eval_dynamic_update_slice(&self, ins: &Instr, env: &Env<'_>) -> Result<Value> {
+        let x = self.operand_arr(env, ins, 0)?;
+        let u = self.operand_arr(env, ins, 1)?;
+        let mut starts = Vec::with_capacity(x.dims.len());
+        for d in 0..x.dims.len() {
+            let i = self.operand_arr(env, ins, 2 + d)?.scalar() as i64;
+            let max = (x.dims[d] - u.dims[d]) as i64;
+            starts.push(i.clamp(0, max) as usize);
+        }
+        let mut out = x.data.clone();
+        let out_strides = strides(&x.dims);
+        let mut idx = vec![0usize; u.dims.len()];
+        let mut flat = 0usize;
+        loop {
+            let mut dst = 0usize;
+            for d in 0..u.dims.len() {
+                dst += out_strides[d] * (starts[d] + idx[d]);
+            }
+            out[dst] = u.data[flat];
+            flat += 1;
+            if !next_index(&mut idx, &u.dims) {
+                break;
+            }
+        }
+        self.out_arr(&ins.shape, out)
+    }
+
+    fn eval_dot(&self, ins: &Instr, env: &Env<'_>) -> Result<Value> {
+        let lhs = self.operand_arr(env, ins, 0)?;
+        let rhs = self.operand_arr(env, ins, 1)?;
+        let to_usize =
+            |v: Vec<i64>| v.into_iter().map(|d| d as usize).collect::<Vec<_>>();
+        let lc = to_usize(ins.attr_ints_or_empty("lhs_contracting_dims")?);
+        let rc = to_usize(ins.attr_ints_or_empty("rhs_contracting_dims")?);
+        let lb = to_usize(ins.attr_ints_or_empty("lhs_batch_dims")?);
+        let rb = to_usize(ins.attr_ints_or_empty("rhs_batch_dims")?);
+        let lfree: Vec<usize> = (0..lhs.dims.len())
+            .filter(|d| !lc.contains(d) && !lb.contains(d))
+            .collect();
+        let rfree: Vec<usize> = (0..rhs.dims.len())
+            .filter(|d| !rc.contains(d) && !rb.contains(d))
+            .collect();
+        let prod = |dims: &[usize], ds: &[usize]| -> usize {
+            ds.iter().map(|&d| dims[d]).product::<usize>().max(1)
+        };
+        let bsz = prod(&lhs.dims, &lb);
+        let m = prod(&lhs.dims, &lfree);
+        let k = prod(&lhs.dims, &lc);
+        let n = prod(&rhs.dims, &rfree);
+
+        let mut aperm = lb.clone();
+        aperm.extend(&lfree);
+        aperm.extend(&lc);
+        let a = transpose(lhs, &aperm);
+        let mut bperm = rb.clone();
+        bperm.extend(&rc);
+        bperm.extend(&rfree);
+        let b = transpose(rhs, &bperm);
+
+        let mut out = vec![0.0; bsz * m * n];
+        for bb in 0..bsz {
+            let a0 = bb * m * k;
+            let b0 = bb * k * n;
+            let o0 = bb * m * n;
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0.0f64;
+                    for kk in 0..k {
+                        acc += a.data[a0 + i * k + kk] * b.data[b0 + kk * n + j];
+                    }
+                    out[o0 + i * n + j] = acc;
+                }
+            }
+        }
+        self.out_arr(&ins.shape, out)
+    }
+
+    fn eval_reduce(&self, ins: &Instr, env: &Env<'_>) -> Result<Value> {
+        let n = ins.operands.len() / 2;
+        if n == 0 {
+            bail!("reduce with no operands");
+        }
+        let ops: Vec<&ArrayV> = (0..n)
+            .map(|i| self.operand_arr(env, ins, i))
+            .collect::<Result<_>>()?;
+        let inits: Vec<&ArrayV> = (0..n)
+            .map(|i| self.operand_arr(env, ins, n + i))
+            .collect::<Result<_>>()?;
+        let dims: Vec<usize> = ins
+            .attr_ints("dimensions")?
+            .iter()
+            .map(|&d| d as usize)
+            .collect();
+        let comp = self.m.computation(ins.attr("to_apply")?)?;
+        let in_dims = &ops[0].dims;
+        let kept: Vec<usize> =
+            (0..in_dims.len()).filter(|d| !dims.contains(d)).collect();
+        let out_dims: Vec<usize> = kept.iter().map(|&d| in_dims[d]).collect();
+        let red_n: usize =
+            dims.iter().map(|&d| in_dims[d]).product::<usize>().max(1);
+        let out_n: usize = out_dims.iter().product::<usize>().max(1);
+
+        // Move reduced dims last (kept order preserved), flatten.
+        let mut perm = kept.clone();
+        perm.extend(&dims);
+        let flat: Vec<ArrayV> = ops.iter().map(|o| transpose(o, &perm)).collect();
+
+        let fast = self.fast_reducer(comp, n);
+        let mut outs: Vec<Vec<f64>> = vec![vec![0.0; out_n]; n];
+        for i in 0..out_n {
+            let mut acc: Vec<f64> =
+                inits.iter().map(|init| init.scalar()).collect();
+            for j in 0..red_n {
+                match fast {
+                    Some(op) => {
+                        acc[0] = binary(op, acc[0], flat[0].data[i * red_n + j])?;
+                    }
+                    None => {
+                        let mut argv: Vec<Value> =
+                            Vec::with_capacity(2 * n);
+                        for (k, a) in acc.iter().enumerate() {
+                            argv.push(Value::Arr(ArrayV::new(
+                                ops[k].ty,
+                                vec![],
+                                vec![*a],
+                            )));
+                        }
+                        for (k, f) in flat.iter().enumerate() {
+                            argv.push(Value::Arr(ArrayV::new(
+                                ops[k].ty,
+                                vec![],
+                                vec![f.data[i * red_n + j]],
+                            )));
+                        }
+                        let r = self.eval_computation(comp, &argv)?;
+                        match r {
+                            Value::Arr(a) => acc[0] = a.scalar(),
+                            Value::Tuple(vs) => {
+                                for (k, v) in vs.iter().enumerate() {
+                                    acc[k] = v.arr()?.scalar();
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            for k in 0..n {
+                outs[k][i] = acc[k];
+            }
+        }
+
+        let shapes: Vec<Shape> = match &ins.shape {
+            Shape::Tuple(v) => v.clone(),
+            s => vec![s.clone()],
+        };
+        let mut results = Vec::with_capacity(n);
+        for (s, mut o) in shapes.into_iter().zip(outs) {
+            let ty = s.ty()?;
+            finalize(ty, &mut o);
+            results.push(Value::Arr(ArrayV::new(ty, out_dims.clone(), o)));
+        }
+        if results.len() == 1 && !matches!(ins.shape, Shape::Tuple(_)) {
+            Ok(results.pop().unwrap())
+        } else {
+            Ok(Value::Tuple(results))
+        }
+    }
+
+    /// Recognise single-instruction scalar reducers (add/mul/max/min).
+    fn fast_reducer(&self, comp: &Computation, n: usize) -> Option<&'static str> {
+        if n != 1 || comp.instrs.len() != 3 {
+            return None;
+        }
+        let root = comp.instrs.iter().find(|i| i.name == comp.root)?;
+        match root.op.as_str() {
+            "add" => Some("add"),
+            "multiply" => Some("multiply"),
+            "maximum" => Some("maximum"),
+            "minimum" => Some("minimum"),
+            _ => None,
+        }
+    }
+
+    fn eval_gather(&self, ins: &Instr, env: &Env<'_>) -> Result<Value> {
+        let operand = self.operand_arr(env, ins, 0)?;
+        let start = self.operand_arr(env, ins, 1)?;
+        let to_usize =
+            |v: Vec<i64>| v.into_iter().map(|d| d as usize).collect::<Vec<_>>();
+        let offset_dims = to_usize(ins.attr_ints_or_empty("offset_dims")?);
+        let collapsed =
+            to_usize(ins.attr_ints_or_empty("collapsed_slice_dims")?);
+        let start_map = to_usize(ins.attr_ints_or_empty("start_index_map")?);
+        let ob = to_usize(ins.attr_ints_or_empty("operand_batching_dims")?);
+        let sb = to_usize(
+            ins.attr_ints_or_empty("start_indices_batching_dims")?,
+        );
+        let ivd: usize = ins.attr("index_vector_dim")?.parse()?;
+        let sizes = to_usize(ins.attr_ints("slice_sizes")?);
+
+        let out_dims = ins.shape.dims();
+        let batch_out: Vec<usize> = (0..out_dims.len())
+            .filter(|d| !offset_dims.contains(d))
+            .collect();
+        let sidx_dims: Vec<usize> =
+            (0..start.dims.len()).filter(|&d| d != ivd).collect();
+        let off_operand: Vec<usize> = (0..operand.dims.len())
+            .filter(|d| !collapsed.contains(d) && !ob.contains(d))
+            .collect();
+
+        let s_strides = strides(&start.dims);
+        let o_strides = strides(&operand.dims);
+        let mut out = vec![0.0; ins.shape.elems()];
+        let mut oidx = vec![0usize; out_dims.len()];
+        let mut flat = 0usize;
+        let mut scoord = vec![0usize; start.dims.len()];
+        loop {
+            for c in scoord.iter_mut() {
+                *c = 0;
+            }
+            for (bpos, &odim) in batch_out.iter().enumerate() {
+                scoord[sidx_dims[bpos]] = oidx[odim];
+            }
+            let mut full_start = vec![0usize; operand.dims.len()];
+            for (k, &od) in start_map.iter().enumerate() {
+                let mut c = scoord.clone();
+                if ivd < start.dims.len() {
+                    c[ivd] = k;
+                }
+                let sflat: usize = c
+                    .iter()
+                    .zip(&s_strides)
+                    .map(|(&a, &b)| a * b)
+                    .sum();
+                let v = start.data[sflat] as i64;
+                let max = (operand.dims[od] - sizes[od]) as i64;
+                full_start[od] = v.clamp(0, max) as usize;
+            }
+            for (&obd, &sbd) in ob.iter().zip(&sb) {
+                full_start[obd] = scoord[sbd];
+            }
+            let mut src = full_start;
+            for (k, &od) in off_operand.iter().enumerate() {
+                src[od] += oidx[offset_dims[k]];
+            }
+            let sflat: usize =
+                src.iter().zip(&o_strides).map(|(&a, &b)| a * b).sum();
+            out[flat] = operand.data[sflat];
+            flat += 1;
+            if !next_index(&mut oidx, out_dims) {
+                break;
+            }
+        }
+        self.out_arr(&ins.shape, out)
+    }
+
+    fn eval_scatter(&self, ins: &Instr, env: &Env<'_>) -> Result<Value> {
+        let operand = self.operand_arr(env, ins, 0)?;
+        let indices = self.operand_arr(env, ins, 1)?;
+        let updates = self.operand_arr(env, ins, 2)?;
+        let to_usize =
+            |v: Vec<i64>| v.into_iter().map(|d| d as usize).collect::<Vec<_>>();
+        let uwd = to_usize(ins.attr_ints_or_empty("update_window_dims")?);
+        let iwd = to_usize(ins.attr_ints_or_empty("inserted_window_dims")?);
+        let sdod = to_usize(
+            ins.attr_ints_or_empty("scatter_dims_to_operand_dims")?,
+        );
+        let ib = to_usize(ins.attr_ints_or_empty("input_batching_dims")?);
+        let sib = to_usize(
+            ins.attr_ints_or_empty("scatter_indices_batching_dims")?,
+        );
+        let ivd: usize = ins.attr("index_vector_dim")?.parse()?;
+        let comp = self.m.computation(ins.attr("to_apply")?)?;
+
+        let sidx_dims: Vec<usize> =
+            (0..indices.dims.len()).filter(|&d| d != ivd).collect();
+        let batch_upd: Vec<usize> = (0..updates.dims.len())
+            .filter(|d| !uwd.contains(d))
+            .collect();
+        let win_operand: Vec<usize> = (0..operand.dims.len())
+            .filter(|d| !iwd.contains(d) && !ib.contains(d))
+            .collect();
+
+        let i_strides = strides(&indices.dims);
+        let o_strides = strides(&operand.dims);
+        let mut out = operand.data.clone();
+        let mut uidx = vec![0usize; updates.dims.len()];
+        let mut flat = 0usize;
+        let mut scoord = vec![0usize; indices.dims.len()];
+        loop {
+            for c in scoord.iter_mut() {
+                *c = 0;
+            }
+            for (bpos, &udim) in batch_upd.iter().enumerate() {
+                scoord[sidx_dims[bpos]] = uidx[udim];
+            }
+            let mut tgt = vec![0i64; operand.dims.len()];
+            for (k, &od) in sdod.iter().enumerate() {
+                let mut c = scoord.clone();
+                if ivd < indices.dims.len() {
+                    c[ivd] = k;
+                }
+                let iflat: usize = c
+                    .iter()
+                    .zip(&i_strides)
+                    .map(|(&a, &b)| a * b)
+                    .sum();
+                tgt[od] = indices.data[iflat] as i64;
+            }
+            for (&obd, &sbd) in ib.iter().zip(&sib) {
+                tgt[obd] = scoord[sbd] as i64;
+            }
+            for (k, &od) in win_operand.iter().enumerate() {
+                tgt[od] += uidx[uwd[k]] as i64;
+            }
+            let oob = tgt
+                .iter()
+                .zip(&operand.dims)
+                .any(|(&t, &d)| t < 0 || t >= d as i64);
+            if !oob {
+                let oflat: usize = tgt
+                    .iter()
+                    .zip(&o_strides)
+                    .map(|(&a, &b)| a as usize * b)
+                    .sum();
+                let cur = out[oflat];
+                let upd = updates.data[flat];
+                let argv = [
+                    Value::Arr(ArrayV::new(operand.ty, vec![], vec![cur])),
+                    Value::Arr(ArrayV::new(updates.ty, vec![], vec![upd])),
+                ];
+                let r = self.eval_computation(comp, &argv)?;
+                let rv = match &r {
+                    Value::Arr(a) => a.scalar(),
+                    Value::Tuple(vs) => vs[0].arr()?.scalar(),
+                };
+                out[oflat] = rv;
+            }
+            flat += 1;
+            if !next_index(&mut uidx, &updates.dims) {
+                break;
+            }
+        }
+        self.out_arr(&ins.shape, out)
+    }
+}
+
+/// Materialise a transposed copy: `out.dims[i] = in.dims[perm[i]]`.
+fn transpose(x: &ArrayV, perm: &[usize]) -> ArrayV {
+    if perm.iter().enumerate().all(|(i, &p)| i == p) {
+        return x.clone();
+    }
+    let out_dims: Vec<usize> = perm.iter().map(|&p| x.dims[p]).collect();
+    let in_strides = strides(&x.dims);
+    let mut out = vec![0.0; x.data.len()];
+    let mut idx = vec![0usize; out_dims.len()];
+    let mut flat = 0usize;
+    loop {
+        let mut src = 0usize;
+        for (i, &p) in perm.iter().enumerate() {
+            src += in_strides[p] * idx[i];
+        }
+        out[flat] = x.data[src];
+        flat += 1;
+        if !next_index(&mut idx, &out_dims) {
+            break;
+        }
+    }
+    ArrayV::new(x.ty, out_dims, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::parser::parse_module;
+
+    fn run1(text: &str, args: &[Value]) -> ArrayV {
+        let m = parse_module(text).unwrap();
+        match Evaluator::new(&m).run(args).unwrap() {
+            Value::Arr(a) => a,
+            Value::Tuple(mut v) => match v.remove(0) {
+                Value::Arr(a) => a,
+                _ => panic!("nested tuple"),
+            },
+        }
+    }
+
+    fn f64v(dims: &[usize], data: &[f64]) -> Value {
+        Value::Arr(ArrayV::new(DType::F64, dims.to_vec(), data.to_vec()))
+    }
+
+    #[test]
+    fn wrap_int_semantics() {
+        assert_eq!(wrap_int(DType::U32, 32, -5.0), 4294967291.0);
+        assert_eq!(wrap_int(DType::U32, 32, 4294967296.0 + 3.0), 3.0);
+        assert_eq!(wrap_int(DType::S32, 32, 2147483648.0), -2147483648.0);
+        assert_eq!(wrap_int(DType::S32, 32, -5.0), -5.0);
+    }
+
+    #[test]
+    fn bitops_match_integer_domain() {
+        assert_eq!(bitop("shift-left", DType::U32, 1.0, 31.0).unwrap(), 2147483648.0);
+        assert_eq!(bitop("shift-left", DType::U32, 1.0, 32.0).unwrap(), 0.0);
+        assert_eq!(
+            bitop("shift-right-logical", DType::U32, 2147483648.0, 31.0).unwrap(),
+            1.0
+        );
+        assert_eq!(
+            bitop("xor", DType::U32, 0xF0F0 as f64, 0x0F0F as f64).unwrap(),
+            0xFFFF as f64
+        );
+    }
+
+    #[test]
+    fn bitcast_u32_f32_roundtrip() {
+        let bits = 0x3F800000u32 as f64; // 1.0f32
+        assert_eq!(bitcast(DType::U32, DType::F32, bits).unwrap(), 1.0);
+        assert_eq!(bitcast(DType::F32, DType::U32, 1.0).unwrap(), bits);
+    }
+
+    #[test]
+    fn elementwise_add_and_f32_rounding() {
+        let t = "HloModule m\nENTRY e {\n  a = f32[2]{0} parameter(0)\n  b = f32[2]{0} parameter(1)\n  ROOT s = f32[2]{0} add(a, b)\n}\n";
+        let a = Value::Arr(ArrayV::new(DType::F32, vec![2], vec![0.1, 1e8]));
+        let b = Value::Arr(ArrayV::new(DType::F32, vec![2], vec![0.2, 1.0]));
+        let r = run1(t, &[a, b]);
+        assert_eq!(r.data[0], (0.1f32 + 0.2f32) as f64);
+        assert_eq!(r.data[1], (1e8f32 + 1.0f32) as f64);
+    }
+
+    #[test]
+    fn dot_matmul_2x2() {
+        let t = "HloModule m\nENTRY e {\n  a = f64[2,2]{1,0} parameter(0)\n  b = f64[2,2]{1,0} parameter(1)\n  ROOT d = f64[2,2]{1,0} dot(a, b), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n}\n";
+        let a = f64v(&[2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        let b = f64v(&[2, 2], &[5.0, 6.0, 7.0, 8.0]);
+        let r = run1(t, &[a, b]);
+        assert_eq!(r.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn dot_inner_product() {
+        let t = "HloModule m\nENTRY e {\n  a = f64[3]{0} parameter(0)\n  b = f64[3]{0} parameter(1)\n  ROOT d = f64[] dot(a, b), lhs_contracting_dims={0}, rhs_contracting_dims={0}\n}\n";
+        let r = run1(
+            t,
+            &[f64v(&[3], &[1.0, 2.0, 3.0]), f64v(&[3], &[4.0, 5.0, 6.0])],
+        );
+        assert_eq!(r.data, vec![32.0]);
+    }
+
+    #[test]
+    fn broadcast_scalar_and_vector() {
+        let t = "HloModule m\nENTRY e {\n  s = f64[] parameter(0)\n  ROOT b = f64[2,2]{1,0} broadcast(s), dimensions={}\n}\n";
+        let r = run1(t, &[f64v(&[], &[7.0])]);
+        assert_eq!(r.data, vec![7.0; 4]);
+        let t2 = "HloModule m\nENTRY e {\n  v = f64[2]{0} parameter(0)\n  ROOT b = f64[2,3]{1,0} broadcast(v), dimensions={0}\n}\n";
+        let r2 = run1(t2, &[f64v(&[2], &[1.0, 2.0])]);
+        assert_eq!(r2.data, vec![1.0, 1.0, 1.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn reshape_transpose_slice() {
+        let t = "HloModule m\nENTRY e {\n  a = f64[2,3]{1,0} parameter(0)\n  t = f64[3,2]{1,0} transpose(a), dimensions={1,0}\n  ROOT s = f64[2,2]{1,0} slice(t), slice={[1:3], [0:2]}\n}\n";
+        let a = f64v(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = run1(t, &[a]);
+        // transpose -> [[1,4],[2,5],[3,6]]; slice rows 1..3
+        assert_eq!(r.data, vec![2.0, 5.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn reduce_sum_rows() {
+        let t = "HloModule m\nr {\n  x = f64[] parameter(0)\n  y = f64[] parameter(1)\n  ROOT a = f64[] add(x, y)\n}\nENTRY e {\n  a = f64[2,3]{1,0} parameter(0)\n  z = f64[] constant(0)\n  ROOT r2 = f64[2]{0} reduce(a, z), dimensions={1}, to_apply=r\n}\n";
+        let a = f64v(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = run1(t, &[a]);
+        assert_eq!(r.data, vec![6.0, 15.0]);
+    }
+
+    #[test]
+    fn reduce_max_all_dims() {
+        let t = "HloModule m\nr {\n  x = f64[] parameter(0)\n  y = f64[] parameter(1)\n  ROOT a = f64[] maximum(x, y)\n}\nENTRY e {\n  a = f64[2,2]{1,0} parameter(0)\n  z = f64[] constant(-inf)\n  ROOT r2 = f64[] reduce(a, z), dimensions={0,1}, to_apply=r\n}\n";
+        let r = run1(t, &[f64v(&[2, 2], &[3.0, 9.0, -1.0, 4.0])]);
+        assert_eq!(r.data, vec![9.0]);
+    }
+
+    #[test]
+    fn pad_positive_negative_interior() {
+        let t = "HloModule m\nENTRY e {\n  a = f64[3]{0} parameter(0)\n  z = f64[] constant(0)\n  ROOT p = f64[7]{0} pad(a, z), padding=1_1_1\n}\n";
+        let r = run1(t, &[f64v(&[3], &[1.0, 2.0, 3.0])]);
+        assert_eq!(r.data, vec![0.0, 1.0, 0.0, 2.0, 0.0, 3.0, 0.0]);
+        // negative low padding truncates the first element
+        let t2 = "HloModule m\nENTRY e {\n  a = f64[3]{0} parameter(0)\n  z = f64[] constant(9)\n  ROOT p = f64[2]{0} pad(a, z), padding=-1_0\n}\n";
+        let r2 = run1(t2, &[f64v(&[3], &[1.0, 2.0, 3.0])]);
+        assert_eq!(r2.data, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn dynamic_slice_clamps() {
+        let t = "HloModule m\nENTRY e {\n  a = f64[4]{0} parameter(0)\n  i = s32[] parameter(1)\n  ROOT d = f64[2]{0} dynamic-slice(a, i), dynamic_slice_sizes={2}\n}\n";
+        let a = f64v(&[4], &[1.0, 2.0, 3.0, 4.0]);
+        let i = Value::Arr(ArrayV::new(DType::S32, vec![], vec![9.0]));
+        let r = run1(t, &[a, i]); // start clamped to 2
+        assert_eq!(r.data, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn dynamic_update_slice_writes() {
+        let t = "HloModule m\nENTRY e {\n  a = f64[4]{0} parameter(0)\n  u = f64[2]{0} parameter(1)\n  i = s32[] parameter(2)\n  ROOT d = f64[4]{0} dynamic-update-slice(a, u, i)\n}\n";
+        let a = f64v(&[4], &[1.0, 2.0, 3.0, 4.0]);
+        let u = f64v(&[2], &[8.0, 9.0]);
+        let i = Value::Arr(ArrayV::new(DType::S32, vec![], vec![1.0]));
+        let r = run1(t, &[a, u, i]);
+        assert_eq!(r.data, vec![1.0, 8.0, 9.0, 4.0]);
+    }
+
+    #[test]
+    fn while_loop_counts() {
+        let t = "HloModule m\n\
+            cond {\n  s = (s32[]) parameter(0)\n  i = s32[] get-tuple-element(s), index=0\n  k = s32[] constant(5)\n  ROOT c = pred[] compare(i, k), direction=LT\n}\n\
+            body {\n  s = (s32[]) parameter(0)\n  i = s32[] get-tuple-element(s), index=0\n  one = s32[] constant(1)\n  j = s32[] add(i, one)\n  ROOT t = (s32[]) tuple(j)\n}\n\
+            ENTRY e {\n  z = s32[] constant(0)\n  t0 = (s32[]) tuple(z)\n  w = (s32[]) while(t0), condition=cond, body=body\n  ROOT r = s32[] get-tuple-element(w), index=0\n}\n";
+        let r = run1(t, &[]);
+        assert_eq!(r.data, vec![5.0]);
+    }
+
+    #[test]
+    fn conditional_indexed_branches() {
+        let t = "HloModule m\n\
+            b0 {\n  x = f64[] parameter(0)\n  ROOT n = f64[] negate(x)\n}\n\
+            b1 {\n  e = () parameter(0)\n  ROOT k = f64[] constant(42)\n}\n\
+            ENTRY e {\n  i = s32[] parameter(0)\n  x = f64[] parameter(1)\n  u = () tuple()\n  ROOT c = f64[] conditional(i, x, u), branch_computations={b0, b1}\n}\n";
+        let pick = |k: f64| {
+            run1(
+                t,
+                &[
+                    Value::Arr(ArrayV::new(DType::S32, vec![], vec![k])),
+                    f64v(&[], &[3.0]),
+                ],
+            )
+            .data[0]
+        };
+        assert_eq!(pick(0.0), -3.0);
+        assert_eq!(pick(1.0), 42.0);
+        assert_eq!(pick(7.0), 42.0); // clamped to last branch
+    }
+
+    #[test]
+    fn select_compare_convert() {
+        let t = "HloModule m\nENTRY e {\n  a = f64[3]{0} parameter(0)\n  b = f64[3]{0} parameter(1)\n  c = pred[3]{0} compare(a, b), direction=GT\n  ROOT s = f64[3]{0} select(c, a, b)\n}\n";
+        let r = run1(
+            t,
+            &[f64v(&[3], &[1.0, 5.0, 2.0]), f64v(&[3], &[3.0, 4.0, 2.0])],
+        );
+        assert_eq!(r.data, vec![3.0, 5.0, 2.0]); // elementwise max
+        let t2 = "HloModule m\nENTRY e {\n  a = f64[2]{0} parameter(0)\n  ROOT c = s32[2]{0} convert(a)\n}\n";
+        let r2 = run1(t2, &[f64v(&[2], &[2.9, -2.9])]);
+        assert_eq!(r2.data, vec![2.0, -2.0]); // round toward zero
+    }
+
+    #[test]
+    fn iota_and_concatenate() {
+        let t = "HloModule m\nENTRY e {\n  i = s32[2,3]{1,0} iota(), iota_dimension=1\n  j = s32[2,3]{1,0} iota(), iota_dimension=0\n  ROOT c = s32[2,6]{1,0} concatenate(i, j), dimensions={1}\n}\n";
+        let r = run1(t, &[]);
+        assert_eq!(
+            r.data,
+            vec![0.0, 1.0, 2.0, 0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 1.0, 1.0, 1.0]
+        );
+    }
+
+    #[test]
+    fn gather_rows() {
+        // Classic "take rows by index" gather.
+        let t = "HloModule m\nENTRY e {\n  a = f64[3,2]{1,0} parameter(0)\n  i = s32[2]{0} parameter(1)\n  ROOT g = f64[2,2]{1,0} gather(a, i), offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1,2}\n}\n";
+        let a = f64v(&[3, 2], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let i = Value::Arr(ArrayV::new(DType::S32, vec![2], vec![2.0, 0.0]));
+        let r = run1(t, &[a, i]);
+        assert_eq!(r.data, vec![5.0, 6.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn scatter_add_one_hot() {
+        // Add updates into rows selected by index (combiner = add).
+        let t = "HloModule m\nadd_c {\n  x = f64[] parameter(0)\n  y = f64[] parameter(1)\n  ROOT a = f64[] add(x, y)\n}\nENTRY e {\n  a = f64[3]{0} parameter(0)\n  i = s32[2]{0} parameter(1)\n  u = f64[2]{0} parameter(2)\n  ROOT s = f64[3]{0} scatter(a, i, u), update_window_dims={}, inserted_window_dims={0}, scatter_dims_to_operand_dims={0}, index_vector_dim=1, to_apply=add_c\n}\n";
+        let a = f64v(&[3], &[10.0, 20.0, 30.0]);
+        let i = Value::Arr(ArrayV::new(DType::S32, vec![2], vec![2.0, 0.0]));
+        let u = f64v(&[2], &[1.0, 2.0]);
+        let r = run1(t, &[a, i, u]);
+        assert_eq!(r.data, vec![12.0, 20.0, 31.0]);
+    }
+
+    #[test]
+    fn variadic_reduce_argmax() {
+        // (max value, argmax index) pair reduce — the cnn_predict pattern.
+        let t = "HloModule m\n\
+            amax {\n  v0 = f64[] parameter(0)\n  i0 = s32[] parameter(1)\n  v1 = f64[] parameter(2)\n  i1 = s32[] parameter(3)\n  gt = pred[] compare(v0, v1), direction=GT\n  v = f64[] select(gt, v0, v1)\n  i = s32[] select(gt, i0, i1)\n  ROOT t = (f64[], s32[]) tuple(v, i)\n}\n\
+            ENTRY e {\n  a = f64[4]{0} parameter(0)\n  i = s32[4]{0} iota(), iota_dimension=0\n  nv = f64[] constant(-inf)\n  zi = s32[] constant(0)\n  ROOT r = (f64[], s32[]) reduce(a, i, nv, zi), dimensions={0}, to_apply=amax\n}\n";
+        let m = parse_module(t).unwrap();
+        let a = f64v(&[4], &[1.0, 9.0, 3.0, 4.0]);
+        let out = Evaluator::new(&m).run(&[a]).unwrap();
+        let vs = out.tuple().unwrap();
+        assert_eq!(vs[0].arr().unwrap().data, vec![9.0]);
+        assert_eq!(vs[1].arr().unwrap().data, vec![1.0]);
+    }
+
+    #[test]
+    fn threefry_style_bit_mix_is_exact() {
+        // xor/shift/or on u32 stay in the integer domain.
+        let t = "HloModule m\nENTRY e {\n  a = u32[1]{0} parameter(0)\n  b = u32[1]{0} parameter(1)\n  s = u32[1]{0} add(a, b)\n  k = u32[1]{0} constant({13})\n  w = u32[1]{0} constant({19})\n  l = u32[1]{0} shift-left(s, k)\n  r = u32[1]{0} shift-right-logical(s, w)\n  o = u32[1]{0} or(l, r)\n  ROOT x = u32[1]{0} xor(o, a)\n}\n";
+        let a = Value::Arr(ArrayV::new(DType::U32, vec![1], vec![0xDEADBEEFu32 as f64]));
+        let b = Value::Arr(ArrayV::new(DType::U32, vec![1], vec![0x12345678u32 as f64]));
+        let r = run1(t, &[a, b]);
+        let s = 0xDEADBEEFu32.wrapping_add(0x12345678);
+        let want = ((s << 13) | (s >> 19)) ^ 0xDEADBEEF;
+        assert_eq!(r.data[0], want as f64);
+    }
+}

@@ -1,0 +1,551 @@
+//! Parser for the HLO *text* format (the artifact interchange format,
+//! see `python/compile/aot.py`). Covers the grammar the L2 graphs emit:
+//! module header, named computations (one `ENTRY`), and one instruction
+//! per line of the form
+//!
+//! ```text
+//!   [ROOT ]%name = <shape> <opcode>(<operands>)[, attr=value]*
+//! ```
+//!
+//! Shapes are `dtype[dims]{layout}` or tuple shapes `(s1, s2, ...)`
+//! (layouts are parsed and ignored: buffers are always row-major here).
+//! `python/tools/hlo_interp.py` is the executable specification for
+//! both this parser and the evaluator; keep them in lockstep.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// HLO primitive element type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    BF16,
+    F32,
+    F64,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "pred" => DType::Pred,
+            "s8" => DType::S8,
+            "s16" => DType::S16,
+            "s32" => DType::S32,
+            "s64" => DType::S64,
+            "u8" => DType::U8,
+            "u16" => DType::U16,
+            "u32" => DType::U32,
+            "u64" => DType::U64,
+            "f16" => DType::F16,
+            "bf16" => DType::BF16,
+            "f32" => DType::F32,
+            "f64" => DType::F64,
+            other => bail!("unknown element type '{other}'"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::Pred => "pred",
+            DType::S8 => "s8",
+            DType::S16 => "s16",
+            DType::S32 => "s32",
+            DType::S64 => "s64",
+            DType::U8 => "u8",
+            DType::U16 => "u16",
+            DType::U32 => "u32",
+            DType::U64 => "u64",
+            DType::F16 => "f16",
+            DType::BF16 => "bf16",
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+        }
+    }
+
+    pub fn is_float(self) -> bool {
+        matches!(self, DType::F16 | DType::BF16 | DType::F32 | DType::F64)
+    }
+
+    /// Bit width for integer/pred types (None for floats).
+    pub fn int_width(self) -> Option<u32> {
+        Some(match self {
+            DType::Pred => 1,
+            DType::S8 | DType::U8 => 8,
+            DType::S16 | DType::U16 => 16,
+            DType::S32 | DType::U32 => 32,
+            DType::S64 | DType::U64 => 64,
+            _ => return None,
+        })
+    }
+
+    pub fn is_signed(self) -> bool {
+        matches!(self, DType::S8 | DType::S16 | DType::S32 | DType::S64)
+    }
+}
+
+/// An array or tuple shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Shape {
+    Arr { ty: DType, dims: Vec<usize> },
+    Tuple(Vec<Shape>),
+}
+
+impl Shape {
+    pub fn elems(&self) -> usize {
+        match self {
+            Shape::Arr { dims, .. } => dims.iter().product::<usize>().max(1),
+            Shape::Tuple(_) => 0,
+        }
+    }
+
+    pub fn ty(&self) -> Result<DType> {
+        match self {
+            Shape::Arr { ty, .. } => Ok(*ty),
+            Shape::Tuple(_) => bail!("expected array shape, got tuple"),
+        }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Shape::Arr { dims, .. } => dims,
+            Shape::Tuple(_) => &[],
+        }
+    }
+}
+
+/// One HLO instruction.
+#[derive(Debug, Clone)]
+pub struct Instr {
+    pub name: String,
+    pub shape: Shape,
+    pub op: String,
+    pub operands: Vec<String>,
+    pub attrs: BTreeMap<String, String>,
+    /// Raw payload of `constant(...)`.
+    pub literal: Option<String>,
+    pub root: bool,
+}
+
+impl Instr {
+    pub fn attr(&self, key: &str) -> Result<&str> {
+        self.attrs
+            .get(key)
+            .map(String::as_str)
+            .with_context(|| format!("{}: missing attribute '{key}'", self.name))
+    }
+
+    /// Parse a `{1,2,3}`-style (or bare) integer-list attribute.
+    pub fn attr_ints(&self, key: &str) -> Result<Vec<i64>> {
+        parse_int_list(self.attr(key)?)
+    }
+
+    /// Integer-list attribute that defaults to empty when absent.
+    pub fn attr_ints_or_empty(&self, key: &str) -> Result<Vec<i64>> {
+        match self.attrs.get(key) {
+            Some(v) => parse_int_list(v),
+            None => Ok(Vec::new()),
+        }
+    }
+}
+
+/// A named computation (straight-line; instructions are in dependency
+/// order in HLO text).
+#[derive(Debug, Clone)]
+pub struct Computation {
+    pub name: String,
+    pub instrs: Vec<Instr>,
+    pub root: String,
+}
+
+/// A parsed HLO module.
+#[derive(Debug, Clone)]
+pub struct Module {
+    pub name: String,
+    pub entry: String,
+    pub computations: BTreeMap<String, Computation>,
+}
+
+impl Module {
+    pub fn entry_computation(&self) -> &Computation {
+        &self.computations[&self.entry]
+    }
+
+    pub fn computation(&self, name: &str) -> Result<&Computation> {
+        self.computations
+            .get(name)
+            .with_context(|| format!("unknown computation '{name}'"))
+    }
+}
+
+/// Remove `/* ... */` comments (tuple shapes carry `/*index=N*/`).
+fn strip_comments(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut rest = s;
+    while let Some(start) = rest.find("/*") {
+        out.push_str(&rest[..start]);
+        match rest[start..].find("*/") {
+            Some(end) => rest = &rest[start + end + 2..],
+            None => rest = "",
+        }
+    }
+    out.push_str(rest);
+    out
+}
+
+/// Split on top-level commas (outside `()`, `{}`, `[]`).
+fn split_top(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut cur = String::new();
+    for ch in s.chars() {
+        match ch {
+            '(' | '{' | '[' => depth += 1,
+            ')' | '}' | ']' => depth -= 1,
+            ',' if depth == 0 => {
+                out.push(cur.trim().to_string());
+                cur.clear();
+                continue;
+            }
+            _ => {}
+        }
+        cur.push(ch);
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    out.retain(|p| !p.is_empty());
+    out
+}
+
+/// `s[start] == '('`: return (content, index just past the ')').
+fn scan_balanced(s: &str, start: usize) -> Result<(&str, usize)> {
+    let b = s.as_bytes();
+    debug_assert_eq!(b[start], b'(');
+    let mut depth = 0i32;
+    for (j, &c) in b.iter().enumerate().skip(start) {
+        if c == b'(' {
+            depth += 1;
+        } else if c == b')' {
+            depth -= 1;
+            if depth == 0 {
+                return Ok((&s[start + 1..j], j + 1));
+            }
+        }
+    }
+    bail!("unbalanced parentheses in '{s}'")
+}
+
+/// Parse `{1,2,3}`, `{}` or a bare comma list into integers.
+pub fn parse_int_list(s: &str) -> Result<Vec<i64>> {
+    let t = s.trim().trim_start_matches('{').trim_end_matches('}');
+    let mut out = Vec::new();
+    for part in t.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            continue;
+        }
+        out.push(
+            p.parse::<i64>()
+                .map_err(|_| anyhow!("bad integer '{p}' in list '{s}'"))?,
+        );
+    }
+    Ok(out)
+}
+
+/// Parse a shape string: `f64[64,64]{1,0}`, `pred[]`, `()` or a tuple.
+pub fn parse_shape(s: &str) -> Result<Shape> {
+    let s = s.trim();
+    if let Some(stripped) = s.strip_prefix('(') {
+        let inner = stripped
+            .strip_suffix(')')
+            .with_context(|| format!("bad tuple shape '{s}'"))?;
+        let parts = split_top(inner);
+        let shapes = parts
+            .iter()
+            .map(|p| parse_shape(p))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(Shape::Tuple(shapes));
+    }
+    let open = s.find('[').with_context(|| format!("bad shape '{s}'"))?;
+    let close = s.find(']').with_context(|| format!("bad shape '{s}'"))?;
+    let ty = DType::parse(&s[..open])?;
+    let mut dims = Vec::new();
+    for d in s[open + 1..close].split(',') {
+        let d = d.trim();
+        if d.is_empty() {
+            continue;
+        }
+        dims.push(
+            d.parse::<usize>()
+                .map_err(|_| anyhow!("bad dimension '{d}' in shape '{s}'"))?,
+        );
+    }
+    Ok(Shape::Arr { ty, dims })
+}
+
+fn parse_instr(line: &str) -> Result<Instr> {
+    let mut line = line.trim();
+    let root = line.starts_with("ROOT ");
+    if root {
+        line = &line[5..];
+    }
+    let eq = line
+        .find(" = ")
+        .with_context(|| format!("no '=' in instruction '{line}'"))?;
+    let name = line[..eq].trim().trim_start_matches('%').to_string();
+    let rhs = line[eq + 3..].trim();
+
+    // Shape: tuple type -> balanced parens; array type has no spaces.
+    let (shape, rest) = if rhs.starts_with('(') {
+        let (_, end) = scan_balanced(rhs, 0)?;
+        (parse_shape(&rhs[..end])?, rhs[end..].trim_start())
+    } else {
+        let sp = rhs
+            .find(' ')
+            .with_context(|| format!("no opcode in '{rhs}'"))?;
+        (parse_shape(&rhs[..sp])?, rhs[sp + 1..].trim_start())
+    };
+
+    let par = rest
+        .find('(')
+        .with_context(|| format!("no operand list in '{rest}'"))?;
+    let op = rest[..par].trim().to_string();
+    let (content, after) = scan_balanced(rest, par)?;
+
+    let (operands, literal) = if op == "constant" {
+        (Vec::new(), Some(content.trim().to_string()))
+    } else {
+        let ops = split_top(content)
+            .into_iter()
+            .map(|p| {
+                p.rsplit(' ')
+                    .next()
+                    .unwrap_or(&p)
+                    .trim_start_matches('%')
+                    .to_string()
+            })
+            .collect();
+        (ops, None)
+    };
+
+    let mut attrs = BTreeMap::new();
+    let rest = rest[after..].trim();
+    if let Some(stripped) = rest.strip_prefix(',') {
+        for part in split_top(stripped) {
+            if let Some((k, v)) = part.split_once('=') {
+                attrs.insert(k.trim().to_string(), v.trim().to_string());
+            }
+        }
+    }
+    Ok(Instr { name, shape, op, operands, attrs, literal, root })
+}
+
+/// Parse a full HLO text module.
+pub fn parse_module(text: &str) -> Result<Module> {
+    let text = strip_comments(text);
+    let mut lines = text.lines();
+    let first = lines.next().context("empty HLO text")?;
+    let mod_name = first
+        .trim()
+        .strip_prefix("HloModule")
+        .map(|r| {
+            r.trim()
+                .split(|c: char| c == ',' || c == ' ')
+                .next()
+                .unwrap_or("")
+                .to_string()
+        })
+        .unwrap_or_default();
+
+    let mut computations = BTreeMap::new();
+    let mut entry = String::new();
+    let mut cur_name: Option<String> = None;
+    let mut cur_is_entry = false;
+    let mut cur_instrs: Vec<Instr> = Vec::new();
+
+    for raw in lines {
+        let s = raw.trim();
+        if s.is_empty() {
+            continue;
+        }
+        if cur_name.is_none() {
+            if let Some(header) = s.strip_suffix('{') {
+                let header = header.trim();
+                let (is_entry, header) = match header.strip_prefix("ENTRY ") {
+                    Some(rest) => (true, rest),
+                    None => (false, header),
+                };
+                let name = header
+                    .split(|c: char| c == ' ' || c == '(')
+                    .next()
+                    .unwrap_or("")
+                    .trim_start_matches('%')
+                    .to_string();
+                if name.is_empty() {
+                    bail!("unnamed computation header '{s}'");
+                }
+                cur_name = Some(name);
+                cur_is_entry = is_entry;
+                cur_instrs = Vec::new();
+            }
+            continue;
+        }
+        if s == "}" {
+            let name = cur_name.take().context("unbalanced '}'")?;
+            let root = cur_instrs
+                .iter()
+                .find(|i| i.root)
+                .or(cur_instrs.last())
+                .map(|i| i.name.clone())
+                .with_context(|| format!("empty computation '{name}'"))?;
+            if cur_is_entry {
+                entry = name.clone();
+            }
+            computations
+                .insert(name.clone(), Computation { name, instrs: cur_instrs, root });
+            cur_instrs = Vec::new();
+            continue;
+        }
+        if s.contains(" = ") {
+            cur_instrs
+                .push(parse_instr(s).with_context(|| format!("parsing '{s}'"))?);
+        }
+    }
+    if entry.is_empty() {
+        bail!("no ENTRY computation in module '{mod_name}'");
+    }
+    Ok(Module { name: mod_name, entry, computations })
+}
+
+/// Parse a `constant(...)` literal payload into element values.
+pub fn parse_literal(text: &str) -> Result<Vec<f64>> {
+    let mut out = Vec::new();
+    for tok in text.split(|c: char| {
+        c.is_whitespace() || c == '{' || c == '}' || c == ','
+    }) {
+        let t = tok.trim();
+        if t.is_empty() {
+            continue;
+        }
+        let v = match t.to_ascii_lowercase().as_str() {
+            "true" => 1.0,
+            "false" => 0.0,
+            "nan" | "-nan" => f64::NAN,
+            "inf" => f64::INFINITY,
+            "-inf" => f64::NEG_INFINITY,
+            _ => t
+                .parse::<f64>()
+                .map_err(|_| anyhow!("bad literal token '{t}'"))?,
+        };
+        out.push(v);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_shapes() {
+        assert_eq!(
+            parse_shape("f64[64,64]{1,0}").unwrap(),
+            Shape::Arr { ty: DType::F64, dims: vec![64, 64] }
+        );
+        assert_eq!(
+            parse_shape("pred[]").unwrap(),
+            Shape::Arr { ty: DType::Pred, dims: vec![] }
+        );
+        let t = parse_shape("(s32[], f64[4096]{0})").unwrap();
+        match t {
+            Shape::Tuple(v) => assert_eq!(v.len(), 2),
+            _ => panic!("not a tuple"),
+        }
+        assert_eq!(parse_shape("()").unwrap(), Shape::Tuple(vec![]));
+    }
+
+    #[test]
+    fn parses_instruction_with_attrs() {
+        let i = parse_instr(
+            "ROOT dot.3 = f64[64,64]{1,0} dot(Arg_0.1, Arg_1.2), \
+             lhs_contracting_dims={1}, rhs_contracting_dims={0}",
+        )
+        .unwrap();
+        assert!(i.root);
+        assert_eq!(i.name, "dot.3");
+        assert_eq!(i.op, "dot");
+        assert_eq!(i.operands, vec!["Arg_0.1", "Arg_1.2"]);
+        assert_eq!(i.attr_ints("lhs_contracting_dims").unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn parses_typed_operands_and_percent_names() {
+        let i = parse_instr(
+            "%add.7 = f64[] add(f64[] %Arg_0.5, f64[] %Arg_1.6)",
+        )
+        .unwrap();
+        assert_eq!(i.name, "add.7");
+        assert_eq!(i.operands, vec!["Arg_0.5", "Arg_1.6"]);
+    }
+
+    #[test]
+    fn parses_module_with_regions() {
+        let text = "HloModule jit_fn, entry_computation_layout={(f64[])->(f64[])}\n\
+            \n\
+            region_0.1 {\n\
+            \x20 Arg_0.2 = f64[] parameter(0)\n\
+            \x20 ROOT add.3 = f64[] add(Arg_0.2, Arg_0.2)\n\
+            }\n\
+            \n\
+            ENTRY main.4 {\n\
+            \x20 Arg_0.1 = f64[] parameter(0)\n\
+            \x20 call.2 = f64[] call(Arg_0.1), to_apply=region_0.1\n\
+            \x20 ROOT tuple.3 = (f64[]) tuple(call.2)\n\
+            }\n";
+        let m = parse_module(text).unwrap();
+        assert_eq!(m.entry, "main.4");
+        assert_eq!(m.computations.len(), 2);
+        assert_eq!(m.entry_computation().root, "tuple.3");
+        assert_eq!(m.computations["region_0.1"].instrs.len(), 2);
+    }
+
+    #[test]
+    fn strips_tuple_index_comments() {
+        let text = "HloModule m\nENTRY e {\n  p.1 = (s32[], /*index=1*/f64[]) parameter(0)\n  ROOT g.2 = f64[] get-tuple-element(p.1), index=1\n}\n";
+        let m = parse_module(text).unwrap();
+        let p = &m.entry_computation().instrs[0];
+        match &p.shape {
+            Shape::Tuple(v) => assert_eq!(v.len(), 2),
+            _ => panic!("tuple expected"),
+        }
+    }
+
+    #[test]
+    fn parses_literals() {
+        assert_eq!(parse_literal("0").unwrap(), vec![0.0]);
+        assert_eq!(parse_literal("{1, 2, 3}").unwrap(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(
+            parse_literal("{ { 1, 2 }, { 3, 4 } }").unwrap(),
+            vec![1.0, 2.0, 3.0, 4.0]
+        );
+        assert!(parse_literal("{nan}").unwrap()[0].is_nan());
+        assert_eq!(parse_literal("true").unwrap(), vec![1.0]);
+        assert_eq!(parse_literal("-inf").unwrap(), vec![f64::NEG_INFINITY]);
+    }
+
+    #[test]
+    fn int_list_forms() {
+        assert_eq!(parse_int_list("{1,2}").unwrap(), vec![1, 2]);
+        assert_eq!(parse_int_list("{}").unwrap(), Vec::<i64>::new());
+        assert_eq!(parse_int_list("7").unwrap(), vec![7]);
+    }
+}

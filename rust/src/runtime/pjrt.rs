@@ -1,0 +1,111 @@
+//! `PjrtBackend` — the XLA/PJRT CPU execution path, behind the
+//! non-default `xla` cargo feature (the `xla` crate needs the C++ XLA
+//! libraries, which are not available offline; see DESIGN.md §Runtime
+//! backends for how to enable it). HLO text round-trips through
+//! `HloModuleProto::from_text_file`-equivalent parsing on the client.
+
+use super::backend::{Backend, Executable};
+use super::Tensor;
+use anyhow::{bail, Context, Result};
+
+/// PJRT CPU client backend (feature `xla`).
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<PjrtBackend> {
+        Ok(PjrtBackend {
+            client: xla::PjRtClient::cpu().context("[xla] creating PJRT CPU client")?,
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, name: &str, hlo_text: &str) -> Result<Box<dyn Executable>> {
+        // The xla crate exposes a file-based text parser
+        // (`from_text_file`), so stage the text through a temp file.
+        // Unique per call (pid + counter) so concurrent compiles of
+        // the same artifact never share a path; removed on all paths.
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static STAGE_ID: AtomicU64 = AtomicU64::new(0);
+        let path = std::env::temp_dir().join(format!(
+            "manticore-{}-{}-{}.hlo.txt",
+            std::process::id(),
+            STAGE_ID.fetch_add(1, Ordering::Relaxed),
+            name
+        ));
+        std::fs::write(&path, hlo_text)
+            .with_context(|| format!("[xla] staging HLO for '{name}'"))?;
+        let proto = path
+            .to_str()
+            .context("[xla] non-utf8 temp path")
+            .and_then(|p| {
+                xla::HloModuleProto::from_text_file(p)
+                    .with_context(|| format!("[xla] parsing HLO for '{name}'"))
+            });
+        let _ = std::fs::remove_file(&path);
+        let proto = proto?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("[xla] compiling '{name}'"))?;
+        Ok(Box::new(PjrtExecutable { name: name.to_string(), exe }))
+    }
+}
+
+pub struct PjrtExecutable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable for PjrtExecutable {
+    fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(to_literal)
+            .collect::<Result<_>>()
+            .with_context(|| format!("[xla] staging inputs for '{}'", self.name))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("[xla] executing '{}'", self.name))?;
+        let out = result[0][0].to_literal_sync()?;
+        // Lowered with return_tuple=True: always a tuple.
+        let elems = out.to_tuple()?;
+        elems.iter().map(from_literal).collect()
+    }
+}
+
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    let lit = match t {
+        Tensor::F32(v, _) => xla::Literal::vec1(v),
+        Tensor::F64(v, _) => xla::Literal::vec1(v),
+        Tensor::I32(v, _) => xla::Literal::vec1(v),
+        Tensor::U32(v, _) => xla::Literal::vec1(v),
+    };
+    Ok(lit.reshape(&dims)?)
+}
+
+fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let t = match shape.ty() {
+        xla::ElementType::F32 => Tensor::F32(lit.to_vec()?, dims),
+        xla::ElementType::F64 => Tensor::F64(lit.to_vec()?, dims),
+        xla::ElementType::S32 => Tensor::I32(lit.to_vec()?, dims),
+        xla::ElementType::U32 => Tensor::U32(lit.to_vec()?, dims),
+        other => bail!("[xla] unsupported output element type {other:?}"),
+    };
+    Ok(t)
+}

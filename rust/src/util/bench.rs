@@ -1,6 +1,13 @@
 //! Micro-benchmark harness (offline stand-in for criterion) plus the
 //! markdown table printer used by every figure-reproduction bench.
+//!
+//! Bench binaries accept `--smoke` (tiny iteration caps, for CI smoke
+//! jobs) and `--json <path>` (machine-readable results, uploaded as CI
+//! artifacts so the BENCH_* perf trajectory accumulates) — see
+//! [`BenchOpts`] and [`Report`].
 
+use crate::util::json::Value;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 /// Timing summary of one benchmark.
@@ -139,6 +146,155 @@ impl Table {
     }
 }
 
+/// Options shared by every bench binary (`--smoke`, `--json <path>`).
+#[derive(Debug, Clone, Default)]
+pub struct BenchOpts {
+    /// Tiny iteration caps: one warmup pass, a handful of measured
+    /// iterations — enough to prove the path works and emit numbers,
+    /// cheap enough for a CI smoke job.
+    pub smoke: bool,
+    /// Write a JSON report here at the end of the run.
+    pub json_path: Option<String>,
+}
+
+impl BenchOpts {
+    /// Parse from the process args (cargo bench passes everything
+    /// after `--` through to the bench binary).
+    pub fn from_env_args() -> BenchOpts {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        let mut opts = BenchOpts::default();
+        let mut i = 0;
+        while i < args.len() {
+            match args[i].as_str() {
+                "--smoke" => opts.smoke = true,
+                "--json" if i + 1 < args.len() => {
+                    opts.json_path = Some(args[i + 1].clone());
+                    i += 1;
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        opts
+    }
+}
+
+/// Collects samples and tables over a bench run and (optionally)
+/// writes them as JSON for the CI perf-trajectory artifact.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub opts: BenchOpts,
+    samples: Vec<Sample>,
+    tables: Vec<Table>,
+}
+
+impl Report {
+    pub fn new(opts: BenchOpts) -> Report {
+        Report { opts, samples: Vec::new(), tables: Vec::new() }
+    }
+
+    /// Time a closure (honours `--smoke`), recording the sample.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Sample {
+        let s = if self.opts.smoke {
+            bench_cfg(
+                name,
+                Duration::ZERO,
+                Duration::from_millis(10),
+                2,
+                &mut f,
+            )
+        } else {
+            bench(name, f)
+        };
+        self.samples.push(s.clone());
+        s
+    }
+
+    /// Print a table and record it for the JSON report.
+    pub fn table(&mut self, t: Table) {
+        t.print();
+        self.tables.push(t);
+    }
+
+    /// Write the JSON report if `--json` was given. Returns the path
+    /// written to.
+    pub fn finish(&self) -> std::io::Result<Option<String>> {
+        let Some(path) = &self.opts.json_path else {
+            return Ok(None);
+        };
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json())?;
+        println!("wrote bench report to {path}");
+        Ok(Some(path.clone()))
+    }
+
+    /// The report as a JSON string.
+    pub fn to_json(&self) -> String {
+        let mut root = BTreeMap::new();
+        root.insert("smoke".to_string(), Value::Bool(self.opts.smoke));
+        root.insert(
+            "samples".to_string(),
+            Value::Arr(
+                self.samples
+                    .iter()
+                    .map(|s| {
+                        let mut o = BTreeMap::new();
+                        o.insert("name".into(), Value::Str(s.name.clone()));
+                        o.insert("iters".into(), Value::Num(s.iters as f64));
+                        o.insert("mean_ns".into(), Value::Num(s.mean_ns));
+                        o.insert("median_ns".into(), Value::Num(s.median_ns));
+                        o.insert("stddev_ns".into(), Value::Num(s.stddev_ns));
+                        o.insert("min_ns".into(), Value::Num(s.min_ns));
+                        Value::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
+        root.insert(
+            "tables".to_string(),
+            Value::Arr(
+                self.tables
+                    .iter()
+                    .map(|t| {
+                        let mut o = BTreeMap::new();
+                        o.insert("title".into(), Value::Str(t.title.clone()));
+                        o.insert(
+                            "headers".into(),
+                            Value::Arr(
+                                t.headers
+                                    .iter()
+                                    .map(|h| Value::Str(h.clone()))
+                                    .collect(),
+                            ),
+                        );
+                        o.insert(
+                            "rows".into(),
+                            Value::Arr(
+                                t.rows
+                                    .iter()
+                                    .map(|r| {
+                                        Value::Arr(
+                                            r.iter()
+                                                .map(|c| Value::Str(c.clone()))
+                                                .collect(),
+                                        )
+                                    })
+                                    .collect(),
+                            ),
+                        );
+                        Value::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
+        crate::util::json::write(&Value::Obj(root))
+    }
+}
+
 /// Format helpers shared by the harnesses.
 pub fn fmt_si(v: f64, unit: &str) -> String {
     let (scaled, prefix) = if v.abs() >= 1e12 {
@@ -191,5 +347,32 @@ mod tests {
         assert_eq!(fmt_si(4.3e12, "flop/s"), "4.30 Tflop/s");
         assert_eq!(fmt_si(188e9, "flop/s/W"), "188.00 Gflop/s/W");
         assert_eq!(fmt_si(5.0, "x"), "5.00 x");
+    }
+
+    #[test]
+    fn report_collects_and_serialises() {
+        let mut rep = Report::new(BenchOpts { smoke: true, json_path: None });
+        rep.bench("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into()]);
+        rep.table(t);
+        let js = rep.to_json();
+        let v = crate::util::json::parse(&js).unwrap();
+        assert_eq!(v.get("smoke"), Some(&Value::Bool(true)));
+        assert_eq!(v.get("samples").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(v.get("tables").unwrap().as_arr().unwrap().len(), 1);
+        let s0 = &v.get("samples").unwrap().as_arr().unwrap()[0];
+        assert_eq!(s0.get("name").unwrap().as_str(), Some("noop"));
+        assert!(s0.get("mean_ns").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn bench_opts_parse() {
+        // from_env_args reads real argv; exercise default instead.
+        let o = BenchOpts::default();
+        assert!(!o.smoke);
+        assert!(o.json_path.is_none());
     }
 }

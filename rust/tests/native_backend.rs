@@ -1,0 +1,290 @@
+//! Golden tests for the NativeBackend HLO interpreter: every supported
+//! op class is exercised through the public `Backend` interface
+//! (compile HLO text, execute with `Tensor`s) against hand-computed
+//! values. Deeper per-op coverage at the evaluator level lives in
+//! `rust/src/runtime/native/eval.rs`; the NativeBackend-vs-reference
+//! GEMM property test lives in `rust/tests/properties.rs`.
+
+use manticore::runtime::backend::Backend;
+use manticore::runtime::native::NativeBackend;
+use manticore::runtime::Tensor;
+
+/// Wrap an entry body in a minimal module and run it.
+fn run(body: &str, inputs: &[Tensor]) -> Vec<Tensor> {
+    let text = format!("HloModule m\n{body}\n");
+    let exe = NativeBackend::new()
+        .compile("golden", &text)
+        .expect("compile");
+    exe.execute(inputs).expect("execute")
+}
+
+fn f64t(dims: &[usize], data: &[f64]) -> Tensor {
+    Tensor::F64(data.to_vec(), dims.to_vec())
+}
+
+#[test]
+fn golden_elementwise_binary_ops() {
+    let cases: &[(&str, [f64; 3])] = &[
+        ("add", [5.0, 7.0, 9.0]),
+        ("subtract", [-3.0, -3.0, -3.0]),
+        ("multiply", [4.0, 10.0, 18.0]),
+        ("divide", [0.25, 0.4, 0.5]),
+        ("maximum", [4.0, 5.0, 6.0]),
+        ("minimum", [1.0, 2.0, 3.0]),
+    ];
+    for (op, want) in cases {
+        let body = format!(
+            "ENTRY e {{\n  a = f64[3]{{0}} parameter(0)\n  b = f64[3]{{0}} parameter(1)\n  ROOT r = f64[3]{{0}} {op}(a, b)\n}}"
+        );
+        let out = run(
+            &body,
+            &[f64t(&[3], &[1.0, 2.0, 3.0]), f64t(&[3], &[4.0, 5.0, 6.0])],
+        );
+        assert_eq!(out[0].as_f64().unwrap(), want, "{op}");
+    }
+}
+
+#[test]
+fn golden_elementwise_unary_ops() {
+    let x = [0.25, 1.0, 4.0];
+    let cases: &[(&str, [f64; 3])] = &[
+        ("negate", [-0.25, -1.0, -4.0]),
+        ("abs", [0.25, 1.0, 4.0]),
+        ("sqrt", [0.5, 1.0, 2.0]),
+        ("exponential", [x[0].exp(), x[1].exp(), x[2].exp()]),
+        ("log", [x[0].ln(), x[1].ln(), x[2].ln()]),
+    ];
+    for (op, want) in cases {
+        let body = format!(
+            "ENTRY e {{\n  a = f64[3]{{0}} parameter(0)\n  ROOT r = f64[3]{{0}} {op}(a)\n}}"
+        );
+        let out = run(&body, &[f64t(&[3], &x)]);
+        let got = out[0].as_f64().unwrap();
+        for (g, w) in got.iter().zip(want) {
+            assert!((g - w).abs() < 1e-15, "{op}: {g} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn golden_dot_matmul() {
+    let body = "ENTRY e {\n  a = f64[2,3]{1,0} parameter(0)\n  b = f64[3,2]{1,0} parameter(1)\n  ROOT d = f64[2,2]{1,0} dot(a, b), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n}";
+    let out = run(
+        body,
+        &[
+            f64t(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            f64t(&[3, 2], &[7.0, 8.0, 9.0, 10.0, 11.0, 12.0]),
+        ],
+    );
+    // [[1*7+2*9+3*11, 1*8+2*10+3*12], [4*7+5*9+6*11, ...]]
+    assert_eq!(out[0].as_f64().unwrap(), &[58.0, 64.0, 139.0, 154.0]);
+}
+
+#[test]
+fn golden_dot_matvec_and_inner() {
+    let mv = "ENTRY e {\n  a = f64[2,2]{1,0} parameter(0)\n  x = f64[2]{0} parameter(1)\n  ROOT d = f64[2]{0} dot(a, x), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n}";
+    let out = run(
+        mv,
+        &[f64t(&[2, 2], &[1.0, 2.0, 3.0, 4.0]), f64t(&[2], &[5.0, 6.0])],
+    );
+    assert_eq!(out[0].as_f64().unwrap(), &[17.0, 39.0]);
+
+    let ip = "ENTRY e {\n  x = f64[4]{0} parameter(0)\n  y = f64[4]{0} parameter(1)\n  ROOT d = f64[] dot(x, y), lhs_contracting_dims={0}, rhs_contracting_dims={0}\n}";
+    let out = run(
+        ip,
+        &[
+            f64t(&[4], &[1.0, 2.0, 3.0, 4.0]),
+            f64t(&[4], &[5.0, 6.0, 7.0, 8.0]),
+        ],
+    );
+    assert_eq!(out[0].as_f64().unwrap(), &[70.0]);
+}
+
+#[test]
+fn golden_broadcast_reshape_transpose() {
+    let body = "ENTRY e {\n  s = f64[] parameter(0)\n  v = f64[6]{0} broadcast(s), dimensions={}\n  m = f64[2,3]{1,0} reshape(v)\n  ROOT t = f64[3,2]{1,0} transpose(m), dimensions={1,0}\n}";
+    let out = run(body, &[f64t(&[], &[2.5])]);
+    assert_eq!(out[0].shape(), &[3, 2]);
+    assert_eq!(out[0].as_f64().unwrap(), &[2.5; 6]);
+
+    let body2 = "ENTRY e {\n  a = f64[2,3]{1,0} parameter(0)\n  ROOT t = f64[3,2]{1,0} transpose(a), dimensions={1,0}\n}";
+    let out2 = run(body2, &[f64t(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0])]);
+    assert_eq!(out2[0].as_f64().unwrap(), &[1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+}
+
+#[test]
+fn golden_reduce_sum_and_max() {
+    let body = "r {\n  x = f64[] parameter(0)\n  y = f64[] parameter(1)\n  ROOT a = f64[] add(x, y)\n}\nENTRY e {\n  a = f64[2,3]{1,0} parameter(0)\n  z = f64[] constant(0)\n  ROOT s = f64[2]{0} reduce(a, z), dimensions={1}, to_apply=r\n}";
+    let out = run(body, &[f64t(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0])]);
+    assert_eq!(out[0].as_f64().unwrap(), &[6.0, 15.0]);
+
+    let body2 = "r {\n  x = f64[] parameter(0)\n  y = f64[] parameter(1)\n  ROOT m = f64[] maximum(x, y)\n}\nENTRY e {\n  a = f64[2,3]{1,0} parameter(0)\n  z = f64[] constant(-inf)\n  ROOT s = f64[3]{0} reduce(a, z), dimensions={0}, to_apply=r\n}";
+    let out2 = run(body2, &[f64t(&[2, 3], &[1.0, 9.0, 3.0, 4.0, 5.0, 6.0])]);
+    assert_eq!(out2[0].as_f64().unwrap(), &[4.0, 9.0, 6.0]);
+}
+
+#[test]
+fn golden_tuple_multi_output() {
+    let body = "ENTRY e {\n  a = f64[2]{0} parameter(0)\n  n = f64[2]{0} negate(a)\n  ROOT t = (f64[2]{0}, f64[2]{0}) tuple(a, n)\n}";
+    let out = run(body, &[f64t(&[2], &[1.5, -2.5])]);
+    assert_eq!(out.len(), 2);
+    assert_eq!(out[0].as_f64().unwrap(), &[1.5, -2.5]);
+    assert_eq!(out[1].as_f64().unwrap(), &[-1.5, 2.5]);
+}
+
+#[test]
+fn golden_compare_select_convert() {
+    let body = "ENTRY e {\n  a = f64[4]{0} parameter(0)\n  z = f64[] constant(0)\n  zb = f64[4]{0} broadcast(z), dimensions={}\n  p = pred[4]{0} compare(a, zb), direction=GT\n  ROOT s = f64[4]{0} select(p, a, zb)\n}";
+    let out = run(body, &[f64t(&[4], &[-1.0, 2.0, -3.0, 4.0])]);
+    assert_eq!(out[0].as_f64().unwrap(), &[0.0, 2.0, 0.0, 4.0]); // relu
+
+    let body2 = "ENTRY e {\n  a = f64[3]{0} parameter(0)\n  ROOT c = f32[3]{0} convert(a)\n}";
+    let out2 = run(body2, &[f64t(&[3], &[0.1, -2.5, 1e9])]);
+    assert_eq!(
+        out2[0].as_f32().unwrap(),
+        &[0.1f64 as f32, -2.5, 1e9f64 as f32]
+    );
+}
+
+#[test]
+fn golden_slice_concat_pad_iota() {
+    let body = "ENTRY e {\n  a = f64[5]{0} parameter(0)\n  s = f64[2]{0} slice(a), slice={[1:5:2]}\n  z = f64[] constant(-1)\n  p = f64[4]{0} pad(s, z), padding=1_1\n  b = f64[2]{0} slice(a), slice={[0:2]}\n  ROOT c = f64[6]{0} concatenate(p, b), dimensions={0}\n}";
+    let out = run(body, &[f64t(&[5], &[10.0, 11.0, 12.0, 13.0, 14.0])]);
+    // slice strided -> [11, 13]; pad -> [-1, 11, 13, -1]; concat [10,11]
+    assert_eq!(
+        out[0].as_f64().unwrap(),
+        &[-1.0, 11.0, 13.0, -1.0, 10.0, 11.0]
+    );
+
+    let body2 = "ENTRY e {\n  ROOT i = s32[2,3]{1,0} iota(), iota_dimension=1\n}";
+    let out2 = run(body2, &[]);
+    assert_eq!(out2[0].as_i32().unwrap(), &[0, 1, 2, 0, 1, 2]);
+}
+
+#[test]
+fn golden_dynamic_slice_and_update() {
+    let body = "ENTRY e {\n  a = f64[2,4]{1,0} parameter(0)\n  i = s32[] parameter(1)\n  j = s32[] parameter(2)\n  ROOT d = f64[2,2]{1,0} dynamic-slice(a, i, j), dynamic_slice_sizes={2,2}\n}";
+    let a = f64t(&[2, 4], &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+    let out = run(
+        body,
+        &[
+            a.clone(),
+            Tensor::I32(vec![0], vec![]),
+            Tensor::I32(vec![2], vec![]),
+        ],
+    );
+    assert_eq!(out[0].as_f64().unwrap(), &[2.0, 3.0, 6.0, 7.0]);
+
+    let body2 = "ENTRY e {\n  a = f64[2,4]{1,0} parameter(0)\n  u = f64[1,2]{1,0} parameter(1)\n  i = s32[] parameter(2)\n  j = s32[] parameter(3)\n  ROOT d = f64[2,4]{1,0} dynamic-update-slice(a, u, i, j)\n}";
+    let out2 = run(
+        body2,
+        &[
+            a,
+            f64t(&[1, 2], &[9.0, 8.0]),
+            Tensor::I32(vec![1], vec![]),
+            Tensor::I32(vec![1], vec![]),
+        ],
+    );
+    assert_eq!(
+        out2[0].as_f64().unwrap(),
+        &[0.0, 1.0, 2.0, 3.0, 4.0, 9.0, 8.0, 7.0]
+    );
+}
+
+#[test]
+fn golden_while_accumulates() {
+    // sum 1..=10 via a (counter, acc) while loop
+    let body = "cond {\n  s = (s32[], s32[]) parameter(0)\n  i = s32[] get-tuple-element(s), index=0\n  k = s32[] constant(10)\n  ROOT c = pred[] compare(i, k), direction=LT\n}\nbody {\n  s = (s32[], s32[]) parameter(0)\n  i = s32[] get-tuple-element(s), index=0\n  acc = s32[] get-tuple-element(s), index=1\n  one = s32[] constant(1)\n  i2 = s32[] add(i, one)\n  acc2 = s32[] add(acc, i2)\n  ROOT t = (s32[], s32[]) tuple(i2, acc2)\n}\nENTRY e {\n  z = s32[] constant(0)\n  t0 = (s32[], s32[]) tuple(z, z)\n  w = (s32[], s32[]) while(t0), condition=cond, body=body\n  g = s32[] get-tuple-element(w), index=1\n  ROOT t = (s32[]) tuple(g)\n}";
+    let out = run(body, &[]);
+    assert_eq!(out[0].as_i32().unwrap(), &[55]);
+}
+
+#[test]
+fn golden_conditional_pred_style() {
+    let body = "bt {\n  x = f64[] parameter(0)\n  two = f64[] constant(2)\n  ROOT m = f64[] multiply(x, two)\n}\nbf {\n  x = f64[] parameter(0)\n  ROOT n = f64[] negate(x)\n}\nENTRY e {\n  p = pred[] parameter(0)\n  x = f64[] parameter(1)\n  ROOT c = f64[] conditional(p, x, x), true_computation=bt, false_computation=bf\n}";
+    let t = run(
+        body,
+        &[Tensor::I32(vec![1], vec![]), f64t(&[], &[3.0])],
+    );
+    assert_eq!(t[0].as_f64().unwrap(), &[6.0]);
+    let f = run(
+        body,
+        &[Tensor::I32(vec![0], vec![]), f64t(&[], &[3.0])],
+    );
+    assert_eq!(f[0].as_f64().unwrap(), &[-3.0]);
+}
+
+#[test]
+fn golden_gather_take_rows() {
+    let body = "ENTRY e {\n  a = f64[3,2]{1,0} parameter(0)\n  i = s32[2]{0} parameter(1)\n  ROOT g = f64[2,2]{1,0} gather(a, i), offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1,2}\n}";
+    let out = run(
+        body,
+        &[
+            f64t(&[3, 2], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            Tensor::I32(vec![2, 1], vec![2]),
+        ],
+    );
+    assert_eq!(out[0].as_f64().unwrap(), &[5.0, 6.0, 3.0, 4.0]);
+}
+
+#[test]
+fn golden_scatter_add() {
+    let body = "comb {\n  x = f64[] parameter(0)\n  y = f64[] parameter(1)\n  ROOT a = f64[] add(x, y)\n}\nENTRY e {\n  a = f64[4]{0} parameter(0)\n  i = s32[2]{0} parameter(1)\n  u = f64[2]{0} parameter(2)\n  ROOT s = f64[4]{0} scatter(a, i, u), update_window_dims={}, inserted_window_dims={0}, scatter_dims_to_operand_dims={0}, index_vector_dim=1, to_apply=comb\n}";
+    let out = run(
+        body,
+        &[
+            f64t(&[4], &[0.0, 0.0, 0.0, 0.0]),
+            Tensor::I32(vec![3, 3], vec![2]),
+            f64t(&[2], &[5.0, 6.0]),
+        ],
+    );
+    // both updates hit index 3 and accumulate
+    assert_eq!(out[0].as_f64().unwrap(), &[0.0, 0.0, 0.0, 11.0]);
+}
+
+#[test]
+fn golden_constant_array_and_scalar() {
+    let body = "ENTRY e {\n  c = f64[3]{0} constant({1.5, -2, 4e2})\n  s = f64[] constant(0.5)\n  sb = f64[3]{0} broadcast(s), dimensions={}\n  ROOT m = f64[3]{0} multiply(c, sb)\n}";
+    let out = run(body, &[]);
+    assert_eq!(out[0].as_f64().unwrap(), &[0.75, -1.0, 200.0]);
+}
+
+#[test]
+fn golden_f32_semantics_round_per_op() {
+    // 16777216 + 1 is not representable in f32: the add must round.
+    let body = "ENTRY e {\n  a = f32[1]{0} parameter(0)\n  b = f32[1]{0} parameter(1)\n  ROOT s = f32[1]{0} add(a, b)\n}";
+    let out = run(
+        body,
+        &[
+            Tensor::F32(vec![16777216.0], vec![1]),
+            Tensor::F32(vec![1.0], vec![1]),
+        ],
+    );
+    assert_eq!(out[0].as_f32().unwrap(), &[16777216.0f32 + 1.0f32]);
+}
+
+/// The checked-in artifacts execute through the public Runtime on the
+/// native backend (fast smoke of the real artifact path; the full
+/// testvector round-trip lives in integration.rs).
+#[test]
+fn artifact_smoke_through_runtime() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        return;
+    }
+    // Pin the backend so an ambient MANTICORE_BACKEND doesn't redirect
+    // this test.
+    let mut rt = manticore::runtime::Runtime::with_backend(
+        "artifacts",
+        manticore::runtime::backend_by_name("native").unwrap(),
+    )
+    .unwrap();
+    assert_eq!(rt.backend_name(), "native");
+    let a = Tensor::F64(vec![1.0; 48 * 48], vec![48, 48]);
+    let x = Tensor::F64(vec![2.0; 48], vec![48]);
+    let out = rt.execute("matvec_f64_48", &[a, x]).unwrap();
+    assert_eq!(out[0].shape(), &[48]);
+    for v in out[0].as_f64().unwrap() {
+        assert!((v - 96.0).abs() < 1e-12); // 48 * 1 * 2
+    }
+}

@@ -1,6 +1,7 @@
 //! Cross-module property tests (the heavier ones that don't belong in
 //! unit-test modules): ISA encode/decode over randomized fields, SSR
-//! stream algebra, and assembled-program execution invariants.
+//! stream algebra, assembled-program execution invariants, and the
+//! NativeBackend-vs-reference-GEMM equivalence.
 
 use manticore::isa::{decode, encode, FCmp, FReg, IReg, Inst};
 use manticore::util::prop::{forall, Gen};
@@ -144,6 +145,63 @@ fn straight_line_programs_halt_and_preserve_x0() {
             }
             if cycles == 0 {
                 return Err("no cycles elapsed".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// NativeBackend `dot` agrees with the naive reference GEMM for random
+/// shapes and values: the interpreter's contraction path is just a
+/// different traversal of the same sum.
+#[test]
+fn native_backend_matmul_matches_reference_gemm() {
+    use manticore::baselines::gemm_ref;
+    use manticore::runtime::backend::Backend;
+    use manticore::runtime::native::NativeBackend;
+    use manticore::runtime::Tensor;
+
+    let backend = NativeBackend::new();
+    forall(
+        0x6E44,
+        40,
+        |g| {
+            let m = g.usize(1, 12);
+            let k = g.usize(1, 12);
+            let n = g.usize(1, 12);
+            let a = g.vec_f64(m * k, -2.0, 2.0);
+            let b = g.vec_f64(k * n, -2.0, 2.0);
+            (m, k, n, a, b)
+        },
+        |(m, k, n, a, b)| {
+            let (m, k, n) = (*m, *k, *n);
+            let text = format!(
+                "HloModule prop\nENTRY e {{\n  \
+                 a = f64[{m},{k}]{{1,0}} parameter(0)\n  \
+                 b = f64[{k},{n}]{{1,0}} parameter(1)\n  \
+                 d = f64[{m},{n}]{{1,0}} dot(a, b), \
+                 lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n  \
+                 ROOT t = (f64[{m},{n}]{{1,0}}) tuple(d)\n}}\n"
+            );
+            let exe = backend
+                .compile("prop_matmul", &text)
+                .map_err(|e| format!("compile: {e}"))?;
+            let out = exe
+                .execute(&[
+                    Tensor::F64(a.clone(), vec![m, k]),
+                    Tensor::F64(b.clone(), vec![k, n]),
+                ])
+                .map_err(|e| format!("execute: {e}"))?;
+            let got = out[0].as_f64().ok_or("f64 output expected")?;
+            let want = gemm_ref(m, k, n, a, b);
+            for i in 0..m * n {
+                let err = (got[i] - want[i]).abs();
+                if err > 1e-12 * (1.0 + want[i].abs()) {
+                    return Err(format!(
+                        "c[{i}]: native {} vs ref {} ({m}x{k}x{n})",
+                        got[i], want[i]
+                    ));
+                }
             }
             Ok(())
         },

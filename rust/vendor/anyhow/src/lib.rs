@@ -1,0 +1,206 @@
+//! Vendored offline stand-in for the `anyhow` crate.
+//!
+//! The build must work with no network and no registry cache, so this
+//! implements exactly the API subset the workspace uses: `Error`,
+//! `Result<T>`, the `anyhow!` / `bail!` macros, and the `Context`
+//! extension trait on `Result` and `Option`. Like the real crate,
+//! `Error` deliberately does *not* implement `std::error::Error`, which
+//! is what makes the blanket `From<E: std::error::Error>` conversion
+//! (and therefore `?` on arbitrary error types) coherent.
+
+use std::fmt;
+
+/// A dynamic error: a message plus an optional chain of causes.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct an error from a displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string(), cause: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Self {
+        Error { msg: ctx.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// The outermost message (without the cause chain).
+    pub fn message(&self) -> &str {
+        &self.msg
+    }
+
+    /// Iterate the cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &Error> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.cause.as_deref();
+            Some(cur)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cause = self.cause.as_deref();
+        while let Some(c) = cause {
+            write!(f, ": {}", c.msg)?;
+            cause = c.cause.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cause = self.cause.as_deref();
+        if cause.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(c) = cause {
+            write!(f, "\n    {}", c.msg)?;
+            cause = c.cause.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        // Preserve the source chain as nested contexts.
+        let mut stack = Vec::new();
+        stack.push(e.to_string());
+        let mut src = e.source();
+        while let Some(s) = src {
+            stack.push(s.to_string());
+            src = s.source();
+        }
+        let mut err = None;
+        for msg in stack.into_iter().rev() {
+            err = Some(Error { msg, cause: err.map(Box::new) });
+        }
+        err.expect("at least one message")
+    }
+}
+
+/// `Result` with `anyhow::Error` as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(e).context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_includes_context_chain() {
+        let e: Error = Error::msg("root").context("mid").context("outer");
+        assert_eq!(format!("{e}"), "outer: mid: root");
+        assert_eq!(e.chain().count(), 3);
+    }
+
+    #[test]
+    fn question_mark_on_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(format!("{}", f().unwrap_err()).contains("gone"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening file").unwrap_err();
+        assert_eq!(format!("{e}"), "opening file: gone");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "missing 7");
+    }
+
+    #[test]
+    fn macros_format() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                bail!("x was {x}");
+            }
+            ensure!(x < 10, "x too big: {x}");
+            Ok(x)
+        }
+        assert_eq!(format!("{}", f(0).unwrap_err()), "x was 0");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "x too big: 11");
+        assert_eq!(f(3).unwrap(), 3);
+    }
+}
