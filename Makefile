@@ -21,7 +21,9 @@ help:
 	@echo "  fmt-check    cargo fmt --check"
 	@echo "  clippy       cargo clippy --all-targets -- -D warnings"
 	@echo "  bench        run every bench target"
-	@echo "  bench-smoke  perf_hotpath + ablations with --smoke, JSON to $(BENCH_OUT)/"
+	@echo "  bench-smoke  perf_hotpath + ablations with --smoke, JSON to $(BENCH_OUT)/;"
+	@echo "               diffs against the previous run's JSON (>10% regressions"
+	@echo "               print a non-fatal warning table, saved as *.diff.md)"
 	@echo "  pytest       python L1/L2 tests (skip cleanly when JAX absent)"
 	@echo "  clean        remove build products"
 
@@ -46,10 +48,28 @@ clippy:
 bench:
 	$(CARGO) bench
 
+# Snapshot the previous run's JSON first, then diff the fresh reports
+# against it with `manticore bench-diff` (non-fatal: smoke timings are
+# noisy; the table is kept as $(BENCH_OUT)/<bench>.diff.md).
 bench-smoke:
 	mkdir -p $(BENCH_OUT)
+	@for f in perf_hotpath ablations; do \
+	  if [ -f $(BENCH_OUT)/$$f.json ]; then \
+	    cp $(BENCH_OUT)/$$f.json $(BENCH_OUT)/$$f.prev.json; \
+	  fi; \
+	done
 	$(CARGO) bench --bench perf_hotpath -- --smoke --json $(BENCH_OUT)/perf_hotpath.json
 	$(CARGO) bench --bench ablations -- --smoke --json $(BENCH_OUT)/ablations.json
+	@for f in perf_hotpath ablations; do \
+	  if [ -f $(BENCH_OUT)/$$f.prev.json ]; then \
+	    $(CARGO) run --release --quiet --bin manticore -- bench-diff \
+	      $(BENCH_OUT)/$$f.prev.json $(BENCH_OUT)/$$f.json \
+	      --md $(BENCH_OUT)/$$f.diff.md || true; \
+	    rm -f $(BENCH_OUT)/$$f.prev.json; \
+	  else \
+	    echo "(no previous $$f.json — skipping diff)"; \
+	  fi; \
+	done
 
 pytest:
 	$(PYTHON) -m pytest python/tests -q

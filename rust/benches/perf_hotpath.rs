@@ -129,6 +129,34 @@ fn main() {
         Err(e) => println!("(skipping runtime benches: {e})"),
     }
 
+    // 3b. SimBackend: same matmul artifact, numerics + per-op
+    //     scheduling on the system model (the op-stream overhead on
+    //     top of the plain interpreter is what this measures).
+    use manticore::runtime::sim::SimBackend;
+    match Runtime::with_backend("artifacts", Box::new(SimBackend::new())) {
+        Ok(mut rt) => {
+            let mut rng = Rng::new(3);
+            let a = Tensor::F64(rng.normal_vec(64 * 64), vec![64, 64]);
+            let b = Tensor::F64(rng.normal_vec(64 * 64), vec![64, 64]);
+            rt.execute("matmul_f64_64", &[a.clone(), b.clone()]).unwrap();
+            rep.bench("sim/matmul_f64_64 (op-scheduled)", || {
+                std::hint::black_box(
+                    rt.execute("matmul_f64_64", &[a.clone(), b.clone()])
+                        .unwrap(),
+                );
+            });
+            if let Some(r) = rt.last_report("matmul_f64_64") {
+                println!(
+                    "  -> modelled: {:.0} cycles, {:.3} µJ, FPU util {:.1} %\n",
+                    r.total_cycles,
+                    r.total_energy_j * 1e6,
+                    r.fpu_util * 100.0
+                );
+            }
+        }
+        Err(e) => println!("(skipping sim-backend bench: {e})"),
+    }
+
     // 4. Interconnect allocator (also in fig3 bench; here for §Perf).
     use manticore::interconnect::{Endpoint, Flow, Tree, TreeConfig};
     let tree = Tree::new(TreeConfig::default());

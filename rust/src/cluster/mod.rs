@@ -177,6 +177,62 @@ impl ClusterSim {
     }
 }
 
+/// Measured cluster FLOP utilization for an all-cores SSR/FREP GEMM
+/// (each core runs an m×k·k×n tile out of its own TCDM slice),
+/// optionally with the DMA engine streaming continuously so bank
+/// conflicts degrade both — the paper's "cycle-accurate simulation of
+/// a smaller instantiation". Utilization is flops over the
+/// busiest-core cycles (cores halt at different times). This is the
+/// measurement `coordinator::measure_calibration` calibrates the
+/// analytical op-scheduling model from.
+pub fn gemm_all_cores_utilization(
+    cfg: ClusterConfig,
+    m: u32,
+    k: u32,
+    n: u32,
+    with_dma: bool,
+) -> f64 {
+    // One TCDM slice per core; each core's A/B/C tile must fit it.
+    let slice = (cfg.tcdm_bytes / cfg.n_cores.max(1)) as u32;
+    let tile_bytes = (m * k + k * n + m * n) * 8 + 16;
+    assert!(
+        tile_bytes <= slice,
+        "GEMM tile ({tile_bytes} B) exceeds the per-core TCDM slice \
+         ({slice} B)"
+    );
+    let mut programs = Vec::new();
+    for core in 0..cfg.n_cores as u32 {
+        let base = core * slice;
+        let a = base;
+        let b = a + m * k * 8;
+        let c = b + k * n * 8 + 8;
+        programs.push(crate::asm::kernels::gemm_ssr_frep(m, k, n, a, b, c));
+    }
+    let mut sim = ClusterSim::new(cfg, programs);
+    for i in 0..(cfg.tcdm_bytes as u32 / 8) {
+        sim.tcdm.write_f64(i * 8, 1.0);
+    }
+    if with_dma {
+        // Stream 512-word blocks continuously into a scratch area.
+        for t in 0..64 {
+            sim.dma.enqueue(DmaXfer {
+                tcdm_addr: 100 * 1024,
+                ext_offset: (t % 4) * 512,
+                words: 512,
+                to_tcdm: t % 2 == 0,
+            });
+        }
+    }
+    let max = 10_000_000;
+    while !sim.all_halted() && sim.now() < max {
+        sim.step();
+    }
+    let cycles = sim.cores.iter().map(|c| c.stats.cycles).max().unwrap_or(1);
+    let flops: u64 = sim.cores.iter().map(|c| c.fpu.stats.flops).sum();
+    // Peak is 2 flop/cycle/core (one DP FMA).
+    flops as f64 / (2.0 * cfg.n_cores as f64 * cycles as f64)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -209,6 +209,70 @@ pub fn dot_spec(n: u32, unroll: u32, x: u32, y: u32) -> FrepKernel {
     }
 }
 
+/// Elementwise map kernel: `out[i] = a[i] + b[i]` (arity 2) or
+/// `out[i] = s · a[i]` with the scalar preloaded in `fa0` (arity 1).
+/// One FP instruction per element; all traffic through SSR streams —
+/// the shape `coordinator::OpTask::frep_kernel` lowers elementwise ops
+/// to.
+pub fn elementwise_spec(n: u32, arity: usize, a: u32, b: u32, out: u32) -> FrepKernel {
+    use crate::asm::{fa, ft};
+    assert!(n >= 1);
+    let (streams, body) = if arity >= 2 {
+        (
+            vec![
+                StreamSpec { ssr: 0, base: a, dims: vec![(n, 8)], repeat: 0, write: false },
+                StreamSpec { ssr: 1, base: b, dims: vec![(n, 8)], repeat: 0, write: false },
+                StreamSpec { ssr: 2, base: out, dims: vec![(n, 8)], repeat: 0, write: true },
+            ],
+            vec![Inst::FaddD { rd: ft(2), rs1: ft(0), rs2: ft(1) }],
+        )
+    } else {
+        (
+            vec![
+                StreamSpec { ssr: 0, base: a, dims: vec![(n, 8)], repeat: 0, write: false },
+                StreamSpec { ssr: 1, base: out, dims: vec![(n, 8)], repeat: 0, write: true },
+            ],
+            vec![Inst::FmulD { rd: ft(1), rs1: ft(0), rs2: fa(0) }],
+        )
+    };
+    FrepKernel { streams, body, reps: n, epilogue: Vec::new() }
+}
+
+/// Sum-reduction kernel over `n` elements, `unroll`-way accumulator
+/// split (the partial sums land in `fa0..fa{unroll}`, combined in the
+/// epilogue). `n` must be a multiple of `unroll`.
+pub fn reduce_spec(n: u32, unroll: u32, x: u32) -> FrepKernel {
+    use crate::asm::{fa, ft};
+    assert!(unroll >= 1 && n % unroll == 0);
+    let body: Vec<Inst> = (0..unroll)
+        .map(|i| Inst::FaddD {
+            rd: fa(i as u8),
+            rs1: ft(0),
+            rs2: fa(i as u8),
+        })
+        .collect();
+    let mut epilogue = Vec::new();
+    for i in 1..unroll {
+        epilogue.push(Inst::FaddD {
+            rd: fa(0),
+            rs1: fa(0),
+            rs2: fa(i as u8),
+        });
+    }
+    FrepKernel {
+        streams: vec![StreamSpec {
+            ssr: 0,
+            base: x,
+            dims: vec![(n, 8)],
+            repeat: 0,
+            write: false,
+        }],
+        body,
+        reps: n / unroll,
+        epilogue,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -334,6 +398,61 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn elementwise_spec_computes_vector_add() {
+        let n = 256u32;
+        let spec = elementwise_spec(n, 2, 0, n * 8, 2 * n * 8);
+        assert!(validate(&spec, 16).is_ok());
+        let prog = generate(&spec).unwrap();
+        let mut core = SnitchCore::new(0, CoreConfig::default(), prog);
+        let mut tcdm = Tcdm::new(128 * 1024, 32);
+        let mut ic = ICache::new(8192, 10);
+        let a: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let b: Vec<f64> = (0..n).map(|i| 2.0 * i as f64).collect();
+        tcdm.write_f64_slice(0, &a);
+        tcdm.write_f64_slice(n * 8, &b);
+        run_single(&mut core, &mut tcdm, &mut ic, 1_000_000);
+        for i in 0..n {
+            assert_eq!(
+                tcdm.read_f64(2 * n * 8 + i * 8),
+                3.0 * i as f64,
+                "out[{i}]"
+            );
+        }
+    }
+
+    #[test]
+    fn elementwise_spec_arity1_validates() {
+        let spec = elementwise_spec(64, 1, 0, 0, 64 * 8);
+        assert!(validate(&spec, 16).is_ok());
+        assert_eq!(spec.streams.len(), 2);
+        assert!(spec.streams[1].write);
+    }
+
+    #[test]
+    fn reduce_spec_sums_correctly() {
+        let n = 512u32;
+        let spec = reduce_spec(n, 4, 0);
+        let mut prog = generate(&spec).unwrap();
+        prog.pop(); // halt — append a store of fa0 for checking
+        let mut asm = Asm::new();
+        asm.li(crate::asm::a(3), (n * 8 + 16) as i64);
+        asm.fsd(fa(0), crate::asm::a(3), 0);
+        asm.halt();
+        prog.extend(asm.assemble());
+        let mut core = SnitchCore::new(0, CoreConfig::default(), prog);
+        let mut tcdm = Tcdm::new(128 * 1024, 32);
+        let mut ic = ICache::new(8192, 10);
+        let x: Vec<f64> = (0..n).map(|i| (i % 11) as f64).collect();
+        tcdm.write_f64_slice(0, &x);
+        run_single(&mut core, &mut tcdm, &mut ic, 1_000_000);
+        let want: f64 = x.iter().sum();
+        assert_eq!(tcdm.read_f64(n * 8 + 16), want);
+        // One FaddD (1 flop) per element against a 2 flop/cycle peak:
+        // a well-streamed reduce tops out at 50 % flop utilization.
+        assert!(core.flop_utilization() > 0.35, "{}", core.flop_utilization());
     }
 
     #[test]

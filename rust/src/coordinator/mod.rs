@@ -11,14 +11,23 @@
 //!   * the DVFS power model
 //!
 //! — exactly the paper's stated methodology for Figs. 9/10.
+//!
+//! Since the SimBackend refactor the coordinator is driven by a
+//! *generic op stream* ([`OpTask`]: dot/elementwise/reduce/data with
+//! shapes and operand placement) rather than only pre-baked DNN
+//! layers; `simulate_layer` and `schedule_gemm` are adapters over
+//! [`Coordinator::simulate_task`], and `runtime::sim::SimBackend`
+//! feeds every executed HLO instruction through the same path.
 
+pub mod optask;
 pub mod tiling;
 
-use crate::asm::kernels::gemm_ssr_frep;
-use crate::cluster::{ClusterConfig, ClusterSim, DmaXfer};
+use crate::cluster::{gemm_all_cores_utilization, ClusterConfig};
+use crate::codegen;
 use crate::power::DvfsModel;
 use crate::system::SystemConfig;
 use crate::workload::{Layer, LayerClass, Network};
+pub use optask::{OpKind, OpReport, OpStreamReport, OpTask, Placement};
 pub use tiling::{plan_gemm, GemmPlan, Tile};
 
 /// Calibration knobs measured/derived once per configuration.
@@ -51,45 +60,7 @@ impl Default for Calibration {
 ///   ridge dip.
 pub fn measure_calibration() -> Calibration {
     let gemm_cluster = |with_dma: bool| -> f64 {
-        let (m, k, n) = (8u32, 64u32, 16u32);
-        let per = 64 * 1024 / 8; // one TCDM slice per core (words)
-        let mut programs = Vec::new();
-        for core in 0..8u32 {
-            let base = core * per * 8 / 4; // spread across address space
-            let a = base;
-            let b = a + m * k * 8;
-            let c = b + k * n * 8 + 8;
-            programs.push(gemm_ssr_frep(m, k, n, a, b, c));
-        }
-        let mut sim = ClusterSim::new(ClusterConfig::default(), programs);
-        for i in 0..(16 * 1024) {
-            sim.tcdm.write_f64(i * 8, 1.0);
-        }
-        if with_dma {
-            // Stream 512-word blocks continuously into a scratch area.
-            for t in 0..64 {
-                sim.dma.enqueue(DmaXfer {
-                    tcdm_addr: 100 * 1024,
-                    ext_offset: (t % 4) * 512,
-                    words: 512,
-                    to_tcdm: t % 2 == 0,
-                });
-            }
-        }
-        let max = 10_000_000;
-        while !sim.all_halted() && sim.now() < max {
-            sim.step();
-        }
-        // Utilization over the compute region only (cores halt at
-        // different times; use flops over busiest-core cycles).
-        let cycles = sim
-            .cores
-            .iter()
-            .map(|c| c.stats.cycles)
-            .max()
-            .unwrap_or(1);
-        let flops: u64 = sim.cores.iter().map(|c| c.fpu.stats.flops).sum();
-        flops as f64 / (2.0 * 8.0 * cycles as f64)
+        gemm_all_cores_utilization(ClusterConfig::default(), 8, 64, 16, with_dma)
     };
     let uc = gemm_cluster(false);
     let uc_dma = gemm_cluster(true);
@@ -140,15 +111,27 @@ pub struct Coordinator {
     pub sys: SystemConfig,
     pub vdd: f64,
     pub calib: Calibration,
+    /// Cluster geometry used for TCDM-placed op pricing.
+    pub cluster: ClusterConfig,
 }
 
 impl Coordinator {
     pub fn new(sys: SystemConfig, vdd: f64) -> Self {
-        Coordinator { sys, vdd, calib: Calibration::default() }
+        Coordinator {
+            sys,
+            vdd,
+            calib: Calibration::default(),
+            cluster: ClusterConfig::default(),
+        }
     }
 
     pub fn with_calibration(mut self, c: Calibration) -> Self {
         self.calib = c;
+        self
+    }
+
+    pub fn with_cluster(mut self, c: ClusterConfig) -> Self {
+        self.cluster = c;
         self
     }
 
@@ -168,26 +151,111 @@ impl Coordinator {
         base * dip
     }
 
-    /// Evaluate one layer: performance, time, energy.
+    /// Cost one [`OpTask`] (totals across its `count` executions):
+    /// compute-heavy ops ride the calibrated roofline (the calibration
+    /// itself is measured on the cycle-level ClusterSim), TCDM-placed
+    /// ops run cluster-local against banked-SRAM bandwidth, and pure
+    /// data movement is priced at effective memory bandwidth.
+    pub fn simulate_task(&self, t: &OpTask) -> OpReport {
+        let freq = self.sys.freq(self.vdd);
+        let rl = self.sys.roofline(self.vdd);
+        let (time, achieved, util, power) = match t.placement {
+            Placement::Hbm => {
+                if t.flops > 0.0 {
+                    let achieved = self.achieved_flops(t.oi());
+                    let time = t.flops / achieved;
+                    let util = (achieved / rl.peak_flops).min(1.0);
+                    let power = self.sys.dvfs.power(
+                        self.vdd,
+                        self.sys.total_cores(),
+                        util,
+                    );
+                    (time, achieved, util, power)
+                } else {
+                    let time =
+                        t.bytes / (rl.peak_bw * self.calib.mem_util);
+                    let power = self.sys.dvfs.power(
+                        self.vdd,
+                        self.sys.total_cores(),
+                        0.0,
+                    );
+                    (time, 0.0, 0.0, power)
+                }
+            }
+            Placement::Tcdm => {
+                // Single cluster: 8 FPUs against 32-bank TCDM (8 B/bank
+                // per cycle), both derated by the measured calibration.
+                let peak_c = freq
+                    * self.sys.dvfs.flops_per_cycle
+                    * self.cluster.n_cores as f64
+                    * self.calib.compute_util;
+                let bw_c = (self.cluster.tcdm_banks * 8) as f64
+                    * freq
+                    * self.calib.mem_util;
+                let compute_t = t.flops / peak_c;
+                let mem_t = t.bytes / bw_c;
+                // An op is never cheaper than one cluster cycle.
+                let time = compute_t.max(mem_t).max(1.0 / freq);
+                let achieved = t.flops / time;
+                let util = (achieved
+                    / (freq
+                        * self.sys.dvfs.flops_per_cycle
+                        * self.cluster.n_cores as f64))
+                    .min(1.0);
+                let power =
+                    self.sys.dvfs.power(self.vdd, self.cluster.n_cores, util);
+                (time, achieved, util, power)
+            }
+        };
+        let n = t.count as f64;
+        let ssr_frep = t
+            .frep_kernel()
+            .map(|k| codegen::validate(&k, 16).is_ok())
+            .unwrap_or(false);
+        OpReport {
+            name: t.name.clone(),
+            kind: t.kind.label(),
+            count: t.count,
+            placement: t.placement,
+            flops: t.flops * n,
+            bytes: t.bytes * n,
+            cycles: time * freq * n,
+            time_s: time * n,
+            energy_j: power * time * n,
+            achieved,
+            fpu_util: util,
+            ssr_frep,
+        }
+    }
+
+    /// Cost a whole op stream (what `SimBackend` hands over after
+    /// tracing an artifact execution).
+    pub fn simulate_stream(
+        &self,
+        name: &str,
+        tasks: &[OpTask],
+    ) -> OpStreamReport {
+        OpStreamReport::new(
+            name,
+            tasks.iter().map(|t| self.simulate_task(t)).collect(),
+        )
+    }
+
+    /// Evaluate one layer: performance, time, energy (adapter over the
+    /// generic op-task path).
     pub fn simulate_layer(&self, layer: &Layer) -> LayerReport {
         let rl = self.sys.roofline(self.vdd);
         let oi = layer.oi();
-        let achieved = self.achieved_flops(oi);
-        let time = layer.flops / achieved;
-        let util = achieved / rl.peak_flops;
-        let power = self
-            .sys
-            .dvfs
-            .power(self.vdd, self.sys.total_cores(), util.min(1.0));
+        let r = self.simulate_task(&OpTask::from_layer(layer));
         LayerReport {
             name: layer.name.clone(),
             class: layer.class,
             oi,
             attainable: rl.attainable(oi),
-            achieved,
-            detachment: rl.detachment(oi, achieved),
-            time_s: time,
-            energy_j: power * time,
+            achieved: r.achieved,
+            detachment: rl.detachment(oi, r.achieved),
+            time_s: r.time_s,
+            energy_j: r.energy_j,
         }
     }
 
@@ -219,14 +287,13 @@ impl Coordinator {
         achieved / power
     }
 
-    /// Plan + schedule a big GEMM across all clusters; returns the
-    /// estimated wall time [s] and achieved flop/s.
+    /// Plan + schedule a big f64 GEMM across all clusters; returns the
+    /// estimated wall time [s] and achieved flop/s. Adapter over the
+    /// op-task path — `manticore run --backend sim` prices the same
+    /// `dot` through the identical machinery.
     pub fn schedule_gemm(&self, m: usize, k: usize, n: usize) -> (f64, f64) {
-        let plan = plan_gemm(m, k, n, 128 * 1024, 8);
-        let flops = 2.0 * (m * k * n) as f64;
-        let oi = flops / plan.total_dma_bytes.max(1.0);
-        let achieved = self.achieved_flops(oi);
-        (flops / achieved, achieved)
+        let r = self.simulate_task(&OpTask::dot("gemm", 1, m, k, n, 8));
+        (r.time_s, r.achieved)
     }
 }
 

@@ -1,0 +1,446 @@
+//! The generic op-scheduling layer: anything that can describe itself
+//! as a stream of [`OpTask`]s — dot/conv/elementwise/reduce/data ops
+//! with shapes and operand placement — can be priced on the Manticore
+//! system model by [`super::Coordinator::simulate_stream`]. The DNN
+//! layer path (`simulate_layer`) and the big-GEMM scheduler
+//! (`schedule_gemm`) are now thin adapters over this, and the runtime's
+//! `SimBackend` feeds every executed HLO instruction through it — the
+//! same machinery prices pre-baked workloads and live artifacts.
+
+use super::tiling::plan_gemm;
+use crate::cluster::ClusterConfig;
+use crate::codegen::{self, FrepKernel};
+use crate::util::bench::{fmt_ns, fmt_si, Table};
+use crate::workload::{Layer, LayerClass};
+
+/// Where an op's operands live during execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Working set fits one cluster's TCDM: the op runs on a single
+    /// cluster against banked-SRAM bandwidth (no HBM streaming).
+    Tcdm,
+    /// Tiled across the whole system; slabs are DMA-streamed from
+    /// HBM/L2 (the coordinator's double-buffered GEMM discipline).
+    Hbm,
+}
+
+impl Placement {
+    pub fn label(self) -> &'static str {
+        match self {
+            Placement::Tcdm => "tcdm",
+            Placement::Hbm => "hbm",
+        }
+    }
+}
+
+/// What an op computes, with enough geometry to derive both a cost
+/// model and (for the FP-streaming kinds) an SSR+FREP kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// Batched matrix contraction: `b × [m×k · k×n]`.
+    Dot { b: usize, m: usize, k: usize, n: usize },
+    /// Elementwise map over the output elements (`arity` array inputs).
+    Elementwise { arity: usize },
+    /// Reduction of `elems` inputs down to the output.
+    Reduce { elems: usize },
+    /// Pure data movement (reshape/slice/pad/gather/DMA traffic).
+    Data,
+    /// A pre-characterized DNN layer (flops/bytes carried by the task).
+    Layer(LayerClass),
+}
+
+impl OpKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            OpKind::Dot { .. } => "dot",
+            OpKind::Elementwise { .. } => "elementwise",
+            OpKind::Reduce { .. } => "reduce",
+            OpKind::Data => "data",
+            OpKind::Layer(LayerClass::Conv) => "conv",
+            OpKind::Layer(LayerClass::Linear) => "linear",
+            OpKind::Layer(LayerClass::Pool) => "pool",
+        }
+    }
+}
+
+/// Placement threshold: ops whose whole working set fits one cluster's
+/// TCDM (paper: 128 kB) stay cluster-local instead of streaming HBM.
+fn tcdm_capacity_bytes() -> usize {
+    ClusterConfig::default().tcdm_bytes
+}
+
+/// One schedulable unit of work. `flops`/`bytes` are per execution;
+/// `count` aggregates repeated executions of the same op (e.g. a
+/// `while`-loop body instruction seen once per iteration).
+#[derive(Debug, Clone)]
+pub struct OpTask {
+    pub name: String,
+    pub kind: OpKind,
+    /// Output elements per execution.
+    pub out_elems: usize,
+    /// Storage size of one element [bytes].
+    pub elem_bytes: usize,
+    /// FP operations per execution.
+    pub flops: f64,
+    /// Memory traffic per execution [bytes].
+    pub bytes: f64,
+    pub placement: Placement,
+    pub count: u64,
+}
+
+impl OpTask {
+    /// A batched GEMM, priced by the coordinator's TCDM tiling plan
+    /// (DMA traffic includes K-slab re-reads). Always HBM-placed: the
+    /// GEMM discipline streams slabs from HBM/L2 across all clusters.
+    pub fn dot(
+        name: &str,
+        b: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+        elem_bytes: usize,
+    ) -> OpTask {
+        let plan = plan_gemm(m, k, n, tcdm_capacity_bytes(), elem_bytes);
+        OpTask {
+            name: name.to_string(),
+            kind: OpKind::Dot { b, m, k, n },
+            out_elems: b * m * n,
+            elem_bytes,
+            flops: 2.0 * (b * m * k * n) as f64,
+            bytes: b as f64 * plan.total_dma_bytes,
+            placement: Placement::Hbm,
+            count: 1,
+        }
+    }
+
+    /// Elementwise map: one FP op per output element, `in_elems` total
+    /// input elements streamed.
+    pub fn elementwise(
+        name: &str,
+        arity: usize,
+        out_elems: usize,
+        in_elems: usize,
+        elem_bytes: usize,
+    ) -> OpTask {
+        let bytes = ((in_elems + out_elems) * elem_bytes) as f64;
+        OpTask {
+            name: name.to_string(),
+            kind: OpKind::Elementwise { arity },
+            out_elems,
+            elem_bytes,
+            flops: out_elems as f64,
+            bytes,
+            placement: auto_place(bytes),
+            count: 1,
+        }
+    }
+
+    /// Reduction: one FP op per input element.
+    pub fn reduce(
+        name: &str,
+        in_elems: usize,
+        out_elems: usize,
+        elem_bytes: usize,
+    ) -> OpTask {
+        let bytes = ((in_elems + out_elems) * elem_bytes) as f64;
+        OpTask {
+            name: name.to_string(),
+            kind: OpKind::Reduce { elems: in_elems },
+            out_elems,
+            elem_bytes,
+            flops: in_elems as f64,
+            bytes,
+            placement: auto_place(bytes),
+            count: 1,
+        }
+    }
+
+    /// Pure data movement of `moved_elems` elements (read + write).
+    pub fn data(name: &str, moved_elems: usize, elem_bytes: usize) -> OpTask {
+        let bytes = (moved_elems * elem_bytes) as f64;
+        OpTask {
+            name: name.to_string(),
+            kind: OpKind::Data,
+            out_elems: moved_elems,
+            elem_bytes,
+            flops: 0.0,
+            bytes,
+            placement: auto_place(bytes),
+            count: 1,
+        }
+    }
+
+    /// Adapter from the pre-baked DNN layer descriptors: flops/bytes
+    /// are taken from the layer's own accounting (fp32 activations).
+    pub fn from_layer(l: &Layer) -> OpTask {
+        OpTask {
+            name: l.name.clone(),
+            kind: OpKind::Layer(l.class),
+            out_elems: 0,
+            elem_bytes: 4,
+            flops: l.flops,
+            bytes: l.bytes,
+            placement: Placement::Hbm,
+            count: 1,
+        }
+    }
+
+    pub fn with_count(mut self, count: u64) -> OpTask {
+        self.count = count.max(1);
+        self
+    }
+
+    /// Operational intensity [flop/B].
+    pub fn oi(&self) -> f64 {
+        self.flops / self.bytes.max(1.0)
+    }
+
+    /// Derive the SSR stream specs + FREP kernel this op lowers to on
+    /// a Snitch core (None for pure data movement and layer adapters).
+    /// The dot kernel is the k-long contraction micro-kernel each core
+    /// runs per output element; trip counts are rounded up to the
+    /// 4-way unroll.
+    pub fn frep_kernel(&self) -> Option<FrepKernel> {
+        // Trip counts are capped so stream byte addresses stay inside
+        // the 32-bit TCDM space; spec validation is length-uniform.
+        let cap = |v: usize| -> u32 { v.clamp(1, 1 << 20) as u32 };
+        let round4 = |v: u32| v.div_ceil(4) * 4;
+        match self.kind {
+            OpKind::Dot { k, .. } => {
+                let k4 = round4(cap(k));
+                Some(codegen::dot_spec(k4, 4, 0, k4 * 8 + 8))
+            }
+            OpKind::Elementwise { arity } => {
+                let n = cap(self.out_elems);
+                Some(codegen::elementwise_spec(n, arity, 0, n * 8, 2 * n * 8))
+            }
+            OpKind::Reduce { elems } => {
+                Some(codegen::reduce_spec(round4(cap(elems)), 4, 0))
+            }
+            OpKind::Data | OpKind::Layer(_) => None,
+        }
+    }
+}
+
+fn auto_place(bytes: f64) -> Placement {
+    if bytes <= tcdm_capacity_bytes() as f64 {
+        Placement::Tcdm
+    } else {
+        Placement::Hbm
+    }
+}
+
+/// Cost estimate for one (possibly repeated) op: totals across all
+/// `count` executions.
+#[derive(Debug, Clone)]
+pub struct OpReport {
+    pub name: String,
+    pub kind: &'static str,
+    pub count: u64,
+    pub placement: Placement,
+    pub flops: f64,
+    pub bytes: f64,
+    pub cycles: f64,
+    pub time_s: f64,
+    pub energy_j: f64,
+    /// Achieved FP rate while this op runs [flop/s].
+    pub achieved: f64,
+    /// FPU utilization relative to the placement-scope peak.
+    pub fpu_util: f64,
+    /// Whether the op lowers to a validated SSR+FREP kernel.
+    pub ssr_frep: bool,
+}
+
+/// Whole-stream report: per-op estimates plus totals. This is what
+/// `manticore run/train --backend sim` print as the timing/energy
+/// table.
+#[derive(Debug, Clone)]
+pub struct OpStreamReport {
+    pub name: String,
+    pub ops: Vec<OpReport>,
+    pub total_cycles: f64,
+    pub total_time_s: f64,
+    pub total_energy_j: f64,
+    pub total_flops: f64,
+    pub total_bytes: f64,
+    /// Time-weighted mean FPU utilization.
+    pub fpu_util: f64,
+}
+
+impl OpStreamReport {
+    pub fn new(name: &str, ops: Vec<OpReport>) -> OpStreamReport {
+        let total_time_s: f64 = ops.iter().map(|o| o.time_s).sum();
+        let fpu_util = if total_time_s > 0.0 {
+            ops.iter().map(|o| o.fpu_util * o.time_s).sum::<f64>()
+                / total_time_s
+        } else {
+            0.0
+        };
+        OpStreamReport {
+            name: name.to_string(),
+            total_cycles: ops.iter().map(|o| o.cycles).sum(),
+            total_time_s,
+            total_energy_j: ops.iter().map(|o| o.energy_j).sum(),
+            total_flops: ops.iter().map(|o| o.flops).sum(),
+            total_bytes: ops.iter().map(|o| o.bytes).sum(),
+            fpu_util,
+            ops,
+        }
+    }
+
+    /// First op whose name starts with `prefix` (e.g. `"dot"`).
+    pub fn op(&self, prefix: &str) -> Option<&OpReport> {
+        self.ops.iter().find(|o| o.name.starts_with(prefix))
+    }
+
+    /// Render the per-op table, heaviest ops first, truncated to
+    /// `max_rows` with a rollup row for the remainder plus a totals
+    /// row.
+    pub fn table(&self, max_rows: usize) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "{} — per-op schedule (total {:.0} cycles, {}, {:.3} mJ, \
+                 FPU util {:.1} %)",
+                self.name,
+                self.total_cycles,
+                fmt_ns(self.total_time_s * 1e9),
+                self.total_energy_j * 1e3,
+                self.fpu_util * 100.0
+            ),
+            &[
+                "op", "kind", "count", "place", "flops", "bytes", "cycles",
+                "time", "energy", "FPU util", "ssr+frep",
+            ],
+        );
+        let mut sorted: Vec<&OpReport> = self.ops.iter().collect();
+        sorted.sort_by(|a, b| b.cycles.total_cmp(&a.cycles));
+        for o in sorted.iter().take(max_rows) {
+            t.row(vec![
+                o.name.clone(),
+                o.kind.to_string(),
+                o.count.to_string(),
+                o.placement.label().to_string(),
+                fmt_si(o.flops, "flop"),
+                fmt_si(o.bytes, "B"),
+                format!("{:.0}", o.cycles),
+                fmt_ns(o.time_s * 1e9),
+                format!("{:.4} mJ", o.energy_j * 1e3),
+                format!("{:.1} %", o.fpu_util * 100.0),
+                if o.ssr_frep { "yes" } else { "-" }.to_string(),
+            ]);
+        }
+        if sorted.len() > max_rows {
+            let rest = &sorted[max_rows..];
+            t.row(vec![
+                format!("(+ {} more ops)", rest.len()),
+                "-".into(),
+                rest.iter().map(|o| o.count).sum::<u64>().to_string(),
+                "-".into(),
+                fmt_si(rest.iter().map(|o| o.flops).sum(), "flop"),
+                fmt_si(rest.iter().map(|o| o.bytes).sum(), "B"),
+                format!("{:.0}", rest.iter().map(|o| o.cycles).sum::<f64>()),
+                fmt_ns(rest.iter().map(|o| o.time_s).sum::<f64>() * 1e9),
+                format!(
+                    "{:.4} mJ",
+                    rest.iter().map(|o| o.energy_j).sum::<f64>() * 1e3
+                ),
+                "-".into(),
+                "-".into(),
+            ]);
+        }
+        t.row(vec![
+            "TOTAL".into(),
+            "-".into(),
+            self.ops.iter().map(|o| o.count).sum::<u64>().to_string(),
+            "-".into(),
+            fmt_si(self.total_flops, "flop"),
+            fmt_si(self.total_bytes, "B"),
+            format!("{:.0}", self.total_cycles),
+            fmt_ns(self.total_time_s * 1e9),
+            format!("{:.4} mJ", self.total_energy_j * 1e3),
+            format!("{:.1} %", self.fpu_util * 100.0),
+            "-".into(),
+        ]);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::validate;
+
+    #[test]
+    fn dot_task_prices_by_tiling_plan() {
+        let t = OpTask::dot("d", 1, 512, 512, 512, 8);
+        assert_eq!(t.flops, 2.0 * 512.0 * 512.0 * 512.0);
+        // Traffic at least the compulsory A+B+C bytes.
+        assert!(t.bytes >= (3 * 512 * 512 * 8) as f64);
+        assert_eq!(t.placement, Placement::Hbm);
+    }
+
+    #[test]
+    fn placement_follows_tcdm_capacity() {
+        let small = OpTask::elementwise("s", 2, 1024, 2048, 8);
+        assert_eq!(small.placement, Placement::Tcdm);
+        let big = OpTask::elementwise("b", 2, 1 << 20, 2 << 20, 8);
+        assert_eq!(big.placement, Placement::Hbm);
+    }
+
+    #[test]
+    fn frep_kernels_validate_for_fp_kinds() {
+        for t in [
+            OpTask::dot("d", 1, 64, 63, 64, 8), // k not multiple of 4
+            OpTask::elementwise("e", 2, 100, 200, 8),
+            OpTask::elementwise("u", 1, 100, 100, 8),
+            OpTask::reduce("r", 1000, 1, 8),
+        ] {
+            let k = t.frep_kernel().unwrap_or_else(|| {
+                panic!("{}: no kernel", t.name)
+            });
+            assert!(validate(&k, 16).is_ok(), "{}", t.name);
+        }
+        assert!(OpTask::data("m", 64, 8).frep_kernel().is_none());
+    }
+
+    #[test]
+    fn stream_report_totals_and_rollup() {
+        let co = crate::coordinator::Coordinator::new(
+            crate::system::SystemConfig::default(),
+            0.9,
+        );
+        let tasks: Vec<OpTask> = (0..5)
+            .map(|i| {
+                OpTask::elementwise(&format!("e{i}"), 2, 4096, 8192, 8)
+            })
+            .collect();
+        let rep = co.simulate_stream("s", &tasks);
+        assert_eq!(rep.ops.len(), 5);
+        assert!(rep.total_time_s > 0.0 && rep.total_energy_j > 0.0);
+        assert!(
+            (rep.total_cycles
+                - rep.ops.iter().map(|o| o.cycles).sum::<f64>())
+            .abs()
+                < 1e-9
+        );
+        let t = rep.table(3);
+        // 3 shown + rollup + totals.
+        assert_eq!(t.rows.len(), 5);
+        assert!(t.rows[3][0].contains("more ops"));
+        assert_eq!(t.rows[4][0], "TOTAL");
+    }
+
+    #[test]
+    fn count_scales_totals_linearly() {
+        let co = crate::coordinator::Coordinator::new(
+            crate::system::SystemConfig::default(),
+            0.9,
+        );
+        let one = co.simulate_task(&OpTask::dot("d", 1, 64, 64, 64, 8));
+        let four =
+            co.simulate_task(&OpTask::dot("d", 1, 64, 64, 64, 8).with_count(4));
+        assert!((four.cycles / one.cycles - 4.0).abs() < 1e-9);
+        assert!((four.energy_j / one.energy_j - 4.0).abs() < 1e-9);
+        assert_eq!(four.fpu_util, one.fpu_util);
+    }
+}

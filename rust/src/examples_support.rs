@@ -69,6 +69,9 @@ pub struct TrainReport {
     pub host_time_s: f64,
     /// Training accuracy on a held-out synthetic batch.
     pub accuracy: f64,
+    /// Per-op schedule of the training step on the simulated machine
+    /// (Some only when the runtime backend models execution: `sim`).
+    pub per_op: Option<crate::coordinator::OpStreamReport>,
 }
 
 /// Run the end-to-end training loop with the default backend.
@@ -137,6 +140,8 @@ pub fn train_loop_on(
         }
     }
     let host_time_s = t0.elapsed().as_secs_f64();
+    // Per-op schedule of one training step (sim backend only).
+    let per_op = rt.last_report("cnn_train_step");
 
     // 4. Accuracy on a fresh batch via the predict artifact.
     let (x, y) = data.batch(batch);
@@ -159,5 +164,6 @@ pub fn train_loop_on(
         sim_step_energy_j: rep.total_energy_j,
         host_time_s,
         accuracy: correct as f64 / batch as f64,
+        per_op,
     })
 }

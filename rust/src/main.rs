@@ -1,31 +1,49 @@
 //! `manticore` CLI — the L3 entry point.
 //!
 //! Subcommands:
-//!   repro <fig5|fig6|fig8|fig9|fig10|fig3|area|peaks|all>
+//!   repro <fig5|fig6|fig8|fig9|fig10|fig3|area|peaks|simops|all>
 //!   run <artifact> [--iters N]          execute an AOT artifact
 //!   simulate gemm --m --k --n           schedule a GEMM on the system model
 //!   simulate kernel --name <dot|matvec|gemm|axpy>   cycle-level run
 //!   train [--steps N] [--lr F]          tiny end-to-end training loop
+//!   backends                            list runtime backends + gates
+//!   bench-diff <old.json> <new.json>    perf regression check
 //!   info                                list artifacts + config
 //!
 //! Global options: --preset <manticore|prototype|max-efficiency>,
-//! --config <file.json>, --artifacts <dir>, --backend <native|xla>.
+//! --config <file.json>, --artifacts <dir>, --backend <native|sim|xla>.
 //! Artifacts execute on the pluggable runtime backend (pure-Rust HLO
-//! interpreter by default; PJRT/XLA behind the `xla` feature).
+//! interpreter by default; `sim` adds a per-op cycle/energy schedule
+//! on the simulated Manticore; PJRT/XLA behind the `xla` feature).
 
 use anyhow::{bail, Context, Result};
 use manticore::config::Config;
 use manticore::coordinator::Coordinator;
 use manticore::repro;
-use manticore::runtime::{backend_by_name, tensor_for_spec, Runtime, Tensor};
-use manticore::util::bench::fmt_si;
+use manticore::runtime::sim::SimBackend;
+use manticore::runtime::{
+    backend_by_name, backends, tensor_for_spec, Runtime, Tensor,
+};
+use manticore::util::bench::{diff_reports, fmt_si};
 use manticore::util::cli;
+use manticore::util::json;
 use manticore::util::rng::Rng;
 
 /// Open the runtime honouring `--backend` (falls back to
-/// `MANTICORE_BACKEND`, then `native`).
-fn open_runtime(args: &cli::Args, artifacts_dir: &str) -> Result<Runtime> {
-    match args.get("backend") {
+/// `MANTICORE_BACKEND`, then `native`). Both selection forms resolve
+/// here so the `sim` backend is always built from the active config
+/// (`--preset`/`--config` shape the machine it schedules on); the
+/// registry stays the source of truth for every other name.
+fn open_runtime(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<Runtime> {
+    let choice = args
+        .get("backend")
+        .map(str::to_string)
+        .or_else(|| std::env::var("MANTICORE_BACKEND").ok());
+    match choice.as_deref() {
+        Some("sim") => Runtime::with_backend(
+            artifacts_dir,
+            Box::new(SimBackend::from_config(cfg)),
+        ),
         Some(name) => Runtime::with_backend(artifacts_dir, backend_by_name(name)?),
         None => Runtime::new(artifacts_dir),
     }
@@ -43,10 +61,12 @@ fn main() -> Result<()> {
     let artifacts_dir = args.get_or("artifacts", "artifacts");
 
     match sub.as_deref() {
-        Some("repro") => cmd_repro(&args),
-        Some("run") => cmd_run(&args, &artifacts_dir),
+        Some("repro") => cmd_repro(&args, &artifacts_dir),
+        Some("run") => cmd_run(&args, &artifacts_dir, &cfg),
         Some("simulate") => cmd_simulate(&args, &cfg),
         Some("train") => cmd_train(&args, &artifacts_dir, &cfg),
+        Some("backends") => cmd_backends(),
+        Some("bench-diff") => cmd_bench_diff(&args),
         Some("info") => cmd_info(&args, &artifacts_dir, &cfg),
         _ => {
             print_help();
@@ -61,23 +81,83 @@ fn print_help() {
          chiplet architecture\n\n\
          USAGE: manticore <COMMAND> [OPTIONS]\n\n\
          COMMANDS:\n  \
-         repro <fig5|fig6|fig8|fig9|fig10|fig3|area|peaks|all>\n  \
-         run <artifact> [--iters N]\n  \
+         repro <fig5|fig6|fig8|fig9|fig10|fig3|area|peaks|simops|all>\n  \
+         run <artifact|path/to/x.hlo.txt> [--iters N] [--ops N]\n  \
          simulate gemm --m M --k K --n N | simulate kernel --name <..>\n  \
          train [--steps N] [--lr F]\n  \
+         backends\n  \
+         bench-diff <old.json> <new.json> [--threshold 0.1] [--md out.md]\n  \
          info\n\n\
          OPTIONS: --preset <name> --config <file.json> --artifacts <dir> \
-         --backend <native|xla>"
+         --backend <native|sim|xla>"
     );
 }
 
-fn cmd_repro(args: &cli::Args) -> Result<()> {
+/// List the backend registry (`manticore backends`).
+fn cmd_backends() -> Result<()> {
+    println!("{:8} {:10} {:10} description", "name", "aliases", "gate");
+    for b in backends() {
+        println!(
+            "{:8} {:10} {:10} {}",
+            b.name,
+            b.aliases.join(","),
+            match (b.feature, b.available) {
+                (None, _) => "built-in".to_string(),
+                (Some(f), true) => format!("+{f}"),
+                (Some(f), false) => format!("needs {f}"),
+            },
+            b.description
+        );
+    }
+    Ok(())
+}
+
+/// Compare two bench JSON reports; warn (non-fatally) on regressions.
+fn cmd_bench_diff(args: &cli::Args) -> Result<()> {
+    let (Some(old_path), Some(new_path)) =
+        (args.positional.first(), args.positional.get(1))
+    else {
+        bail!("usage: manticore bench-diff <old.json> <new.json> [--threshold 0.1] [--md out.md]");
+    };
+    let threshold = args.get_f64("threshold", 0.10);
+    let load = |p: &str| -> Result<json::Value> {
+        let text = std::fs::read_to_string(p)
+            .with_context(|| format!("reading {p}"))?;
+        json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {p}: {e}"))
+    };
+    let (old, new) = (load(old_path)?, load(new_path)?);
+    let (table, regressions) = diff_reports(&old, &new, threshold);
+    table.print();
+    if let Some(md) = args.get("md") {
+        std::fs::write(md, table.render())
+            .with_context(|| format!("writing {md}"))?;
+        println!("wrote diff table to {md}");
+    }
+    if regressions > 0 {
+        println!(
+            "warning: {regressions} bench(es) regressed by more than \
+             {:.0} % (non-fatal)",
+            threshold * 100.0
+        );
+    } else {
+        println!("no regressions above {:.0} %", threshold * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_repro(args: &cli::Args, artifacts_dir: &str) -> Result<()> {
     let which = args
         .positional
         .first()
         .map(String::as_str)
         .unwrap_or("all");
     match which {
+        "simops" => repro::sim_ops(
+            artifacts_dir,
+            &args.get_or("artifact", "matmul_f64_64"),
+            args.get_usize("ops", 16),
+        )?
+        .print(),
         "fig5" => repro::fig5(args.get_usize("n", 2048) as u32).print(),
         "fig6" => repro::fig6().print(),
         "fig8" => {
@@ -107,11 +187,35 @@ fn cmd_repro(args: &cli::Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_run(args: &cli::Args, artifacts_dir: &str) -> Result<()> {
-    let Some(name) = args.positional.first() else {
-        bail!("usage: manticore run <artifact> [--iters N]");
+/// Accept either a manifest name (`matmul_f64_64`) or a path to the
+/// HLO text (`artifacts/matmul_f64_64.hlo.txt`); a path overrides the
+/// artifacts directory.
+fn resolve_artifact(arg: &str, default_dir: &str) -> (String, String) {
+    match arg.strip_suffix(".hlo.txt") {
+        Some(stem) => {
+            let p = std::path::Path::new(stem);
+            let dir = p
+                .parent()
+                .filter(|d| !d.as_os_str().is_empty())
+                .map(|d| d.display().to_string())
+                .unwrap_or_else(|| default_dir.to_string());
+            let name = p
+                .file_name()
+                .map(|f| f.to_string_lossy().into_owned())
+                .unwrap_or_else(|| stem.to_string());
+            (dir, name)
+        }
+        None => (default_dir.to_string(), arg.to_string()),
+    }
+}
+
+fn cmd_run(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> {
+    let Some(arg) = args.positional.first() else {
+        bail!("usage: manticore run <artifact> [--iters N] [--ops N]");
     };
-    let mut rt = open_runtime(args, artifacts_dir)?;
+    let (dir, name) = resolve_artifact(arg, artifacts_dir);
+    let name = name.as_str();
+    let mut rt = open_runtime(args, &dir, cfg)?;
     println!("backend: {} ({})", rt.backend_name(), rt.platform());
     let meta = rt
         .meta(name)
@@ -137,6 +241,10 @@ fn cmd_run(args: &cli::Args, artifacts_dir: &str) -> Result<()> {
         "{name}: first {first:?}, steady {:?}/call over {iters} iters",
         total / iters as u32
     );
+    // Backends that model execution (sim) retain a per-op schedule.
+    if let Some(rep) = rt.last_report(name) {
+        rep.table(args.get_usize("ops", 16)).print();
+    }
     Ok(())
 }
 
@@ -240,7 +348,7 @@ fn cmd_simulate_kernel(args: &cli::Args, cfg: &Config) -> Result<()> {
 fn cmd_train(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> {
     let steps = args.get_usize("steps", 50);
     let lr = args.get_f64("lr", 0.05) as f32;
-    let rt = open_runtime(args, artifacts_dir)?;
+    let rt = open_runtime(args, artifacts_dir, cfg)?;
     let report = manticore::examples_support::train_loop_on(
         rt,
         steps,
@@ -259,12 +367,17 @@ fn cmd_train(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> 
         report.sim_step_time_s * 1e3,
         report.sim_step_energy_j * 1e3,
     );
+    // With --backend sim the whole CNN training step has a per-op
+    // timing/energy schedule on the simulated machine.
+    if let Some(rep) = &report.per_op {
+        rep.table(args.get_usize("ops", 16)).print();
+    }
     Ok(())
 }
 
 fn cmd_info(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> {
     println!("config:\n{}", cfg.to_json());
-    match open_runtime(args, artifacts_dir) {
+    match open_runtime(args, artifacts_dir, cfg) {
         Ok(rt) => {
             println!(
                 "\nartifacts in {artifacts_dir} (backend {}, {}):",

@@ -442,6 +442,41 @@ pub fn peaks_table() -> Table {
     t
 }
 
+/// SimBackend per-op schedule for an artifact: execute it on the
+/// op-scheduling layer and return the timing/energy table. This is the
+/// experiment-index harness mapping `--backend sim` runs onto the
+/// Fig. 9 roofline claims (compute-heavy ops near the compute roof,
+/// data movement priced at effective bandwidth).
+pub fn sim_ops(
+    artifacts_dir: &str,
+    artifact: &str,
+    max_rows: usize,
+) -> anyhow::Result<Table> {
+    use crate::runtime::sim::SimBackend;
+    use crate::runtime::{tensor_for_spec, Runtime};
+    use anyhow::Context;
+
+    let mut rt = Runtime::with_backend(
+        artifacts_dir,
+        Box::new(SimBackend::new()),
+    )?;
+    let meta = rt
+        .meta(artifact)
+        .with_context(|| format!("unknown artifact '{artifact}'"))?
+        .clone();
+    let mut rng = Rng::new(0);
+    let inputs = meta
+        .inputs
+        .iter()
+        .map(|spec| tensor_for_spec(spec, |_| rng.normal() * 0.1))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    rt.execute(artifact, &inputs)?;
+    let rep = rt
+        .last_report(artifact)
+        .context("sim backend produced no per-op report")?;
+    Ok(rep.table(max_rows))
+}
+
 /// Run every harness (the `repro all` command).
 pub fn all() -> Vec<Table> {
     let mut out = vec![fig5(2048), fig6()];
@@ -524,5 +559,16 @@ mod tests {
     fn all_runs() {
         let tables = all();
         assert!(tables.len() >= 9);
+    }
+
+    #[test]
+    fn sim_ops_schedules_the_matmul_artifact() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+            return;
+        }
+        let t = sim_ops("artifacts", "matmul_f64_64", 24).unwrap();
+        assert!(t.rows.iter().any(|r| r[1] == "dot"), "{:?}", t.rows);
+        assert_eq!(t.rows.last().unwrap()[0], "TOTAL");
     }
 }

@@ -1,17 +1,24 @@
-//! The pluggable execution backend interface.
+//! The pluggable execution backend interface and the backend registry.
 //!
 //! `Runtime` owns a `Box<dyn Backend>`; artifacts are HLO text and a
-//! backend turns them into `Executable`s. Two implementations exist:
+//! backend turns them into `Executable`s. Implementations:
 //!
 //! * [`super::native::NativeBackend`] — pure-Rust HLO interpreter,
 //!   always available, the default;
+//! * [`super::sim::SimBackend`] — same numerics, plus every executed
+//!   op is scheduled on the Manticore system model (per-op
+//!   cycle/energy/FPU-utilization estimates);
 //! * `PjrtBackend` (feature `xla`) — compiles through the external
 //!   `xla` crate onto the PJRT CPU client.
 //!
 //! Backend selection: `Runtime::new` uses the `MANTICORE_BACKEND`
-//! environment variable (`native` or `xla`), defaulting to `native`.
+//! environment variable, defaulting to `native`. The registry
+//! ([`backends`]) is the single source of truth for names, aliases
+//! and feature gates; `backend_by_name` and the `manticore backends`
+//! subcommand both read it.
 
 use super::Tensor;
+use crate::coordinator::OpStreamReport;
 use anyhow::{bail, Result};
 
 /// A compiled artifact, ready to execute.
@@ -20,11 +27,17 @@ pub trait Executable {
     /// artifacts are lowered with `return_tuple=True`, so the tuple is
     /// unpacked here).
     fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Per-op schedule of the most recent `execute` call, for backends
+    /// that model execution on the simulated machine (SimBackend).
+    fn last_report(&self) -> Option<OpStreamReport> {
+        None
+    }
 }
 
 /// An execution engine that compiles HLO text.
 pub trait Backend {
-    /// Short identifier used in error messages ("native", "xla").
+    /// Short identifier used in error messages ("native", "sim", "xla").
     fn name(&self) -> &'static str;
 
     /// Human-readable platform string (e.g. PJRT platform name).
@@ -32,6 +45,70 @@ pub trait Backend {
 
     /// Compile one artifact's HLO text.
     fn compile(&self, name: &str, hlo_text: &str) -> Result<Box<dyn Executable>>;
+}
+
+/// Registry entry describing one backend.
+pub struct BackendInfo {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub description: &'static str,
+    /// Cargo feature gating the backend (None = always built).
+    pub feature: Option<&'static str>,
+    /// Whether this build can construct it.
+    pub available: bool,
+    build: fn() -> Result<Box<dyn Backend>>,
+}
+
+impl BackendInfo {
+    /// True when `name` is the canonical name or an alias.
+    pub fn matches(&self, name: &str) -> bool {
+        self.name == name || self.aliases.contains(&name)
+    }
+}
+
+/// The backend registry: one row per backend, whether or not it is
+/// compiled into this build (`manticore backends` lists all of them).
+pub fn backends() -> Vec<BackendInfo> {
+    vec![
+        BackendInfo {
+            name: "native",
+            aliases: &[],
+            description: "pure-Rust HLO interpreter (default; fully offline)",
+            feature: None,
+            available: true,
+            build: || Ok(Box::new(super::native::NativeBackend::new())),
+        },
+        BackendInfo {
+            name: "sim",
+            aliases: &[],
+            description: "HLO interpreter + per-op cycle/energy schedule \
+                          on the simulated Manticore",
+            feature: None,
+            available: true,
+            build: || Ok(Box::new(super::sim::SimBackend::new())),
+        },
+        BackendInfo {
+            name: "xla",
+            aliases: &["pjrt"],
+            description: "XLA/PJRT CPU client (external `xla` crate)",
+            feature: Some("xla"),
+            available: cfg!(feature = "xla"),
+            build: build_xla,
+        },
+    ]
+}
+
+#[cfg(feature = "xla")]
+fn build_xla() -> Result<Box<dyn Backend>> {
+    Ok(Box::new(super::pjrt::PjrtBackend::new()?))
+}
+
+#[cfg(not(feature = "xla"))]
+fn build_xla() -> Result<Box<dyn Backend>> {
+    bail!(
+        "backend 'xla' requires the `xla` cargo feature (rebuild with \
+         `--features xla`; see DESIGN.md §Runtime backends)"
+    )
 }
 
 /// Construct the backend selected by `MANTICORE_BACKEND` (default:
@@ -42,17 +119,54 @@ pub fn default_backend() -> Result<Box<dyn Backend>> {
     backend_by_name(&choice)
 }
 
-/// Construct a backend by name.
+/// Construct a backend by registry name or alias.
 pub fn backend_by_name(name: &str) -> Result<Box<dyn Backend>> {
-    match name {
-        "native" => Ok(Box::new(super::native::NativeBackend::new())),
-        #[cfg(feature = "xla")]
-        "xla" | "pjrt" => Ok(Box::new(super::pjrt::PjrtBackend::new()?)),
-        #[cfg(not(feature = "xla"))]
-        "xla" | "pjrt" => bail!(
-            "backend '{name}' requires the `xla` cargo feature (rebuild \
-             with `--features xla`; see DESIGN.md §Runtime backends)"
-        ),
-        other => bail!("unknown backend '{other}' (expected 'native' or 'xla')"),
+    let reg = backends();
+    match reg.iter().find(|b| b.matches(name)) {
+        Some(info) => (info.build)(),
+        None => {
+            let known: Vec<&str> = reg.iter().map(|b| b.name).collect();
+            bail!(
+                "unknown backend '{name}' (expected one of: {})",
+                known.join(", ")
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_builds_available_backends() {
+        for info in backends() {
+            if info.available {
+                let b = backend_by_name(info.name).unwrap();
+                assert_eq!(b.name(), info.name);
+            }
+        }
+    }
+
+    #[test]
+    fn aliases_resolve_and_unknown_names_fail() {
+        // 'pjrt' resolves to the xla entry (which errors without the
+        // feature but is a *known* name).
+        let err_or_ok = backend_by_name("pjrt");
+        if !cfg!(feature = "xla") {
+            let msg = format!("{}", err_or_ok.unwrap_err());
+            assert!(msg.contains("xla"), "{msg}");
+        }
+        let msg = format!("{}", backend_by_name("nonsense").unwrap_err());
+        assert!(msg.contains("unknown backend"), "{msg}");
+        assert!(msg.contains("native"), "{msg}");
+    }
+
+    #[test]
+    fn sim_backend_is_registered_and_available() {
+        let reg = backends();
+        let sim = reg.iter().find(|b| b.name == "sim").unwrap();
+        assert!(sim.available);
+        assert_eq!(backend_by_name("sim").unwrap().name(), "sim");
     }
 }

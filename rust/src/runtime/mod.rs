@@ -4,21 +4,29 @@
 //! Python is **never** on this path — the interchange format is HLO
 //! text.
 //!
-//! Backends:
+//! Backends (see the registry in [`backend::backends`]):
 //! * [`native::NativeBackend`] (default) — pure-Rust HLO interpreter,
 //!   fully offline;
+//! * [`sim::SimBackend`] — same numerics, plus every executed op is
+//!   scheduled on the simulated Manticore (per-op cycle/energy/FPU
+//!   estimates via `coordinator::OpTask`);
 //! * `PjrtBackend` (cargo feature `xla`) — the XLA/PJRT CPU client.
 //!
-//! Select with `MANTICORE_BACKEND=native|xla` or
+//! Select with `MANTICORE_BACKEND=native|sim|xla` or
 //! [`Runtime::with_backend`].
 
 pub mod backend;
 pub mod native;
 #[cfg(feature = "xla")]
 pub mod pjrt;
+pub mod sim;
 
-pub use self::backend::{backend_by_name, default_backend, Backend, Executable};
+pub use self::backend::{
+    backend_by_name, backends, default_backend, Backend, BackendInfo,
+    Executable,
+};
 
+use crate::coordinator::OpStreamReport;
 use crate::util::json::{self, Value};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
@@ -296,6 +304,13 @@ impl Runtime {
             }
         }
         self.cache[name].execute(inputs)
+    }
+
+    /// Per-op schedule of the most recent execution of `name` (Some
+    /// only for backends that model execution on the simulated
+    /// machine, i.e. `sim`).
+    pub fn last_report(&self, name: &str) -> Option<OpStreamReport> {
+        self.cache.get(name).and_then(|exe| exe.last_report())
     }
 
     /// Execute and time the call (returns outputs + wall time).

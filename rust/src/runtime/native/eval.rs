@@ -15,6 +15,7 @@
 
 use super::parser::{parse_literal, Computation, DType, Instr, Module, Shape};
 use anyhow::{anyhow, bail, Context, Result};
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 
 /// Safety cap for `while` loops (the L2 graphs iterate grid steps,
@@ -84,8 +85,11 @@ fn next_index(idx: &mut [usize], dims: &[usize]) -> bool {
     false
 }
 
-/// Canonicalise a buffer for a result dtype (round f32, wrap ints).
-fn finalize(ty: DType, data: &mut [f64]) {
+/// Canonicalise a buffer for a result dtype (round f32, wrap ints,
+/// 0/1 for pred). This is THE shared dtype rounding/wrapping helper:
+/// every op result funnels through it (via `Evaluator::out_arr` or the
+/// variadic-reduce path), so numerics can't drift between op kinds.
+pub(crate) fn canonicalize(ty: DType, data: &mut [f64]) {
     match ty {
         DType::F64 => {}
         DType::F32 | DType::F16 | DType::BF16 => {
@@ -104,6 +108,25 @@ fn finalize(ty: DType, data: &mut [f64]) {
                 *v = wrap_int(ty, w, *v);
             }
         }
+    }
+}
+
+/// All-ones mask for a `w`-bit integer type (w >= 64 saturates).
+fn int_mask(w: u32) -> u64 {
+    if w >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << w) - 1
+    }
+}
+
+/// Reinterpret the low `w` bits as a signed or unsigned integer value.
+fn bits_to_value(ty: DType, w: u32, bits: u64) -> f64 {
+    let b = bits & int_mask(w);
+    if ty.is_signed() && w < 64 && b >= (1u64 << (w - 1)) {
+        (b as i64 - (1i64 << w)) as f64
+    } else {
+        b as f64
     }
 }
 
@@ -130,7 +153,7 @@ fn wrap_int(ty: DType, width: u32, v: f64) -> f64 {
 /// Integer-domain binary bit op (operands already wrapped into range).
 fn bitop(op: &str, ty: DType, a: f64, b: f64) -> Result<f64> {
     let w = ty.int_width().context("bit op on float type")? as i64;
-    let mask: i64 = if w >= 64 { -1 } else { (1i64 << w) - 1 };
+    let mask: i64 = int_mask(w as u32) as i64;
     let ai = (a as i64) & mask;
     // Shift amounts are range-checked raw (not masked), so a negative
     // operand is out-of-band rather than a huge positive; the bitwise
@@ -177,8 +200,7 @@ fn bitcast(src: DType, dst: DType, v: f64) -> Result<f64> {
         DType::F64 => v.to_bits(),
         _ => {
             let w = src.int_width().context("bitcast src")?;
-            let mask = if w >= 64 { u64::MAX } else { (1u64 << w) - 1 };
-            (v as i64 as u64) & mask
+            (v as i64 as u64) & int_mask(w)
         }
     };
     Ok(match dst {
@@ -186,13 +208,7 @@ fn bitcast(src: DType, dst: DType, v: f64) -> Result<f64> {
         DType::F64 => f64::from_bits(bits),
         _ => {
             let w = dst.int_width().context("bitcast dst")?;
-            let mask = if w >= 64 { u64::MAX } else { (1u64 << w) - 1 };
-            let b = bits & mask;
-            if dst.is_signed() && w < 64 && b >= (1u64 << (w - 1)) {
-                (b as i64 - (1i64 << w)) as f64
-            } else {
-                b as f64
-            }
+            bits_to_value(dst, w, bits)
         }
     })
 }
@@ -365,16 +381,68 @@ pub fn supported_ops() -> Vec<&'static str> {
     ops
 }
 
+/// One executed instruction, as observed through an execution trace
+/// ([`Evaluator::with_trace`]): opcode, result geometry, operand sizes
+/// and — for `dot` — the classified contraction dims. The trace is the
+/// ground truth `SimBackend` turns into an `OpTask` stream: unlike a
+/// static walk of the module it sees through `call`/`while`/
+/// `conditional`, so loop bodies are counted once per iteration.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: String,
+    pub op: String,
+    /// Element type of the (first leaf of the) result.
+    pub ty: DType,
+    /// Total result elements across tuple leaves.
+    pub out_elems: usize,
+    /// Flat element counts of each array operand.
+    pub operand_elems: Vec<usize>,
+    /// `(batch, m, k, n)` for `dot` instructions.
+    pub dot: Option<(usize, usize, usize, usize)>,
+}
+
+/// Control-flow / bookkeeping ops that never reach hardware; their
+/// bodies (for call/while/conditional) are traced instruction-wise.
+const TRACE_SKIP: &[&str] = &[
+    "parameter",
+    "constant",
+    "tuple",
+    "get-tuple-element",
+    "call",
+    "while",
+    "conditional",
+];
+
 /// The module evaluator.
 pub struct Evaluator<'m> {
     m: &'m Module,
+    trace: Option<RefCell<Vec<TraceEvent>>>,
+    /// >0 while inside a per-element combiner (reduce/scatter): those
+    /// scalar sub-evaluations are part of the parent op, not ops of
+    /// their own, so tracing is suppressed.
+    suppress: Cell<u32>,
 }
 
 type Env<'c> = HashMap<&'c str, Value>;
 
 impl<'m> Evaluator<'m> {
     pub fn new(m: &'m Module) -> Evaluator<'m> {
-        Evaluator { m }
+        Evaluator { m, trace: None, suppress: Cell::new(0) }
+    }
+
+    /// An evaluator that records a [`TraceEvent`] per executed op;
+    /// collect with [`Evaluator::take_trace`] after `run`.
+    pub fn with_trace(m: &'m Module) -> Evaluator<'m> {
+        Evaluator {
+            m,
+            trace: Some(RefCell::new(Vec::new())),
+            suppress: Cell::new(0),
+        }
+    }
+
+    /// Drain the recorded trace (empty when tracing is off).
+    pub fn take_trace(&self) -> Vec<TraceEvent> {
+        self.trace.as_ref().map(|t| t.take()).unwrap_or_default()
     }
 
     /// Evaluate the entry computation.
@@ -392,10 +460,50 @@ impl<'m> Evaluator<'m> {
             let v = self.eval_instr(ins, args, &env).with_context(|| {
                 format!("evaluating {} = {}(..)", ins.name, ins.op)
             })?;
+            self.record(ins, &env);
             env.insert(ins.name.as_str(), v);
         }
         env.remove(comp.root.as_str())
             .with_context(|| format!("missing root '{}'", comp.root))
+    }
+
+    /// Append a trace event for an executed instruction (no-op unless
+    /// tracing is on and we're outside a combiner sub-evaluation).
+    fn record(&self, ins: &Instr, env: &Env<'_>) {
+        let Some(tr) = &self.trace else { return };
+        if self.suppress.get() > 0 || TRACE_SKIP.contains(&ins.op.as_str()) {
+            return;
+        }
+        let Some(ty) = ins.shape.leaf_ty() else { return };
+        let mut operand_elems = Vec::with_capacity(ins.operands.len());
+        for name in &ins.operands {
+            if let Some(Value::Arr(a)) = env.get(name.as_str()) {
+                operand_elems.push(a.data.len());
+            }
+        }
+        let dot = if ins.op == "dot" {
+            match (
+                ins.operands.first().and_then(|n| env.get(n.as_str())),
+                ins.operands.get(1).and_then(|n| env.get(n.as_str())),
+            ) {
+                (Some(Value::Arr(l)), Some(Value::Arr(r))) => {
+                    dot_dims(ins, &l.dims, &r.dims)
+                        .ok()
+                        .map(|d| (d.b, d.m, d.k, d.n))
+                }
+                _ => None,
+            }
+        } else {
+            None
+        };
+        tr.borrow_mut().push(TraceEvent {
+            name: ins.name.clone(),
+            op: ins.op.clone(),
+            ty,
+            out_elems: ins.shape.leaf_elems(),
+            operand_elems,
+            dot,
+        });
     }
 
     fn operand<'e>(
@@ -424,7 +532,7 @@ impl<'m> Evaluator<'m> {
     fn out_arr(&self, shape: &Shape, data: Vec<f64>) -> Result<Value> {
         let ty = shape.ty()?;
         let mut data = data;
-        finalize(ty, &mut data);
+        canonicalize(ty, &mut data);
         Ok(Value::Arr(ArrayV::new(ty, shape.dims().to_vec(), data)))
     }
 
@@ -882,33 +990,16 @@ impl<'m> Evaluator<'m> {
     fn eval_dot(&self, ins: &Instr, env: &Env<'_>) -> Result<Value> {
         let lhs = self.operand_arr(env, ins, 0)?;
         let rhs = self.operand_arr(env, ins, 1)?;
-        let to_usize =
-            |v: Vec<i64>| v.into_iter().map(|d| d as usize).collect::<Vec<_>>();
-        let lc = to_usize(ins.attr_ints_or_empty("lhs_contracting_dims")?);
-        let rc = to_usize(ins.attr_ints_or_empty("rhs_contracting_dims")?);
-        let lb = to_usize(ins.attr_ints_or_empty("lhs_batch_dims")?);
-        let rb = to_usize(ins.attr_ints_or_empty("rhs_batch_dims")?);
-        let lfree: Vec<usize> = (0..lhs.dims.len())
-            .filter(|d| !lc.contains(d) && !lb.contains(d))
-            .collect();
-        let rfree: Vec<usize> = (0..rhs.dims.len())
-            .filter(|d| !rc.contains(d) && !rb.contains(d))
-            .collect();
-        let prod = |dims: &[usize], ds: &[usize]| -> usize {
-            ds.iter().map(|&d| dims[d]).product::<usize>().max(1)
-        };
-        let bsz = prod(&lhs.dims, &lb);
-        let m = prod(&lhs.dims, &lfree);
-        let k = prod(&lhs.dims, &lc);
-        let n = prod(&rhs.dims, &rfree);
+        let dd = dot_dims(ins, &lhs.dims, &rhs.dims)?;
+        let (bsz, m, k, n) = (dd.b, dd.m, dd.k, dd.n);
 
-        let mut aperm = lb.clone();
-        aperm.extend(&lfree);
-        aperm.extend(&lc);
+        let mut aperm = dd.lb.clone();
+        aperm.extend(&dd.lfree);
+        aperm.extend(&dd.lc);
         let a = transpose(lhs, &aperm);
-        let mut bperm = rb.clone();
-        bperm.extend(&rc);
-        bperm.extend(&rfree);
+        let mut bperm = dd.rb.clone();
+        bperm.extend(&dd.rc);
+        bperm.extend(&dd.rfree);
         let b = transpose(rhs, &bperm);
 
         let mut out = vec![0.0; bsz * m * n];
@@ -986,7 +1077,7 @@ impl<'m> Evaluator<'m> {
                                 vec![f.data[i * red_n + j]],
                             )));
                         }
-                        let r = self.eval_computation(comp, &argv)?;
+                        let r = self.eval_suppressed(comp, &argv)?;
                         match r {
                             Value::Arr(a) => acc[0] = a.scalar(),
                             Value::Tuple(vs) => {
@@ -1010,7 +1101,7 @@ impl<'m> Evaluator<'m> {
         let mut results = Vec::with_capacity(n);
         for (s, mut o) in shapes.into_iter().zip(outs) {
             let ty = s.ty()?;
-            finalize(ty, &mut o);
+            canonicalize(ty, &mut o);
             results.push(Value::Arr(ArrayV::new(ty, out_dims.clone(), o)));
         }
         if results.len() == 1 && !matches!(ins.shape, Shape::Tuple(_)) {
@@ -1018,6 +1109,19 @@ impl<'m> Evaluator<'m> {
         } else {
             Ok(Value::Tuple(results))
         }
+    }
+
+    /// Evaluate a combiner sub-computation with tracing suppressed
+    /// (the per-element calls belong to the enclosing reduce/scatter).
+    fn eval_suppressed(
+        &self,
+        comp: &Computation,
+        args: &[Value],
+    ) -> Result<Value> {
+        self.suppress.set(self.suppress.get() + 1);
+        let r = self.eval_computation(comp, args);
+        self.suppress.set(self.suppress.get() - 1);
+        r
     }
 
     /// Recognise single-instruction scalar reducers (add/mul/max/min).
@@ -1182,7 +1286,7 @@ impl<'m> Evaluator<'m> {
                     Value::Arr(ArrayV::new(operand.ty, vec![], vec![cur])),
                     Value::Arr(ArrayV::new(updates.ty, vec![], vec![upd])),
                 ];
-                let r = self.eval_computation(comp, &argv)?;
+                let r = self.eval_suppressed(comp, &argv)?;
                 let rv = match &r {
                     Value::Arr(a) => a.scalar(),
                     Value::Tuple(vs) => vs[0].arr()?.scalar(),
@@ -1196,6 +1300,58 @@ impl<'m> Evaluator<'m> {
         }
         self.out_arr(&ins.shape, out)
     }
+}
+
+/// A `dot`'s operand dims classified into batch / free / contracting
+/// groups plus the flattened GEMM geometry (b × [m×k · k×n]).
+#[derive(Debug, Clone)]
+pub struct DotDims {
+    pub lb: Vec<usize>,
+    pub lc: Vec<usize>,
+    pub lfree: Vec<usize>,
+    pub rb: Vec<usize>,
+    pub rc: Vec<usize>,
+    pub rfree: Vec<usize>,
+    pub b: usize,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+/// Classify a dot instruction's dimension attributes against concrete
+/// operand dims (shared by the evaluator and the execution trace).
+pub fn dot_dims(
+    ins: &Instr,
+    lhs_dims: &[usize],
+    rhs_dims: &[usize],
+) -> Result<DotDims> {
+    let to_usize =
+        |v: Vec<i64>| v.into_iter().map(|d| d as usize).collect::<Vec<_>>();
+    let lc = to_usize(ins.attr_ints_or_empty("lhs_contracting_dims")?);
+    let rc = to_usize(ins.attr_ints_or_empty("rhs_contracting_dims")?);
+    let lb = to_usize(ins.attr_ints_or_empty("lhs_batch_dims")?);
+    let rb = to_usize(ins.attr_ints_or_empty("rhs_batch_dims")?);
+    let lfree: Vec<usize> = (0..lhs_dims.len())
+        .filter(|d| !lc.contains(d) && !lb.contains(d))
+        .collect();
+    let rfree: Vec<usize> = (0..rhs_dims.len())
+        .filter(|d| !rc.contains(d) && !rb.contains(d))
+        .collect();
+    let prod = |dims: &[usize], ds: &[usize]| -> usize {
+        ds.iter().map(|&d| dims[d]).product::<usize>().max(1)
+    };
+    Ok(DotDims {
+        b: prod(lhs_dims, &lb),
+        m: prod(lhs_dims, &lfree),
+        k: prod(lhs_dims, &lc),
+        n: prod(rhs_dims, &rfree),
+        lb,
+        lc,
+        lfree,
+        rb,
+        rc,
+        rfree,
+    })
 }
 
 /// Materialise a transposed copy: `out.dims[i] = in.dims[perm[i]]`.
@@ -1451,6 +1607,36 @@ mod tests {
         let vs = out.tuple().unwrap();
         assert_eq!(vs[0].arr().unwrap().data, vec![9.0]);
         assert_eq!(vs[1].arr().unwrap().data, vec![1.0]);
+    }
+
+    #[test]
+    fn trace_sees_through_calls_and_collapses_combiners() {
+        // The dot lives in a called computation; the reduce uses a
+        // non-fast combiner (subtract). The trace must contain the dot
+        // (with classified m/k/n) and exactly ONE reduce event — the
+        // per-element combiner calls are part of the reduce, not ops.
+        let t = "HloModule m\n\
+            mm {\n  a = f64[4,8]{1,0} parameter(0)\n  b = f64[8,2]{1,0} parameter(1)\n  ROOT d = f64[4,2]{1,0} dot(a, b), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n}\n\
+            sub {\n  x = f64[] parameter(0)\n  y = f64[] parameter(1)\n  ROOT s = f64[] subtract(x, y)\n}\n\
+            ENTRY e {\n  a = f64[4,8]{1,0} parameter(0)\n  b = f64[8,2]{1,0} parameter(1)\n  c = f64[4,2]{1,0} call(a, b), to_apply=mm\n  z = f64[] constant(0)\n  ROOT r = f64[] reduce(c, z), dimensions={0,1}, to_apply=sub\n}\n";
+        let m = parse_module(t).unwrap();
+        let ev = Evaluator::with_trace(&m);
+        let a = ArrayV::new(DType::F64, vec![4, 8], vec![1.0; 32]);
+        let b = ArrayV::new(DType::F64, vec![8, 2], vec![1.0; 16]);
+        ev.run(&[Value::Arr(a), Value::Arr(b)]).unwrap();
+        let trace = ev.take_trace();
+        let dots: Vec<_> = trace.iter().filter(|e| e.op == "dot").collect();
+        assert_eq!(dots.len(), 1);
+        assert_eq!(dots[0].dot, Some((1, 4, 8, 2)));
+        assert_eq!(dots[0].operand_elems, vec![32, 16]);
+        let reduces: Vec<_> =
+            trace.iter().filter(|e| e.op == "reduce").collect();
+        assert_eq!(reduces.len(), 1, "{trace:?}");
+        // Combiner's `subtract` must NOT leak into the trace.
+        assert!(trace.iter().all(|e| e.op != "subtract"), "{trace:?}");
+        // Untraced evaluators return an empty trace.
+        let ev2 = Evaluator::new(&m);
+        assert!(ev2.take_trace().is_empty());
     }
 
     #[test]

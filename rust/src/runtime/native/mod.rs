@@ -44,26 +44,37 @@ impl Backend for NativeBackend {
     }
 
     fn compile(&self, name: &str, hlo_text: &str) -> Result<Box<dyn Executable>> {
-        let module = parser::parse_module(hlo_text)
-            .with_context(|| format!("[native] parsing HLO for '{name}'"))?;
-        // Fail at load time (not mid-execution) on unsupported opcodes
-        // so callers can cleanly skip artifacts this backend can't run.
-        let supported = eval::supported_ops();
-        for comp in module.computations.values() {
-            for ins in &comp.instrs {
-                if !supported.contains(&ins.op.as_str()) {
-                    bail!(
-                        "[native] artifact '{name}': unsupported HLO op \
-                         '{}' (instruction {} in {})",
-                        ins.op,
-                        ins.name,
-                        comp.name
-                    );
-                }
-            }
-        }
+        let module = parse_checked("native", name, hlo_text)?;
         Ok(Box::new(NativeExecutable { name: name.to_string(), module }))
     }
+}
+
+/// Parse HLO text and fail at load time (not mid-execution) on opcodes
+/// the evaluator doesn't implement, so callers can cleanly skip
+/// artifacts a backend can't run. Shared by every evaluator-based
+/// backend (`NativeBackend`, `SimBackend`).
+pub(crate) fn parse_checked(
+    backend: &str,
+    name: &str,
+    hlo_text: &str,
+) -> Result<Module> {
+    let module = parser::parse_module(hlo_text)
+        .with_context(|| format!("[{backend}] parsing HLO for '{name}'"))?;
+    let supported = eval::supported_ops();
+    for comp in module.computations.values() {
+        for ins in &comp.instrs {
+            if !supported.contains(&ins.op.as_str()) {
+                bail!(
+                    "[{backend}] artifact '{name}': unsupported HLO op \
+                     '{}' (instruction {} in {})",
+                    ins.op,
+                    ins.name,
+                    comp.name
+                );
+            }
+        }
+    }
+    Ok(module)
 }
 
 /// A parsed module plus its artifact name (for error context).
@@ -88,7 +99,7 @@ impl Executable for NativeExecutable {
     }
 }
 
-fn tensor_to_value(t: &Tensor) -> Value {
+pub(crate) fn tensor_to_value(t: &Tensor) -> Value {
     let dims = t.shape().to_vec();
     let (ty, data): (DType, Vec<f64>) = match t {
         Tensor::F32(v, _) => (DType::F32, v.iter().map(|&x| x as f64).collect()),
@@ -99,7 +110,7 @@ fn tensor_to_value(t: &Tensor) -> Value {
     Value::Arr(ArrayV::new(ty, dims, data))
 }
 
-fn value_to_tensor(a: &ArrayV) -> Result<Tensor> {
+pub(crate) fn value_to_tensor(a: &ArrayV) -> Result<Tensor> {
     let dims = a.dims.clone();
     Ok(match a.ty {
         DType::F32 | DType::F16 | DType::BF16 => {

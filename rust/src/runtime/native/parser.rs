@@ -90,6 +90,16 @@ impl DType {
     pub fn is_signed(self) -> bool {
         matches!(self, DType::S8 | DType::S16 | DType::S32 | DType::S64)
     }
+
+    /// Storage size of one element [bytes].
+    pub fn byte_size(self) -> usize {
+        match self {
+            DType::Pred | DType::S8 | DType::U8 => 1,
+            DType::S16 | DType::U16 | DType::F16 | DType::BF16 => 2,
+            DType::S32 | DType::U32 | DType::F32 => 4,
+            DType::S64 | DType::U64 | DType::F64 => 8,
+        }
+    }
 }
 
 /// An array or tuple shape.
@@ -104,6 +114,39 @@ impl Shape {
         match self {
             Shape::Arr { dims, .. } => dims.iter().product::<usize>().max(1),
             Shape::Tuple(_) => 0,
+        }
+    }
+
+    /// Total elements across all array leaves (tuples flattened).
+    pub fn leaf_elems(&self) -> usize {
+        match self {
+            Shape::Arr { .. } => self.elems(),
+            Shape::Tuple(v) => v.iter().map(Shape::leaf_elems).sum(),
+        }
+    }
+
+    /// Element type of the first array leaf (None for empty tuples).
+    pub fn leaf_ty(&self) -> Option<DType> {
+        match self {
+            Shape::Arr { ty, .. } => Some(*ty),
+            Shape::Tuple(v) => v.iter().find_map(Shape::leaf_ty),
+        }
+    }
+
+    /// HLO-text rendering (`f64[2,3]`, `(s32[], f64[4])`). Layouts are
+    /// not stored, so none are printed; the parser ignores them anyway.
+    pub fn to_text(&self) -> String {
+        match self {
+            Shape::Arr { ty, dims } => {
+                let ds: Vec<String> =
+                    dims.iter().map(|d| d.to_string()).collect();
+                format!("{}[{}]", ty.name(), ds.join(","))
+            }
+            Shape::Tuple(v) => {
+                let parts: Vec<String> =
+                    v.iter().map(Shape::to_text).collect();
+                format!("({})", parts.join(", "))
+            }
         }
     }
 
@@ -123,7 +166,7 @@ impl Shape {
 }
 
 /// One HLO instruction.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Instr {
     pub name: String,
     pub shape: Shape,
@@ -136,6 +179,24 @@ pub struct Instr {
 }
 
 impl Instr {
+    /// Render back to one line of HLO text (inverse of `parse_instr`).
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        if self.root {
+            s.push_str("ROOT ");
+        }
+        s.push_str(&format!("{} = {} {}(", self.name, self.shape.to_text(), self.op));
+        match &self.literal {
+            Some(lit) => s.push_str(lit),
+            None => s.push_str(&self.operands.join(", ")),
+        }
+        s.push(')');
+        for (k, v) in &self.attrs {
+            s.push_str(&format!(", {k}={v}"));
+        }
+        s
+    }
+
     pub fn attr(&self, key: &str) -> Result<&str> {
         self.attrs
             .get(key)
@@ -159,7 +220,7 @@ impl Instr {
 
 /// A named computation (straight-line; instructions are in dependency
 /// order in HLO text).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Computation {
     pub name: String,
     pub instrs: Vec<Instr>,
@@ -167,7 +228,7 @@ pub struct Computation {
 }
 
 /// A parsed HLO module.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Module {
     pub name: String,
     pub entry: String,
@@ -175,6 +236,25 @@ pub struct Module {
 }
 
 impl Module {
+    /// Render the whole module back to HLO text. `parse_module` of the
+    /// result reproduces the module structurally (layouts and operand
+    /// type annotations are never stored, so none are emitted).
+    pub fn to_text(&self) -> String {
+        let mut out = format!("HloModule {}\n", self.name);
+        for comp in self.computations.values() {
+            out.push('\n');
+            if comp.name == self.entry {
+                out.push_str("ENTRY ");
+            }
+            out.push_str(&format!("{} {{\n", comp.name));
+            for ins in &comp.instrs {
+                out.push_str(&format!("  {}\n", ins.to_text()));
+            }
+            out.push_str("}\n");
+        }
+        out
+    }
+
     pub fn entry_computation(&self) -> &Computation {
         &self.computations[&self.entry]
     }
@@ -547,5 +627,48 @@ mod tests {
         assert_eq!(parse_int_list("{1,2}").unwrap(), vec![1, 2]);
         assert_eq!(parse_int_list("{}").unwrap(), Vec::<i64>::new());
         assert_eq!(parse_int_list("7").unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn parses_negative_and_scientific_literals() {
+        assert_eq!(parse_literal("-3").unwrap(), vec![-3.0]);
+        assert_eq!(parse_literal("1e-3").unwrap(), vec![1e-3]);
+        assert_eq!(parse_literal("-2.5E+7").unwrap(), vec![-2.5e7]);
+        assert_eq!(
+            parse_literal("{-1e10, 2E-3, 6.02e23}").unwrap(),
+            vec![-1e10, 2e-3, 6.02e23]
+        );
+        assert_eq!(parse_literal("{ -0.0, 1.25e0 }").unwrap(), vec![-0.0, 1.25]);
+        assert!(parse_literal("{1e}").is_err());
+    }
+
+    #[test]
+    fn parses_multi_digit_instruction_ids() {
+        let i = parse_instr(
+            "%multiply.12345 = f64[8]{0} multiply(%Arg_0.9999, %broadcast.10001)",
+        )
+        .unwrap();
+        assert_eq!(i.name, "multiply.12345");
+        assert_eq!(i.operands, vec!["Arg_0.9999", "broadcast.10001"]);
+    }
+
+    #[test]
+    fn strips_inline_comments_anywhere() {
+        let text = "HloModule m\nENTRY e {\n  a = f64[2]{0} parameter(0)\n  \
+                    ROOT r = f64[2]{0} add(a, /*lhs again*/ a)\n}\n";
+        let m = parse_module(text).unwrap();
+        let r = &m.entry_computation().instrs[1];
+        assert_eq!(r.operands, vec!["a", "a"]);
+    }
+
+    #[test]
+    fn pretty_print_roundtrips_fixed_module() {
+        let text = "HloModule jit_fn\n\
+            region_0.1 {\n  Arg_0.2 = f64[] parameter(0)\n  ROOT add.3 = f64[] add(Arg_0.2, Arg_0.2)\n}\n\
+            ENTRY main.4 {\n  Arg_0.1 = f64[3,4]{1,0} parameter(0)\n  c.2 = f64[] constant(-1.5e-3)\n  b.3 = f64[3,4]{1,0} broadcast(c.2), dimensions={}\n  m.4 = f64[3,4]{1,0} multiply(Arg_0.1, b.3)\n  ROOT t.5 = (f64[3,4]{1,0}) tuple(m.4)\n}\n";
+        let m = parse_module(text).unwrap();
+        let printed = m.to_text();
+        let m2 = parse_module(&printed).unwrap();
+        assert_eq!(m, m2, "print->parse changed the module:\n{printed}");
     }
 }

@@ -1,0 +1,251 @@
+//! `SimBackend` — execute HLO artifacts *on the simulated Manticore*.
+//!
+//! Numerics are delegated to the same evaluator `NativeBackend` uses
+//! (outputs are bit-identical), but the evaluator runs with an
+//! execution trace: every executed instruction — including the ones
+//! inside `call`/`while`/`conditional` bodies, once per iteration —
+//! becomes a [`crate::coordinator::OpTask`], and the coordinator's
+//! op-scheduling layer prices the stream on the system model:
+//!
+//! * `dot` ops go through the GEMM tiling plan + calibrated cluster
+//!   utilization (the calibration is measured on the cycle-level
+//!   `ClusterSim` — the paper's methodology for Fig. 9);
+//! * elementwise/reduce ops ride the roofline, cluster-local when
+//!   their working set fits a TCDM;
+//! * data movement is priced at effective memory bandwidth.
+//!
+//! The resulting [`OpStreamReport`] (per-op cycles, energy, FPU
+//! utilization) is retained on the executable and surfaced through
+//! `Runtime::last_report` — `manticore run/train --backend sim` print
+//! it as the per-op table. Any HLO artifact the runtime can load is
+//! thereby a simulator workload for free.
+
+use super::backend::{Backend, Executable};
+use super::native::eval::{Evaluator, TraceEvent, Value};
+use super::native::{parse_checked, tensor_to_value, value_to_tensor};
+use super::Tensor;
+use crate::cluster::ClusterConfig;
+use crate::config::Config;
+use crate::coordinator::{Coordinator, OpStreamReport, OpTask};
+use crate::system::SystemConfig;
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+/// The simulation backend: evaluator numerics + op-level scheduling on
+/// the Manticore system model.
+pub struct SimBackend {
+    sys: SystemConfig,
+    cluster: ClusterConfig,
+    vdd: f64,
+}
+
+impl SimBackend {
+    /// Paper-default system (4096 cores) at the high-performance point.
+    pub fn new() -> SimBackend {
+        SimBackend::with_config(
+            SystemConfig::default(),
+            ClusterConfig::default(),
+            0.9,
+        )
+    }
+
+    pub fn with_config(
+        sys: SystemConfig,
+        cluster: ClusterConfig,
+        vdd: f64,
+    ) -> SimBackend {
+        SimBackend { sys, cluster, vdd }
+    }
+
+    /// Build from the CLI config bundle (honours `--preset`/`--config`).
+    pub fn from_config(cfg: &Config) -> SimBackend {
+        SimBackend::with_config(cfg.system, cfg.cluster, cfg.vdd)
+    }
+}
+
+impl Default for SimBackend {
+    fn default() -> Self {
+        SimBackend::new()
+    }
+}
+
+impl Backend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn platform(&self) -> String {
+        format!(
+            "sim (op-scheduled Manticore model: {} cores @ {:.2} V)",
+            self.sys.total_cores(),
+            self.vdd
+        )
+    }
+
+    fn compile(&self, name: &str, hlo_text: &str) -> Result<Box<dyn Executable>> {
+        let module = parse_checked("sim", name, hlo_text)?;
+        Ok(Box::new(SimExecutable {
+            name: name.to_string(),
+            module,
+            co: Coordinator::new(self.sys, self.vdd)
+                .with_cluster(self.cluster),
+            report: RefCell::new(None),
+        }))
+    }
+}
+
+/// A parsed module plus the coordinator that prices its op stream.
+pub struct SimExecutable {
+    name: String,
+    module: super::native::parser::Module,
+    co: Coordinator,
+    report: RefCell<Option<OpStreamReport>>,
+}
+
+impl Executable for SimExecutable {
+    fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let args: Vec<Value> = inputs.iter().map(tensor_to_value).collect();
+        let ev = Evaluator::with_trace(&self.module);
+        let out = ev
+            .run(&args)
+            .with_context(|| format!("[sim] executing '{}'", self.name))?;
+        let tasks = tasks_from_trace(&ev.take_trace());
+        *self.report.borrow_mut() =
+            Some(self.co.simulate_stream(&self.name, &tasks));
+        match out {
+            Value::Tuple(vs) => vs
+                .iter()
+                .map(|v| value_to_tensor(v.arr()?))
+                .collect::<Result<Vec<_>>>(),
+            Value::Arr(a) => Ok(vec![value_to_tensor(&a)?]),
+        }
+    }
+
+    fn last_report(&self) -> Option<OpStreamReport> {
+        self.report.borrow().clone()
+    }
+}
+
+/// Fold an execution trace into an `OpTask` stream: repeated
+/// executions of the same instruction (loop bodies) aggregate into one
+/// task with a count — HLO shapes are static per instruction, so the
+/// geometry is identical across iterations. Instruction names are only
+/// unique per *computation*, so the key includes the full op geometry:
+/// same-named instructions from different computations merge only when
+/// their pricing would be identical anyway.
+pub fn tasks_from_trace(trace: &[TraceEvent]) -> Vec<OpTask> {
+    type Key<'a> = (
+        &'a str,
+        &'a str,
+        usize,
+        usize,
+        &'a [usize],
+        Option<(usize, usize, usize, usize)>,
+    );
+    let mut tasks: Vec<OpTask> = Vec::new();
+    let mut index: HashMap<Key<'_>, usize> = HashMap::new();
+    for ev in trace {
+        let key: Key<'_> = (
+            ev.name.as_str(),
+            ev.op.as_str(),
+            ev.ty.byte_size(),
+            ev.out_elems,
+            ev.operand_elems.as_slice(),
+            ev.dot,
+        );
+        if let Some(&i) = index.get(&key) {
+            tasks[i].count += 1;
+            continue;
+        }
+        let Some(task) = task_for_event(ev) else { continue };
+        index.insert(key, tasks.len());
+        tasks.push(task);
+    }
+    tasks
+}
+
+/// Classify one executed instruction as an `OpTask`.
+fn task_for_event(ev: &TraceEvent) -> Option<OpTask> {
+    let eb = ev.ty.byte_size();
+    let in_elems: usize = ev.operand_elems.iter().sum();
+    Some(match ev.op.as_str() {
+        "dot" => {
+            let (b, m, k, n) = ev.dot?;
+            OpTask::dot(&ev.name, b, m, k, n, eb)
+        }
+        "reduce" => OpTask::reduce(&ev.name, in_elems, ev.out_elems, eb),
+        // Pure data-movement / indexing ops: the tile traffic of the
+        // Pallas interpret-mode lowering lands here.
+        "broadcast" | "reshape" | "transpose" | "slice" | "concatenate"
+        | "pad" | "iota" | "dynamic-slice" | "dynamic-update-slice"
+        | "gather" | "scatter" | "copy" | "bitcast-convert" => {
+            OpTask::data(&ev.name, in_elems + ev.out_elems, eb)
+        }
+        // Everything else the evaluator supports is elementwise
+        // (unary/binary/compare/select/shift/convert...).
+        _ => OpTask::elementwise(
+            &ev.name,
+            ev.operand_elems.len().max(1),
+            ev.out_elems,
+            in_elems,
+            eb,
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::NativeBackend;
+
+    const MATMUL_2X2: &str = "HloModule jit_fn\n\
+        ENTRY main.5 {\n\
+        \x20 Arg_0.1 = f64[2,2]{1,0} parameter(0)\n\
+        \x20 Arg_1.2 = f64[2,2]{1,0} parameter(1)\n\
+        \x20 dot.3 = f64[2,2]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n\
+        \x20 ROOT tuple.4 = (f64[2,2]{1,0}) tuple(dot.3)\n\
+        }\n";
+
+    #[test]
+    fn sim_matches_native_numerics_and_reports_schedule() {
+        let a = Tensor::F64(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        let b = Tensor::F64(vec![5.0, 6.0, 7.0, 8.0], vec![2, 2]);
+        let native = NativeBackend::new()
+            .compile("mm", MATMUL_2X2)
+            .unwrap()
+            .execute(&[a.clone(), b.clone()])
+            .unwrap();
+        let sim_exe = SimBackend::new().compile("mm", MATMUL_2X2).unwrap();
+        assert!(sim_exe.last_report().is_none(), "no report before execute");
+        let sim = sim_exe.execute(&[a, b]).unwrap();
+        assert_eq!(native[0], sim[0]);
+        let rep = sim_exe.last_report().expect("report after execute");
+        let dot = rep.op("dot").expect("dot op in report");
+        assert_eq!(dot.kind, "dot");
+        assert!(dot.cycles > 0.0 && rep.total_energy_j > 0.0);
+    }
+
+    #[test]
+    fn loop_iterations_aggregate_into_counts() {
+        // A 3-iteration while whose body multiplies: the multiply op
+        // must appear once with count 3.
+        let t = "HloModule m\n\
+            cond {\n  s = (s32[], f64[4]) parameter(0)\n  i = s32[] get-tuple-element(s), index=0\n  k = s32[] constant(3)\n  ROOT c = pred[] compare(i, k), direction=LT\n}\n\
+            body {\n  s = (s32[], f64[4]) parameter(0)\n  i = s32[] get-tuple-element(s), index=0\n  one = s32[] constant(1)\n  j = s32[] add(i, one)\n  x = f64[4]{0} get-tuple-element(s), index=1\n  y = f64[4]{0} multiply(x, x)\n  ROOT t = (s32[], f64[4]) tuple(j, y)\n}\n\
+            ENTRY e {\n  z = s32[] constant(0)\n  v = f64[4]{0} parameter(0)\n  t0 = (s32[], f64[4]) tuple(z, v)\n  w = (s32[], f64[4]) while(t0), condition=cond, body=body\n  ROOT r = f64[4]{0} get-tuple-element(w), index=1\n}\n";
+        let exe = SimBackend::new().compile("loop", t).unwrap();
+        exe.execute(&[Tensor::F64(vec![1.0, 2.0, 1.0, 1.0], vec![4])])
+            .unwrap();
+        let rep = exe.last_report().unwrap();
+        let mul = rep
+            .ops
+            .iter()
+            .find(|o| o.name.starts_with('y'))
+            .expect("multiply op");
+        assert_eq!(mul.count, 3);
+        // The loop-counter compare ran 4 times (3 true + 1 false).
+        let cmp = rep.op("c").expect("compare op");
+        assert_eq!(cmp.count, 4);
+    }
+}

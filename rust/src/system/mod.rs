@@ -63,6 +63,12 @@ impl SystemConfig {
         self.tree.clusters_per_chiplet() * self.cores_per_cluster
     }
 
+    /// Core clock at a supply voltage [Hz] (DVFS model shorthand —
+    /// the op-scheduling layer converts times to cycles with this).
+    pub fn freq(&self, vdd: f64) -> f64 {
+        self.dvfs.freq(vdd)
+    }
+
     /// Peak DP flop/s at a supply voltage.
     pub fn peak_dp(&self, vdd: f64) -> f64 {
         self.dvfs.peak_flops(vdd, self.total_cores())

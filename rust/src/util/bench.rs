@@ -295,6 +295,66 @@ impl Report {
     }
 }
 
+/// Compare two bench JSON reports (as produced by [`Report::finish`]):
+/// one row per benchmark present in both, flagging mean-time
+/// regressions above `threshold` (0.10 = 10 %). Returns the table and
+/// the regression count — callers treat regressions as warnings, not
+/// failures (smoke-cap timings are noisy).
+pub fn diff_reports(
+    old: &Value,
+    new: &Value,
+    threshold: f64,
+) -> (Table, usize) {
+    let samples = |v: &Value| -> BTreeMap<String, f64> {
+        let mut out = BTreeMap::new();
+        if let Some(arr) = v.get("samples").and_then(Value::as_arr) {
+            for s in arr {
+                if let (Some(name), Some(mean)) = (
+                    s.get("name").and_then(Value::as_str),
+                    s.get("mean_ns").and_then(Value::as_f64),
+                ) {
+                    out.insert(name.to_string(), mean);
+                }
+            }
+        }
+        out
+    };
+    let old_s = samples(old);
+    let new_s = samples(new);
+    let mut t = Table::new(
+        &format!(
+            "bench diff vs previous run (warn above {:.0} % regression)",
+            threshold * 100.0
+        ),
+        &["bench", "prev mean", "mean", "delta", "status"],
+    );
+    let mut regressions = 0;
+    for (name, new_mean) in &new_s {
+        let Some(old_mean) = old_s.get(name) else { continue };
+        let delta = if *old_mean > 0.0 {
+            new_mean / old_mean - 1.0
+        } else {
+            0.0
+        };
+        let status = if delta > threshold {
+            regressions += 1;
+            "REGRESSION"
+        } else if delta < -threshold {
+            "improved"
+        } else {
+            "ok"
+        };
+        t.row(vec![
+            name.clone(),
+            fmt_ns(*old_mean),
+            fmt_ns(*new_mean),
+            format!("{:+.1} %", delta * 100.0),
+            status.to_string(),
+        ]);
+    }
+    (t, regressions)
+}
+
 /// Format helpers shared by the harnesses.
 pub fn fmt_si(v: f64, unit: &str) -> String {
     let (scaled, prefix) = if v.abs() >= 1e12 {
@@ -366,6 +426,34 @@ mod tests {
         let s0 = &v.get("samples").unwrap().as_arr().unwrap()[0];
         assert_eq!(s0.get("name").unwrap().as_str(), Some("noop"));
         assert!(s0.get("mean_ns").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn diff_reports_flags_regressions_only_above_threshold() {
+        let mk = |means: &[(&str, f64)]| -> Value {
+            let mut rep = Report::new(BenchOpts::default());
+            for (name, mean) in means {
+                rep.samples.push(Sample {
+                    name: name.to_string(),
+                    iters: 1,
+                    mean_ns: *mean,
+                    median_ns: *mean,
+                    stddev_ns: 0.0,
+                    min_ns: *mean,
+                });
+            }
+            crate::util::json::parse(&rep.to_json()).unwrap()
+        };
+        let old = mk(&[("a", 100.0), ("b", 100.0), ("gone", 5.0)]);
+        let new = mk(&[("a", 125.0), ("b", 104.0), ("new", 7.0)]);
+        let (t, regressions) = diff_reports(&old, &new, 0.10);
+        assert_eq!(regressions, 1);
+        // Only benches present in both runs are compared.
+        assert_eq!(t.rows.len(), 2);
+        let a = t.rows.iter().find(|r| r[0] == "a").unwrap();
+        assert_eq!(a[4], "REGRESSION");
+        let b = t.rows.iter().find(|r| r[0] == "b").unwrap();
+        assert_eq!(b[4], "ok");
     }
 
     #[test]

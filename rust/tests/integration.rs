@@ -8,9 +8,11 @@
 //! that test skips too.
 
 use manticore::asm::kernels::{gemm_ssr_frep, matvec48_fig6};
+use manticore::coordinator::Coordinator;
 use manticore::mem::{ICache, Tcdm};
-use manticore::runtime::{Runtime, Tensor};
+use manticore::runtime::{backend_by_name, Runtime, Tensor};
 use manticore::snitch::{run_single, CoreConfig, SnitchCore};
+use manticore::system::SystemConfig;
 use manticore::util::json;
 use manticore::util::rng::Rng;
 
@@ -296,6 +298,102 @@ fn runtime_lists_all_manifest_artifacts() {
             "{name} listed in manifest but {name}.hlo.txt missing"
         );
     }
+}
+
+/// Tentpole acceptance: `--backend sim` reproduces NativeBackend
+/// numerics on the matmul artifact within 1e-9, attaches a per-op
+/// cycle/energy/FPU-utilization schedule, and the dot's cycle estimate
+/// agrees with the direct coordinator GEMM schedule within 5 % — the
+/// artifact path and the pre-baked scheduling path are one machine.
+#[test]
+fn sim_backend_matches_native_and_coordinator_schedule() {
+    let Some(dir) = artifacts_dir() else { return };
+    const N: usize = 64;
+    let mut rng = Rng::new(17);
+    let inputs = [
+        Tensor::F64(rng.normal_vec(N * N), vec![N, N]),
+        Tensor::F64(rng.normal_vec(N * N), vec![N, N]),
+    ];
+
+    let mut native =
+        Runtime::with_backend(dir, backend_by_name("native").unwrap()).unwrap();
+    let want = native.execute("matmul_f64_64", &inputs).unwrap();
+    let mut sim =
+        Runtime::with_backend(dir, backend_by_name("sim").unwrap()).unwrap();
+    assert_eq!(sim.backend_name(), "sim");
+    let got = sim.execute("matmul_f64_64", &inputs).unwrap();
+    assert_eq!(want.len(), got.len());
+    for (w, g) in want[0]
+        .as_f64()
+        .unwrap()
+        .iter()
+        .zip(got[0].as_f64().unwrap())
+    {
+        assert!((w - g).abs() <= 1e-9 * (1.0 + w.abs()), "{w} vs {g}");
+    }
+
+    // The native backend keeps no schedule; the sim backend does.
+    assert!(native.last_report("matmul_f64_64").is_none());
+    let rep = sim.last_report("matmul_f64_64").expect("per-op report");
+    assert!(rep.total_cycles > 0.0 && rep.total_energy_j > 0.0);
+    assert!(rep.fpu_util > 0.0 && rep.fpu_util <= 1.0);
+
+    let dot = rep
+        .ops
+        .iter()
+        .find(|o| o.kind == "dot")
+        .expect("dot op in sim schedule");
+    assert!(dot.ssr_frep, "dot must lower to an SSR+FREP kernel");
+    assert!(dot.fpu_util > 0.0 && dot.energy_j > 0.0);
+
+    // Same GEMM through the pre-baked coordinator path.
+    let co = Coordinator::new(SystemConfig::default(), 0.9);
+    let (time_s, _) = co.schedule_gemm(N, N, N);
+    let want_cycles = time_s * co.sys.freq(co.vdd);
+    let ratio = dot.cycles / want_cycles;
+    assert!(
+        (ratio - 1.0).abs() < 0.05,
+        "sim dot cycles {} vs coordinator schedule {} (ratio {ratio})",
+        dot.cycles,
+        want_cycles
+    );
+}
+
+/// The whole CNN training step runs as a simulator workload: one
+/// `cnn_train_step` execution on `--backend sim` yields a schedule
+/// whose loop-body ops carry per-iteration counts, with the conv-as-dot
+/// contractions lowering to SSR+FREP kernels.
+#[test]
+fn sim_backend_schedules_cnn_train_step() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt =
+        Runtime::with_backend(dir, backend_by_name("sim").unwrap()).unwrap();
+    if !load_or_skip(&mut rt, "cnn_init") || !load_or_skip(&mut rt, "cnn_train_step")
+    {
+        return;
+    }
+    let params = rt.execute("cnn_init", &[Tensor::scalar_u32(1)]).unwrap();
+    let mut gen = manticore::examples_support::DataGen::new(2);
+    let (x, y) = gen.batch(32);
+    let mut io = params;
+    io.push(x);
+    io.push(y);
+    io.push(Tensor::scalar_f32(0.05));
+    let out = rt.execute("cnn_train_step", &io).unwrap();
+    assert_eq!(out.len(), 9, "8 params + loss");
+
+    let rep = rt.last_report("cnn_train_step").expect("per-op report");
+    assert!(rep.total_cycles > 0.0 && rep.total_energy_j > 0.0);
+    let dots: Vec<_> =
+        rep.ops.iter().filter(|o| o.kind == "dot").collect();
+    assert!(!dots.is_empty(), "training step contains dot contractions");
+    assert!(dots.iter().all(|d| d.ssr_frep));
+    // Pallas grid loops execute their body once per step: at least one
+    // op must have aggregated a count > 1.
+    assert!(
+        rep.ops.iter().any(|o| o.count > 1),
+        "expected loop-body ops with per-iteration counts"
+    );
 }
 
 /// cnn_predict end-to-end through the backend: fresh params classify a

@@ -254,3 +254,93 @@ fn offload_manager_conserves_jobs() {
         },
     );
 }
+
+// ---------------------------------------------------------------------
+// HLO text: parse -> pretty-print -> parse round-trips structurally for
+// arbitrary modules (random shapes, multi-digit instruction ids,
+// negative/scientific constant literals, attributes).
+
+fn arb_hlo_module(g: &mut Gen) -> String {
+    fn arb_shape(g: &mut Gen) -> String {
+        let ty = *g.pick(&["f32", "f64", "s32", "u32", "pred"]);
+        let nd = g.usize(0, 2);
+        let dims: Vec<String> =
+            (0..nd).map(|_| g.usize(1, 8).to_string()).collect();
+        format!("{ty}[{}]", dims.join(","))
+    }
+    let mut id = g.usize(1, 9_999); // multi-digit instruction ids
+    let mut next_id = move |g: &mut Gen| {
+        id += g.usize(1, 117);
+        id
+    };
+    let mut text = format!("HloModule m{}\n", g.usize(1, 99_999));
+    let n_comps = g.usize(1, 3);
+    for c in 0..n_comps {
+        let entry = c == n_comps - 1;
+        text.push('\n');
+        if entry {
+            text.push_str("ENTRY ");
+        }
+        text.push_str(&format!("comp_{c}.{} {{\n", next_id(g)));
+        let mut names: Vec<String> = Vec::new();
+        let p = format!("p{c}.{}", next_id(g));
+        text.push_str(&format!("  {p} = {} parameter(0)\n", arb_shape(g)));
+        names.push(p);
+        for _ in 0..g.usize(0, 3) {
+            let name = format!("i{c}.{}", next_id(g));
+            let shape = arb_shape(g);
+            let line = match g.usize(0, 3) {
+                0 => {
+                    let lit = *g.pick(&[
+                        "0", "-3", "1e-3", "-2.5E+7", "{1, 2, 3}", "nan",
+                        "{-1e10, 6.02e23}",
+                    ]);
+                    format!("{name} = {shape} constant({lit})")
+                }
+                1 => format!(
+                    "{name} = {shape} negate({})",
+                    g.pick(&names).clone()
+                ),
+                2 => format!(
+                    "{name} = {shape} add({}, {})",
+                    g.pick(&names).clone(),
+                    g.pick(&names).clone()
+                ),
+                _ => format!(
+                    "{name} = {shape} broadcast({}), dimensions={{0}}",
+                    g.pick(&names).clone()
+                ),
+            };
+            text.push_str(&format!("  {line}\n"));
+            names.push(name);
+        }
+        let root = format!("r{c}.{}", next_id(g));
+        text.push_str(&format!(
+            "  ROOT {root} = {} multiply({}, {})\n",
+            arb_shape(g),
+            g.pick(&names).clone(),
+            g.pick(&names).clone()
+        ));
+        text.push_str("}\n");
+    }
+    text
+}
+
+#[test]
+fn hlo_parse_pretty_print_roundtrips() {
+    use manticore::runtime::native::parser::parse_module;
+    forall(0x51AB, 80, arb_hlo_module, |text| {
+        let m1 = parse_module(text).map_err(|e| format!("parse: {e}"))?;
+        let printed = m1.to_text();
+        let m2 = parse_module(&printed)
+            .map_err(|e| format!("reparse: {e}\n--- printed:\n{printed}"))?;
+        if m1 == m2 {
+            Ok(())
+        } else {
+            Err(format!(
+                "module changed across print->parse\n--- printed:\n{printed}\
+                 \n--- first: {m1:?}\n--- second: {m2:?}"
+            ))
+        }
+    });
+}
