@@ -10,7 +10,7 @@ PYTHON ?= python3
 BENCH_OUT ?= bench-results
 
 .PHONY: help build test artifacts fmt fmt-check clippy bench bench-smoke \
-        pytest clean
+        serve-smoke pytest clean
 
 help:
 	@echo "targets:"
@@ -24,6 +24,9 @@ help:
 	@echo "  bench-smoke  perf_hotpath + ablations with --smoke, JSON to $(BENCH_OUT)/;"
 	@echo "               diffs against the previous run's JSON (>10% regressions"
 	@echo "               print a non-fatal warning table, saved as *.diff.md)"
+	@echo "  serve-smoke  start 'manticore serve --backend sim', fire a concurrent"
+	@echo "               loadgen burst, write the latency report to"
+	@echo "               $(BENCH_OUT)/serve_loadgen.json, shut the server down"
 	@echo "  pytest       python L1/L2 tests (skip cleanly when JAX absent)"
 	@echo "  clean        remove build products"
 
@@ -70,6 +73,23 @@ bench-smoke:
 	    echo "(no previous $$f.json — skipping diff)"; \
 	  fi; \
 	done
+
+# Serve smoke: background server (sim backend, so replies carry
+# per-request energy), a concurrent closed-loop burst, JSON latency
+# report next to the bench artifacts. loadgen exits non-zero when no
+# request completes or the numeric cross-check fails; --shutdown winds
+# the server down and `wait` collects it.
+SERVE_PORT ?= 7433
+serve-smoke: build
+	mkdir -p $(BENCH_OUT)
+	./target/release/manticore serve --port $(SERVE_PORT) --backend sim & \
+	server_pid=$$!; \
+	sleep 2; \
+	./target/release/manticore loadgen --addr 127.0.0.1:$(SERVE_PORT) \
+	  --artifact matmul_f64_64 --concurrency 8 --requests 120 \
+	  --json $(BENCH_OUT)/serve_loadgen.json --shutdown \
+	  || { kill $$server_pid 2>/dev/null; exit 1; }; \
+	wait $$server_pid
 
 pytest:
 	$(PYTHON) -m pytest python/tests -q

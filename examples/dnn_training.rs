@@ -20,9 +20,9 @@ use manticore::util::cli;
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let (_, args) = cli::parse(&raw);
-    let steps = args.get_usize("steps", 300);
-    let lr = args.get_f64("lr", 0.05) as f32;
-    let seed = args.get_usize("seed", 0) as u64;
+    let steps = args.get_usize("steps", 300)?;
+    let lr = args.get_f64("lr", 0.05)? as f32;
+    let seed = args.get_usize("seed", 0)? as u64;
     let cfg = Config::default();
 
     println!(

@@ -10,13 +10,13 @@ use manticore::util::bench::{fmt_si, Table};
 use manticore::util::cli;
 use manticore::util::rng::Rng;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let (_, args) = cli::parse(&raw);
-    let cores = args.get_usize("cores", 24);
-    let points = args.get_usize("points", 9);
-    let dies = args.get_usize("dies", 8);
-    let min_gflops = args.get_f64("min-gflops", 40.0);
+    let cores = args.get_usize("cores", 24)?;
+    let points = args.get_usize("points", 9)?;
+    let dies = args.get_usize("dies", 8)?;
+    let min_gflops = args.get_f64("min-gflops", 40.0)?;
 
     let m = DvfsModel::default();
     let util = 0.9;
@@ -75,4 +75,5 @@ fn main() {
         ]);
     }
     td.print();
+    Ok(())
 }

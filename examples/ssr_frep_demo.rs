@@ -38,10 +38,10 @@ fn run(name: &str, prog: Vec<manticore::isa::Inst>, n: u32, show: bool) {
     );
 }
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let (_, args) = cli::parse(&raw);
-    let n = args.get_usize("n", 2048) as u32;
+    let n = args.get_usize("n", 2048)? as u32;
     let show = !args.has_flag("quiet");
     let p = DotParams { n, x: 0, y: n * 8 + 8, out: 2 * n * 8 + 16 };
 
@@ -60,4 +60,5 @@ fn main() {
         "paper: baseline <=33 % even fully unrolled; SSR elides the \
          loads; FREP removes the remaining bookkeeping -> >90 %."
     );
+    Ok(())
 }

@@ -25,9 +25,9 @@ pub mod tiling;
 use crate::cluster::{gemm_all_cores_utilization, ClusterConfig};
 use crate::codegen;
 use crate::power::DvfsModel;
-use crate::system::SystemConfig;
+use crate::system::{ClusterSlot, SystemConfig};
 use crate::workload::{Layer, LayerClass, Network};
-pub use optask::{OpKind, OpReport, OpStreamReport, OpTask, Placement};
+pub use optask::{OpKind, OpReport, OpStreamReport, OpTask, Placement, TaskError};
 pub use tiling::{plan_gemm, GemmPlan, Tile};
 
 /// Calibration knobs measured/derived once per configuration.
@@ -139,6 +139,19 @@ impl Coordinator {
         &self.sys.dvfs
     }
 
+    /// A coordinator pricing work on one leased [`ClusterSlot`] instead
+    /// of the whole machine: the serve subsystem gives each in-flight
+    /// request its own disjoint sub-machine (proportional cores, HBM
+    /// bandwidth, power — see `SystemConfig::slice_clusters`).
+    pub fn for_slot(&self, slot: &ClusterSlot) -> Coordinator {
+        Coordinator {
+            sys: self.sys.slice_clusters(slot.n_clusters),
+            vdd: self.vdd,
+            calib: self.calib,
+            cluster: self.cluster,
+        }
+    }
+
     /// Achieved performance for a layer at operational intensity `oi`
     /// [flop/s]: roofline clamped by measured utilizations with the
     /// bank-conflict dip near the ridge.
@@ -156,7 +169,20 @@ impl Coordinator {
     /// itself is measured on the cycle-level ClusterSim), TCDM-placed
     /// ops run cluster-local against banked-SRAM bandwidth, and pure
     /// data movement is priced at effective memory bandwidth.
-    pub fn simulate_task(&self, t: &OpTask) -> OpReport {
+    ///
+    /// The task is validated first: a malformed task (untrusted serve
+    /// request, hand-built stream) returns a typed [`TaskError`]
+    /// instead of panicking mid-schedule.
+    pub fn simulate_task(&self, t: &OpTask) -> Result<OpReport, TaskError> {
+        t.validate()?;
+        Ok(self.cost_task(t))
+    }
+
+    /// The infallible pricing core: callers guarantee the task is
+    /// well-formed (the pre-baked layer/GEMM adapters construct valid
+    /// tasks by construction; everything else goes through
+    /// [`Coordinator::simulate_task`]).
+    fn cost_task(&self, t: &OpTask) -> OpReport {
         let freq = self.sys.freq(self.vdd);
         let rl = self.sys.roofline(self.vdd);
         let (time, achieved, util, power) = match t.placement {
@@ -229,16 +255,21 @@ impl Coordinator {
     }
 
     /// Cost a whole op stream (what `SimBackend` hands over after
-    /// tracing an artifact execution).
+    /// tracing an artifact execution). Every task is validated up
+    /// front; the first malformed one fails the stream with a typed
+    /// error.
     pub fn simulate_stream(
         &self,
         name: &str,
         tasks: &[OpTask],
-    ) -> OpStreamReport {
-        OpStreamReport::new(
+    ) -> Result<OpStreamReport, TaskError> {
+        for t in tasks {
+            t.validate()?;
+        }
+        Ok(OpStreamReport::new(
             name,
-            tasks.iter().map(|t| self.simulate_task(t)).collect(),
-        )
+            tasks.iter().map(|t| self.cost_task(t)).collect(),
+        ))
     }
 
     /// Evaluate one layer: performance, time, energy (adapter over the
@@ -246,7 +277,7 @@ impl Coordinator {
     pub fn simulate_layer(&self, layer: &Layer) -> LayerReport {
         let rl = self.sys.roofline(self.vdd);
         let oi = layer.oi();
-        let r = self.simulate_task(&OpTask::from_layer(layer));
+        let r = self.cost_task(&OpTask::from_layer(layer));
         LayerReport {
             name: layer.name.clone(),
             class: layer.class,
@@ -292,7 +323,7 @@ impl Coordinator {
     /// op-task path — `manticore run --backend sim` prices the same
     /// `dot` through the identical machinery.
     pub fn schedule_gemm(&self, m: usize, k: usize, n: usize) -> (f64, f64) {
-        let r = self.simulate_task(&OpTask::dot("gemm", 1, m, k, n, 8));
+        let r = self.cost_task(&OpTask::dot("gemm", 1, m, k, n, 8));
         (r.time_s, r.achieved)
     }
 }
@@ -418,5 +449,32 @@ mod tests {
         let (t, perf) = co.schedule_gemm(4096, 4096, 4096);
         assert!(t > 0.0 && perf > 0.0);
         assert!(perf <= co.sys.peak_dp(co.vdd));
+    }
+
+    /// Per-slot scheduling: a compute-bound op on a 32-cluster slot
+    /// must run ~16x slower than on the whole 512-cluster machine
+    /// (proportionally fewer FPUs), and never faster on less hardware.
+    #[test]
+    fn slot_coordinator_prices_on_the_sub_machine() {
+        let co = coord();
+        let slot = crate::system::ClusterSlot {
+            id: 0,
+            first_cluster: 0,
+            n_clusters: 32,
+        };
+        let co_slot = co.for_slot(&slot);
+        assert_eq!(co_slot.sys.tree.total_clusters(), 32);
+        // High-OI dot: compute bound on both machines.
+        let t = OpTask::dot("d", 1, 2048, 2048, 2048, 8);
+        let full = co.simulate_task(&t).unwrap();
+        let part = co_slot.simulate_task(&t).unwrap();
+        let ratio = part.time_s / full.time_s;
+        assert!(
+            (ratio / 16.0 - 1.0).abs() < 0.25,
+            "slot/full time ratio {ratio} (want ~16x)"
+        );
+        assert!(part.time_s > full.time_s);
+        // Energy stays comparable: fewer cores for longer.
+        assert!(part.energy_j > 0.0);
     }
 }

@@ -12,6 +12,45 @@ use crate::cluster::ClusterConfig;
 use crate::codegen::{self, FrepKernel};
 use crate::util::bench::{fmt_ns, fmt_si, Table};
 use crate::workload::{Layer, LayerClass};
+use std::fmt;
+
+/// A malformed [`OpTask`]: the typed error `Coordinator::simulate_task`
+/// / `simulate_stream` return instead of panicking, so a bad task
+/// stream (e.g. one decoded from an untrusted serve request) can never
+/// abort a server worker.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TaskError {
+    /// The task's geometry is impossible to schedule (zero-sized
+    /// elements, empty contraction dims, non-finite flop/byte counts).
+    Geometry { task: String, reason: String },
+    /// An FP-streaming task (dot/elementwise/reduce) whose SSR+FREP
+    /// kernel cannot be derived or fails spec validation.
+    Kernel { task: String, reason: String },
+}
+
+impl TaskError {
+    /// The offending task's name.
+    pub fn task(&self) -> &str {
+        match self {
+            TaskError::Geometry { task, .. } | TaskError::Kernel { task, .. } => task,
+        }
+    }
+}
+
+impl fmt::Display for TaskError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TaskError::Geometry { task, reason } => {
+                write!(f, "op task '{task}': bad geometry: {reason}")
+            }
+            TaskError::Kernel { task, reason } => {
+                write!(f, "op task '{task}': no valid SSR+FREP kernel: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TaskError {}
 
 /// Where an op's operands live during execution.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -193,6 +232,54 @@ impl OpTask {
     /// Operational intensity [flop/B].
     pub fn oi(&self) -> f64 {
         self.flops / self.bytes.max(1.0)
+    }
+
+    /// Check the task is schedulable: positive element size and count,
+    /// finite non-negative flop/byte totals, non-degenerate contraction
+    /// dims, and — for the FP-streaming kinds — a derivable SSR+FREP
+    /// kernel that passes spec validation. `simulate_task` /
+    /// `simulate_stream` call this and surface the typed [`TaskError`]
+    /// instead of panicking mid-schedule.
+    pub fn validate(&self) -> Result<(), TaskError> {
+        let geo = |reason: String| TaskError::Geometry {
+            task: self.name.clone(),
+            reason,
+        };
+        if self.elem_bytes == 0 {
+            return Err(geo("elem_bytes = 0".into()));
+        }
+        if self.count == 0 {
+            return Err(geo("count = 0".into()));
+        }
+        if !self.flops.is_finite() || self.flops < 0.0 {
+            return Err(geo(format!("flops = {}", self.flops)));
+        }
+        if !self.bytes.is_finite() || self.bytes < 0.0 {
+            return Err(geo(format!("bytes = {}", self.bytes)));
+        }
+        if let OpKind::Dot { b, m, k, n } = self.kind {
+            if b == 0 || m == 0 || k == 0 || n == 0 {
+                return Err(geo(format!(
+                    "degenerate dot dims {b}x[{m}x{k} . {k}x{n}]"
+                )));
+            }
+        }
+        match self.kind {
+            OpKind::Dot { .. }
+            | OpKind::Elementwise { .. }
+            | OpKind::Reduce { .. } => {
+                let k = self.frep_kernel().ok_or_else(|| TaskError::Kernel {
+                    task: self.name.clone(),
+                    reason: "no kernel for an FP-streaming kind".into(),
+                })?;
+                codegen::validate(&k, 16).map_err(|e| TaskError::Kernel {
+                    task: self.name.clone(),
+                    reason: format!("{e:?}"),
+                })?;
+            }
+            OpKind::Data | OpKind::Layer(_) => {}
+        }
+        Ok(())
     }
 
     /// Derive the SSR stream specs + FREP kernel this op lowers to on
@@ -387,6 +474,8 @@ mod tests {
         assert_eq!(big.placement, Placement::Hbm);
     }
 
+    /// FP-streaming kinds must derive a valid kernel — asserted through
+    /// `OpTask::validate`, whose typed error replaced the old panic.
     #[test]
     fn frep_kernels_validate_for_fp_kinds() {
         for t in [
@@ -395,12 +484,51 @@ mod tests {
             OpTask::elementwise("u", 1, 100, 100, 8),
             OpTask::reduce("r", 1000, 1, 8),
         ] {
-            let k = t.frep_kernel().unwrap_or_else(|| {
-                panic!("{}: no kernel", t.name)
-            });
+            t.validate().unwrap();
+            let k = t.frep_kernel().expect("validate checked the kernel");
             assert!(validate(&k, 16).is_ok(), "{}", t.name);
         }
         assert!(OpTask::data("m", 64, 8).frep_kernel().is_none());
+        OpTask::data("m", 64, 8).validate().unwrap();
+    }
+
+    /// Malformed tasks surface `TaskError` through `simulate_task` —
+    /// never a panic (a serve worker survives a bad task stream).
+    #[test]
+    fn malformed_tasks_are_typed_errors_not_panics() {
+        let co = crate::coordinator::Coordinator::new(
+            crate::system::SystemConfig::default(),
+            0.9,
+        );
+        let mut bad = OpTask::elementwise("zb", 1, 16, 16, 8);
+        bad.elem_bytes = 0;
+        let err = co.simulate_task(&bad).unwrap_err();
+        assert!(matches!(err, TaskError::Geometry { .. }), "{err}");
+        assert_eq!(err.task(), "zb");
+        assert!(format!("{err}").contains("elem_bytes"), "{err}");
+
+        let mut nan = OpTask::reduce("nn", 128, 1, 8);
+        nan.flops = f64::NAN;
+        assert!(matches!(
+            co.simulate_task(&nan).unwrap_err(),
+            TaskError::Geometry { .. }
+        ));
+
+        let mut degen = OpTask::dot("dd", 1, 8, 8, 8, 8);
+        degen.kind = OpKind::Dot { b: 1, m: 8, k: 0, n: 8 };
+        let err = co.simulate_task(&degen).unwrap_err();
+        assert!(format!("{err}").contains("degenerate"), "{err}");
+
+        // One bad task poisons the whole stream with the same error.
+        let good = OpTask::elementwise("ok", 1, 16, 16, 8);
+        let mut bad2 = OpTask::data("zc", 64, 8);
+        bad2.count = 0;
+        let err = co
+            .simulate_stream("s", &[good.clone(), bad2])
+            .unwrap_err();
+        assert_eq!(err.task(), "zc");
+        // A well-formed stream still schedules.
+        assert_eq!(co.simulate_stream("s", &[good]).unwrap().ops.len(), 1);
     }
 
     #[test]
@@ -414,7 +542,7 @@ mod tests {
                 OpTask::elementwise(&format!("e{i}"), 2, 4096, 8192, 8)
             })
             .collect();
-        let rep = co.simulate_stream("s", &tasks);
+        let rep = co.simulate_stream("s", &tasks).unwrap();
         assert_eq!(rep.ops.len(), 5);
         assert!(rep.total_time_s > 0.0 && rep.total_energy_j > 0.0);
         assert!(
@@ -436,9 +564,10 @@ mod tests {
             crate::system::SystemConfig::default(),
             0.9,
         );
-        let one = co.simulate_task(&OpTask::dot("d", 1, 64, 64, 64, 8));
-        let four =
-            co.simulate_task(&OpTask::dot("d", 1, 64, 64, 64, 8).with_count(4));
+        let one = co.simulate_task(&OpTask::dot("d", 1, 64, 64, 64, 8)).unwrap();
+        let four = co
+            .simulate_task(&OpTask::dot("d", 1, 64, 64, 64, 8).with_count(4))
+            .unwrap();
         assert!((four.cycles / one.cycles - 4.0).abs() < 1e-9);
         assert!((four.energy_j / one.energy_j - 4.0).abs() < 1e-9);
         assert_eq!(four.fpu_util, one.fpu_util);

@@ -32,6 +32,7 @@ pub mod power;
 pub mod repro;
 pub mod roofline;
 pub mod runtime;
+pub mod serve;
 pub mod snitch;
 pub mod system;
 pub mod util;

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   repro <fig5|fig6|fig8|fig9|fig10|fig3|area|peaks|simops|all>
 //!   run <artifact> [--iters N]          execute an AOT artifact
+//!   serve [--port P] [--backend B]      concurrent batching inference server
+//!   loadgen [--concurrency N] [--requests N]   closed-loop load generator
 //!   simulate gemm --m --k --n           schedule a GEMM on the system model
 //!   simulate kernel --name <dot|matvec|gemm|axpy>   cycle-level run
 //!   train [--steps N] [--lr F]          tiny end-to-end training loop
@@ -24,6 +26,7 @@ use manticore::runtime::sim::SimBackend;
 use manticore::runtime::{
     backend_by_name, backends, tensor_for_spec, Runtime, Tensor,
 };
+use manticore::serve::{run_loadgen, LoadgenConfig, ServeConfig, Server};
 use manticore::util::bench::{diff_reports, fmt_si};
 use manticore::util::cli;
 use manticore::util::json;
@@ -49,7 +52,17 @@ fn open_runtime(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<R
     }
 }
 
-fn main() -> Result<()> {
+fn main() {
+    // Errors (bad flags included) print one readable line + a usage
+    // hint — never a panic backtrace.
+    if let Err(e) = run_cli() {
+        eprintln!("manticore: error: {e}");
+        eprintln!("(run `manticore` with no arguments for usage)");
+        std::process::exit(2);
+    }
+}
+
+fn run_cli() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let (sub, args) = cli::parse(&raw);
 
@@ -63,6 +76,8 @@ fn main() -> Result<()> {
     match sub.as_deref() {
         Some("repro") => cmd_repro(&args, &artifacts_dir),
         Some("run") => cmd_run(&args, &artifacts_dir, &cfg),
+        Some("serve") => cmd_serve(&args, &artifacts_dir, &cfg),
+        Some("loadgen") => cmd_loadgen(&args, &artifacts_dir),
         Some("simulate") => cmd_simulate(&args, &cfg),
         Some("train") => cmd_train(&args, &artifacts_dir, &cfg),
         Some("backends") => cmd_backends(),
@@ -83,6 +98,11 @@ fn print_help() {
          COMMANDS:\n  \
          repro <fig5|fig6|fig8|fig9|fig10|fig3|area|peaks|simops|all>\n  \
          run <artifact|path/to/x.hlo.txt> [--iters N] [--ops N]\n  \
+         serve [--port 7433] [--host 127.0.0.1] [--batch-window-ms 2]\n        \
+         [--max-batch 8] [--slot-clusters 32] [--workers N]\n  \
+         loadgen [--addr 127.0.0.1:7433] [--artifact NAME] \
+         [--concurrency 8]\n          \
+         [--requests 100] [--json out.json] [--shutdown]\n  \
          simulate gemm --m M --k K --n N | simulate kernel --name <..>\n  \
          train [--steps N] [--lr F]\n  \
          backends\n  \
@@ -91,6 +111,82 @@ fn print_help() {
          OPTIONS: --preset <name> --config <file.json> --artifacts <dir> \
          --backend <native|sim|xla>"
     );
+}
+
+/// `manticore serve` — run the batching inference server until a
+/// protocol `shutdown` request arrives, then print the fleet stats.
+fn cmd_serve(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> {
+    let serve_cfg = ServeConfig {
+        addr: format!(
+            "{}:{}",
+            args.get_or("host", "127.0.0.1"),
+            args.get_usize("port", manticore::serve::protocol::DEFAULT_PORT as usize)?
+        ),
+        artifacts_dir: artifacts_dir.to_string(),
+        backend: args.get_or("backend", "native"),
+        window_ms: args.get_usize("batch-window-ms", 2)? as u64,
+        max_batch: args.get_usize("max-batch", 8)?,
+        slot_clusters: args.get_usize("slot-clusters", 32)?,
+        workers: args.get_usize("workers", 0)?,
+    };
+    let server = Server::start(&serve_cfg, cfg)?;
+    println!(
+        "manticore serve: listening on {} (backend {}, {})",
+        server.addr(),
+        server.backend_name(),
+        server.platform()
+    );
+    println!(
+        "  batching: {} ms window, max {} / placement: {} slots x {} \
+         clusters / workers: {}",
+        serve_cfg.window_ms,
+        serve_cfg.max_batch,
+        server.stats().slots,
+        server.stats().slot_clusters,
+        if serve_cfg.workers == 0 {
+            "auto".to_string()
+        } else {
+            serve_cfg.workers.to_string()
+        }
+    );
+    println!("  stop with: {{\"op\":\"shutdown\"}} or `manticore loadgen --shutdown`");
+    let stats = server.wait();
+    stats.table().print();
+    Ok(())
+}
+
+/// `manticore loadgen` — fire a closed-loop burst and report latency,
+/// throughput and (sim backend) energy per request.
+fn cmd_loadgen(args: &cli::Args, artifacts_dir: &str) -> Result<()> {
+    let cfg = LoadgenConfig {
+        addr: args.get_or(
+            "addr",
+            &format!(
+                "127.0.0.1:{}",
+                manticore::serve::protocol::DEFAULT_PORT
+            ),
+        ),
+        artifact: args.get_or("artifact", "matmul_f64_64"),
+        concurrency: args.get_usize("concurrency", 8)?.max(1),
+        requests: args.get_usize("requests", 100)?,
+        seed: args.get_usize("seed", 0)? as u64,
+        artifacts_dir: artifacts_dir.to_string(),
+        json_path: args.get("json").map(str::to_string),
+        shutdown: args.has_flag("shutdown"),
+    };
+    println!(
+        "loadgen: {} x {} requests @ {} (concurrency {})",
+        cfg.artifact, cfg.requests, cfg.addr, cfg.concurrency
+    );
+    let rep = run_loadgen(&cfg)?;
+    rep.table().print();
+    if let Some(stats) = &rep.server_stats {
+        stats.table().print();
+    }
+    if rep.ok_requests == 0 {
+        bail!("no requests completed");
+    }
+    Ok(())
 }
 
 /// List the backend registry (`manticore backends`).
@@ -119,7 +215,7 @@ fn cmd_bench_diff(args: &cli::Args) -> Result<()> {
     else {
         bail!("usage: manticore bench-diff <old.json> <new.json> [--threshold 0.1] [--md out.md]");
     };
-    let threshold = args.get_f64("threshold", 0.10);
+    let threshold = args.get_f64("threshold", 0.10)?;
     let load = |p: &str| -> Result<json::Value> {
         let text = std::fs::read_to_string(p)
             .with_context(|| format!("reading {p}"))?;
@@ -155,15 +251,15 @@ fn cmd_repro(args: &cli::Args, artifacts_dir: &str) -> Result<()> {
         "simops" => repro::sim_ops(
             artifacts_dir,
             &args.get_or("artifact", "matmul_f64_64"),
-            args.get_usize("ops", 16),
+            args.get_usize("ops", 16)?,
         )?
         .print(),
-        "fig5" => repro::fig5(args.get_usize("n", 2048) as u32).print(),
+        "fig5" => repro::fig5(args.get_usize("n", 2048)? as u32).print(),
         "fig6" => repro::fig6().print(),
         "fig8" => {
             let (a, b) = repro::fig8(
-                args.get_usize("points", 9),
-                args.get_usize("dies", 8),
+                args.get_usize("points", 9)?,
+                args.get_usize("dies", 8)?,
             );
             a.print();
             b.print();
@@ -221,7 +317,7 @@ fn cmd_run(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> {
         .meta(name)
         .with_context(|| format!("unknown artifact {name}"))?
         .clone();
-    let mut rng = Rng::new(args.get_usize("seed", 0) as u64);
+    let mut rng = Rng::new(args.get_usize("seed", 0)? as u64);
     let inputs: Vec<Tensor> = meta
         .inputs
         .iter()
@@ -230,7 +326,7 @@ fn cmd_run(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> {
             tensor_for_spec(spec, move |_| local.normal() * 0.1)
         })
         .collect::<Result<_>>()?;
-    let iters = args.get_usize("iters", 10);
+    let iters = args.get_usize("iters", 10)?;
     let (_, first) = rt.execute_timed(name, &inputs)?;
     let mut total = std::time::Duration::ZERO;
     for _ in 0..iters {
@@ -243,7 +339,7 @@ fn cmd_run(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> {
     );
     // Backends that model execution (sim) retain a per-op schedule.
     if let Some(rep) = rt.last_report(name) {
-        rep.table(args.get_usize("ops", 16)).print();
+        rep.table(args.get_usize("ops", 16)?).print();
     }
     Ok(())
 }
@@ -252,9 +348,9 @@ fn cmd_simulate(args: &cli::Args, cfg: &Config) -> Result<()> {
     match args.positional.first().map(String::as_str) {
         Some("gemm") => {
             let (m, k, n) = (
-                args.get_usize("m", 4096),
-                args.get_usize("k", 4096),
-                args.get_usize("n", 4096),
+                args.get_usize("m", 4096)?,
+                args.get_usize("k", 4096)?,
+                args.get_usize("n", 4096)?,
             );
             let co = Coordinator::new(cfg.system, cfg.vdd);
             let (time, perf) = co.schedule_gemm(m, k, n);
@@ -281,7 +377,7 @@ fn cmd_simulate_kernel(args: &cli::Args, cfg: &Config) -> Result<()> {
     use manticore::snitch::{run_single, SnitchCore};
 
     let name = args.get_or("name", "dot");
-    let n = args.get_usize("n", 2048) as u32;
+    let n = args.get_usize("n", 2048)? as u32;
     let (prog, fill): (Vec<manticore::isa::Inst>, Box<dyn Fn(&mut Tcdm)>) =
         match name.as_str() {
             "dot" => {
@@ -346,8 +442,8 @@ fn cmd_simulate_kernel(args: &cli::Args, cfg: &Config) -> Result<()> {
 }
 
 fn cmd_train(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> {
-    let steps = args.get_usize("steps", 50);
-    let lr = args.get_f64("lr", 0.05) as f32;
+    let steps = args.get_usize("steps", 50)?;
+    let lr = args.get_f64("lr", 0.05)? as f32;
     let rt = open_runtime(args, artifacts_dir, cfg)?;
     let report = manticore::examples_support::train_loop_on(
         rt,
@@ -355,7 +451,7 @@ fn cmd_train(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> 
         32,
         lr,
         cfg,
-        args.get_usize("seed", 0) as u64,
+        args.get_usize("seed", 0)? as u64,
         true,
     )?;
     println!(
@@ -370,7 +466,7 @@ fn cmd_train(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> 
     // With --backend sim the whole CNN training step has a per-op
     // timing/energy schedule on the simulated machine.
     if let Some(rep) = &report.per_op {
-        rep.table(args.get_usize("ops", 16)).print();
+        rep.table(args.get_usize("ops", 16)?).print();
     }
     Ok(())
 }

@@ -19,10 +19,27 @@
 
 use super::Tensor;
 use crate::coordinator::OpStreamReport;
+use crate::system::ClusterSlot;
 use anyhow::{bail, Result};
 
+/// Everything one execution produced: the output tensors plus — for
+/// backends that model execution on the simulated machine — the
+/// per-op schedule of *this* call. Returning the report with the
+/// outputs (rather than only stashing it on the executable) is what
+/// makes per-request reports independent when one compiled executable
+/// is shared across server worker threads.
+pub struct ExecOutcome {
+    pub outputs: Vec<Tensor>,
+    pub report: Option<OpStreamReport>,
+}
+
 /// A compiled artifact, ready to execute.
-pub trait Executable {
+///
+/// `Send + Sync` is part of the contract: one compiled executable is
+/// shared (behind an `Arc`) by every serve worker thread, so
+/// implementations must keep any per-call state local to the call (or
+/// behind a lock).
+pub trait Executable: Send + Sync {
     /// Execute with host tensors; returns one tensor per output (the
     /// artifacts are lowered with `return_tuple=True`, so the tuple is
     /// unpacked here).
@@ -30,13 +47,30 @@ pub trait Executable {
 
     /// Per-op schedule of the most recent `execute` call, for backends
     /// that model execution on the simulated machine (SimBackend).
+    /// Racy under concurrent callers by design — concurrent paths use
+    /// [`Executable::execute_placed`], which returns the report for
+    /// its own call.
     fn last_report(&self) -> Option<OpStreamReport> {
         None
     }
+
+    /// Execute on an (optional) leased [`ClusterSlot`]: backends that
+    /// model execution price the op stream on that slot's sub-machine
+    /// instead of the whole package, and hand back this call's report.
+    /// The default ignores placement and adapts `execute`.
+    fn execute_placed(
+        &self,
+        inputs: &[Tensor],
+        slot: Option<&ClusterSlot>,
+    ) -> Result<ExecOutcome> {
+        let _ = slot;
+        Ok(ExecOutcome { outputs: self.execute(inputs)?, report: None })
+    }
 }
 
-/// An execution engine that compiles HLO text.
-pub trait Backend {
+/// An execution engine that compiles HLO text. `Send + Sync` so a
+/// server can own one backend and compile from any worker thread.
+pub trait Backend: Send + Sync {
     /// Short identifier used in error messages ("native", "sim", "xla").
     fn name(&self) -> &'static str;
 

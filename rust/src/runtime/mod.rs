@@ -23,10 +23,11 @@ pub mod sim;
 
 pub use self::backend::{
     backend_by_name, backends, default_backend, Backend, BackendInfo,
-    Executable,
+    ExecOutcome, Executable,
 };
 
 use crate::coordinator::OpStreamReport;
+use crate::system::ClusterSlot;
 use crate::util::json::{self, Value};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
@@ -193,53 +194,7 @@ impl Runtime {
         backend: Box<dyn Backend>,
     ) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
-        let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
-            format!(
-                "[{}] reading {} (run `make artifacts`)",
-                backend.name(),
-                manifest_path.display()
-            )
-        })?;
-        let v = json::parse(&text).map_err(|e| {
-            anyhow!("[{}] parsing {}: {e}", backend.name(), manifest_path.display())
-        })?;
-        let mut manifest = BTreeMap::new();
-        for (name, meta) in v.as_obj().with_context(|| {
-            format!("[{}] manifest not an object", backend.name())
-        })? {
-            let spec_list = |key: &str| -> Result<Vec<TensorSpec>> {
-                meta.get(key)
-                    .and_then(Value::as_arr)
-                    .context("bad manifest entry")?
-                    .iter()
-                    .map(|t| {
-                        Ok(TensorSpec {
-                            shape: t
-                                .get("shape")
-                                .and_then(Value::as_arr)
-                                .context("shape")?
-                                .iter()
-                                .filter_map(Value::as_usize)
-                                .collect(),
-                            dtype: t
-                                .get("dtype")
-                                .and_then(Value::as_str)
-                                .context("dtype")?
-                                .to_string(),
-                        })
-                    })
-                    .collect()
-            };
-            manifest.insert(
-                name.clone(),
-                ArtifactMeta {
-                    name: name.clone(),
-                    inputs: spec_list("inputs")?,
-                    outputs: spec_list("outputs")?,
-                },
-            );
-        }
+        let manifest = load_manifest(&dir, backend.name())?;
         Ok(Runtime { backend, dir, manifest, cache: BTreeMap::new() })
     }
 
@@ -284,26 +239,22 @@ impl Runtime {
     /// the tuple output is unpacked into one `Tensor` per output.
     pub fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         self.load(name)?;
-        let meta = &self.manifest[name];
-        if inputs.len() != meta.inputs.len() {
-            bail!(
-                "[{}] artifact '{name}' expects {} inputs, got {}",
-                self.backend.name(),
-                meta.inputs.len(),
-                inputs.len()
-            );
-        }
-        for (i, (t, spec)) in inputs.iter().zip(&meta.inputs).enumerate() {
-            if t.shape() != spec.shape.as_slice() {
-                bail!(
-                    "[{}] input {i} of '{name}': shape {:?} != manifest {:?}",
-                    self.backend.name(),
-                    t.shape(),
-                    spec.shape
-                );
-            }
-        }
+        check_inputs(self.backend.name(), &self.manifest[name], inputs)?;
         self.cache[name].execute(inputs)
+    }
+
+    /// Execute an artifact on an (optional) leased cluster slot,
+    /// returning this call's outputs + per-op report together — the
+    /// concurrency-safe path the serve subsystem uses.
+    pub fn execute_placed(
+        &mut self,
+        name: &str,
+        inputs: &[Tensor],
+        slot: Option<&ClusterSlot>,
+    ) -> Result<ExecOutcome> {
+        self.load(name)?;
+        check_inputs(self.backend.name(), &self.manifest[name], inputs)?;
+        self.cache[name].execute_placed(inputs, slot)
     }
 
     /// Per-op schedule of the most recent execution of `name` (Some
@@ -324,6 +275,103 @@ impl Runtime {
         let out = self.execute(name, inputs)?;
         Ok((out, t0.elapsed()))
     }
+}
+
+/// Parse `<dir>/manifest.json` into artifact metadata. Shared by
+/// [`Runtime`] and the serve subsystem (which validates requests
+/// against the same specs without holding a whole `Runtime`).
+/// `backend_name` only labels error messages.
+pub fn load_manifest(
+    dir: &Path,
+    backend_name: &str,
+) -> Result<BTreeMap<String, ArtifactMeta>> {
+    let manifest_path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+        format!(
+            "[{backend_name}] reading {} (run `make artifacts`)",
+            manifest_path.display()
+        )
+    })?;
+    let v = json::parse(&text).map_err(|e| {
+        anyhow!("[{backend_name}] parsing {}: {e}", manifest_path.display())
+    })?;
+    let mut manifest = BTreeMap::new();
+    for (name, meta) in v
+        .as_obj()
+        .with_context(|| format!("[{backend_name}] manifest not an object"))?
+    {
+        let spec_list = |key: &str| -> Result<Vec<TensorSpec>> {
+            meta.get(key)
+                .and_then(Value::as_arr)
+                .context("bad manifest entry")?
+                .iter()
+                .map(|t| {
+                    Ok(TensorSpec {
+                        shape: t
+                            .get("shape")
+                            .and_then(Value::as_arr)
+                            .context("shape")?
+                            .iter()
+                            .filter_map(Value::as_usize)
+                            .collect(),
+                        dtype: t
+                            .get("dtype")
+                            .and_then(Value::as_str)
+                            .context("dtype")?
+                            .to_string(),
+                    })
+                })
+                .collect()
+        };
+        manifest.insert(
+            name.clone(),
+            ArtifactMeta {
+                name: name.clone(),
+                inputs: spec_list("inputs")?,
+                outputs: spec_list("outputs")?,
+            },
+        );
+    }
+    Ok(manifest)
+}
+
+/// Validate request tensors against an artifact's manifest entry
+/// (arity + shapes + dtypes). Shared by `Runtime::execute` and the
+/// serve workers, so a malformed (or untrusted) request fails with the
+/// same message either way instead of silently executing at the wrong
+/// precision.
+pub fn check_inputs(
+    backend_name: &str,
+    meta: &ArtifactMeta,
+    inputs: &[Tensor],
+) -> Result<()> {
+    if inputs.len() != meta.inputs.len() {
+        bail!(
+            "[{backend_name}] artifact '{}' expects {} inputs, got {}",
+            meta.name,
+            meta.inputs.len(),
+            inputs.len()
+        );
+    }
+    for (i, (t, spec)) in inputs.iter().zip(&meta.inputs).enumerate() {
+        if t.shape() != spec.shape.as_slice() {
+            bail!(
+                "[{backend_name}] input {i} of '{}': shape {:?} != manifest {:?}",
+                meta.name,
+                t.shape(),
+                spec.shape
+            );
+        }
+        if t.dtype_name() != spec.dtype {
+            bail!(
+                "[{backend_name}] input {i} of '{}': dtype {} != manifest {}",
+                meta.name,
+                t.dtype_name(),
+                spec.dtype
+            );
+        }
+    }
+    Ok(())
 }
 
 /// Build a Tensor filled from a generator, matching a manifest spec —

@@ -20,17 +20,17 @@
 //! it as the per-op table. Any HLO artifact the runtime can load is
 //! thereby a simulator workload for free.
 
-use super::backend::{Backend, Executable};
+use super::backend::{Backend, ExecOutcome, Executable};
 use super::native::eval::{Evaluator, TraceEvent, Value};
 use super::native::{parse_checked, tensor_to_value, value_to_tensor};
 use super::Tensor;
 use crate::cluster::ClusterConfig;
 use crate::config::Config;
 use crate::coordinator::{Coordinator, OpStreamReport, OpTask};
-use crate::system::SystemConfig;
+use crate::system::{ClusterSlot, SystemConfig};
 use anyhow::{Context, Result};
-use std::cell::RefCell;
 use std::collections::HashMap;
+use std::sync::Mutex;
 
 /// The simulation backend: evaluator numerics + op-level scheduling on
 /// the Manticore system model.
@@ -90,40 +90,63 @@ impl Backend for SimBackend {
             module,
             co: Coordinator::new(self.sys, self.vdd)
                 .with_cluster(self.cluster),
-            report: RefCell::new(None),
+            report: Mutex::new(None),
         }))
     }
 }
 
 /// A parsed module plus the coordinator that prices its op stream.
+/// Shareable across threads: all per-call state (evaluator, trace,
+/// schedule) is local to the call; only the `last_report` convenience
+/// cache sits behind a lock.
 pub struct SimExecutable {
     name: String,
     module: super::native::parser::Module,
     co: Coordinator,
-    report: RefCell<Option<OpStreamReport>>,
+    report: Mutex<Option<OpStreamReport>>,
 }
 
 impl Executable for SimExecutable {
     fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        Ok(self.execute_placed(inputs, None)?.outputs)
+    }
+
+    fn last_report(&self) -> Option<OpStreamReport> {
+        self.report.lock().unwrap().clone()
+    }
+
+    /// Evaluate (traced) and price the op stream — on the whole
+    /// machine, or on the leased slot's sub-machine when the serve
+    /// layer placed this request. The report travels back with the
+    /// outputs, so concurrent callers each get the schedule of their
+    /// own call.
+    fn execute_placed(
+        &self,
+        inputs: &[Tensor],
+        slot: Option<&ClusterSlot>,
+    ) -> Result<ExecOutcome> {
         let args: Vec<Value> = inputs.iter().map(tensor_to_value).collect();
         let ev = Evaluator::with_trace(&self.module);
         let out = ev
             .run(&args)
             .with_context(|| format!("[sim] executing '{}'", self.name))?;
         let tasks = tasks_from_trace(&ev.take_trace());
-        *self.report.borrow_mut() =
-            Some(self.co.simulate_stream(&self.name, &tasks));
-        match out {
+        let co = match slot {
+            Some(s) => self.co.for_slot(s),
+            None => self.co.clone(),
+        };
+        let report = co
+            .simulate_stream(&self.name, &tasks)
+            .with_context(|| format!("[sim] scheduling '{}'", self.name))?;
+        *self.report.lock().unwrap() = Some(report.clone());
+        let outputs = match out {
             Value::Tuple(vs) => vs
                 .iter()
                 .map(|v| value_to_tensor(v.arr()?))
-                .collect::<Result<Vec<_>>>(),
-            Value::Arr(a) => Ok(vec![value_to_tensor(&a)?]),
-        }
-    }
-
-    fn last_report(&self) -> Option<OpStreamReport> {
-        self.report.borrow().clone()
+                .collect::<Result<Vec<_>>>()?,
+            Value::Arr(a) => vec![value_to_tensor(&a)?],
+        };
+        Ok(ExecOutcome { outputs, report: Some(report) })
     }
 }
 
@@ -224,6 +247,35 @@ mod tests {
         let dot = rep.op("dot").expect("dot op in report");
         assert_eq!(dot.kind, "dot");
         assert!(dot.cycles > 0.0 && rep.total_energy_j > 0.0);
+    }
+
+    /// Placed execution prices on the slot's sub-machine: the same dot
+    /// costs more cycles on 32 clusters than on the full 512, and each
+    /// call's report rides back in its own `ExecOutcome` (independent
+    /// of the shared `last_report` cache).
+    #[test]
+    fn placed_execution_prices_on_the_slot_sub_machine() {
+        use crate::system::ClusterSlot;
+        let a = Tensor::F64(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        let b = Tensor::F64(vec![5.0, 6.0, 7.0, 8.0], vec![2, 2]);
+        let exe = SimBackend::new().compile("mm", MATMUL_2X2).unwrap();
+        let whole = exe.execute_placed(&[a.clone(), b.clone()], None).unwrap();
+        let slot = ClusterSlot { id: 3, first_cluster: 96, n_clusters: 32 };
+        let placed = exe
+            .execute_placed(&[a.clone(), b.clone()], Some(&slot))
+            .unwrap();
+        assert_eq!(whole.outputs[0], placed.outputs[0], "numerics unchanged");
+        let (rw, rp) = (whole.report.unwrap(), placed.report.unwrap());
+        assert!(
+            rp.total_cycles > rw.total_cycles,
+            "slot schedule {} cycles must exceed whole-machine {}",
+            rp.total_cycles,
+            rw.total_cycles
+        );
+        // last_report reflects the most recent call only; the returned
+        // reports are unaffected by later calls.
+        let cached = exe.last_report().unwrap();
+        assert_eq!(cached.total_cycles, rp.total_cycles);
     }
 
     #[test]

@@ -1,0 +1,218 @@
+//! The micro-batching queue between connection threads and the worker
+//! pool: requests for the *same artifact* arriving within a
+//! configurable window are grouped into one batch, so a worker
+//! amortizes its slot lease (and the compile-once executable lookup)
+//! over the group — the serving analogue of the coordinator's
+//! tile-batching discipline.
+//!
+//! Grouping never reorders requests of one artifact (extraction is
+//! front-to-back) and never starves another artifact: a worker that
+//! claims artifact A only removes A-requests, leaving the rest of the
+//! queue for its peers.
+
+use crate::coordinator::OpStreamReport;
+use crate::runtime::Tensor;
+use crate::system::ClusterSlot;
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// A completed execution, travelling back to the connection thread.
+#[derive(Debug)]
+pub struct RunDone {
+    pub outputs: Vec<Tensor>,
+    pub report: Option<OpStreamReport>,
+    pub slot: ClusterSlot,
+    /// Size of the micro-batch this request was grouped into.
+    pub batch: usize,
+    /// Queue + execute time on the server [µs].
+    pub server_us: f64,
+}
+
+/// What a worker sends back per request: outputs or a printable error.
+pub type WorkResult = Result<RunDone, String>;
+
+/// One queued request.
+#[derive(Debug)]
+pub struct Pending {
+    pub artifact: String,
+    pub inputs: Vec<Tensor>,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<WorkResult>,
+}
+
+struct QueueState {
+    q: VecDeque<Pending>,
+    stopped: bool,
+}
+
+/// The shared queue.
+pub struct BatchQueue {
+    window: Duration,
+    max_batch: usize,
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+impl BatchQueue {
+    pub fn new(window: Duration, max_batch: usize) -> BatchQueue {
+        BatchQueue {
+            window,
+            max_batch: max_batch.max(1),
+            state: Mutex::new(QueueState { q: VecDeque::new(), stopped: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a request. Returns `false` (request refused) after
+    /// [`BatchQueue::stop`].
+    pub fn push(&self, p: Pending) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.stopped {
+            return false;
+        }
+        st.q.push_back(p);
+        self.cv.notify_all();
+        true
+    }
+
+    /// Pop the next micro-batch: blocks for work, then groups
+    /// same-artifact requests arriving within the window (up to
+    /// `max_batch`). Returns `None` only when stopped *and* drained.
+    pub fn pop_batch(&self) -> Option<Vec<Pending>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.q.is_empty() {
+                break;
+            }
+            if st.stopped {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+        let front = st.q.front().expect("non-empty queue");
+        let artifact = front.artifact.clone();
+        let deadline = front.enqueued + self.window;
+        let mut batch: Vec<Pending> = Vec::new();
+        loop {
+            let mut i = 0;
+            while i < st.q.len() && batch.len() < self.max_batch {
+                if st.q[i].artifact == artifact {
+                    batch.push(st.q.remove(i).expect("index in bounds"));
+                } else {
+                    i += 1;
+                }
+            }
+            if batch.len() >= self.max_batch || st.stopped {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _) =
+                self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+        Some(batch)
+    }
+
+    /// Stop the queue: refuses new work, wakes every waiter; workers
+    /// drain what is queued and then see `None`.
+    pub fn stop(&self) {
+        self.state.lock().unwrap().stopped = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pending(artifact: &str) -> (Pending, mpsc::Receiver<WorkResult>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Pending {
+                artifact: artifact.to_string(),
+                inputs: Vec::new(),
+                enqueued: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn groups_same_artifact_within_window() {
+        let q = BatchQueue::new(Duration::from_millis(50), 8);
+        let mut rxs = Vec::new();
+        for name in ["a", "a", "b", "a"] {
+            let (p, rx) = pending(name);
+            assert!(q.push(p));
+            rxs.push(rx);
+        }
+        // First batch: the three 'a's (grouped past the interleaved b).
+        let batch = q.pop_batch().unwrap();
+        assert_eq!(batch.len(), 3);
+        assert!(batch.iter().all(|p| p.artifact == "a"));
+        // Then the 'b'.
+        let batch = q.pop_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].artifact, "b");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn max_batch_caps_the_group() {
+        let q = BatchQueue::new(Duration::from_millis(50), 2);
+        let mut rxs = Vec::new();
+        for _ in 0..5 {
+            let (p, rx) = pending("a");
+            q.push(p);
+            rxs.push(rx);
+        }
+        assert_eq!(q.pop_batch().unwrap().len(), 2);
+        assert_eq!(q.pop_batch().unwrap().len(), 2);
+        assert_eq!(q.pop_batch().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn window_collects_late_arrivals() {
+        use std::sync::Arc;
+        let q = Arc::new(BatchQueue::new(Duration::from_millis(200), 8));
+        let (p, _rx1) = pending("a");
+        q.push(p);
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(40));
+            let (p, rx) = pending("a");
+            q2.push(p);
+            rx
+        });
+        // pop_batch waits out the window and captures the late request.
+        let batch = q.pop_batch().unwrap();
+        assert_eq!(batch.len(), 2, "late same-artifact arrival joins");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn stop_drains_then_ends() {
+        let q = BatchQueue::new(Duration::from_millis(5), 8);
+        let (p, _rx) = pending("a");
+        q.push(p);
+        q.stop();
+        let (p2, _rx2) = pending("a");
+        assert!(!q.push(p2), "push after stop is refused");
+        assert_eq!(q.pop_batch().unwrap().len(), 1);
+        assert!(q.pop_batch().is_none(), "stopped + drained => None");
+    }
+}

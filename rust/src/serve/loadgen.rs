@@ -1,0 +1,513 @@
+//! `manticore loadgen` — the closed-loop demand side of the serve
+//! subsystem: N client threads, each holding one connection, firing
+//! requests back-to-back until the shared request budget is spent.
+//!
+//! Each request gets fresh random inputs built from the local artifact
+//! manifest. Latency lands in a client-side [`Histogram`] (and a raw
+//! sample list for exact mean/median/stddev); one response is
+//! cross-checked bit-exactly against a direct in-process `Runtime`
+//! run — the wire's f64 literals round-trip exactly, so any deviation
+//! is a real serving bug, not JSON noise. The final report can be
+//! written as `util::bench`-schema JSON, diffable across runs with
+//! `manticore bench-diff`.
+
+use crate::runtime::{
+    backend_by_name, load_manifest, tensor_for_spec, Runtime, Tensor,
+};
+use crate::serve::metrics::{Histogram, StatsSnapshot};
+use crate::serve::protocol::{Reply, Request};
+use crate::util::bench::{BenchOpts, Report, Sample, Table};
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeSet;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Loadgen configuration (the `manticore loadgen` flags).
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    pub addr: String,
+    pub artifact: String,
+    /// Closed-loop client connections.
+    pub concurrency: usize,
+    /// Total requests across all clients.
+    pub requests: usize,
+    pub seed: u64,
+    /// Local artifacts dir (input specs + the cross-check runtime).
+    pub artifacts_dir: String,
+    /// Write a `util::bench`-schema JSON report here.
+    pub json_path: Option<String>,
+    /// Send a `shutdown` request after the burst.
+    pub shutdown: bool,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: format!(
+                "127.0.0.1:{}",
+                crate::serve::protocol::DEFAULT_PORT
+            ),
+            artifact: "matmul_f64_64".to_string(),
+            concurrency: 8,
+            requests: 100,
+            seed: 0,
+            artifacts_dir: "artifacts".to_string(),
+            json_path: None,
+            shutdown: false,
+        }
+    }
+}
+
+/// What one burst produced.
+#[derive(Debug)]
+pub struct LoadgenReport {
+    pub ok_requests: u64,
+    pub errors: u64,
+    pub wall_s: f64,
+    /// Client-observed requests/s.
+    pub rps: f64,
+    pub hist: Histogram,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    /// Distinct placement slots observed across replies.
+    pub slots_seen: usize,
+    /// Summed per-request simulated energy from replies [J] (sim).
+    pub sim_energy_j: f64,
+    /// One response was verified against a direct `Runtime` run.
+    pub crosschecked: bool,
+    /// Server-side fleet snapshot fetched after the burst.
+    pub server_stats: Option<StatsSnapshot>,
+}
+
+impl LoadgenReport {
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "loadgen — {} ok / {} errors in {:.2} s",
+                self.ok_requests, self.errors, self.wall_s
+            ),
+            &["metric", "value"],
+        );
+        let row = |t: &mut Table, k: &str, v: String| {
+            t.row(vec![k.to_string(), v]);
+        };
+        row(&mut t, "throughput", format!("{:.1} req/s", self.rps));
+        row(&mut t, "latency mean", format!("{:.3} ms", self.mean_ms));
+        row(&mut t, "latency p50", format!("{:.3} ms", self.p50_ms));
+        row(&mut t, "latency p95", format!("{:.3} ms", self.p95_ms));
+        row(&mut t, "distinct slots", self.slots_seen.to_string());
+        row(
+            &mut t,
+            "cross-check",
+            if self.crosschecked { "ok" } else { "skipped" }.to_string(),
+        );
+        if self.sim_energy_j > 0.0 && self.ok_requests > 0 {
+            row(
+                &mut t,
+                "sim energy / request",
+                format!(
+                    "{:.4} mJ",
+                    self.sim_energy_j / self.ok_requests as f64 * 1e3
+                ),
+            );
+        }
+        if let Some(s) = &self.server_stats {
+            row(
+                &mut t,
+                "server occupancy",
+                format!("{:.1} %", s.occupancy * 100.0),
+            );
+            row(
+                &mut t,
+                "server p95",
+                format!("{:.3} ms", s.p95_ms),
+            );
+            row(&mut t, "server mean batch", format!("{:.2}", s.mean_batch));
+        }
+        t
+    }
+}
+
+struct ThreadStats {
+    latencies: Vec<f64>,
+    ok: u64,
+    errors: u64,
+    slots: BTreeSet<usize>,
+    energy_j: f64,
+}
+
+/// One line-JSON round trip on an open connection.
+fn roundtrip(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+    req: &Request,
+) -> Result<Reply> {
+    writeln!(writer, "{}", req.to_line()).context("sending request")?;
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).context("reading reply")?;
+    if n == 0 {
+        bail!("server closed the connection");
+    }
+    Reply::parse(&line)
+}
+
+/// Run one closed-loop burst against a serve endpoint.
+pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    let manifest =
+        load_manifest(Path::new(&cfg.artifacts_dir), "loadgen")?;
+    let meta = manifest
+        .get(&cfg.artifact)
+        .with_context(|| {
+            format!("artifact '{}' not in local manifest", cfg.artifact)
+        })?
+        .clone();
+
+    let budget = Arc::new(AtomicU64::new(cfg.requests as u64));
+    // First completed (inputs, outputs) pair, kept for the cross-check.
+    let sample: Arc<Mutex<Option<(Vec<Tensor>, Vec<Tensor>)>>> =
+        Arc::new(Mutex::new(None));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for client_id in 0..cfg.concurrency.max(1) {
+        let (budget, sample) = (budget.clone(), sample.clone());
+        let (addr, artifact, meta) =
+            (cfg.addr.clone(), cfg.artifact.clone(), meta.clone());
+        let seed = cfg.seed;
+        handles.push(std::thread::spawn(move || -> Result<ThreadStats> {
+            let stream = TcpStream::connect(&addr)
+                .with_context(|| format!("connecting to {addr}"))?;
+            let mut reader = BufReader::new(
+                stream.try_clone().context("cloning stream")?,
+            );
+            let mut writer = stream;
+            let mut st = ThreadStats {
+                latencies: Vec::new(),
+                ok: 0,
+                errors: 0,
+                slots: BTreeSet::new(),
+                energy_j: 0.0,
+            };
+            let mut attempt: u64 = 0;
+            loop {
+                // Claim one request from the shared budget.
+                let claimed = budget
+                    .fetch_update(
+                        Ordering::SeqCst,
+                        Ordering::SeqCst,
+                        |v| v.checked_sub(1),
+                    )
+                    .is_ok();
+                if !claimed {
+                    break;
+                }
+                // Unique inputs per (client, request) pair.
+                let mut rng =
+                    Rng::new(seed ^ ((client_id as u64) << 32) ^ attempt);
+                attempt += 1;
+                let inputs: Vec<Tensor> = meta
+                    .inputs
+                    .iter()
+                    .map(|spec| {
+                        tensor_for_spec(spec, |_| rng.normal() * 0.1)
+                    })
+                    .collect::<Result<_>>()?;
+                let sent = Instant::now();
+                let reply = roundtrip(
+                    &mut reader,
+                    &mut writer,
+                    &Request::Run {
+                        artifact: artifact.clone(),
+                        inputs: inputs.clone(),
+                    },
+                )?;
+                match reply {
+                    Reply::Run(run) => {
+                        // Latency samples cover *completed* requests
+                        // only — the JSON report's `iters` is therefore
+                        // the completed-request count the CI smoke gate
+                        // asserts on.
+                        st.latencies.push(sent.elapsed().as_secs_f64());
+                        st.ok += 1;
+                        if let Some(slot) = run.slot {
+                            st.slots.insert(slot.id);
+                        }
+                        if let Some(sim) = run.sim {
+                            st.energy_j += sim.energy_j;
+                        }
+                        let mut guard = sample.lock().unwrap();
+                        if guard.is_none() {
+                            *guard = Some((inputs, run.outputs));
+                        }
+                    }
+                    Reply::Err(msg) => {
+                        eprintln!("loadgen: server error: {msg}");
+                        st.errors += 1;
+                    }
+                    other => {
+                        eprintln!("loadgen: unexpected reply {other:?}");
+                        st.errors += 1;
+                    }
+                }
+            }
+            Ok(st)
+        }));
+    }
+
+    let mut hist = Histogram::new();
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut ok = 0u64;
+    let mut errors = 0u64;
+    let mut slots = BTreeSet::new();
+    let mut energy = 0.0f64;
+    for h in handles {
+        let st = h.join().expect("loadgen client panicked")?;
+        for &l in &st.latencies {
+            hist.record(l);
+        }
+        latencies.extend_from_slice(&st.latencies);
+        ok += st.ok;
+        errors += st.errors;
+        slots.extend(st.slots);
+        energy += st.energy_j;
+    }
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+
+    // Cross-check one served response against a direct Runtime run
+    // (native numerics == sim numerics by construction).
+    let crosschecked = match sample.lock().unwrap().take() {
+        Some((inputs, served)) => {
+            let mut rt = Runtime::with_backend(
+                &cfg.artifacts_dir,
+                backend_by_name("native")?,
+            )?;
+            let want = rt.execute(&cfg.artifact, &inputs)?;
+            if served.len() != want.len() {
+                bail!(
+                    "cross-check failed: served {} outputs, direct run {}",
+                    served.len(),
+                    want.len()
+                );
+            }
+            for (i, (s, w)) in served.iter().zip(&want).enumerate() {
+                let (s, w) = (s.to_f64_vec(), w.to_f64_vec());
+                for (j, (a, b)) in s.iter().zip(&w).enumerate() {
+                    // IEEE equality, i.e. bit-exact up to ±0.0: the
+                    // wire's shortest-round-trip f64 literals and the
+                    // shared evaluator make anything weaker a serving
+                    // bug.
+                    if a != b {
+                        bail!(
+                            "cross-check failed at output {i}[{j}]: \
+                             served {a} vs direct {b}"
+                        );
+                    }
+                }
+            }
+            true
+        }
+        None => false,
+    };
+
+    // Post-burst server stats + optional shutdown, over one control
+    // connection.
+    let mut server_stats = None;
+    if let Ok(stream) = TcpStream::connect(&cfg.addr) {
+        let mut reader =
+            BufReader::new(stream.try_clone().context("cloning stream")?);
+        let mut writer = stream;
+        if let Ok(Reply::Stats(s)) =
+            roundtrip(&mut reader, &mut writer, &Request::Stats)
+        {
+            server_stats = Some(s);
+        }
+        if cfg.shutdown {
+            let _ = roundtrip(&mut reader, &mut writer, &Request::Shutdown);
+        }
+    }
+
+    let report = LoadgenReport {
+        ok_requests: ok,
+        errors,
+        wall_s,
+        rps: ok as f64 / wall_s,
+        mean_ms: hist.mean_s() * 1e3,
+        p50_ms: hist.quantile_s(0.50) * 1e3,
+        p95_ms: hist.quantile_s(0.95) * 1e3,
+        hist,
+        slots_seen: slots.len(),
+        sim_energy_j: energy,
+        crosschecked,
+        server_stats,
+    };
+
+    if let Some(path) = &cfg.json_path {
+        write_json_report(cfg, &report, &latencies, path)?;
+    }
+    Ok(report)
+}
+
+/// Persist the burst as a `util::bench` JSON report: the latency
+/// distribution as a `Sample` (diffable via `manticore bench-diff`)
+/// plus the summary and server-stats tables.
+fn write_json_report(
+    cfg: &LoadgenConfig,
+    rep: &LoadgenReport,
+    latencies: &[f64],
+    path: &str,
+) -> Result<()> {
+    let mut out = Report::new(BenchOpts {
+        smoke: false,
+        json_path: Some(path.to_string()),
+    });
+    if !latencies.is_empty() {
+        let mut sorted = latencies.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let n = sorted.len() as f64;
+        let mean = sorted.iter().sum::<f64>() / n;
+        let var = sorted.iter().map(|l| (l - mean) * (l - mean)).sum::<f64>()
+            / n;
+        out.push_sample(Sample {
+            name: format!("loadgen_{}_latency", cfg.artifact),
+            iters: sorted.len() as u64,
+            mean_ns: mean * 1e9,
+            median_ns: sorted[sorted.len() / 2] * 1e9,
+            stddev_ns: var.sqrt() * 1e9,
+            min_ns: sorted[0] * 1e9,
+        });
+    }
+    let mut summary = rep.table();
+    summary.title = format!(
+        "loadgen {} x{} @ {} — {}",
+        cfg.artifact, cfg.requests, cfg.concurrency, cfg.addr
+    );
+    out.table(summary);
+    if let Some(s) = &rep.server_stats {
+        out.table(s.table());
+    }
+    out.finish().context("writing loadgen JSON report")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::serve::server::{ServeConfig, Server};
+
+    fn artifacts_present() -> bool {
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            true
+        } else {
+            eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+            false
+        }
+    }
+
+    fn burst(backend: &str, requests: usize, concurrency: usize) -> (LoadgenReport, StatsSnapshot) {
+        let server = Server::start(
+            &ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                backend: backend.to_string(),
+                ..ServeConfig::default()
+            },
+            &Config::default(),
+        )
+        .expect("server start");
+        let rep = run_loadgen(&LoadgenConfig {
+            addr: server.addr().to_string(),
+            requests,
+            concurrency,
+            shutdown: true,
+            ..LoadgenConfig::default()
+        })
+        .expect("loadgen run");
+        let final_stats = server.wait();
+        (rep, final_stats)
+    }
+
+    /// Acceptance-shaped end-to-end: a concurrent burst over the
+    /// native backend completes every request, cross-checks against a
+    /// direct Runtime run, and the shutdown request winds the server
+    /// down cleanly.
+    #[test]
+    fn native_burst_completes_and_crosschecks() {
+        if !artifacts_present() {
+            return;
+        }
+        let (rep, final_stats) = burst("native", 24, 4);
+        assert_eq!(rep.ok_requests, 24);
+        assert_eq!(rep.errors, 0);
+        assert!(rep.crosschecked, "one response must be cross-checked");
+        assert!(rep.rps > 0.0 && rep.p95_ms >= rep.p50_ms);
+        assert!(rep.server_stats.is_some());
+        assert_eq!(final_stats.requests, 24);
+        assert!(final_stats.mean_batch >= 1.0);
+    }
+
+    /// Sim-backend burst: every reply carries per-request energy, the
+    /// fleet reports J/request + occupancy, and concurrent requests
+    /// landed on placement slots.
+    #[test]
+    fn sim_burst_reports_energy_and_slots() {
+        if !artifacts_present() {
+            return;
+        }
+        let (rep, final_stats) = burst("sim", 12, 4);
+        assert_eq!(rep.ok_requests, 12);
+        assert!(rep.crosschecked);
+        assert!(rep.sim_energy_j > 0.0, "replies must carry sim energy");
+        assert!(rep.slots_seen >= 1);
+        assert!(final_stats.j_per_request > 0.0);
+        assert!(final_stats.occupancy > 0.0);
+        assert!(final_stats.energy_j > 0.0);
+    }
+
+    /// The JSON report lands on disk in the bench schema.
+    #[test]
+    fn loadgen_writes_bench_schema_json() {
+        if !artifacts_present() {
+            return;
+        }
+        let server = Server::start(
+            &ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                ..ServeConfig::default()
+            },
+            &Config::default(),
+        )
+        .unwrap();
+        let dir = std::env::temp_dir().join(format!(
+            "manticore-loadgen-test-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("loadgen.json");
+        let rep = run_loadgen(&LoadgenConfig {
+            addr: server.addr().to_string(),
+            requests: 6,
+            concurrency: 2,
+            json_path: Some(path.to_string_lossy().into_owned()),
+            shutdown: true,
+            ..LoadgenConfig::default()
+        })
+        .unwrap();
+        assert_eq!(rep.ok_requests, 6);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::util::json::parse(&text).unwrap();
+        let samples = v.get("samples").unwrap().as_arr().unwrap();
+        assert_eq!(samples.len(), 1);
+        assert_eq!(
+            samples[0].get("name").unwrap().as_str().unwrap(),
+            "loadgen_matmul_f64_64_latency"
+        );
+        assert!(v.get("tables").unwrap().as_arr().unwrap().len() >= 2);
+        server.wait();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,427 @@
+//! Fleet-level serving metrics: a lock-protected aggregate the
+//! connection and worker threads update, snapshotted on `stats`
+//! requests and printed on shutdown.
+//!
+//! Latencies go into a geometric-bucket [`Histogram`] (1 µs lower
+//! edge, 25 % growth, ~120 buckets ≈ 1 µs..50 ks) — constant memory,
+//! good-enough p50/p95 resolution for a latency report, and reusable
+//! client-side by `loadgen`.
+
+use crate::coordinator::OpStreamReport;
+use crate::util::bench::Table;
+use crate::util::json::Value;
+use anyhow::{Context, Result};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Geometric-bucket latency histogram over seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum_s: f64,
+    min_s: f64,
+    max_s: f64,
+}
+
+/// Lower edge of bucket 0 [s].
+const HIST_LO: f64 = 1e-6;
+/// Geometric growth per bucket.
+const HIST_GROWTH: f64 = 1.25;
+const HIST_BUCKETS: usize = 120;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: vec![0; HIST_BUCKETS],
+            count: 0,
+            sum_s: 0.0,
+            min_s: f64::INFINITY,
+            max_s: 0.0,
+        }
+    }
+
+    fn bucket(seconds: f64) -> usize {
+        if seconds <= HIST_LO {
+            return 0;
+        }
+        let b = (seconds / HIST_LO).ln() / HIST_GROWTH.ln();
+        (b.floor() as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Upper edge of a bucket [s].
+    fn edge(bucket: usize) -> f64 {
+        HIST_LO * HIST_GROWTH.powi(bucket as i32 + 1)
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        if !seconds.is_finite() || seconds < 0.0 {
+            return;
+        }
+        self.counts[Self::bucket(seconds)] += 1;
+        self.count += 1;
+        self.sum_s += seconds;
+        self.min_s = self.min_s.min(seconds);
+        self.max_s = self.max_s.max(seconds);
+    }
+
+    /// Merge another histogram into this one (loadgen joins its
+    /// per-client histograms this way).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_s += other.sum_s;
+        self.min_s = self.min_s.min(other.min_s);
+        self.max_s = self.max_s.max(other.max_s);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_s / self.count as f64
+        }
+    }
+
+    pub fn min_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min_s
+        }
+    }
+
+    pub fn max_s(&self) -> f64 {
+        self.max_s
+    }
+
+    /// Latency at quantile `q` in [0,1] — the upper edge of the bucket
+    /// holding the q-th sample (clamped to the observed max).
+    pub fn quantile_s(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0)
+            as u64;
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::edge(i).min(self.max_s);
+            }
+        }
+        self.max_s
+    }
+}
+
+/// One consistent view of the fleet counters, extended with the
+/// allocator occupancy and machine geometry — serialized over the wire
+/// for `stats` requests and rendered as the shutdown table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsSnapshot {
+    pub backend: String,
+    /// Completed (replied-ok) requests.
+    pub requests: u64,
+    pub errors: u64,
+    /// Micro-batches executed.
+    pub batches: u64,
+    /// Mean requests per micro-batch.
+    pub mean_batch: f64,
+    pub uptime_s: f64,
+    /// Completed requests per second of uptime.
+    pub rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub mean_ms: f64,
+    /// Total simulated energy across requests [J] (sim backend).
+    pub energy_j: f64,
+    /// Simulated energy per completed request [J] (sim backend).
+    pub j_per_request: f64,
+    /// Total simulated cycles across requests (sim backend).
+    pub cycles: f64,
+    /// Time-weighted fraction of cluster slots occupied.
+    pub occupancy: f64,
+    pub slots: usize,
+    pub slot_clusters: usize,
+}
+
+impl StatsSnapshot {
+    pub fn to_json(&self) -> Value {
+        super::protocol::obj(vec![
+            ("backend", Value::Str(self.backend.clone())),
+            ("requests", Value::Num(self.requests as f64)),
+            ("errors", Value::Num(self.errors as f64)),
+            ("batches", Value::Num(self.batches as f64)),
+            ("mean_batch", Value::Num(self.mean_batch)),
+            ("uptime_s", Value::Num(self.uptime_s)),
+            ("rps", Value::Num(self.rps)),
+            ("p50_ms", Value::Num(self.p50_ms)),
+            ("p95_ms", Value::Num(self.p95_ms)),
+            ("mean_ms", Value::Num(self.mean_ms)),
+            ("energy_j", Value::Num(self.energy_j)),
+            ("j_per_request", Value::Num(self.j_per_request)),
+            ("cycles", Value::Num(self.cycles)),
+            ("occupancy", Value::Num(self.occupancy)),
+            ("slots", Value::Num(self.slots as f64)),
+            ("slot_clusters", Value::Num(self.slot_clusters as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<StatsSnapshot> {
+        let num = |k: &str| -> Result<f64> {
+            v.get(k)
+                .and_then(Value::as_f64)
+                .with_context(|| format!("stats missing '{k}'"))
+        };
+        Ok(StatsSnapshot {
+            backend: v
+                .get("backend")
+                .and_then(Value::as_str)
+                .context("stats missing 'backend'")?
+                .to_string(),
+            requests: num("requests")? as u64,
+            errors: num("errors")? as u64,
+            batches: num("batches")? as u64,
+            mean_batch: num("mean_batch")?,
+            uptime_s: num("uptime_s")?,
+            rps: num("rps")?,
+            p50_ms: num("p50_ms")?,
+            p95_ms: num("p95_ms")?,
+            mean_ms: num("mean_ms")?,
+            energy_j: num("energy_j")?,
+            j_per_request: num("j_per_request")?,
+            cycles: num("cycles")?,
+            occupancy: num("occupancy")?,
+            slots: num("slots")? as usize,
+            slot_clusters: num("slot_clusters")? as usize,
+        })
+    }
+
+    /// The shutdown / loadgen-side fleet summary table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "serve fleet stats — backend {}, {} slots x {} clusters",
+                self.backend, self.slots, self.slot_clusters
+            ),
+            &["metric", "value"],
+        );
+        let row = |t: &mut Table, k: &str, v: String| {
+            t.row(vec![k.to_string(), v]);
+        };
+        row(&mut t, "requests", self.requests.to_string());
+        row(&mut t, "errors", self.errors.to_string());
+        row(&mut t, "uptime", format!("{:.2} s", self.uptime_s));
+        row(&mut t, "throughput", format!("{:.1} req/s", self.rps));
+        row(&mut t, "latency p50", format!("{:.3} ms", self.p50_ms));
+        row(&mut t, "latency p95", format!("{:.3} ms", self.p95_ms));
+        row(&mut t, "latency mean", format!("{:.3} ms", self.mean_ms));
+        row(
+            &mut t,
+            "mean micro-batch",
+            format!("{:.2} req ({} batches)", self.mean_batch, self.batches),
+        );
+        row(
+            &mut t,
+            "cluster occupancy",
+            format!("{:.1} %", self.occupancy * 100.0),
+        );
+        if self.energy_j > 0.0 {
+            row(
+                &mut t,
+                "sim energy / request",
+                format!("{:.4} mJ", self.j_per_request * 1e3),
+            );
+            row(
+                &mut t,
+                "sim energy total",
+                format!("{:.4} J", self.energy_j),
+            );
+            row(&mut t, "sim cycles total", format!("{:.0}", self.cycles));
+        }
+        t
+    }
+}
+
+#[derive(Debug, Default)]
+struct Counters {
+    requests: u64,
+    errors: u64,
+    batches: u64,
+    batched_requests: u64,
+    hist: Histogram,
+    energy_j: f64,
+    cycles: f64,
+}
+
+/// The live, shared metrics aggregate.
+pub struct Metrics {
+    started: Instant,
+    inner: Mutex<Counters>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            started: Instant::now(),
+            inner: Mutex::new(Counters::default()),
+        }
+    }
+
+    /// One completed request: end-to-end latency plus (sim backend)
+    /// the per-request schedule totals.
+    pub fn record_request(
+        &self,
+        latency_s: f64,
+        report: Option<&OpStreamReport>,
+    ) {
+        let mut c = self.inner.lock().unwrap();
+        c.requests += 1;
+        c.hist.record(latency_s);
+        if let Some(r) = report {
+            c.energy_j += r.total_energy_j;
+            c.cycles += r.total_cycles;
+        }
+    }
+
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    /// One micro-batch of `size` requests dispatched to a worker.
+    pub fn record_batch(&self, size: usize) {
+        let mut c = self.inner.lock().unwrap();
+        c.batches += 1;
+        c.batched_requests += size as u64;
+    }
+
+    /// Consistent snapshot; the caller supplies the allocator state
+    /// (occupancy + geometry) and the backend name.
+    pub fn snapshot(
+        &self,
+        backend: &str,
+        occupancy: f64,
+        slots: usize,
+        slot_clusters: usize,
+    ) -> StatsSnapshot {
+        let c = self.inner.lock().unwrap();
+        let uptime_s = self.started.elapsed().as_secs_f64().max(1e-9);
+        StatsSnapshot {
+            backend: backend.to_string(),
+            requests: c.requests,
+            errors: c.errors,
+            batches: c.batches,
+            mean_batch: if c.batches == 0 {
+                0.0
+            } else {
+                c.batched_requests as f64 / c.batches as f64
+            },
+            uptime_s,
+            rps: c.requests as f64 / uptime_s,
+            p50_ms: c.hist.quantile_s(0.50) * 1e3,
+            p95_ms: c.hist.quantile_s(0.95) * 1e3,
+            mean_ms: c.hist.mean_s() * 1e3,
+            energy_j: c.energy_j,
+            j_per_request: if c.requests == 0 {
+                0.0
+            } else {
+                c.energy_j / c.requests as f64
+            },
+            cycles: c.cycles,
+            occupancy,
+            slots,
+            slot_clusters,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_bracket_samples() {
+        let mut h = Histogram::new();
+        // 99 samples at ~1 ms, one at 1 s.
+        for _ in 0..99 {
+            h.record(1e-3);
+        }
+        h.record(1.0);
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile_s(0.50);
+        assert!(
+            (5e-4..5e-3).contains(&p50),
+            "p50 {p50} should be near 1 ms"
+        );
+        let p995 = h.quantile_s(0.995);
+        assert!(p995 > 0.5, "p99.5 {p995} should catch the 1 s outlier");
+        assert!(h.mean_s() > 9e-3 && h.mean_s() < 12e-3, "{}", h.mean_s());
+        assert!(h.quantile_s(1.0) <= h.max_s());
+        // Degenerate inputs are ignored.
+        h.record(f64::NAN);
+        h.record(-1.0);
+        assert_eq!(h.count(), 100);
+    }
+
+    #[test]
+    fn histogram_merge_adds_counts() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(1e-3);
+        b.record(2e-3);
+        b.record(4.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert!(a.max_s() >= 4.0);
+    }
+
+    #[test]
+    fn metrics_snapshot_aggregates() {
+        let m = Metrics::new();
+        let rep = crate::coordinator::Coordinator::new(
+            crate::system::SystemConfig::default(),
+            0.9,
+        )
+        .simulate_stream(
+            "x",
+            &[crate::coordinator::OpTask::elementwise("e", 1, 64, 64, 8)],
+        )
+        .unwrap();
+        m.record_request(2e-3, Some(&rep));
+        m.record_request(4e-3, None);
+        m.record_error();
+        m.record_batch(2);
+        let s = m.snapshot("sim", 0.25, 16, 32);
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.batches, 1);
+        assert!((s.mean_batch - 2.0).abs() < 1e-12);
+        assert!(s.energy_j > 0.0);
+        assert!((s.j_per_request - s.energy_j / 2.0).abs() < 1e-15);
+        assert!(s.rps > 0.0 && s.occupancy == 0.25 && s.slots == 16);
+        // Wire round-trip.
+        let back = StatsSnapshot::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        // Table renders all core rows.
+        let t = s.table();
+        assert!(t.rows.iter().any(|r| r[0] == "sim energy / request"));
+    }
+}

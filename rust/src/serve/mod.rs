@@ -1,0 +1,56 @@
+//! The serve subsystem: a dependency-free (std-only) concurrent
+//! inference server in front of the artifact runtime, plus the
+//! closed-loop load generator that drives it — `manticore serve` /
+//! `manticore loadgen`.
+//!
+//! Pipeline of one request:
+//!
+//! ```text
+//! TCP client ──line-JSON──▶ connection thread (parse + manifest check)
+//!     │                                 │ enqueue
+//!     │                        micro-batching queue (same-artifact
+//!     │                        grouping within --batch-window-ms)
+//!     │                                 │ pop_batch
+//!     │                        worker thread: lease a ClusterSlot,
+//!     │                        compile-once executable cache,
+//!     │                        Executable::execute_placed per request
+//!     ◀──line-JSON reply (outputs + slot + per-request sim report)
+//! ```
+//!
+//! * [`protocol`] — the newline-delimited JSON request/response format
+//!   (artifact name + input tensors in, outputs + placement + sim
+//!   summary out; `stats` and `shutdown` control ops).
+//! * [`placement`] — the cluster-slot allocator: leases disjoint
+//!   contiguous cluster ranges of the configured `SystemConfig`
+//!   (default 512 clusters ÷ 32-cluster slots = 16 concurrent leases),
+//!   blocking when the machine is fully occupied, and integrating
+//!   time-weighted occupancy for the fleet stats.
+//! * [`batch`] — the micro-batching queue grouping same-artifact
+//!   requests within a configurable window so one worker/slot lease
+//!   amortizes over the group.
+//! * [`metrics`] — fleet-level aggregates: requests/s, latency
+//!   histogram (p50/p95), simulated J/request, batch sizes, occupancy.
+//! * [`server`] — the TCP front-end (thread per connection), worker
+//!   pool, executable cache, and shutdown sequencing.
+//! * [`loadgen`] — closed-loop clients with configurable concurrency,
+//!   a latency histogram, a numeric cross-check of one response
+//!   against a direct `Runtime` run, and a JSON report in the
+//!   `util::bench` schema (diffable with `manticore bench-diff`).
+//!
+//! With `--backend sim` every response carries the per-request
+//! [`crate::coordinator::OpStreamReport`] priced on *that request's
+//! leased slot* (`Coordinator::for_slot`), so concurrent traffic
+//! occupies disjoint parts of the simulated package and the fleet
+//! stats report simulated energy per request.
+
+pub mod batch;
+pub mod loadgen;
+pub mod metrics;
+pub mod placement;
+pub mod protocol;
+pub mod server;
+
+pub use loadgen::{run_loadgen, LoadgenConfig, LoadgenReport};
+pub use metrics::{Metrics, StatsSnapshot};
+pub use placement::{SlotLease, SlotPool};
+pub use server::{ServeConfig, Server};

@@ -1,0 +1,208 @@
+//! Cluster-slot placement: the serve-side allocator that partitions
+//! the configured machine ([`SystemConfig`], default 512 clusters)
+//! into fixed-size contiguous slots (default 32 clusters → 16 slots)
+//! and leases them to in-flight requests. Leases are RAII guards;
+//! concurrent requests therefore always occupy *disjoint* clusters of
+//! the simulated package, `lease` blocks when the machine is fully
+//! occupied (back-pressure instead of oversubscription), and the pool
+//! integrates time-weighted occupancy for the fleet stats.
+
+use crate::system::{ClusterSlot, SystemConfig};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+struct PoolState {
+    /// Free slot ids (LIFO: hot slots are reused first).
+    free: Vec<usize>,
+    busy: usize,
+    /// Integral of `busy` slots over time [slot·s].
+    busy_integral: f64,
+    last_change: Instant,
+}
+
+/// The slot allocator.
+pub struct SlotPool {
+    slot_clusters: usize,
+    n_slots: usize,
+    started: Instant,
+    state: Mutex<PoolState>,
+    cv: Condvar,
+}
+
+impl SlotPool {
+    /// Partition `sys` into `slot_clusters`-sized slots (clamped to
+    /// the machine; a remainder smaller than one slot is left
+    /// unleased).
+    pub fn new(sys: &SystemConfig, slot_clusters: usize) -> SlotPool {
+        let total = sys.tree.total_clusters();
+        let sc = slot_clusters.clamp(1, total);
+        let n_slots = (total / sc).max(1);
+        let now = Instant::now();
+        SlotPool {
+            slot_clusters: sc,
+            n_slots,
+            started: now,
+            state: Mutex::new(PoolState {
+                free: (0..n_slots).rev().collect(),
+                busy: 0,
+                busy_integral: 0.0,
+                last_change: now,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    pub fn slot_clusters(&self) -> usize {
+        self.slot_clusters
+    }
+
+    fn slot(&self, id: usize) -> ClusterSlot {
+        ClusterSlot {
+            id,
+            first_cluster: id * self.slot_clusters,
+            n_clusters: self.slot_clusters,
+        }
+    }
+
+    fn integrate(&self, st: &mut PoolState) {
+        let now = Instant::now();
+        st.busy_integral +=
+            st.busy as f64 * now.duration_since(st.last_change).as_secs_f64();
+        st.last_change = now;
+    }
+
+    /// Lease a slot, blocking until one is free.
+    pub fn lease(&self) -> SlotLease<'_> {
+        let mut st = self.state.lock().unwrap();
+        while st.free.is_empty() {
+            st = self.cv.wait(st).unwrap();
+        }
+        self.integrate(&mut st);
+        st.busy += 1;
+        let id = st.free.pop().expect("non-empty free list");
+        SlotLease { pool: self, slot: self.slot(id) }
+    }
+
+    /// Lease a slot if one is free right now.
+    pub fn try_lease(&self) -> Option<SlotLease<'_>> {
+        let mut st = self.state.lock().unwrap();
+        if st.free.is_empty() {
+            return None;
+        }
+        self.integrate(&mut st);
+        st.busy += 1;
+        let id = st.free.pop().expect("non-empty free list");
+        Some(SlotLease { pool: self, slot: self.slot(id) })
+    }
+
+    fn release(&self, id: usize) {
+        let mut st = self.state.lock().unwrap();
+        self.integrate(&mut st);
+        st.busy -= 1;
+        st.free.push(id);
+        self.cv.notify_one();
+    }
+
+    /// Slots leased right now.
+    pub fn busy(&self) -> usize {
+        self.state.lock().unwrap().busy
+    }
+
+    /// Time-weighted mean fraction of slots occupied since creation.
+    pub fn occupancy(&self) -> f64 {
+        let mut st = self.state.lock().unwrap();
+        self.integrate(&mut st);
+        let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
+        st.busy_integral / (elapsed * self.n_slots as f64)
+    }
+}
+
+/// An RAII slot lease: the slot returns to the pool on drop.
+pub struct SlotLease<'a> {
+    pool: &'a SlotPool,
+    pub slot: ClusterSlot,
+}
+
+impl Drop for SlotLease<'_> {
+    fn drop(&mut self) {
+        self.pool.release(self.slot.id);
+    }
+}
+
+impl std::ops::Deref for SlotLease<'_> {
+    type Target = ClusterSlot;
+
+    fn deref(&self) -> &ClusterSlot {
+        &self.slot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slots_partition_the_machine_disjointly() {
+        let pool = SlotPool::new(&SystemConfig::default(), 32);
+        assert_eq!(pool.n_slots(), 16);
+        let leases: Vec<SlotLease<'_>> =
+            (0..16).map(|_| pool.try_lease().expect("slot free")).collect();
+        for (i, a) in leases.iter().enumerate() {
+            assert_eq!(a.n_clusters, 32);
+            assert!(a.last_cluster() < 512);
+            for b in leases.iter().skip(i + 1) {
+                assert!(
+                    !a.slot.overlaps(&b.slot),
+                    "slots {:?} and {:?} overlap",
+                    a.slot,
+                    b.slot
+                );
+            }
+        }
+        // Machine fully occupied: a 17th lease must fail.
+        assert!(pool.try_lease().is_none());
+        assert_eq!(pool.busy(), 16);
+        drop(leases);
+        assert_eq!(pool.busy(), 0);
+        assert!(pool.try_lease().is_some());
+    }
+
+    #[test]
+    fn lease_blocks_until_release() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        let pool = Arc::new(SlotPool::new(&SystemConfig::default(), 512));
+        assert_eq!(pool.n_slots(), 1);
+        let first = pool.lease();
+        let got = Arc::new(AtomicBool::new(false));
+        let h = {
+            let (pool, got) = (pool.clone(), got.clone());
+            std::thread::spawn(move || {
+                let l = pool.lease(); // blocks until `first` drops
+                got.store(true, Ordering::SeqCst);
+                drop(l);
+            })
+        };
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert!(!got.load(Ordering::SeqCst), "lease must block while busy");
+        drop(first);
+        h.join().unwrap();
+        assert!(got.load(Ordering::SeqCst));
+        assert!(pool.occupancy() > 0.0);
+    }
+
+    #[test]
+    fn slot_size_is_clamped_to_the_machine() {
+        let sys = SystemConfig::default();
+        let huge = SlotPool::new(&sys, 10_000);
+        assert_eq!(huge.n_slots(), 1);
+        assert_eq!(huge.slot_clusters(), 512);
+        let tiny = SlotPool::new(&sys, 0);
+        assert_eq!(tiny.slot_clusters(), 1);
+        assert_eq!(tiny.n_slots(), 512);
+    }
+}

@@ -1,0 +1,401 @@
+//! The serve wire protocol: newline-delimited JSON over TCP, one
+//! request and one reply per line, encoded with the vendored
+//! `util::json` (no external deps, no length prefixes — a `BufReader`
+//! line loop is the whole framing).
+//!
+//! Requests:
+//! ```text
+//! {"op":"run","artifact":"matmul_f64_64","inputs":[{"dtype":"float64","shape":[64,64],"data":[...]}, ...]}
+//! {"op":"stats"}            fleet metrics snapshot
+//! {"op":"ping"}             liveness check
+//! {"op":"shutdown"}         stop accepting, drain, print stats
+//! ```
+//!
+//! Replies are `{"ok":true,...}` / `{"ok":false,"error":"..."}`; a run
+//! reply carries the output tensors, the micro-batch size it rode in,
+//! the leased [`ClusterSlot`] and (sim backend) the per-request
+//! schedule summary. f64 payloads round-trip exactly: the JSON writer
+//! emits shortest-round-trip literals and the parser reads them back
+//! bit-identically, which is what lets `loadgen` cross-check a served
+//! response against a direct `Runtime` run.
+
+use crate::coordinator::OpStreamReport;
+use crate::runtime::Tensor;
+use crate::serve::metrics::StatsSnapshot;
+use crate::system::ClusterSlot;
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Default `manticore serve` port.
+pub const DEFAULT_PORT: u16 = 7433;
+
+/// Build a JSON object from key/value pairs.
+pub(crate) fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Value::Obj(m)
+}
+
+/// Encode a tensor as `{"dtype","shape","data"}`.
+pub fn tensor_to_json(t: &Tensor) -> Value {
+    obj(vec![
+        ("dtype", Value::Str(t.dtype_name().to_string())),
+        (
+            "shape",
+            Value::Arr(
+                t.shape().iter().map(|&d| Value::Num(d as f64)).collect(),
+            ),
+        ),
+        (
+            "data",
+            Value::Arr(t.to_f64_vec().into_iter().map(Value::Num).collect()),
+        ),
+    ])
+}
+
+/// Decode a `{"dtype","shape","data"}` tensor.
+pub fn tensor_from_json(v: &Value) -> Result<Tensor> {
+    let dtype = v
+        .get("dtype")
+        .and_then(Value::as_str)
+        .context("tensor missing 'dtype'")?;
+    let shape: Vec<usize> = v
+        .get("shape")
+        .and_then(Value::as_arr)
+        .context("tensor missing 'shape'")?
+        .iter()
+        .map(|d| d.as_usize().context("non-numeric shape dim"))
+        .collect::<Result<_>>()?;
+    let data = v
+        .get("data")
+        .and_then(Value::as_f64_vec)
+        .context("tensor missing 'data'")?;
+    Tensor::from_f64_vec(dtype, data, shape)
+}
+
+fn slot_to_json(s: &ClusterSlot) -> Value {
+    obj(vec![
+        ("id", Value::Num(s.id as f64)),
+        ("first_cluster", Value::Num(s.first_cluster as f64)),
+        ("n_clusters", Value::Num(s.n_clusters as f64)),
+    ])
+}
+
+fn slot_from_json(v: &Value) -> Result<ClusterSlot> {
+    let field = |k: &str| -> Result<usize> {
+        v.get(k)
+            .and_then(Value::as_usize)
+            .with_context(|| format!("slot missing '{k}'"))
+    };
+    Ok(ClusterSlot {
+        id: field("id")?,
+        first_cluster: field("first_cluster")?,
+        n_clusters: field("n_clusters")?,
+    })
+}
+
+/// One client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Execute `artifact` with the given input tensors.
+    Run { artifact: String, inputs: Vec<Tensor> },
+    /// Fleet metrics snapshot.
+    Stats,
+    /// Liveness check.
+    Ping,
+    /// Stop the server (reply acked before the listener winds down).
+    Shutdown,
+}
+
+impl Request {
+    /// Serialize as one JSON line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        let v = match self {
+            Request::Run { artifact, inputs } => obj(vec![
+                ("op", Value::Str("run".into())),
+                ("artifact", Value::Str(artifact.clone())),
+                (
+                    "inputs",
+                    Value::Arr(inputs.iter().map(tensor_to_json).collect()),
+                ),
+            ]),
+            Request::Stats => obj(vec![("op", Value::Str("stats".into()))]),
+            Request::Ping => obj(vec![("op", Value::Str("ping".into()))]),
+            Request::Shutdown => {
+                obj(vec![("op", Value::Str("shutdown".into()))])
+            }
+        };
+        json::write(&v)
+    }
+
+    /// Parse one request line.
+    pub fn parse(line: &str) -> Result<Request> {
+        let v = json::parse(line.trim())
+            .map_err(|e| anyhow!("bad request JSON: {e}"))?;
+        let op = v
+            .get("op")
+            .and_then(Value::as_str)
+            .context("request missing 'op'")?;
+        match op {
+            "run" => {
+                let artifact = v
+                    .get("artifact")
+                    .and_then(Value::as_str)
+                    .context("run request missing 'artifact'")?
+                    .to_string();
+                let inputs = v
+                    .get("inputs")
+                    .and_then(Value::as_arr)
+                    .context("run request missing 'inputs'")?
+                    .iter()
+                    .map(tensor_from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Request::Run { artifact, inputs })
+            }
+            "stats" => Ok(Request::Stats),
+            "ping" => Ok(Request::Ping),
+            "shutdown" => Ok(Request::Shutdown),
+            other => bail!("unknown request op '{other}'"),
+        }
+    }
+}
+
+/// Schedule summary of one sim-backend execution (the whole per-op
+/// table stays server-side; the wire carries the totals).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimSummary {
+    pub cycles: f64,
+    pub time_s: f64,
+    pub energy_j: f64,
+    pub fpu_util: f64,
+}
+
+impl SimSummary {
+    pub fn of(r: &OpStreamReport) -> SimSummary {
+        SimSummary {
+            cycles: r.total_cycles,
+            time_s: r.total_time_s,
+            energy_j: r.total_energy_j,
+            fpu_util: r.fpu_util,
+        }
+    }
+
+    fn to_json(self) -> Value {
+        obj(vec![
+            ("cycles", Value::Num(self.cycles)),
+            ("time_s", Value::Num(self.time_s)),
+            ("energy_j", Value::Num(self.energy_j)),
+            ("fpu_util", Value::Num(self.fpu_util)),
+        ])
+    }
+
+    fn from_json(v: &Value) -> Result<SimSummary> {
+        let field = |k: &str| -> Result<f64> {
+            v.get(k)
+                .and_then(Value::as_f64)
+                .with_context(|| format!("sim summary missing '{k}'"))
+        };
+        Ok(SimSummary {
+            cycles: field("cycles")?,
+            time_s: field("time_s")?,
+            energy_j: field("energy_j")?,
+            fpu_util: field("fpu_util")?,
+        })
+    }
+}
+
+/// A successful `run` reply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunReply {
+    pub artifact: String,
+    pub outputs: Vec<Tensor>,
+    /// Server-side service time (queue + execute) in microseconds.
+    pub server_us: f64,
+    /// Size of the micro-batch this request was grouped into.
+    pub batch: usize,
+    /// The cluster slot the request executed on.
+    pub slot: Option<ClusterSlot>,
+    /// Present iff the backend models execution (sim).
+    pub sim: Option<SimSummary>,
+}
+
+/// One server reply.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reply {
+    Run(RunReply),
+    Stats(StatsSnapshot),
+    /// Ack for ping/shutdown.
+    Ok,
+    Err(String),
+}
+
+impl Reply {
+    /// Serialize as one JSON line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        let v = match self {
+            Reply::Run(r) => {
+                let mut pairs = vec![
+                    ("ok", Value::Bool(true)),
+                    ("kind", Value::Str("run".into())),
+                    ("artifact", Value::Str(r.artifact.clone())),
+                    (
+                        "outputs",
+                        Value::Arr(
+                            r.outputs.iter().map(tensor_to_json).collect(),
+                        ),
+                    ),
+                    ("server_us", Value::Num(r.server_us)),
+                    ("batch", Value::Num(r.batch as f64)),
+                ];
+                if let Some(s) = &r.slot {
+                    pairs.push(("slot", slot_to_json(s)));
+                }
+                if let Some(s) = &r.sim {
+                    pairs.push(("sim", s.to_json()));
+                }
+                obj(pairs)
+            }
+            Reply::Stats(s) => obj(vec![
+                ("ok", Value::Bool(true)),
+                ("kind", Value::Str("stats".into())),
+                ("stats", s.to_json()),
+            ]),
+            Reply::Ok => obj(vec![
+                ("ok", Value::Bool(true)),
+                ("kind", Value::Str("ok".into())),
+            ]),
+            Reply::Err(msg) => obj(vec![
+                ("ok", Value::Bool(false)),
+                ("error", Value::Str(msg.clone())),
+            ]),
+        };
+        json::write(&v)
+    }
+
+    /// Parse one reply line.
+    pub fn parse(line: &str) -> Result<Reply> {
+        let v = json::parse(line.trim())
+            .map_err(|e| anyhow!("bad reply JSON: {e}"))?;
+        match v.get("ok") {
+            Some(Value::Bool(true)) => {}
+            Some(Value::Bool(false)) => {
+                let msg = v
+                    .get("error")
+                    .and_then(Value::as_str)
+                    .unwrap_or("unknown server error");
+                return Ok(Reply::Err(msg.to_string()));
+            }
+            _ => bail!("reply missing 'ok'"),
+        }
+        let kind = v
+            .get("kind")
+            .and_then(Value::as_str)
+            .context("reply missing 'kind'")?;
+        match kind {
+            "ok" => Ok(Reply::Ok),
+            "stats" => Ok(Reply::Stats(StatsSnapshot::from_json(
+                v.get("stats").context("stats reply missing 'stats'")?,
+            )?)),
+            "run" => {
+                let artifact = v
+                    .get("artifact")
+                    .and_then(Value::as_str)
+                    .context("run reply missing 'artifact'")?
+                    .to_string();
+                let outputs = v
+                    .get("outputs")
+                    .and_then(Value::as_arr)
+                    .context("run reply missing 'outputs'")?
+                    .iter()
+                    .map(tensor_from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Reply::Run(RunReply {
+                    artifact,
+                    outputs,
+                    server_us: v
+                        .get("server_us")
+                        .and_then(Value::as_f64)
+                        .unwrap_or(0.0),
+                    batch: v
+                        .get("batch")
+                        .and_then(Value::as_usize)
+                        .unwrap_or(1),
+                    slot: match v.get("slot") {
+                        Some(s) => Some(slot_from_json(s)?),
+                        None => None,
+                    },
+                    sim: match v.get("sim") {
+                        Some(s) => Some(SimSummary::from_json(s)?),
+                        None => None,
+                    },
+                }))
+            }
+            other => bail!("unknown reply kind '{other}'"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensors_roundtrip_bit_exact() {
+        let cases = [
+            Tensor::F64(vec![1.5e-300, -2.0, 1.0 / 3.0], vec![3]),
+            Tensor::F32(vec![0.1, -3.25e7, 1.0], vec![3]),
+            Tensor::I32(vec![i32::MIN, 0, i32::MAX], vec![3]),
+            Tensor::U32(vec![0, 7, u32::MAX], vec![3]),
+        ];
+        for t in cases {
+            let line = json::write(&tensor_to_json(&t));
+            let back =
+                tensor_from_json(&json::parse(&line).unwrap()).unwrap();
+            assert_eq!(t, back);
+        }
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        let reqs = [
+            Request::Run {
+                artifact: "matmul_f64_64".into(),
+                inputs: vec![Tensor::F64(vec![1.0, 2.0], vec![2])],
+            },
+            Request::Stats,
+            Request::Ping,
+            Request::Shutdown,
+        ];
+        for r in reqs {
+            let line = r.to_line();
+            assert!(!line.contains('\n'), "one line: {line}");
+            assert_eq!(Request::parse(&line).unwrap(), r);
+        }
+        assert!(Request::parse("{\"op\":\"dance\"}").is_err());
+        assert!(Request::parse("not json").is_err());
+    }
+
+    #[test]
+    fn replies_roundtrip() {
+        let slot = ClusterSlot { id: 2, first_cluster: 64, n_clusters: 32 };
+        let run = Reply::Run(RunReply {
+            artifact: "m".into(),
+            outputs: vec![Tensor::F64(vec![19.0], vec![1])],
+            server_us: 812.5,
+            batch: 3,
+            slot: Some(slot),
+            sim: Some(SimSummary {
+                cycles: 1e6,
+                time_s: 1e-3,
+                energy_j: 2.5e-3,
+                fpu_util: 0.8,
+            }),
+        });
+        for r in [run, Reply::Ok, Reply::Err("boom".into())] {
+            assert_eq!(Reply::parse(&r.to_line()).unwrap(), r);
+        }
+    }
+}

@@ -1,0 +1,530 @@
+//! The TCP front-end and worker pool behind `manticore serve`.
+//!
+//! Thread structure: one accept thread, one detached thread per
+//! client connection (the protocol is blocking line-JSON), and a
+//! fixed worker pool draining the micro-batch queue. Workers lease a
+//! [`crate::system::ClusterSlot`] per batch and execute through
+//! `Executable::execute_placed`, so every in-flight batch occupies a
+//! disjoint part of the simulated machine and each request's reply
+//! carries its own schedule report. Executables are compiled once per
+//! artifact into a shared cache.
+//!
+//! Shutdown: a `shutdown` request (or [`Server::shutdown`]) flips the
+//! stop flag, stops the queue (drain-then-end), and unblocks the
+//! accept loop with a self-connection; [`Server::wait`] joins the
+//! accept and worker threads and returns the final stats snapshot.
+
+use crate::config::Config;
+use crate::runtime::sim::SimBackend;
+use crate::runtime::{
+    backend_by_name, check_inputs, load_manifest, ArtifactMeta, Backend,
+    Executable, Tensor,
+};
+use crate::serve::batch::{BatchQueue, Pending, RunDone};
+use crate::serve::metrics::{Metrics, StatsSnapshot};
+use crate::serve::placement::SlotPool;
+use crate::serve::protocol::{
+    Reply, Request, RunReply, SimSummary, DEFAULT_PORT,
+};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Server configuration (the `manticore serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks an ephemeral port (see
+    /// [`Server::addr`]).
+    pub addr: String,
+    pub artifacts_dir: String,
+    /// Backend registry name ("native", "sim", ...).
+    pub backend: String,
+    /// Micro-batching window [ms].
+    pub window_ms: u64,
+    /// Micro-batch size cap.
+    pub max_batch: usize,
+    /// Clusters per placement slot.
+    pub slot_clusters: usize,
+    /// Worker threads; 0 = one per slot, capped at 8.
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: format!("127.0.0.1:{DEFAULT_PORT}"),
+            artifacts_dir: "artifacts".to_string(),
+            backend: "native".to_string(),
+            window_ms: 2,
+            max_batch: 8,
+            slot_clusters: 32,
+            workers: 0,
+        }
+    }
+}
+
+/// Build the serving backend: `sim` is constructed from the active
+/// config bundle (`--preset`/`--config` shape the machine it schedules
+/// on), everything else resolves through the registry — the same rule
+/// the CLI `open_runtime` applies.
+pub fn build_backend(name: &str, cfg: &Config) -> Result<Box<dyn Backend>> {
+    if name == "sim" {
+        Ok(Box::new(SimBackend::from_config(cfg)))
+    } else {
+        backend_by_name(name)
+    }
+}
+
+/// State shared by every server thread.
+struct Shared {
+    backend: Box<dyn Backend>,
+    manifest: BTreeMap<String, ArtifactMeta>,
+    dir: PathBuf,
+    /// Compile-once executable cache, keyed by artifact.
+    cache: Mutex<BTreeMap<String, Arc<dyn Executable>>>,
+    queue: BatchQueue,
+    pool: SlotPool,
+    metrics: Metrics,
+    stopping: AtomicBool,
+    addr: SocketAddr,
+}
+
+impl Shared {
+    /// Fetch (or compile exactly once) an artifact's executable.
+    fn executable(&self, name: &str) -> Result<Arc<dyn Executable>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(e) = cache.get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("[{}] reading {}", self.backend.name(), path.display())
+        })?;
+        let exe: Arc<dyn Executable> =
+            Arc::from(self.backend.compile(name, &text)?);
+        cache.insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    fn stats(&self) -> StatsSnapshot {
+        self.metrics.snapshot(
+            self.backend.name(),
+            self.pool.occupancy(),
+            self.pool.n_slots(),
+            self.pool.slot_clusters(),
+        )
+    }
+
+    /// Idempotent shutdown trigger: stop the queue (drain-then-end)
+    /// and unblock the accept loop with a self-connection.
+    fn begin_shutdown(&self) {
+        if self.stopping.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.queue.stop();
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// A running server (handle).
+pub struct Server {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind, spawn the worker pool and the accept thread.
+    pub fn start(cfg: &ServeConfig, sys: &Config) -> Result<Server> {
+        let backend = build_backend(&cfg.backend, sys)?;
+        let dir = PathBuf::from(&cfg.artifacts_dir);
+        let manifest = load_manifest(&dir, backend.name())?;
+        let pool = SlotPool::new(&sys.system, cfg.slot_clusters);
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        let n_workers = if cfg.workers == 0 {
+            pool.n_slots().min(8)
+        } else {
+            cfg.workers
+        }
+        .max(1);
+        let shared = Arc::new(Shared {
+            backend,
+            manifest,
+            dir,
+            cache: Mutex::new(BTreeMap::new()),
+            queue: BatchQueue::new(
+                Duration::from_millis(cfg.window_ms),
+                cfg.max_batch,
+            ),
+            pool,
+            metrics: Metrics::new(),
+            stopping: AtomicBool::new(false),
+            addr,
+        });
+        let workers = (0..n_workers)
+            .map(|_| {
+                let sh = shared.clone();
+                std::thread::spawn(move || worker_loop(&sh))
+            })
+            .collect();
+        let accept = {
+            let sh = shared.clone();
+            std::thread::spawn(move || accept_loop(&sh, listener))
+        };
+        Ok(Server { shared, accept: Some(accept), workers })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.shared.backend.name()
+    }
+
+    pub fn platform(&self) -> String {
+        self.shared.backend.platform()
+    }
+
+    pub fn stats(&self) -> StatsSnapshot {
+        self.shared.stats()
+    }
+
+    /// Trigger shutdown programmatically (same path as the protocol's
+    /// `shutdown` request).
+    pub fn shutdown(&self) {
+        self.shared.begin_shutdown();
+    }
+
+    /// Block until the server shuts down; returns the final stats.
+    pub fn wait(mut self) -> StatsSnapshot {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        self.shared.stats()
+    }
+}
+
+fn accept_loop(shared: &Arc<Shared>, listener: TcpListener) {
+    for stream in listener.incoming() {
+        if shared.stopping.load(Ordering::SeqCst) {
+            break;
+        }
+        match stream {
+            Ok(s) => {
+                let sh = shared.clone();
+                std::thread::spawn(move || handle_conn(&sh, s));
+            }
+            Err(_) => {
+                if shared.stopping.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// One blocking line-JSON session.
+fn handle_conn(shared: &Arc<Shared>, stream: TcpStream) {
+    let reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match Request::parse(&line) {
+            Err(e) => {
+                shared.metrics.record_error();
+                Reply::Err(format!("{e}"))
+            }
+            Ok(Request::Ping) => Reply::Ok,
+            Ok(Request::Stats) => Reply::Stats(shared.stats()),
+            Ok(Request::Shutdown) => {
+                // Ack first so the client sees the reply, then stop.
+                let _ = writeln!(writer, "{}", Reply::Ok.to_line());
+                shared.begin_shutdown();
+                return;
+            }
+            Ok(Request::Run { artifact, inputs }) => {
+                run_request(shared, artifact, inputs)
+            }
+        };
+        if writeln!(writer, "{}", reply.to_line()).is_err() {
+            break;
+        }
+    }
+}
+
+/// Validate, enqueue, and wait for the worker's result.
+fn run_request(
+    shared: &Shared,
+    artifact: String,
+    inputs: Vec<Tensor>,
+) -> Reply {
+    let Some(meta) = shared.manifest.get(&artifact) else {
+        shared.metrics.record_error();
+        return Reply::Err(format!(
+            "unknown artifact '{artifact}' (not in manifest)"
+        ));
+    };
+    if let Err(e) = check_inputs(shared.backend.name(), meta, &inputs) {
+        shared.metrics.record_error();
+        return Reply::Err(format!("{e}"));
+    }
+    let (tx, rx) = mpsc::channel();
+    let pending = Pending {
+        artifact: artifact.clone(),
+        inputs,
+        enqueued: Instant::now(),
+        reply: tx,
+    };
+    if !shared.queue.push(pending) {
+        return Reply::Err("server is shutting down".to_string());
+    }
+    match rx.recv() {
+        Ok(Ok(done)) => Reply::Run(RunReply {
+            artifact,
+            outputs: done.outputs,
+            server_us: done.server_us,
+            batch: done.batch,
+            slot: Some(done.slot),
+            sim: done.report.as_ref().map(SimSummary::of),
+        }),
+        Ok(Err(msg)) => Reply::Err(msg),
+        Err(_) => {
+            Reply::Err("worker dropped the request (server stopping)".into())
+        }
+    }
+}
+
+/// Worker: drain micro-batches, lease a slot per batch, execute each
+/// request on it, reply per request.
+fn worker_loop(shared: &Shared) {
+    while let Some(batch) = shared.queue.pop_batch() {
+        if batch.is_empty() {
+            continue;
+        }
+        shared.metrics.record_batch(batch.len());
+        let n = batch.len();
+        let exe = match shared.executable(&batch[0].artifact) {
+            Ok(e) => e,
+            Err(e) => {
+                let msg = format!("{e}");
+                for p in batch {
+                    shared.metrics.record_error();
+                    let _ = p.reply.send(Err(msg.clone()));
+                }
+                continue;
+            }
+        };
+        let lease = shared.pool.lease();
+        for p in batch {
+            match exe.execute_placed(&p.inputs, Some(&lease.slot)) {
+                Ok(out) => {
+                    let server_s = p.enqueued.elapsed().as_secs_f64();
+                    shared
+                        .metrics
+                        .record_request(server_s, out.report.as_ref());
+                    let _ = p.reply.send(Ok(RunDone {
+                        outputs: out.outputs,
+                        report: out.report,
+                        slot: lease.slot,
+                        batch: n,
+                        server_us: server_s * 1e6,
+                    }));
+                }
+                Err(e) => {
+                    shared.metrics.record_error();
+                    let _ = p.reply.send(Err(format!("{e}")));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Runtime;
+    use crate::util::rng::Rng;
+
+    fn artifacts_present() -> bool {
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            true
+        } else {
+            eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+            false
+        }
+    }
+
+    fn ephemeral(backend: &str) -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            backend: backend.to_string(),
+            ..ServeConfig::default()
+        }
+    }
+
+    /// Line-JSON client helper.
+    struct Client {
+        reader: BufReader<TcpStream>,
+        writer: TcpStream,
+    }
+
+    impl Client {
+        fn connect(addr: SocketAddr) -> Client {
+            let stream = TcpStream::connect(addr).expect("connect");
+            Client {
+                reader: BufReader::new(stream.try_clone().unwrap()),
+                writer: stream,
+            }
+        }
+
+        fn roundtrip(&mut self, req: &Request) -> Reply {
+            writeln!(self.writer, "{}", req.to_line()).unwrap();
+            let mut line = String::new();
+            self.reader.read_line(&mut line).unwrap();
+            Reply::parse(&line).expect("parsable reply")
+        }
+    }
+
+    #[test]
+    fn serves_requests_and_matches_direct_runtime() {
+        if !artifacts_present() {
+            return;
+        }
+        let cfg = Config::default();
+        let server =
+            Server::start(&ephemeral("native"), &cfg).expect("server start");
+        let addr = server.addr();
+        let mut client = Client::connect(addr);
+        assert_eq!(client.roundtrip(&Request::Ping), Reply::Ok);
+
+        let mut rng = Rng::new(42);
+        let inputs = vec![
+            Tensor::F64(rng.normal_vec(64 * 64), vec![64, 64]),
+            Tensor::F64(rng.normal_vec(64 * 64), vec![64, 64]),
+        ];
+        let reply = client.roundtrip(&Request::Run {
+            artifact: "matmul_f64_64".into(),
+            inputs: inputs.clone(),
+        });
+        let run = match reply {
+            Reply::Run(r) => r,
+            other => panic!("expected run reply, got {other:?}"),
+        };
+        assert_eq!(run.artifact, "matmul_f64_64");
+        assert!(run.slot.is_some(), "reply must carry the leased slot");
+        assert!(run.sim.is_none(), "native backend has no schedule");
+
+        // Bit-exact against a direct Runtime run (JSON f64 literals
+        // round-trip exactly).
+        let mut rt = Runtime::with_backend(
+            "artifacts",
+            backend_by_name("native").unwrap(),
+        )
+        .unwrap();
+        let want = rt.execute("matmul_f64_64", &inputs).unwrap();
+        assert_eq!(run.outputs, want);
+
+        // Error paths: unknown artifact, bad shapes, garbage line.
+        let r = client.roundtrip(&Request::Run {
+            artifact: "nope".into(),
+            inputs: vec![],
+        });
+        assert!(matches!(r, Reply::Err(ref m) if m.contains("unknown artifact")), "{r:?}");
+        let r = client.roundtrip(&Request::Run {
+            artifact: "matmul_f64_64".into(),
+            inputs: vec![Tensor::F64(vec![0.0], vec![1])],
+        });
+        assert!(matches!(r, Reply::Err(_)), "{r:?}");
+        writeln!(client.writer, "garbage").unwrap();
+        let mut line = String::new();
+        client.reader.read_line(&mut line).unwrap();
+        assert!(matches!(Reply::parse(&line).unwrap(), Reply::Err(_)));
+
+        // Stats reflect the one completed request.
+        let stats = match client.roundtrip(&Request::Stats) {
+            Reply::Stats(s) => s,
+            other => panic!("expected stats reply, got {other:?}"),
+        };
+        assert_eq!(stats.requests, 1);
+        // unknown artifact + bad shape + garbage line.
+        assert_eq!(stats.errors, 3);
+        assert_eq!(stats.backend, "native");
+
+        // Shutdown is acked, then the server winds down.
+        assert_eq!(client.roundtrip(&Request::Shutdown), Reply::Ok);
+        let final_stats = server.wait();
+        assert_eq!(final_stats.requests, 1);
+    }
+
+    #[test]
+    fn sim_backend_replies_carry_slot_scoped_reports() {
+        if !artifacts_present() {
+            return;
+        }
+        let cfg = Config::default();
+        let server =
+            Server::start(&ephemeral("sim"), &cfg).expect("server start");
+        let mut client = Client::connect(server.addr());
+        let mut rng = Rng::new(7);
+        let inputs = vec![
+            Tensor::F64(rng.normal_vec(64 * 64), vec![64, 64]),
+            Tensor::F64(rng.normal_vec(64 * 64), vec![64, 64]),
+        ];
+        let reply = client.roundtrip(&Request::Run {
+            artifact: "matmul_f64_64".into(),
+            inputs: inputs.clone(),
+        });
+        let run = match reply {
+            Reply::Run(r) => r,
+            other => panic!("expected run reply, got {other:?}"),
+        };
+        let sim = run.sim.expect("sim backend must attach a report");
+        assert!(sim.cycles > 0.0 && sim.energy_j > 0.0);
+        let slot = run.slot.expect("slot");
+        assert_eq!(slot.n_clusters, 32);
+
+        // The report is priced on the 32-cluster slot, not the whole
+        // machine: compare with a direct whole-machine sim run.
+        let mut rt =
+            Runtime::with_backend("artifacts", backend_by_name("sim").unwrap())
+                .unwrap();
+        let direct = rt.execute("matmul_f64_64", &inputs).unwrap();
+        assert_eq!(run.outputs, direct, "sim numerics = native numerics");
+        let whole = rt.last_report("matmul_f64_64").unwrap();
+        assert!(
+            sim.cycles > whole.total_cycles,
+            "slot-scoped schedule ({} cycles) must be slower than the \
+             whole machine ({})",
+            sim.cycles,
+            whole.total_cycles
+        );
+
+        assert_eq!(client.roundtrip(&Request::Shutdown), Reply::Ok);
+        let stats = server.wait();
+        assert_eq!(stats.requests, 1);
+        assert!(stats.j_per_request > 0.0, "sim J/request in fleet stats");
+        assert!(stats.occupancy > 0.0);
+    }
+}

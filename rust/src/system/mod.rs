@@ -10,6 +10,39 @@ use crate::interconnect::{Tree, TreeConfig};
 use crate::power::DvfsModel;
 use crate::roofline::Roofline;
 
+/// A contiguous lease of clusters on the machine — the unit of
+/// placement the serve subsystem hands to concurrent requests so they
+/// occupy *disjoint* parts of the simulated package. Slot geometry is
+/// derived from a [`SystemConfig`] (see [`SystemConfig::slice_clusters`]
+/// for the sub-machine an op stream is priced on).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClusterSlot {
+    /// Slot index in the allocator's partition of the machine.
+    pub id: usize,
+    /// First global cluster id covered by this slot.
+    pub first_cluster: usize,
+    /// Number of clusters leased.
+    pub n_clusters: usize,
+}
+
+impl ClusterSlot {
+    /// Last global cluster id covered (inclusive).
+    pub fn last_cluster(&self) -> usize {
+        self.first_cluster + self.n_clusters.max(1) - 1
+    }
+
+    /// Whether two slots share any cluster.
+    pub fn overlaps(&self, other: &ClusterSlot) -> bool {
+        self.first_cluster <= other.last_cluster()
+            && other.first_cluster <= self.last_cluster()
+    }
+
+    /// The chiplet the slot starts on, under a tree geometry.
+    pub fn chiplet(&self, tree: &TreeConfig) -> usize {
+        tree.cluster_coords(self.first_cluster).0
+    }
+}
+
 /// Full-system configuration (defaults = the paper's Manticore).
 #[derive(Debug, Clone, Copy)]
 pub struct SystemConfig {
@@ -94,6 +127,45 @@ impl SystemConfig {
     pub fn tree_model(&self) -> Tree {
         Tree::new(self.tree)
     }
+
+    /// The sub-machine an `n_clusters`-cluster slot of this system
+    /// behaves as: the quadrant-tree levels are re-factored to span
+    /// exactly the slot (greedily, preserving each level's geometry
+    /// cap), and the slot receives its *proportional share* of the
+    /// package's HBM bandwidth and memory capacities, so co-resident
+    /// slots never double-count resources. Peak flops, roofline and
+    /// power all follow from the reduced core count.
+    pub fn slice_clusters(&self, n_clusters: usize) -> SystemConfig {
+        let full = self.tree.total_clusters();
+        let n = n_clusters.clamp(1, full);
+        if n == full {
+            return *self;
+        }
+        // Greedy per-level factoring: each level takes the largest
+        // divisor of the remaining cluster count not exceeding the full
+        // machine's level width.
+        fn take(rem: &mut usize, cap: usize) -> usize {
+            let mut lvl = cap.max(1).min(*rem);
+            while lvl > 1 && *rem % lvl != 0 {
+                lvl -= 1;
+            }
+            *rem /= lvl;
+            lvl
+        }
+        let mut c = *self;
+        let mut rem = n;
+        c.tree.clusters_per_s1 = take(&mut rem, self.tree.clusters_per_s1);
+        c.tree.s1_per_s2 = take(&mut rem, self.tree.s1_per_s2);
+        c.tree.s2_per_s3 = take(&mut rem, self.tree.s2_per_s3);
+        c.tree.s3_per_chiplet = take(&mut rem, self.tree.s3_per_chiplet);
+        c.tree.chiplets = rem.max(1);
+        let frac = n as f64 / full as f64;
+        c.tree.hbm_per_chiplet =
+            self.tree.aggregate_hbm() * frac / c.tree.chiplets as f64;
+        c.l2_bytes = ((self.l2_bytes as f64) * frac).max(1.0) as usize;
+        c.hbm_bytes = ((self.hbm_bytes as f64) * frac).max(1.0) as usize;
+        c
+    }
 }
 
 /// Paper headline numbers, computed (not hard-coded) from the config —
@@ -166,6 +238,46 @@ mod tests {
     fn hbm_aggregate_1_tb_per_s() {
         let p = peaks(&SystemConfig::default());
         assert!((p.hbm_bw_nominal / 1.024e12 - 1.0).abs() < 0.01);
+    }
+
+    /// Slot slicing: cores and HBM bandwidth scale proportionally, so
+    /// the sum over disjoint slots conserves the package's resources.
+    #[test]
+    fn slice_clusters_scales_cores_and_bandwidth() {
+        let c = SystemConfig::default();
+        let full = c.tree.total_clusters();
+        assert_eq!(full, 512);
+        for n in [1usize, 4, 8, 32, 128, 512] {
+            let s = c.slice_clusters(n);
+            assert_eq!(s.tree.total_clusters(), n, "slice {n}");
+            assert_eq!(s.total_cores(), n * c.cores_per_cluster);
+            let bw_frac = s.hbm_bw(1.0e9) / c.hbm_bw(1.0e9);
+            let want = n as f64 / full as f64;
+            assert!(
+                (bw_frac - want).abs() < 1e-12,
+                "slice {n}: bw frac {bw_frac} want {want}"
+            );
+        }
+        // Full-size slice is the identity.
+        assert_eq!(c.slice_clusters(512).l2_bytes, c.l2_bytes);
+        // Peak flops scale linearly with the slice.
+        let s = c.slice_clusters(32);
+        assert!((s.peak_dp(0.9) / c.peak_dp(0.9) - 32.0 / 512.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cluster_slots_overlap_and_coords() {
+        let a = ClusterSlot { id: 0, first_cluster: 0, n_clusters: 32 };
+        let b = ClusterSlot { id: 1, first_cluster: 32, n_clusters: 32 };
+        let c = ClusterSlot { id: 9, first_cluster: 16, n_clusters: 32 };
+        assert!(!a.overlaps(&b) && !b.overlaps(&a));
+        assert!(a.overlaps(&c) && c.overlaps(&b));
+        assert_eq!(a.last_cluster(), 31);
+        let tree = SystemConfig::default().tree;
+        // 128 clusters per chiplet: slot starting at 128 is chiplet 1.
+        let d = ClusterSlot { id: 4, first_cluster: 128, n_clusters: 32 };
+        assert_eq!(a.chiplet(&tree), 0);
+        assert_eq!(d.chiplet(&tree), 1);
     }
 
     #[test]

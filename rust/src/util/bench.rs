@@ -210,6 +210,14 @@ impl Report {
         s
     }
 
+    /// Record an externally-measured sample (e.g. `manticore loadgen`
+    /// request latencies measured over the wire) so non-closure
+    /// benchmarks share the same JSON schema — and therefore the same
+    /// `manticore bench-diff` regression tooling.
+    pub fn push_sample(&mut self, s: Sample) {
+        self.samples.push(s);
+    }
+
     /// Print a table and record it for the JSON report.
     pub fn table(&mut self, t: Table) {
         t.print();

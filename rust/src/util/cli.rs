@@ -1,7 +1,34 @@
 //! Minimal CLI argument parser (offline stand-in for clap): subcommands
 //! plus `--key value` / `--flag` options.
+//!
+//! Typed getters return [`CliError`] (not a panic) on malformed values,
+//! so a bad flag prints a one-line usage message instead of a
+//! backtrace — `manticore serve` workers must never abort on user
+//! input.
 
 use std::collections::BTreeMap;
+use std::fmt;
+
+/// A malformed `--key value` option: which key, what it expects, and
+/// what the user actually passed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CliError {
+    pub key: String,
+    pub want: &'static str,
+    pub got: String,
+}
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "--{} expects {}, got '{}'",
+            self.key, self.want, self.got
+        )
+    }
+}
+
+impl std::error::Error for CliError {}
 
 #[derive(Debug, Clone, Default)]
 pub struct Args {
@@ -22,20 +49,30 @@ impl Args {
         self.get(key).unwrap_or(default).to_string()
     }
 
-    pub fn get_usize(&self, key: &str, default: usize) -> usize {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| {
-                panic!("--{key} expects an integer, got '{v}'")
-            }))
-            .unwrap_or(default)
+    /// `--key` as an integer; `default` when absent, `CliError` when
+    /// present but unparsable.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError {
+                key: key.to_string(),
+                want: "an integer",
+                got: v.to_string(),
+            }),
+        }
     }
 
-    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| {
-                panic!("--{key} expects a number, got '{v}'")
-            }))
-            .unwrap_or(default)
+    /// `--key` as a number; `default` when absent, `CliError` when
+    /// present but unparsable.
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError {
+                key: key.to_string(),
+                want: "a number",
+                got: v.to_string(),
+            }),
+        }
     }
 
     pub fn has_flag(&self, name: &str) -> bool {
@@ -94,9 +131,22 @@ mod tests {
     #[test]
     fn typed_getters() {
         let (_, args) = parse(&v(&["x", "--n", "128", "--lr", "0.05"]));
-        assert_eq!(args.get_usize("n", 1), 128);
-        assert_eq!(args.get_f64("lr", 0.1), 0.05);
-        assert_eq!(args.get_usize("missing", 7), 7);
+        assert_eq!(args.get_usize("n", 1).unwrap(), 128);
+        assert_eq!(args.get_f64("lr", 0.1).unwrap(), 0.05);
+        assert_eq!(args.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    /// Malformed values are a typed error naming the key — not a panic.
+    #[test]
+    fn typed_getters_error_instead_of_panicking() {
+        let (_, args) = parse(&v(&["x", "--n", "lots", "--lr", "fast"]));
+        let err = args.get_usize("n", 1).unwrap_err();
+        assert_eq!(err.key, "n");
+        assert_eq!(err.got, "lots");
+        let msg = format!("{err}");
+        assert!(msg.contains("--n expects an integer"), "{msg}");
+        let err = args.get_f64("lr", 0.1).unwrap_err();
+        assert_eq!(format!("{err}"), "--lr expects a number, got 'fast'");
     }
 
     #[test]

@@ -1,0 +1,189 @@
+//! Concurrent-execution guarantees behind the serve subsystem: one
+//! compiled executable shared by many threads must (a) produce
+//! bit-identical outputs to a single-threaded run on both the native
+//! and sim backends, and (b) on the sim backend, hand every caller the
+//! schedule report of *its own* call (per-request independence), priced
+//! on the caller's own cluster slot.
+
+use manticore::runtime::{backend_by_name, Backend, Executable};
+use manticore::runtime::{Runtime, Tensor};
+use manticore::system::ClusterSlot;
+use manticore::util::rng::Rng;
+
+const N: usize = 24;
+
+/// A f64 [N,N]x[N,N] matmul module (the text mirrors what the L2
+/// lowering emits), so these tests need no artifacts directory.
+fn matmul_hlo() -> String {
+    format!(
+        "HloModule jit_fn\n\
+         ENTRY main.5 {{\n\
+         \x20 Arg_0.1 = f64[{n},{n}]{{1,0}} parameter(0)\n\
+         \x20 Arg_1.2 = f64[{n},{n}]{{1,0}} parameter(1)\n\
+         \x20 dot.3 = f64[{n},{n}]{{1,0}} dot(Arg_0.1, Arg_1.2), \
+         lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+         \x20 ROOT tuple.4 = (f64[{n},{n}]{{1,0}}) tuple(dot.3)\n\
+         }}\n",
+        n = N
+    )
+}
+
+/// Per-thread deterministic inputs.
+fn inputs_for(thread: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(1000 + thread);
+    vec![
+        Tensor::F64(rng.normal_vec(N * N), vec![N, N]),
+        Tensor::F64(rng.normal_vec(N * N), vec![N, N]),
+    ]
+}
+
+fn compile(backend: &str) -> Box<dyn Executable> {
+    backend_by_name(backend)
+        .unwrap()
+        .compile("mm", &matmul_hlo())
+        .unwrap()
+}
+
+const THREADS: u64 = 4;
+const ITERS: usize = 6;
+
+/// Native backend: 4 threads hammer one executable; every output is
+/// bit-identical to the single-threaded reference for that thread's
+/// inputs.
+#[test]
+fn native_shared_executable_is_bit_identical_across_threads() {
+    let exe = compile("native");
+    let reference: Vec<Vec<Tensor>> = (0..THREADS)
+        .map(|t| exe.execute(&inputs_for(t)).unwrap())
+        .collect();
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let (exe, want) = (&exe, &reference[t as usize]);
+            s.spawn(move || {
+                let inputs = inputs_for(t);
+                for _ in 0..ITERS {
+                    let got = exe.execute(&inputs).unwrap();
+                    assert_eq!(&got, want, "thread {t}: outputs diverged");
+                }
+            });
+        }
+    });
+}
+
+/// Sim backend: same bit-exactness, plus per-request report
+/// independence — each thread executes on its *own* slot size, so a
+/// cross-thread report mix-up would show up as a wrong cycle count.
+#[test]
+fn sim_shared_executable_reports_are_per_request() {
+    let exe = compile("sim");
+    // Per-thread slot: disjoint ranges, *different* sizes (8/16/32/64
+    // clusters), so every thread expects a different schedule.
+    let slot_for = |t: u64| ClusterSlot {
+        id: t as usize,
+        first_cluster: 128 * t as usize,
+        n_clusters: 8 << t,
+    };
+    let expected: Vec<(Vec<Tensor>, f64)> = (0..THREADS)
+        .map(|t| {
+            let out = exe
+                .execute_placed(&inputs_for(t), Some(&slot_for(t)))
+                .unwrap();
+            let rep = out.report.expect("sim report");
+            assert!(rep.total_cycles > 0.0);
+            (out.outputs, rep.total_cycles)
+        })
+        .collect();
+    // Different slot sizes must price differently (guards the test's
+    // own sensitivity).
+    assert!(
+        expected[0].1 > expected[3].1,
+        "8-cluster slot ({}) must be slower than 64-cluster ({})",
+        expected[0].1,
+        expected[3].1
+    );
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let (exe, want) = (&exe, &expected[t as usize]);
+            s.spawn(move || {
+                let inputs = inputs_for(t);
+                let slot = slot_for(t);
+                for _ in 0..ITERS {
+                    let out =
+                        exe.execute_placed(&inputs, Some(&slot)).unwrap();
+                    assert_eq!(out.outputs, want.0, "thread {t}: outputs");
+                    let rep = out.report.expect("per-request report");
+                    assert_eq!(
+                        rep.total_cycles, want.1,
+                        "thread {t}: got another request's schedule"
+                    );
+                }
+            });
+        }
+    });
+}
+
+/// Native and sim agree bit-exactly with each other under concurrency
+/// (same evaluator numerics through both paths).
+#[test]
+fn sim_and_native_agree_under_concurrency() {
+    let native = compile("native");
+    let sim = compile("sim");
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let (native, sim) = (&native, &sim);
+            s.spawn(move || {
+                let inputs = inputs_for(t);
+                let a = native.execute(&inputs).unwrap();
+                let b = sim.execute(&inputs).unwrap();
+                assert_eq!(a, b, "thread {t}");
+            });
+        }
+    });
+}
+
+/// The artifact path end to end: a shared `Runtime`-compiled artifact
+/// executable behaves identically from many threads (skips without
+/// artifacts/).
+#[test]
+fn artifact_executables_are_thread_safe() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        return;
+    }
+    for backend in ["native", "sim"] {
+        let text =
+            std::fs::read_to_string("artifacts/matmul_f64_64.hlo.txt")
+                .unwrap();
+        let exe = backend_by_name(backend)
+            .unwrap()
+            .compile("matmul_f64_64", &text)
+            .unwrap();
+        let mut rng = Rng::new(3);
+        let inputs = vec![
+            Tensor::F64(rng.normal_vec(64 * 64), vec![64, 64]),
+            Tensor::F64(rng.normal_vec(64 * 64), vec![64, 64]),
+        ];
+        let want = exe.execute(&inputs).unwrap();
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let (exe, want, inputs) = (&exe, &want, &inputs);
+                s.spawn(move || {
+                    let got = exe.execute(inputs).unwrap();
+                    assert_eq!(&got, want, "{backend} thread {t}");
+                });
+            }
+        });
+        // And the Runtime wrapper's placed path with a real slot.
+        let mut rt =
+            Runtime::with_backend("artifacts", backend_by_name(backend).unwrap())
+                .unwrap();
+        let slot = ClusterSlot { id: 0, first_cluster: 0, n_clusters: 32 };
+        let out = rt
+            .execute_placed("matmul_f64_64", &inputs, Some(&slot))
+            .unwrap();
+        assert_eq!(out.outputs, want);
+        if backend == "sim" {
+            assert!(out.report.is_some());
+        }
+    }
+}
