@@ -10,7 +10,7 @@ PYTHON ?= python3
 BENCH_OUT ?= bench-results
 
 .PHONY: help build test artifacts fmt fmt-check clippy bench bench-smoke \
-        serve-smoke pytest clean
+        perf serve-smoke pytest clean
 
 help:
 	@echo "targets:"
@@ -21,9 +21,14 @@ help:
 	@echo "  fmt-check    cargo fmt --check"
 	@echo "  clippy       cargo clippy --all-targets -- -D warnings"
 	@echo "  bench        run every bench target"
-	@echo "  bench-smoke  perf_hotpath + ablations with --smoke, JSON to $(BENCH_OUT)/;"
-	@echo "               diffs against the previous run's JSON (>10% regressions"
-	@echo "               print a non-fatal warning table, saved as *.diff.md)"
+	@echo "  bench-smoke  perf_hotpath + native_exec + ablations with --smoke,"
+	@echo "               JSON to $(BENCH_OUT)/; each report is diffed against the"
+	@echo "               previous run. The hotpath benches (perf_hotpath,"
+	@echo "               native_exec) GATE: >25% mean-time regressions fail the"
+	@echo "               target; ablations stays a non-fatal 10% warning"
+	@echo "  perf         full (non-smoke) native_exec bench: plan-compile time"
+	@echo "               and exec time as separate JSON samples in"
+	@echo "               $(BENCH_OUT)/native_exec.json"
 	@echo "  serve-smoke  start 'manticore serve --backend sim', fire a concurrent"
 	@echo "               loadgen burst, write the latency report to"
 	@echo "               $(BENCH_OUT)/serve_loadgen.json, shut the server down"
@@ -52,27 +57,57 @@ bench:
 	$(CARGO) bench
 
 # Snapshot the previous run's JSON first, then diff the fresh reports
-# against it with `manticore bench-diff` (non-fatal: smoke timings are
-# noisy; the table is kept as $(BENCH_OUT)/<bench>.diff.md).
+# against it with `manticore bench-diff` (tables kept as
+# $(BENCH_OUT)/<bench>.diff.md). The hotpath benches (perf_hotpath,
+# native_exec) are a GATING check: a >25 % mean-time regression vs the
+# cached previous run fails the target — and the CI job. ablations
+# stays a non-fatal 10 % warning (its smoke timings are noisy).
 bench-smoke:
 	mkdir -p $(BENCH_OUT)
-	@for f in perf_hotpath ablations; do \
+	@for f in perf_hotpath native_exec ablations; do \
 	  if [ -f $(BENCH_OUT)/$$f.json ]; then \
 	    cp $(BENCH_OUT)/$$f.json $(BENCH_OUT)/$$f.prev.json; \
 	  fi; \
 	done
 	$(CARGO) bench --bench perf_hotpath -- --smoke --json $(BENCH_OUT)/perf_hotpath.json
+	$(CARGO) bench --bench native_exec -- --smoke --json $(BENCH_OUT)/native_exec.json
 	$(CARGO) bench --bench ablations -- --smoke --json $(BENCH_OUT)/ablations.json
-	@for f in perf_hotpath ablations; do \
+	@for f in perf_hotpath native_exec; do \
 	  if [ -f $(BENCH_OUT)/$$f.prev.json ]; then \
 	    $(CARGO) run --release --quiet --bin manticore -- bench-diff \
 	      $(BENCH_OUT)/$$f.prev.json $(BENCH_OUT)/$$f.json \
-	      --md $(BENCH_OUT)/$$f.diff.md || true; \
+	      --threshold 0.25 --fail-on-regression \
+	      --md $(BENCH_OUT)/$$f.diff.md; \
+	    rc=$$?; \
+	    if [ $$rc -eq 3 ]; then \
+	      cp $(BENCH_OUT)/$$f.json $(BENCH_OUT)/$$f.rejected.json; \
+	      mv $(BENCH_OUT)/$$f.prev.json $(BENCH_OUT)/$$f.json; \
+	      echo "$$f: perf regression gate failed; baseline restored" \
+	           "(regressed run kept as $$f.rejected.json)"; \
+	      exit 1; \
+	    elif [ $$rc -ne 0 ]; then \
+	      echo "$$f: bench-diff failed (exit $$rc — not a perf regression)"; \
+	      exit 1; \
+	    fi; \
 	    rm -f $(BENCH_OUT)/$$f.prev.json; \
 	  else \
 	    echo "(no previous $$f.json — skipping diff)"; \
 	  fi; \
 	done
+	@if [ -f $(BENCH_OUT)/ablations.prev.json ]; then \
+	  $(CARGO) run --release --quiet --bin manticore -- bench-diff \
+	    $(BENCH_OUT)/ablations.prev.json $(BENCH_OUT)/ablations.json \
+	    --md $(BENCH_OUT)/ablations.diff.md || true; \
+	  rm -f $(BENCH_OUT)/ablations.prev.json; \
+	else \
+	  echo "(no previous ablations.json — skipping diff)"; \
+	fi
+
+# Full-length plan/exec perf run: plan-compile time and execution time
+# land as separate JSON samples (diffable with `manticore bench-diff`).
+perf:
+	mkdir -p $(BENCH_OUT)
+	$(CARGO) bench --bench native_exec -- --json $(BENCH_OUT)/native_exec.json
 
 # Serve smoke: background server (sim backend, so replies carry
 # per-request energy), a concurrent closed-loop burst, JSON latency

@@ -1,0 +1,113 @@
+//! native_exec bench: the compiled-plan execution path of
+//! `NativeBackend` (DESIGN.md §2c). Emits *separate* JSON samples for
+//! plan-compile time and execution time, so `make perf` /
+//! `bench-diff` track the two independently, plus the tree-walk
+//! reference path on the same artifacts — the reference/planned ratio
+//! is the speedup the plan + tiled parallel GEMM buy on the dot-heavy
+//! L2 hot path (the software analogue of the paper's keep-the-FPU-fed
+//! argument: strip per-op issue overhead, stream the operands).
+//!
+//! `--smoke` caps iterations (CI smoke job); `--json <path>` writes
+//! the sample report uploaded as a CI artifact and gated by
+//! `manticore bench-diff --fail-on-regression`.
+
+use manticore::runtime::native::parser::parse_module;
+use manticore::runtime::native::{
+    native_threads, plan, set_native_threads, NativeBackend,
+};
+use manticore::runtime::{inputs_for_meta, load_manifest};
+use manticore::util::bench::{fmt_ns, BenchOpts, Report};
+use std::path::Path;
+
+fn main() {
+    let mut rep = Report::new(BenchOpts::from_env_args());
+    let default_threads = native_threads();
+    println!("native_exec: {default_threads} GEMM worker thread(s)\n");
+
+    let manifest = match load_manifest(Path::new("artifacts"), "bench") {
+        Ok(m) => m,
+        Err(e) => {
+            println!("(skipping native_exec bench: {e})");
+            rep.finish().expect("writing bench report");
+            return;
+        }
+    };
+
+    // Dot-heavy hot path + the full training step (control flow,
+    // reduce, scatter, threefry — everything the plan must cover).
+    for name in ["matmul_f64_64", "matmul_f32_256", "cnn_train_step"] {
+        let Some(meta) = manifest.get(name) else {
+            println!("(skipping {name}: not in manifest)");
+            continue;
+        };
+        let text =
+            match std::fs::read_to_string(format!("artifacts/{name}.hlo.txt"))
+            {
+                Ok(t) => t,
+                Err(e) => {
+                    println!("(skipping {name}: {e})");
+                    continue;
+                }
+            };
+
+        // 1. Plan compile time, separate from execution (the
+        //    compile-once cost serve amortizes across a fleet).
+        let module = parse_module(&text).expect("parse artifact");
+        rep.bench(&format!("native_exec/plan_compile/{name}"), || {
+            std::hint::black_box(plan::compile(&module).expect("plan"));
+        });
+
+        // 2. Planned execution vs the tree-walk reference.
+        let exe = NativeBackend::new()
+            .compile_native(name, &text)
+            .expect("compile");
+        let inputs = inputs_for_meta(meta, 3).expect("manifest dtype");
+        exe.execute_planned(&inputs).expect("warmup");
+        let planned =
+            rep.bench(&format!("native_exec/planned/{name}"), || {
+                std::hint::black_box(exe.execute_planned(&inputs).unwrap());
+            });
+        let reference =
+            rep.bench(&format!("native_exec/reference/{name}"), || {
+                std::hint::black_box(
+                    exe.execute_reference(&inputs).unwrap(),
+                );
+            });
+        println!(
+            "  -> {name}: planned {} vs reference {} ({:.2}x)\n",
+            fmt_ns(planned.mean_ns),
+            fmt_ns(reference.mean_ns),
+            reference.mean_ns / planned.mean_ns.max(1.0)
+        );
+    }
+
+    // 3. GEMM thread scaling on the dot-heavy artifact (outputs are
+    //    bit-identical for every worker count; see plan_parity.rs).
+    if let Some(meta) = manifest.get("matmul_f32_256") {
+        if let Ok(text) =
+            std::fs::read_to_string("artifacts/matmul_f32_256.hlo.txt")
+        {
+            let exe = NativeBackend::new()
+                .compile_native("matmul_f32_256", &text)
+                .expect("compile");
+            let inputs = inputs_for_meta(meta, 3).expect("manifest dtype");
+            // Fixed thread counts: sample names must be identical on
+            // every runner for the CI-gated bench-diff to match them.
+            for threads in [1usize, 4] {
+                set_native_threads(threads);
+                exe.execute_planned(&inputs).expect("warmup");
+                rep.bench(
+                    &format!("native_exec/gemm_threads/{threads}"),
+                    || {
+                        std::hint::black_box(
+                            exe.execute_planned(&inputs).unwrap(),
+                        );
+                    },
+                );
+            }
+            set_native_threads(default_threads);
+        }
+    }
+
+    rep.finish().expect("writing bench report");
+}

@@ -24,13 +24,12 @@ use manticore::coordinator::Coordinator;
 use manticore::repro;
 use manticore::runtime::sim::SimBackend;
 use manticore::runtime::{
-    backend_by_name, backends, tensor_for_spec, Runtime, Tensor,
+    backend_by_name, backends, inputs_for_meta, Runtime, Tensor,
 };
 use manticore::serve::{run_loadgen, LoadgenConfig, ServeConfig, Server};
 use manticore::util::bench::{diff_reports, fmt_si};
 use manticore::util::cli;
 use manticore::util::json;
-use manticore::util::rng::Rng;
 
 /// Open the runtime honouring `--backend` (falls back to
 /// `MANTICORE_BACKEND`, then `native`). Both selection forms resolve
@@ -72,6 +71,13 @@ fn run_cli() -> Result<()> {
             .with_context(|| format!("loading config {path}"))?;
     }
     let artifacts_dir = args.get_or("artifacts", "artifacts");
+    // NativeBackend GEMM worker count (default: available
+    // parallelism; also settable via MANTICORE_NATIVE_THREADS).
+    // Outputs are bit-identical for any setting.
+    let native_threads = args.get_usize("native-threads", 0)?;
+    if native_threads > 0 {
+        manticore::runtime::native::set_native_threads(native_threads);
+    }
 
     match sub.as_deref() {
         Some("repro") => cmd_repro(&args, &artifacts_dir),
@@ -106,10 +112,11 @@ fn print_help() {
          simulate gemm --m M --k K --n N | simulate kernel --name <..>\n  \
          train [--steps N] [--lr F]\n  \
          backends\n  \
-         bench-diff <old.json> <new.json> [--threshold 0.1] [--md out.md]\n  \
+         bench-diff <old.json> <new.json> [--threshold 0.1] [--md out.md]\n             \
+         [--fail-on-regression]\n  \
          info\n\n\
          OPTIONS: --preset <name> --config <file.json> --artifacts <dir> \
-         --backend <native|sim|xla>"
+         --backend <native|sim|xla> --native-threads <N>"
     );
 }
 
@@ -208,12 +215,17 @@ fn cmd_backends() -> Result<()> {
     Ok(())
 }
 
-/// Compare two bench JSON reports; warn (non-fatally) on regressions.
+/// Compare two bench JSON reports. Regressions above the threshold
+/// warn by default; `--fail-on-regression` turns them into a non-zero
+/// exit (the CI gate for the hotpath benches).
 fn cmd_bench_diff(args: &cli::Args) -> Result<()> {
     let (Some(old_path), Some(new_path)) =
         (args.positional.first(), args.positional.get(1))
     else {
-        bail!("usage: manticore bench-diff <old.json> <new.json> [--threshold 0.1] [--md out.md]");
+        bail!(
+            "usage: manticore bench-diff <old.json> <new.json> \
+             [--threshold 0.1] [--md out.md] [--fail-on-regression]"
+        );
     };
     let threshold = args.get_f64("threshold", 0.10)?;
     let load = |p: &str| -> Result<json::Value> {
@@ -230,6 +242,17 @@ fn cmd_bench_diff(args: &cli::Args) -> Result<()> {
         println!("wrote diff table to {md}");
     }
     if regressions > 0 {
+        if args.has_flag("fail-on-regression") {
+            eprintln!(
+                "manticore: bench-diff: {regressions} bench(es) regressed \
+                 by more than {:.0} % vs the previous run (gating check)",
+                threshold * 100.0
+            );
+            // Distinct exit code so callers (`make bench-smoke`) can
+            // tell a tripped perf gate (3) from an infrastructure
+            // failure (2: bad JSON, missing file, ...).
+            std::process::exit(3);
+        }
         println!(
             "warning: {regressions} bench(es) regressed by more than \
              {:.0} % (non-fatal)",
@@ -317,15 +340,8 @@ fn cmd_run(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> {
         .meta(name)
         .with_context(|| format!("unknown artifact {name}"))?
         .clone();
-    let mut rng = Rng::new(args.get_usize("seed", 0)? as u64);
-    let inputs: Vec<Tensor> = meta
-        .inputs
-        .iter()
-        .map(|spec| {
-            let mut local = Rng::new(rng.next_u64());
-            tensor_for_spec(spec, move |_| local.normal() * 0.1)
-        })
-        .collect::<Result<_>>()?;
+    let inputs: Vec<Tensor> =
+        inputs_for_meta(&meta, args.get_usize("seed", 0)? as u64)?;
     let iters = args.get_usize("iters", 10)?;
     let (_, first) = rt.execute_timed(name, &inputs)?;
     let mut total = std::time::Duration::ZERO;

@@ -6,7 +6,11 @@
 //!
 //! Backends (see the registry in [`backend::backends`]):
 //! * [`native::NativeBackend`] (default) — pure-Rust HLO interpreter,
-//!   fully offline;
+//!   fully offline. Artifacts compile once into slot-indexed
+//!   execution plans ([`native::plan`]) with copy-on-write tensors
+//!   and a tiled parallel GEMM (worker count: `--native-threads` /
+//!   `MANTICORE_NATIVE_THREADS`, outputs bit-identical for any
+//!   setting);
 //! * [`sim::SimBackend`] — same numerics, plus every executed op is
 //!   scheduled on the simulated Manticore (per-op cycle/energy/FPU
 //!   estimates via `coordinator::OpTask`);
@@ -383,6 +387,22 @@ pub fn tensor_for_spec(spec: &TensorSpec, mut fill: impl FnMut(usize) -> f64) ->
         (0..n).map(&mut fill).collect(),
         spec.shape.clone(),
     )
+}
+
+/// Seeded inputs matching an artifact's manifest entry — THE canonical
+/// normal*0.1 fill `manticore run` executes (one sub-RNG per input, so
+/// adding an input never shifts the others' values). The plan-parity
+/// tests and the `native_exec` bench share it, so what they measure is
+/// exactly what the CLI runs.
+pub fn inputs_for_meta(meta: &ArtifactMeta, seed: u64) -> Result<Vec<Tensor>> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    meta.inputs
+        .iter()
+        .map(|spec| {
+            let mut local = crate::util::rng::Rng::new(rng.next_u64());
+            tensor_for_spec(spec, move |_| local.normal() * 0.1)
+        })
+        .collect()
 }
 
 #[cfg(test)]

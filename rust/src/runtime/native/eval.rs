@@ -17,16 +17,27 @@ use super::parser::{parse_literal, Computation, DType, Instr, Module, Shape};
 use anyhow::{anyhow, bail, Context, Result};
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Safety cap for `while` loops (the L2 graphs iterate grid steps,
 /// which is orders of magnitude below this).
-const MAX_WHILE_ITERS: u64 = 1_000_000;
+pub(crate) const MAX_WHILE_ITERS: u64 = 1_000_000;
 
-/// A runtime value: an array or a tuple.
+/// A runtime value: an array or a tuple. Arrays are held behind an
+/// `Arc` so cloning a value (while-loop state, tuple packing, `select`
+/// of a whole operand) is a refcount bump, not a deep copy of the
+/// tensor data; mutating ops use `Arc::make_mut` and only copy when
+/// the buffer is actually shared (copy-on-write).
 #[derive(Debug, Clone)]
 pub enum Value {
-    Arr(ArrayV),
+    Arr(Arc<ArrayV>),
     Tuple(Vec<Value>),
+}
+
+impl From<ArrayV> for Value {
+    fn from(a: ArrayV) -> Value {
+        Value::Arr(Arc::new(a))
+    }
 }
 
 /// Flat row-major array with element type.
@@ -51,7 +62,7 @@ impl ArrayV {
 impl Value {
     pub fn arr(&self) -> Result<&ArrayV> {
         match self {
-            Value::Arr(a) => Ok(a),
+            Value::Arr(a) => Ok(&**a),
             Value::Tuple(_) => bail!("expected array value, got tuple"),
         }
     }
@@ -65,7 +76,7 @@ impl Value {
 }
 
 /// Row-major strides.
-fn strides(dims: &[usize]) -> Vec<usize> {
+pub(crate) fn strides(dims: &[usize]) -> Vec<usize> {
     let mut s = vec![1usize; dims.len()];
     for i in (0..dims.len().saturating_sub(1)).rev() {
         s[i] = s[i + 1] * dims[i + 1];
@@ -74,7 +85,7 @@ fn strides(dims: &[usize]) -> Vec<usize> {
 }
 
 /// Odometer increment; returns false when iteration wraps around.
-fn next_index(idx: &mut [usize], dims: &[usize]) -> bool {
+pub(crate) fn next_index(idx: &mut [usize], dims: &[usize]) -> bool {
     for d in (0..dims.len()).rev() {
         idx[d] += 1;
         if idx[d] < dims[d] {
@@ -87,7 +98,8 @@ fn next_index(idx: &mut [usize], dims: &[usize]) -> bool {
 
 /// Canonicalise a buffer for a result dtype (round f32, wrap ints,
 /// 0/1 for pred). This is THE shared dtype rounding/wrapping helper:
-/// every op result funnels through it (via `Evaluator::out_arr` or the
+/// every op result funnels through it (via [`out_arr`], the fused
+/// per-element forms in [`eval_array_op`]/[`canon1`], or the
 /// variadic-reduce path), so numerics can't drift between op kinds.
 pub(crate) fn canonicalize(ty: DType, data: &mut [f64]) {
     match ty {
@@ -109,6 +121,45 @@ pub(crate) fn canonicalize(ty: DType, data: &mut [f64]) {
             }
         }
     }
+}
+
+/// Overwrite a scalar array value in place (copy-on-write: only clones
+/// while another reference to the cell is alive). Used to recycle the
+/// hoisted combiner argv in `reduce`/`scatter` instead of allocating a
+/// fresh `ArrayV` per reduced element.
+pub(crate) fn set_scalar(v: &mut Value, x: f64) {
+    if let Value::Arr(a) = v {
+        Arc::make_mut(a).data[0] = x;
+    }
+}
+
+/// Canonicalise a single element for a result dtype — the scalar form
+/// of [`canonicalize`], for ops that update a buffer in place (the
+/// copy-on-write `dynamic-update-slice`/`scatter` paths) and only need
+/// to round/wrap the elements they actually write.
+pub(crate) fn canon1(ty: DType, v: f64) -> f64 {
+    match ty {
+        DType::F64 => v,
+        DType::F32 | DType::F16 | DType::BF16 => v as f32 as f64,
+        DType::Pred => {
+            if v != 0.0 {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        _ => wrap_int(ty, ty.int_width().unwrap_or(64), v),
+    }
+}
+
+/// Build the canonicalised result value for an op from its raw f64
+/// buffer (round f32, wrap ints, 0/1 pred). Shared by every op kernel;
+/// the elementwise kernels fuse the f32 round into their compute loop
+/// instead (see [`eval_array_op`]) and skip this pass.
+pub(crate) fn out_arr(shape: &Shape, mut data: Vec<f64>) -> Result<Value> {
+    let ty = shape.ty()?;
+    canonicalize(ty, &mut data);
+    Ok(Value::from(ArrayV::new(ty, shape.dims().to_vec(), data)))
 }
 
 /// All-ones mask for a `w`-bit integer type (w >= 64 saturates).
@@ -151,7 +202,7 @@ fn wrap_int(ty: DType, width: u32, v: f64) -> f64 {
 }
 
 /// Integer-domain binary bit op (operands already wrapped into range).
-fn bitop(op: &str, ty: DType, a: f64, b: f64) -> Result<f64> {
+pub(crate) fn bitop(op: &str, ty: DType, a: f64, b: f64) -> Result<f64> {
     let w = ty.int_width().context("bit op on float type")? as i64;
     let mask: i64 = int_mask(w as u32) as i64;
     let ai = (a as i64) & mask;
@@ -194,7 +245,7 @@ fn bitop(op: &str, ty: DType, a: f64, b: f64) -> Result<f64> {
 }
 
 /// Reinterpret the bit pattern of each element (e.g. u32 -> f32).
-fn bitcast(src: DType, dst: DType, v: f64) -> Result<f64> {
+pub(crate) fn bitcast(src: DType, dst: DType, v: f64) -> Result<f64> {
     let bits: u64 = match src {
         DType::F32 => (v as f32).to_bits() as u64,
         DType::F64 => v.to_bits(),
@@ -213,7 +264,7 @@ fn bitcast(src: DType, dst: DType, v: f64) -> Result<f64> {
     })
 }
 
-fn unary(op: &str, x: f64) -> Result<f64> {
+pub(crate) fn unary(op: &str, x: f64) -> Result<f64> {
     Ok(match op {
         "negate" => -x,
         "abs" => x.abs(),
@@ -251,7 +302,7 @@ fn unary(op: &str, x: f64) -> Result<f64> {
     })
 }
 
-fn binary(op: &str, a: f64, b: f64) -> Result<f64> {
+pub(crate) fn binary(op: &str, a: f64, b: f64) -> Result<f64> {
     Ok(match op {
         "add" => a + b,
         "subtract" => a - b,
@@ -299,7 +350,7 @@ fn binary(op: &str, a: f64, b: f64) -> Result<f64> {
     })
 }
 
-fn compare(direction: &str, a: f64, b: f64) -> Result<bool> {
+pub(crate) fn compare(direction: &str, a: f64, b: f64) -> Result<bool> {
     Ok(match direction {
         "EQ" => a == b,
         "NE" => a != b,
@@ -403,7 +454,7 @@ pub struct TraceEvent {
 
 /// Control-flow / bookkeeping ops that never reach hardware; their
 /// bodies (for call/while/conditional) are traced instruction-wise.
-const TRACE_SKIP: &[&str] = &[
+pub(crate) const TRACE_SKIP: &[&str] = &[
     "parameter",
     "constant",
     "tuple",
@@ -529,13 +580,6 @@ impl<'m> Evaluator<'m> {
         self.operand(env, ins, i)?.arr()
     }
 
-    fn out_arr(&self, shape: &Shape, data: Vec<f64>) -> Result<Value> {
-        let ty = shape.ty()?;
-        let mut data = data;
-        canonicalize(ty, &mut data);
-        Ok(Value::Arr(ArrayV::new(ty, shape.dims().to_vec(), data)))
-    }
-
     fn eval_instr(&self, ins: &Instr, args: &[Value], env: &Env<'_>) -> Result<Value> {
         let op = ins.op.as_str();
         match op {
@@ -566,7 +610,7 @@ impl<'m> Evaluator<'m> {
                         ins.shape.dims()
                     );
                 }
-                self.out_arr(&ins.shape, vals)
+                out_arr(&ins.shape, vals)
             }
             "tuple" => {
                 let mut vs = Vec::with_capacity(ins.operands.len());
@@ -604,140 +648,24 @@ impl<'m> Evaluator<'m> {
                 bail!("while iteration cap ({MAX_WHILE_ITERS}) exceeded")
             }
             "conditional" => self.eval_conditional(ins, env),
-            "select" => {
-                let p = self.operand_arr(env, ins, 0)?;
-                let t = self.operand_arr(env, ins, 1)?;
-                let f = self.operand_arr(env, ins, 2)?;
-                let out = if p.data.len() == 1 {
-                    if p.scalar() != 0.0 {
-                        t.data.clone()
-                    } else {
-                        f.data.clone()
-                    }
-                } else {
-                    p.data
-                        .iter()
-                        .zip(t.data.iter().zip(&f.data))
-                        .map(|(&c, (&a, &b))| if c != 0.0 { a } else { b })
-                        .collect()
-                };
-                self.out_arr(&ins.shape, out)
-            }
-            "compare" => {
-                let a = self.operand_arr(env, ins, 0)?;
-                let b = self.operand_arr(env, ins, 1)?;
-                let dir = ins.attr("direction")?;
-                let out = a
-                    .data
-                    .iter()
-                    .zip(&b.data)
-                    .map(|(&x, &y)| {
-                        compare(dir, x, y).map(|c| if c { 1.0 } else { 0.0 })
-                    })
-                    .collect::<Result<Vec<f64>>>()?;
-                self.out_arr(&ins.shape, out)
-            }
-            "bitcast-convert" => {
-                let x = self.operand_arr(env, ins, 0)?;
-                let dst = ins.shape.ty()?;
-                let out = x
-                    .data
-                    .iter()
-                    .map(|&v| bitcast(x.ty, dst, v))
-                    .collect::<Result<Vec<f64>>>()?;
-                // Bit patterns are already canonical for dst.
-                Ok(Value::Arr(ArrayV::new(dst, ins.shape.dims().to_vec(), out)))
-            }
-            "broadcast" => self.eval_broadcast(ins, env),
-            "reshape" => {
-                let x = self.operand_arr(env, ins, 0)?;
-                Ok(Value::Arr(ArrayV::new(
-                    ins.shape.ty()?,
-                    ins.shape.dims().to_vec(),
-                    x.data.clone(),
-                )))
-            }
-            "transpose" => {
-                let x = self.operand_arr(env, ins, 0)?;
-                let perm: Vec<usize> = ins
-                    .attr_ints("dimensions")?
-                    .iter()
-                    .map(|&d| d as usize)
-                    .collect();
-                Ok(Value::Arr(transpose(x, &perm)))
-            }
-            "slice" => self.eval_slice(ins, env),
-            "concatenate" => self.eval_concatenate(ins, env),
-            "iota" => {
-                let d: usize = ins.attr("iota_dimension")?.parse()?;
-                let dims = ins.shape.dims();
-                let mut out = vec![0.0; ins.shape.elems()];
-                let mut idx = vec![0usize; dims.len()];
-                let mut flat = 0usize;
-                loop {
-                    out[flat] = idx[d] as f64;
-                    flat += 1;
-                    if !next_index(&mut idx, dims) {
-                        break;
-                    }
-                }
-                self.out_arr(&ins.shape, out)
-            }
-            "pad" => self.eval_pad(ins, env),
-            "dynamic-slice" => self.eval_dynamic_slice(ins, env),
-            "dynamic-update-slice" => self.eval_dynamic_update_slice(ins, env),
-            "dot" => self.eval_dot(ins, env),
             "reduce" => self.eval_reduce(ins, env),
-            "gather" => self.eval_gather(ins, env),
             "scatter" => self.eval_scatter(ins, env),
-            _ if UNARY_OPS.contains(&op) => {
-                let x = self.operand_arr(env, ins, 0)?;
-                let ty = ins.shape.ty()?;
-                let out = if op == "convert" && !ty.is_float() && x.ty.is_float()
-                {
-                    // float -> int converts round toward zero
-                    x.data.iter().map(|v| v.trunc()).collect()
-                } else {
-                    x.data
-                        .iter()
-                        .map(|&v| unary(op, v))
-                        .collect::<Result<Vec<f64>>>()?
-                };
-                self.out_arr(&ins.shape, out)
+            // The reference path keeps the pre-plan naive dot (see
+            // `kernel_dot_reference`); every other op shares the plan
+            // executor's kernels.
+            "dot" => {
+                let lhs = self.operand_arr(env, ins, 0)?;
+                let rhs = self.operand_arr(env, ins, 1)?;
+                kernel_dot_reference(ins, lhs, rhs)
             }
-            _ if SHIFT_OPS.contains(&op) => {
-                let a = self.operand_arr(env, ins, 0)?;
-                let b = self.operand_arr(env, ins, 1)?;
-                let ty = ins.shape.ty()?;
-                let out = a
-                    .data
-                    .iter()
-                    .zip(&b.data)
-                    .map(|(&x, &y)| bitop(op, ty, x, y))
-                    .collect::<Result<Vec<f64>>>()?;
-                self.out_arr(&ins.shape, out)
+            _ => {
+                let mut ops: Vec<&ArrayV> =
+                    Vec::with_capacity(ins.operands.len());
+                for i in 0..ins.operands.len() {
+                    ops.push(self.operand_arr(env, ins, i)?);
+                }
+                eval_array_op(ins, &ops)
             }
-            _ if BINARY_OPS.contains(&op) => {
-                let a = self.operand_arr(env, ins, 0)?;
-                let b = self.operand_arr(env, ins, 1)?;
-                let ty = ins.shape.ty()?;
-                let bitwise = matches!(op, "and" | "or" | "xor")
-                    && ty != DType::Pred;
-                let out = a
-                    .data
-                    .iter()
-                    .zip(&b.data)
-                    .map(|(&x, &y)| {
-                        if bitwise {
-                            bitop(op, ty, x, y)
-                        } else {
-                            binary(op, x, y)
-                        }
-                    })
-                    .collect::<Result<Vec<f64>>>()?;
-                self.out_arr(&ins.shape, out)
-            }
-            other => bail!("unsupported HLO op '{other}'"),
         }
     }
 
@@ -771,255 +699,6 @@ impl<'m> Evaluator<'m> {
         }
     }
 
-    fn eval_broadcast(&self, ins: &Instr, env: &Env<'_>) -> Result<Value> {
-        let x = self.operand_arr(env, ins, 0)?;
-        let bdims: Vec<usize> = ins
-            .attr_ints_or_empty("dimensions")?
-            .iter()
-            .map(|&d| d as usize)
-            .collect();
-        let out_dims = ins.shape.dims();
-        let in_strides = strides(&x.dims);
-        let mut out = vec![0.0; ins.shape.elems()];
-        let mut idx = vec![0usize; out_dims.len()];
-        let mut flat = 0usize;
-        loop {
-            let mut src = 0usize;
-            for (k, &od) in bdims.iter().enumerate() {
-                src += in_strides[k] * idx[od];
-            }
-            out[flat] = x.data[src];
-            flat += 1;
-            if !next_index(&mut idx, out_dims) {
-                break;
-            }
-        }
-        self.out_arr(&ins.shape, out)
-    }
-
-    fn eval_slice(&self, ins: &Instr, env: &Env<'_>) -> Result<Value> {
-        let x = self.operand_arr(env, ins, 0)?;
-        let spec = ins.attr("slice")?;
-        let inner = spec.trim_start_matches('{').trim_end_matches('}');
-        let mut ranges = Vec::new();
-        for part in inner.split(',') {
-            let p = part.trim().trim_start_matches('[').trim_end_matches(']');
-            if p.is_empty() {
-                continue;
-            }
-            let nums: Vec<i64> = p
-                .split(':')
-                .map(|v| v.trim().parse::<i64>())
-                .collect::<std::result::Result<_, _>>()
-                .map_err(|_| anyhow!("bad slice range '{part}'"))?;
-            let (start, limit, stride) = match nums.len() {
-                2 => (nums[0], nums[1], 1),
-                3 => (nums[0], nums[1], nums[2]),
-                _ => bail!("bad slice range '{part}'"),
-            };
-            ranges.push((start as usize, limit as usize, stride as usize));
-        }
-        if ranges.len() != x.dims.len() {
-            bail!("slice rank mismatch");
-        }
-        let out_dims = ins.shape.dims();
-        let in_strides = strides(&x.dims);
-        let mut out = vec![0.0; ins.shape.elems()];
-        let mut idx = vec![0usize; out_dims.len()];
-        let mut flat = 0usize;
-        loop {
-            let mut src = 0usize;
-            for d in 0..out_dims.len() {
-                src += in_strides[d] * (ranges[d].0 + idx[d] * ranges[d].2);
-            }
-            out[flat] = x.data[src];
-            flat += 1;
-            if !next_index(&mut idx, out_dims) {
-                break;
-            }
-        }
-        self.out_arr(&ins.shape, out)
-    }
-
-    fn eval_concatenate(&self, ins: &Instr, env: &Env<'_>) -> Result<Value> {
-        let d: usize = ins
-            .attr("dimensions")?
-            .trim_start_matches('{')
-            .trim_end_matches('}')
-            .trim()
-            .parse()?;
-        let out_dims = ins.shape.dims();
-        let outer: usize = out_dims[..d].iter().product();
-        let inner: usize = out_dims[d + 1..].iter().product();
-        let total_axis = out_dims[d];
-        let mut out = vec![0.0; ins.shape.elems()];
-        let mut axis_off = 0usize;
-        for i in 0..ins.operands.len() {
-            let part = self.operand_arr(env, ins, i)?;
-            let n = part.dims[d];
-            for o in 0..outer {
-                let src0 = o * n * inner;
-                let dst0 = (o * total_axis + axis_off) * inner;
-                out[dst0..dst0 + n * inner]
-                    .copy_from_slice(&part.data[src0..src0 + n * inner]);
-            }
-            axis_off += n;
-        }
-        self.out_arr(&ins.shape, out)
-    }
-
-    fn eval_pad(&self, ins: &Instr, env: &Env<'_>) -> Result<Value> {
-        let x = self.operand_arr(env, ins, 0)?;
-        let pv = self.operand_arr(env, ins, 1)?.scalar();
-        let out_dims = ins.shape.dims();
-        // padding=lo_hi[_interior]x... one group per dimension
-        let mut cfg = Vec::new();
-        for part in ins.attr("padding")?.split('x') {
-            let nums: Vec<i64> = part
-                .split('_')
-                .map(|v| v.trim().parse::<i64>())
-                .collect::<std::result::Result<_, _>>()
-                .map_err(|_| anyhow!("bad padding group '{part}'"))?;
-            let (lo, interior) = match nums.len() {
-                2 => (nums[0], 0),
-                3 => (nums[0], nums[2]),
-                _ => bail!("bad padding group '{part}'"),
-            };
-            cfg.push((lo, 1 + interior));
-        }
-        if cfg.len() != x.dims.len() {
-            bail!("pad rank mismatch");
-        }
-        let mut out = vec![pv; ins.shape.elems()];
-        // Source element j of dim d lands at lo + j*step; keep the
-        // in-bounds j range (negative padding truncates).
-        let mut j0 = vec![0i64; cfg.len()];
-        let mut j1 = vec![0i64; cfg.len()];
-        let mut empty = false;
-        for (d, &(lo, step)) in cfg.iter().enumerate() {
-            let n = x.dims[d] as i64;
-            let outn = out_dims[d] as i64;
-            j0[d] = if lo < 0 { (-lo + step - 1) / step } else { 0 };
-            j1[d] = if n > 0 { ((outn - 1 - lo) / step).min(n - 1) } else { -1 };
-            if j1[d] < j0[d] {
-                empty = true;
-            }
-        }
-        if !empty {
-            let in_strides = strides(&x.dims);
-            let out_strides = strides(out_dims);
-            let span: Vec<usize> = (0..cfg.len())
-                .map(|d| (j1[d] - j0[d] + 1) as usize)
-                .collect();
-            let mut idx = vec![0usize; cfg.len()];
-            loop {
-                let mut src = 0usize;
-                let mut dst = 0usize;
-                for d in 0..cfg.len() {
-                    let j = j0[d] + idx[d] as i64;
-                    src += in_strides[d] * j as usize;
-                    dst += out_strides[d] * (cfg[d].0 + j * cfg[d].1) as usize;
-                }
-                out[dst] = x.data[src];
-                if !next_index(&mut idx, &span) {
-                    break;
-                }
-            }
-        }
-        self.out_arr(&ins.shape, out)
-    }
-
-    fn eval_dynamic_slice(&self, ins: &Instr, env: &Env<'_>) -> Result<Value> {
-        let x = self.operand_arr(env, ins, 0)?;
-        let sizes: Vec<usize> = ins
-            .attr_ints("dynamic_slice_sizes")?
-            .iter()
-            .map(|&v| v as usize)
-            .collect();
-        let mut starts = Vec::with_capacity(x.dims.len());
-        for d in 0..x.dims.len() {
-            let i = self.operand_arr(env, ins, 1 + d)?.scalar() as i64;
-            let max = (x.dims[d] - sizes[d]) as i64;
-            starts.push(i.clamp(0, max) as usize);
-        }
-        let in_strides = strides(&x.dims);
-        let mut out = vec![0.0; ins.shape.elems()];
-        let mut idx = vec![0usize; sizes.len()];
-        let mut flat = 0usize;
-        loop {
-            let mut src = 0usize;
-            for d in 0..sizes.len() {
-                src += in_strides[d] * (starts[d] + idx[d]);
-            }
-            out[flat] = x.data[src];
-            flat += 1;
-            if !next_index(&mut idx, &sizes) {
-                break;
-            }
-        }
-        self.out_arr(&ins.shape, out)
-    }
-
-    fn eval_dynamic_update_slice(&self, ins: &Instr, env: &Env<'_>) -> Result<Value> {
-        let x = self.operand_arr(env, ins, 0)?;
-        let u = self.operand_arr(env, ins, 1)?;
-        let mut starts = Vec::with_capacity(x.dims.len());
-        for d in 0..x.dims.len() {
-            let i = self.operand_arr(env, ins, 2 + d)?.scalar() as i64;
-            let max = (x.dims[d] - u.dims[d]) as i64;
-            starts.push(i.clamp(0, max) as usize);
-        }
-        let mut out = x.data.clone();
-        let out_strides = strides(&x.dims);
-        let mut idx = vec![0usize; u.dims.len()];
-        let mut flat = 0usize;
-        loop {
-            let mut dst = 0usize;
-            for d in 0..u.dims.len() {
-                dst += out_strides[d] * (starts[d] + idx[d]);
-            }
-            out[dst] = u.data[flat];
-            flat += 1;
-            if !next_index(&mut idx, &u.dims) {
-                break;
-            }
-        }
-        self.out_arr(&ins.shape, out)
-    }
-
-    fn eval_dot(&self, ins: &Instr, env: &Env<'_>) -> Result<Value> {
-        let lhs = self.operand_arr(env, ins, 0)?;
-        let rhs = self.operand_arr(env, ins, 1)?;
-        let dd = dot_dims(ins, &lhs.dims, &rhs.dims)?;
-        let (bsz, m, k, n) = (dd.b, dd.m, dd.k, dd.n);
-
-        let mut aperm = dd.lb.clone();
-        aperm.extend(&dd.lfree);
-        aperm.extend(&dd.lc);
-        let a = transpose(lhs, &aperm);
-        let mut bperm = dd.rb.clone();
-        bperm.extend(&dd.rc);
-        bperm.extend(&dd.rfree);
-        let b = transpose(rhs, &bperm);
-
-        let mut out = vec![0.0; bsz * m * n];
-        for bb in 0..bsz {
-            let a0 = bb * m * k;
-            let b0 = bb * k * n;
-            let o0 = bb * m * n;
-            for i in 0..m {
-                for j in 0..n {
-                    let mut acc = 0.0f64;
-                    for kk in 0..k {
-                        acc += a.data[a0 + i * k + kk] * b.data[b0 + kk * n + j];
-                    }
-                    out[o0 + i * n + j] = acc;
-                }
-            }
-        }
-        self.out_arr(&ins.shape, out)
-    }
-
     fn eval_reduce(&self, ins: &Instr, env: &Env<'_>) -> Result<Value> {
         let n = ins.operands.len() / 2;
         if n == 0 {
@@ -1031,84 +710,21 @@ impl<'m> Evaluator<'m> {
         let inits: Vec<&ArrayV> = (0..n)
             .map(|i| self.operand_arr(env, ins, n + i))
             .collect::<Result<_>>()?;
-        let dims: Vec<usize> = ins
-            .attr_ints("dimensions")?
-            .iter()
-            .map(|&d| d as usize)
-            .collect();
         let comp = self.m.computation(ins.attr("to_apply")?)?;
-        let in_dims = &ops[0].dims;
-        let kept: Vec<usize> =
-            (0..in_dims.len()).filter(|d| !dims.contains(d)).collect();
-        let out_dims: Vec<usize> = kept.iter().map(|&d| in_dims[d]).collect();
-        let red_n: usize =
-            dims.iter().map(|&d| in_dims[d]).product::<usize>().max(1);
-        let out_n: usize = out_dims.iter().product::<usize>().max(1);
+        let fast = fast_reducer_op(comp, n);
+        eval_reduce_kernel(ins, &ops, &inits, fast, &mut |argv| {
+            self.eval_suppressed(comp, argv)
+        })
+    }
 
-        // Move reduced dims last (kept order preserved), flatten.
-        let mut perm = kept.clone();
-        perm.extend(&dims);
-        let flat: Vec<ArrayV> = ops.iter().map(|o| transpose(o, &perm)).collect();
-
-        let fast = self.fast_reducer(comp, n);
-        let mut outs: Vec<Vec<f64>> = vec![vec![0.0; out_n]; n];
-        for i in 0..out_n {
-            let mut acc: Vec<f64> =
-                inits.iter().map(|init| init.scalar()).collect();
-            for j in 0..red_n {
-                match fast {
-                    Some(op) => {
-                        acc[0] = binary(op, acc[0], flat[0].data[i * red_n + j])?;
-                    }
-                    None => {
-                        let mut argv: Vec<Value> =
-                            Vec::with_capacity(2 * n);
-                        for (k, a) in acc.iter().enumerate() {
-                            argv.push(Value::Arr(ArrayV::new(
-                                ops[k].ty,
-                                vec![],
-                                vec![*a],
-                            )));
-                        }
-                        for (k, f) in flat.iter().enumerate() {
-                            argv.push(Value::Arr(ArrayV::new(
-                                ops[k].ty,
-                                vec![],
-                                vec![f.data[i * red_n + j]],
-                            )));
-                        }
-                        let r = self.eval_suppressed(comp, &argv)?;
-                        match r {
-                            Value::Arr(a) => acc[0] = a.scalar(),
-                            Value::Tuple(vs) => {
-                                for (k, v) in vs.iter().enumerate() {
-                                    acc[k] = v.arr()?.scalar();
-                                }
-                            }
-                        }
-                    }
-                }
-            }
-            for k in 0..n {
-                outs[k][i] = acc[k];
-            }
-        }
-
-        let shapes: Vec<Shape> = match &ins.shape {
-            Shape::Tuple(v) => v.clone(),
-            s => vec![s.clone()],
-        };
-        let mut results = Vec::with_capacity(n);
-        for (s, mut o) in shapes.into_iter().zip(outs) {
-            let ty = s.ty()?;
-            canonicalize(ty, &mut o);
-            results.push(Value::Arr(ArrayV::new(ty, out_dims.clone(), o)));
-        }
-        if results.len() == 1 && !matches!(ins.shape, Shape::Tuple(_)) {
-            Ok(results.pop().unwrap())
-        } else {
-            Ok(Value::Tuple(results))
-        }
+    fn eval_scatter(&self, ins: &Instr, env: &Env<'_>) -> Result<Value> {
+        let operand = self.operand_arr(env, ins, 0)?;
+        let indices = self.operand_arr(env, ins, 1)?;
+        let updates = self.operand_arr(env, ins, 2)?;
+        let comp = self.m.computation(ins.attr("to_apply")?)?;
+        eval_scatter_kernel(ins, operand, indices, updates, &mut |argv| {
+            self.eval_suppressed(comp, argv)
+        })
     }
 
     /// Evaluate a combiner sub-computation with tracing suppressed
@@ -1123,182 +739,1067 @@ impl<'m> Evaluator<'m> {
         self.suppress.set(self.suppress.get() - 1);
         r
     }
+}
 
-    /// Recognise single-instruction scalar reducers (add/mul/max/min).
-    fn fast_reducer(&self, comp: &Computation, n: usize) -> Option<&'static str> {
-        if n != 1 || comp.instrs.len() != 3 {
-            return None;
+/// Evaluate one non-control-flow op on resolved array operands. This
+/// is THE shared op-kernel dispatch: the tree-walk [`Evaluator`] and
+/// the compiled-plan executor ([`super::plan`]) both funnel through
+/// it, so the two execution paths cannot drift numerically.
+pub(crate) fn eval_array_op(ins: &Instr, ops: &[&ArrayV]) -> Result<Value> {
+    let op = ins.op.as_str();
+    let min = match op {
+        "select" => 3,
+        "compare" | "pad" | "dot" | "gather" => 2,
+        "iota" => 0,
+        _ if BINARY_OPS.contains(&op) || SHIFT_OPS.contains(&op) => 2,
+        _ => 1,
+    };
+    if ops.len() < min {
+        bail!(
+            "{}: {op} expects at least {min} operand(s), got {}",
+            ins.name,
+            ops.len()
+        );
+    }
+    match op {
+        "select" => {
+            let (p, t, f) = (ops[0], ops[1], ops[2]);
+            let out = if p.data.len() == 1 {
+                if p.scalar() != 0.0 {
+                    t.data.clone()
+                } else {
+                    f.data.clone()
+                }
+            } else {
+                p.data
+                    .iter()
+                    .zip(t.data.iter().zip(&f.data))
+                    .map(|(&c, (&a, &b))| if c != 0.0 { a } else { b })
+                    .collect()
+            };
+            out_arr(&ins.shape, out)
         }
-        let root = comp.instrs.iter().find(|i| i.name == comp.root)?;
-        match root.op.as_str() {
-            "add" => Some("add"),
-            "multiply" => Some("multiply"),
-            "maximum" => Some("maximum"),
-            "minimum" => Some("minimum"),
-            _ => None,
+        "compare" => {
+            let (a, b) = (ops[0], ops[1]);
+            let dir = ins.attr("direction")?;
+            // 0.0/1.0 are already canonical pred values.
+            let out = a
+                .data
+                .iter()
+                .zip(&b.data)
+                .map(|(&x, &y)| {
+                    compare(dir, x, y).map(|c| if c { 1.0 } else { 0.0 })
+                })
+                .collect::<Result<Vec<f64>>>()?;
+            Ok(Value::from(ArrayV::new(
+                ins.shape.ty()?,
+                ins.shape.dims().to_vec(),
+                out,
+            )))
+        }
+        "bitcast-convert" => {
+            let x = ops[0];
+            let dst = ins.shape.ty()?;
+            let out = x
+                .data
+                .iter()
+                .map(|&v| bitcast(x.ty, dst, v))
+                .collect::<Result<Vec<f64>>>()?;
+            // Bit patterns are already canonical for dst.
+            Ok(Value::from(ArrayV::new(dst, ins.shape.dims().to_vec(), out)))
+        }
+        "broadcast" => kernel_broadcast(ins, ops[0]),
+        "reshape" => Ok(Value::from(ArrayV::new(
+            ins.shape.ty()?,
+            ins.shape.dims().to_vec(),
+            ops[0].data.clone(),
+        ))),
+        "transpose" => {
+            let perm: Vec<usize> = ins
+                .attr_ints("dimensions")?
+                .iter()
+                .map(|&d| d as usize)
+                .collect();
+            Ok(Value::from(transpose(ops[0], &perm)))
+        }
+        "slice" => kernel_slice(ins, ops[0]),
+        "concatenate" => kernel_concatenate(ins, ops),
+        "iota" => kernel_iota(ins),
+        "pad" => kernel_pad(ins, ops[0], ops[1]),
+        "dynamic-slice" => kernel_dynamic_slice(ins, ops),
+        "dynamic-update-slice" => kernel_dynamic_update_slice(ins, ops),
+        "dot" => kernel_dot(ins, ops[0], ops[1]),
+        "gather" => kernel_gather(ins, ops[0], ops[1]),
+        _ if UNARY_OPS.contains(&op) => {
+            let x = ops[0];
+            let ty = ins.shape.ty()?;
+            if op == "convert" && !ty.is_float() && x.ty.is_float() {
+                // float -> int converts round toward zero
+                let out = x.data.iter().map(|v| v.trunc()).collect();
+                return out_arr(&ins.shape, out);
+            }
+            // Dtype canonicalisation is hoisted out of the element
+            // loop: f64 results skip the pass entirely, f32 fuses the
+            // round into the map; ints/pred keep the trailing pass.
+            let out = match ty {
+                DType::F64 => x
+                    .data
+                    .iter()
+                    .map(|&v| unary(op, v))
+                    .collect::<Result<Vec<f64>>>()?,
+                DType::F32 | DType::F16 | DType::BF16 => x
+                    .data
+                    .iter()
+                    .map(|&v| unary(op, v).map(|r| r as f32 as f64))
+                    .collect::<Result<Vec<f64>>>()?,
+                _ => {
+                    let out = x
+                        .data
+                        .iter()
+                        .map(|&v| unary(op, v))
+                        .collect::<Result<Vec<f64>>>()?;
+                    return out_arr(&ins.shape, out);
+                }
+            };
+            Ok(Value::from(ArrayV::new(ty, ins.shape.dims().to_vec(), out)))
+        }
+        _ if SHIFT_OPS.contains(&op) => {
+            let (a, b) = (ops[0], ops[1]);
+            let ty = ins.shape.ty()?;
+            let out = a
+                .data
+                .iter()
+                .zip(&b.data)
+                .map(|(&x, &y)| bitop(op, ty, x, y))
+                .collect::<Result<Vec<f64>>>()?;
+            out_arr(&ins.shape, out)
+        }
+        _ if BINARY_OPS.contains(&op) => {
+            let (a, b) = (ops[0], ops[1]);
+            let ty = ins.shape.ty()?;
+            let bitwise =
+                matches!(op, "and" | "or" | "xor") && ty != DType::Pred;
+            if bitwise {
+                let out = a
+                    .data
+                    .iter()
+                    .zip(&b.data)
+                    .map(|(&x, &y)| bitop(op, ty, x, y))
+                    .collect::<Result<Vec<f64>>>()?;
+                return out_arr(&ins.shape, out);
+            }
+            // Same canonicalisation hoist as the unary arm.
+            let out = match ty {
+                DType::F64 => a
+                    .data
+                    .iter()
+                    .zip(&b.data)
+                    .map(|(&x, &y)| binary(op, x, y))
+                    .collect::<Result<Vec<f64>>>()?,
+                DType::F32 | DType::F16 | DType::BF16 => a
+                    .data
+                    .iter()
+                    .zip(&b.data)
+                    .map(|(&x, &y)| binary(op, x, y).map(|r| r as f32 as f64))
+                    .collect::<Result<Vec<f64>>>()?,
+                _ => {
+                    let out = a
+                        .data
+                        .iter()
+                        .zip(&b.data)
+                        .map(|(&x, &y)| binary(op, x, y))
+                        .collect::<Result<Vec<f64>>>()?;
+                    return out_arr(&ins.shape, out);
+                }
+            };
+            Ok(Value::from(ArrayV::new(ty, ins.shape.dims().to_vec(), out)))
+        }
+        other => bail!("unsupported HLO op '{other}'"),
+    }
+}
+
+fn kernel_broadcast(ins: &Instr, x: &ArrayV) -> Result<Value> {
+    let bdims: Vec<usize> = ins
+        .attr_ints_or_empty("dimensions")?
+        .iter()
+        .map(|&d| d as usize)
+        .collect();
+    kernel_broadcast_with(ins, &bdims, x)
+}
+
+/// `broadcast` with pre-parsed source dims (the plan compiler lowers
+/// the attribute once; the tree walk parses per call).
+pub(crate) fn kernel_broadcast_with(
+    ins: &Instr,
+    bdims: &[usize],
+    x: &ArrayV,
+) -> Result<Value> {
+    let out_dims = ins.shape.dims();
+    let in_strides = strides(&x.dims);
+    let mut out = vec![0.0; ins.shape.elems()];
+    let mut idx = vec![0usize; out_dims.len()];
+    let mut flat = 0usize;
+    loop {
+        let mut src = 0usize;
+        for (k, &od) in bdims.iter().enumerate() {
+            src += in_strides[k] * idx[od];
+        }
+        out[flat] = x.data[src];
+        flat += 1;
+        if !next_index(&mut idx, out_dims) {
+            break;
         }
     }
+    out_arr(&ins.shape, out)
+}
 
-    fn eval_gather(&self, ins: &Instr, env: &Env<'_>) -> Result<Value> {
-        let operand = self.operand_arr(env, ins, 0)?;
-        let start = self.operand_arr(env, ins, 1)?;
-        let to_usize =
-            |v: Vec<i64>| v.into_iter().map(|d| d as usize).collect::<Vec<_>>();
-        let offset_dims = to_usize(ins.attr_ints_or_empty("offset_dims")?);
-        let collapsed =
-            to_usize(ins.attr_ints_or_empty("collapsed_slice_dims")?);
-        let start_map = to_usize(ins.attr_ints_or_empty("start_index_map")?);
-        let ob = to_usize(ins.attr_ints_or_empty("operand_batching_dims")?);
-        let sb = to_usize(
-            ins.attr_ints_or_empty("start_indices_batching_dims")?,
-        );
-        let ivd: usize = ins.attr("index_vector_dim")?.parse()?;
-        let sizes = to_usize(ins.attr_ints("slice_sizes")?);
+fn kernel_slice(ins: &Instr, x: &ArrayV) -> Result<Value> {
+    let ranges = parse_slice_spec(ins.attr("slice")?)?;
+    kernel_slice_with(ins, &ranges, x)
+}
 
-        let out_dims = ins.shape.dims();
-        let batch_out: Vec<usize> = (0..out_dims.len())
-            .filter(|d| !offset_dims.contains(d))
+/// `slice` with pre-parsed `(start, limit, stride)` ranges.
+pub(crate) fn kernel_slice_with(
+    ins: &Instr,
+    ranges: &[(usize, usize, usize)],
+    x: &ArrayV,
+) -> Result<Value> {
+    if ranges.len() != x.dims.len() {
+        bail!("slice rank mismatch");
+    }
+    let out_dims = ins.shape.dims();
+    let in_strides = strides(&x.dims);
+    let mut out = vec![0.0; ins.shape.elems()];
+    let mut idx = vec![0usize; out_dims.len()];
+    let mut flat = 0usize;
+    loop {
+        let mut src = 0usize;
+        for d in 0..out_dims.len() {
+            src += in_strides[d] * (ranges[d].0 + idx[d] * ranges[d].2);
+        }
+        out[flat] = x.data[src];
+        flat += 1;
+        if !next_index(&mut idx, out_dims) {
+            break;
+        }
+    }
+    out_arr(&ins.shape, out)
+}
+
+fn kernel_concatenate(ins: &Instr, ops: &[&ArrayV]) -> Result<Value> {
+    let d: usize = ins
+        .attr("dimensions")?
+        .trim_start_matches('{')
+        .trim_end_matches('}')
+        .trim()
+        .parse()?;
+    let out_dims = ins.shape.dims();
+    let outer: usize = out_dims[..d].iter().product();
+    let inner: usize = out_dims[d + 1..].iter().product();
+    let total_axis = out_dims[d];
+    let mut out = vec![0.0; ins.shape.elems()];
+    let mut axis_off = 0usize;
+    for part in ops {
+        let n = part.dims[d];
+        for o in 0..outer {
+            let src0 = o * n * inner;
+            let dst0 = (o * total_axis + axis_off) * inner;
+            out[dst0..dst0 + n * inner]
+                .copy_from_slice(&part.data[src0..src0 + n * inner]);
+        }
+        axis_off += n;
+    }
+    out_arr(&ins.shape, out)
+}
+
+fn kernel_iota(ins: &Instr) -> Result<Value> {
+    let d: usize = ins.attr("iota_dimension")?.parse()?;
+    let dims = ins.shape.dims();
+    let mut out = vec![0.0; ins.shape.elems()];
+    let mut idx = vec![0usize; dims.len()];
+    let mut flat = 0usize;
+    loop {
+        out[flat] = idx[d] as f64;
+        flat += 1;
+        if !next_index(&mut idx, dims) {
+            break;
+        }
+    }
+    out_arr(&ins.shape, out)
+}
+
+fn kernel_pad(ins: &Instr, x: &ArrayV, pad_value: &ArrayV) -> Result<Value> {
+    let cfg = parse_pad_spec(ins.attr("padding")?)?;
+    kernel_pad_with(ins, &cfg, x, pad_value)
+}
+
+/// `pad` with a pre-parsed `(lo, step)` config per dimension.
+pub(crate) fn kernel_pad_with(
+    ins: &Instr,
+    cfg: &[(i64, i64)],
+    x: &ArrayV,
+    pad_value: &ArrayV,
+) -> Result<Value> {
+    let pv = pad_value.scalar();
+    let out_dims = ins.shape.dims();
+    if cfg.len() != x.dims.len() {
+        bail!("pad rank mismatch");
+    }
+    let mut out = vec![pv; ins.shape.elems()];
+    // Source element j of dim d lands at lo + j*step; keep the
+    // in-bounds j range (negative padding truncates).
+    let mut j0 = vec![0i64; cfg.len()];
+    let mut j1 = vec![0i64; cfg.len()];
+    let mut empty = false;
+    for (d, &(lo, step)) in cfg.iter().enumerate() {
+        let n = x.dims[d] as i64;
+        let outn = out_dims[d] as i64;
+        j0[d] = if lo < 0 { (-lo + step - 1) / step } else { 0 };
+        j1[d] = if n > 0 { ((outn - 1 - lo) / step).min(n - 1) } else { -1 };
+        if j1[d] < j0[d] {
+            empty = true;
+        }
+    }
+    if !empty {
+        let in_strides = strides(&x.dims);
+        let out_strides = strides(out_dims);
+        let span: Vec<usize> = (0..cfg.len())
+            .map(|d| (j1[d] - j0[d] + 1) as usize)
             .collect();
-        let sidx_dims: Vec<usize> =
-            (0..start.dims.len()).filter(|&d| d != ivd).collect();
-        let off_operand: Vec<usize> = (0..operand.dims.len())
-            .filter(|d| !collapsed.contains(d) && !ob.contains(d))
-            .collect();
-
-        let s_strides = strides(&start.dims);
-        let o_strides = strides(&operand.dims);
-        let mut out = vec![0.0; ins.shape.elems()];
-        let mut oidx = vec![0usize; out_dims.len()];
-        let mut flat = 0usize;
-        let mut scoord = vec![0usize; start.dims.len()];
+        let mut idx = vec![0usize; cfg.len()];
         loop {
-            for c in scoord.iter_mut() {
-                *c = 0;
+            let mut src = 0usize;
+            let mut dst = 0usize;
+            for d in 0..cfg.len() {
+                let j = j0[d] + idx[d] as i64;
+                src += in_strides[d] * j as usize;
+                dst += out_strides[d] * (cfg[d].0 + j * cfg[d].1) as usize;
             }
-            for (bpos, &odim) in batch_out.iter().enumerate() {
-                scoord[sidx_dims[bpos]] = oidx[odim];
+            out[dst] = x.data[src];
+            if !next_index(&mut idx, &span) {
+                break;
             }
-            let mut full_start = vec![0usize; operand.dims.len()];
-            for (k, &od) in start_map.iter().enumerate() {
-                let mut c = scoord.clone();
-                if ivd < start.dims.len() {
-                    c[ivd] = k;
+        }
+    }
+    out_arr(&ins.shape, out)
+}
+
+fn kernel_dynamic_slice(ins: &Instr, ops: &[&ArrayV]) -> Result<Value> {
+    let sizes: Vec<usize> = ins
+        .attr_ints("dynamic_slice_sizes")?
+        .iter()
+        .map(|&v| v as usize)
+        .collect();
+    kernel_dynamic_slice_with(ins, &sizes, ops)
+}
+
+/// `dynamic-slice` with pre-parsed slice sizes — grid loops execute
+/// one of these per iteration, so the attribute parse is hoisted to
+/// plan-compile time.
+pub(crate) fn kernel_dynamic_slice_with(
+    ins: &Instr,
+    sizes: &[usize],
+    ops: &[&ArrayV],
+) -> Result<Value> {
+    let x = ops[0];
+    let mut starts = Vec::with_capacity(x.dims.len());
+    for d in 0..x.dims.len() {
+        let s = *ops
+            .get(1 + d)
+            .with_context(|| format!("{}: missing operand {}", ins.name, 1 + d))?;
+        let i = s.scalar() as i64;
+        let max = (x.dims[d] - sizes[d]) as i64;
+        starts.push(i.clamp(0, max) as usize);
+    }
+    let in_strides = strides(&x.dims);
+    let mut out = vec![0.0; ins.shape.elems()];
+    let mut idx = vec![0usize; sizes.len()];
+    let mut flat = 0usize;
+    loop {
+        let mut src = 0usize;
+        for d in 0..sizes.len() {
+            src += in_strides[d] * (starts[d] + idx[d]);
+        }
+        out[flat] = x.data[src];
+        flat += 1;
+        if !next_index(&mut idx, sizes) {
+            break;
+        }
+    }
+    out_arr(&ins.shape, out)
+}
+
+fn kernel_dynamic_update_slice(ins: &Instr, ops: &[&ArrayV]) -> Result<Value> {
+    let x = ops[0];
+    let u = *ops
+        .get(1)
+        .with_context(|| format!("{}: missing operand 1", ins.name))?;
+    let starts = dus_starts(ins, x, u, &ops[2..])?;
+    let mut out = x.data.clone();
+    let out_strides = strides(&x.dims);
+    let mut idx = vec![0usize; u.dims.len()];
+    let mut flat = 0usize;
+    loop {
+        let mut dst = 0usize;
+        for d in 0..u.dims.len() {
+            dst += out_strides[d] * (starts[d] + idx[d]);
+        }
+        out[dst] = u.data[flat];
+        flat += 1;
+        if !next_index(&mut idx, &u.dims) {
+            break;
+        }
+    }
+    out_arr(&ins.shape, out)
+}
+
+/// Resolve (and clamp) the start indices of a `dynamic-update-slice`.
+fn dus_starts(
+    ins: &Instr,
+    x: &ArrayV,
+    u: &ArrayV,
+    start_ops: &[&ArrayV],
+) -> Result<Vec<usize>> {
+    let mut starts = Vec::with_capacity(x.dims.len());
+    for d in 0..x.dims.len() {
+        let s = *start_ops
+            .get(d)
+            .with_context(|| format!("{}: missing operand {}", ins.name, 2 + d))?;
+        let i = s.scalar() as i64;
+        let max = (x.dims[d] - u.dims[d]) as i64;
+        starts.push(i.clamp(0, max) as usize);
+    }
+    Ok(starts)
+}
+
+/// `dynamic-update-slice` into an *owned* base value: when the base
+/// buffer is uniquely owned the update happens in place — no clone of
+/// the full tensor and no full-buffer canonicalisation pass. This is
+/// the copy-on-write payoff for the Pallas grid loops, whose
+/// while-body accumulators are rewritten every iteration. The plan
+/// compiler only routes here when base/update/result element types all
+/// agree (checked statically), so writing `canon1`-rounded update
+/// elements over the already-canonical base matches the clone path
+/// bit for bit.
+pub(crate) fn dus_into(
+    ins: &Instr,
+    base: Value,
+    u: &ArrayV,
+    start_ops: &[&ArrayV],
+) -> Result<Value> {
+    let mut arc = match base {
+        Value::Arr(a) => a,
+        Value::Tuple(_) => bail!("expected array value, got tuple"),
+    };
+    let ty = ins.shape.ty()?;
+    let x = Arc::make_mut(&mut arc);
+    let starts = dus_starts(ins, x, u, start_ops)?;
+    let out_strides = strides(&x.dims);
+    let mut idx = vec![0usize; u.dims.len()];
+    let mut flat = 0usize;
+    loop {
+        let mut dst = 0usize;
+        for d in 0..u.dims.len() {
+            dst += out_strides[d] * (starts[d] + idx[d]);
+        }
+        x.data[dst] = canon1(ty, u.data[flat]);
+        flat += 1;
+        if !next_index(&mut idx, &u.dims) {
+            break;
+        }
+    }
+    Ok(Value::Arr(arc))
+}
+
+fn is_identity_perm(perm: &[usize]) -> bool {
+    perm.iter().enumerate().all(|(i, &p)| i == p)
+}
+
+/// The pre-plan `dot`: naive ascending-k triple loop over transposed
+/// copies. The tree-walk reference evaluator keeps dispatching here,
+/// so `MANTICORE_NATIVE_REFERENCE=1` really is the pre-plan baseline
+/// (and a usable bisection hatch for GEMM changes), and the parity
+/// suite cross-checks [`gemm_batched`]'s claim of being bit-identical
+/// to this loop (same per-cell accumulation chain).
+pub(crate) fn kernel_dot_reference(
+    ins: &Instr,
+    lhs: &ArrayV,
+    rhs: &ArrayV,
+) -> Result<Value> {
+    let dd = dot_dims(ins, &lhs.dims, &rhs.dims)?;
+    let (bsz, m, k, n) = (dd.b, dd.m, dd.k, dd.n);
+    let mut aperm = dd.lb.clone();
+    aperm.extend(&dd.lfree);
+    aperm.extend(&dd.lc);
+    let a = transpose(lhs, &aperm);
+    let mut bperm = dd.rb.clone();
+    bperm.extend(&dd.rc);
+    bperm.extend(&dd.rfree);
+    let b = transpose(rhs, &bperm);
+    let mut out = vec![0.0; bsz * m * n];
+    for bb in 0..bsz {
+        let a0 = bb * m * k;
+        let b0 = bb * k * n;
+        let o0 = bb * m * n;
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for kk in 0..k {
+                    acc += a.data[a0 + i * k + kk] * b.data[b0 + kk * n + j];
                 }
-                let sflat: usize = c
-                    .iter()
-                    .zip(&s_strides)
-                    .map(|(&a, &b)| a * b)
-                    .sum();
-                let v = start.data[sflat] as i64;
-                let max = (operand.dims[od] - sizes[od]) as i64;
-                full_start[od] = v.clamp(0, max) as usize;
+                out[o0 + i * n + j] = acc;
             }
-            for (&obd, &sbd) in ob.iter().zip(&sb) {
-                full_start[obd] = scoord[sbd];
+        }
+    }
+    out_arr(&ins.shape, out)
+}
+
+fn kernel_dot(ins: &Instr, lhs: &ArrayV, rhs: &ArrayV) -> Result<Value> {
+    let dd = dot_dims(ins, &lhs.dims, &rhs.dims)?;
+    let (bsz, m, k, n) = (dd.b, dd.m, dd.k, dd.n);
+
+    // Borrow the original buffers when the batch/free/contracting
+    // layout is already [b, m, k] / [b, k, n] (every plain 2D matmul):
+    // materialising a transposed copy here would add two full-tensor
+    // copies to the exact path this kernel exists to speed up.
+    let mut aperm = dd.lb.clone();
+    aperm.extend(&dd.lfree);
+    aperm.extend(&dd.lc);
+    let at;
+    let a: &[f64] = if is_identity_perm(&aperm) {
+        &lhs.data
+    } else {
+        at = transpose(lhs, &aperm);
+        &at.data
+    };
+    let mut bperm = dd.rb.clone();
+    bperm.extend(&dd.rc);
+    bperm.extend(&dd.rfree);
+    let bt;
+    let b: &[f64] = if is_identity_perm(&bperm) {
+        &rhs.data
+    } else {
+        bt = transpose(rhs, &bperm);
+        &bt.data
+    };
+
+    let mut out = vec![0.0; bsz * m * n];
+    gemm_batched(bsz, m, k, n, a, b, &mut out);
+    out_arr(&ins.shape, out)
+}
+
+/// Row-panel height of the blocked GEMM micro-kernel: an 8-row A panel
+/// stays L1-resident across one full B^T row sweep.
+const GEMM_MB: usize = 8;
+
+/// Flop count below which spawning worker threads costs more than it
+/// saves; small dots run inline on the calling thread. Workers are
+/// spawned per call (scoped threads, no persistent pool), so each one
+/// must amortize its ~tens-of-µs spawn/join cost: the threshold also
+/// caps the worker count at one per `GEMM_PAR_MIN / 2` flops.
+const GEMM_PAR_MIN: usize = 1 << 21;
+
+/// Cache-blocked, panel-packed batched GEMM over flattened row-major
+/// buffers: `out[b,i,j] = sum_k a[b,i,k] * b[b,k,j]`. The RHS is
+/// packed as per-batch B^T panels (j-major), so the k inner loop is
+/// contiguous for both operands; work is parallelised over contiguous
+/// output-row ranges with scoped threads ([`native_threads`] workers).
+/// Every (i, j) cell accumulates its k terms in one ascending chain,
+/// computed by exactly one worker — results are bit-identical to the
+/// naive triple loop for any blocking factor or worker count.
+pub(crate) fn gemm_batched(
+    bsz: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f64],
+    b: &[f64],
+    out: &mut [f64],
+) {
+    if bsz == 0 || m == 0 || n == 0 {
+        return;
+    }
+    // Pack B^T once per batch (shared read-only by all workers).
+    let mut bt = vec![0.0f64; bsz * k * n];
+    for bb in 0..bsz {
+        let src = &b[bb * k * n..][..k * n];
+        let dst = &mut bt[bb * k * n..][..k * n];
+        for j in 0..n {
+            for kk in 0..k {
+                dst[j * k + kk] = src[kk * n + j];
             }
-            let mut src = full_start;
-            for (k, &od) in off_operand.iter().enumerate() {
-                src[od] += oidx[offset_dims[k]];
+        }
+    }
+    let rows = bsz * m;
+    let work = 2 * rows * n * k;
+    let threads = native_threads()
+        .min(rows)
+        .min((work / (GEMM_PAR_MIN / 2)).max(1))
+        .max(1);
+    if threads == 1 || work < GEMM_PAR_MIN {
+        gemm_rows(0, rows, m, k, n, a, &bt, out);
+        return;
+    }
+    // Partition output rows into `threads` contiguous ranges; each
+    // worker owns a disjoint slice of `out`.
+    let base = rows / threads;
+    let rem = rows % threads;
+    let mut ranges = Vec::with_capacity(threads);
+    let mut g0 = 0usize;
+    for t in 0..threads {
+        let len = base + usize::from(t < rem);
+        ranges.push((g0, g0 + len));
+        g0 += len;
+    }
+    let mut parts: Vec<(usize, usize, &mut [f64])> =
+        Vec::with_capacity(threads);
+    let mut rest: &mut [f64] = out;
+    for &(r0, r1) in &ranges {
+        let (chunk, tail) =
+            std::mem::take(&mut rest).split_at_mut((r1 - r0) * n);
+        parts.push((r0, r1, chunk));
+        rest = tail;
+    }
+    let bt_all: &[f64] = &bt;
+    std::thread::scope(|s| {
+        for (r0, r1, chunk) in parts {
+            s.spawn(move || gemm_rows(r0, r1, m, k, n, a, bt_all, chunk));
+        }
+    });
+}
+
+/// Compute output rows `g0..g1` (global row index `g = batch * m + i`)
+/// into `chunk`; row `g` lands at `(g - g0) * n`. `bt` holds the
+/// per-batch packed B^T panels.
+fn gemm_rows(
+    g0: usize,
+    g1: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f64],
+    bt: &[f64],
+    chunk: &mut [f64],
+) {
+    let mut g = g0;
+    while g < g1 {
+        let bb = g / m;
+        let batch_end = ((bb + 1) * m).min(g1);
+        let btb = &bt[bb * k * n..][..k * n];
+        let mut i = g;
+        while i < batch_end {
+            let ib_end = (i + GEMM_MB).min(batch_end);
+            for j in 0..n {
+                let btrow = &btb[j * k..][..k];
+                for gi in i..ib_end {
+                    let arow = &a[gi * k..][..k];
+                    let mut acc = 0.0f64;
+                    for kk in 0..k {
+                        acc += arow[kk] * btrow[kk];
+                    }
+                    chunk[(gi - g0) * n + j] = acc;
+                }
+            }
+            i = ib_end;
+        }
+        g = batch_end;
+    }
+}
+
+/// Worker-thread count used by the parallel GEMM (0 = not yet
+/// resolved). Resolution order: [`set_native_threads`] (the
+/// `--native-threads` CLI flag) > `MANTICORE_NATIVE_THREADS` env var >
+/// `std::thread::available_parallelism()`.
+static NATIVE_THREADS: std::sync::atomic::AtomicUsize =
+    std::sync::atomic::AtomicUsize::new(0);
+
+/// Pin the native-backend worker count (used by `--native-threads`;
+/// also handy in tests sweeping thread counts). Outputs are
+/// bit-identical for every setting — this is purely a wall-clock knob.
+pub fn set_native_threads(n: usize) {
+    NATIVE_THREADS.store(n.max(1), std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Pin the worker count only when nothing has resolved it yet — no
+/// `--native-threads` call, no `MANTICORE_NATIVE_THREADS` env var.
+/// The serve worker pool uses this to divide the machine between its
+/// concurrent requests (cores / workers GEMM threads each) instead of
+/// oversubscribing it (workers × cores); an explicit setting wins.
+pub fn set_native_threads_if_unset(n: usize) {
+    let env_set = std::env::var("MANTICORE_NATIVE_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&v| v > 0)
+        .is_some();
+    if env_set
+        || NATIVE_THREADS.load(std::sync::atomic::Ordering::Relaxed) != 0
+    {
+        return;
+    }
+    NATIVE_THREADS.store(n.max(1), std::sync::atomic::Ordering::Relaxed);
+}
+
+/// The resolved native-backend worker count (see [`set_native_threads`]
+/// for the resolution order).
+pub fn native_threads() -> usize {
+    let v = NATIVE_THREADS.load(std::sync::atomic::Ordering::Relaxed);
+    if v != 0 {
+        return v;
+    }
+    let n = std::env::var("MANTICORE_NATIVE_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1)
+        });
+    NATIVE_THREADS.store(n, std::sync::atomic::Ordering::Relaxed);
+    n
+}
+
+fn kernel_gather(ins: &Instr, operand: &ArrayV, start: &ArrayV) -> Result<Value> {
+    let to_usize =
+        |v: Vec<i64>| v.into_iter().map(|d| d as usize).collect::<Vec<_>>();
+    let offset_dims = to_usize(ins.attr_ints_or_empty("offset_dims")?);
+    let collapsed = to_usize(ins.attr_ints_or_empty("collapsed_slice_dims")?);
+    let start_map = to_usize(ins.attr_ints_or_empty("start_index_map")?);
+    let ob = to_usize(ins.attr_ints_or_empty("operand_batching_dims")?);
+    let sb = to_usize(ins.attr_ints_or_empty("start_indices_batching_dims")?);
+    let ivd: usize = ins.attr("index_vector_dim")?.parse()?;
+    let sizes = to_usize(ins.attr_ints("slice_sizes")?);
+
+    let out_dims = ins.shape.dims();
+    let batch_out: Vec<usize> = (0..out_dims.len())
+        .filter(|d| !offset_dims.contains(d))
+        .collect();
+    let sidx_dims: Vec<usize> =
+        (0..start.dims.len()).filter(|&d| d != ivd).collect();
+    let off_operand: Vec<usize> = (0..operand.dims.len())
+        .filter(|d| !collapsed.contains(d) && !ob.contains(d))
+        .collect();
+
+    let s_strides = strides(&start.dims);
+    let o_strides = strides(&operand.dims);
+    let mut out = vec![0.0; ins.shape.elems()];
+    let mut oidx = vec![0usize; out_dims.len()];
+    let mut flat = 0usize;
+    let mut scoord = vec![0usize; start.dims.len()];
+    loop {
+        for c in scoord.iter_mut() {
+            *c = 0;
+        }
+        for (bpos, &odim) in batch_out.iter().enumerate() {
+            scoord[sidx_dims[bpos]] = oidx[odim];
+        }
+        let mut full_start = vec![0usize; operand.dims.len()];
+        for (k, &od) in start_map.iter().enumerate() {
+            let mut c = scoord.clone();
+            if ivd < start.dims.len() {
+                c[ivd] = k;
             }
             let sflat: usize =
-                src.iter().zip(&o_strides).map(|(&a, &b)| a * b).sum();
-            out[flat] = operand.data[sflat];
-            flat += 1;
-            if !next_index(&mut oidx, out_dims) {
-                break;
+                c.iter().zip(&s_strides).map(|(&a, &b)| a * b).sum();
+            let v = start.data[sflat] as i64;
+            let max = (operand.dims[od] - sizes[od]) as i64;
+            full_start[od] = v.clamp(0, max) as usize;
+        }
+        for (&obd, &sbd) in ob.iter().zip(&sb) {
+            full_start[obd] = scoord[sbd];
+        }
+        let mut src = full_start;
+        for (k, &od) in off_operand.iter().enumerate() {
+            src[od] += oidx[offset_dims[k]];
+        }
+        let sflat: usize =
+            src.iter().zip(&o_strides).map(|(&a, &b)| a * b).sum();
+        out[flat] = operand.data[sflat];
+        flat += 1;
+        if !next_index(&mut oidx, out_dims) {
+            break;
+        }
+    }
+    out_arr(&ins.shape, out)
+}
+
+/// The `reduce` kernel on resolved operands. `combine` evaluates the
+/// combiner sub-computation for one element tuple (only called when
+/// `fast` is None); the tree-walk evaluator and the plan executor each
+/// feed in their own combiner runner, so numerics are shared.
+pub(crate) fn eval_reduce_kernel(
+    ins: &Instr,
+    ops: &[&ArrayV],
+    inits: &[&ArrayV],
+    fast: Option<&'static str>,
+    combine: &mut dyn FnMut(&[Value]) -> Result<Value>,
+) -> Result<Value> {
+    let n = ops.len();
+    let dims: Vec<usize> = ins
+        .attr_ints("dimensions")?
+        .iter()
+        .map(|&d| d as usize)
+        .collect();
+    let in_dims = &ops[0].dims;
+    let kept: Vec<usize> =
+        (0..in_dims.len()).filter(|d| !dims.contains(d)).collect();
+    let out_dims: Vec<usize> = kept.iter().map(|&d| in_dims[d]).collect();
+    let red_n: usize =
+        dims.iter().map(|&d| in_dims[d]).product::<usize>().max(1);
+    let out_n: usize = out_dims.iter().product::<usize>().max(1);
+
+    // Move reduced dims last (kept order preserved), flatten.
+    let mut perm = kept.clone();
+    perm.extend(&dims);
+    let flat: Vec<ArrayV> = ops.iter().map(|o| transpose(o, &perm)).collect();
+
+    // The combiner argv is allocated once and its scalar cells are
+    // rewritten in place per reduced element (`Arc::make_mut` only
+    // copies while a combiner clone is still alive, i.e. never in
+    // steady state) — the per-element Vec/ArrayV allocations used
+    // to dominate the non-fast reduce path.
+    let mut argv: Vec<Value> = Vec::new();
+    if fast.is_none() {
+        for k in 0..2 * n {
+            argv.push(Value::from(ArrayV::new(
+                ops[k % n].ty,
+                vec![],
+                vec![0.0],
+            )));
+        }
+    }
+    let mut outs: Vec<Vec<f64>> = vec![vec![0.0; out_n]; n];
+    for i in 0..out_n {
+        let mut acc: Vec<f64> =
+            inits.iter().map(|init| init.scalar()).collect();
+        for j in 0..red_n {
+            match fast {
+                Some(op) => {
+                    acc[0] = binary(op, acc[0], flat[0].data[i * red_n + j])?;
+                }
+                None => {
+                    for (k, a) in acc.iter().enumerate() {
+                        set_scalar(&mut argv[k], *a);
+                    }
+                    for (k, f) in flat.iter().enumerate() {
+                        set_scalar(&mut argv[n + k], f.data[i * red_n + j]);
+                    }
+                    let r = combine(&argv)?;
+                    match r {
+                        Value::Arr(a) => acc[0] = a.scalar(),
+                        Value::Tuple(vs) => {
+                            for (k, v) in vs.iter().enumerate() {
+                                acc[k] = v.arr()?.scalar();
+                            }
+                        }
+                    }
+                }
             }
         }
-        self.out_arr(&ins.shape, out)
+        for k in 0..n {
+            outs[k][i] = acc[k];
+        }
     }
 
-    fn eval_scatter(&self, ins: &Instr, env: &Env<'_>) -> Result<Value> {
-        let operand = self.operand_arr(env, ins, 0)?;
-        let indices = self.operand_arr(env, ins, 1)?;
-        let updates = self.operand_arr(env, ins, 2)?;
-        let to_usize =
-            |v: Vec<i64>| v.into_iter().map(|d| d as usize).collect::<Vec<_>>();
-        let uwd = to_usize(ins.attr_ints_or_empty("update_window_dims")?);
-        let iwd = to_usize(ins.attr_ints_or_empty("inserted_window_dims")?);
-        let sdod = to_usize(
-            ins.attr_ints_or_empty("scatter_dims_to_operand_dims")?,
-        );
-        let ib = to_usize(ins.attr_ints_or_empty("input_batching_dims")?);
-        let sib = to_usize(
-            ins.attr_ints_or_empty("scatter_indices_batching_dims")?,
-        );
-        let ivd: usize = ins.attr("index_vector_dim")?.parse()?;
-        let comp = self.m.computation(ins.attr("to_apply")?)?;
+    let shapes: Vec<Shape> = match &ins.shape {
+        Shape::Tuple(v) => v.clone(),
+        s => vec![s.clone()],
+    };
+    let mut results = Vec::with_capacity(n);
+    for (s, mut o) in shapes.into_iter().zip(outs) {
+        let ty = s.ty()?;
+        canonicalize(ty, &mut o);
+        results.push(Value::from(ArrayV::new(ty, out_dims.clone(), o)));
+    }
+    if results.len() == 1 && !matches!(ins.shape, Shape::Tuple(_)) {
+        Ok(results.pop().unwrap())
+    } else {
+        Ok(Value::Tuple(results))
+    }
+}
 
-        let sidx_dims: Vec<usize> =
-            (0..indices.dims.len()).filter(|&d| d != ivd).collect();
-        let batch_upd: Vec<usize> = (0..updates.dims.len())
-            .filter(|d| !uwd.contains(d))
-            .collect();
-        let win_operand: Vec<usize> = (0..operand.dims.len())
-            .filter(|d| !iwd.contains(d) && !ib.contains(d))
-            .collect();
+/// The `scatter` kernel on resolved operands; `combine` evaluates the
+/// combiner for one (current, update) scalar pair.
+pub(crate) fn eval_scatter_kernel(
+    ins: &Instr,
+    operand: &ArrayV,
+    indices: &ArrayV,
+    updates: &ArrayV,
+    combine: &mut dyn FnMut(&[Value]) -> Result<Value>,
+) -> Result<Value> {
+    let to_usize =
+        |v: Vec<i64>| v.into_iter().map(|d| d as usize).collect::<Vec<_>>();
+    let uwd = to_usize(ins.attr_ints_or_empty("update_window_dims")?);
+    let iwd = to_usize(ins.attr_ints_or_empty("inserted_window_dims")?);
+    let sdod =
+        to_usize(ins.attr_ints_or_empty("scatter_dims_to_operand_dims")?);
+    let ib = to_usize(ins.attr_ints_or_empty("input_batching_dims")?);
+    let sib =
+        to_usize(ins.attr_ints_or_empty("scatter_indices_batching_dims")?);
+    let ivd: usize = ins.attr("index_vector_dim")?.parse()?;
 
-        let i_strides = strides(&indices.dims);
-        let o_strides = strides(&operand.dims);
-        let mut out = operand.data.clone();
-        let mut uidx = vec![0usize; updates.dims.len()];
-        let mut flat = 0usize;
-        let mut scoord = vec![0usize; indices.dims.len()];
-        loop {
-            for c in scoord.iter_mut() {
-                *c = 0;
-            }
-            for (bpos, &udim) in batch_upd.iter().enumerate() {
-                scoord[sidx_dims[bpos]] = uidx[udim];
-            }
-            let mut tgt = vec![0i64; operand.dims.len()];
-            for (k, &od) in sdod.iter().enumerate() {
-                let mut c = scoord.clone();
-                if ivd < indices.dims.len() {
-                    c[ivd] = k;
-                }
-                let iflat: usize = c
-                    .iter()
-                    .zip(&i_strides)
-                    .map(|(&a, &b)| a * b)
-                    .sum();
-                tgt[od] = indices.data[iflat] as i64;
-            }
-            for (&obd, &sbd) in ib.iter().zip(&sib) {
-                tgt[obd] = scoord[sbd] as i64;
-            }
-            for (k, &od) in win_operand.iter().enumerate() {
-                tgt[od] += uidx[uwd[k]] as i64;
-            }
-            let oob = tgt
-                .iter()
-                .zip(&operand.dims)
-                .any(|(&t, &d)| t < 0 || t >= d as i64);
-            if !oob {
-                let oflat: usize = tgt
-                    .iter()
-                    .zip(&o_strides)
-                    .map(|(&a, &b)| a as usize * b)
-                    .sum();
-                let cur = out[oflat];
-                let upd = updates.data[flat];
-                let argv = [
-                    Value::Arr(ArrayV::new(operand.ty, vec![], vec![cur])),
-                    Value::Arr(ArrayV::new(updates.ty, vec![], vec![upd])),
-                ];
-                let r = self.eval_suppressed(comp, &argv)?;
-                let rv = match &r {
-                    Value::Arr(a) => a.scalar(),
-                    Value::Tuple(vs) => vs[0].arr()?.scalar(),
-                };
-                out[oflat] = rv;
-            }
-            flat += 1;
-            if !next_index(&mut uidx, &updates.dims) {
-                break;
-            }
+    let sidx_dims: Vec<usize> =
+        (0..indices.dims.len()).filter(|&d| d != ivd).collect();
+    let batch_upd: Vec<usize> = (0..updates.dims.len())
+        .filter(|d| !uwd.contains(d))
+        .collect();
+    let win_operand: Vec<usize> = (0..operand.dims.len())
+        .filter(|d| !iwd.contains(d) && !ib.contains(d))
+        .collect();
+
+    let i_strides = strides(&indices.dims);
+    let o_strides = strides(&operand.dims);
+    let mut out = operand.data.clone();
+    let mut uidx = vec![0usize; updates.dims.len()];
+    let mut flat = 0usize;
+    let mut scoord = vec![0usize; indices.dims.len()];
+    // Hoisted combiner argv, rewritten in place per update.
+    let mut argv = [
+        Value::from(ArrayV::new(operand.ty, vec![], vec![0.0])),
+        Value::from(ArrayV::new(updates.ty, vec![], vec![0.0])),
+    ];
+    loop {
+        for c in scoord.iter_mut() {
+            *c = 0;
         }
-        self.out_arr(&ins.shape, out)
+        for (bpos, &udim) in batch_upd.iter().enumerate() {
+            scoord[sidx_dims[bpos]] = uidx[udim];
+        }
+        let mut tgt = vec![0i64; operand.dims.len()];
+        for (k, &od) in sdod.iter().enumerate() {
+            let mut c = scoord.clone();
+            if ivd < indices.dims.len() {
+                c[ivd] = k;
+            }
+            let iflat: usize =
+                c.iter().zip(&i_strides).map(|(&a, &b)| a * b).sum();
+            tgt[od] = indices.data[iflat] as i64;
+        }
+        for (&obd, &sbd) in ib.iter().zip(&sib) {
+            tgt[obd] = scoord[sbd] as i64;
+        }
+        for (k, &od) in win_operand.iter().enumerate() {
+            tgt[od] += uidx[uwd[k]] as i64;
+        }
+        let oob = tgt
+            .iter()
+            .zip(&operand.dims)
+            .any(|(&t, &d)| t < 0 || t >= d as i64);
+        if !oob {
+            let oflat: usize = tgt
+                .iter()
+                .zip(&o_strides)
+                .map(|(&a, &b)| a as usize * b)
+                .sum();
+            set_scalar(&mut argv[0], out[oflat]);
+            set_scalar(&mut argv[1], updates.data[flat]);
+            let r = combine(&argv)?;
+            let rv = match &r {
+                Value::Arr(a) => a.scalar(),
+                Value::Tuple(vs) => vs[0].arr()?.scalar(),
+            };
+            out[oflat] = rv;
+        }
+        flat += 1;
+        if !next_index(&mut uidx, &updates.dims) {
+            break;
+        }
+    }
+    out_arr(&ins.shape, out)
+}
+
+/// Parse a `slice={[a:b:c], ...}` attribute into per-dimension
+/// `(start, limit, stride)` ranges. Shared by the evaluator and the
+/// plan compiler ([`super::plan`]).
+pub(crate) fn parse_slice_spec(
+    spec: &str,
+) -> Result<Vec<(usize, usize, usize)>> {
+    let inner = spec.trim_start_matches('{').trim_end_matches('}');
+    let mut ranges = Vec::new();
+    for part in inner.split(',') {
+        let p = part.trim().trim_start_matches('[').trim_end_matches(']');
+        if p.is_empty() {
+            continue;
+        }
+        let nums: Vec<i64> = p
+            .split(':')
+            .map(|v| v.trim().parse::<i64>())
+            .collect::<std::result::Result<_, _>>()
+            .map_err(|_| anyhow!("bad slice range '{part}'"))?;
+        let (start, limit, stride) = match nums.len() {
+            2 => (nums[0], nums[1], 1),
+            3 => (nums[0], nums[1], nums[2]),
+            _ => bail!("bad slice range '{part}'"),
+        };
+        ranges.push((start as usize, limit as usize, stride as usize));
+    }
+    Ok(ranges)
+}
+
+/// Parse a `padding=lo_hi[_interior]x...` attribute into per-dimension
+/// `(lo, step)` pairs (step = 1 + interior). Shared by the evaluator
+/// and the plan compiler.
+pub(crate) fn parse_pad_spec(spec: &str) -> Result<Vec<(i64, i64)>> {
+    let mut cfg = Vec::new();
+    for part in spec.split('x') {
+        let nums: Vec<i64> = part
+            .split('_')
+            .map(|v| v.trim().parse::<i64>())
+            .collect::<std::result::Result<_, _>>()
+            .map_err(|_| anyhow!("bad padding group '{part}'"))?;
+        let (lo, interior) = match nums.len() {
+            2 => (nums[0], 0),
+            3 => (nums[0], nums[2]),
+            _ => bail!("bad padding group '{part}'"),
+        };
+        cfg.push((lo, 1 + interior));
+    }
+    Ok(cfg)
+}
+
+/// Recognise single-instruction scalar reducers whose per-element
+/// combine can skip the sub-computation evaluation entirely: add /
+/// multiply / maximum / minimum, plus boolean and / or when the
+/// combiner is pred-typed (any/all-style reductions). The root must
+/// combine exactly the two parameters (all recognised ops are
+/// commutative, so operand order is irrelevant). Shared by the
+/// tree-walk evaluator and the plan compiler so both take the same
+/// fast paths.
+pub(crate) fn fast_reducer_op(
+    comp: &Computation,
+    n: usize,
+) -> Option<&'static str> {
+    if n != 1 || comp.instrs.len() != 3 {
+        return None;
+    }
+    let root = comp.instrs.iter().find(|i| i.name == comp.root)?;
+    let param = |idx: &str| -> Option<&str> {
+        comp.instrs
+            .iter()
+            .find(|i| {
+                i.op == "parameter"
+                    && i.operands.first().map(String::as_str) == Some(idx)
+            })
+            .map(|i| i.name.as_str())
+    };
+    let (p0, p1) = (param("0")?, param("1")?);
+    if root.operands.len() != 2 {
+        return None;
+    }
+    let (a, b) = (root.operands[0].as_str(), root.operands[1].as_str());
+    if !((a == p0 && b == p1) || (a == p1 && b == p0)) {
+        return None;
+    }
+    match root.op.as_str() {
+        "add" => Some("add"),
+        "multiply" => Some("multiply"),
+        "maximum" => Some("maximum"),
+        "minimum" => Some("minimum"),
+        // Boolean semantics coincide with `binary`'s and/or only for
+        // pred; integer and/or are bitwise and stay on the slow path.
+        "and" if root.shape.ty().ok() == Some(DType::Pred) => Some("and"),
+        "or" if root.shape.ty().ok() == Some(DType::Pred) => Some("or"),
+        _ => None,
     }
 }
 
@@ -1355,7 +1856,7 @@ pub fn dot_dims(
 }
 
 /// Materialise a transposed copy: `out.dims[i] = in.dims[perm[i]]`.
-fn transpose(x: &ArrayV, perm: &[usize]) -> ArrayV {
+pub(crate) fn transpose(x: &ArrayV, perm: &[usize]) -> ArrayV {
     if perm.iter().enumerate().all(|(i, &p)| i == p) {
         return x.clone();
     }
@@ -1386,16 +1887,16 @@ mod tests {
     fn run1(text: &str, args: &[Value]) -> ArrayV {
         let m = parse_module(text).unwrap();
         match Evaluator::new(&m).run(args).unwrap() {
-            Value::Arr(a) => a,
+            Value::Arr(a) => (*a).clone(),
             Value::Tuple(mut v) => match v.remove(0) {
-                Value::Arr(a) => a,
+                Value::Arr(a) => (*a).clone(),
                 _ => panic!("nested tuple"),
             },
         }
     }
 
     fn f64v(dims: &[usize], data: &[f64]) -> Value {
-        Value::Arr(ArrayV::new(DType::F64, dims.to_vec(), data.to_vec()))
+        Value::from(ArrayV::new(DType::F64, dims.to_vec(), data.to_vec()))
     }
 
     #[test]
@@ -1430,8 +1931,8 @@ mod tests {
     #[test]
     fn elementwise_add_and_f32_rounding() {
         let t = "HloModule m\nENTRY e {\n  a = f32[2]{0} parameter(0)\n  b = f32[2]{0} parameter(1)\n  ROOT s = f32[2]{0} add(a, b)\n}\n";
-        let a = Value::Arr(ArrayV::new(DType::F32, vec![2], vec![0.1, 1e8]));
-        let b = Value::Arr(ArrayV::new(DType::F32, vec![2], vec![0.2, 1.0]));
+        let a = Value::from(ArrayV::new(DType::F32, vec![2], vec![0.1, 1e8]));
+        let b = Value::from(ArrayV::new(DType::F32, vec![2], vec![0.2, 1.0]));
         let r = run1(t, &[a, b]);
         assert_eq!(r.data[0], (0.1f32 + 0.2f32) as f64);
         assert_eq!(r.data[1], (1e8f32 + 1.0f32) as f64);
@@ -1505,7 +2006,7 @@ mod tests {
     fn dynamic_slice_clamps() {
         let t = "HloModule m\nENTRY e {\n  a = f64[4]{0} parameter(0)\n  i = s32[] parameter(1)\n  ROOT d = f64[2]{0} dynamic-slice(a, i), dynamic_slice_sizes={2}\n}\n";
         let a = f64v(&[4], &[1.0, 2.0, 3.0, 4.0]);
-        let i = Value::Arr(ArrayV::new(DType::S32, vec![], vec![9.0]));
+        let i = Value::from(ArrayV::new(DType::S32, vec![], vec![9.0]));
         let r = run1(t, &[a, i]); // start clamped to 2
         assert_eq!(r.data, vec![3.0, 4.0]);
     }
@@ -1515,7 +2016,7 @@ mod tests {
         let t = "HloModule m\nENTRY e {\n  a = f64[4]{0} parameter(0)\n  u = f64[2]{0} parameter(1)\n  i = s32[] parameter(2)\n  ROOT d = f64[4]{0} dynamic-update-slice(a, u, i)\n}\n";
         let a = f64v(&[4], &[1.0, 2.0, 3.0, 4.0]);
         let u = f64v(&[2], &[8.0, 9.0]);
-        let i = Value::Arr(ArrayV::new(DType::S32, vec![], vec![1.0]));
+        let i = Value::from(ArrayV::new(DType::S32, vec![], vec![1.0]));
         let r = run1(t, &[a, u, i]);
         assert_eq!(r.data, vec![1.0, 8.0, 9.0, 4.0]);
     }
@@ -1540,7 +2041,7 @@ mod tests {
             run1(
                 t,
                 &[
-                    Value::Arr(ArrayV::new(DType::S32, vec![], vec![k])),
+                    Value::from(ArrayV::new(DType::S32, vec![], vec![k])),
                     f64v(&[], &[3.0]),
                 ],
             )
@@ -1579,7 +2080,7 @@ mod tests {
         // Classic "take rows by index" gather.
         let t = "HloModule m\nENTRY e {\n  a = f64[3,2]{1,0} parameter(0)\n  i = s32[2]{0} parameter(1)\n  ROOT g = f64[2,2]{1,0} gather(a, i), offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1,2}\n}\n";
         let a = f64v(&[3, 2], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
-        let i = Value::Arr(ArrayV::new(DType::S32, vec![2], vec![2.0, 0.0]));
+        let i = Value::from(ArrayV::new(DType::S32, vec![2], vec![2.0, 0.0]));
         let r = run1(t, &[a, i]);
         assert_eq!(r.data, vec![5.0, 6.0, 1.0, 2.0]);
     }
@@ -1589,7 +2090,7 @@ mod tests {
         // Add updates into rows selected by index (combiner = add).
         let t = "HloModule m\nadd_c {\n  x = f64[] parameter(0)\n  y = f64[] parameter(1)\n  ROOT a = f64[] add(x, y)\n}\nENTRY e {\n  a = f64[3]{0} parameter(0)\n  i = s32[2]{0} parameter(1)\n  u = f64[2]{0} parameter(2)\n  ROOT s = f64[3]{0} scatter(a, i, u), update_window_dims={}, inserted_window_dims={0}, scatter_dims_to_operand_dims={0}, index_vector_dim=1, to_apply=add_c\n}\n";
         let a = f64v(&[3], &[10.0, 20.0, 30.0]);
-        let i = Value::Arr(ArrayV::new(DType::S32, vec![2], vec![2.0, 0.0]));
+        let i = Value::from(ArrayV::new(DType::S32, vec![2], vec![2.0, 0.0]));
         let u = f64v(&[2], &[1.0, 2.0]);
         let r = run1(t, &[a, i, u]);
         assert_eq!(r.data, vec![12.0, 20.0, 31.0]);
@@ -1623,7 +2124,7 @@ mod tests {
         let ev = Evaluator::with_trace(&m);
         let a = ArrayV::new(DType::F64, vec![4, 8], vec![1.0; 32]);
         let b = ArrayV::new(DType::F64, vec![8, 2], vec![1.0; 16]);
-        ev.run(&[Value::Arr(a), Value::Arr(b)]).unwrap();
+        ev.run(&[Value::from(a), Value::from(b)]).unwrap();
         let trace = ev.take_trace();
         let dots: Vec<_> = trace.iter().filter(|e| e.op == "dot").collect();
         assert_eq!(dots.len(), 1);
@@ -1643,8 +2144,8 @@ mod tests {
     fn threefry_style_bit_mix_is_exact() {
         // xor/shift/or on u32 stay in the integer domain.
         let t = "HloModule m\nENTRY e {\n  a = u32[1]{0} parameter(0)\n  b = u32[1]{0} parameter(1)\n  s = u32[1]{0} add(a, b)\n  k = u32[1]{0} constant({13})\n  w = u32[1]{0} constant({19})\n  l = u32[1]{0} shift-left(s, k)\n  r = u32[1]{0} shift-right-logical(s, w)\n  o = u32[1]{0} or(l, r)\n  ROOT x = u32[1]{0} xor(o, a)\n}\n";
-        let a = Value::Arr(ArrayV::new(DType::U32, vec![1], vec![0xDEADBEEFu32 as f64]));
-        let b = Value::Arr(ArrayV::new(DType::U32, vec![1], vec![0x12345678u32 as f64]));
+        let a = Value::from(ArrayV::new(DType::U32, vec![1], vec![0xDEADBEEFu32 as f64]));
+        let b = Value::from(ArrayV::new(DType::U32, vec![1], vec![0x12345678u32 as f64]));
         let r = run1(t, &[a, b]);
         let s = 0xDEADBEEFu32.wrapping_add(0x12345678);
         let want = ((s << 13) | (s >> 19)) ^ 0xDEADBEEF;

@@ -4,14 +4,19 @@
 //! traffic, `dot` contractions, variadic `reduce`, `gather`/`scatter`,
 //! and the threefry RNG bit ops). It makes the whole artifact path —
 //! `run`, `train`, test-vector round-trips — work offline with no XLA
-//! library, at interpreter speed.
+//! library, executing compile-once plans over copy-on-write tensors.
 //!
-//! Split: [`parser`] (HLO text -> `Module`), [`eval`] (the evaluator).
-//! `python/tools/hlo_interp.py` is the executable specification,
-//! validated against JAX numerics for every artifact.
+//! Split: [`parser`] (HLO text -> `Module`), [`eval`] (op kernels +
+//! the tree-walk reference evaluator), [`plan`] (compile-once
+//! slot-indexed execution plans — the default execution path; set
+//! `MANTICORE_NATIVE_REFERENCE=1` to fall back to the tree walk).
+//! Both paths share the op kernels in [`eval`], so they are
+//! bit-identical; `python/tools/hlo_interp.py` is the executable
+//! specification, validated against JAX numerics for every artifact.
 
 pub mod eval;
 pub mod parser;
+pub mod plan;
 
 use self::eval::{ArrayV, Evaluator, Value};
 use self::parser::{DType, Module};
@@ -19,12 +24,41 @@ use super::backend::{Backend, Executable};
 use super::Tensor;
 use anyhow::{bail, Context, Result};
 
+pub use self::eval::{
+    native_threads, set_native_threads, set_native_threads_if_unset,
+};
+
+/// True when `MANTICORE_NATIVE_REFERENCE=1`: execute through the
+/// tree-walk reference evaluator instead of the compiled plan (the
+/// escape hatch the plan-vs-reference parity tests and bisections
+/// use). Plans are still compiled — compile is where unsupported
+/// modules are rejected — they just aren't executed.
+pub fn reference_mode() -> bool {
+    std::env::var("MANTICORE_NATIVE_REFERENCE")
+        .map(|v| v == "1")
+        .unwrap_or(false)
+}
+
 /// The pure-Rust HLO interpreter backend.
 pub struct NativeBackend;
 
 impl NativeBackend {
     pub fn new() -> NativeBackend {
         NativeBackend
+    }
+
+    /// Compile to the concrete executable type. The parity tests and
+    /// the `native_exec` bench need both execution paths and plan
+    /// introspection, which the `Backend::compile` trait object hides.
+    pub fn compile_native(
+        &self,
+        name: &str,
+        hlo_text: &str,
+    ) -> Result<NativeExecutable> {
+        let module = parse_checked("native", name, hlo_text)?;
+        let plan = plan::compile(&module)
+            .with_context(|| format!("[native] planning '{name}'"))?;
+        Ok(NativeExecutable { name: name.to_string(), module, plan })
     }
 }
 
@@ -44,8 +78,7 @@ impl Backend for NativeBackend {
     }
 
     fn compile(&self, name: &str, hlo_text: &str) -> Result<Box<dyn Executable>> {
-        let module = parse_checked("native", name, hlo_text)?;
-        Ok(Box::new(NativeExecutable { name: name.to_string(), module }))
+        Ok(Box::new(self.compile_native(name, hlo_text)?))
     }
 }
 
@@ -77,25 +110,63 @@ pub(crate) fn parse_checked(
     Ok(module)
 }
 
-/// A parsed module plus its artifact name (for error context).
+/// A parsed module, its compile-once execution plan, and the artifact
+/// name (for error context). The plan is immutable and `Sync`: one
+/// `NativeExecutable` behind an `Arc` serves every worker thread (the
+/// serve subsystem's compile-once cache shares the plan fleet-wide).
 pub struct NativeExecutable {
     name: String,
     module: Module,
+    plan: plan::Plan,
 }
 
-impl Executable for NativeExecutable {
-    fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+impl NativeExecutable {
+    /// The compiled execution plan (bench/diagnostic surface).
+    pub fn plan(&self) -> &plan::Plan {
+        &self.plan
+    }
+
+    /// Execute through the tree-walk reference evaluator regardless of
+    /// `MANTICORE_NATIVE_REFERENCE` — the parity tests drive both
+    /// paths from one compiled executable.
+    pub fn execute_reference(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let args: Vec<Value> = inputs.iter().map(tensor_to_value).collect();
         let out = Evaluator::new(&self.module)
             .run(&args)
             .with_context(|| format!("[native] executing '{}'", self.name))?;
-        match out {
-            Value::Tuple(vs) => vs
-                .iter()
-                .map(|v| value_to_tensor(v.arr()?))
-                .collect::<Result<Vec<_>>>(),
-            Value::Arr(a) => Ok(vec![value_to_tensor(&a)?]),
+        value_to_tensors(out)
+    }
+
+    /// Execute through the compiled plan regardless of
+    /// `MANTICORE_NATIVE_REFERENCE` — the counterpart of
+    /// [`NativeExecutable::execute_reference`], so parity tests and
+    /// benches compare the two paths no matter the ambient env.
+    pub fn execute_planned(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let args: Vec<Value> = inputs.iter().map(tensor_to_value).collect();
+        let out = plan::PlanExecutor::new(&self.plan)
+            .run(&args)
+            .with_context(|| format!("[native] executing '{}'", self.name))?;
+        value_to_tensors(out)
+    }
+}
+
+impl Executable for NativeExecutable {
+    fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if reference_mode() {
+            return self.execute_reference(inputs);
         }
+        self.execute_planned(inputs)
+    }
+}
+
+/// Unpack an execution result (tuple or single array) into tensors.
+pub(crate) fn value_to_tensors(out: Value) -> Result<Vec<Tensor>> {
+    match out {
+        Value::Tuple(vs) => vs
+            .iter()
+            .map(|v| value_to_tensor(v.arr()?))
+            .collect::<Result<Vec<_>>>(),
+        Value::Arr(a) => Ok(vec![value_to_tensor(&a)?]),
     }
 }
 
@@ -107,7 +178,7 @@ pub(crate) fn tensor_to_value(t: &Tensor) -> Value {
         Tensor::I32(v, _) => (DType::S32, v.iter().map(|&x| x as f64).collect()),
         Tensor::U32(v, _) => (DType::U32, v.iter().map(|&x| x as f64).collect()),
     };
-    Value::Arr(ArrayV::new(ty, dims, data))
+    Value::from(ArrayV::new(ty, dims, data))
 }
 
 pub(crate) fn value_to_tensor(a: &ArrayV) -> Result<Tensor> {

@@ -1,0 +1,859 @@
+//! Compile-once execution plans: the fast path of `NativeBackend`.
+//!
+//! [`compile`] lowers a parsed [`Module`] into a [`Plan`]: per
+//! computation, a dense step stream whose operand *names* are resolved
+//! to value-slot indices at compile time — execution indexes a flat
+//! `Vec<Option<Value>>` instead of hashing instruction names into a
+//! `HashMap` per instruction per call. On top of the slots the
+//! compiler does, once per artifact:
+//!
+//! * **constant folding of literals** — `constant(...)` payloads are
+//!   parsed and canonicalised at compile time; executing one is an
+//!   `Arc` refcount bump (the tree-walk evaluator re-parsed every
+//!   literal on every call — and on every `while` iteration for
+//!   constants inside loop bodies);
+//! * **liveness analysis** — each slot records the step after which it
+//!   is dead; the executor frees it there, so tensor buffers drop as
+//!   early as possible and, because [`Value`] is copy-on-write
+//!   (`Arc<ArrayV>`), a buffer whose last reader died becomes uniquely
+//!   owned and can be mutated in place;
+//! * **in-place `dynamic-update-slice`** — when the base operand dies
+//!   at the update and the element types agree, the step is lowered to
+//!   [`StepKind::DusInPlace`]: the Pallas grid loops rewrite their
+//!   accumulator tile every iteration, and this turns that from
+//!   clone-the-tensor into write-the-window;
+//! * **combiner classification** — `reduce` combiners are classified
+//!   once ([`fast_reducer_op`]) instead of per executed reduce.
+//!
+//! Numerics are shared with the tree-walk [`Evaluator`]
+//! (`eval::eval_array_op` and the reduce/scatter kernels), so planned
+//! execution is bit-identical to the reference path — asserted over
+//! every checked-in artifact by `rust/tests/plan_parity.rs`. The
+//! reference path stays reachable via `MANTICORE_NATIVE_REFERENCE=1`.
+//!
+//! [`Evaluator`]: super::eval::Evaluator
+
+use super::eval::{
+    dot_dims, dus_into, eval_array_op, eval_reduce_kernel,
+    eval_scatter_kernel, fast_reducer_op, kernel_broadcast_with,
+    kernel_dynamic_slice_with, kernel_pad_with, kernel_slice_with, out_arr,
+    parse_pad_spec, parse_slice_spec, transpose, ArrayV, TraceEvent, Value,
+    MAX_WHILE_ITERS, TRACE_SKIP,
+};
+use super::parser::{parse_literal, Instr, Module};
+use anyhow::{bail, Context, Result};
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+
+/// A module lowered to slot-indexed step streams. Immutable after
+/// [`compile`]; shared by every executing thread (the serve worker
+/// pool holds one plan per cached executable).
+pub struct Plan {
+    comps: Vec<PlanComp>,
+    entry: usize,
+}
+
+impl Plan {
+    /// Number of compiled computations.
+    pub fn n_computations(&self) -> usize {
+        self.comps.len()
+    }
+
+    /// Total steps across all computations.
+    pub fn n_steps(&self) -> usize {
+        self.comps.iter().map(|c| c.steps.len()).sum()
+    }
+}
+
+/// One compiled computation: a step per instruction, one value slot
+/// per step.
+struct PlanComp {
+    name: String,
+    n_slots: usize,
+    steps: Vec<Step>,
+    /// Slot holding the computation's root value.
+    root: usize,
+}
+
+/// One compiled instruction.
+struct Step {
+    /// The source instruction (owned clone: attributes for the op
+    /// kernels, name/op for traces and error context).
+    ins: Instr,
+    kind: StepKind,
+    /// Operand slot indices (parallel to `ins.operands`; empty for
+    /// parameter/constant, whose "operands" are not value names).
+    args: Vec<usize>,
+    /// Destination slot.
+    out: usize,
+    /// Slots whose values are dead after this step (liveness): the
+    /// executor clears them so buffers drop early and copy-on-write
+    /// mutation can run in place once the last reader is gone.
+    kills: Vec<usize>,
+}
+
+enum StepKind {
+    /// Copy caller argument `index` into the out slot. `take` moves
+    /// the value instead of cloning when this is the only parameter
+    /// step reading that index — the hand-off that lets a while body
+    /// mutate its loop state in place.
+    Param { index: usize, take: bool },
+    /// Pre-parsed, pre-canonicalised constant; executing is an `Arc`
+    /// refcount bump.
+    Const(Value),
+    Tuple,
+    GetTupleElement(usize),
+    Call(usize),
+    While { cond: usize, body: usize },
+    /// `conditional` with `branch_computations` (indexed form).
+    CondIndexed(Vec<usize>),
+    /// `conditional` with true/false computations.
+    CondPred { on_true: usize, on_false: usize },
+    Reduce { comp: usize, fast: Option<&'static str> },
+    Scatter { comp: usize },
+    /// Data-movement ops with their string attributes lowered once at
+    /// compile time — grid loops execute these per iteration, and the
+    /// per-call `attr_ints`/spec parsing (string splits + allocs) was
+    /// exactly the kind of issue-path overhead plans exist to strip.
+    Slice(Vec<(usize, usize, usize)>),
+    Pad(Vec<(i64, i64)>),
+    Broadcast(Vec<usize>),
+    Transpose(Vec<usize>),
+    DynamicSlice(Vec<usize>),
+    /// `dynamic-update-slice` whose base dies at this step and whose
+    /// base/update/result element types agree: take the base and
+    /// write the update window in place when uniquely owned.
+    DusInPlace,
+    /// Any other op: the shared array kernel (`eval::eval_array_op`).
+    Kernel,
+}
+
+/// Lower a parsed module into a [`Plan`].
+pub fn compile(m: &Module) -> Result<Plan> {
+    let ids: HashMap<&str, usize> = m
+        .computations
+        .keys()
+        .enumerate()
+        .map(|(i, name)| (name.as_str(), i))
+        .collect();
+    let mut comps = Vec::with_capacity(ids.len());
+    for comp in m.computations.values() {
+        comps.push(compile_comp(m, comp, &ids).with_context(|| {
+            format!("planning computation '{}'", comp.name)
+        })?);
+    }
+    let entry = *ids
+        .get(m.entry.as_str())
+        .with_context(|| format!("unknown entry computation '{}'", m.entry))?;
+    Ok(Plan { comps, entry })
+}
+
+fn comp_id(ids: &HashMap<&str, usize>, name: &str) -> Result<usize> {
+    ids.get(name)
+        .copied()
+        .with_context(|| format!("unknown computation '{name}'"))
+}
+
+fn compile_conditional(
+    ids: &HashMap<&str, usize>,
+    ins: &Instr,
+) -> Result<StepKind> {
+    if let Some(branches) = ins.attrs.get("branch_computations") {
+        let mut cids = Vec::new();
+        for name in branches
+            .trim_start_matches('{')
+            .trim_end_matches('}')
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+        {
+            cids.push(comp_id(ids, name)?);
+        }
+        if cids.is_empty() {
+            bail!("conditional with no branches");
+        }
+        return Ok(StepKind::CondIndexed(cids));
+    }
+    Ok(StepKind::CondPred {
+        on_true: comp_id(ids, ins.attr("true_computation")?)?,
+        on_false: comp_id(ids, ins.attr("false_computation")?)?,
+    })
+}
+
+fn compile_comp(
+    m: &Module,
+    comp: &super::parser::Computation,
+    ids: &HashMap<&str, usize>,
+) -> Result<PlanComp> {
+    let n = comp.instrs.len();
+    // Operand names resolve against the instructions *before* the
+    // current one, matching the tree-walk evaluator's env semantics
+    // (duplicate names shadow; forward references are errors).
+    let mut slot_of: HashMap<&str, usize> = HashMap::with_capacity(n);
+    let mut steps: Vec<Step> = Vec::with_capacity(n);
+    // Parameter index -> number of parameter steps reading it (a
+    // unique reader may take the argument instead of cloning it).
+    let mut param_reads: HashMap<usize, usize> = HashMap::new();
+    for (i, ins) in comp.instrs.iter().enumerate() {
+        let mut args: Vec<usize> = Vec::new();
+        let kind = match ins.op.as_str() {
+            "parameter" => {
+                let index: usize = ins
+                    .operands
+                    .first()
+                    .map(|s| s.parse())
+                    .transpose()
+                    .ok()
+                    .flatten()
+                    .unwrap_or(0);
+                *param_reads.entry(index).or_insert(0) += 1;
+                StepKind::Param { index, take: false }
+            }
+            "constant" => {
+                let lit = ins.literal.as_deref().unwrap_or("");
+                let mut vals = parse_literal(lit)?;
+                let n_elems = ins.shape.elems();
+                if vals.len() == 1 && n_elems > 1 {
+                    vals = vec![vals[0]; n_elems];
+                }
+                if vals.len() != n_elems {
+                    bail!(
+                        "constant arity {} != shape {:?}",
+                        vals.len(),
+                        ins.shape.dims()
+                    );
+                }
+                StepKind::Const(out_arr(&ins.shape, vals)?)
+            }
+            op => {
+                for name in &ins.operands {
+                    let s = *slot_of.get(name.as_str()).with_context(|| {
+                        format!("{}: unknown operand '{name}'", ins.name)
+                    })?;
+                    args.push(s);
+                }
+                let min = match op {
+                    "scatter" => 3,
+                    "reduce" | "pad" => 2,
+                    "get-tuple-element" | "while" | "conditional"
+                    | "slice" | "broadcast" | "transpose"
+                    | "dynamic-slice" => 1,
+                    _ => 0,
+                };
+                if args.len() < min {
+                    bail!(
+                        "{}: {op} expects at least {min} operand(s), got {}",
+                        ins.name,
+                        args.len()
+                    );
+                }
+                match op {
+                    "tuple" => StepKind::Tuple,
+                    "get-tuple-element" => {
+                        StepKind::GetTupleElement(ins.attr("index")?.parse()?)
+                    }
+                    "call" => {
+                        StepKind::Call(comp_id(ids, ins.attr("to_apply")?)?)
+                    }
+                    "while" => StepKind::While {
+                        cond: comp_id(ids, ins.attr("condition")?)?,
+                        body: comp_id(ids, ins.attr("body")?)?,
+                    },
+                    "conditional" => compile_conditional(ids, ins)?,
+                    "reduce" => {
+                        let cname = ins.attr("to_apply")?;
+                        let c = m.computation(cname)?;
+                        StepKind::Reduce {
+                            comp: comp_id(ids, cname)?,
+                            fast: fast_reducer_op(c, args.len() / 2),
+                        }
+                    }
+                    "scatter" => StepKind::Scatter {
+                        comp: comp_id(ids, ins.attr("to_apply")?)?,
+                    },
+                    "slice" => StepKind::Slice(parse_slice_spec(
+                        ins.attr("slice")?,
+                    )?),
+                    "pad" => {
+                        StepKind::Pad(parse_pad_spec(ins.attr("padding")?)?)
+                    }
+                    "broadcast" => StepKind::Broadcast(
+                        ins.attr_ints_or_empty("dimensions")?
+                            .iter()
+                            .map(|&d| d as usize)
+                            .collect(),
+                    ),
+                    "transpose" => StepKind::Transpose(
+                        ins.attr_ints("dimensions")?
+                            .iter()
+                            .map(|&d| d as usize)
+                            .collect(),
+                    ),
+                    "dynamic-slice" => StepKind::DynamicSlice(
+                        ins.attr_ints("dynamic_slice_sizes")?
+                            .iter()
+                            .map(|&v| v as usize)
+                            .collect(),
+                    ),
+                    _ => StepKind::Kernel,
+                }
+            }
+        };
+        steps.push(Step { ins: ins.clone(), kind, args, out: i, kills: Vec::new() });
+        slot_of.insert(ins.name.as_str(), i);
+    }
+    let root = *slot_of
+        .get(comp.root.as_str())
+        .with_context(|| format!("missing root '{}'", comp.root))?;
+
+    // A parameter index with a unique reader is moved, not cloned.
+    for step in steps.iter_mut() {
+        if let StepKind::Param { index, take } = &mut step.kind {
+            *take = param_reads.get(index).copied().unwrap_or(0) == 1;
+        }
+    }
+
+    // Liveness: a slot dies after its last reading step; never-read
+    // slots (dead code) die at their own defining step. The root slot
+    // survives the whole computation.
+    let mut last_use = vec![usize::MAX; n];
+    for (t, step) in steps.iter().enumerate() {
+        for &s in &step.args {
+            last_use[s] = t;
+        }
+    }
+    let mut kills: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (s, &lu) in last_use.iter().enumerate() {
+        if s == root {
+            continue;
+        }
+        if lu == usize::MAX {
+            kills[s].push(s);
+        } else {
+            kills[lu].push(s);
+        }
+    }
+    for (t, step) in steps.iter_mut().enumerate() {
+        step.kills = std::mem::take(&mut kills[t]);
+    }
+
+    // Lower dynamic-update-slice to the in-place form where the base
+    // dies at the update (slot index == defining instruction index, so
+    // operand dtypes are known statically).
+    for step in steps.iter_mut() {
+        if step.ins.op != "dynamic-update-slice"
+            || !matches!(step.kind, StepKind::Kernel)
+            || step.args.len() < 2
+        {
+            continue;
+        }
+        let base = step.args[0];
+        if !step.kills.contains(&base) || step.args[1..].contains(&base) {
+            continue;
+        }
+        let tys = (
+            comp.instrs[base].shape.ty().ok(),
+            comp.instrs[step.args[1]].shape.ty().ok(),
+            step.ins.shape.ty().ok(),
+        );
+        if let (Some(a), Some(b), Some(c)) = tys {
+            if a == b && b == c {
+                step.kind = StepKind::DusInPlace;
+            }
+        }
+    }
+
+    Ok(PlanComp { name: comp.name.clone(), n_slots: n, steps, root })
+}
+
+/// Executes a [`Plan`]. Mirrors `Evaluator`'s surface (optional
+/// execution trace, combiner suppression) so `SimBackend` gets one
+/// [`TraceEvent`] per executed plan step — including loop bodies once
+/// per iteration — exactly as it did from the tree walk. Create one
+/// per call; the plan itself is the shared immutable part.
+pub struct PlanExecutor<'p> {
+    plan: &'p Plan,
+    trace: Option<RefCell<Vec<TraceEvent>>>,
+    /// >0 while inside a reduce/scatter combiner sub-execution.
+    suppress: Cell<u32>,
+}
+
+impl<'p> PlanExecutor<'p> {
+    pub fn new(plan: &'p Plan) -> PlanExecutor<'p> {
+        PlanExecutor { plan, trace: None, suppress: Cell::new(0) }
+    }
+
+    /// An executor that records a [`TraceEvent`] per executed step;
+    /// collect with [`PlanExecutor::take_trace`] after `run`.
+    pub fn with_trace(plan: &'p Plan) -> PlanExecutor<'p> {
+        PlanExecutor {
+            plan,
+            trace: Some(RefCell::new(Vec::new())),
+            suppress: Cell::new(0),
+        }
+    }
+
+    /// Drain the recorded trace (empty when tracing is off).
+    pub fn take_trace(&self) -> Vec<TraceEvent> {
+        self.trace.as_ref().map(|t| t.take()).unwrap_or_default()
+    }
+
+    /// Execute the entry computation.
+    pub fn run(&self, args: &[Value]) -> Result<Value> {
+        self.exec(self.plan.entry, args.to_vec())
+    }
+
+    fn exec(&self, id: usize, mut args: Vec<Value>) -> Result<Value> {
+        let comp = &self.plan.comps[id];
+        let mut slots: Vec<Option<Value>> = vec![None; comp.n_slots];
+        for step in &comp.steps {
+            self.record(step, &slots);
+            let v = self
+                .exec_step(step, &mut args, &mut slots)
+                .with_context(|| {
+                    format!("evaluating {} = {}(..)", step.ins.name, step.ins.op)
+                })?;
+            slots[step.out] = Some(v);
+            apply_kills(step, &mut slots);
+            if step.kills.contains(&step.out) {
+                // Dead result (never read): free it immediately.
+                slots[step.out] = None;
+            }
+        }
+        slots[comp.root]
+            .take()
+            .with_context(|| format!("missing root '{}'", comp.name))
+    }
+
+    fn exec_step(
+        &self,
+        step: &Step,
+        args: &mut [Value],
+        slots: &mut [Option<Value>],
+    ) -> Result<Value> {
+        match &step.kind {
+            StepKind::Param { index, take } => {
+                if *index >= args.len() {
+                    bail!("parameter({index}) out of range");
+                }
+                Ok(if *take {
+                    std::mem::replace(
+                        &mut args[*index],
+                        Value::Tuple(Vec::new()),
+                    )
+                } else {
+                    args[*index].clone()
+                })
+            }
+            StepKind::Const(v) => Ok(v.clone()),
+            StepKind::Tuple => {
+                let mut vs = Vec::with_capacity(step.args.len());
+                for &s in &step.args {
+                    vs.push(slot_value(slots, s, &step.ins)?);
+                }
+                Ok(Value::Tuple(vs))
+            }
+            StepKind::GetTupleElement(idx) => {
+                let t = slot_ref(slots, step.args[0], &step.ins)?.tuple()?;
+                t.get(*idx)
+                    .cloned()
+                    .with_context(|| format!("tuple index {idx} out of range"))
+            }
+            StepKind::Call(cid) => {
+                let argv = self.take_args(step, slots)?;
+                self.exec(*cid, argv)
+            }
+            StepKind::While { cond, body } => {
+                // Applying the kills before iterating releases the
+                // caller's reference to the initial state, so the body
+                // owns its loop state uniquely and copy-on-write
+                // updates (DusInPlace, in particular) mutate in place
+                // instead of cloning each iteration.
+                let mut argv = self.take_args(step, slots)?;
+                if argv.is_empty() {
+                    bail!("while without operand");
+                }
+                let mut state = argv.swap_remove(0);
+                for _ in 0..MAX_WHILE_ITERS {
+                    let c = self.exec(*cond, vec![state.clone()])?;
+                    if c.arr()?.scalar() == 0.0 {
+                        return Ok(state);
+                    }
+                    state = self.exec(*body, vec![state])?;
+                }
+                bail!("while iteration cap ({MAX_WHILE_ITERS}) exceeded")
+            }
+            StepKind::CondPred { on_true, on_false } => {
+                let sel =
+                    slot_ref(slots, step.args[0], &step.ins)?.arr()?.scalar();
+                let (cid, argi) =
+                    if sel != 0.0 { (*on_true, 1) } else { (*on_false, 2) };
+                let slot = *step.args.get(argi).with_context(|| {
+                    format!("{}: missing operand {argi}", step.ins.name)
+                })?;
+                let arg = slot_value(slots, slot, &step.ins)?;
+                apply_kills(step, slots);
+                self.exec(cid, vec![arg])
+            }
+            StepKind::CondIndexed(branches) => {
+                let sel =
+                    slot_ref(slots, step.args[0], &step.ins)?.arr()?.scalar();
+                let k = (sel as i64).clamp(0, branches.len() as i64 - 1)
+                    as usize;
+                let slot = *step.args.get(1 + k).with_context(|| {
+                    format!("{}: missing operand {}", step.ins.name, 1 + k)
+                })?;
+                let arg = slot_value(slots, slot, &step.ins)?;
+                apply_kills(step, slots);
+                self.exec(branches[k], vec![arg])
+            }
+            StepKind::Reduce { comp, fast } => {
+                let cnt = step.args.len() / 2;
+                let mut ops: Vec<&ArrayV> = Vec::with_capacity(cnt);
+                let mut inits: Vec<&ArrayV> = Vec::with_capacity(cnt);
+                for (pos, &s) in step.args.iter().enumerate() {
+                    let a = slot_arr(slots, s, &step.ins)?;
+                    if pos < cnt {
+                        ops.push(a);
+                    } else {
+                        inits.push(a);
+                    }
+                }
+                let cid = *comp;
+                eval_reduce_kernel(&step.ins, &ops, &inits, *fast, &mut |argv| {
+                    self.exec_suppressed(cid, argv.to_vec())
+                })
+            }
+            StepKind::Scatter { comp } => {
+                let operand = slot_arr(slots, step.args[0], &step.ins)?;
+                let indices = slot_arr(slots, step.args[1], &step.ins)?;
+                let updates = slot_arr(slots, step.args[2], &step.ins)?;
+                let cid = *comp;
+                eval_scatter_kernel(
+                    &step.ins,
+                    operand,
+                    indices,
+                    updates,
+                    &mut |argv| self.exec_suppressed(cid, argv.to_vec()),
+                )
+            }
+            StepKind::DusInPlace => {
+                // The base's last use is this step: take it out of its
+                // slot, so a uniquely-owned buffer is updated in place
+                // (copy-on-write clones only if a reference survives
+                // elsewhere, e.g. in a still-live tuple).
+                let base = slots[step.args[0]].take().with_context(|| {
+                    format!(
+                        "{}: operand slot {} is dead",
+                        step.ins.name, step.args[0]
+                    )
+                })?;
+                let u = slot_arr(slots, step.args[1], &step.ins)?;
+                let mut starts: Vec<&ArrayV> =
+                    Vec::with_capacity(step.args.len().saturating_sub(2));
+                for &s in &step.args[2..] {
+                    starts.push(slot_arr(slots, s, &step.ins)?);
+                }
+                dus_into(&step.ins, base, u, &starts)
+            }
+            StepKind::Slice(ranges) => kernel_slice_with(
+                &step.ins,
+                ranges,
+                slot_arr(slots, step.args[0], &step.ins)?,
+            ),
+            StepKind::Pad(cfg) => kernel_pad_with(
+                &step.ins,
+                cfg,
+                slot_arr(slots, step.args[0], &step.ins)?,
+                slot_arr(slots, step.args[1], &step.ins)?,
+            ),
+            StepKind::Broadcast(bdims) => kernel_broadcast_with(
+                &step.ins,
+                bdims,
+                slot_arr(slots, step.args[0], &step.ins)?,
+            ),
+            StepKind::Transpose(perm) => Ok(Value::from(transpose(
+                slot_arr(slots, step.args[0], &step.ins)?,
+                perm,
+            ))),
+            StepKind::DynamicSlice(sizes) => {
+                let mut ops: Vec<&ArrayV> =
+                    Vec::with_capacity(step.args.len());
+                for &s in &step.args {
+                    ops.push(slot_arr(slots, s, &step.ins)?);
+                }
+                kernel_dynamic_slice_with(&step.ins, sizes, &ops)
+            }
+            StepKind::Kernel => {
+                let mut ops: Vec<&ArrayV> =
+                    Vec::with_capacity(step.args.len());
+                for &s in &step.args {
+                    ops.push(slot_arr(slots, s, &step.ins)?);
+                }
+                eval_array_op(&step.ins, &ops)
+            }
+        }
+    }
+
+    /// Clone the step's operand values out of their slots, then apply
+    /// the step's kills: a value whose last use is this step drops to
+    /// a single owner before the callee runs, so the callee can mutate
+    /// it in place.
+    fn take_args(
+        &self,
+        step: &Step,
+        slots: &mut [Option<Value>],
+    ) -> Result<Vec<Value>> {
+        let mut argv = Vec::with_capacity(step.args.len());
+        for &s in &step.args {
+            argv.push(slot_value(slots, s, &step.ins)?);
+        }
+        apply_kills(step, slots);
+        Ok(argv)
+    }
+
+    fn exec_suppressed(&self, id: usize, args: Vec<Value>) -> Result<Value> {
+        self.suppress.set(self.suppress.get() + 1);
+        let r = self.exec(id, args);
+        self.suppress.set(self.suppress.get() - 1);
+        r
+    }
+
+    /// Append a trace event for a step about to execute (no-op unless
+    /// tracing is on and we're outside a combiner sub-execution).
+    /// Matches `Evaluator::record` field for field, so
+    /// `SimBackend`'s op stream is identical under either path.
+    fn record(&self, step: &Step, slots: &[Option<Value>]) {
+        let Some(tr) = &self.trace else { return };
+        if self.suppress.get() > 0
+            || TRACE_SKIP.contains(&step.ins.op.as_str())
+        {
+            return;
+        }
+        let ins = &step.ins;
+        let Some(ty) = ins.shape.leaf_ty() else { return };
+        let mut operand_elems = Vec::with_capacity(step.args.len());
+        for &s in &step.args {
+            if let Some(Value::Arr(a)) = slots.get(s).and_then(|v| v.as_ref())
+            {
+                operand_elems.push(a.data.len());
+            }
+        }
+        let dot = if ins.op == "dot" {
+            match (
+                step.args.first().and_then(|&s| slots[s].as_ref()),
+                step.args.get(1).and_then(|&s| slots[s].as_ref()),
+            ) {
+                (Some(Value::Arr(l)), Some(Value::Arr(r))) => {
+                    dot_dims(ins, &l.dims, &r.dims)
+                        .ok()
+                        .map(|d| (d.b, d.m, d.k, d.n))
+                }
+                _ => None,
+            }
+        } else {
+            None
+        };
+        tr.borrow_mut().push(TraceEvent {
+            name: ins.name.clone(),
+            op: ins.op.clone(),
+            ty,
+            out_elems: ins.shape.leaf_elems(),
+            operand_elems,
+            dot,
+        });
+    }
+}
+
+fn apply_kills(step: &Step, slots: &mut [Option<Value>]) {
+    for &s in &step.kills {
+        if s != step.out {
+            slots[s] = None;
+        }
+    }
+}
+
+fn slot_ref<'s>(
+    slots: &'s [Option<Value>],
+    s: usize,
+    ins: &Instr,
+) -> Result<&'s Value> {
+    slots[s]
+        .as_ref()
+        .with_context(|| format!("{}: operand slot {s} is dead", ins.name))
+}
+
+fn slot_value(slots: &[Option<Value>], s: usize, ins: &Instr) -> Result<Value> {
+    Ok(slot_ref(slots, s, ins)?.clone())
+}
+
+fn slot_arr<'s>(
+    slots: &'s [Option<Value>],
+    s: usize,
+    ins: &Instr,
+) -> Result<&'s ArrayV> {
+    slot_ref(slots, s, ins)?.arr()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::eval::Evaluator;
+    use super::super::parser::parse_module;
+    use super::*;
+    use crate::runtime::native::parser::DType;
+
+    /// Run a module through both paths and assert bit-identical roots.
+    fn both(text: &str, args: &[Value]) -> Value {
+        let m = parse_module(text).unwrap();
+        let reference = Evaluator::new(&m).run(args).unwrap();
+        let plan = compile(&m).unwrap();
+        let planned = PlanExecutor::new(&plan).run(args).unwrap();
+        assert_bits_eq(&reference, &planned);
+        planned
+    }
+
+    fn assert_bits_eq(a: &Value, b: &Value) {
+        match (a, b) {
+            (Value::Arr(x), Value::Arr(y)) => {
+                assert_eq!(x.dims, y.dims);
+                assert_eq!(x.ty, y.ty);
+                let xb: Vec<u64> =
+                    x.data.iter().map(|v| v.to_bits()).collect();
+                let yb: Vec<u64> =
+                    y.data.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(xb, yb);
+            }
+            (Value::Tuple(xs), Value::Tuple(ys)) => {
+                assert_eq!(xs.len(), ys.len());
+                for (x, y) in xs.iter().zip(ys) {
+                    assert_bits_eq(x, y);
+                }
+            }
+            _ => panic!("value kind mismatch"),
+        }
+    }
+
+    fn f64v(dims: &[usize], data: &[f64]) -> Value {
+        Value::from(ArrayV::new(DType::F64, dims.to_vec(), data.to_vec()))
+    }
+
+    #[test]
+    fn planned_matches_reference_elementwise_chain() {
+        let t = "HloModule m\nENTRY e {\n  a = f64[4]{0} parameter(0)\n  b = f64[4]{0} parameter(1)\n  s = f64[4]{0} add(a, b)\n  m2 = f64[4]{0} multiply(s, a)\n  ROOT r = f64[4]{0} negate(m2)\n}\n";
+        let out = both(
+            t,
+            &[f64v(&[4], &[1.0, 2.0, 3.0, 4.0]), f64v(&[4], &[0.5, 0.25, -1.0, 8.0])],
+        );
+        assert_eq!(out.arr().unwrap().data, vec![-1.5, -4.5, 6.0, -48.0]);
+    }
+
+    #[test]
+    fn planned_while_loop_and_dus_in_place() {
+        // A Pallas-style grid loop: each iteration writes a 2-wide
+        // window into an accumulator carried through the loop state.
+        let t = "HloModule m\n\
+            cond {\n  s = (s32[], f64[8]) parameter(0)\n  i = s32[] get-tuple-element(s), index=0\n  k = s32[] constant(4)\n  ROOT c = pred[] compare(i, k), direction=LT\n}\n\
+            body {\n  s = (s32[], f64[8]) parameter(0)\n  i = s32[] get-tuple-element(s), index=0\n  acc = f64[8]{0} get-tuple-element(s), index=1\n  one = s32[] constant(1)\n  two = s32[] constant(2)\n  off = s32[] multiply(i, two)\n  fi = f64[] convert(i)\n  u0 = f64[2]{0} broadcast(fi), dimensions={}\n  upd = f64[8]{0} dynamic-update-slice(acc, u0, off)\n  j = s32[] add(i, one)\n  ROOT t = (s32[], f64[8]) tuple(j, upd)\n}\n\
+            ENTRY e {\n  z = s32[] constant(0)\n  v = f64[8]{0} parameter(0)\n  t0 = (s32[], f64[8]) tuple(z, v)\n  w = (s32[], f64[8]) while(t0), condition=cond, body=body\n  ROOT r = f64[8]{0} get-tuple-element(w), index=1\n}\n";
+        let out = both(t, &[f64v(&[8], &[9.0; 8])]);
+        assert_eq!(
+            out.arr().unwrap().data,
+            vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0, 3.0, 3.0]
+        );
+        // The body's dynamic-update-slice must have been lowered to
+        // the in-place form (base dies at the update, dtypes agree).
+        let m = parse_module(t).unwrap();
+        let plan = compile(&m).unwrap();
+        let body = plan
+            .comps
+            .iter()
+            .find(|c| c.name == "body")
+            .expect("body computation");
+        let dus = body
+            .steps
+            .iter()
+            .find(|s| s.ins.op == "dynamic-update-slice")
+            .expect("dus step");
+        assert!(
+            matches!(dus.kind, StepKind::DusInPlace),
+            "expected in-place lowering"
+        );
+    }
+
+    #[test]
+    fn planned_reduce_fast_and_slow_paths() {
+        // max-reduce hits the fast path; a non-trivial combiner
+        // (x + 2y) stays on the sub-computation path.
+        let fastt = "HloModule m\nr {\n  x = f64[] parameter(0)\n  y = f64[] parameter(1)\n  ROOT m = f64[] maximum(x, y)\n}\nENTRY e {\n  a = f64[2,3]{1,0} parameter(0)\n  z = f64[] constant(-inf)\n  ROOT s = f64[2]{0} reduce(a, z), dimensions={1}, to_apply=r\n}\n";
+        let out = both(fastt, &[f64v(&[2, 3], &[1.0, 9.0, 3.0, 4.0, 5.0, 6.0])]);
+        assert_eq!(out.arr().unwrap().data, vec![9.0, 6.0]);
+
+        let slowt = "HloModule m\nr {\n  x = f64[] parameter(0)\n  y = f64[] parameter(1)\n  two = f64[] constant(2)\n  yy = f64[] multiply(y, two)\n  ROOT a = f64[] add(x, yy)\n}\nENTRY e {\n  a = f64[4]{0} parameter(0)\n  z = f64[] constant(0)\n  ROOT s = f64[] reduce(a, z), dimensions={0}, to_apply=r\n}\n";
+        let out = both(slowt, &[f64v(&[4], &[1.0, 2.0, 3.0, 4.0])]);
+        assert_eq!(out.arr().unwrap().data, vec![20.0]);
+    }
+
+    #[test]
+    fn planned_conditional_scatter_and_tuple_root() {
+        let t = "HloModule m\n\
+            bt {\n  x = f64[] parameter(0)\n  two = f64[] constant(2)\n  ROOT m = f64[] multiply(x, two)\n}\n\
+            bf {\n  x = f64[] parameter(0)\n  ROOT n = f64[] negate(x)\n}\n\
+            ENTRY e {\n  p = pred[] parameter(0)\n  x = f64[] parameter(1)\n  c = f64[] conditional(p, x, x), true_computation=bt, false_computation=bf\n  ROOT t = (f64[], f64[]) tuple(c, x)\n}\n";
+        let p1 = Value::from(ArrayV::new(DType::Pred, vec![], vec![1.0]));
+        let out = both(t, &[p1, f64v(&[], &[3.0])]);
+        let tup = out.tuple().unwrap();
+        assert_eq!(tup[0].arr().unwrap().data, vec![6.0]);
+
+        let sc = "HloModule m\ncomb {\n  x = f64[] parameter(0)\n  y = f64[] parameter(1)\n  ROOT a = f64[] add(x, y)\n}\nENTRY e {\n  a = f64[4]{0} parameter(0)\n  i = s32[2]{0} parameter(1)\n  u = f64[2]{0} parameter(2)\n  ROOT s = f64[4]{0} scatter(a, i, u), update_window_dims={}, inserted_window_dims={0}, scatter_dims_to_operand_dims={0}, index_vector_dim=1, to_apply=comb\n}\n";
+        let i = Value::from(ArrayV::new(DType::S32, vec![2], vec![3.0, 3.0]));
+        let out = both(
+            sc,
+            &[f64v(&[4], &[0.0; 4]), i, f64v(&[2], &[5.0, 6.0])],
+        );
+        assert_eq!(out.arr().unwrap().data, vec![0.0, 0.0, 0.0, 11.0]);
+    }
+
+    #[test]
+    fn dead_code_is_killed_at_definition() {
+        let t = "HloModule m\nENTRY e {\n  a = f64[2]{0} parameter(0)\n  dead = f64[2]{0} negate(a)\n  ROOT r = f64[2]{0} add(a, a)\n}\n";
+        let m = parse_module(t).unwrap();
+        let plan = compile(&m).unwrap();
+        let entry = &plan.comps[plan.entry];
+        let dead = entry
+            .steps
+            .iter()
+            .find(|s| s.ins.name == "dead")
+            .unwrap();
+        assert!(dead.kills.contains(&dead.out));
+        let out = PlanExecutor::new(&plan)
+            .run(&[f64v(&[2], &[1.0, 2.0])])
+            .unwrap();
+        assert_eq!(out.arr().unwrap().data, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn plan_trace_matches_evaluator_trace() {
+        let t = "HloModule m\nENTRY e {\n  a = f64[4,8]{1,0} parameter(0)\n  b = f64[8,2]{1,0} parameter(1)\n  d = f64[4,2]{1,0} dot(a, b), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n  ROOT r = f64[4,2]{1,0} negate(d)\n}\n";
+        let m = parse_module(t).unwrap();
+        let args = vec![
+            f64v(&[4, 8], &[1.0; 32]),
+            f64v(&[8, 2], &[1.0; 16]),
+        ];
+        let ev = Evaluator::with_trace(&m);
+        ev.run(&args).unwrap();
+        let want = ev.take_trace();
+        let plan = compile(&m).unwrap();
+        let px = PlanExecutor::with_trace(&plan);
+        px.run(&args).unwrap();
+        let got = px.take_trace();
+        assert_eq!(want.len(), got.len());
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.name, g.name);
+            assert_eq!(w.op, g.op);
+            assert_eq!(w.out_elems, g.out_elems);
+            assert_eq!(w.operand_elems, g.operand_elems);
+            assert_eq!(w.dot, g.dot);
+        }
+        assert_eq!(got[0].dot, Some((1, 4, 8, 2)));
+    }
+}

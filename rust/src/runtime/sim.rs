@@ -1,8 +1,9 @@
 //! `SimBackend` — execute HLO artifacts *on the simulated Manticore*.
 //!
-//! Numerics are delegated to the same evaluator `NativeBackend` uses
-//! (outputs are bit-identical), but the evaluator runs with an
-//! execution trace: every executed instruction — including the ones
+//! Numerics are delegated to the same compiled-plan execution path
+//! `NativeBackend` uses (outputs are bit-identical; the tree-walk
+//! evaluator remains behind `MANTICORE_NATIVE_REFERENCE=1`), run with
+//! an execution trace: every executed plan step — including the ones
 //! inside `call`/`while`/`conditional` bodies, once per iteration —
 //! becomes a [`crate::coordinator::OpTask`], and the coordinator's
 //! op-scheduling layer prices the stream on the system model:
@@ -22,7 +23,10 @@
 
 use super::backend::{Backend, ExecOutcome, Executable};
 use super::native::eval::{Evaluator, TraceEvent, Value};
-use super::native::{parse_checked, tensor_to_value, value_to_tensor};
+use super::native::plan::{self, PlanExecutor};
+use super::native::{
+    parse_checked, reference_mode, tensor_to_value, value_to_tensors,
+};
 use super::Tensor;
 use crate::cluster::ClusterConfig;
 use crate::config::Config;
@@ -85,9 +89,12 @@ impl Backend for SimBackend {
 
     fn compile(&self, name: &str, hlo_text: &str) -> Result<Box<dyn Executable>> {
         let module = parse_checked("sim", name, hlo_text)?;
+        let plan = plan::compile(&module)
+            .with_context(|| format!("[sim] planning '{name}'"))?;
         Ok(Box::new(SimExecutable {
             name: name.to_string(),
             module,
+            plan,
             co: Coordinator::new(self.sys, self.vdd)
                 .with_cluster(self.cluster),
             report: Mutex::new(None),
@@ -95,13 +102,14 @@ impl Backend for SimBackend {
     }
 }
 
-/// A parsed module plus the coordinator that prices its op stream.
-/// Shareable across threads: all per-call state (evaluator, trace,
-/// schedule) is local to the call; only the `last_report` convenience
-/// cache sits behind a lock.
+/// A parsed module, its compile-once execution plan, and the
+/// coordinator that prices its op stream. Shareable across threads:
+/// all per-call state (executor, trace, schedule) is local to the
+/// call; only the `last_report` convenience cache sits behind a lock.
 pub struct SimExecutable {
     name: String,
     module: super::native::parser::Module,
+    plan: plan::Plan,
     co: Coordinator,
     report: Mutex<Option<OpStreamReport>>,
 }
@@ -126,11 +134,25 @@ impl Executable for SimExecutable {
         slot: Option<&ClusterSlot>,
     ) -> Result<ExecOutcome> {
         let args: Vec<Value> = inputs.iter().map(tensor_to_value).collect();
-        let ev = Evaluator::with_trace(&self.module);
-        let out = ev
-            .run(&args)
-            .with_context(|| format!("[sim] executing '{}'", self.name))?;
-        let tasks = tasks_from_trace(&ev.take_trace());
+        // The compiled plan is the default execution path; its traced
+        // executor emits one TraceEvent per executed plan step (loop
+        // bodies once per iteration), so the op stream the coordinator
+        // prices is identical to the tree walk's — which stays
+        // reachable via MANTICORE_NATIVE_REFERENCE=1.
+        let (out, trace) = if reference_mode() {
+            let ev = Evaluator::with_trace(&self.module);
+            let out = ev
+                .run(&args)
+                .with_context(|| format!("[sim] executing '{}'", self.name))?;
+            (out, ev.take_trace())
+        } else {
+            let px = PlanExecutor::with_trace(&self.plan);
+            let out = px
+                .run(&args)
+                .with_context(|| format!("[sim] executing '{}'", self.name))?;
+            (out, px.take_trace())
+        };
+        let tasks = tasks_from_trace(&trace);
         let co = match slot {
             Some(s) => self.co.for_slot(s),
             None => self.co.clone(),
@@ -139,13 +161,7 @@ impl Executable for SimExecutable {
             .simulate_stream(&self.name, &tasks)
             .with_context(|| format!("[sim] scheduling '{}'", self.name))?;
         *self.report.lock().unwrap() = Some(report.clone());
-        let outputs = match out {
-            Value::Tuple(vs) => vs
-                .iter()
-                .map(|v| value_to_tensor(v.arr()?))
-                .collect::<Result<Vec<_>>>()?,
-            Value::Arr(a) => vec![value_to_tensor(&a)?],
-        };
+        let outputs = value_to_tensors(out)?;
         Ok(ExecOutcome { outputs, report: Some(report) })
     }
 }

@@ -86,7 +86,12 @@ struct Shared {
     backend: Box<dyn Backend>,
     manifest: BTreeMap<String, ArtifactMeta>,
     dir: PathBuf,
-    /// Compile-once executable cache, keyed by artifact.
+    /// Compile-once executable cache, keyed by artifact. For the
+    /// evaluator-based backends each entry owns the artifact's
+    /// compiled execution plan (`runtime::native::plan`), so slot
+    /// lowering, liveness analysis and constant folding run once per
+    /// artifact per server lifetime and are shared read-only by every
+    /// worker and batch.
     cache: Mutex<BTreeMap<String, Arc<dyn Executable>>>,
     queue: BatchQueue,
     pool: SlotPool,
@@ -155,6 +160,17 @@ impl Server {
             cfg.workers
         }
         .max(1);
+        // Divide the host's cores between the concurrent workers'
+        // GEMMs: n_workers in-flight requests each spawning
+        // all-core GEMM threads would oversubscribe the machine on
+        // the exact req/s path serving cares about. An explicit
+        // --native-threads / MANTICORE_NATIVE_THREADS setting wins.
+        let cores = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1);
+        crate::runtime::native::set_native_threads_if_unset(
+            (cores / n_workers).max(1),
+        );
         let shared = Arc::new(Shared {
             backend,
             manifest,

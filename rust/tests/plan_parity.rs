@@ -1,0 +1,96 @@
+//! Plan-vs-reference parity: planned execution must be bit-identical
+//! to the tree-walk reference evaluator on every checked-in
+//! `artifacts/` graph, for any GEMM worker count. The reference path
+//! stays reachable in production via `MANTICORE_NATIVE_REFERENCE=1`;
+//! here both paths are driven explicitly from one compiled executable
+//! (`NativeBackend::compile_native` + `execute_planned` /
+//! `execute_reference`), so the test is immune to ambient env vars.
+
+use manticore::runtime::native::{set_native_threads, NativeBackend};
+use manticore::runtime::{inputs_for_meta, load_manifest, Tensor};
+use std::path::Path;
+
+fn artifacts_present() -> bool {
+    if Path::new("artifacts/manifest.json").exists() {
+        true
+    } else {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        false
+    }
+}
+
+/// Bit-level tensor equality (f64 `==` would treat NaNs as unequal and
+/// -0.0 == 0.0; parity here means the exact same bits).
+fn assert_bits_eq(name: &str, a: &[Tensor], b: &[Tensor]) {
+    assert_eq!(a.len(), b.len(), "{name}: output arity");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.shape(), y.shape(), "{name}[{i}]: shape");
+        let xb: Vec<u64> =
+            x.to_f64_vec().iter().map(|v| v.to_bits()).collect();
+        let yb: Vec<u64> =
+            y.to_f64_vec().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(xb, yb, "{name}[{i}]: bits differ");
+    }
+}
+
+/// Every artifact the backend can compile executes bit-identically
+/// through the compiled plan and the tree-walk reference.
+#[test]
+fn planned_execution_matches_reference_on_all_artifacts() {
+    if !artifacts_present() {
+        return;
+    }
+    let manifest = load_manifest(Path::new("artifacts"), "parity").unwrap();
+    let backend = NativeBackend::new();
+    let mut checked = 0u64;
+    for (name, meta) in &manifest {
+        let text =
+            std::fs::read_to_string(format!("artifacts/{name}.hlo.txt"))
+                .unwrap();
+        let exe = match backend.compile_native(name, &text) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("skipping {name}: {e}");
+                continue;
+            }
+        };
+        let inputs = inputs_for_meta(meta, 0xC0FFEE ^ checked).unwrap();
+        let planned = exe.execute_planned(&inputs).unwrap();
+        let reference = exe.execute_reference(&inputs).unwrap();
+        assert_bits_eq(name, &planned, &reference);
+        checked += 1;
+    }
+    assert!(
+        checked >= 5,
+        "expected to check most checked-in artifacts, got {checked}"
+    );
+}
+
+/// GEMM worker count is a pure wall-clock knob: 1/2/8 threads produce
+/// the same bits (each output cell is one ascending-k chain computed
+/// by exactly one worker).
+#[test]
+fn thread_count_sweep_is_bit_identical() {
+    if !artifacts_present() {
+        return;
+    }
+    let manifest = load_manifest(Path::new("artifacts"), "parity").unwrap();
+    let backend = NativeBackend::new();
+    for name in ["matmul_f64_64", "matmul_f32_256"] {
+        let Some(meta) = manifest.get(name) else { continue };
+        let text =
+            std::fs::read_to_string(format!("artifacts/{name}.hlo.txt"))
+                .unwrap();
+        let exe = backend.compile_native(name, &text).unwrap();
+        let inputs = inputs_for_meta(meta, 7).unwrap();
+        let mut outs = Vec::new();
+        for threads in [1usize, 2, 8] {
+            set_native_threads(threads);
+            outs.push((threads, exe.execute_planned(&inputs).unwrap()));
+        }
+        let (_, first) = &outs[0];
+        for (threads, out) in &outs[1..] {
+            assert_bits_eq(&format!("{name}@{threads}t"), first, out);
+        }
+    }
+}
