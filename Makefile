@@ -10,7 +10,7 @@ PYTHON ?= python3
 BENCH_OUT ?= bench-results
 
 .PHONY: help build test artifacts fmt fmt-check clippy bench bench-smoke \
-        perf serve-smoke pytest clean
+        perf serve-smoke lower-smoke pytest clean
 
 help:
 	@echo "targets:"
@@ -21,11 +21,16 @@ help:
 	@echo "  fmt-check    cargo fmt --check"
 	@echo "  clippy       cargo clippy --all-targets -- -D warnings"
 	@echo "  bench        run every bench target"
-	@echo "  bench-smoke  perf_hotpath + native_exec + ablations with --smoke,"
-	@echo "               JSON to $(BENCH_OUT)/; each report is diffed against the"
-	@echo "               previous run. The hotpath benches (perf_hotpath,"
-	@echo "               native_exec) GATE: >25% mean-time regressions fail the"
-	@echo "               target; ablations stays a non-fatal 10% warning"
+	@echo "  bench-smoke  perf_hotpath + native_exec + sim_price + ablations with"
+	@echo "               --smoke, JSON to $(BENCH_OUT)/; each report is diffed"
+	@echo "               against the previous run. The hotpath benches"
+	@echo "               (perf_hotpath, native_exec, sim_price) GATE: >25%"
+	@echo "               mean-time regressions fail the target; ablations stays"
+	@echo "               a non-fatal 10% warning"
+	@echo "  lower-smoke  run 'manticore lower --check' over every checked-in"
+	@echo "               artifact: compiled-schedule reports must match the"
+	@echo "               trace-derived reports within 5%; the fusion-stats table"
+	@echo "               lands in $(BENCH_OUT)/lower_fusion_stats.md"
 	@echo "  perf         full (non-smoke) native_exec bench: plan-compile time"
 	@echo "               and exec time as separate JSON samples in"
 	@echo "               $(BENCH_OUT)/native_exec.json"
@@ -59,20 +64,22 @@ bench:
 # Snapshot the previous run's JSON first, then diff the fresh reports
 # against it with `manticore bench-diff` (tables kept as
 # $(BENCH_OUT)/<bench>.diff.md). The hotpath benches (perf_hotpath,
-# native_exec) are a GATING check: a >25 % mean-time regression vs the
-# cached previous run fails the target — and the CI job. ablations
-# stays a non-fatal 10 % warning (its smoke timings are noisy).
+# native_exec, sim_price) are a GATING check: a >25 % mean-time
+# regression vs the cached previous run fails the target — and the CI
+# job. ablations stays a non-fatal 10 % warning (its smoke timings are
+# noisy).
 bench-smoke:
 	mkdir -p $(BENCH_OUT)
-	@for f in perf_hotpath native_exec ablations; do \
+	@for f in perf_hotpath native_exec sim_price ablations; do \
 	  if [ -f $(BENCH_OUT)/$$f.json ]; then \
 	    cp $(BENCH_OUT)/$$f.json $(BENCH_OUT)/$$f.prev.json; \
 	  fi; \
 	done
 	$(CARGO) bench --bench perf_hotpath -- --smoke --json $(BENCH_OUT)/perf_hotpath.json
 	$(CARGO) bench --bench native_exec -- --smoke --json $(BENCH_OUT)/native_exec.json
+	$(CARGO) bench --bench sim_price -- --smoke --json $(BENCH_OUT)/sim_price.json
 	$(CARGO) bench --bench ablations -- --smoke --json $(BENCH_OUT)/ablations.json
-	@for f in perf_hotpath native_exec; do \
+	@for f in perf_hotpath native_exec sim_price; do \
 	  if [ -f $(BENCH_OUT)/$$f.prev.json ]; then \
 	    $(CARGO) run --release --quiet --bin manticore -- bench-diff \
 	      $(BENCH_OUT)/$$f.prev.json $(BENCH_OUT)/$$f.json \
@@ -125,6 +132,17 @@ serve-smoke: build
 	  --json $(BENCH_OUT)/serve_loadgen.json --shutdown \
 	  || { kill $$server_pid 2>/dev/null; exit 1; }; \
 	wait $$server_pid
+
+# Lowering smoke: `manticore lower all --check` compiles every
+# checked-in artifact through the pass pipeline, runs one calibration
+# execution each, and asserts the compiled-schedule report matches the
+# trace-derived report within 5 % (plus the fusion invariants: fused
+# never costlier, modeled FPU util <= 1). The fusion-stats table is
+# written next to the bench artifacts and uploaded by CI.
+lower-smoke: build
+	mkdir -p $(BENCH_OUT)
+	./target/release/manticore lower all --check \
+	  --stats $(BENCH_OUT)/lower_fusion_stats.md
 
 pytest:
 	$(PYTHON) -m pytest python/tests -q

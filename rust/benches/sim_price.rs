@@ -1,0 +1,108 @@
+//! sim_price bench: what one `--backend sim` execution pays for its
+//! *pricing* — trace-based (PR-4: one allocated `TraceEvent` per
+//! executed instruction, folded per event, priced per op) vs the
+//! compiled lowering pipeline (control-flow counters + a walk of the
+//! static `LoweredProgram`). Emits separate JSON samples per path so
+//! `bench-diff` tracks both independently:
+//!
+//! * `trace_price/*`    — fold a captured trace into tasks + price it
+//!   (the per-request pricing work of the old path);
+//! * `compiled_price/*` — walk the lowered program scaled by an
+//!   observed profile + price it (the new per-request pricing work,
+//!   cache off — the serve fleet additionally caches the result);
+//! * `exec_traced/*` vs `exec_compiled/*` — the full execute+price
+//!   round trip on both paths (numerics included), i.e. what a serve
+//!   request actually costs end to end.
+//!
+//! The acceptance target: compiled pricing ≥ 5x cheaper than
+//! trace-based pricing on the CNN training-step artifact (its grid
+//! loops make the trace long; the lowered program stays small).
+//!
+//! `--smoke` caps iterations (CI smoke job); `--json <path>` writes
+//! the report gated by `manticore bench-diff --fail-on-regression`.
+
+use manticore::runtime::sim::SimBackend;
+use manticore::runtime::{inputs_for_meta, load_manifest, Executable};
+use manticore::util::bench::{fmt_ns, BenchOpts, Report};
+use std::path::Path;
+
+fn main() {
+    let mut rep = Report::new(BenchOpts::from_env_args());
+
+    let manifest = match load_manifest(Path::new("artifacts"), "bench") {
+        Ok(m) => m,
+        Err(e) => {
+            println!("(skipping sim_price bench: {e})");
+            rep.finish().expect("writing bench report");
+            return;
+        }
+    };
+
+    let backend = SimBackend::new();
+    // A dot-heavy artifact (short trace) and the CNN training step
+    // (grid loops -> long trace; the acceptance target).
+    for name in ["matmul_f64_64", "cnn_train_step"] {
+        let Some(meta) = manifest.get(name) else {
+            println!("(skipping {name}: not in manifest)");
+            continue;
+        };
+        let text =
+            match std::fs::read_to_string(format!("artifacts/{name}.hlo.txt"))
+            {
+                Ok(t) => t,
+                Err(e) => {
+                    println!("(skipping {name}: {e})");
+                    continue;
+                }
+            };
+        let exe = match backend.compile_sim(name, &text) {
+            Ok(e) => e,
+            Err(e) => {
+                println!("(skipping {name}: {e})");
+                continue;
+            }
+        };
+        let inputs = inputs_for_meta(meta, 3).expect("manifest dtype");
+
+        // Capture one trace and one profile up front, so the pricing
+        // samples measure pricing alone (no numerics inside the loop).
+        let (_, trace) =
+            exe.trace_execution(&inputs).expect("traced execution");
+        let (_, profile) = exe.profile_execution(&inputs).expect("profile");
+        println!(
+            "{name}: trace {} events, profile {} loop sites",
+            trace.len(),
+            profile.loops.len()
+        );
+
+        let traced = rep.bench(&format!("sim_price/trace_price/{name}"), || {
+            std::hint::black_box(
+                exe.price_traced(&trace).expect("traced pricing"),
+            );
+        });
+        let compiled =
+            rep.bench(&format!("sim_price/compiled_price/{name}"), || {
+                std::hint::black_box(
+                    exe.price_compiled(Some(&profile), true)
+                        .expect("compiled pricing"),
+                );
+            });
+        println!(
+            "  -> {name}: trace-based pricing {} vs compiled {} ({:.1}x)\n",
+            fmt_ns(traced.mean_ns),
+            fmt_ns(compiled.mean_ns),
+            traced.mean_ns / compiled.mean_ns.max(1.0)
+        );
+
+        // Full round trips: execute + price on each path (the
+        // compiled path also exercises the per-executable cache).
+        rep.bench(&format!("sim_price/exec_traced/{name}"), || {
+            std::hint::black_box(exe.execute_traced(&inputs).expect("exec"));
+        });
+        rep.bench(&format!("sim_price/exec_compiled/{name}"), || {
+            std::hint::black_box(exe.execute(&inputs).expect("exec"));
+        });
+    }
+
+    rep.finish().expect("writing bench report");
+}

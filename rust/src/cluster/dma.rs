@@ -23,6 +23,20 @@ pub struct DmaXfer {
     pub to_tcdm: bool,
 }
 
+/// Double-buffering overlap model (used by the lowering pipeline's
+/// DMA-coalescing pass through `Coordinator::simulate_stream`): while
+/// a compute task occupies the cores, the engine streams the next
+/// working set concurrently, so a transfer hides behind adjacent
+/// compute up to this fraction of its time. What does NOT hide is the
+/// TCDM bank-conflict degradation both sides suffer when DMA and
+/// compute run at capacity — exactly the quantity
+/// `coordinator::measure_calibration` measures on this engine
+/// (`Calibration::ridge_dip`, via `gemm_all_cores_utilization` with
+/// `with_dma = true`), which is why the dip is the retained cost.
+pub fn overlap_hidden_fraction(ridge_dip: f64) -> f64 {
+    (1.0 - ridge_dip).clamp(0.0, 1.0)
+}
+
 #[derive(Debug, Clone, Copy, Default)]
 pub struct DmaStats {
     pub busy_cycles: u64,
@@ -174,6 +188,19 @@ mod tests {
             dma.step(&granted, &mut tcdm, &mut ext);
         }
         assert_eq!(&ext[32..64], &ext[0..32].to_vec()[..]);
+    }
+
+    /// The overlap fraction is consistent with the measured
+    /// calibration: strictly between 0 and 1 for the default config
+    /// (some of a transfer always hides, bank conflicts always retain
+    /// some), and clamped for degenerate dips.
+    #[test]
+    fn overlap_fraction_tracks_measured_ridge_dip() {
+        let calib = crate::coordinator::measure_calibration();
+        let f = overlap_hidden_fraction(calib.ridge_dip);
+        assert!(f > 0.0 && f < 1.0, "hidden fraction {f}");
+        assert_eq!(overlap_hidden_fraction(-0.5), 1.0);
+        assert_eq!(overlap_hidden_fraction(1.5), 0.0);
     }
 
     #[test]

@@ -213,28 +213,73 @@ pub fn dot_spec(n: u32, unroll: u32, x: u32, y: u32) -> FrepKernel {
 /// `out[i] = s · a[i]` with the scalar preloaded in `fa0` (arity 1).
 /// One FP instruction per element; all traffic through SSR streams —
 /// the shape `coordinator::OpTask::frep_kernel` lowers elementwise ops
-/// to.
+/// to. Single-op case of [`fused_elementwise_spec`].
 pub fn elementwise_spec(n: u32, arity: usize, a: u32, b: u32, out: u32) -> FrepKernel {
+    fused_elementwise_spec(n, arity, 1, a, b, out)
+}
+
+/// Multi-op elementwise kernel: `n_ops` chained FP instructions per
+/// output element over at most two external input streams plus one
+/// output stream — all three SSRs. This is the shape a *fused*
+/// elementwise chain lowers to (`coordinator::OpKind::Fused`): the
+/// first body instruction consumes the external streams, the chain's
+/// intermediates live in registers (`fa0`), and only the final
+/// instruction writes the output stream. Each element therefore costs
+/// `n_ops` FP instructions but only `arity + 1` stream accesses — the
+/// SSR paper's chained-streaming-kernel argument in spec form.
+/// `n_ops == 1` degenerates to [`elementwise_spec`]'s kernel.
+pub fn fused_elementwise_spec(
+    n: u32,
+    arity: usize,
+    n_ops: u32,
+    a: u32,
+    b: u32,
+    out: u32,
+) -> FrepKernel {
     use crate::asm::{fa, ft};
-    assert!(n >= 1);
-    let (streams, body) = if arity >= 2 {
+    assert!(n >= 1 && n_ops >= 1);
+    let read = |ssr: u8, base: u32| StreamSpec {
+        ssr,
+        base,
+        dims: vec![(n, 8)],
+        repeat: 0,
+        write: false,
+    };
+    let (streams, first, last_src) = if arity >= 2 {
         (
             vec![
-                StreamSpec { ssr: 0, base: a, dims: vec![(n, 8)], repeat: 0, write: false },
-                StreamSpec { ssr: 1, base: b, dims: vec![(n, 8)], repeat: 0, write: false },
+                read(0, a),
+                read(1, b),
                 StreamSpec { ssr: 2, base: out, dims: vec![(n, 8)], repeat: 0, write: true },
             ],
-            vec![Inst::FaddD { rd: ft(2), rs1: ft(0), rs2: ft(1) }],
+            Inst::FaddD {
+                rd: if n_ops == 1 { ft(2) } else { fa(0) },
+                rs1: ft(0),
+                rs2: ft(1),
+            },
+            ft(2),
         )
     } else {
         (
             vec![
-                StreamSpec { ssr: 0, base: a, dims: vec![(n, 8)], repeat: 0, write: false },
+                read(0, a),
                 StreamSpec { ssr: 1, base: out, dims: vec![(n, 8)], repeat: 0, write: true },
             ],
-            vec![Inst::FmulD { rd: ft(1), rs1: ft(0), rs2: fa(0) }],
+            Inst::FmulD {
+                rd: if n_ops == 1 { ft(1) } else { fa(0) },
+                rs1: ft(0),
+                rs2: fa(0),
+            },
+            ft(1),
         )
     };
+    let mut body = vec![first];
+    for _ in 0..n_ops.saturating_sub(2) {
+        body.push(Inst::FmulD { rd: fa(0), rs1: fa(0), rs2: fa(1) });
+    }
+    if n_ops >= 2 {
+        body.push(Inst::FaddD { rd: last_src, rs1: fa(0), rs2: fa(1) });
+    }
     FrepKernel { streams, body, reps: n, epilogue: Vec::new() }
 }
 
@@ -421,6 +466,55 @@ mod tests {
                 "out[{i}]"
             );
         }
+    }
+
+    /// Fused multi-op bodies validate for every legal (arity, n_ops)
+    /// combination: stream lengths still match body consumption, the
+    /// body stays pure-FP and within the FREP buffer, and the
+    /// single-op case is exactly the elementwise kernel.
+    #[test]
+    fn fused_elementwise_spec_validates_multi_op_bodies() {
+        let n = 128u32;
+        for arity in [1usize, 2] {
+            for n_ops in [1u32, 2, 3, 8, 16] {
+                let k = fused_elementwise_spec(n, arity, n_ops, 0, n * 8, 2 * n * 8);
+                assert!(
+                    validate(&k, 16).is_ok(),
+                    "arity {arity} n_ops {n_ops}: {:?}",
+                    validate(&k, 16)
+                );
+                assert_eq!(k.body.len(), n_ops as usize);
+                assert_eq!(k.streams.len(), arity.min(2) + 1);
+                assert!(k.streams.last().unwrap().write);
+                assert!(generate(&k).is_ok());
+            }
+        }
+        // 17 FP ops exceed the 16-instruction FREP buffer.
+        let too_long = fused_elementwise_spec(n, 2, 17, 0, n * 8, 2 * n * 8);
+        assert!(matches!(
+            validate(&too_long, 16),
+            Err(SpecError::BodyTooLong { .. })
+        ));
+    }
+
+    /// A fused chain program executes on the cycle-level core: the
+    /// SSR streams drain completely (the output stream writes all `n`
+    /// elements) and the core halts.
+    #[test]
+    fn fused_spec_program_runs_on_core() {
+        let n = 64u32;
+        let spec = fused_elementwise_spec(n, 2, 3, 0, n * 8, 2 * n * 8);
+        let prog = generate(&spec).unwrap();
+        let mut core = SnitchCore::new(0, CoreConfig::default(), prog);
+        let mut tcdm = Tcdm::new(128 * 1024, 32);
+        let mut ic = ICache::new(8192, 10);
+        let a: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        tcdm.write_f64_slice(0, &a);
+        tcdm.write_f64_slice(n * 8, &a);
+        let cycles = run_single(&mut core, &mut tcdm, &mut ic, 1_000_000);
+        assert!(cycles < 1_000_000, "fused kernel must halt");
+        // 3 FP instructions per element actually issued.
+        assert_eq!(core.fpu.stats.flops, 3 * n as u64);
     }
 
     #[test]

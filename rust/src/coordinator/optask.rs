@@ -84,6 +84,13 @@ pub enum OpKind {
     Reduce { elems: usize },
     /// Pure data movement (reshape/slice/pad/gather/DMA traffic).
     Data,
+    /// A fused elementwise chain: `ops` FP instructions per output
+    /// element chained through registers, with `arity` external input
+    /// streams (≤ 2; plus the output stream = 3 SSRs). Produced by the
+    /// lowering pipeline's fusion pass — the intermediates never touch
+    /// memory, which is where the fused kernel's utilization win over
+    /// per-op pricing comes from.
+    Fused { ops: usize, arity: usize },
     /// A pre-characterized DNN layer (flops/bytes carried by the task).
     Layer(LayerClass),
 }
@@ -95,6 +102,7 @@ impl OpKind {
             OpKind::Elementwise { .. } => "elementwise",
             OpKind::Reduce { .. } => "reduce",
             OpKind::Data => "data",
+            OpKind::Fused { .. } => "fused",
             OpKind::Layer(LayerClass::Conv) => "conv",
             OpKind::Layer(LayerClass::Linear) => "linear",
             OpKind::Layer(LayerClass::Pool) => "pool",
@@ -125,6 +133,13 @@ pub struct OpTask {
     pub bytes: f64,
     pub placement: Placement,
     pub count: u64,
+    /// Source ops folded into this task by the lowering passes
+    /// (fusion / DMA coalescing); 1 for a plain task.
+    pub fused: u32,
+    /// Data-movement task eligible for DMA double-buffer overlap with
+    /// the adjacent compute task (set by the lowering's coalesce
+    /// pass; see `Coordinator::simulate_stream`).
+    pub overlap: bool,
 }
 
 impl OpTask {
@@ -149,6 +164,8 @@ impl OpTask {
             bytes: b as f64 * plan.total_dma_bytes,
             placement: Placement::Hbm,
             count: 1,
+            fused: 1,
+            overlap: false,
         }
     }
 
@@ -171,6 +188,8 @@ impl OpTask {
             bytes,
             placement: auto_place(bytes),
             count: 1,
+            fused: 1,
+            overlap: false,
         }
     }
 
@@ -191,6 +210,8 @@ impl OpTask {
             bytes,
             placement: auto_place(bytes),
             count: 1,
+            fused: 1,
+            overlap: false,
         }
     }
 
@@ -206,7 +227,72 @@ impl OpTask {
             bytes,
             placement: auto_place(bytes),
             count: 1,
+            fused: 1,
+            overlap: false,
         }
+    }
+
+    /// A fused elementwise chain (the lowering pipeline's fusion
+    /// pass): `ops` FP instructions per output element run as ONE
+    /// SSR+FREP kernel over `ext_in_elems` external input elements
+    /// streamed through `arity` (≤ 2) read SSRs. Intermediates stay in
+    /// registers, so memory traffic covers only the external streams —
+    /// the operational-intensity gain over pricing each op alone.
+    /// `members` counts the source ops folded in (elementwise plus
+    /// free-riding shape-preserving data ops).
+    pub fn fused_elementwise(
+        name: &str,
+        ops: usize,
+        arity: usize,
+        out_elems: usize,
+        ext_in_elems: usize,
+        elem_bytes: usize,
+        members: u32,
+    ) -> OpTask {
+        let bytes = ((ext_in_elems + out_elems) * elem_bytes) as f64;
+        OpTask {
+            name: name.to_string(),
+            kind: OpKind::Fused { ops: ops.max(1), arity: arity.clamp(1, 2) },
+            out_elems,
+            elem_bytes,
+            flops: (ops.max(1) * out_elems) as f64,
+            bytes,
+            placement: auto_place(bytes),
+            count: 1,
+            fused: members.max(1),
+            overlap: false,
+        }
+    }
+
+    /// Coalesced adjacent data movement (the lowering pipeline's DMA
+    /// pass): `members` data ops merged into one transfer of their
+    /// combined traffic, issued as a single cluster-DMA queue entry.
+    pub fn data_coalesced(
+        name: &str,
+        bytes: f64,
+        elem_bytes: usize,
+        members: u32,
+    ) -> OpTask {
+        let eb = elem_bytes.max(1);
+        OpTask {
+            name: name.to_string(),
+            kind: OpKind::Data,
+            out_elems: ((bytes / eb as f64) as usize).max(1),
+            elem_bytes: eb,
+            flops: 0.0,
+            bytes,
+            placement: auto_place(bytes),
+            count: 1,
+            fused: members.max(1),
+            overlap: false,
+        }
+    }
+
+    /// Mark a data task as overlappable with adjacent compute under
+    /// the DMA double-buffering model.
+    pub fn with_overlap(mut self) -> OpTask {
+        self.overlap = true;
+        self
     }
 
     /// Adapter from the pre-baked DNN layer descriptors: flops/bytes
@@ -221,6 +307,8 @@ impl OpTask {
             bytes: l.bytes,
             placement: Placement::Hbm,
             count: 1,
+            fused: 1,
+            overlap: false,
         }
     }
 
@@ -264,10 +352,22 @@ impl OpTask {
                 )));
             }
         }
+        if let OpKind::Fused { ops, arity } = self.kind {
+            if ops == 0 || ops > 16 {
+                return Err(geo(format!("fused body of {ops} FP ops")));
+            }
+            if arity == 0 || arity > 2 {
+                return Err(geo(format!(
+                    "fused arity {arity} (needs {} SSR streams, have 3)",
+                    arity + 1
+                )));
+            }
+        }
         match self.kind {
             OpKind::Dot { .. }
             | OpKind::Elementwise { .. }
-            | OpKind::Reduce { .. } => {
+            | OpKind::Reduce { .. }
+            | OpKind::Fused { .. } => {
                 let k = self.frep_kernel().ok_or_else(|| TaskError::Kernel {
                     task: self.name.clone(),
                     reason: "no kernel for an FP-streaming kind".into(),
@@ -304,6 +404,17 @@ impl OpTask {
             OpKind::Reduce { elems } => {
                 Some(codegen::reduce_spec(round4(cap(elems)), 4, 0))
             }
+            OpKind::Fused { ops, arity } => {
+                let n = cap(self.out_elems);
+                Some(codegen::fused_elementwise_spec(
+                    n,
+                    arity,
+                    (ops as u32).clamp(1, 16),
+                    0,
+                    n * 8,
+                    2 * n * 8,
+                ))
+            }
             OpKind::Data | OpKind::Layer(_) => None,
         }
     }
@@ -324,6 +435,9 @@ pub struct OpReport {
     pub name: String,
     pub kind: &'static str,
     pub count: u64,
+    /// Source ops folded into this task by the lowering passes (1 for
+    /// a plain, unfused op).
+    pub fused: u32,
     pub placement: Placement,
     pub flops: f64,
     pub bytes: f64,
@@ -382,7 +496,9 @@ impl OpStreamReport {
 
     /// Render the per-op table, heaviest ops first, truncated to
     /// `max_rows` with a rollup row for the remainder plus a totals
-    /// row.
+    /// row. Fused rows (tasks carrying more than one source op) are
+    /// always rendered — the fusion decisions are the interesting part
+    /// of a lowered schedule, so truncation only rolls up plain ops.
     pub fn table(&self, max_rows: usize) -> Table {
         let mut t = Table::new(
             &format!(
@@ -395,17 +511,25 @@ impl OpStreamReport {
                 self.fpu_util * 100.0
             ),
             &[
-                "op", "kind", "count", "place", "flops", "bytes", "cycles",
-                "time", "energy", "FPU util", "ssr+frep",
+                "op", "kind", "count", "fused", "place", "flops", "bytes",
+                "cycles", "time", "energy", "FPU util", "ssr+frep",
             ],
         );
         let mut sorted: Vec<&OpReport> = self.ops.iter().collect();
         sorted.sort_by(|a, b| b.cycles.total_cmp(&a.cycles));
-        for o in sorted.iter().take(max_rows) {
+        let keep =
+            |i: usize, o: &OpReport| -> bool { i < max_rows || o.fused > 1 };
+        let mut rest: Vec<&OpReport> = Vec::new();
+        for (i, o) in sorted.iter().enumerate() {
+            if !keep(i, o) {
+                rest.push(o);
+                continue;
+            }
             t.row(vec![
                 o.name.clone(),
                 o.kind.to_string(),
                 o.count.to_string(),
+                if o.fused > 1 { o.fused.to_string() } else { "-".into() },
                 o.placement.label().to_string(),
                 fmt_si(o.flops, "flop"),
                 fmt_si(o.bytes, "B"),
@@ -416,12 +540,12 @@ impl OpStreamReport {
                 if o.ssr_frep { "yes" } else { "-" }.to_string(),
             ]);
         }
-        if sorted.len() > max_rows {
-            let rest = &sorted[max_rows..];
+        if !rest.is_empty() {
             t.row(vec![
                 format!("(+ {} more ops)", rest.len()),
                 "-".into(),
                 rest.iter().map(|o| o.count).sum::<u64>().to_string(),
+                "-".into(),
                 "-".into(),
                 fmt_si(rest.iter().map(|o| o.flops).sum(), "flop"),
                 fmt_si(rest.iter().map(|o| o.bytes).sum(), "B"),
@@ -439,6 +563,7 @@ impl OpStreamReport {
             "TOTAL".into(),
             "-".into(),
             self.ops.iter().map(|o| o.count).sum::<u64>().to_string(),
+            "-".into(),
             "-".into(),
             fmt_si(self.total_flops, "flop"),
             fmt_si(self.total_bytes, "B"),
@@ -529,6 +654,139 @@ mod tests {
         assert_eq!(err.task(), "zc");
         // A well-formed stream still schedules.
         assert_eq!(co.simulate_stream("s", &[good]).unwrap().ops.len(), 1);
+    }
+
+    /// Fused chains: kernel body carries one FP instruction per fused
+    /// op, the task prices through its combined geometry, and a fused
+    /// chain is never costlier than its members priced one by one —
+    /// the intermediates' memory traffic is what fusion removes.
+    #[test]
+    fn fused_task_validates_and_beats_unfused_members() {
+        let co = crate::coordinator::Coordinator::new(
+            crate::system::SystemConfig::default(),
+            0.9,
+        );
+        // TCDM-resident and HBM-streamed sizes; both have mem-bound
+        // members, which is where fusion's intensity gain lives.
+        for &elems in &[4096usize, 1 << 20] {
+            // Chain: c = a + b; d = c + a; e = d + b — 3 elementwise
+            // ops, 2 external input streams ({a, b}), 2 intermediates
+            // that stay in registers.
+            let fused =
+                OpTask::fused_elementwise("f", 3, 2, elems, 2 * elems, 8, 3);
+            fused.validate().unwrap();
+            let k = fused.frep_kernel().unwrap();
+            assert_eq!(k.body.len(), 3);
+            assert!(validate(&k, 16).is_ok());
+            let members: Vec<OpTask> = (0..3)
+                .map(|i| {
+                    OpTask::elementwise(
+                        &format!("m{i}"),
+                        2,
+                        elems,
+                        2 * elems,
+                        8,
+                    )
+                })
+                .collect();
+            let fr = co.simulate_task(&fused).unwrap();
+            assert_eq!(fr.fused, 3);
+            let mrs: Vec<OpReport> = members
+                .iter()
+                .map(|m| co.simulate_task(m).unwrap())
+                .collect();
+            let sum_cycles: f64 = mrs.iter().map(|m| m.cycles).sum();
+            assert!(
+                fr.cycles <= sum_cycles,
+                "{elems} elems: fused {} vs unfused {sum_cycles}",
+                fr.cycles
+            );
+            assert!(fr.fpu_util <= 1.0);
+            // Strictly higher utilization than the unfused baseline
+            // (time-weighted mean over the members).
+            let t_sum: f64 = mrs.iter().map(|m| m.time_s).sum();
+            let baseline: f64 =
+                mrs.iter().map(|m| m.fpu_util * m.time_s).sum::<f64>() / t_sum;
+            assert!(
+                fr.fpu_util > baseline,
+                "{elems} elems: fused util {} vs baseline {baseline}",
+                fr.fpu_util
+            );
+        }
+        // Legality limits surface as typed geometry errors.
+        let mut bad = OpTask::fused_elementwise("b", 3, 2, 64, 128, 8, 3);
+        bad.kind = OpKind::Fused { ops: 17, arity: 2 };
+        assert!(matches!(
+            bad.validate().unwrap_err(),
+            TaskError::Geometry { .. }
+        ));
+        bad.kind = OpKind::Fused { ops: 3, arity: 3 };
+        assert!(matches!(
+            bad.validate().unwrap_err(),
+            TaskError::Geometry { .. }
+        ));
+    }
+
+    /// DMA double-buffering: an overlap-marked data task adjacent to a
+    /// compute task is partially hidden — same stream without the mark
+    /// costs strictly more, and totals stay positive.
+    #[test]
+    fn overlap_marked_data_hides_behind_adjacent_compute() {
+        let co = crate::coordinator::Coordinator::new(
+            crate::system::SystemConfig::default(),
+            0.9,
+        );
+        let data = OpTask::data_coalesced("dma", (1 << 22) as f64, 8, 2);
+        let dot = OpTask::dot("d", 1, 512, 512, 512, 8);
+        let plain = co
+            .simulate_stream("s", &[data.clone(), dot.clone()])
+            .unwrap();
+        let overlapped = co
+            .simulate_stream("s", &[data.clone().with_overlap(), dot])
+            .unwrap();
+        let (p, o) = (&plain.ops[0], &overlapped.ops[0]);
+        assert!(
+            o.cycles < p.cycles,
+            "overlapped {} vs plain {}",
+            o.cycles,
+            p.cycles
+        );
+        assert!(o.cycles >= 0.0 && overlapped.total_cycles > 0.0);
+        assert!(overlapped.total_cycles < plain.total_cycles);
+        // Without an adjacent compute task the mark changes nothing.
+        let lone = co
+            .simulate_stream("s", &[data.clone().with_overlap()])
+            .unwrap();
+        let base = co.simulate_stream("s", &[data]).unwrap();
+        assert_eq!(lone.ops[0].cycles, base.ops[0].cycles);
+    }
+
+    /// Fused rows survive table truncation: plain ops beyond the cap
+    /// roll up, fused ones stay visible.
+    #[test]
+    fn table_truncation_keeps_fused_rows() {
+        let co = crate::coordinator::Coordinator::new(
+            crate::system::SystemConfig::default(),
+            0.9,
+        );
+        let mut tasks: Vec<OpTask> = (0..6)
+            .map(|i| {
+                OpTask::elementwise(&format!("e{i}"), 2, 4096 + i, 8192, 8)
+            })
+            .collect();
+        // A tiny fused task that sorts dead last by cycles.
+        tasks.push(OpTask::fused_elementwise("tinyfuse", 2, 1, 8, 16, 8, 2));
+        let rep = co.simulate_stream("s", &tasks).unwrap();
+        let t = rep.table(2);
+        // 2 shown + fused row + rollup + totals.
+        assert_eq!(t.rows.len(), 5);
+        assert!(
+            t.rows.iter().any(|r| r[0] == "tinyfuse"),
+            "fused row must survive truncation: {:?}",
+            t.rows
+        );
+        assert!(t.rows[3][0].contains("more ops"));
+        assert_eq!(t.rows[3][2], "4", "4 plain ops rolled up");
     }
 
     #[test]

@@ -27,6 +27,7 @@ pub mod coordinator;
 pub mod examples_support;
 pub mod interconnect;
 pub mod isa;
+pub mod lower;
 pub mod mem;
 pub mod power;
 pub mod repro;

@@ -1,0 +1,198 @@
+//! The table-driven `OpTask` classifier — the single source of truth
+//! for how an executed (or statically lowered) HLO instruction maps
+//! onto the coordinator's scheduling vocabulary. Both consumers build
+//! an [`OpShape`] and call [`task_for`]:
+//!
+//! * `runtime::sim::tasks_from_trace` classifies *observed*
+//!   `TraceEvent`s (the PR-4 trace-based pricing path, now the
+//!   reference/validation path);
+//! * `lower::lower` classifies *plan steps* at compile time (shapes
+//!   are static in HLO, so the geometry is identical).
+//!
+//! Keeping one table guarantees the compiled schedule and the traced
+//! schedule can never drift apart on op kinds.
+
+use crate::coordinator::OpTask;
+
+/// Coarse scheduling class of an HLO opcode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    /// Batched matrix contraction — priced by the GEMM tiling plan.
+    Dot,
+    /// Reduction — one FP op per input element.
+    Reduce,
+    /// Pure data movement / indexing (the tile traffic of the Pallas
+    /// interpret-mode lowering lands here).
+    Data,
+    /// Everything else the evaluator supports: unary/binary maps,
+    /// compares, selects, shifts, converts — one FP op per output
+    /// element.
+    Elementwise,
+}
+
+/// Opcode → class rows for everything that is *not* elementwise (the
+/// default class). One table, shared by trace folding and static
+/// lowering.
+const CLASS_TABLE: &[(&str, OpClass)] = &[
+    ("dot", OpClass::Dot),
+    ("reduce", OpClass::Reduce),
+    ("broadcast", OpClass::Data),
+    ("reshape", OpClass::Data),
+    ("transpose", OpClass::Data),
+    ("slice", OpClass::Data),
+    ("concatenate", OpClass::Data),
+    ("pad", OpClass::Data),
+    ("iota", OpClass::Data),
+    ("dynamic-slice", OpClass::Data),
+    ("dynamic-update-slice", OpClass::Data),
+    ("gather", OpClass::Data),
+    ("scatter", OpClass::Data),
+    ("copy", OpClass::Data),
+    ("bitcast-convert", OpClass::Data),
+];
+
+/// Classify an opcode (elementwise unless the table says otherwise).
+pub fn op_class(op: &str) -> OpClass {
+    CLASS_TABLE
+        .iter()
+        .find(|(name, _)| *name == op)
+        .map(|&(_, class)| class)
+        .unwrap_or(OpClass::Elementwise)
+}
+
+/// Shape-preserving data ops that may ride along inside an elementwise
+/// fusion group for free (pure renaming on the flat element stream —
+/// no FP instruction, no extra SSR stream).
+pub fn fusion_rider(op: &str) -> bool {
+    matches!(op, "reshape" | "copy" | "bitcast-convert")
+}
+
+/// The geometry of one op occurrence — from a `TraceEvent` at run time
+/// or from a plan step's static shapes at compile time.
+#[derive(Debug, Clone)]
+pub struct OpShape<'a> {
+    pub name: &'a str,
+    pub op: &'a str,
+    /// Storage bytes of one result element.
+    pub elem_bytes: usize,
+    /// Total result elements across tuple leaves.
+    pub out_elems: usize,
+    /// Flat element counts of each array operand.
+    pub operand_elems: &'a [usize],
+    /// `(batch, m, k, n)` for `dot` instructions.
+    pub dot: Option<(usize, usize, usize, usize)>,
+}
+
+/// Classify one op occurrence as an [`OpTask`] (None for a `dot`
+/// whose contraction dims could not be resolved).
+pub fn task_for(s: &OpShape<'_>) -> Option<OpTask> {
+    let in_elems: usize = s.operand_elems.iter().sum();
+    Some(match op_class(s.op) {
+        OpClass::Dot => {
+            let (b, m, k, n) = s.dot?;
+            OpTask::dot(s.name, b, m, k, n, s.elem_bytes)
+        }
+        OpClass::Reduce => {
+            OpTask::reduce(s.name, in_elems, s.out_elems, s.elem_bytes)
+        }
+        OpClass::Data => {
+            OpTask::data(s.name, in_elems + s.out_elems, s.elem_bytes)
+        }
+        OpClass::Elementwise => OpTask::elementwise(
+            s.name,
+            s.operand_elems.len().max(1),
+            s.out_elems,
+            in_elems,
+            s.elem_bytes,
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::OpKind;
+
+    #[test]
+    fn table_covers_the_op_vocabulary() {
+        assert_eq!(op_class("dot"), OpClass::Dot);
+        assert_eq!(op_class("reduce"), OpClass::Reduce);
+        for op in [
+            "broadcast",
+            "reshape",
+            "transpose",
+            "slice",
+            "concatenate",
+            "pad",
+            "iota",
+            "dynamic-slice",
+            "dynamic-update-slice",
+            "gather",
+            "scatter",
+            "copy",
+            "bitcast-convert",
+        ] {
+            assert_eq!(op_class(op), OpClass::Data, "{op}");
+        }
+        for op in ["add", "multiply", "negate", "compare", "select", "convert"]
+        {
+            assert_eq!(op_class(op), OpClass::Elementwise, "{op}");
+        }
+        // Riders are a strict subset of the data class.
+        for op in ["reshape", "copy", "bitcast-convert"] {
+            assert!(fusion_rider(op));
+            assert_eq!(op_class(op), OpClass::Data);
+        }
+        assert!(!fusion_rider("transpose"), "transpose moves data");
+    }
+
+    #[test]
+    fn classifier_builds_the_expected_tasks() {
+        let dot = task_for(&OpShape {
+            name: "d",
+            op: "dot",
+            elem_bytes: 8,
+            out_elems: 16,
+            operand_elems: &[32, 32],
+            dot: Some((1, 4, 8, 4)),
+        })
+        .unwrap();
+        assert!(matches!(dot.kind, OpKind::Dot { b: 1, m: 4, k: 8, n: 4 }));
+        // A dot with unresolved dims classifies to nothing (skipped),
+        // exactly as the trace path skipped it.
+        assert!(task_for(&OpShape {
+            name: "d",
+            op: "dot",
+            elem_bytes: 8,
+            out_elems: 16,
+            operand_elems: &[32, 32],
+            dot: None,
+        })
+        .is_none());
+
+        let ew = task_for(&OpShape {
+            name: "e",
+            op: "add",
+            elem_bytes: 4,
+            out_elems: 100,
+            operand_elems: &[100, 100],
+            dot: None,
+        })
+        .unwrap();
+        assert!(matches!(ew.kind, OpKind::Elementwise { arity: 2 }));
+        assert_eq!(ew.flops, 100.0);
+
+        let mv = task_for(&OpShape {
+            name: "m",
+            op: "reshape",
+            elem_bytes: 8,
+            out_elems: 64,
+            operand_elems: &[64],
+            dot: None,
+        })
+        .unwrap();
+        assert!(matches!(mv.kind, OpKind::Data));
+        assert_eq!(mv.flops, 0.0);
+        assert_eq!(mv.bytes, (128 * 8) as f64);
+    }
+}

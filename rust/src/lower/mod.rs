@@ -1,0 +1,754 @@
+//! The pass-based lowering pipeline: compile a parsed HLO module
+//! **once** into a static [`LoweredProgram`], price executions by
+//! *walking* it — trace never.
+//!
+//! PR-4's `SimBackend` re-traced every execution (one allocated
+//! `TraceEvent` per executed instruction, loop bodies once per
+//! iteration) and priced each op in isolation. This module moves all
+//! of that to compile time:
+//!
+//! 1. **Classification** — every plan step
+//!    (`runtime::native::plan::Plan`) is classified into the
+//!    [`OpTask`] vocabulary through the table-driven
+//!    [`classify`] module (shared with the trace folder — one source
+//!    of truth for op kinds), using the instruction's *static* HLO
+//!    shapes: identical geometry to what the trace observes.
+//! 2. **Fusion** ([`passes`]) — adjacent elementwise (plus
+//!    shape-preserving data) ops with matching iteration shape whose
+//!    intermediates die inside the group become ONE multi-op SSR+FREP
+//!    kernel task (`OpKind::Fused`), legal only while the external
+//!    operand streams fit the 3 SSRs. This is the paper's actual
+//!    utilization argument: chained streaming kernels, not per-op
+//!    pricing.
+//! 3. **DMA coalescing** ([`passes`]) — adjacent data-movement ops
+//!    merge into one transfer and are marked for double-buffered
+//!    overlap with the neighboring compute task
+//!    (`cluster::dma::overlap_hidden_fraction`).
+//! 4. **Trip counts** — `while` sites with the Pallas-grid constant
+//!    bound pattern resolve *symbolically* at compile time
+//!    ([`Trip::Static`]); everything else scales by the counters a
+//!    profiled execution observes ([`ExecProfile`] — a handful of
+//!    integers, not a trace).
+//!
+//! Pricing an execution is then a near-constant-time walk of the
+//! program (`LoweredProgram::tasks` → `Coordinator::simulate_stream`),
+//! independent of how many loop iterations ran.
+
+pub mod classify;
+pub mod passes;
+
+use crate::coordinator::OpTask;
+use crate::runtime::native::eval::dot_dims;
+use crate::runtime::native::parser::{Module, Shape};
+use crate::runtime::native::plan::{ExecProfile, Plan, PlanComp, StepKind};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+
+/// A `while` site's trip count resolution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trip {
+    /// Constant-bound counter loop: executes exactly this many body
+    /// iterations per site execution, known at compile time.
+    Static(u64),
+    /// Data-dependent: scaled by the observed [`ExecProfile`].
+    Dynamic,
+}
+
+/// One priced unit: a task plus the source instructions folded into it
+/// by the passes (`members.len() == 1` for a plain op).
+#[derive(Debug, Clone)]
+pub struct TaskUnit {
+    pub task: OpTask,
+    /// Source instruction names, in program order.
+    pub members: Vec<String>,
+    /// Plan step index of the first member (site identity inside the
+    /// computation; used by the passes for liveness lookups).
+    pub step: usize,
+}
+
+/// One element of a lowered computation's schedule.
+#[derive(Debug, Clone)]
+pub enum Unit {
+    Task(TaskUnit),
+    /// `call` — inline the callee at the caller's scale.
+    Call(usize),
+    /// `while` — cond runs `trips + 1` times per site execution, body
+    /// `trips` times.
+    While {
+        cond: usize,
+        body: usize,
+        trip: Trip,
+        site: (usize, usize),
+    },
+    /// `conditional` — branch scales come from observed counts.
+    Cond { branches: Vec<usize>, site: (usize, usize) },
+}
+
+/// One computation's lowered schedule, in both forms.
+#[derive(Debug)]
+pub struct LoweredComp {
+    pub name: String,
+    /// Classification only — the baseline that must match trace-based
+    /// pricing (the `lower --check` 5 % gate).
+    pub raw: Vec<Unit>,
+    /// After the fusion + DMA-coalescing passes — what production
+    /// pricing walks.
+    pub opt: Vec<Unit>,
+}
+
+/// Aggregate fusion statistics of a lowered program (static — over
+/// reachable computations, before trip scaling).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FusionStats {
+    /// Task units in the optimized schedule.
+    pub tasks: usize,
+    /// Fused SSR+FREP kernels (elementwise groups of ≥ 2 source ops).
+    pub fused_kernels: usize,
+    /// Source ops folded into those kernels.
+    pub fused_ops: usize,
+    /// Coalesced DMA transfers (data groups of ≥ 2 source ops).
+    pub coalesced_dma: usize,
+    /// `while` sites resolved to static trip counts / total sites.
+    pub static_loops: usize,
+    pub loops: usize,
+}
+
+/// A module compiled to a static, priceable schedule.
+#[derive(Debug)]
+pub struct LoweredProgram {
+    pub comps: Vec<LoweredComp>,
+    pub entry: usize,
+    /// Reachable from the entry through call/while/cond units
+    /// (combiner computations are priced inside their reduce/scatter
+    /// task, not walked).
+    reachable: Vec<bool>,
+    /// Any reachable dynamic trip count or conditional: pricing needs
+    /// an observed [`ExecProfile`].
+    dynamic: bool,
+}
+
+/// Lower a parsed module + its execution plan into a
+/// [`LoweredProgram`]. Pure compile-time: no execution happens here.
+pub fn lower(module: &Module, plan: &Plan) -> Result<LoweredProgram> {
+    let mut comps = Vec::with_capacity(plan.comps.len());
+    for (cid, pc) in plan.comps.iter().enumerate() {
+        // Fail early if the plan references a computation the module
+        // lost (cannot happen for plans compiled from this module).
+        module.computation(&pc.name)?;
+        let raw = classify_comp(cid, pc, plan)
+            .with_context(|| format!("lowering computation '{}'", pc.name))?;
+        let opt = passes::optimize(&raw, pc);
+        comps.push(LoweredComp { name: pc.name.clone(), raw, opt });
+    }
+    let mut prog = LoweredProgram {
+        comps,
+        entry: plan.entry_id(),
+        reachable: vec![false; plan.comps.len()],
+        dynamic: false,
+    };
+    let mut stack = vec![prog.entry];
+    while let Some(c) = stack.pop() {
+        if std::mem::replace(&mut prog.reachable[c], true) {
+            continue;
+        }
+        for u in &prog.comps[c].raw {
+            match u {
+                Unit::Call(t) => stack.push(*t),
+                Unit::While { cond, body, trip, .. } => {
+                    stack.push(*cond);
+                    stack.push(*body);
+                    if *trip == Trip::Dynamic {
+                        prog.dynamic = true;
+                    }
+                }
+                Unit::Cond { branches, .. } => {
+                    stack.extend(branches.iter().copied());
+                    prog.dynamic = true;
+                }
+                Unit::Task(_) => {}
+            }
+        }
+    }
+    Ok(prog)
+}
+
+impl LoweredProgram {
+    /// True when pricing needs an observed [`ExecProfile`] (dynamic
+    /// loop bounds or conditionals reachable from the entry).
+    pub fn needs_profile(&self) -> bool {
+        self.dynamic
+    }
+
+    /// Flatten the program into an [`OpTask`] stream with counts
+    /// scaled by trip counts — static where resolved at compile time,
+    /// observed (`profile`) otherwise. `optimized` selects the
+    /// fused/coalesced schedule (production pricing) or the raw
+    /// classified one (the trace-validation baseline).
+    pub fn tasks(
+        &self,
+        profile: Option<&ExecProfile>,
+        optimized: bool,
+    ) -> Result<Vec<OpTask>> {
+        let mut out = Vec::new();
+        // Dynamic sites contribute their *total* observed count on
+        // first visit (a computation reached from several sites has
+        // one site-indexed total covering all of them).
+        let mut consumed: std::collections::HashSet<(usize, usize)> =
+            std::collections::HashSet::new();
+        self.walk(self.entry, 1, profile, optimized, &mut consumed, &mut out)?;
+        Ok(aggregate_tasks(out))
+    }
+
+    fn walk(
+        &self,
+        comp: usize,
+        scale: u64,
+        profile: Option<&ExecProfile>,
+        optimized: bool,
+        consumed: &mut std::collections::HashSet<(usize, usize)>,
+        out: &mut Vec<OpTask>,
+    ) -> Result<()> {
+        if scale == 0 {
+            return Ok(());
+        }
+        let lc = &self.comps[comp];
+        let units = if optimized { &lc.opt } else { &lc.raw };
+        for u in units {
+            match u {
+                Unit::Task(tu) => {
+                    out.push(tu.task.clone().with_count(scale));
+                }
+                Unit::Call(c) => {
+                    self.walk(*c, scale, profile, optimized, consumed, out)?;
+                }
+                Unit::While { cond, body, trip, site } => {
+                    let total = match trip {
+                        Trip::Static(n) => n.saturating_mul(scale),
+                        Trip::Dynamic => {
+                            let p = profile.with_context(|| {
+                                format!(
+                                    "'{}': dynamic trip count needs a \
+                                     profiled execution",
+                                    lc.name
+                                )
+                            })?;
+                            if consumed.insert(*site) {
+                                p.loops.get(site).copied().unwrap_or(0)
+                            } else {
+                                0
+                            }
+                        }
+                    };
+                    // cond runs once more than the body per site
+                    // execution (the final false check).
+                    self.walk(
+                        *cond,
+                        total.saturating_add(scale),
+                        profile,
+                        optimized,
+                        consumed,
+                        out,
+                    )?;
+                    self.walk(*body, total, profile, optimized, consumed, out)?;
+                }
+                Unit::Cond { branches, site } => {
+                    let p = profile.with_context(|| {
+                        format!(
+                            "'{}': conditional branch counts need a \
+                             profiled execution",
+                            lc.name
+                        )
+                    })?;
+                    let fresh = consumed.insert(*site);
+                    for (k, b) in branches.iter().enumerate() {
+                        let c = if fresh {
+                            p.branches
+                                .get(&(site.0, site.1, k))
+                                .copied()
+                                .unwrap_or(0)
+                        } else {
+                            0
+                        };
+                        self.walk(*b, c, profile, optimized, consumed, out)?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Static fusion statistics over reachable computations.
+    pub fn stats(&self) -> FusionStats {
+        let mut s = FusionStats::default();
+        for (c, lc) in self.comps.iter().enumerate() {
+            if !self.reachable[c] {
+                continue;
+            }
+            for u in &lc.opt {
+                match u {
+                    Unit::Task(tu) => {
+                        s.tasks += 1;
+                        if tu.members.len() > 1 {
+                            if tu.task.flops > 0.0 {
+                                s.fused_kernels += 1;
+                                s.fused_ops += tu.members.len();
+                            } else {
+                                s.coalesced_dma += 1;
+                            }
+                        }
+                    }
+                    Unit::While { trip, .. } => {
+                        s.loops += 1;
+                        if matches!(trip, Trip::Static(_)) {
+                            s.static_loops += 1;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        s
+    }
+
+    /// The fusion decisions, for `manticore lower`'s printout:
+    /// `(computation, fused task, member instruction names)` for every
+    /// reachable multi-op unit.
+    pub fn decisions(&self) -> Vec<(&str, &OpTask, &[String])> {
+        let mut out = Vec::new();
+        for (c, lc) in self.comps.iter().enumerate() {
+            if !self.reachable[c] {
+                continue;
+            }
+            for u in &lc.opt {
+                if let Unit::Task(tu) = u {
+                    if tu.members.len() > 1 {
+                        out.push((
+                            lc.name.as_str(),
+                            &tu.task,
+                            tu.members.as_slice(),
+                        ));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Merge identical tasks (same name + geometry), summing counts and
+/// preserving first-appearance order — the same folding the trace
+/// aggregator applies, so both pricing paths produce comparable
+/// streams.
+pub fn aggregate_tasks(tasks: Vec<OpTask>) -> Vec<OpTask> {
+    type Key = (String, &'static str, usize, usize, u64, u64, bool, u32);
+    let mut out: Vec<OpTask> = Vec::with_capacity(tasks.len());
+    let mut index: HashMap<Key, usize> = HashMap::new();
+    for t in tasks {
+        let key: Key = (
+            t.name.clone(),
+            t.kind.label(),
+            t.out_elems,
+            t.elem_bytes,
+            t.flops.to_bits(),
+            t.bytes.to_bits(),
+            t.overlap,
+            t.fused,
+        );
+        match index.get(&key) {
+            Some(&i) => out[i].count += t.count,
+            None => {
+                index.insert(key, out.len());
+                out.push(t);
+            }
+        }
+    }
+    out
+}
+
+/// Classify one computation's plan steps into raw units.
+fn classify_comp(
+    cid: usize,
+    pc: &PlanComp,
+    plan: &Plan,
+) -> Result<Vec<Unit>> {
+    let mut units = Vec::with_capacity(pc.steps.len());
+    for (idx, step) in pc.steps.iter().enumerate() {
+        match &step.kind {
+            // Bookkeeping ops never reach hardware (mirrors the trace
+            // skip list).
+            StepKind::Param { .. }
+            | StepKind::Const(_)
+            | StepKind::Tuple
+            | StepKind::GetTupleElement(_) => {}
+            StepKind::Call(c) => units.push(Unit::Call(*c)),
+            StepKind::While { cond, body } => {
+                let trip = static_trip(pc, idx, *cond, *body, plan);
+                units.push(Unit::While {
+                    cond: *cond,
+                    body: *body,
+                    trip,
+                    site: (cid, idx),
+                });
+            }
+            StepKind::CondPred { on_true, on_false } => {
+                units.push(Unit::Cond {
+                    branches: vec![*on_true, *on_false],
+                    site: (cid, idx),
+                });
+            }
+            StepKind::CondIndexed(branches) => {
+                units.push(Unit::Cond {
+                    branches: branches.clone(),
+                    site: (cid, idx),
+                });
+            }
+            _ => {
+                let ins = &step.ins;
+                // Same skips as the trace recorder: no leaf type means
+                // nothing schedulable.
+                let Some(ty) = ins.shape.leaf_ty() else { continue };
+                let mut operand_elems = Vec::with_capacity(step.args.len());
+                for &s in &step.args {
+                    // Only array operands stream (tuple-typed operands
+                    // are control plumbing) — exactly what the trace
+                    // observes as `Value::Arr`.
+                    if let Shape::Arr { .. } = &pc.steps[s].ins.shape {
+                        operand_elems.push(pc.steps[s].ins.shape.elems());
+                    }
+                }
+                let dot = if ins.op == "dot" {
+                    match (step.args.first(), step.args.get(1)) {
+                        (Some(&l), Some(&r)) => dot_dims(
+                            ins,
+                            pc.steps[l].ins.shape.dims(),
+                            pc.steps[r].ins.shape.dims(),
+                        )
+                        .ok()
+                        .map(|d| (d.b, d.m, d.k, d.n)),
+                        _ => None,
+                    }
+                } else {
+                    None
+                };
+                let shape = classify::OpShape {
+                    name: &ins.name,
+                    op: &ins.op,
+                    elem_bytes: ty.byte_size(),
+                    out_elems: ins.shape.leaf_elems(),
+                    operand_elems: &operand_elems,
+                    dot,
+                };
+                let Some(task) = classify::task_for(&shape) else { continue };
+                units.push(Unit::Task(TaskUnit {
+                    task,
+                    members: vec![ins.name.clone()],
+                    step: idx,
+                }));
+            }
+        }
+    }
+    Ok(units)
+}
+
+/// Does `slot` hold the loop counter — `get-tuple-element(state, j)`
+/// of the computation's parameter? Returns `j`. Resolution goes
+/// through the plan's slot indices (not name lookup), so duplicate
+/// instruction names shadow exactly as they do at execution time.
+fn step_counter(pc: &PlanComp, slot: usize) -> Option<usize> {
+    let s = pc.steps.get(slot)?;
+    let StepKind::GetTupleElement(j) = s.kind else { return None };
+    let p = *s.args.first()?;
+    matches!(pc.steps.get(p)?.kind, StepKind::Param { .. }).then_some(j)
+}
+
+/// Does `slot` hold a scalar integer constant? Reads the plan's
+/// pre-parsed, canonicalised constant value.
+fn step_const_int(pc: &PlanComp, slot: usize) -> Option<i64> {
+    let s = pc.steps.get(slot)?;
+    let StepKind::Const(v) = &s.kind else { return None };
+    let a = v.arr().ok()?;
+    if a.data.len() != 1 {
+        return None;
+    }
+    let x = a.data[0];
+    (x.fract() == 0.0 && x.abs() < 9.0e15).then_some(x as i64)
+}
+
+/// Resolve a `while` site's trip count symbolically: the Pallas-grid
+/// counter-loop pattern — `cond: compare(gte(state, j), K)` with a
+/// constant bound, `body: state[j] = gte(state, j) ± c`, and the init
+/// state built by a `tuple` whose element `j` is a constant. Anything
+/// else is [`Trip::Dynamic`] and scales by the observed profile.
+fn static_trip(
+    pc: &PlanComp,
+    while_idx: usize,
+    cond_id: usize,
+    body_id: usize,
+    plan: &Plan,
+) -> Trip {
+    match try_static_trip(pc, while_idx, cond_id, body_id, plan) {
+        Some(n) => Trip::Static(n),
+        None => Trip::Dynamic,
+    }
+}
+
+fn try_static_trip(
+    pc: &PlanComp,
+    while_idx: usize,
+    cond_id: usize,
+    body_id: usize,
+    plan: &Plan,
+) -> Option<u64> {
+    let cond = &plan.comps[cond_id];
+    let body = &plan.comps[body_id];
+    // Condition: ROOT compare(counter, K) with a compile-time bound.
+    let root = &cond.steps[cond.root];
+    if root.ins.op != "compare" {
+        return None;
+    }
+    let dir = root.ins.attrs.get("direction")?.as_str();
+    let (a, b) = (*root.args.first()?, *root.args.get(1)?);
+    let (j, bound, dir) =
+        match (step_counter(cond, a), step_const_int(cond, b)) {
+            (Some(j), Some(k)) => (j, k, dir.to_string()),
+            _ => {
+                // Swapped order: `K <dir> i` ≡ `i <flip(dir)> K`.
+                let j = step_counter(cond, b)?;
+                let k = step_const_int(cond, a)?;
+                let flipped = match dir {
+                    "LT" => "GT",
+                    "LE" => "GE",
+                    "GT" => "LT",
+                    "GE" => "LE",
+                    _ => return None,
+                };
+                (j, k, flipped.to_string())
+            }
+        };
+    // Body: ROOT tuple whose element j is `counter ± constant`.
+    let broot = &body.steps[body.root];
+    if !matches!(broot.kind, StepKind::Tuple) {
+        return None;
+    }
+    let upd = &body.steps[*broot.args.get(j)?];
+    let step = match upd.ins.op.as_str() {
+        "add" => {
+            let (x, y) = (*upd.args.first()?, *upd.args.get(1)?);
+            if step_counter(body, x) == Some(j) {
+                step_const_int(body, y)?
+            } else if step_counter(body, y) == Some(j) {
+                step_const_int(body, x)?
+            } else {
+                return None;
+            }
+        }
+        "subtract" => {
+            if step_counter(body, *upd.args.first()?) != Some(j) {
+                return None;
+            }
+            -step_const_int(body, *upd.args.get(1)?)?
+        }
+        _ => return None,
+    };
+    // Init: the while operand is a tuple step whose element j is a
+    // constant scalar.
+    let wstep = &pc.steps[while_idx];
+    let init_slot = *wstep.args.first()?;
+    let tstep = &pc.steps[init_slot];
+    if !matches!(tstep.kind, StepKind::Tuple) {
+        return None;
+    }
+    let init = step_const_int(pc, *tstep.args.get(j)?)?;
+    trips(init, bound, step, &dir)
+}
+
+/// Closed-form iteration count of `for (i = init; i <dir> bound;
+/// i += step)`. None when the loop does not provably terminate.
+fn trips(init: i64, bound: i64, step: i64, dir: &str) -> Option<u64> {
+    let holds = |i: i64| match dir {
+        "LT" => i < bound,
+        "LE" => i <= bound,
+        "GT" => i > bound,
+        "GE" => i >= bound,
+        _ => false,
+    };
+    if matches!(dir, "EQ" | "NE") {
+        return None;
+    }
+    if !holds(init) {
+        return Some(0);
+    }
+    // The counter must move toward the bound.
+    let toward = match dir {
+        "LT" | "LE" => step > 0,
+        _ => step < 0,
+    };
+    if !toward {
+        return None;
+    }
+    let span = match dir {
+        "LT" => bound - init,
+        "LE" => bound - init + 1,
+        "GT" => init - bound,
+        "GE" => init - bound + 1,
+        _ => return None,
+    };
+    let mag = step.unsigned_abs() as i64;
+    Some(((span + mag - 1) / mag) as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::parser::parse_module;
+    use crate::runtime::native::plan::{compile, PlanExecutor};
+
+    fn lowered(text: &str) -> (LoweredProgram, Plan, Module) {
+        let m = parse_module(text).unwrap();
+        let plan = compile(&m).unwrap();
+        let lp = lower(&m, &plan).unwrap();
+        (lp, plan, m)
+    }
+
+    const GRID_LOOP: &str = "HloModule m\n\
+        cond {\n  s = (s32[], f64[64]) parameter(0)\n  i = s32[] get-tuple-element(s), index=0\n  k = s32[] constant(5)\n  ROOT c = pred[] compare(i, k), direction=LT\n}\n\
+        body {\n  s = (s32[], f64[64]) parameter(0)\n  i = s32[] get-tuple-element(s), index=0\n  one = s32[] constant(1)\n  j = s32[] add(i, one)\n  x = f64[64]{0} get-tuple-element(s), index=1\n  y = f64[64]{0} multiply(x, x)\n  z = f64[64]{0} add(y, x)\n  w = f64[64]{0} negate(z)\n  ROOT t = (s32[], f64[64]) tuple(j, w)\n}\n\
+        ENTRY e {\n  z0 = s32[] constant(0)\n  v = f64[64]{0} parameter(0)\n  t0 = (s32[], f64[64]) tuple(z0, v)\n  w = (s32[], f64[64]) while(t0), condition=cond, body=body\n  ROOT r = f64[64]{0} get-tuple-element(w), index=1\n}\n";
+
+    #[test]
+    fn grid_loop_trip_count_resolves_statically() {
+        let (lp, ..) = lowered(GRID_LOOP);
+        assert!(!lp.needs_profile(), "constant-bound loop is static");
+        let entry = &lp.comps[lp.entry];
+        let whiles: Vec<_> = entry
+            .raw
+            .iter()
+            .filter_map(|u| match u {
+                Unit::While { trip, .. } => Some(*trip),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(whiles, vec![Trip::Static(5)]);
+        let s = lp.stats();
+        assert_eq!((s.loops, s.static_loops), (1, 1));
+    }
+
+    #[test]
+    fn walk_counts_match_a_profiled_execution_without_one() {
+        let (lp, plan, _m) = lowered(GRID_LOOP);
+        // Static program: priceable with no profile at all.
+        let tasks = lp.tasks(None, false).unwrap();
+        // Body runs 5x: multiply/add/negate at count 5; the loop-exit
+        // compare at 6 (5 true + 1 false).
+        let find = |name: &str| {
+            tasks
+                .iter()
+                .find(|t| t.name.starts_with(name))
+                .unwrap_or_else(|| panic!("task {name}"))
+        };
+        assert_eq!(find("y").count, 5);
+        assert_eq!(find("z").count, 5);
+        assert_eq!(find("w").count, 5);
+        assert_eq!(find("c").count, 6);
+        // And the observed profile agrees (the while site records 5).
+        let px = PlanExecutor::with_profile(&plan);
+        px.run(&[crate::runtime::native::eval::Value::from(
+            crate::runtime::native::eval::ArrayV::new(
+                crate::runtime::native::parser::DType::F64,
+                vec![64],
+                vec![1.0; 64],
+            ),
+        )])
+        .unwrap();
+        let profile = px.take_profile();
+        assert_eq!(profile.loops.values().copied().sum::<u64>(), 5);
+        let with = lp.tasks(Some(&profile), false).unwrap();
+        assert_eq!(with.len(), tasks.len());
+        for (a, b) in tasks.iter().zip(&with) {
+            assert_eq!(a.count, b.count, "{}", a.name);
+        }
+    }
+
+    #[test]
+    fn fusion_pass_folds_the_loop_body_chain() {
+        let (lp, ..) = lowered(GRID_LOOP);
+        // body: multiply → add → negate over f64[64], one external
+        // stream (x): a single fused kernel of 3 FP ops.
+        let s = lp.stats();
+        assert_eq!(s.fused_kernels, 1, "{s:?}");
+        assert_eq!(s.fused_ops, 3);
+        let decisions = lp.decisions();
+        assert_eq!(decisions.len(), 1);
+        let (comp, task, members) = &decisions[0];
+        assert_eq!(*comp, "body");
+        assert_eq!(
+            members.iter().map(String::as_str).collect::<Vec<_>>(),
+            vec!["y", "z", "w"]
+        );
+        assert!(
+            matches!(
+                task.kind,
+                crate::coordinator::OpKind::Fused { ops: 3, arity: 1 }
+            ),
+            "{:?}",
+            task.kind
+        );
+        assert_eq!(task.fused, 3);
+        // Fused pricing beats the raw stream.
+        let co = crate::coordinator::Coordinator::new(
+            crate::system::SystemConfig::default(),
+            0.9,
+        );
+        let raw = co
+            .simulate_stream("raw", &lp.tasks(None, false).unwrap())
+            .unwrap();
+        let opt = co
+            .simulate_stream("opt", &lp.tasks(None, true).unwrap())
+            .unwrap();
+        assert!(
+            opt.total_cycles <= raw.total_cycles,
+            "opt {} raw {}",
+            opt.total_cycles,
+            raw.total_cycles
+        );
+        assert!(opt.fpu_util >= raw.fpu_util);
+        assert!(opt.fpu_util <= 1.0);
+    }
+
+    #[test]
+    fn conditional_requires_and_uses_profile() {
+        let t = "HloModule m\n\
+            bt {\n  x = f64[8] parameter(0)\n  ROOT m = f64[8]{0} multiply(x, x)\n}\n\
+            bf {\n  x = f64[8] parameter(0)\n  ROOT n = f64[8]{0} negate(x)\n}\n\
+            ENTRY e {\n  p = pred[] parameter(0)\n  x = f64[8]{0} parameter(1)\n  ROOT c = f64[8]{0} conditional(p, x, x), true_computation=bt, false_computation=bf\n}\n";
+        let (lp, plan, _m) = lowered(t);
+        assert!(lp.needs_profile());
+        assert!(lp.tasks(None, false).is_err(), "profile required");
+        let px = PlanExecutor::with_profile(&plan);
+        use crate::runtime::native::eval::{ArrayV, Value};
+        use crate::runtime::native::parser::DType;
+        px.run(&[
+            Value::from(ArrayV::new(DType::Pred, vec![], vec![1.0])),
+            Value::from(ArrayV::new(DType::F64, vec![8], vec![1.0; 8])),
+        ])
+        .unwrap();
+        let profile = px.take_profile();
+        let tasks = lp.tasks(Some(&profile), false).unwrap();
+        // Only the taken (true) branch is priced.
+        assert!(tasks.iter().any(|t| t.name == "m" && t.count == 1));
+        assert!(!tasks.iter().any(|t| t.name == "n"));
+    }
+
+    #[test]
+    fn trips_closed_form() {
+        assert_eq!(trips(0, 5, 1, "LT"), Some(5));
+        assert_eq!(trips(0, 5, 2, "LT"), Some(3));
+        assert_eq!(trips(0, 5, 1, "LE"), Some(6));
+        assert_eq!(trips(5, 0, -1, "GT"), Some(5));
+        assert_eq!(trips(5, 0, -1, "GE"), Some(6));
+        assert_eq!(trips(7, 5, 1, "LT"), Some(0), "initially false");
+        assert_eq!(trips(0, 5, -1, "LT"), None, "moves away");
+        assert_eq!(trips(0, 5, 0, "LT"), None, "never terminates");
+        assert_eq!(trips(0, 5, 1, "NE"), None, "unsupported direction");
+    }
+}

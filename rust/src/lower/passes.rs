@@ -1,0 +1,403 @@
+//! Optimization passes over a lowered computation's unit stream.
+//!
+//! * [`fuse_elementwise`] — the SSR+FREP fusion pass. Adjacent
+//!   elementwise ops (plus shape-preserving data riders) with matching
+//!   iteration shape fold into ONE multi-op kernel task when legal:
+//!   every intermediate dies inside the group (checked against the
+//!   plan's reader sets — a value read by a later instruction, a
+//!   `tuple`, or the computation root must stay materialized), and the
+//!   group's distinct external vector operands fit the hardware's
+//!   3 SSRs (≤ 2 reads + 1 write). The fused task's flops are the
+//!   chain's, but its memory traffic covers only the external streams
+//!   — the utilization argument of the SSR/Snitch papers.
+//! * [`coalesce_dma`] — adjacent pure data-movement tasks merge into
+//!   one transfer (one DMA queue entry instead of many).
+//! * [`mark_overlap`] — data tasks adjacent to a compute task are
+//!   marked for double-buffered overlap; `Coordinator::simulate_stream`
+//!   prices the hidden fraction (`cluster::dma::overlap_hidden_fraction`).
+//!
+//! The passes are purely cost-level: the native execution plan — and
+//! therefore the numerics — is untouched by construction.
+
+use super::classify::{self, OpClass};
+use super::{TaskUnit, Unit};
+use crate::coordinator::{OpKind, OpTask};
+use crate::runtime::native::parser::Shape;
+use crate::runtime::native::plan::PlanComp;
+use std::collections::HashSet;
+
+/// Run the pass pipeline over one computation's raw unit stream.
+pub(crate) fn optimize(raw: &[Unit], pc: &PlanComp) -> Vec<Unit> {
+    mark_overlap(coalesce_dma(fuse_elementwise(raw, pc)))
+}
+
+/// A fusion candidate: one task unit's static geometry.
+struct Cand {
+    step: usize,
+    /// Result elements (the group's iteration shape).
+    elems: usize,
+    elem_bytes: usize,
+    /// Elementwise member (one FP instruction) vs free data rider.
+    fp: bool,
+    /// The member's own task was HBM-placed (the fused task then
+    /// stays HBM-placed too).
+    hbm: bool,
+}
+
+/// Is this unit fusable, and with what geometry?
+fn fusable(u: &Unit, pc: &PlanComp) -> Option<Cand> {
+    let Unit::Task(tu) = u else { return None };
+    let step = &pc.steps[tu.step];
+    let ins = &step.ins;
+    let elems = ins.shape.leaf_elems();
+    let elem_bytes = ins.shape.leaf_ty()?.byte_size();
+    let hbm = tu.task.placement == crate::coordinator::Placement::Hbm;
+    match classify::op_class(&ins.op) {
+        OpClass::Elementwise => {
+            Some(Cand { step: tu.step, elems, elem_bytes, fp: true, hbm })
+        }
+        OpClass::Data if classify::fusion_rider(&ins.op) => {
+            // Shape-preserving: one operand, identical element count.
+            let preserves = step.args.len() == 1
+                && matches!(&pc.steps[step.args[0]].ins.shape, Shape::Arr { .. })
+                && pc.steps[step.args[0]].ins.shape.elems() == elems;
+            preserves.then_some(Cand {
+                step: tu.step,
+                elems,
+                elem_bytes,
+                fp: false,
+                hbm,
+            })
+        }
+        _ => None,
+    }
+}
+
+/// Is slot `a` a vector operand (needs an SSR stream)? Scalars ride in
+/// registers, tuple-typed slots are control plumbing.
+fn is_vector(pc: &PlanComp, a: usize) -> bool {
+    matches!(&pc.steps[a].ins.shape, Shape::Arr { .. })
+        && pc.steps[a].ins.shape.elems() > 1
+}
+
+/// Can `cand` legally join `group`?
+fn extend_ok(
+    group: &[Cand],
+    gsteps: &HashSet<usize>,
+    cand: &Cand,
+    pc: &PlanComp,
+    readers: &[Vec<usize>],
+) -> bool {
+    let first = &group[0];
+    // Matching iteration shape and element width.
+    if cand.elems != first.elems || cand.elem_bytes != first.elem_bytes {
+        return false;
+    }
+    // Connectivity: the candidate consumes something the group made
+    // (otherwise it is an unrelated op, not part of the chain).
+    let cstep = &pc.steps[cand.step];
+    if !cstep.args.iter().any(|a| gsteps.contains(a)) {
+        return false;
+    }
+    // The current last member becomes an internal: every reader must
+    // lie inside the group (or be the candidate), and the root value
+    // must stay materialized. Earlier internals were checked when they
+    // joined and only gained in-group readers since.
+    let prev = group.last().expect("non-empty group");
+    if prev.step == pc.root {
+        return false;
+    }
+    if !readers[prev.step]
+        .iter()
+        .all(|r| gsteps.contains(r) || *r == cand.step)
+    {
+        return false;
+    }
+    // FREP body budget: one FP instruction per elementwise member.
+    let n_fp =
+        group.iter().filter(|c| c.fp).count() + usize::from(cand.fp);
+    if n_fp > 16 {
+        return false;
+    }
+    // SSR budget: distinct external vector inputs ≤ 2 (the third SSR
+    // writes the output).
+    let mut ext: HashSet<usize> = HashSet::new();
+    for c in group.iter().chain(std::iter::once(cand)) {
+        for &a in &pc.steps[c.step].args {
+            if !gsteps.contains(&a) && a != cand.step && is_vector(pc, a) {
+                ext.insert(a);
+            }
+        }
+    }
+    ext.len() <= 2
+}
+
+/// Build the fused task unit for a finalized group.
+fn build_fused(
+    group: &[Cand],
+    gsteps: &HashSet<usize>,
+    pc: &PlanComp,
+) -> Unit {
+    let first = &group[0];
+    let members: Vec<String> = group
+        .iter()
+        .map(|c| pc.steps[c.step].ins.name.clone())
+        .collect();
+    let mut seen: HashSet<usize> = HashSet::new();
+    let mut ext_elems = 0usize;
+    let mut ext_streams = 0usize;
+    for c in group {
+        for &a in &pc.steps[c.step].args {
+            if gsteps.contains(&a) || !seen.insert(a) {
+                continue;
+            }
+            if let Shape::Arr { .. } = &pc.steps[a].ins.shape {
+                let e = pc.steps[a].ins.shape.elems();
+                ext_elems += e;
+                if e > 1 {
+                    ext_streams += 1;
+                }
+            }
+        }
+    }
+    let n_fp = group.iter().filter(|c| c.fp).count();
+    let name = group_name("fuse", &members);
+    let mut task = OpTask::fused_elementwise(
+        &name,
+        n_fp,
+        ext_streams,
+        first.elems,
+        ext_elems,
+        first.elem_bytes,
+        members.len() as u32,
+    );
+    // Placement never *improves* through fusion: if any member's own
+    // working set spilled to HBM, the fused kernel stays HBM-streamed
+    // too. (Auto-placement would otherwise let a fused chain whose
+    // external streams happen to fit one TCDM drop from whole-machine
+    // HBM bandwidth to a single cluster's — and cost *more* than the
+    // unfused ops, breaking the fused ≤ unfused invariant.)
+    if group.iter().any(|c| c.hbm) {
+        task.placement = crate::coordinator::Placement::Hbm;
+    }
+    Unit::Task(TaskUnit { task, members, step: first.step })
+}
+
+fn group_name(prefix: &str, members: &[String]) -> String {
+    if members.len() <= 3 {
+        format!("{prefix}[{}]", members.join("+"))
+    } else {
+        format!(
+            "{prefix}[{}+..+{}:{}]",
+            members[0],
+            members[members.len() - 1],
+            members.len()
+        )
+    }
+}
+
+/// The fusion pass: greedy maximal runs of adjacent fusable units.
+pub(crate) fn fuse_elementwise(raw: &[Unit], pc: &PlanComp) -> Vec<Unit> {
+    // Reader sets over ALL plan steps — including `tuple`/
+    // `get-tuple-element`/control steps that never become tasks, so a
+    // value kept alive by bookkeeping is never fused away.
+    let mut readers: Vec<Vec<usize>> = vec![Vec::new(); pc.steps.len()];
+    for (t, s) in pc.steps.iter().enumerate() {
+        for &a in &s.args {
+            readers[a].push(t);
+        }
+    }
+    let mut out = Vec::with_capacity(raw.len());
+    let mut i = 0;
+    while i < raw.len() {
+        let Some(first) = fusable(&raw[i], pc) else {
+            out.push(raw[i].clone());
+            i += 1;
+            continue;
+        };
+        let mut gsteps: HashSet<usize> = HashSet::from([first.step]);
+        let mut group: Vec<Cand> = vec![first];
+        let mut j = i + 1;
+        while j < raw.len() {
+            let Some(cand) = fusable(&raw[j], pc) else { break };
+            if !extend_ok(&group, &gsteps, &cand, pc, &readers) {
+                break;
+            }
+            gsteps.insert(cand.step);
+            group.push(cand);
+            j += 1;
+        }
+        let n_fp = group.iter().filter(|c| c.fp).count();
+        if group.len() >= 2 && n_fp >= 1 {
+            out.push(build_fused(&group, &gsteps, pc));
+        } else {
+            out.extend(raw[i..j].iter().cloned());
+        }
+        i = j;
+    }
+    out
+}
+
+/// Merge adjacent pure data-movement tasks into one coalesced
+/// transfer.
+pub(crate) fn coalesce_dma(units: Vec<Unit>) -> Vec<Unit> {
+    fn flush(run: &mut Vec<TaskUnit>, out: &mut Vec<Unit>) {
+        match run.len() {
+            0 => {}
+            1 => out.push(Unit::Task(run.pop().expect("len 1"))),
+            _ => {
+                let bytes: f64 = run.iter().map(|t| t.task.bytes).sum();
+                let elem_bytes = run[0].task.elem_bytes;
+                let step = run[0].step;
+                let members: Vec<String> =
+                    run.drain(..).flat_map(|t| t.members).collect();
+                let name = group_name("dma", &members);
+                let task = OpTask::data_coalesced(
+                    &name,
+                    bytes,
+                    elem_bytes,
+                    members.len() as u32,
+                );
+                out.push(Unit::Task(TaskUnit { task, members, step }));
+            }
+        }
+    }
+    let mut out: Vec<Unit> = Vec::with_capacity(units.len());
+    let mut run: Vec<TaskUnit> = Vec::new();
+    for u in units {
+        match u {
+            Unit::Task(tu)
+                if matches!(tu.task.kind, OpKind::Data)
+                    && tu.task.flops == 0.0 =>
+            {
+                run.push(tu);
+            }
+            other => {
+                flush(&mut run, &mut out);
+                out.push(other);
+            }
+        }
+    }
+    flush(&mut run, &mut out);
+    out
+}
+
+/// Mark data tasks adjacent to a compute task for double-buffered
+/// overlap.
+pub(crate) fn mark_overlap(mut units: Vec<Unit>) -> Vec<Unit> {
+    let compute: Vec<bool> = units
+        .iter()
+        .map(|u| matches!(u, Unit::Task(t) if t.task.flops > 0.0))
+        .collect();
+    for i in 0..units.len() {
+        let adjacent = (i > 0 && compute[i - 1])
+            || (i + 1 < units.len() && compute[i + 1]);
+        if !adjacent {
+            continue;
+        }
+        if let Unit::Task(tu) = &mut units[i] {
+            if matches!(tu.task.kind, OpKind::Data) && tu.task.flops == 0.0 {
+                tu.task.overlap = true;
+            }
+        }
+    }
+    units
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{lower, Unit};
+    use crate::runtime::native::parser::parse_module;
+    use crate::runtime::native::plan::compile;
+
+    fn opt_units(text: &str, comp: &str) -> Vec<Unit> {
+        let m = parse_module(text).unwrap();
+        let plan = compile(&m).unwrap();
+        let lp = lower(&m, &plan).unwrap();
+        lp.comps
+            .iter()
+            .find(|c| c.name == comp)
+            .unwrap_or_else(|| panic!("comp {comp}"))
+            .opt
+            .clone()
+    }
+
+    #[test]
+    fn fusion_respects_the_ssr_budget() {
+        // d = (a+b) * c needs 3 external vector streams — illegal to
+        // fuse fully; the pass must fuse nothing or a 2-stream prefix.
+        let t = "HloModule m\nENTRY e {\n  a = f64[32]{0} parameter(0)\n  b = f64[32]{0} parameter(1)\n  c = f64[32]{0} parameter(2)\n  s = f64[32]{0} add(a, b)\n  ROOT d = f64[32]{0} multiply(s, c)\n}\n";
+        let units = opt_units(t, "e");
+        for u in &units {
+            if let Unit::Task(tu) = u {
+                assert_eq!(tu.members.len(), 1, "{:?}", tu.members);
+            }
+        }
+    }
+
+    #[test]
+    fn fusion_keeps_values_with_outside_readers() {
+        // `s` feeds both the chain and the root tuple: it must stay
+        // materialized (no fusion that internalizes it).
+        let t = "HloModule m\nENTRY e {\n  a = f64[32]{0} parameter(0)\n  s = f64[32]{0} add(a, a)\n  n = f64[32]{0} negate(s)\n  ROOT r = (f64[32], f64[32]) tuple(s, n)\n}\n";
+        let units = opt_units(t, "e");
+        for u in &units {
+            if let Unit::Task(tu) = u {
+                assert_eq!(tu.members.len(), 1, "{:?}", tu.members);
+            }
+        }
+    }
+
+    #[test]
+    fn chain_with_rider_fuses_and_counts_fp_ops() {
+        // a -> add -> reshape (rider) -> multiply: one fused kernel of
+        // 2 FP ops, 3 members, 1 external stream.
+        let t = "HloModule m\nENTRY e {\n  a = f64[4,8]{1,0} parameter(0)\n  s = f64[4,8]{1,0} add(a, a)\n  f = f64[32]{0} reshape(s)\n  ROOT d = f64[32]{0} multiply(f, f)\n}\n";
+        let units = opt_units(t, "e");
+        let fused: Vec<_> = units
+            .iter()
+            .filter_map(|u| match u {
+                Unit::Task(tu) if tu.members.len() > 1 => Some(tu),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(fused.len(), 1, "one fused kernel");
+        assert_eq!(fused[0].members, vec!["s", "f", "d"]);
+        assert!(matches!(
+            fused[0].task.kind,
+            crate::coordinator::OpKind::Fused { ops: 2, arity: 1 }
+        ));
+        assert_eq!(fused[0].task.fused, 3);
+    }
+
+    #[test]
+    fn adjacent_data_ops_coalesce_and_mark_overlap() {
+        let t = "HloModule m\nENTRY e {\n  a = f64[8,8]{1,0} parameter(0)\n  b = f64[8,8]{1,0} parameter(1)\n  tr = f64[8,8]{1,0} transpose(a), dimensions={1,0}\n  sl = f64[4,8]{1,0} slice(tr), slice={[0:4], [0:8]}\n  ROOT d = f64[4,8]{1,0} dot(sl, b), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n}\n";
+        let units = opt_units(t, "e");
+        let tasks: Vec<_> = units
+            .iter()
+            .filter_map(|u| match u {
+                Unit::Task(tu) => Some(tu),
+                _ => None,
+            })
+            .collect();
+        // transpose + slice coalesced into one DMA task + the dot.
+        assert_eq!(tasks.len(), 2, "{:?}", tasks.iter().map(|t| &t.task.name).collect::<Vec<_>>());
+        let dma = tasks
+            .iter()
+            .find(|t| t.task.flops == 0.0)
+            .expect("coalesced data task");
+        assert_eq!(dma.members, vec!["tr", "sl"]);
+        assert_eq!(dma.task.fused, 2);
+        assert!(dma.task.overlap, "adjacent to the dot: overlappable");
+        assert!(
+            dma.task.bytes > 0.0
+                && (dma.task.bytes
+                    - ((64 + 64 + 64 + 32) * 8) as f64)
+                    .abs()
+                    < 1e-9,
+            "bytes {}",
+            dma.task.bytes
+        );
+    }
+}

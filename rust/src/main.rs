@@ -24,10 +24,11 @@ use manticore::coordinator::Coordinator;
 use manticore::repro;
 use manticore::runtime::sim::SimBackend;
 use manticore::runtime::{
-    backend_by_name, backends, inputs_for_meta, Runtime, Tensor,
+    backend_by_name, backends, inputs_for_meta, load_manifest, Runtime,
+    Tensor,
 };
 use manticore::serve::{run_loadgen, LoadgenConfig, ServeConfig, Server};
-use manticore::util::bench::{diff_reports, fmt_si};
+use manticore::util::bench::{diff_reports, fmt_si, Table};
 use manticore::util::cli;
 use manticore::util::json;
 
@@ -82,6 +83,7 @@ fn run_cli() -> Result<()> {
     match sub.as_deref() {
         Some("repro") => cmd_repro(&args, &artifacts_dir),
         Some("run") => cmd_run(&args, &artifacts_dir, &cfg),
+        Some("lower") => cmd_lower(&args, &artifacts_dir, &cfg),
         Some("serve") => cmd_serve(&args, &artifacts_dir, &cfg),
         Some("loadgen") => cmd_loadgen(&args, &artifacts_dir),
         Some("simulate") => cmd_simulate(&args, &cfg),
@@ -104,6 +106,7 @@ fn print_help() {
          COMMANDS:\n  \
          repro <fig5|fig6|fig8|fig9|fig10|fig3|area|peaks|simops|all>\n  \
          run <artifact|path/to/x.hlo.txt> [--iters N] [--ops N]\n  \
+         lower <artifact|all> [--check] [--stats out.md] [--ops N]\n  \
          serve [--port 7433] [--host 127.0.0.1] [--batch-window-ms 2]\n        \
          [--max-batch 8] [--slot-clusters 32] [--workers N]\n  \
          loadgen [--addr 127.0.0.1:7433] [--artifact NAME] \
@@ -356,6 +359,169 @@ fn cmd_run(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> {
     // Backends that model execution (sim) retain a per-op schedule.
     if let Some(rep) = rt.last_report(name) {
         rep.table(args.get_usize("ops", 16)?).print();
+    }
+    Ok(())
+}
+
+/// `manticore lower` — compile artifacts through the pass-based
+/// lowering pipeline and print the fused schedule: fusion decisions
+/// (which ops folded into which SSR+FREP kernel, modeled FPU util per
+/// fused kernel), trip-count resolution, and the priced compiled
+/// schedule. `--check` additionally executes each artifact once and
+/// asserts the compiled-schedule report matches the trace-derived
+/// report within 5 % — the CI `lower-smoke` gate. `--stats FILE`
+/// writes the per-artifact fusion-stats table as markdown.
+fn cmd_lower(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> {
+    let target = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let check = args.has_flag("check");
+    let ops = args.get_usize("ops", 16)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let backend = SimBackend::from_config(cfg);
+    let co = Coordinator::new(cfg.system, cfg.vdd).with_cluster(cfg.cluster);
+
+    // One manifest load per distinct artifacts dir; `all` enumerates
+    // its targets from the same load.
+    let mut manifests = std::collections::BTreeMap::new();
+    let targets: Vec<(String, String)> = if target == "all" {
+        let m = load_manifest(std::path::Path::new(artifacts_dir), "lower")?;
+        let names =
+            m.keys().map(|k| (artifacts_dir.to_string(), k.clone())).collect();
+        manifests.insert(artifacts_dir.to_string(), m);
+        names
+    } else {
+        let (dir, name) = resolve_artifact(&target, artifacts_dir);
+        manifests.insert(
+            dir.clone(),
+            load_manifest(std::path::Path::new(&dir), "lower")?,
+        );
+        vec![(dir, name)]
+    };
+
+    let mut stats = Table::new(
+        "lowering — fusion statistics (compiled schedule vs trace baseline)",
+        &[
+            "artifact",
+            "tasks",
+            "fused kernels",
+            "ops folded",
+            "dma coalesced",
+            "loops static",
+            "raw cycles",
+            "opt cycles",
+            "saving",
+            "util raw",
+            "util opt",
+        ],
+    );
+    let mut failures: Vec<String> = Vec::new();
+    for (dir, name) in &targets {
+        // `all` enumerated names from the manifest itself, so a miss
+        // can only be an explicitly named (typo'd) artifact — and a
+        // typo'd `--check` target must not pass green.
+        let Some(meta) = manifests[dir].get(name) else {
+            bail!("artifact '{name}' not found in {dir}/manifest.json");
+        };
+        let path = format!("{dir}/{name}.hlo.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path}"))?;
+        let exe = backend.compile_sim(name, &text)?;
+        let inputs = inputs_for_meta(meta, seed)?;
+
+        // One calibration execution resolves what the compile-time
+        // symbolic pass could not (dynamic trip counts, branches).
+        let (outputs, profile) = exe.profile_execution(&inputs)?;
+        let raw = exe.price_compiled(Some(&profile), false)?;
+        let opt = exe.price_compiled(Some(&profile), true)?;
+        let s = exe.lowered().stats();
+
+        println!(
+            "\n{name}: {} tasks, {} fused kernels ({} ops folded), {} \
+             coalesced transfers, {}/{} loops static",
+            s.tasks,
+            s.fused_kernels,
+            s.fused_ops,
+            s.coalesced_dma,
+            s.static_loops,
+            s.loops
+        );
+        for (comp, task, members) in exe.lowered().decisions() {
+            let kr = co.simulate_task(task)?;
+            println!(
+                "  {comp}: {} <- {} ({} x{}, {}, FPU util {:.1} %)",
+                task.name,
+                members.join("+"),
+                task.kind.label(),
+                task.fused,
+                fmt_si(task.flops, "flop"),
+                kr.fpu_util * 100.0
+            );
+        }
+        opt.table(ops).print();
+
+        let saving = 1.0 - opt.total_cycles / raw.total_cycles.max(1.0);
+        stats.row(vec![
+            name.clone(),
+            s.tasks.to_string(),
+            s.fused_kernels.to_string(),
+            s.fused_ops.to_string(),
+            s.coalesced_dma.to_string(),
+            format!("{}/{}", s.static_loops, s.loops),
+            format!("{:.0}", raw.total_cycles),
+            format!("{:.0}", opt.total_cycles),
+            format!("{:.1} %", saving * 100.0),
+            format!("{:.1} %", raw.fpu_util * 100.0),
+            format!("{:.1} %", opt.fpu_util * 100.0),
+        ]);
+
+        if check {
+            let (traced_out, traced) = exe.execute_traced(&inputs)?;
+            let mut fail = |msg: String| {
+                eprintln!("lower --check FAILED for {name}: {msg}");
+                failures.push(format!("{name}: {msg}"));
+            };
+            if traced_out != outputs {
+                fail("traced and profiled outputs differ".into());
+            }
+            let rel = |a: f64, b: f64| (a / b.max(1e-30) - 1.0).abs();
+            if rel(raw.total_cycles, traced.total_cycles) > 0.05 {
+                fail(format!(
+                    "compiled cycles {} vs trace-derived {} (> 5 %)",
+                    raw.total_cycles, traced.total_cycles
+                ));
+            }
+            if rel(raw.total_energy_j, traced.total_energy_j) > 0.05 {
+                fail(format!(
+                    "compiled energy {} vs trace-derived {} (> 5 %)",
+                    raw.total_energy_j, traced.total_energy_j
+                ));
+            }
+            if opt.total_cycles > raw.total_cycles * (1.0 + 1e-9) {
+                fail(format!(
+                    "fused schedule ({} cycles) costlier than unfused ({})",
+                    opt.total_cycles, raw.total_cycles
+                ));
+            }
+            if opt.ops.iter().any(|o| o.fpu_util > 1.0) {
+                fail("an op models FPU util > 1.0".into());
+            }
+        }
+    }
+    stats.print();
+    if let Some(path) = args.get("stats") {
+        std::fs::write(path, stats.render())
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote fusion stats to {path}");
+    }
+    if !failures.is_empty() {
+        bail!(
+            "lower --check: {} artifact(s) failed: {}",
+            failures.len(),
+            failures.join("; ")
+        );
     }
     Ok(())
 }

@@ -43,14 +43,17 @@ use super::eval::{
 use super::parser::{parse_literal, Instr, Module};
 use anyhow::{bail, Context, Result};
 use std::cell::{Cell, RefCell};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 /// A module lowered to slot-indexed step streams. Immutable after
 /// [`compile`]; shared by every executing thread (the serve worker
-/// pool holds one plan per cached executable).
+/// pool holds one plan per cached executable). The step streams are
+/// also the input of the pass-based lowering pipeline
+/// (`crate::lower`), which classifies them into `OpTask`s once per
+/// artifact — hence the `pub(crate)` step surface.
 pub struct Plan {
-    comps: Vec<PlanComp>,
-    entry: usize,
+    pub(crate) comps: Vec<PlanComp>,
+    pub(crate) entry: usize,
 }
 
 impl Plan {
@@ -63,36 +66,41 @@ impl Plan {
     pub fn n_steps(&self) -> usize {
         self.comps.iter().map(|c| c.steps.len()).sum()
     }
+
+    /// Entry computation id.
+    pub fn entry_id(&self) -> usize {
+        self.entry
+    }
 }
 
 /// One compiled computation: a step per instruction, one value slot
 /// per step.
-struct PlanComp {
-    name: String,
-    n_slots: usize,
-    steps: Vec<Step>,
+pub(crate) struct PlanComp {
+    pub(crate) name: String,
+    pub(crate) n_slots: usize,
+    pub(crate) steps: Vec<Step>,
     /// Slot holding the computation's root value.
-    root: usize,
+    pub(crate) root: usize,
 }
 
 /// One compiled instruction.
-struct Step {
+pub(crate) struct Step {
     /// The source instruction (owned clone: attributes for the op
     /// kernels, name/op for traces and error context).
-    ins: Instr,
-    kind: StepKind,
+    pub(crate) ins: Instr,
+    pub(crate) kind: StepKind,
     /// Operand slot indices (parallel to `ins.operands`; empty for
     /// parameter/constant, whose "operands" are not value names).
-    args: Vec<usize>,
+    pub(crate) args: Vec<usize>,
     /// Destination slot.
-    out: usize,
+    pub(crate) out: usize,
     /// Slots whose values are dead after this step (liveness): the
     /// executor clears them so buffers drop early and copy-on-write
     /// mutation can run in place once the last reader is gone.
-    kills: Vec<usize>,
+    pub(crate) kills: Vec<usize>,
 }
 
-enum StepKind {
+pub(crate) enum StepKind {
     /// Copy caller argument `index` into the out slot. `take` moves
     /// the value instead of cloning when this is the only parameter
     /// step reading that index — the hand-off that lets a while body
@@ -366,6 +374,22 @@ fn compile_comp(
     Ok(PlanComp { name: comp.name.clone(), n_slots: n, steps, root })
 }
 
+/// Control-flow execution counts observed during one run, keyed by
+/// plan site — `(computation id, step index)`. `while` sites record
+/// the *total* number of body executions across the run (nested loops
+/// included); `conditional` sites record executions per branch index.
+/// This is all the dynamic information the compiled
+/// [`crate::lower::LoweredProgram`] needs to price an execution
+/// without a trace: a handful of counters instead of one allocated
+/// event per executed instruction.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ExecProfile {
+    /// (comp, step) -> total `while` body executions.
+    pub loops: BTreeMap<(usize, usize), u64>,
+    /// (comp, step, branch) -> `conditional` branch executions.
+    pub branches: BTreeMap<(usize, usize, usize), u64>,
+}
+
 /// Executes a [`Plan`]. Mirrors `Evaluator`'s surface (optional
 /// execution trace, combiner suppression) so `SimBackend` gets one
 /// [`TraceEvent`] per executed plan step — including loop bodies once
@@ -374,13 +398,16 @@ fn compile_comp(
 pub struct PlanExecutor<'p> {
     plan: &'p Plan,
     trace: Option<RefCell<Vec<TraceEvent>>>,
+    /// Control-flow counters (see [`ExecProfile`]); far cheaper than a
+    /// trace: one counter bump per loop iteration / branch taken.
+    profile: Option<RefCell<ExecProfile>>,
     /// >0 while inside a reduce/scatter combiner sub-execution.
     suppress: Cell<u32>,
 }
 
 impl<'p> PlanExecutor<'p> {
     pub fn new(plan: &'p Plan) -> PlanExecutor<'p> {
-        PlanExecutor { plan, trace: None, suppress: Cell::new(0) }
+        PlanExecutor { plan, trace: None, profile: None, suppress: Cell::new(0) }
     }
 
     /// An executor that records a [`TraceEvent`] per executed step;
@@ -389,6 +416,19 @@ impl<'p> PlanExecutor<'p> {
         PlanExecutor {
             plan,
             trace: Some(RefCell::new(Vec::new())),
+            profile: None,
+            suppress: Cell::new(0),
+        }
+    }
+
+    /// An executor that counts control-flow executions (loop trip
+    /// counts, branch selections) — the dynamic half of compiled
+    /// schedule pricing; collect with [`PlanExecutor::take_profile`].
+    pub fn with_profile(plan: &'p Plan) -> PlanExecutor<'p> {
+        PlanExecutor {
+            plan,
+            trace: None,
+            profile: Some(RefCell::new(ExecProfile::default())),
             suppress: Cell::new(0),
         }
     }
@@ -396,6 +436,35 @@ impl<'p> PlanExecutor<'p> {
     /// Drain the recorded trace (empty when tracing is off).
     pub fn take_trace(&self) -> Vec<TraceEvent> {
         self.trace.as_ref().map(|t| t.take()).unwrap_or_default()
+    }
+
+    /// Drain the recorded control-flow profile (empty when profiling
+    /// is off).
+    pub fn take_profile(&self) -> ExecProfile {
+        self.profile.as_ref().map(|p| p.take()).unwrap_or_default()
+    }
+
+    /// Add `n` body executions to a `while` site (no-op unless
+    /// profiling, suppressed inside combiner sub-executions — those
+    /// are part of the parent op, exactly as in the trace).
+    fn record_loop(&self, site: (usize, usize), n: u64) {
+        let Some(p) = &self.profile else { return };
+        if self.suppress.get() > 0 {
+            return;
+        }
+        *p.borrow_mut().loops.entry(site).or_insert(0) += n;
+    }
+
+    /// Count one taken `conditional` branch.
+    fn record_branch(&self, site: (usize, usize), branch: usize) {
+        let Some(p) = &self.profile else { return };
+        if self.suppress.get() > 0 {
+            return;
+        }
+        *p.borrow_mut()
+            .branches
+            .entry((site.0, site.1, branch))
+            .or_insert(0) += 1;
     }
 
     /// Execute the entry computation.
@@ -409,7 +478,7 @@ impl<'p> PlanExecutor<'p> {
         for step in &comp.steps {
             self.record(step, &slots);
             let v = self
-                .exec_step(step, &mut args, &mut slots)
+                .exec_step(id, step, &mut args, &mut slots)
                 .with_context(|| {
                     format!("evaluating {} = {}(..)", step.ins.name, step.ins.op)
                 })?;
@@ -427,6 +496,7 @@ impl<'p> PlanExecutor<'p> {
 
     fn exec_step(
         &self,
+        comp_id: usize,
         step: &Step,
         args: &mut [Value],
         slots: &mut [Option<Value>],
@@ -474,9 +544,10 @@ impl<'p> PlanExecutor<'p> {
                     bail!("while without operand");
                 }
                 let mut state = argv.swap_remove(0);
-                for _ in 0..MAX_WHILE_ITERS {
+                for iters in 0..MAX_WHILE_ITERS {
                     let c = self.exec(*cond, vec![state.clone()])?;
                     if c.arr()?.scalar() == 0.0 {
+                        self.record_loop((comp_id, step.out), iters);
                         return Ok(state);
                     }
                     state = self.exec(*body, vec![state])?;
@@ -493,6 +564,7 @@ impl<'p> PlanExecutor<'p> {
                 })?;
                 let arg = slot_value(slots, slot, &step.ins)?;
                 apply_kills(step, slots);
+                self.record_branch((comp_id, step.out), argi - 1);
                 self.exec(cid, vec![arg])
             }
             StepKind::CondIndexed(branches) => {
@@ -505,6 +577,7 @@ impl<'p> PlanExecutor<'p> {
                 })?;
                 let arg = slot_value(slots, slot, &step.ins)?;
                 apply_kills(step, slots);
+                self.record_branch((comp_id, step.out), k);
                 self.exec(branches[k], vec![arg])
             }
             StepKind::Reduce { comp, fast } => {
@@ -829,6 +902,54 @@ mod tests {
             .run(&[f64v(&[2], &[1.0, 2.0])])
             .unwrap();
         assert_eq!(out.arr().unwrap().data, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn profile_counts_loop_iterations_and_branches() {
+        let t = "HloModule m\n\
+            cond {\n  s = (s32[], f64[4]) parameter(0)\n  i = s32[] get-tuple-element(s), index=0\n  k = s32[] constant(3)\n  ROOT c = pred[] compare(i, k), direction=LT\n}\n\
+            body {\n  s = (s32[], f64[4]) parameter(0)\n  i = s32[] get-tuple-element(s), index=0\n  one = s32[] constant(1)\n  j = s32[] add(i, one)\n  x = f64[4]{0} get-tuple-element(s), index=1\n  y = f64[4]{0} multiply(x, x)\n  ROOT t = (s32[], f64[4]) tuple(j, y)\n}\n\
+            ENTRY e {\n  z = s32[] constant(0)\n  v = f64[4]{0} parameter(0)\n  t0 = (s32[], f64[4]) tuple(z, v)\n  w = (s32[], f64[4]) while(t0), condition=cond, body=body\n  ROOT r = f64[4]{0} get-tuple-element(w), index=1\n}\n";
+        let m = parse_module(t).unwrap();
+        let plan = compile(&m).unwrap();
+        let px = PlanExecutor::with_profile(&plan);
+        px.run(&[f64v(&[4], &[1.0, 2.0, 1.0, 1.0])]).unwrap();
+        let profile = px.take_profile();
+        // Exactly one while site, 3 body executions.
+        assert_eq!(profile.loops.len(), 1);
+        let (&(comp, step), &iters) = profile.loops.iter().next().unwrap();
+        assert_eq!(iters, 3);
+        assert!(matches!(
+            plan.comps[comp].steps[step].kind,
+            StepKind::While { .. }
+        ));
+        assert!(profile.branches.is_empty());
+        // A fresh executor reproduces the identical profile.
+        let px2 = PlanExecutor::with_profile(&plan);
+        px2.run(&[f64v(&[4], &[1.0, 2.0, 1.0, 1.0])]).unwrap();
+        assert_eq!(px2.take_profile(), profile);
+    }
+
+    #[test]
+    fn profile_counts_conditional_branches() {
+        let t = "HloModule m\n\
+            bt {\n  x = f64[] parameter(0)\n  two = f64[] constant(2)\n  ROOT m = f64[] multiply(x, two)\n}\n\
+            bf {\n  x = f64[] parameter(0)\n  ROOT n = f64[] negate(x)\n}\n\
+            ENTRY e {\n  p = pred[] parameter(0)\n  x = f64[] parameter(1)\n  ROOT c = f64[] conditional(p, x, x), true_computation=bt, false_computation=bf\n}\n";
+        let m = parse_module(t).unwrap();
+        let plan = compile(&m).unwrap();
+        let run_with = |pred: f64| -> ExecProfile {
+            let px = PlanExecutor::with_profile(&plan);
+            let p = Value::from(ArrayV::new(DType::Pred, vec![], vec![pred]));
+            px.run(&[p, f64v(&[], &[3.0])]).unwrap();
+            px.take_profile()
+        };
+        let t_prof = run_with(1.0);
+        assert_eq!(t_prof.branches.len(), 1);
+        assert_eq!(*t_prof.branches.values().next().unwrap(), 1);
+        assert_eq!(t_prof.branches.keys().next().unwrap().2, 0, "true branch");
+        let f_prof = run_with(0.0);
+        assert_eq!(f_prof.branches.keys().next().unwrap().2, 1, "false branch");
     }
 
     #[test]

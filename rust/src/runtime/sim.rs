@@ -2,28 +2,36 @@
 //!
 //! Numerics are delegated to the same compiled-plan execution path
 //! `NativeBackend` uses (outputs are bit-identical; the tree-walk
-//! evaluator remains behind `MANTICORE_NATIVE_REFERENCE=1`), run with
-//! an execution trace: every executed plan step — including the ones
-//! inside `call`/`while`/`conditional` bodies, once per iteration —
-//! becomes a [`crate::coordinator::OpTask`], and the coordinator's
-//! op-scheduling layer prices the stream on the system model:
+//! evaluator remains behind `MANTICORE_NATIVE_REFERENCE=1`). Since the
+//! lowering-pipeline refactor the *pricing* side is compiled too:
+//! [`SimBackend::compile`] eagerly lowers the plan into a static
+//! [`LoweredProgram`] (`crate::lower`) — plan steps classified into
+//! [`OpTask`]s, adjacent elementwise chains fused into multi-op
+//! SSR+FREP kernels, adjacent data movement coalesced and overlapped
+//! with compute, `while` trip counts resolved symbolically where the
+//! bounds are constant.
 //!
-//! * `dot` ops go through the GEMM tiling plan + calibrated cluster
-//!   utilization (the calibration is measured on the cycle-level
-//!   `ClusterSim` — the paper's methodology for Fig. 9);
-//! * elementwise/reduce ops ride the roofline, cluster-local when
-//!   their working set fits a TCDM;
-//! * data movement is priced at effective memory bandwidth.
+//! `execute` then runs the plan with lightweight control-flow
+//! *counters* (`ExecProfile`: one integer per loop site, not one
+//! allocated event per executed instruction) and prices the execution
+//! by walking the lowered program scaled by the observed counts — a
+//! near-constant-time walk, cached per (profile, slot) so a serve
+//! fleet re-pricing the same artifact pays almost nothing per request.
+//! The PR-4 trace path ([`SimExecutable::execute_traced`]) remains as
+//! the validation baseline: `manticore lower --check` asserts the
+//! compiled schedule matches it within 5 %, and reference mode
+//! (`MANTICORE_NATIVE_REFERENCE=1`) still prices from a real trace.
 //!
-//! The resulting [`OpStreamReport`] (per-op cycles, energy, FPU
-//! utilization) is retained on the executable and surfaced through
-//! `Runtime::last_report` — `manticore run/train --backend sim` print
-//! it as the per-op table. Any HLO artifact the runtime can load is
-//! thereby a simulator workload for free.
+//! Cost model (unchanged): `dot` ops go through the GEMM tiling plan +
+//! calibrated cluster utilization, elementwise/reduce/fused ops ride
+//! the roofline (cluster-local when their working set fits a TCDM),
+//! data movement is priced at effective memory bandwidth. The
+//! resulting [`OpStreamReport`] is retained on the executable and
+//! surfaced through `Runtime::last_report`.
 
 use super::backend::{Backend, ExecOutcome, Executable};
 use super::native::eval::{Evaluator, TraceEvent, Value};
-use super::native::plan::{self, PlanExecutor};
+use super::native::plan::{self, ExecProfile, PlanExecutor};
 use super::native::{
     parse_checked, reference_mode, tensor_to_value, value_to_tensors,
 };
@@ -31,6 +39,7 @@ use super::Tensor;
 use crate::cluster::ClusterConfig;
 use crate::config::Config;
 use crate::coordinator::{Coordinator, OpStreamReport, OpTask};
+use crate::lower::{self, classify, LoweredProgram};
 use crate::system::{ClusterSlot, SystemConfig};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -66,6 +75,32 @@ impl SimBackend {
     pub fn from_config(cfg: &Config) -> SimBackend {
         SimBackend::with_config(cfg.system, cfg.cluster, cfg.vdd)
     }
+
+    /// Compile to the concrete executable type — the CLI's `lower`
+    /// subcommand and the `sim_price` bench need the lowered program
+    /// and both pricing paths, which the `Backend::compile` trait
+    /// object hides.
+    pub fn compile_sim(
+        &self,
+        name: &str,
+        hlo_text: &str,
+    ) -> Result<SimExecutable> {
+        let module = parse_checked("sim", name, hlo_text)?;
+        let plan = plan::compile(&module)
+            .with_context(|| format!("[sim] planning '{name}'"))?;
+        let lowered = lower::lower(&module, &plan)
+            .with_context(|| format!("[sim] lowering '{name}'"))?;
+        Ok(SimExecutable {
+            name: name.to_string(),
+            module,
+            plan,
+            lowered,
+            co: Coordinator::new(self.sys, self.vdd)
+                .with_cluster(self.cluster),
+            report: Mutex::new(None),
+            price_cache: Mutex::new(Vec::new()),
+        })
+    }
 }
 
 impl Default for SimBackend {
@@ -88,30 +123,138 @@ impl Backend for SimBackend {
     }
 
     fn compile(&self, name: &str, hlo_text: &str) -> Result<Box<dyn Executable>> {
-        let module = parse_checked("sim", name, hlo_text)?;
-        let plan = plan::compile(&module)
-            .with_context(|| format!("[sim] planning '{name}'"))?;
-        Ok(Box::new(SimExecutable {
-            name: name.to_string(),
-            module,
-            plan,
-            co: Coordinator::new(self.sys, self.vdd)
-                .with_cluster(self.cluster),
-            report: Mutex::new(None),
-        }))
+        Ok(Box::new(self.compile_sim(name, hlo_text)?))
     }
 }
 
+/// Pricing-cache entries kept per executable: the lowered walk is
+/// cheap, but a serve fleet hitting one artifact produces the same
+/// (profile, slot size) pair for every request — those become clones.
+const PRICE_CACHE_CAP: usize = 8;
+
 /// A parsed module, its compile-once execution plan, and the
-/// coordinator that prices its op stream. Shareable across threads:
-/// all per-call state (executor, trace, schedule) is local to the
-/// call; only the `last_report` convenience cache sits behind a lock.
+/// compile-once *lowered schedule* the coordinator prices. Shareable
+/// across threads: all per-call state (executor, profile) is local to
+/// the call; the `last_report` cache and the pricing cache sit behind
+/// locks. The serve subsystem's compile-once executable cache holds
+/// one of these per artifact, so the lowered program (and its price
+/// cache) is shared fleet-wide.
 pub struct SimExecutable {
     name: String,
     module: super::native::parser::Module,
     plan: plan::Plan,
+    lowered: LoweredProgram,
     co: Coordinator,
     report: Mutex<Option<OpStreamReport>>,
+    price_cache: Mutex<Vec<((ExecProfile, Option<usize>), OpStreamReport)>>,
+}
+
+impl SimExecutable {
+    /// The compiled lowered schedule (CLI/bench surface).
+    pub fn lowered(&self) -> &LoweredProgram {
+        &self.lowered
+    }
+
+    /// Run with a full execution trace — numerics plus one
+    /// [`TraceEvent`] per executed plan step (bench/diagnostic
+    /// surface; production execution records counters, not events).
+    pub fn trace_execution(
+        &self,
+        inputs: &[Tensor],
+    ) -> Result<(Vec<Tensor>, Vec<TraceEvent>)> {
+        let args: Vec<Value> = inputs.iter().map(tensor_to_value).collect();
+        let px = PlanExecutor::with_trace(&self.plan);
+        let out = px
+            .run(&args)
+            .with_context(|| format!("[sim] executing '{}'", self.name))?;
+        Ok((value_to_tensors(out)?, px.take_trace()))
+    }
+
+    /// Fold a captured trace into tasks and price it — the
+    /// per-request pricing work of the PR-4 path, measured in
+    /// isolation by the `sim_price` bench.
+    pub fn price_traced(
+        &self,
+        trace: &[TraceEvent],
+    ) -> Result<OpStreamReport> {
+        let tasks = tasks_from_trace(trace);
+        self.co
+            .simulate_stream(&self.name, &tasks)
+            .with_context(|| format!("[sim] scheduling '{}'", self.name))
+    }
+
+    /// Execute through the traced PR-4 path: plan numerics with a full
+    /// execution trace, folded per-instruction into tasks and priced
+    /// without lowering passes. This is the ground truth the compiled
+    /// schedule is validated against (`manticore lower --check`) and
+    /// the baseline the `sim_price` bench compares to.
+    pub fn execute_traced(
+        &self,
+        inputs: &[Tensor],
+    ) -> Result<(Vec<Tensor>, OpStreamReport)> {
+        let (out, trace) = self.trace_execution(inputs)?;
+        let report = self.price_traced(&trace)?;
+        Ok((out, report))
+    }
+
+    /// Execute once and return the observed control-flow profile (the
+    /// calibration run the CLI uses for dynamic trip counts).
+    pub fn profile_execution(
+        &self,
+        inputs: &[Tensor],
+    ) -> Result<(Vec<Tensor>, ExecProfile)> {
+        let args: Vec<Value> = inputs.iter().map(tensor_to_value).collect();
+        let px = PlanExecutor::with_profile(&self.plan);
+        let out = px
+            .run(&args)
+            .with_context(|| format!("[sim] executing '{}'", self.name))?;
+        Ok((value_to_tensors(out)?, px.take_profile()))
+    }
+
+    /// Price the compiled schedule for an observed profile, uncached
+    /// (`optimized` selects the fused/coalesced or raw classified
+    /// stream). Pure pricing: no execution happens here.
+    pub fn price_compiled(
+        &self,
+        profile: Option<&ExecProfile>,
+        optimized: bool,
+    ) -> Result<OpStreamReport> {
+        let tasks = self.lowered.tasks(profile, optimized)?;
+        self.co
+            .simulate_stream(&self.name, &tasks)
+            .with_context(|| format!("[sim] scheduling '{}'", self.name))
+    }
+
+    /// Cached compiled pricing on the whole machine or a slot's
+    /// sub-machine.
+    fn priced(
+        &self,
+        profile: ExecProfile,
+        slot: Option<&ClusterSlot>,
+    ) -> Result<OpStreamReport> {
+        let key = (profile, slot.map(|s| s.n_clusters));
+        if let Some(hit) = {
+            let cache = self.price_cache.lock().unwrap();
+            cache.iter().find(|(k, _)| *k == key).map(|(_, r)| r.clone())
+        } {
+            return Ok(hit);
+        }
+        let tasks = self
+            .lowered
+            .tasks(Some(&key.0), true)
+            .with_context(|| format!("[sim] pricing '{}'", self.name))?;
+        let co = match slot {
+            Some(s) => self.co.for_slot(s),
+            None => self.co.clone(),
+        };
+        let report = co
+            .simulate_stream(&self.name, &tasks)
+            .with_context(|| format!("[sim] scheduling '{}'", self.name))?;
+        let mut cache = self.price_cache.lock().unwrap();
+        cache.insert(0, (key, report.clone()));
+        cache.truncate(PRICE_CACHE_CAP);
+        Ok(report)
+    }
 }
 
 impl Executable for SimExecutable {
@@ -123,43 +266,42 @@ impl Executable for SimExecutable {
         self.report.lock().unwrap().clone()
     }
 
-    /// Evaluate (traced) and price the op stream — on the whole
-    /// machine, or on the leased slot's sub-machine when the serve
-    /// layer placed this request. The report travels back with the
-    /// outputs, so concurrent callers each get the schedule of their
-    /// own call.
+    /// Execute and price — on the whole machine, or on the leased
+    /// slot's sub-machine when the serve layer placed this request.
+    /// The plan runs with control-flow counters only; pricing walks
+    /// the compiled [`LoweredProgram`] scaled by the observed counts
+    /// (trace never). The report travels back with the outputs, so
+    /// concurrent callers each get the schedule of their own call.
     fn execute_placed(
         &self,
         inputs: &[Tensor],
         slot: Option<&ClusterSlot>,
     ) -> Result<ExecOutcome> {
         let args: Vec<Value> = inputs.iter().map(tensor_to_value).collect();
-        // The compiled plan is the default execution path; its traced
-        // executor emits one TraceEvent per executed plan step (loop
-        // bodies once per iteration), so the op stream the coordinator
-        // prices is identical to the tree walk's — which stays
-        // reachable via MANTICORE_NATIVE_REFERENCE=1.
-        let (out, trace) = if reference_mode() {
+        // Reference escape hatch: tree-walk numerics + PR-4
+        // trace-based pricing, for bisections and the parity suite.
+        if reference_mode() {
             let ev = Evaluator::with_trace(&self.module);
             let out = ev
                 .run(&args)
                 .with_context(|| format!("[sim] executing '{}'", self.name))?;
-            (out, ev.take_trace())
-        } else {
-            let px = PlanExecutor::with_trace(&self.plan);
-            let out = px
-                .run(&args)
-                .with_context(|| format!("[sim] executing '{}'", self.name))?;
-            (out, px.take_trace())
-        };
-        let tasks = tasks_from_trace(&trace);
-        let co = match slot {
-            Some(s) => self.co.for_slot(s),
-            None => self.co.clone(),
-        };
-        let report = co
-            .simulate_stream(&self.name, &tasks)
-            .with_context(|| format!("[sim] scheduling '{}'", self.name))?;
+            let tasks = tasks_from_trace(&ev.take_trace());
+            let co = match slot {
+                Some(s) => self.co.for_slot(s),
+                None => self.co.clone(),
+            };
+            let report = co
+                .simulate_stream(&self.name, &tasks)
+                .with_context(|| format!("[sim] scheduling '{}'", self.name))?;
+            *self.report.lock().unwrap() = Some(report.clone());
+            let outputs = value_to_tensors(out)?;
+            return Ok(ExecOutcome { outputs, report: Some(report) });
+        }
+        let px = PlanExecutor::with_profile(&self.plan);
+        let out = px
+            .run(&args)
+            .with_context(|| format!("[sim] executing '{}'", self.name))?;
+        let report = self.priced(px.take_profile(), slot)?;
         *self.report.lock().unwrap() = Some(report.clone());
         let outputs = value_to_tensors(out)?;
         Ok(ExecOutcome { outputs, report: Some(report) })
@@ -172,7 +314,9 @@ impl Executable for SimExecutable {
 /// geometry is identical across iterations. Instruction names are only
 /// unique per *computation*, so the key includes the full op geometry:
 /// same-named instructions from different computations merge only when
-/// their pricing would be identical anyway.
+/// their pricing would be identical anyway. Classification delegates
+/// to [`crate::lower::classify`] — the same table the compile-time
+/// lowering uses, so the two pricing paths cannot drift on op kinds.
 pub fn tasks_from_trace(trace: &[TraceEvent]) -> Vec<OpTask> {
     type Key<'a> = (
         &'a str,
@@ -204,32 +348,16 @@ pub fn tasks_from_trace(trace: &[TraceEvent]) -> Vec<OpTask> {
     tasks
 }
 
-/// Classify one executed instruction as an `OpTask`.
+/// Classify one executed instruction as an `OpTask` (thin adapter over
+/// the shared table-driven classifier).
 fn task_for_event(ev: &TraceEvent) -> Option<OpTask> {
-    let eb = ev.ty.byte_size();
-    let in_elems: usize = ev.operand_elems.iter().sum();
-    Some(match ev.op.as_str() {
-        "dot" => {
-            let (b, m, k, n) = ev.dot?;
-            OpTask::dot(&ev.name, b, m, k, n, eb)
-        }
-        "reduce" => OpTask::reduce(&ev.name, in_elems, ev.out_elems, eb),
-        // Pure data-movement / indexing ops: the tile traffic of the
-        // Pallas interpret-mode lowering lands here.
-        "broadcast" | "reshape" | "transpose" | "slice" | "concatenate"
-        | "pad" | "iota" | "dynamic-slice" | "dynamic-update-slice"
-        | "gather" | "scatter" | "copy" | "bitcast-convert" => {
-            OpTask::data(&ev.name, in_elems + ev.out_elems, eb)
-        }
-        // Everything else the evaluator supports is elementwise
-        // (unary/binary/compare/select/shift/convert...).
-        _ => OpTask::elementwise(
-            &ev.name,
-            ev.operand_elems.len().max(1),
-            ev.out_elems,
-            in_elems,
-            eb,
-        ),
+    classify::task_for(&classify::OpShape {
+        name: &ev.name,
+        op: &ev.op,
+        elem_bytes: ev.ty.byte_size(),
+        out_elems: ev.out_elems,
+        operand_elems: &ev.operand_elems,
+        dot: ev.dot,
     })
 }
 
@@ -315,5 +443,54 @@ mod tests {
         // The loop-counter compare ran 4 times (3 true + 1 false).
         let cmp = rep.op("c").expect("compare op");
         assert_eq!(cmp.count, 4);
+    }
+
+    /// The compiled walk (production) and the PR-4 trace fold
+    /// (baseline) agree: identical total counts, and raw compiled
+    /// totals within 5 % of the traced totals (here: exactly equal —
+    /// same classifier, same geometry, exact trip counts).
+    #[test]
+    fn compiled_pricing_matches_traced_pricing() {
+        let t = "HloModule m\n\
+            cond {\n  s = (s32[], f64[256]) parameter(0)\n  i = s32[] get-tuple-element(s), index=0\n  k = s32[] constant(7)\n  ROOT c = pred[] compare(i, k), direction=LT\n}\n\
+            body {\n  s = (s32[], f64[256]) parameter(0)\n  i = s32[] get-tuple-element(s), index=0\n  one = s32[] constant(1)\n  j = s32[] add(i, one)\n  x = f64[256]{0} get-tuple-element(s), index=1\n  y = f64[256]{0} multiply(x, x)\n  z = f64[256]{0} add(y, x)\n  ROOT t = (s32[], f64[256]) tuple(j, z)\n}\n\
+            ENTRY e {\n  c0 = s32[] constant(0)\n  v = f64[256]{0} parameter(0)\n  t0 = (s32[], f64[256]) tuple(c0, v)\n  w = (s32[], f64[256]) while(t0), condition=cond, body=body\n  ROOT r = f64[256]{0} get-tuple-element(w), index=1\n}\n";
+        let backend = SimBackend::new();
+        let exe = backend.compile_sim("cmp", t).unwrap();
+        let inputs = [Tensor::F64(vec![1.0; 256], vec![256])];
+        let (traced_out, traced) = exe.execute_traced(&inputs).unwrap();
+        let (prof_out, profile) = exe.profile_execution(&inputs).unwrap();
+        assert_eq!(traced_out, prof_out, "identical numerics");
+        let raw = exe.price_compiled(Some(&profile), false).unwrap();
+        let rel = |a: f64, b: f64| (a / b - 1.0).abs();
+        assert!(
+            rel(raw.total_cycles, traced.total_cycles) < 0.05,
+            "raw {} vs traced {}",
+            raw.total_cycles,
+            traced.total_cycles
+        );
+        assert!(rel(raw.total_energy_j, traced.total_energy_j) < 0.05);
+        assert_eq!(
+            raw.ops.iter().map(|o| o.count).sum::<u64>(),
+            traced.ops.iter().map(|o| o.count).sum::<u64>(),
+            "identical op-execution totals"
+        );
+        // The optimized schedule fuses the y→z chain and never costs
+        // more than the raw one.
+        let opt = exe.price_compiled(Some(&profile), true).unwrap();
+        assert!(opt.total_cycles <= raw.total_cycles);
+        assert!(opt.ops.iter().any(|o| o.fused > 1), "fused kernel present");
+        assert!(opt.fpu_util >= raw.fpu_util);
+        assert!(opt.fpu_util <= 1.0);
+        // Production execute reports the optimized schedule.
+        exe.execute(&inputs).unwrap();
+        let prod = exe.last_report().unwrap();
+        assert_eq!(prod.total_cycles, opt.total_cycles);
+        // And a second execution hits the price cache (same totals).
+        exe.execute(&inputs).unwrap();
+        assert_eq!(
+            exe.last_report().unwrap().total_cycles,
+            prod.total_cycles
+        );
     }
 }

@@ -91,7 +91,12 @@ struct Shared {
     /// compiled execution plan (`runtime::native::plan`), so slot
     /// lowering, liveness analysis and constant folding run once per
     /// artifact per server lifetime and are shared read-only by every
-    /// worker and batch.
+    /// worker and batch. The sim backend's entries additionally own
+    /// the artifact's lowered schedule (`crate::lower`) and its
+    /// priced-report cache, shared fleet-wide: with a stable (profile,
+    /// slot-size) pair — the steady state of a serve fleet hammering
+    /// one artifact — per-request sim pricing is a cache lookup, not a
+    /// trace.
     cache: Mutex<BTreeMap<String, Arc<dyn Executable>>>,
     queue: BatchQueue,
     pool: SlotPool,

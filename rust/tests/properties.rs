@@ -344,3 +344,132 @@ fn hlo_parse_pretty_print_roundtrips() {
         }
     });
 }
+
+/// A random elementwise chain over `f64[n]`: each op consumes the
+/// previous value (and possibly the second parameter), so the whole
+/// chain is a legal fusion group — ≤ 2 external streams ({a, b}),
+/// every intermediate dead inside the group.
+#[derive(Debug, Clone)]
+struct ChainCase {
+    n: usize,
+    ops: Vec<usize>,
+    seed: u64,
+}
+
+fn arb_chain(g: &mut Gen) -> ChainCase {
+    // Sizes deliberately span the TCDM-capacity boundary (~5.4k f64
+    // elements for a 3-stream op): members can be HBM-placed while the
+    // fused kernel's smaller working set would fit a TCDM — the fused
+    // task must not "win" by dropping to a single cluster's bandwidth.
+    ChainCase {
+        n: g.usize(2, 9000),
+        ops: (0..g.usize(2, 8)).map(|_| g.usize(0, 5)).collect(),
+        seed: g.rng.next_u64(),
+    }
+}
+
+fn chain_hlo(c: &ChainCase) -> String {
+    let n = c.n;
+    let mut text = format!(
+        "HloModule m\nENTRY e {{\n  a = f64[{n}]{{0}} parameter(0)\n  \
+         b = f64[{n}]{{0}} parameter(1)\n"
+    );
+    let mut prev = "a".to_string();
+    for (i, &op) in c.ops.iter().enumerate() {
+        let name = format!("v{i}");
+        let root = if i + 1 == c.ops.len() { "ROOT " } else { "" };
+        let expr = match op {
+            0 => format!("add({prev}, {prev})"),
+            1 => format!("multiply({prev}, {prev})"),
+            2 => format!("negate({prev})"),
+            3 => format!("add({prev}, b)"),
+            4 => format!("multiply({prev}, b)"),
+            _ => format!("subtract({prev}, b)"),
+        };
+        text.push_str(&format!("  {root}{name} = f64[{n}]{{0}} {expr}\n"));
+        prev = name;
+    }
+    text.push_str("}\n");
+    text
+}
+
+/// Fusion legality property (lowering pipeline): for random
+/// elementwise chains the fused schedule leaves numerics untouched
+/// (the native plan is unchanged by construction — sim output is
+/// bit-identical to native), the fused cycle cost never exceeds the
+/// sum of the unfused per-op costs, and modeled FPU utilization never
+/// exceeds 1.0.
+#[test]
+fn fused_schedules_preserve_numerics_and_never_cost_more() {
+    use manticore::runtime::native::NativeBackend;
+    use manticore::runtime::sim::SimBackend;
+    use manticore::runtime::{Backend, Executable, Tensor};
+    use manticore::util::rng::Rng;
+
+    forall(0xF0, 30, arb_chain, |c| {
+        let text = chain_hlo(c);
+        let mut rng = Rng::new(c.seed);
+        let mut fill = |len: usize| -> Vec<f64> {
+            (0..len).map(|_| rng.range_f64(-2.0, 2.0)).collect()
+        };
+        let inputs = [
+            Tensor::F64(fill(c.n), vec![c.n]),
+            Tensor::F64(fill(c.n), vec![c.n]),
+        ];
+
+        let native = NativeBackend::new()
+            .compile("chain", &text)
+            .map_err(|e| format!("native compile: {e}"))?
+            .execute(&inputs)
+            .map_err(|e| format!("native execute: {e}"))?;
+        let exe = SimBackend::new()
+            .compile_sim("chain", &text)
+            .map_err(|e| format!("sim compile: {e}"))?;
+        let sim = exe
+            .execute(&inputs)
+            .map_err(|e| format!("sim execute: {e}"))?;
+        if native != sim {
+            return Err(format!(
+                "fused schedule changed numerics\n--- hlo:\n{text}"
+            ));
+        }
+
+        // Straight-line chain: no profile needed for pricing.
+        let raw = exe
+            .price_compiled(None, false)
+            .map_err(|e| format!("raw pricing: {e}"))?;
+        let opt = exe
+            .price_compiled(None, true)
+            .map_err(|e| format!("fused pricing: {e}"))?;
+        if opt.total_cycles > raw.total_cycles * (1.0 + 1e-9) {
+            return Err(format!(
+                "fused {} cycles > unfused {}\n--- hlo:\n{text}",
+                opt.total_cycles, raw.total_cycles
+            ));
+        }
+        for rep in [&raw, &opt] {
+            for o in &rep.ops {
+                if o.fpu_util > 1.0 {
+                    return Err(format!(
+                        "{}: modeled FPU util {} > 1.0",
+                        o.name, o.fpu_util
+                    ));
+                }
+            }
+        }
+        // The whole chain must have fused into one kernel.
+        let fused = opt
+            .ops
+            .iter()
+            .find(|o| o.fused > 1)
+            .ok_or_else(|| format!("no fused kernel\n--- hlo:\n{text}"))?;
+        if fused.fused as usize != c.ops.len() {
+            return Err(format!(
+                "fused {} of {} chain ops\n--- hlo:\n{text}",
+                fused.fused,
+                c.ops.len()
+            ));
+        }
+        Ok(())
+    });
+}
