@@ -21,12 +21,16 @@ help:
 	@echo "  fmt-check    cargo fmt --check"
 	@echo "  clippy       cargo clippy --all-targets -- -D warnings"
 	@echo "  bench        run every bench target"
-	@echo "  bench-smoke  perf_hotpath + native_exec + sim_price + ablations with"
-	@echo "               --smoke, JSON to $(BENCH_OUT)/; each report is diffed"
-	@echo "               against the previous run. The hotpath benches"
-	@echo "               (perf_hotpath, native_exec, sim_price) GATE: >25%"
-	@echo "               mean-time regressions fail the target; ablations stays"
-	@echo "               a non-fatal 10% warning"
+	@echo "  bench-smoke  perf_hotpath + native_exec + sim_price run through"
+	@echo "               scripts/bench_ab.sh: interleaved HEAD-vs-baseline A/B"
+	@echo "               rounds (baseline binary stashed in $(BENCH_OUT)/bin/),"
+	@echo "               per-iteration samples pooled with 'manticore"
+	@echo "               bench-merge', then ONE gating 'manticore bench-diff':"
+	@echo "               fails only a regression with mean delta >25% AND"
+	@echo "               Welch's t significant at p<0.01 (bench-diff exit 3 ="
+	@echo "               perf gate tripped, exit 2 = infra failure e.g. bad"
+	@echo "               JSON). ablations stays a non-fatal mean-only 10%"
+	@echo "               warning vs its previous JSON"
 	@echo "  lower-smoke  run 'manticore lower --check' over every checked-in"
 	@echo "               artifact: compiled-schedule reports must match the"
 	@echo "               trace-derived reports within 5%; the fusion-stats table"
@@ -61,46 +65,30 @@ clippy:
 bench:
 	$(CARGO) bench
 
-# Snapshot the previous run's JSON first, then diff the fresh reports
-# against it with `manticore bench-diff` (tables kept as
-# $(BENCH_OUT)/<bench>.diff.md). The hotpath benches (perf_hotpath,
-# native_exec, sim_price) are a GATING check: a >25 % mean-time
-# regression vs the cached previous run fails the target — and the CI
-# job. ablations stays a non-fatal 10 % warning (its smoke timings are
-# noisy).
+# Statistical interleaved A/B perf gate (scripts/bench_ab.sh): each
+# hotpath bench (perf_hotpath, native_exec, sim_price) alternates the
+# HEAD bench binary with the baseline binary stashed under
+# $(BENCH_OUT)/bin/ by the previous accepted run, pools each side's
+# per-iteration samples with `manticore bench-merge`, and gates with
+# one `manticore bench-diff --fail-on-regression`: the build fails
+# only on a regression that is practically large (mean delta > 25 %)
+# AND statistically significant (Welch's t, p < 0.01). Interleaving
+# within one invocation cancels the cross-run drift (different
+# runner, different thermal state) that made the old single-sample
+# mean comparison flaky. First runs record a baseline and skip the
+# gate. ablations stays a non-fatal mean-only 10 % warning against
+# its previous JSON (its smoke timings are noisy).
 bench-smoke:
 	mkdir -p $(BENCH_OUT)
-	@for f in perf_hotpath native_exec sim_price ablations; do \
-	  if [ -f $(BENCH_OUT)/$$f.json ]; then \
-	    cp $(BENCH_OUT)/$$f.json $(BENCH_OUT)/$$f.prev.json; \
-	  fi; \
-	done
-	$(CARGO) bench --bench perf_hotpath -- --smoke --json $(BENCH_OUT)/perf_hotpath.json
-	$(CARGO) bench --bench native_exec -- --smoke --json $(BENCH_OUT)/native_exec.json
-	$(CARGO) bench --bench sim_price -- --smoke --json $(BENCH_OUT)/sim_price.json
-	$(CARGO) bench --bench ablations -- --smoke --json $(BENCH_OUT)/ablations.json
 	@for f in perf_hotpath native_exec sim_price; do \
-	  if [ -f $(BENCH_OUT)/$$f.prev.json ]; then \
-	    $(CARGO) run --release --quiet --bin manticore -- bench-diff \
-	      $(BENCH_OUT)/$$f.prev.json $(BENCH_OUT)/$$f.json \
-	      --threshold 0.25 --fail-on-regression \
-	      --md $(BENCH_OUT)/$$f.diff.md; \
-	    rc=$$?; \
-	    if [ $$rc -eq 3 ]; then \
-	      cp $(BENCH_OUT)/$$f.json $(BENCH_OUT)/$$f.rejected.json; \
-	      mv $(BENCH_OUT)/$$f.prev.json $(BENCH_OUT)/$$f.json; \
-	      echo "$$f: perf regression gate failed; baseline restored" \
-	           "(regressed run kept as $$f.rejected.json)"; \
-	      exit 1; \
-	    elif [ $$rc -ne 0 ]; then \
-	      echo "$$f: bench-diff failed (exit $$rc — not a perf regression)"; \
-	      exit 1; \
-	    fi; \
-	    rm -f $(BENCH_OUT)/$$f.prev.json; \
-	  else \
-	    echo "(no previous $$f.json — skipping diff)"; \
-	  fi; \
+	  echo "== $$f: interleaved A/B (3 rounds, gate 25% + Welch p<0.01) =="; \
+	  CARGO="$(CARGO)" sh scripts/bench_ab.sh $$f $(BENCH_OUT) 3 0.25 \
+	    || exit 1; \
 	done
+	@if [ -f $(BENCH_OUT)/ablations.json ]; then \
+	  cp $(BENCH_OUT)/ablations.json $(BENCH_OUT)/ablations.prev.json; \
+	fi
+	$(CARGO) bench --bench ablations -- --smoke --json $(BENCH_OUT)/ablations.json
 	@if [ -f $(BENCH_OUT)/ablations.prev.json ]; then \
 	  $(CARGO) run --release --quiet --bin manticore -- bench-diff \
 	    $(BENCH_OUT)/ablations.prev.json $(BENCH_OUT)/ablations.json \

@@ -575,7 +575,21 @@ class Evaluator:
         N = int(np.prod([rhs.dims[d] for d in rfree])) if rfree else 1
         a = np.transpose(lhs.nd(), lb + lfree + lc).reshape(B, M, K)
         b = np.transpose(rhs.nd(), rb + rc + rfree).reshape(B, K, N)
-        out = np.matmul(a, b)
+        if sh.ty == "f32" and lhs.ty == "f32" and rhs.ty == "f32":
+            # f32 dots accumulate in f32 *sequentially over k*,
+            # matching the Rust native backend's default f32-native
+            # GEMM (gemm.rs): canonicalized values are exactly
+            # representable in f32 (lossless downcast), and the
+            # microkernel keeps one ascending-k mul-then-add chain per
+            # output cell — association matters, so np.matmul's
+            # blocked f32 accumulation would round differently.
+            a32 = a.astype(np.float32)
+            b32 = b.astype(np.float32)
+            out = np.zeros((B, M, N), dtype=np.float32)
+            for kk in range(K):
+                out += a32[:, :, kk, None] * b32[:, kk, None, :]
+        else:
+            out = np.matmul(a, b)
         return Arr(sh.ty, sh.dims,
                    finalize(sh.ty, out.ravel().astype(np.float64)))
 

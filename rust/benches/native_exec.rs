@@ -13,7 +13,8 @@
 
 use manticore::runtime::native::parser::parse_module;
 use manticore::runtime::native::{
-    native_threads, plan, set_native_threads, NativeBackend,
+    native_threads, plan, set_f32_dot, set_native_threads, simd_kernel,
+    NativeBackend,
 };
 use manticore::runtime::{inputs_for_meta, load_manifest};
 use manticore::util::bench::{fmt_ns, BenchOpts, Report};
@@ -22,7 +23,11 @@ use std::path::Path;
 fn main() {
     let mut rep = Report::new(BenchOpts::from_env_args());
     let default_threads = native_threads();
-    println!("native_exec: {default_threads} GEMM worker thread(s)\n");
+    println!(
+        "native_exec: {default_threads} GEMM worker thread(s), '{}' \
+         microkernel\n",
+        simd_kernel()
+    );
 
     let manifest = match load_manifest(Path::new("artifacts"), "bench") {
         Ok(m) => m,
@@ -106,6 +111,43 @@ fn main() {
                 );
             }
             set_native_threads(default_threads);
+
+            // 4. f32-native GEMM vs the f64-ride baseline on the same
+            //    artifact — the software analogue of the paper's
+            //    FPU-saturation argument (DESIGN.md §4): f32 panels
+            //    double the SIMD lane width and halve the packed-panel
+            //    bandwidth, so the ratio of these two samples is the
+            //    measured payoff of computing f32 natively instead of
+            //    riding the f64 kernels.
+            let f32_native = {
+                set_f32_dot(true);
+                exe.execute_planned(&inputs).expect("warmup");
+                rep.bench("native_exec/f32_dot/native", || {
+                    std::hint::black_box(
+                        exe.execute_planned(&inputs).unwrap(),
+                    );
+                })
+            };
+            let f64_ride = {
+                set_f32_dot(false);
+                exe.execute_planned(&inputs).expect("warmup");
+                rep.bench("native_exec/f32_dot/f64_ride", || {
+                    std::hint::black_box(
+                        exe.execute_planned(&inputs).unwrap(),
+                    );
+                })
+            };
+            set_f32_dot(true);
+            println!(
+                "  -> f32-native {} ± {} vs f64-ride {} ± {} \
+                 ({:.2}x, '{}' kernel)\n",
+                fmt_ns(f32_native.mean_ns),
+                fmt_ns(f32_native.stddev_ns),
+                fmt_ns(f64_ride.mean_ns),
+                fmt_ns(f64_ride.stddev_ns),
+                f64_ride.mean_ns / f32_native.mean_ns.max(1.0),
+                simd_kernel(),
+            );
         }
     }
 

@@ -9,7 +9,8 @@
 //!   simulate kernel --name <dot|matvec|gemm|axpy>   cycle-level run
 //!   train [--steps N] [--lr F]          tiny end-to-end training loop
 //!   backends                            list runtime backends + gates
-//!   bench-diff <old.json> <new.json>    perf regression check
+//!   bench-diff <old.json> <new.json>    statistical perf regression check
+//!   bench-merge <out.json> <in...>      pool samples from A/B rounds
 //!   info                                list artifacts + config
 //!
 //! Global options: --preset <manticore|prototype|max-efficiency>,
@@ -28,7 +29,7 @@ use manticore::runtime::{
     Tensor,
 };
 use manticore::serve::{run_loadgen, LoadgenConfig, ServeConfig, Server};
-use manticore::util::bench::{diff_reports, fmt_si, Table};
+use manticore::util::bench::{diff_reports, fmt_si, merge_reports, Table};
 use manticore::util::cli;
 use manticore::util::json;
 
@@ -90,6 +91,7 @@ fn run_cli() -> Result<()> {
         Some("train") => cmd_train(&args, &artifacts_dir, &cfg),
         Some("backends") => cmd_backends(),
         Some("bench-diff") => cmd_bench_diff(&args),
+        Some("bench-merge") => cmd_bench_merge(&args),
         Some("info") => cmd_info(&args, &artifacts_dir, &cfg),
         _ => {
             print_help();
@@ -116,7 +118,12 @@ fn print_help() {
          train [--steps N] [--lr F]\n  \
          backends\n  \
          bench-diff <old.json> <new.json> [--threshold 0.1] [--md out.md]\n             \
-         [--fail-on-regression]\n  \
+         [--fail-on-regression]\n             \
+         (gate: mean delta > threshold AND Welch p<0.01 when both\n             \
+         reports carry per-iteration samples; exit 3 = perf gate\n             \
+         tripped, exit 2 = infra failure e.g. bad JSON)\n  \
+         bench-merge <out.json> <in1.json> <in2.json> [...]\n             \
+         (pool per-iteration samples from interleaved A/B rounds)\n  \
          info\n\n\
          OPTIONS: --preset <name> --config <file.json> --artifacts <dir> \
          --backend <native|sim|xla> --native-threads <N>"
@@ -264,6 +271,41 @@ fn cmd_bench_diff(args: &cli::Args) -> Result<()> {
     } else {
         println!("no regressions above {:.0} %", threshold * 100.0);
     }
+    Ok(())
+}
+
+/// Pool per-iteration samples from several bench JSON reports into one
+/// (`manticore bench-merge <out.json> <in...>`): the interleaved A/B
+/// loop in `scripts/bench_ab.sh` runs HEAD and baseline in alternating
+/// rounds and merges each side's rounds before the single `bench-diff`
+/// gate, so slow drift (thermal, cache state) decorrelates from the
+/// A/B difference.
+fn cmd_bench_merge(args: &cli::Args) -> Result<()> {
+    let Some((out_path, in_paths)) = args.positional.split_first() else {
+        bail!(
+            "usage: manticore bench-merge <out.json> <in1.json> \
+             [in2.json ...]"
+        );
+    };
+    if in_paths.is_empty() {
+        bail!("bench-merge: need at least one input report");
+    }
+    let mut parts = Vec::with_capacity(in_paths.len());
+    for p in in_paths {
+        let text = std::fs::read_to_string(p)
+            .with_context(|| format!("reading {p}"))?;
+        parts.push(
+            json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("parsing {p}: {e}"))?,
+        );
+    }
+    let merged = merge_reports(&parts);
+    std::fs::write(out_path, json::write(&merged))
+        .with_context(|| format!("writing {out_path}"))?;
+    println!(
+        "merged {} report(s) into {out_path}",
+        in_paths.len()
+    );
     Ok(())
 }
 

@@ -1,0 +1,373 @@
+//! Per-plan buffer arena: reusable tensor/packing/slot storage for the
+//! compiled execution path (DESIGN.md §2e).
+//!
+//! Plan slots know their shapes statically, so a plan executed in a
+//! steady state (the serve loop, bench iterations, `while` grid-loop
+//! bodies) allocates the *same* buffer sizes over and over. The arena
+//! turns those allocations into pool hits: buffers are leased by exact
+//! capacity, and when liveness kills a slot whose `Arc<ArrayV>` is
+//! uniquely owned, its `Vec` goes back to the pool instead of the
+//! allocator.
+//!
+//! Ownership: each `NativeExecutable` owns one [`BufferArena`] behind
+//! an `Arc`; the serve subsystem's compile-once cache therefore shares
+//! the pool fleet-wide (all pools are `Mutex`-guarded). The arena is
+//! installed for the current thread with [`enter`] (an RAII scope) —
+//! kernels call the free functions [`lease`]/[`recycle`], which fall
+//! back to plain allocation when no arena is installed (the tree-walk
+//! reference path stays arena-free on purpose: it is the pre-plan
+//! baseline).
+//!
+//! Numerics: a leased buffer is cleared and zero-filled to the
+//! requested length before hand-off, exactly like `vec![0.0; n]`, so
+//! pooling is invisible to every kernel — asserted by the arena-reuse
+//! bit-identity test in `rust/tests/simd_parity.rs`.
+
+use super::eval::Value;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Buffers kept per exact size class (plan shapes are static, so a
+/// small stack per class covers the steady state).
+const MAX_PER_CLASS: usize = 8;
+
+/// Total bytes the pools may hold before recycles start dropping
+/// (256 MiB — a cap, not a reservation).
+const MAX_HELD_BYTES: u64 = 256 << 20;
+
+/// Idle slot vectors kept for [`lease_slots`] (one per live
+/// computation frame; recursion depth is the plan's call depth).
+const MAX_SLOT_VECS: usize = 32;
+
+/// Pool hit/miss/recycle counters (diagnostic surface; the arena-reuse
+/// test asserts hits actually happen on repeated execution).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Leases served from the pool.
+    pub hits: u64,
+    /// Leases that fell through to the allocator.
+    pub misses: u64,
+    /// Buffers returned to the pool (dropped ones are not counted).
+    pub recycled: u64,
+    /// Bytes currently parked in the pools.
+    pub held_bytes: u64,
+}
+
+/// A `Mutex`-guarded pool of same-element buffers, bucketed by exact
+/// capacity.
+struct Pool<T> {
+    buckets: Mutex<BTreeMap<usize, Vec<Vec<T>>>>,
+}
+
+impl<T> Pool<T> {
+    fn new() -> Pool<T> {
+        Pool { buckets: Mutex::new(BTreeMap::new()) }
+    }
+
+    fn take(&self, cap: usize) -> Option<Vec<T>> {
+        let mut buckets = self.buckets.lock().unwrap();
+        let bucket = buckets.get_mut(&cap)?;
+        let v = bucket.pop();
+        if bucket.is_empty() {
+            buckets.remove(&cap);
+        }
+        v
+    }
+
+    fn put(&self, v: Vec<T>) -> bool {
+        let mut buckets = self.buckets.lock().unwrap();
+        let bucket = buckets.entry(v.capacity()).or_default();
+        if bucket.len() >= MAX_PER_CLASS {
+            return false;
+        }
+        bucket.push(v);
+        true
+    }
+}
+
+/// The reusable buffer store one compiled executable owns (shared
+/// fleet-wide through the executable's `Arc` in serve's cache).
+pub struct BufferArena {
+    f64_pool: Pool<f64>,
+    f32_pool: Pool<f32>,
+    slot_pool: Mutex<Vec<Vec<Option<Value>>>>,
+    held_bytes: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    recycled: AtomicU64,
+}
+
+impl BufferArena {
+    pub fn new() -> BufferArena {
+        BufferArena {
+            f64_pool: Pool::new(),
+            f32_pool: Pool::new(),
+            slot_pool: Mutex::new(Vec::new()),
+            held_bytes: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            recycled: AtomicU64::new(0),
+        }
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            recycled: self.recycled.load(Ordering::Relaxed),
+            held_bytes: self.held_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    fn lease_elem<T: PoolElem>(&self, len: usize) -> Option<Vec<T>> {
+        match T::take_from(self, len) {
+            Some(v) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.held_bytes.fetch_sub(
+                    (len * std::mem::size_of::<T>()) as u64,
+                    Ordering::Relaxed,
+                );
+                Some(v)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    fn recycle_elem<T: PoolElem>(&self, v: Vec<T>) {
+        let bytes = (v.capacity() * std::mem::size_of::<T>()) as u64;
+        if v.capacity() == 0
+            || self.held_bytes.load(Ordering::Relaxed) + bytes
+                > MAX_HELD_BYTES
+        {
+            return;
+        }
+        if T::put_into(self, v) {
+            self.held_bytes.fetch_add(bytes, Ordering::Relaxed);
+            self.recycled.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Default for BufferArena {
+    fn default() -> Self {
+        BufferArena::new()
+    }
+}
+
+/// Element types the arena pools (routes a generic lease to the right
+/// pool without leaking the private `Pool` type).
+pub(crate) trait PoolElem: Copy + Default + 'static {
+    fn take_from(arena: &BufferArena, cap: usize) -> Option<Vec<Self>>;
+    fn put_into(arena: &BufferArena, v: Vec<Self>) -> bool;
+}
+
+impl PoolElem for f64 {
+    fn take_from(arena: &BufferArena, cap: usize) -> Option<Vec<f64>> {
+        arena.f64_pool.take(cap)
+    }
+
+    fn put_into(arena: &BufferArena, v: Vec<f64>) -> bool {
+        arena.f64_pool.put(v)
+    }
+}
+
+impl PoolElem for f32 {
+    fn take_from(arena: &BufferArena, cap: usize) -> Option<Vec<f32>> {
+        arena.f32_pool.take(cap)
+    }
+
+    fn put_into(arena: &BufferArena, v: Vec<f32>) -> bool {
+        arena.f32_pool.put(v)
+    }
+}
+
+thread_local! {
+    /// The arena installed for the executing thread (None outside a
+    /// planned execution — then lease/recycle degrade to plain
+    /// allocation/drop).
+    static CURRENT: RefCell<Option<Arc<BufferArena>>> = RefCell::new(None);
+}
+
+/// RAII guard restoring the previously installed arena on drop.
+pub struct ArenaScope {
+    prev: Option<Arc<BufferArena>>,
+}
+
+impl Drop for ArenaScope {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        CURRENT.with(|c| *c.borrow_mut() = prev);
+    }
+}
+
+/// Install `arena` as the current thread's buffer source for the
+/// lifetime of the returned scope (nestable; each executing serve
+/// worker installs the executable's shared arena on its own thread).
+pub fn enter(arena: Arc<BufferArena>) -> ArenaScope {
+    let prev = CURRENT.with(|c| c.borrow_mut().replace(arena));
+    ArenaScope { prev }
+}
+
+/// Lease a zero-filled buffer of `len` elements — pool hit when the
+/// current arena holds one of exactly this capacity, plain `vec!`
+/// otherwise. Semantically identical to `vec![T::default(); len]`.
+pub(crate) fn lease<T: PoolElem>(len: usize) -> Vec<T> {
+    let pooled =
+        CURRENT.with(|c| c.borrow().as_ref()?.lease_elem::<T>(len));
+    match pooled {
+        Some(mut v) => {
+            v.clear();
+            v.resize(len, T::default());
+            v
+        }
+        None => vec![T::default(); len],
+    }
+}
+
+/// Return a buffer to the current arena (dropped when none is
+/// installed or the pool caps are reached).
+pub(crate) fn recycle<T: PoolElem>(v: Vec<T>) {
+    CURRENT.with(|c| {
+        if let Some(a) = c.borrow().as_ref() {
+            a.recycle_elem(v);
+        }
+    });
+}
+
+/// Recycle the storage of a value the executor just killed: only
+/// uniquely-owned arrays are reclaimed (`Arc::try_unwrap`), so
+/// copy-on-write sharing — plan constants, aliased tuple elements,
+/// loop state still referenced elsewhere — is never disturbed.
+pub(crate) fn recycle_value(v: Value) {
+    match v {
+        Value::Arr(a) => {
+            if let Ok(arr) = Arc::try_unwrap(a) {
+                recycle::<f64>(arr.data);
+            }
+        }
+        Value::Tuple(vs) => {
+            for v in vs {
+                recycle_value(v);
+            }
+        }
+    }
+}
+
+/// Lease a cleared slot vector for one computation frame (the
+/// executor's `Vec<Option<Value>>`).
+pub(crate) fn lease_slots(n: usize) -> Vec<Option<Value>> {
+    let pooled = CURRENT
+        .with(|c| c.borrow().as_ref()?.slot_pool.lock().unwrap().pop());
+    match pooled {
+        Some(mut v) => {
+            v.clear();
+            v.resize(n, None);
+            v
+        }
+        None => vec![None; n],
+    }
+}
+
+/// Return a slot vector after a computation frame finishes, recycling
+/// any values still parked in it (the root has already been taken).
+pub(crate) fn recycle_slots(mut slots: Vec<Option<Value>>) {
+    for s in slots.iter_mut() {
+        if let Some(v) = s.take() {
+            recycle_value(v);
+        }
+    }
+    CURRENT.with(|c| {
+        if let Some(a) = c.borrow().as_ref() {
+            let mut pool = a.slot_pool.lock().unwrap();
+            if pool.len() < MAX_SLOT_VECS {
+                pool.push(slots);
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::eval::ArrayV;
+    use super::super::parser::DType;
+    use super::*;
+
+    #[test]
+    fn lease_without_arena_allocates_plain() {
+        let v = lease::<f64>(16);
+        assert_eq!(v, vec![0.0; 16]);
+        recycle(v); // no arena installed: dropped, no panic
+    }
+
+    #[test]
+    fn pool_roundtrip_hits_and_zeroes() {
+        let arena = Arc::new(BufferArena::new());
+        let _scope = enter(arena.clone());
+        let mut v = lease::<f64>(8);
+        v.iter_mut().for_each(|x| *x = 7.0);
+        recycle(v);
+        let v2 = lease::<f64>(8);
+        assert_eq!(v2, vec![0.0; 8], "leased buffers must be zeroed");
+        let stats = arena.stats();
+        assert_eq!(stats.hits, 1);
+        assert_eq!(stats.misses, 1);
+        assert_eq!(stats.recycled, 1);
+    }
+
+    #[test]
+    fn shared_values_are_never_reclaimed() {
+        let arena = Arc::new(BufferArena::new());
+        let _scope = enter(arena.clone());
+        let a = Arc::new(ArrayV::new(DType::F64, vec![2], vec![1.0, 2.0]));
+        let keep = a.clone();
+        recycle_value(Value::Arr(a));
+        assert_eq!(arena.stats().recycled, 0, "shared Arc must survive");
+        assert_eq!(keep.data, vec![1.0, 2.0]);
+        // Now uniquely owned: reclaimed.
+        recycle_value(Value::Arr(keep));
+        assert_eq!(arena.stats().recycled, 1);
+    }
+
+    #[test]
+    fn slot_vectors_are_pooled_and_cleared() {
+        let arena = Arc::new(BufferArena::new());
+        let _scope = enter(arena);
+        let mut slots = lease_slots(4);
+        slots[1] = Some(Value::Arr(Arc::new(ArrayV::new(
+            DType::F64,
+            vec![1],
+            vec![3.0],
+        ))));
+        recycle_slots(slots);
+        let again = lease_slots(6);
+        assert_eq!(again.len(), 6);
+        assert!(again.iter().all(|s| s.is_none()));
+    }
+
+    #[test]
+    fn scope_restores_previous_arena() {
+        let a = Arc::new(BufferArena::new());
+        {
+            let _outer = enter(a.clone());
+            let mut v = lease::<f32>(4);
+            v[0] = 1.0;
+            recycle(v);
+            {
+                let b = Arc::new(BufferArena::new());
+                let _inner = enter(b.clone());
+                let v = lease::<f32>(4);
+                recycle(v);
+                assert_eq!(b.stats().recycled, 1);
+            }
+            // Back on `a`: the f32 buffer recycled above is leasable.
+            let v = lease::<f32>(4);
+            assert_eq!(v, vec![0.0; 4]);
+        }
+        assert_eq!(a.stats().hits, 1);
+    }
+}

@@ -14,6 +14,7 @@
 //! lockstep.
 
 use super::parser::{parse_literal, Computation, DType, Instr, Module, Shape};
+use super::{arena, gemm};
 use anyhow::{anyhow, bail, Context, Result};
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
@@ -1215,12 +1216,27 @@ fn is_identity_perm(perm: &[usize]) -> bool {
     perm.iter().enumerate().all(|(i, &p)| i == p)
 }
 
+/// True when this dot runs the f32-native accumulation chain: output
+/// and both operands are f32 and the [`gemm::f32_dot_enabled`] toggle
+/// is on. Checked identically by both execution paths, so planned and
+/// reference dots always pick the same chain.
+fn dot_is_f32(ins: &Instr, lhs: &ArrayV, rhs: &ArrayV) -> bool {
+    lhs.ty == DType::F32
+        && rhs.ty == DType::F32
+        && ins.shape.ty().ok() == Some(DType::F32)
+        && gemm::f32_dot_enabled()
+}
+
 /// The pre-plan `dot`: naive ascending-k triple loop over transposed
 /// copies. The tree-walk reference evaluator keeps dispatching here,
 /// so `MANTICORE_NATIVE_REFERENCE=1` really is the pre-plan baseline
 /// (and a usable bisection hatch for GEMM changes), and the parity
-/// suite cross-checks [`gemm_batched`]'s claim of being bit-identical
-/// to this loop (same per-cell accumulation chain).
+/// suite cross-checks [`gemm::gemm_batched`]'s claim of being
+/// bit-identical to this loop (same per-cell accumulation chain). f32
+/// dots take the naive f32-accumulate loop
+/// ([`gemm::gemm_batched_f32_reference`]) under the same condition the
+/// planned path uses, so the two paths stay bit-identical with the
+/// f32-native toggle in either position.
 pub(crate) fn kernel_dot_reference(
     ins: &Instr,
     lhs: &ArrayV,
@@ -1237,17 +1253,24 @@ pub(crate) fn kernel_dot_reference(
     bperm.extend(&dd.rfree);
     let b = transpose(rhs, &bperm);
     let mut out = vec![0.0; bsz * m * n];
-    for bb in 0..bsz {
-        let a0 = bb * m * k;
-        let b0 = bb * k * n;
-        let o0 = bb * m * n;
-        for i in 0..m {
-            for j in 0..n {
-                let mut acc = 0.0f64;
-                for kk in 0..k {
-                    acc += a.data[a0 + i * k + kk] * b.data[b0 + kk * n + j];
+    if dot_is_f32(ins, lhs, rhs) {
+        gemm::gemm_batched_f32_reference(
+            bsz, m, k, n, &a.data, &b.data, &mut out,
+        );
+    } else {
+        for bb in 0..bsz {
+            let a0 = bb * m * k;
+            let b0 = bb * k * n;
+            let o0 = bb * m * n;
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0.0f64;
+                    for kk in 0..k {
+                        acc +=
+                            a.data[a0 + i * k + kk] * b.data[b0 + kk * n + j];
+                    }
+                    out[o0 + i * n + j] = acc;
                 }
-                out[o0 + i * n + j] = acc;
             }
         }
     }
@@ -1265,198 +1288,35 @@ fn kernel_dot(ins: &Instr, lhs: &ArrayV, rhs: &ArrayV) -> Result<Value> {
     let mut aperm = dd.lb.clone();
     aperm.extend(&dd.lfree);
     aperm.extend(&dd.lc);
-    let at;
-    let a: &[f64] = if is_identity_perm(&aperm) {
-        &lhs.data
+    let at = if is_identity_perm(&aperm) {
+        None
     } else {
-        at = transpose(lhs, &aperm);
-        &at.data
+        Some(transpose(lhs, &aperm))
     };
+    let a: &[f64] = at.as_ref().map_or(&lhs.data[..], |t| &t.data[..]);
     let mut bperm = dd.rb.clone();
     bperm.extend(&dd.rc);
     bperm.extend(&dd.rfree);
-    let bt;
-    let b: &[f64] = if is_identity_perm(&bperm) {
-        &rhs.data
+    let bt = if is_identity_perm(&bperm) {
+        None
     } else {
-        bt = transpose(rhs, &bperm);
-        &bt.data
+        Some(transpose(rhs, &bperm))
     };
+    let b: &[f64] = bt.as_ref().map_or(&rhs.data[..], |t| &t.data[..]);
 
-    let mut out = vec![0.0; bsz * m * n];
-    gemm_batched(bsz, m, k, n, a, b, &mut out);
+    let mut out = arena::lease::<f64>(bsz * m * n);
+    if dot_is_f32(ins, lhs, rhs) {
+        gemm::gemm_batched_f32(bsz, m, k, n, a, b, &mut out);
+    } else {
+        gemm::gemm_batched(bsz, m, k, n, a, b, &mut out);
+    }
+    if let Some(t) = at {
+        arena::recycle(t.data);
+    }
+    if let Some(t) = bt {
+        arena::recycle(t.data);
+    }
     out_arr(&ins.shape, out)
-}
-
-/// Row-panel height of the blocked GEMM micro-kernel: an 8-row A panel
-/// stays L1-resident across one full B^T row sweep.
-const GEMM_MB: usize = 8;
-
-/// Flop count below which spawning worker threads costs more than it
-/// saves; small dots run inline on the calling thread. Workers are
-/// spawned per call (scoped threads, no persistent pool), so each one
-/// must amortize its ~tens-of-µs spawn/join cost: the threshold also
-/// caps the worker count at one per `GEMM_PAR_MIN / 2` flops.
-const GEMM_PAR_MIN: usize = 1 << 21;
-
-/// Cache-blocked, panel-packed batched GEMM over flattened row-major
-/// buffers: `out[b,i,j] = sum_k a[b,i,k] * b[b,k,j]`. The RHS is
-/// packed as per-batch B^T panels (j-major), so the k inner loop is
-/// contiguous for both operands; work is parallelised over contiguous
-/// output-row ranges with scoped threads ([`native_threads`] workers).
-/// Every (i, j) cell accumulates its k terms in one ascending chain,
-/// computed by exactly one worker — results are bit-identical to the
-/// naive triple loop for any blocking factor or worker count.
-pub(crate) fn gemm_batched(
-    bsz: usize,
-    m: usize,
-    k: usize,
-    n: usize,
-    a: &[f64],
-    b: &[f64],
-    out: &mut [f64],
-) {
-    if bsz == 0 || m == 0 || n == 0 {
-        return;
-    }
-    // Pack B^T once per batch (shared read-only by all workers).
-    let mut bt = vec![0.0f64; bsz * k * n];
-    for bb in 0..bsz {
-        let src = &b[bb * k * n..][..k * n];
-        let dst = &mut bt[bb * k * n..][..k * n];
-        for j in 0..n {
-            for kk in 0..k {
-                dst[j * k + kk] = src[kk * n + j];
-            }
-        }
-    }
-    let rows = bsz * m;
-    let work = 2 * rows * n * k;
-    let threads = native_threads()
-        .min(rows)
-        .min((work / (GEMM_PAR_MIN / 2)).max(1))
-        .max(1);
-    if threads == 1 || work < GEMM_PAR_MIN {
-        gemm_rows(0, rows, m, k, n, a, &bt, out);
-        return;
-    }
-    // Partition output rows into `threads` contiguous ranges; each
-    // worker owns a disjoint slice of `out`.
-    let base = rows / threads;
-    let rem = rows % threads;
-    let mut ranges = Vec::with_capacity(threads);
-    let mut g0 = 0usize;
-    for t in 0..threads {
-        let len = base + usize::from(t < rem);
-        ranges.push((g0, g0 + len));
-        g0 += len;
-    }
-    let mut parts: Vec<(usize, usize, &mut [f64])> =
-        Vec::with_capacity(threads);
-    let mut rest: &mut [f64] = out;
-    for &(r0, r1) in &ranges {
-        let (chunk, tail) =
-            std::mem::take(&mut rest).split_at_mut((r1 - r0) * n);
-        parts.push((r0, r1, chunk));
-        rest = tail;
-    }
-    let bt_all: &[f64] = &bt;
-    std::thread::scope(|s| {
-        for (r0, r1, chunk) in parts {
-            s.spawn(move || gemm_rows(r0, r1, m, k, n, a, bt_all, chunk));
-        }
-    });
-}
-
-/// Compute output rows `g0..g1` (global row index `g = batch * m + i`)
-/// into `chunk`; row `g` lands at `(g - g0) * n`. `bt` holds the
-/// per-batch packed B^T panels.
-fn gemm_rows(
-    g0: usize,
-    g1: usize,
-    m: usize,
-    k: usize,
-    n: usize,
-    a: &[f64],
-    bt: &[f64],
-    chunk: &mut [f64],
-) {
-    let mut g = g0;
-    while g < g1 {
-        let bb = g / m;
-        let batch_end = ((bb + 1) * m).min(g1);
-        let btb = &bt[bb * k * n..][..k * n];
-        let mut i = g;
-        while i < batch_end {
-            let ib_end = (i + GEMM_MB).min(batch_end);
-            for j in 0..n {
-                let btrow = &btb[j * k..][..k];
-                for gi in i..ib_end {
-                    let arow = &a[gi * k..][..k];
-                    let mut acc = 0.0f64;
-                    for kk in 0..k {
-                        acc += arow[kk] * btrow[kk];
-                    }
-                    chunk[(gi - g0) * n + j] = acc;
-                }
-            }
-            i = ib_end;
-        }
-        g = batch_end;
-    }
-}
-
-/// Worker-thread count used by the parallel GEMM (0 = not yet
-/// resolved). Resolution order: [`set_native_threads`] (the
-/// `--native-threads` CLI flag) > `MANTICORE_NATIVE_THREADS` env var >
-/// `std::thread::available_parallelism()`.
-static NATIVE_THREADS: std::sync::atomic::AtomicUsize =
-    std::sync::atomic::AtomicUsize::new(0);
-
-/// Pin the native-backend worker count (used by `--native-threads`;
-/// also handy in tests sweeping thread counts). Outputs are
-/// bit-identical for every setting — this is purely a wall-clock knob.
-pub fn set_native_threads(n: usize) {
-    NATIVE_THREADS.store(n.max(1), std::sync::atomic::Ordering::Relaxed);
-}
-
-/// Pin the worker count only when nothing has resolved it yet — no
-/// `--native-threads` call, no `MANTICORE_NATIVE_THREADS` env var.
-/// The serve worker pool uses this to divide the machine between its
-/// concurrent requests (cores / workers GEMM threads each) instead of
-/// oversubscribing it (workers × cores); an explicit setting wins.
-pub fn set_native_threads_if_unset(n: usize) {
-    let env_set = std::env::var("MANTICORE_NATIVE_THREADS")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&v| v > 0)
-        .is_some();
-    if env_set
-        || NATIVE_THREADS.load(std::sync::atomic::Ordering::Relaxed) != 0
-    {
-        return;
-    }
-    NATIVE_THREADS.store(n.max(1), std::sync::atomic::Ordering::Relaxed);
-}
-
-/// The resolved native-backend worker count (see [`set_native_threads`]
-/// for the resolution order).
-pub fn native_threads() -> usize {
-    let v = NATIVE_THREADS.load(std::sync::atomic::Ordering::Relaxed);
-    if v != 0 {
-        return v;
-    }
-    let n = std::env::var("MANTICORE_NATIVE_THREADS")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&n| n > 0)
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism()
-                .map(|p| p.get())
-                .unwrap_or(1)
-        });
-    NATIVE_THREADS.store(n, std::sync::atomic::Ordering::Relaxed);
-    n
 }
 
 fn kernel_gather(ins: &Instr, operand: &ArrayV, start: &ArrayV) -> Result<Value> {
@@ -1862,7 +1722,7 @@ pub(crate) fn transpose(x: &ArrayV, perm: &[usize]) -> ArrayV {
     }
     let out_dims: Vec<usize> = perm.iter().map(|&p| x.dims[p]).collect();
     let in_strides = strides(&x.dims);
-    let mut out = vec![0.0; x.data.len()];
+    let mut out = arena::lease::<f64>(x.data.len());
     let mut idx = vec![0usize; out_dims.len()];
     let mut flat = 0usize;
     loop {

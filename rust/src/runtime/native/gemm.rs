@@ -1,0 +1,771 @@
+//! Panel-packed GEMM microkernels: the raw-speed floor of the native
+//! hot path (DESIGN.md §2e).
+//!
+//! The paper's whole argument is keeping the FPU saturated (SSR+FREP
+//! lift utilization past 90 % by stripping per-op issue overhead); the
+//! software analogue here is a register-tiled inner loop that streams
+//! packed panels instead of strided rows. Layout:
+//!
+//! * B is packed **k-major** into `GEMM_NR`-column panels
+//!   (`panel[kk * GEMM_NR + jj] = b[kk, j0 + jj]`), so one k step
+//!   touches `GEMM_NR` contiguous lanes;
+//! * the microkernel keeps a `GEMM_MR × GEMM_NR` accumulator tile in
+//!   registers and walks k once, doing `acc[i][j] += a[i,kk] * b[kk,j]`
+//!   per lane.
+//!
+//! **Bit-parity invariant**: every output cell is ONE ascending-k
+//! multiply-add chain, exactly the chain the naive triple loop
+//! (`kernel_dot_reference`) computes — vectorization runs across the
+//! *j lanes*, never across k, and the `core::arch` variants use
+//! mul-then-add (never FMA, which rounds once instead of twice). So
+//! the scalar tile, the AVX2 tile, the NEON tile, and any worker count
+//! all produce identical bits; `rust/tests/plan_parity.rs` and
+//! `rust/tests/simd_parity.rs` assert it.
+//!
+//! The f32 path ([`gemm_batched_f32`]) is *native*: operands are
+//! packed into f32 panels (lossless — the evaluator canonicalises
+//! every f32 buffer through `v as f32 as f64`) and accumulated in f32,
+//! doubling SIMD lane width and halving panel bandwidth vs riding the
+//! f64 kernels. It rounds per k step (like XLA CPU's sgemm) instead of
+//! once at the end, which is the f32-appropriate contract the golden
+//! tests pin down. `set_f32_dot(false)` /
+//! `MANTICORE_NATIVE_F32_DOT=0` fall back to the f64-ride path — the
+//! A/B knob the `native_exec` bench measures.
+//!
+//! The `core::arch` kernels sit behind the default-off `simd` cargo
+//! feature with runtime detection (`is_x86_feature_detected!`), so the
+//! default build stays portable and the feature-matrix CI job can't
+//! rot; without the feature the fixed-width scalar tiles autovectorize
+//! under `-O` anyway.
+
+use super::arena;
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+
+/// Column width of one packed B panel (j lanes per microkernel tile):
+/// one AVX2 register of f32 lanes, two of f64.
+pub const GEMM_NR: usize = 8;
+
+/// Row height of the accumulator tile. 4 rows × 8 f64 lanes = 8 ymm
+/// accumulators — half the register file, leaving room for the two
+/// loaded B lanes and the broadcast A value.
+pub const GEMM_MR: usize = 4;
+
+/// Flop count below which spawning worker threads costs more than it
+/// saves; small dots run inline on the calling thread. Workers are
+/// spawned per call (scoped threads, no persistent pool), so each one
+/// must amortize its ~tens-of-µs spawn/join cost: the threshold also
+/// caps the worker count at one per `GEMM_PAR_MIN / 2` flops.
+const GEMM_PAR_MIN: usize = 1 << 21;
+
+/// One element type the microkernel is instantiated at. The `tile`
+/// hook is where the SIMD dispatch lives; everything else (packing,
+/// row partitioning, threading) is shared. `PoolElem` lets the driver
+/// lease its packing panels from the current buffer arena.
+pub(crate) trait GemmElem:
+    arena::PoolElem
+    + Copy
+    + Send
+    + Sync
+    + std::ops::Add<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + 'static
+{
+    const ZERO: Self;
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+    /// Accumulate a full k sweep into an `mr × GEMM_NR` tile:
+    /// `acc[i][j] += a[i * stride + kk] * bp[kk * GEMM_NR + j]`,
+    /// ascending kk, one independent chain per (i, j) lane.
+    fn tile(
+        k: usize,
+        mr: usize,
+        a: &[Self],
+        stride: usize,
+        bp: &[Self],
+        acc: &mut [[Self; GEMM_NR]; GEMM_MR],
+    );
+}
+
+/// The portable tile: fixed-width inner loop over the `GEMM_NR` lanes
+/// (mul + add, ascending k) that LLVM autovectorizes on any target.
+#[inline(always)]
+fn tile_scalar<T: GemmElem>(
+    k: usize,
+    mr: usize,
+    a: &[T],
+    stride: usize,
+    bp: &[T],
+    acc: &mut [[T; GEMM_NR]; GEMM_MR],
+) {
+    for kk in 0..k {
+        let lanes = &bp[kk * GEMM_NR..][..GEMM_NR];
+        for i in 0..mr {
+            let av = a[i * stride + kk];
+            let row = &mut acc[i];
+            for j in 0..GEMM_NR {
+                row[j] = row[j] + av * lanes[j];
+            }
+        }
+    }
+}
+
+impl GemmElem for f64 {
+    const ZERO: f64 = 0.0;
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> f64 {
+        v
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+
+    #[inline(always)]
+    #[allow(unreachable_code)]
+    fn tile(
+        k: usize,
+        mr: usize,
+        a: &[f64],
+        stride: usize,
+        bp: &[f64],
+        acc: &mut [[f64; GEMM_NR]; GEMM_MR],
+    ) {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        if avx2_available() {
+            // SAFETY: AVX2 presence was just checked at runtime.
+            unsafe { tile_avx2_f64(k, mr, a, stride, bp, acc) };
+            return;
+        }
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        {
+            // SAFETY: NEON is baseline on aarch64.
+            unsafe { tile_neon_f64(k, mr, a, stride, bp, acc) };
+            return;
+        }
+        tile_scalar(k, mr, a, stride, bp, acc);
+    }
+}
+
+impl GemmElem for f32 {
+    const ZERO: f32 = 0.0;
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> f32 {
+        v as f32
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+
+    #[inline(always)]
+    #[allow(unreachable_code)]
+    fn tile(
+        k: usize,
+        mr: usize,
+        a: &[f32],
+        stride: usize,
+        bp: &[f32],
+        acc: &mut [[f32; GEMM_NR]; GEMM_MR],
+    ) {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        if avx2_available() {
+            // SAFETY: AVX2 presence was just checked at runtime.
+            unsafe { tile_avx2_f32(k, mr, a, stride, bp, acc) };
+            return;
+        }
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        {
+            // SAFETY: NEON is baseline on aarch64.
+            unsafe { tile_neon_f32(k, mr, a, stride, bp, acc) };
+            return;
+        }
+        tile_scalar(k, mr, a, stride, bp, acc);
+    }
+}
+
+/// Runtime AVX2 probe, cached after the first call (0 = unknown,
+/// 1 = absent, 2 = present).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    static AVX2: AtomicU8 = AtomicU8::new(0);
+    match AVX2.load(Ordering::Relaxed) {
+        2 => true,
+        1 => false,
+        _ => {
+            let ok = std::arch::is_x86_feature_detected!("avx2");
+            AVX2.store(if ok { 2 } else { 1 }, Ordering::Relaxed);
+            ok
+        }
+    }
+}
+
+/// Which microkernel variant `dot` dispatches to on this machine:
+/// `"avx2"`, `"neon"`, or `"scalar"` (also scalar when the `simd`
+/// feature is off or the CPU lacks the extension). Benches print it;
+/// the feature-matrix tests use it to skip gracefully on runners
+/// without AVX2.
+#[allow(unreachable_code)]
+pub fn simd_kernel() -> &'static str {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if avx2_available() {
+        return "avx2";
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    return "neon";
+    "scalar"
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn tile_avx2_f64(
+    k: usize,
+    mr: usize,
+    a: &[f64],
+    stride: usize,
+    bp: &[f64],
+    acc: &mut [[f64; GEMM_NR]; GEMM_MR],
+) {
+    use core::arch::x86_64::*;
+    debug_assert!(bp.len() >= k * GEMM_NR);
+    let mut r = [[_mm256_setzero_pd(); 2]; GEMM_MR];
+    for (i, row) in acc.iter().enumerate().take(mr) {
+        r[i][0] = _mm256_loadu_pd(row.as_ptr());
+        r[i][1] = _mm256_loadu_pd(row.as_ptr().add(4));
+    }
+    for kk in 0..k {
+        let lanes = bp.as_ptr().add(kk * GEMM_NR);
+        let b0 = _mm256_loadu_pd(lanes);
+        let b1 = _mm256_loadu_pd(lanes.add(4));
+        for (i, regs) in r.iter_mut().enumerate().take(mr) {
+            let av = _mm256_set1_pd(*a.get_unchecked(i * stride + kk));
+            // mul then add — NOT fma: parity with the scalar chain
+            // requires the intermediate product to round.
+            regs[0] = _mm256_add_pd(regs[0], _mm256_mul_pd(av, b0));
+            regs[1] = _mm256_add_pd(regs[1], _mm256_mul_pd(av, b1));
+        }
+    }
+    for (i, row) in acc.iter_mut().enumerate().take(mr) {
+        _mm256_storeu_pd(row.as_mut_ptr(), r[i][0]);
+        _mm256_storeu_pd(row.as_mut_ptr().add(4), r[i][1]);
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn tile_avx2_f32(
+    k: usize,
+    mr: usize,
+    a: &[f32],
+    stride: usize,
+    bp: &[f32],
+    acc: &mut [[f32; GEMM_NR]; GEMM_MR],
+) {
+    use core::arch::x86_64::*;
+    debug_assert!(bp.len() >= k * GEMM_NR);
+    let mut r = [_mm256_setzero_ps(); GEMM_MR];
+    for (i, row) in acc.iter().enumerate().take(mr) {
+        r[i] = _mm256_loadu_ps(row.as_ptr());
+    }
+    for kk in 0..k {
+        let b0 = _mm256_loadu_ps(bp.as_ptr().add(kk * GEMM_NR));
+        for (i, reg) in r.iter_mut().enumerate().take(mr) {
+            let av = _mm256_set1_ps(*a.get_unchecked(i * stride + kk));
+            // mul then add — NOT fma (see tile_avx2_f64).
+            *reg = _mm256_add_ps(*reg, _mm256_mul_ps(av, b0));
+        }
+    }
+    for (i, row) in acc.iter_mut().enumerate().take(mr) {
+        _mm256_storeu_ps(row.as_mut_ptr(), r[i]);
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+unsafe fn tile_neon_f64(
+    k: usize,
+    mr: usize,
+    a: &[f64],
+    stride: usize,
+    bp: &[f64],
+    acc: &mut [[f64; GEMM_NR]; GEMM_MR],
+) {
+    use core::arch::aarch64::*;
+    debug_assert!(bp.len() >= k * GEMM_NR);
+    let mut r = [[vdupq_n_f64(0.0); 4]; GEMM_MR];
+    for (i, row) in acc.iter().enumerate().take(mr) {
+        for l in 0..4 {
+            r[i][l] = vld1q_f64(row.as_ptr().add(2 * l));
+        }
+    }
+    for kk in 0..k {
+        let lanes = bp.as_ptr().add(kk * GEMM_NR);
+        let b = [
+            vld1q_f64(lanes),
+            vld1q_f64(lanes.add(2)),
+            vld1q_f64(lanes.add(4)),
+            vld1q_f64(lanes.add(6)),
+        ];
+        for (i, regs) in r.iter_mut().enumerate().take(mr) {
+            let av = vdupq_n_f64(*a.get_unchecked(i * stride + kk));
+            for l in 0..4 {
+                // mul then add — NOT vfmaq (see tile_avx2_f64).
+                regs[l] = vaddq_f64(regs[l], vmulq_f64(av, b[l]));
+            }
+        }
+    }
+    for (i, row) in acc.iter_mut().enumerate().take(mr) {
+        for l in 0..4 {
+            vst1q_f64(row.as_mut_ptr().add(2 * l), r[i][l]);
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+unsafe fn tile_neon_f32(
+    k: usize,
+    mr: usize,
+    a: &[f32],
+    stride: usize,
+    bp: &[f32],
+    acc: &mut [[f32; GEMM_NR]; GEMM_MR],
+) {
+    use core::arch::aarch64::*;
+    debug_assert!(bp.len() >= k * GEMM_NR);
+    let mut r = [[vdupq_n_f32(0.0); 2]; GEMM_MR];
+    for (i, row) in acc.iter().enumerate().take(mr) {
+        r[i][0] = vld1q_f32(row.as_ptr());
+        r[i][1] = vld1q_f32(row.as_ptr().add(4));
+    }
+    for kk in 0..k {
+        let lanes = bp.as_ptr().add(kk * GEMM_NR);
+        let b0 = vld1q_f32(lanes);
+        let b1 = vld1q_f32(lanes.add(4));
+        for (i, regs) in r.iter_mut().enumerate().take(mr) {
+            let av = vdupq_n_f32(*a.get_unchecked(i * stride + kk));
+            // mul then add — NOT vfmaq (see tile_avx2_f64).
+            regs[0] = vaddq_f32(regs[0], vmulq_f32(av, b0));
+            regs[1] = vaddq_f32(regs[1], vmulq_f32(av, b1));
+        }
+    }
+    for (i, row) in acc.iter_mut().enumerate().take(mr) {
+        vst1q_f32(row.as_mut_ptr(), r[i][0]);
+        vst1q_f32(row.as_mut_ptr().add(4), r[i][1]);
+    }
+}
+
+/// Number of `GEMM_NR`-wide panels covering `n` columns.
+#[inline]
+fn n_panels(n: usize) -> usize {
+    n.div_ceil(GEMM_NR)
+}
+
+/// Pack one batch's `k × n` B matrix into k-major `GEMM_NR`-column
+/// panels: `dst[(p * k + kk) * GEMM_NR + jj] = b[kk * n + p*NR + jj]`,
+/// ragged edge zero-padded (padded lanes accumulate into tile columns
+/// that are never stored).
+fn pack_b<T: GemmElem>(k: usize, n: usize, b: &[f64], dst: &mut [T]) {
+    let np = n_panels(n);
+    debug_assert!(dst.len() >= np * k * GEMM_NR);
+    for p in 0..np {
+        let j0 = p * GEMM_NR;
+        let jw = (n - j0).min(GEMM_NR);
+        let panel = &mut dst[p * k * GEMM_NR..][..k * GEMM_NR];
+        for kk in 0..k {
+            let src = &b[kk * n + j0..][..jw];
+            let lanes = &mut panel[kk * GEMM_NR..][..GEMM_NR];
+            for (jj, &v) in src.iter().enumerate() {
+                lanes[jj] = T::from_f64(v);
+            }
+            for lane in lanes.iter_mut().skip(jw) {
+                *lane = T::ZERO;
+            }
+        }
+    }
+}
+
+/// Compute output rows `g0..g1` (global row `g = batch * m + i`) into
+/// `chunk`; row `g` lands at `(g - g0) * n`. `bp` holds the packed
+/// per-batch B panels (`np * k * GEMM_NR` elements per batch).
+fn gemm_rows<T: GemmElem>(
+    g0: usize,
+    g1: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[T],
+    bp: &[T],
+    chunk: &mut [f64],
+) {
+    let np = n_panels(n);
+    let mut g = g0;
+    while g < g1 {
+        let bb = g / m;
+        let batch_end = ((bb + 1) * m).min(g1);
+        let bpb = &bp[bb * np * k * GEMM_NR..][..np * k * GEMM_NR];
+        let mut i = g;
+        while i < batch_end {
+            let mr = (batch_end - i).min(GEMM_MR);
+            let arows = &a[i * k..];
+            for p in 0..np {
+                let j0 = p * GEMM_NR;
+                let jw = (n - j0).min(GEMM_NR);
+                let mut acc = [[T::ZERO; GEMM_NR]; GEMM_MR];
+                T::tile(
+                    k,
+                    mr,
+                    arows,
+                    k,
+                    &bpb[p * k * GEMM_NR..][..k * GEMM_NR],
+                    &mut acc,
+                );
+                for (ii, row) in acc.iter().enumerate().take(mr) {
+                    let orow = (i + ii - g0) * n + j0;
+                    for (jj, &v) in row.iter().enumerate().take(jw) {
+                        chunk[orow + jj] = v.to_f64();
+                    }
+                }
+            }
+            i += mr;
+        }
+        g = batch_end;
+    }
+}
+
+/// Pack B, then partition output rows over [`native_threads`] scoped
+/// workers (each owns a disjoint slice of `out`). Identical
+/// thresholds/partitioning to the pre-microkernel GEMM, so the thread
+/// count remains a pure wall-clock knob.
+fn gemm_driver<T: GemmElem>(
+    bsz: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[T],
+    b: &[f64],
+    out: &mut [f64],
+) {
+    let np = n_panels(n);
+    let panel_len = bsz * np * k * GEMM_NR;
+    let mut bp = arena::lease::<T>(panel_len);
+    for bb in 0..bsz {
+        pack_b(
+            k,
+            n,
+            &b[bb * k * n..][..k * n],
+            &mut bp[bb * np * k * GEMM_NR..][..np * k * GEMM_NR],
+        );
+    }
+    let rows = bsz * m;
+    let work = 2 * rows * n * k;
+    let threads = native_threads()
+        .min(rows)
+        .min((work / (GEMM_PAR_MIN / 2)).max(1))
+        .max(1);
+    if threads == 1 || work < GEMM_PAR_MIN {
+        gemm_rows(0, rows, m, k, n, a, &bp, out);
+        arena::recycle(bp);
+        return;
+    }
+    // Partition output rows into `threads` contiguous ranges; each
+    // worker owns a disjoint slice of `out`.
+    let base = rows / threads;
+    let rem = rows % threads;
+    let mut ranges = Vec::with_capacity(threads);
+    let mut g0 = 0usize;
+    for t in 0..threads {
+        let len = base + usize::from(t < rem);
+        ranges.push((g0, g0 + len));
+        g0 += len;
+    }
+    let mut parts: Vec<(usize, usize, &mut [f64])> =
+        Vec::with_capacity(threads);
+    let mut rest: &mut [f64] = out;
+    for &(r0, r1) in &ranges {
+        let (chunk, tail) =
+            std::mem::take(&mut rest).split_at_mut((r1 - r0) * n);
+        parts.push((r0, r1, chunk));
+        rest = tail;
+    }
+    let bp_all: &[T] = &bp;
+    std::thread::scope(|s| {
+        for (r0, r1, chunk) in parts {
+            s.spawn(move || gemm_rows(r0, r1, m, k, n, a, bp_all, chunk));
+        }
+    });
+    arena::recycle(bp);
+}
+
+/// Batched GEMM over flattened row-major f64 buffers:
+/// `out[b,i,j] = sum_k a[b,i,k] * b[b,k,j]`, bit-identical to the
+/// naive ascending-k triple loop for any tile shape, SIMD variant, or
+/// worker count (see the module docs for why).
+pub fn gemm_batched(
+    bsz: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f64],
+    b: &[f64],
+    out: &mut [f64],
+) {
+    if bsz == 0 || m == 0 || n == 0 {
+        return;
+    }
+    gemm_driver::<f64>(bsz, m, k, n, a, b, out);
+}
+
+/// f32-native batched GEMM: operands are packed to f32 (lossless —
+/// buffers holding f32 values are canonicalised to exact f32), the
+/// accumulator chain runs in f32, and results widen back into the f64
+/// storage. Same ascending-k chain per cell as
+/// [`gemm_batched_f32_reference`], so planned and reference execution
+/// stay bit-identical.
+pub fn gemm_batched_f32(
+    bsz: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f64],
+    b: &[f64],
+    out: &mut [f64],
+) {
+    if bsz == 0 || m == 0 || n == 0 {
+        return;
+    }
+    let mut a32 = arena::lease::<f32>(bsz * m * k);
+    for (dst, &v) in a32.iter_mut().zip(a) {
+        *dst = v as f32;
+    }
+    gemm_driver::<f32>(bsz, m, k, n, &a32, b, out);
+    arena::recycle(a32);
+}
+
+/// The naive f32-accumulate triple loop — the reference evaluator's
+/// `dot` on f32 operands, and the chain [`gemm_batched_f32`] must
+/// reproduce bit for bit.
+pub fn gemm_batched_f32_reference(
+    bsz: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f64],
+    b: &[f64],
+    out: &mut [f64],
+) {
+    for bb in 0..bsz {
+        let a0 = bb * m * k;
+        let b0 = bb * k * n;
+        let o0 = bb * m * n;
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += a[a0 + i * k + kk] as f32
+                        * b[b0 + kk * n + j] as f32;
+                }
+                out[o0 + i * n + j] = acc as f64;
+            }
+        }
+    }
+}
+
+/// f32-native dot toggle (0 = unresolved, 1 = off, 2 = on).
+/// Resolution order: [`set_f32_dot`] > `MANTICORE_NATIVE_F32_DOT` env
+/// var (`0`/`false` disables) > on. Off means f32 dots ride the f64
+/// kernels and round once at the end — the pre-PR baseline the
+/// `native_exec` A/B samples measure against.
+static F32_DOT: AtomicU8 = AtomicU8::new(0);
+
+/// Pin the f32-native dot path on or off (benches A/B it; tests pin
+/// it to make golden values deterministic under any ambient env).
+pub fn set_f32_dot(enabled: bool) {
+    F32_DOT.store(if enabled { 2 } else { 1 }, Ordering::Relaxed);
+}
+
+/// Whether f32 dots take the f32-native GEMM (see [`set_f32_dot`]).
+pub fn f32_dot_enabled() -> bool {
+    match F32_DOT.load(Ordering::Relaxed) {
+        2 => true,
+        1 => false,
+        _ => {
+            let on = !matches!(
+                std::env::var("MANTICORE_NATIVE_F32_DOT").as_deref(),
+                Ok("0") | Ok("false")
+            );
+            F32_DOT.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+            on
+        }
+    }
+}
+
+/// Worker-thread count used by the parallel GEMM (0 = not yet
+/// resolved). Resolution order: [`set_native_threads`] (the
+/// `--native-threads` CLI flag) > `MANTICORE_NATIVE_THREADS` env var >
+/// `std::thread::available_parallelism()`.
+static NATIVE_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Pin the native-backend worker count (used by `--native-threads`;
+/// also handy in tests sweeping thread counts). Outputs are
+/// bit-identical for every setting — this is purely a wall-clock knob.
+pub fn set_native_threads(n: usize) {
+    NATIVE_THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Pin the worker count only when nothing has resolved it yet — no
+/// `--native-threads` call, no `MANTICORE_NATIVE_THREADS` env var.
+/// The serve worker pool uses this to divide the machine between its
+/// concurrent requests (cores / workers GEMM threads each) instead of
+/// oversubscribing it (workers × cores); an explicit setting wins.
+pub fn set_native_threads_if_unset(n: usize) {
+    let env_set = std::env::var("MANTICORE_NATIVE_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&v| v > 0)
+        .is_some();
+    if env_set || NATIVE_THREADS.load(Ordering::Relaxed) != 0 {
+        return;
+    }
+    NATIVE_THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// The resolved native-backend worker count (see [`set_native_threads`]
+/// for the resolution order).
+pub fn native_threads() -> usize {
+    let v = NATIVE_THREADS.load(Ordering::Relaxed);
+    if v != 0 {
+        return v;
+    }
+    let n = std::env::var("MANTICORE_NATIVE_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1)
+        });
+    NATIVE_THREADS.store(n, Ordering::Relaxed);
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_f64(
+        bsz: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f64],
+        b: &[f64],
+    ) -> Vec<f64> {
+        let mut out = vec![0.0; bsz * m * n];
+        for bb in 0..bsz {
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0.0f64;
+                    for kk in 0..k {
+                        acc += a[bb * m * k + i * k + kk]
+                            * b[bb * k * n + kk * n + j];
+                    }
+                    out[bb * m * n + i * n + j] = acc;
+                }
+            }
+        }
+        out
+    }
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.f64() * 2.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn microkernel_matches_naive_bits_f64() {
+        let mut rng = Rng::new(0x5EED);
+        // Odd/prime shapes exercise every ragged tile edge.
+        for &(bsz, m, k, n) in &[
+            (1usize, 1usize, 1usize, 1usize),
+            (1, 7, 13, 5),
+            (1, 8, 8, 8),
+            (2, 3, 17, 11),
+            (1, 9, 1, 9),
+            (3, 4, 5, 1),
+        ] {
+            let a = rand_vec(&mut rng, bsz * m * k);
+            let b = rand_vec(&mut rng, bsz * k * n);
+            let mut got = vec![0.0; bsz * m * n];
+            gemm_batched(bsz, m, k, n, &a, &b, &mut got);
+            let want = naive_f64(bsz, m, k, n, &a, &b);
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "{bsz}x{m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_native_matches_f32_reference_bits() {
+        let mut rng = Rng::new(0xF00D);
+        for &(bsz, m, k, n) in
+            &[(1usize, 5usize, 19usize, 7usize), (2, 8, 8, 9), (1, 3, 1, 2)]
+        {
+            // Exact-f32 inputs, as canonicalisation guarantees.
+            let a: Vec<f64> = rand_vec(&mut rng, bsz * m * k)
+                .iter()
+                .map(|&v| v as f32 as f64)
+                .collect();
+            let b: Vec<f64> = rand_vec(&mut rng, bsz * k * n)
+                .iter()
+                .map(|&v| v as f32 as f64)
+                .collect();
+            let mut got = vec![0.0; bsz * m * n];
+            gemm_batched_f32(bsz, m, k, n, &a, &b, &mut got);
+            let mut want = vec![0.0; bsz * m * n];
+            gemm_batched_f32_reference(bsz, m, k, n, &a, &b, &mut want);
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "{bsz}x{m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn thread_counts_are_bit_identical() {
+        let mut rng = Rng::new(7);
+        // Big enough to clear GEMM_PAR_MIN so workers actually spawn.
+        let (m, k, n) = (128usize, 64usize, 96usize);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let before = native_threads();
+        let mut first = Vec::new();
+        for threads in [1usize, 2, 8] {
+            set_native_threads(threads);
+            let mut out = vec![0.0; m * n];
+            gemm_batched(1, m, k, n, &a, &b, &mut out);
+            if first.is_empty() {
+                first = out;
+            } else {
+                for (x, y) in first.iter().zip(&out) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{threads} threads");
+                }
+            }
+        }
+        set_native_threads(before);
+    }
+
+    #[test]
+    fn f32_toggle_resolves_and_pins() {
+        set_f32_dot(false);
+        assert!(!f32_dot_enabled());
+        set_f32_dot(true);
+        assert!(f32_dot_enabled());
+    }
+
+    #[test]
+    fn simd_kernel_names_a_variant() {
+        assert!(["avx2", "neon", "scalar"].contains(&simd_kernel()));
+    }
+}

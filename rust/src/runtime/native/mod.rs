@@ -14,7 +14,9 @@
 //! bit-identical; `python/tools/hlo_interp.py` is the executable
 //! specification, validated against JAX numerics for every artifact.
 
+pub mod arena;
 pub mod eval;
+pub mod gemm;
 pub mod parser;
 pub mod plan;
 
@@ -23,9 +25,12 @@ use self::parser::{DType, Module};
 use super::backend::{Backend, Executable};
 use super::Tensor;
 use anyhow::{bail, Context, Result};
+use std::sync::Arc;
 
-pub use self::eval::{
-    native_threads, set_native_threads, set_native_threads_if_unset,
+pub use self::arena::ArenaStats;
+pub use self::gemm::{
+    f32_dot_enabled, native_threads, set_f32_dot, set_native_threads,
+    set_native_threads_if_unset, simd_kernel,
 };
 
 /// True when `MANTICORE_NATIVE_REFERENCE=1`: execute through the
@@ -58,7 +63,12 @@ impl NativeBackend {
         let module = parse_checked("native", name, hlo_text)?;
         let plan = plan::compile(&module)
             .with_context(|| format!("[native] planning '{name}'"))?;
-        Ok(NativeExecutable { name: name.to_string(), module, plan })
+        Ok(NativeExecutable {
+            name: name.to_string(),
+            module,
+            plan,
+            arena: Arc::new(arena::BufferArena::new()),
+        })
     }
 }
 
@@ -114,16 +124,26 @@ pub(crate) fn parse_checked(
 /// name (for error context). The plan is immutable and `Sync`: one
 /// `NativeExecutable` behind an `Arc` serves every worker thread (the
 /// serve subsystem's compile-once cache shares the plan fleet-wide).
+/// The executable also owns the [`arena::BufferArena`] its planned
+/// executions lease slot/tensor/packing buffers from — shared through
+/// the same `Arc`, so serve's steady state stops allocating.
 pub struct NativeExecutable {
     name: String,
     module: Module,
     plan: plan::Plan,
+    arena: Arc<arena::BufferArena>,
 }
 
 impl NativeExecutable {
     /// The compiled execution plan (bench/diagnostic surface).
     pub fn plan(&self) -> &plan::Plan {
         &self.plan
+    }
+
+    /// Buffer-arena pool counters (diagnostic surface; the arena-reuse
+    /// test asserts repeated execution actually hits the pool).
+    pub fn arena_stats(&self) -> ArenaStats {
+        self.arena.stats()
     }
 
     /// Execute through the tree-walk reference evaluator regardless of
@@ -143,9 +163,17 @@ impl NativeExecutable {
     /// benches compare the two paths no matter the ambient env.
     pub fn execute_planned(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let args: Vec<Value> = inputs.iter().map(tensor_to_value).collect();
+        // Buffers leased below this point come from (and return to)
+        // this executable's pool; the scope is per-thread, so every
+        // serve worker installs the same shared arena on its own
+        // thread.
+        let _scope = arena::enter(self.arena.clone());
         let out = plan::PlanExecutor::new(&self.plan)
             .run(&args)
             .with_context(|| format!("[native] executing '{}'", self.name))?;
+        for arg in args {
+            arena::recycle_value(arg);
+        }
         value_to_tensors(out)
     }
 }
@@ -159,15 +187,19 @@ impl Executable for NativeExecutable {
     }
 }
 
-/// Unpack an execution result (tuple or single array) into tensors.
+/// Unpack an execution result (tuple or single array) into tensors,
+/// then hand the result storage back to the current buffer arena (a
+/// no-op outside a planned-execution scope).
 pub(crate) fn value_to_tensors(out: Value) -> Result<Vec<Tensor>> {
-    match out {
+    let tensors = match &out {
         Value::Tuple(vs) => vs
             .iter()
             .map(|v| value_to_tensor(v.arr()?))
-            .collect::<Result<Vec<_>>>(),
-        Value::Arr(a) => Ok(vec![value_to_tensor(&a)?]),
-    }
+            .collect::<Result<Vec<_>>>()?,
+        Value::Arr(a) => vec![value_to_tensor(a)?],
+    };
+    arena::recycle_value(out);
+    Ok(tensors)
 }
 
 pub(crate) fn tensor_to_value(t: &Tensor) -> Value {

@@ -33,6 +33,7 @@
 //!
 //! [`Evaluator`]: super::eval::Evaluator
 
+use super::arena;
 use super::eval::{
     dot_dims, dus_into, eval_array_op, eval_reduce_kernel,
     eval_scatter_kernel, fast_reducer_op, kernel_broadcast_with,
@@ -472,21 +473,39 @@ impl<'p> PlanExecutor<'p> {
         self.exec(self.plan.entry, args.to_vec())
     }
 
-    fn exec(&self, id: usize, mut args: Vec<Value>) -> Result<Value> {
+    fn exec(&self, id: usize, args: Vec<Value>) -> Result<Value> {
+        // Slot storage is leased per computation frame and recycled on
+        // the way out (with whatever values are still parked in it —
+        // the root has been taken by then), so steady-state re-execution
+        // of a plan stops allocating.
         let comp = &self.plan.comps[id];
-        let mut slots: Vec<Option<Value>> = vec![None; comp.n_slots];
+        let mut slots = arena::lease_slots(comp.n_slots);
+        let result = self.exec_in(id, args, &mut slots);
+        arena::recycle_slots(slots);
+        result
+    }
+
+    fn exec_in(
+        &self,
+        id: usize,
+        mut args: Vec<Value>,
+        slots: &mut Vec<Option<Value>>,
+    ) -> Result<Value> {
+        let comp = &self.plan.comps[id];
         for step in &comp.steps {
-            self.record(step, &slots);
+            self.record(step, slots);
             let v = self
-                .exec_step(id, step, &mut args, &mut slots)
+                .exec_step(id, step, &mut args, slots)
                 .with_context(|| {
                     format!("evaluating {} = {}(..)", step.ins.name, step.ins.op)
                 })?;
             slots[step.out] = Some(v);
-            apply_kills(step, &mut slots);
+            apply_kills(step, slots);
             if step.kills.contains(&step.out) {
                 // Dead result (never read): free it immediately.
-                slots[step.out] = None;
+                if let Some(v) = slots[step.out].take() {
+                    arena::recycle_value(v);
+                }
             }
         }
         slots[comp.root]
@@ -741,7 +760,12 @@ impl<'p> PlanExecutor<'p> {
 fn apply_kills(step: &Step, slots: &mut [Option<Value>]) {
     for &s in &step.kills {
         if s != step.out {
-            slots[s] = None;
+            if let Some(v) = slots[s].take() {
+                // Uniquely-owned storage goes back to the arena pool;
+                // shared values (a live tuple element, a plan const)
+                // just drop their refcount.
+                arena::recycle_value(v);
+            }
         }
     }
 }

@@ -366,20 +366,12 @@ fn write_json_report(
         json_path: Some(path.to_string()),
     });
     if !latencies.is_empty() {
-        let mut sorted = latencies.to_vec();
-        sorted.sort_by(|a, b| a.total_cmp(b));
-        let n = sorted.len() as f64;
-        let mean = sorted.iter().sum::<f64>() / n;
-        let var = sorted.iter().map(|l| (l - mean) * (l - mean)).sum::<f64>()
-            / n;
-        out.push_sample(Sample {
-            name: format!("loadgen_{}_latency", cfg.artifact),
-            iters: sorted.len() as u64,
-            mean_ns: mean * 1e9,
-            median_ns: sorted[sorted.len() / 2] * 1e9,
-            stddev_ns: var.sqrt() * 1e9,
-            min_ns: sorted[0] * 1e9,
-        });
+        // Per-request latencies become per-iteration samples, so the
+        // statistical bench-diff gate works on loadgen reports too.
+        out.push_sample(Sample::from_times(
+            &format!("loadgen_{}_latency", cfg.artifact),
+            latencies.iter().map(|l| l * 1e9).collect(),
+        ));
     }
     let mut summary = rep.table();
     summary.title = format!(

@@ -10,7 +10,13 @@ use crate::util::json::Value;
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
-/// Timing summary of one benchmark.
+/// Per-sample retention cap for the JSON report: enough resolution for
+/// a Welch test, bounded artifact size. Above the cap the sorted
+/// per-iteration times are decimated by even strides.
+const MAX_STORED_SAMPLES: usize = 512;
+
+/// Timing summary of one benchmark, including the per-iteration
+/// samples the statistical A/B gate runs on.
 #[derive(Debug, Clone)]
 pub struct Sample {
     pub name: String,
@@ -19,6 +25,40 @@ pub struct Sample {
     pub median_ns: f64,
     pub stddev_ns: f64,
     pub min_ns: f64,
+    /// Sorted per-iteration times (decimated to
+    /// [`MAX_STORED_SAMPLES`]); empty for externally-measured samples
+    /// that only know aggregates.
+    pub samples_ns: Vec<f64>,
+}
+
+impl Sample {
+    /// Build a sample (summary stats + retained per-iteration times)
+    /// from raw per-iteration nanosecond timings.
+    pub fn from_times(name: &str, mut times: Vec<f64>) -> Sample {
+        assert!(!times.is_empty(), "bench '{name}' recorded no iterations");
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = times.len() as f64;
+        let mean = times.iter().sum::<f64>() / n;
+        let median = times[times.len() / 2];
+        let var =
+            times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n;
+        let samples_ns = if times.len() <= MAX_STORED_SAMPLES {
+            times.clone()
+        } else {
+            (0..MAX_STORED_SAMPLES)
+                .map(|i| times[i * times.len() / MAX_STORED_SAMPLES])
+                .collect()
+        };
+        Sample {
+            name: name.to_string(),
+            iters: times.len() as u64,
+            mean_ns: mean,
+            median_ns: median,
+            stddev_ns: var.sqrt(),
+            min_ns: times[0],
+            samples_ns,
+        }
+    }
 }
 
 /// Run `f` repeatedly: warm up for `warmup`, then time batches until
@@ -34,7 +74,9 @@ pub fn bench_cfg<F: FnMut()>(
     min_iters: u64,
     f: &mut F,
 ) -> Sample {
-    // Warmup.
+    // Warmup phase: strictly separated from timing, so first-touch
+    // effects (plan compilation caches, arena pool fills, page faults)
+    // never land in the recorded samples.
     let start = Instant::now();
     let mut warm_iters = 0u64;
     while start.elapsed() < warmup || warm_iters < 3 {
@@ -52,19 +94,7 @@ pub fn bench_cfg<F: FnMut()>(
             break;
         }
     }
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let n = times.len() as f64;
-    let mean = times.iter().sum::<f64>() / n;
-    let median = times[times.len() / 2];
-    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n;
-    let s = Sample {
-        name: name.to_string(),
-        iters: times.len() as u64,
-        mean_ns: mean,
-        median_ns: median,
-        stddev_ns: var.sqrt(),
-        min_ns: times[0],
-    };
+    let s = Sample::from_times(name, times);
     println!(
         "bench {:40} {:>12} /iter (median {}, n={})",
         s.name,
@@ -257,6 +287,17 @@ impl Report {
                         o.insert("median_ns".into(), Value::Num(s.median_ns));
                         o.insert("stddev_ns".into(), Value::Num(s.stddev_ns));
                         o.insert("min_ns".into(), Value::Num(s.min_ns));
+                        if !s.samples_ns.is_empty() {
+                            o.insert(
+                                "samples_ns".into(),
+                                Value::Arr(
+                                    s.samples_ns
+                                        .iter()
+                                        .map(|&t| Value::Num(t))
+                                        .collect(),
+                                ),
+                            );
+                        }
                         Value::Obj(o)
                     })
                     .collect(),
@@ -303,64 +344,210 @@ impl Report {
     }
 }
 
+/// One benchmark's view of a JSON report: the mean plus whatever
+/// per-iteration samples the report retained (empty for pre-harness
+/// reports, which only stored aggregates).
+#[derive(Debug, Clone)]
+struct SampleView {
+    mean_ns: f64,
+    stddev_ns: f64,
+    samples_ns: Vec<f64>,
+}
+
+fn sample_views(v: &Value) -> BTreeMap<String, SampleView> {
+    let mut out = BTreeMap::new();
+    if let Some(arr) = v.get("samples").and_then(Value::as_arr) {
+        for s in arr {
+            let (Some(name), Some(mean)) = (
+                s.get("name").and_then(Value::as_str),
+                s.get("mean_ns").and_then(Value::as_f64),
+            ) else {
+                continue;
+            };
+            let samples_ns = s
+                .get("samples_ns")
+                .and_then(Value::as_arr)
+                .map(|a| a.iter().filter_map(Value::as_f64).collect())
+                .unwrap_or_default();
+            out.insert(
+                name.to_string(),
+                SampleView {
+                    mean_ns: mean,
+                    stddev_ns: s
+                        .get("stddev_ns")
+                        .and_then(Value::as_f64)
+                        .unwrap_or(0.0),
+                    samples_ns,
+                },
+            );
+        }
+    }
+    out
+}
+
+/// Welch's two-sample t statistic and its Welch–Satterthwaite degrees
+/// of freedom for `new` vs `old` (positive t = `new` is slower).
+/// `None` when either side has fewer than two samples.
+fn welch_t(old: &[f64], new: &[f64]) -> Option<(f64, f64)> {
+    if old.len() < 2 || new.len() < 2 {
+        return None;
+    }
+    let (no, nn) = (old.len() as f64, new.len() as f64);
+    let mo = old.iter().sum::<f64>() / no;
+    let mn = new.iter().sum::<f64>() / nn;
+    let vo =
+        old.iter().map(|x| (x - mo) * (x - mo)).sum::<f64>() / (no - 1.0);
+    let vn =
+        new.iter().map(|x| (x - mn) * (x - mn)).sum::<f64>() / (nn - 1.0);
+    let se2 = vo / no + vn / nn;
+    if se2 <= 0.0 {
+        // Zero variance on both sides: any mean difference is exact.
+        let t = if mn == mo { 0.0 } else { f64::INFINITY * (mn - mo).signum() };
+        return Some((t, no + nn - 2.0));
+    }
+    let t = (mn - mo) / se2.sqrt();
+    let dof = se2 * se2
+        / ((vo / no) * (vo / no) / (no - 1.0)
+            + (vn / nn) * (vn / nn) / (nn - 1.0));
+    Some((t, dof))
+}
+
+/// Two-sided 99 % critical value of Student's t for `dof` degrees of
+/// freedom (conservative step-down table; 2.576 in the normal limit).
+fn t_crit_99(dof: f64) -> f64 {
+    const TABLE: &[(f64, f64)] = &[
+        (1.0, 63.657),
+        (2.0, 9.925),
+        (3.0, 5.841),
+        (4.0, 4.604),
+        (5.0, 4.032),
+        (6.0, 3.707),
+        (7.0, 3.499),
+        (8.0, 3.355),
+        (9.0, 3.250),
+        (10.0, 3.169),
+        (12.0, 3.055),
+        (15.0, 2.947),
+        (20.0, 2.845),
+        (25.0, 2.787),
+        (30.0, 2.750),
+        (40.0, 2.704),
+        (60.0, 2.660),
+        (120.0, 2.617),
+    ];
+    for &(d, c) in TABLE {
+        if dof <= d {
+            return c;
+        }
+    }
+    2.576
+}
+
 /// Compare two bench JSON reports (as produced by [`Report::finish`]):
-/// one row per benchmark present in both, flagging mean-time
-/// regressions above `threshold` (0.10 = 10 %). Returns the table and
-/// the regression count — callers treat regressions as warnings, not
-/// failures (smoke-cap timings are noisy).
+/// one row per benchmark present in both. The decision rule
+/// (DESIGN.md §2e): when both reports carry per-iteration samples, a
+/// REGRESSION requires the mean delta to exceed `threshold` (practical
+/// significance) *and* Welch's t to clear the two-sided 99 % critical
+/// value (statistical significance) — a large-looking delta that the
+/// samples can't distinguish from noise reports as `noise`. Reports
+/// without samples (pre-harness baselines) fall back to the old
+/// mean-only comparison at the same threshold. Returns the table and
+/// the regression count.
 pub fn diff_reports(
     old: &Value,
     new: &Value,
     threshold: f64,
 ) -> (Table, usize) {
-    let samples = |v: &Value| -> BTreeMap<String, f64> {
-        let mut out = BTreeMap::new();
-        if let Some(arr) = v.get("samples").and_then(Value::as_arr) {
-            for s in arr {
-                if let (Some(name), Some(mean)) = (
-                    s.get("name").and_then(Value::as_str),
-                    s.get("mean_ns").and_then(Value::as_f64),
-                ) {
-                    out.insert(name.to_string(), mean);
-                }
-            }
-        }
-        out
-    };
-    let old_s = samples(old);
-    let new_s = samples(new);
+    let old_s = sample_views(old);
+    let new_s = sample_views(new);
     let mut t = Table::new(
         &format!(
-            "bench diff vs previous run (warn above {:.0} % regression)",
+            "bench diff vs previous run (gate: >{:.0} % mean delta AND \
+             Welch p<0.01 when samples present)",
             threshold * 100.0
         ),
-        &["bench", "prev mean", "mean", "delta", "status"],
+        &["bench", "prev mean ± std", "mean ± std", "delta", "welch", "status"],
     );
     let mut regressions = 0;
-    for (name, new_mean) in &new_s {
-        let Some(old_mean) = old_s.get(name) else { continue };
-        let delta = if *old_mean > 0.0 {
-            new_mean / old_mean - 1.0
+    for (name, new_v) in &new_s {
+        let Some(old_v) = old_s.get(name) else { continue };
+        let delta = if old_v.mean_ns > 0.0 {
+            new_v.mean_ns / old_v.mean_ns - 1.0
         } else {
             0.0
         };
-        let status = if delta > threshold {
-            regressions += 1;
-            "REGRESSION"
-        } else if delta < -threshold {
-            "improved"
-        } else {
-            "ok"
+        let test = welch_t(&old_v.samples_ns, &new_v.samples_ns);
+        let (welch_cell, status) = match test {
+            Some((tstat, dof)) => {
+                let crit = t_crit_99(dof);
+                let significant = tstat.abs() > crit;
+                let cell = format!("t={tstat:+.2} (dof {dof:.0})");
+                let status = if delta > threshold && significant && tstat > 0.0
+                {
+                    regressions += 1;
+                    "REGRESSION"
+                } else if delta < -threshold && significant && tstat < 0.0 {
+                    "improved"
+                } else if delta.abs() > threshold {
+                    "noise"
+                } else {
+                    "ok"
+                };
+                (cell, status)
+            }
+            None => {
+                // Aggregate-only report: old mean-only rule.
+                let status = if delta > threshold {
+                    regressions += 1;
+                    "REGRESSION"
+                } else if delta < -threshold {
+                    "improved"
+                } else {
+                    "ok"
+                };
+                ("—".to_string(), status)
+            }
         };
         t.row(vec![
             name.clone(),
-            fmt_ns(*old_mean),
-            fmt_ns(*new_mean),
+            format!("{} ± {}", fmt_ns(old_v.mean_ns), fmt_ns(old_v.stddev_ns)),
+            format!("{} ± {}", fmt_ns(new_v.mean_ns), fmt_ns(new_v.stddev_ns)),
             format!("{:+.1} %", delta * 100.0),
+            welch_cell,
             status.to_string(),
         ]);
     }
     (t, regressions)
+}
+
+/// Merge bench JSON reports from interleaved A/B rounds into one:
+/// samples with the same name pool their per-iteration times (falling
+/// back to the stored mean when a round kept no samples) and the
+/// summary stats are recomputed over the pooled set. Used by
+/// `manticore bench-merge` so `bench-diff` gates on all rounds at
+/// once.
+pub fn merge_reports(parts: &[Value]) -> Value {
+    let mut pooled: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    let mut smoke = false;
+    for p in parts {
+        if p.get("smoke") == Some(&Value::Bool(true)) {
+            smoke = true;
+        }
+        for (name, view) in sample_views(p) {
+            let e = pooled.entry(name).or_default();
+            if view.samples_ns.is_empty() {
+                e.push(view.mean_ns);
+            } else {
+                e.extend(view.samples_ns);
+            }
+        }
+    }
+    let mut rep = Report::new(BenchOpts { smoke, json_path: None });
+    for (name, times) in pooled {
+        rep.push_sample(Sample::from_times(&name, times));
+    }
+    crate::util::json::parse(&rep.to_json())
+        .expect("merge_reports: self-serialised report must parse")
 }
 
 /// Format helpers shared by the harnesses.
@@ -436,32 +623,118 @@ mod tests {
         assert!(s0.get("mean_ns").unwrap().as_f64().unwrap() >= 0.0);
     }
 
+    /// Aggregate-only report builder (no per-iteration samples), i.e.
+    /// the shape of pre-harness baseline JSONs.
+    fn mk_aggregate(means: &[(&str, f64)]) -> Value {
+        let mut rep = Report::new(BenchOpts::default());
+        for (name, mean) in means {
+            rep.samples.push(Sample {
+                name: name.to_string(),
+                iters: 1,
+                mean_ns: *mean,
+                median_ns: *mean,
+                stddev_ns: 0.0,
+                min_ns: *mean,
+                samples_ns: Vec::new(),
+            });
+        }
+        crate::util::json::parse(&rep.to_json()).unwrap()
+    }
+
+    /// Report builder with explicit per-iteration samples.
+    fn mk_sampled(samples: &[(&str, &[f64])]) -> Value {
+        let mut rep = Report::new(BenchOpts::default());
+        for (name, times) in samples {
+            rep.push_sample(Sample::from_times(name, times.to_vec()));
+        }
+        crate::util::json::parse(&rep.to_json()).unwrap()
+    }
+
     #[test]
-    fn diff_reports_flags_regressions_only_above_threshold() {
-        let mk = |means: &[(&str, f64)]| -> Value {
-            let mut rep = Report::new(BenchOpts::default());
-            for (name, mean) in means {
-                rep.samples.push(Sample {
-                    name: name.to_string(),
-                    iters: 1,
-                    mean_ns: *mean,
-                    median_ns: *mean,
-                    stddev_ns: 0.0,
-                    min_ns: *mean,
-                });
-            }
-            crate::util::json::parse(&rep.to_json()).unwrap()
-        };
-        let old = mk(&[("a", 100.0), ("b", 100.0), ("gone", 5.0)]);
-        let new = mk(&[("a", 125.0), ("b", 104.0), ("new", 7.0)]);
+    fn diff_reports_aggregate_fallback_is_mean_only() {
+        let old = mk_aggregate(&[("a", 100.0), ("b", 100.0), ("gone", 5.0)]);
+        let new = mk_aggregate(&[("a", 125.0), ("b", 104.0), ("new", 7.0)]);
         let (t, regressions) = diff_reports(&old, &new, 0.10);
         assert_eq!(regressions, 1);
         // Only benches present in both runs are compared.
         assert_eq!(t.rows.len(), 2);
         let a = t.rows.iter().find(|r| r[0] == "a").unwrap();
-        assert_eq!(a[4], "REGRESSION");
+        assert_eq!(a[5], "REGRESSION");
         let b = t.rows.iter().find(|r| r[0] == "b").unwrap();
-        assert_eq!(b[4], "ok");
+        assert_eq!(b[5], "ok");
+    }
+
+    #[test]
+    fn diff_reports_requires_statistical_significance() {
+        // Tight samples, clear shift: practical + statistical
+        // significance → REGRESSION.
+        let old = mk_sampled(&[(
+            "tight",
+            &[100.0, 101.0, 99.0, 100.5, 99.5, 100.0][..],
+        )]);
+        let new = mk_sampled(&[(
+            "tight",
+            &[150.0, 151.0, 149.0, 150.5, 149.5, 150.0][..],
+        )]);
+        let (t, regressions) = diff_reports(&old, &new, 0.25);
+        assert_eq!(regressions, 1, "{}", t.render());
+        assert_eq!(t.rows[0][5], "REGRESSION");
+
+        // Same 50 % mean delta, but the samples are so noisy the
+        // difference is not distinguishable: gate must NOT trip.
+        let old = mk_sampled(&[(
+            "noisy",
+            &[10.0, 500.0, 20.0, 300.0, 80.0, 250.0][..],
+        )]);
+        let new = mk_sampled(&[(
+            "noisy",
+            &[15.0, 700.0, 30.0, 500.0, 120.0, 380.0][..],
+        )]);
+        let (t, regressions) = diff_reports(&old, &new, 0.25);
+        assert_eq!(regressions, 0, "{}", t.render());
+        assert_eq!(t.rows[0][5], "noise");
+
+        // Significant improvement is labelled, never counted as a
+        // regression.
+        let old = mk_sampled(&[(
+            "faster",
+            &[150.0, 151.0, 149.0, 150.5, 149.5, 150.0][..],
+        )]);
+        let new = mk_sampled(&[(
+            "faster",
+            &[100.0, 101.0, 99.0, 100.5, 99.5, 100.0][..],
+        )]);
+        let (t, regressions) = diff_reports(&old, &new, 0.25);
+        assert_eq!(regressions, 0);
+        assert_eq!(t.rows[0][5], "improved");
+    }
+
+    #[test]
+    fn welch_t_signs_and_dof() {
+        let (t, dof) =
+            welch_t(&[1.0, 2.0, 3.0], &[11.0, 12.0, 13.0]).unwrap();
+        assert!(t > 3.0, "new slower → positive t, got {t}");
+        assert!(dof > 1.0 && dof <= 4.0, "dof {dof}");
+        let (t2, _) =
+            welch_t(&[11.0, 12.0, 13.0], &[1.0, 2.0, 3.0]).unwrap();
+        assert!(t2 < -3.0, "new faster → negative t, got {t2}");
+        assert!(welch_t(&[1.0], &[1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn merge_reports_pools_samples_across_rounds() {
+        let r1 = mk_sampled(&[("x", &[100.0, 110.0][..])]);
+        let r2 = mk_sampled(&[("x", &[120.0, 130.0][..])]);
+        let merged = merge_reports(&[r1, r2]);
+        let views = sample_views(&merged);
+        let x = views.get("x").unwrap();
+        assert_eq!(x.samples_ns.len(), 4);
+        assert_eq!(x.mean_ns, 115.0);
+        // Merging an aggregate-only report falls back to its mean.
+        let r3 = mk_aggregate(&[("x", 140.0)]);
+        let merged = merge_reports(&[merged, r3]);
+        let views = sample_views(&merged);
+        assert_eq!(views.get("x").unwrap().samples_ns.len(), 5);
     }
 
     #[test]

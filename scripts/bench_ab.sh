@@ -1,0 +1,117 @@
+#!/bin/sh
+# Interleaved HEAD-vs-baseline A/B perf gate (DESIGN.md §2e).
+#
+#   scripts/bench_ab.sh <bench> <out-dir> [rounds] [threshold]
+#
+# Builds the <bench> binary at HEAD, then alternates runs of the
+# baseline binary (stashed under <out-dir>/bin/ by the previous
+# accepted run — in CI that directory rides the bench-results cache)
+# with runs of the HEAD binary, so both sides sample the same machine
+# state within one invocation. Each side's per-iteration samples are
+# pooled across rounds with `manticore bench-merge`, and the single
+# `manticore bench-diff --fail-on-regression` at the end fails only a
+# regression that is practically large (mean delta > threshold) AND
+# statistically significant (Welch's t, p < 0.01). That replaces the
+# old cross-run comparison, where a single cached mean from a
+# different CI run — different runner, different thermal state —
+# gated the build on noise.
+#
+# On a pass the HEAD binary and its merged report become the next
+# baseline. With no stashed baseline (first run, or a baseline binary
+# that no longer runs after artifact drift) the HEAD run is recorded
+# and the gate is skipped — a first run has nothing sound to compare
+# against.
+#
+# Exit: 0 recorded or gate passed; 1 regression gate tripped or infra
+# failure.
+
+set -eu
+
+BENCH=${1:?usage: bench_ab.sh <bench> <out-dir> [rounds] [threshold]}
+OUT=${2:?usage: bench_ab.sh <bench> <out-dir> [rounds] [threshold]}
+ROUNDS=${3:-3}
+THRESHOLD=${4:-0.25}
+
+CARGO=${CARGO:-cargo}
+MANTICORE="$CARGO run --release --quiet --bin manticore --"
+
+mkdir -p "$OUT/bin"
+
+# Freshly built HEAD bench binary. cargo keeps stale-hash binaries in
+# deps/, so take the newest non-.d entry.
+$CARGO bench --bench "$BENCH" --no-run --quiet
+HEAD_BIN=$(ls -t target/release/deps/"$BENCH"-* 2>/dev/null \
+  | grep -v '\.d$' | head -n 1)
+if [ -z "$HEAD_BIN" ]; then
+  echo "bench_ab: no built bench binary found for $BENCH" >&2
+  exit 1
+fi
+
+BASE_BIN="$OUT/bin/$BENCH"
+
+record_first_run() {
+  "$HEAD_BIN" --smoke --json "$OUT/$BENCH.json"
+  cp "$HEAD_BIN" "$BASE_BIN"
+  chmod +x "$BASE_BIN"
+}
+
+if [ ! -x "$BASE_BIN" ]; then
+  echo "bench_ab: no stashed baseline for $BENCH — recording first run"
+  record_first_run
+  exit 0
+fi
+
+# Interleaved rounds: baseline then HEAD, repeated. Slow drift
+# (thermals, noisy neighbors) hits both sides instead of one.
+base_jsons=""
+head_jsons=""
+i=1
+while [ "$i" -le "$ROUNDS" ]; do
+  if ! "$BASE_BIN" --smoke --json "$OUT/$BENCH.base.$i.json"; then
+    echo "bench_ab: stashed $BENCH baseline no longer runs" \
+         "(artifact drift?) — re-recording from HEAD"
+    rm -f "$OUT/$BENCH".base.*.json "$OUT/$BENCH".head.*.json
+    record_first_run
+    exit 0
+  fi
+  "$HEAD_BIN" --smoke --json "$OUT/$BENCH.head.$i.json"
+  base_jsons="$base_jsons $OUT/$BENCH.base.$i.json"
+  head_jsons="$head_jsons $OUT/$BENCH.head.$i.json"
+  i=$((i + 1))
+done
+
+# Pool each side's per-iteration samples into one report per side;
+# bench-diff then sees enough samples per name for Welch's t.
+# shellcheck disable=SC2086  # word-splitting the json lists is intended
+$MANTICORE bench-merge "$OUT/$BENCH.base.merged.json" $base_jsons
+# shellcheck disable=SC2086
+$MANTICORE bench-merge "$OUT/$BENCH.head.merged.json" $head_jsons
+rm -f "$OUT/$BENCH".base.[0-9]*.json "$OUT/$BENCH".head.[0-9]*.json
+
+rc=0
+$MANTICORE bench-diff \
+  "$OUT/$BENCH.base.merged.json" "$OUT/$BENCH.head.merged.json" \
+  --threshold "$THRESHOLD" --fail-on-regression \
+  --md "$OUT/$BENCH.diff.md" || rc=$?
+
+case "$rc" in
+  0)
+    mv "$OUT/$BENCH.head.merged.json" "$OUT/$BENCH.json"
+    rm -f "$OUT/$BENCH.base.merged.json"
+    cp "$HEAD_BIN" "$BASE_BIN"
+    chmod +x "$BASE_BIN"
+    ;;
+  3)
+    mv "$OUT/$BENCH.head.merged.json" "$OUT/$BENCH.rejected.json"
+    mv "$OUT/$BENCH.base.merged.json" "$OUT/$BENCH.json"
+    echo "bench_ab: $BENCH perf gate FAILED (mean delta > $THRESHOLD" \
+         "and Welch p<0.01); baseline kept, regressed run saved as" \
+         "$BENCH.rejected.json"
+    exit 1
+    ;;
+  *)
+    echo "bench_ab: $BENCH bench-diff infra failure" \
+         "(exit $rc — not a perf regression)"
+    exit 1
+    ;;
+esac
