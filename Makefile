@@ -39,8 +39,11 @@ help:
 	@echo "               and exec time as separate JSON samples in"
 	@echo "               $(BENCH_OUT)/native_exec.json"
 	@echo "  serve-smoke  start 'manticore serve --backend sim', fire a concurrent"
-	@echo "               loadgen burst, write the latency report to"
-	@echo "               $(BENCH_OUT)/serve_loadgen.json, shut the server down"
+	@echo "               closed-loop burst ($(BENCH_OUT)/serve_loadgen.json),"
+	@echo "               then a 512-connection open-loop burst at a fixed"
+	@echo "               arrival rate ($(BENCH_OUT)/serve_highconn.json) —"
+	@echo "               the reactor front-end must absorb both with a"
+	@echo "               pool-sized thread count — then shut the server down"
 	@echo "  pytest       python L1/L2 tests (skip cleanly when JAX absent)"
 	@echo "  clean        remove build products"
 
@@ -105,10 +108,19 @@ perf:
 	$(CARGO) bench --bench native_exec -- --json $(BENCH_OUT)/native_exec.json
 
 # Serve smoke: background server (sim backend, so replies carry
-# per-request energy), a concurrent closed-loop burst, JSON latency
-# report next to the bench artifacts. loadgen exits non-zero when no
-# request completes or the numeric cross-check fails; --shutdown winds
-# the server down and `wait` collects it.
+# per-request energy), then two bursts against the same process:
+#   1. the classic closed-loop burst (8 connections, 120 requests) —
+#      latency report in $(BENCH_OUT)/serve_loadgen.json;
+#   2. a 512-connection open-loop burst (1024 requests on a fixed
+#      250 req/s arrival schedule) — the event-driven front-end must
+#      multiplex all of them on its small reactor pool, so the
+#      server's "os threads" stays O(reactors + workers) no matter the
+#      connection count; report in $(BENCH_OUT)/serve_highconn.json,
+#      with the post-burst fleet stats (thread counts, rejections)
+#      embedded for the CI assertion.
+# loadgen exits non-zero when no request completes or the numeric
+# cross-check fails; the second burst's --shutdown winds the server
+# down and `wait` collects it.
 SERVE_PORT ?= 7433
 serve-smoke: build
 	mkdir -p $(BENCH_OUT)
@@ -117,7 +129,11 @@ serve-smoke: build
 	sleep 2; \
 	./target/release/manticore loadgen --addr 127.0.0.1:$(SERVE_PORT) \
 	  --artifact matmul_f64_64 --concurrency 8 --requests 120 \
-	  --json $(BENCH_OUT)/serve_loadgen.json --shutdown \
+	  --json $(BENCH_OUT)/serve_loadgen.json \
+	  || { kill $$server_pid 2>/dev/null; exit 1; }; \
+	./target/release/manticore loadgen --addr 127.0.0.1:$(SERVE_PORT) \
+	  --artifact matmul_f64_64 --concurrency 512 --requests 1024 \
+	  --rate 250 --json $(BENCH_OUT)/serve_highconn.json --shutdown \
 	  || { kill $$server_pid 2>/dev/null; exit 1; }; \
 	wait $$server_pid
 

@@ -4,7 +4,7 @@
 //!   repro <fig5|fig6|fig8|fig9|fig10|fig3|area|peaks|simops|all>
 //!   run <artifact> [--iters N]          execute an AOT artifact
 //!   serve [--port P] [--backend B]      concurrent batching inference server
-//!   loadgen [--concurrency N] [--requests N]   closed-loop load generator
+//!   loadgen [--concurrency N] [--requests N] [--rate R]   load generator
 //!   simulate gemm --m --k --n           schedule a GEMM on the system model
 //!   simulate kernel --name <dot|matvec|gemm|axpy>   cycle-level run
 //!   train [--steps N] [--lr F]          tiny end-to-end training loop
@@ -110,10 +110,12 @@ fn print_help() {
          run <artifact|path/to/x.hlo.txt> [--iters N] [--ops N]\n  \
          lower <artifact|all> [--check] [--stats out.md] [--ops N]\n  \
          serve [--port 7433] [--host 127.0.0.1] [--batch-window-ms 2]\n        \
-         [--max-batch 8] [--slot-clusters 32] [--workers N]\n  \
+         [--max-batch 8] [--slot-clusters 32] [--workers N]\n        \
+         [--reactor-threads N] [--max-pending N]\n  \
          loadgen [--addr 127.0.0.1:7433] [--artifact NAME] \
          [--concurrency 8]\n          \
-         [--requests 100] [--json out.json] [--shutdown]\n  \
+         [--requests 100] [--rate R] [--json out.json] [--shutdown]\n          \
+         (--rate R > 0: open-loop fixed arrival schedule @ R req/s)\n  \
          simulate gemm --m M --k K --n N | simulate kernel --name <..>\n  \
          train [--steps N] [--lr F]\n  \
          backends\n  \
@@ -145,6 +147,8 @@ fn cmd_serve(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> 
         max_batch: args.get_usize("max-batch", 8)?,
         slot_clusters: args.get_usize("slot-clusters", 32)?,
         workers: args.get_usize("workers", 0)?,
+        reactor_threads: args.get_usize("reactor-threads", 0)?,
+        max_pending: args.get_usize("max-pending", 0)?,
     };
     let server = Server::start(&serve_cfg, cfg)?;
     println!(
@@ -153,18 +157,24 @@ fn cmd_serve(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> 
         server.backend_name(),
         server.platform()
     );
+    let startup = server.stats();
     println!(
         "  batching: {} ms window, max {} / placement: {} slots x {} \
          clusters / workers: {}",
         serve_cfg.window_ms,
         serve_cfg.max_batch,
-        server.stats().slots,
-        server.stats().slot_clusters,
+        startup.slots,
+        startup.slot_clusters,
         if serve_cfg.workers == 0 {
             "auto".to_string()
         } else {
             serve_cfg.workers.to_string()
         }
+    );
+    println!(
+        "  front-end: {} reactor threads, {} pending-request budget",
+        startup.reactor_threads,
+        server.max_pending()
     );
     println!("  stop with: {{\"op\":\"shutdown\"}} or `manticore loadgen --shutdown`");
     let stats = server.wait();
@@ -172,8 +182,9 @@ fn cmd_serve(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> 
     Ok(())
 }
 
-/// `manticore loadgen` — fire a closed-loop burst and report latency,
-/// throughput and (sim backend) energy per request.
+/// `manticore loadgen` — fire a burst (closed loop, or open loop with
+/// `--rate`) and report latency, throughput and (sim backend) energy
+/// per request.
 fn cmd_loadgen(args: &cli::Args, artifacts_dir: &str) -> Result<()> {
     let cfg = LoadgenConfig {
         addr: args.get_or(
@@ -186,14 +197,23 @@ fn cmd_loadgen(args: &cli::Args, artifacts_dir: &str) -> Result<()> {
         artifact: args.get_or("artifact", "matmul_f64_64"),
         concurrency: args.get_usize("concurrency", 8)?.max(1),
         requests: args.get_usize("requests", 100)?,
+        rate: args.get_f64("rate", 0.0)?,
         seed: args.get_usize("seed", 0)? as u64,
         artifacts_dir: artifacts_dir.to_string(),
         json_path: args.get("json").map(str::to_string),
         shutdown: args.has_flag("shutdown"),
     };
     println!(
-        "loadgen: {} x {} requests @ {} (concurrency {})",
-        cfg.artifact, cfg.requests, cfg.addr, cfg.concurrency
+        "loadgen: {} x {} requests @ {} (concurrency {}{})",
+        cfg.artifact,
+        cfg.requests,
+        cfg.addr,
+        cfg.concurrency,
+        if cfg.rate > 0.0 {
+            format!(", open-loop {} req/s", cfg.rate)
+        } else {
+            String::new()
+        }
     );
     let rep = run_loadgen(&cfg)?;
     rep.table().print();

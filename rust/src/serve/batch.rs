@@ -1,5 +1,5 @@
-//! The micro-batching queue between connection threads and the worker
-//! pool: requests for the *same artifact* arriving within a
+//! The micro-batching queue between the reactor front-end and the
+//! worker pool: requests for the *same artifact* arriving within a
 //! configurable window are grouped into one batch, so a worker
 //! amortizes its slot lease (and the compile-once executable lookup)
 //! over the group — the serving analogue of the coordinator's
@@ -9,13 +9,23 @@
 //! front-to-back) and never starves another artifact: a worker that
 //! claims artifact A only removes A-requests, leaving the rest of the
 //! queue for its peers.
+//!
+//! Completion routing: each [`Pending`] carries a [`ReplyTo`]. The
+//! reactor path encodes the reply line *on the worker thread* (so
+//! serialization parallelizes with execution) and posts it to the
+//! owning reactor's inbox, which delivers it through the
+//! connection's in-order write queue; the sync path (tests, embedded
+//! callers) keeps the classic blocked-channel shape.
 
 use crate::coordinator::OpStreamReport;
 use crate::runtime::Tensor;
+use crate::serve::protocol::{ErrorReply, Reply, RunReply, SimSummary};
+use crate::serve::reactor::CompletionHandle;
 use crate::system::ClusterSlot;
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// A completed execution, travelling back to the connection thread.
@@ -30,16 +40,65 @@ pub struct RunDone {
     pub server_us: f64,
 }
 
-/// What a worker sends back per request: outputs or a printable error.
-pub type WorkResult = Result<RunDone, String>;
+/// What a worker sends back per request: outputs or a typed error.
+pub type WorkResult = Result<RunDone, ErrorReply>;
+
+/// Where a finished request's reply goes.
+pub enum ReplyTo {
+    /// A thread blocked on a channel (tests / embedded callers).
+    Sync(mpsc::Sender<WorkResult>),
+    /// A reactor connection: the worker encodes the reply line and
+    /// posts it back through the reactor inbox; the connection's
+    /// write queue restores request order.
+    Reactor {
+        done: CompletionHandle,
+        /// Artifact name echoed into the `run` reply.
+        artifact: String,
+        /// Admission gauge, decremented exactly once per reply.
+        admitted: Arc<AtomicUsize>,
+    },
+}
+
+impl ReplyTo {
+    /// Deliver the result (consumes the route: one reply per request).
+    pub fn send(self, result: WorkResult) {
+        match self {
+            ReplyTo::Sync(tx) => {
+                let _ = tx.send(result);
+            }
+            ReplyTo::Reactor {
+                done,
+                artifact,
+                admitted,
+            } => {
+                let reply = match result {
+                    Ok(r) => {
+                        let sim = r.report.as_ref().map(SimSummary::of);
+                        Reply::Run(RunReply {
+                            artifact,
+                            outputs: r.outputs,
+                            server_us: r.server_us,
+                            batch: r.batch,
+                            slot: Some(r.slot),
+                            sim,
+                        })
+                    }
+                    Err(e) => Reply::Err(e),
+                };
+                let line = reply.to_line();
+                admitted.fetch_sub(1, Ordering::SeqCst);
+                done.post(line);
+            }
+        }
+    }
+}
 
 /// One queued request.
-#[derive(Debug)]
 pub struct Pending {
     pub artifact: String,
     pub inputs: Vec<Tensor>,
     pub enqueued: Instant,
-    pub reply: mpsc::Sender<WorkResult>,
+    pub reply: ReplyTo,
 }
 
 struct QueueState {
@@ -65,16 +124,17 @@ impl BatchQueue {
         }
     }
 
-    /// Enqueue a request. Returns `false` (request refused) after
-    /// [`BatchQueue::stop`].
-    pub fn push(&self, p: Pending) -> bool {
+    /// Enqueue a request. After [`BatchQueue::stop`] the request is
+    /// refused and handed back so the caller can deliver a typed
+    /// shutting-down reply through its [`ReplyTo`].
+    pub fn push(&self, p: Pending) -> Result<(), Pending> {
         let mut st = self.state.lock().unwrap();
         if st.stopped {
-            return false;
+            return Err(p);
         }
         st.q.push_back(p);
         self.cv.notify_all();
-        true
+        Ok(())
     }
 
     /// Pop the next micro-batch: blocks for work, then groups
@@ -145,7 +205,7 @@ mod tests {
                 artifact: artifact.to_string(),
                 inputs: Vec::new(),
                 enqueued: Instant::now(),
-                reply: tx,
+                reply: ReplyTo::Sync(tx),
             },
             rx,
         )
@@ -157,7 +217,7 @@ mod tests {
         let mut rxs = Vec::new();
         for name in ["a", "a", "b", "a"] {
             let (p, rx) = pending(name);
-            assert!(q.push(p));
+            assert!(q.push(p).is_ok());
             rxs.push(rx);
         }
         // First batch: the three 'a's (grouped past the interleaved b).
@@ -177,7 +237,7 @@ mod tests {
         let mut rxs = Vec::new();
         for _ in 0..5 {
             let (p, rx) = pending("a");
-            q.push(p);
+            let _ = q.push(p);
             rxs.push(rx);
         }
         assert_eq!(q.pop_batch().unwrap().len(), 2);
@@ -190,12 +250,12 @@ mod tests {
         use std::sync::Arc;
         let q = Arc::new(BatchQueue::new(Duration::from_millis(200), 8));
         let (p, _rx1) = pending("a");
-        q.push(p);
+        let _ = q.push(p);
         let q2 = q.clone();
         let h = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(40));
             let (p, rx) = pending("a");
-            q2.push(p);
+            let _ = q2.push(p);
             rx
         });
         // pop_batch waits out the window and captures the late request.
@@ -208,10 +268,12 @@ mod tests {
     fn stop_drains_then_ends() {
         let q = BatchQueue::new(Duration::from_millis(5), 8);
         let (p, _rx) = pending("a");
-        q.push(p);
+        let _ = q.push(p);
         q.stop();
         let (p2, _rx2) = pending("a");
-        assert!(!q.push(p2), "push after stop is refused");
+        let refused = q.push(p2);
+        assert!(refused.is_err(), "push after stop hands the request back");
+        assert_eq!(refused.unwrap_err().artifact, "a");
         assert_eq!(q.pop_batch().unwrap().len(), 1);
         assert!(q.pop_batch().is_none(), "stopped + drained => None");
     }

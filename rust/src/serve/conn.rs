@@ -1,0 +1,313 @@
+//! Per-connection protocol state machine for the reactor front-end:
+//! incremental line framing over nonblocking reads, an in-order reply
+//! queue for pipelined requests, a partial-write buffer, and
+//! slow-reader backpressure — all pure state (no sockets), so every
+//! transition is unit-testable without I/O.
+//!
+//! Framing: requests are newline-delimited JSON. Bytes accumulate in
+//! `read_buf` until a `\n` completes a line (CR tolerated, blank
+//! lines skipped); a line growing past the cap is a framing violation
+//! and the caller closes the connection after a typed error reply.
+//!
+//! Reply ordering: every parsed request allocates a monotonically
+//! increasing sequence number and a slot in `slots`. Replies complete
+//! *out of order* (immediate control replies interleave with worker
+//! completions from different micro-batches), but only the contiguous
+//! completed prefix drains into `write_buf` — so a client that
+//! pipelines N requests always reads N replies in request order.
+//!
+//! Backpressure: a client that stops reading lets `write_buf` grow;
+//! past `high_water` the connection stops being read (`wants_read`
+//! goes false) until the backlog drains below `low_water`, so one
+//! slow client can neither balloon server memory nor keep enqueueing
+//! work it is not collecting.
+
+use std::collections::VecDeque;
+
+/// A single line (request or reply) larger than this is a framing
+/// violation. Generous: the largest checked-in artifact's request
+/// line is well under 1 MiB.
+pub const MAX_LINE_BYTES: usize = 64 << 20;
+/// Stop reading from a connection whose un-flushed replies exceed
+/// this.
+pub const WRITE_HIGH_WATER: usize = 8 << 20;
+/// Resume reading once the backlog drains below this.
+pub const WRITE_LOW_WATER: usize = 1 << 20;
+
+/// The per-connection state machine (framing + ordering + buffers).
+pub struct ConnState {
+    read_buf: Vec<u8>,
+    /// Sequence number the next parsed request will get.
+    next_seq: u64,
+    /// Sequence number of the slot at the front of `slots`.
+    head_seq: u64,
+    /// One entry per in-flight request, in request order; `Some` =
+    /// completed reply line not yet drained to `write_buf`.
+    slots: VecDeque<Option<String>>,
+    write_buf: Vec<u8>,
+    write_pos: usize,
+    paused: bool,
+    read_eof: bool,
+    closing: bool,
+    max_line: usize,
+    high_water: usize,
+    low_water: usize,
+}
+
+impl ConnState {
+    pub fn new() -> ConnState {
+        ConnState::with_limits(
+            MAX_LINE_BYTES,
+            WRITE_HIGH_WATER,
+            WRITE_LOW_WATER,
+        )
+    }
+
+    /// Custom framing/backpressure limits (tests shrink them).
+    pub fn with_limits(
+        max_line: usize,
+        high_water: usize,
+        low_water: usize,
+    ) -> ConnState {
+        ConnState {
+            read_buf: Vec::new(),
+            next_seq: 0,
+            head_seq: 0,
+            slots: VecDeque::new(),
+            write_buf: Vec::new(),
+            write_pos: 0,
+            paused: false,
+            read_eof: false,
+            closing: false,
+            max_line,
+            high_water,
+            low_water: low_water.min(high_water),
+        }
+    }
+
+    /// Ingest freshly read bytes; returns the complete lines they
+    /// finished (blank lines skipped). `Err` is a framing violation
+    /// (unterminated line past the cap): reply once, then close.
+    pub fn on_bytes(&mut self, data: &[u8]) -> Result<Vec<String>, String> {
+        self.read_buf.extend_from_slice(data);
+        let mut lines = Vec::new();
+        let mut start = 0usize;
+        while let Some(pos) =
+            self.read_buf[start..].iter().position(|&b| b == b'\n')
+        {
+            let end = start + pos;
+            let mut line = &self.read_buf[start..end];
+            if line.last() == Some(&b'\r') {
+                line = &line[..line.len() - 1];
+            }
+            if !line.iter().all(|b| b.is_ascii_whitespace()) {
+                lines.push(String::from_utf8_lossy(line).into_owned());
+            }
+            start = end + 1;
+        }
+        if start > 0 {
+            self.read_buf.drain(..start);
+        }
+        if self.read_buf.len() > self.max_line {
+            return Err(format!(
+                "request line exceeds {} bytes",
+                self.max_line
+            ));
+        }
+        Ok(lines)
+    }
+
+    /// Allocate the reply slot for the next parsed request.
+    pub fn begin_request(&mut self) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.slots.push_back(None);
+        seq
+    }
+
+    /// Complete one request's reply. Out-of-order completions are
+    /// held; only the contiguous completed prefix drains into the
+    /// write buffer, preserving request order on the wire.
+    pub fn complete(&mut self, seq: u64, line: String) {
+        let Some(idx) = seq.checked_sub(self.head_seq) else {
+            return;
+        };
+        let idx = idx as usize;
+        if idx >= self.slots.len() {
+            return;
+        }
+        self.slots[idx] = Some(line);
+        while matches!(self.slots.front(), Some(Some(_))) {
+            let line = self.slots.pop_front().flatten().expect("ready slot");
+            self.head_seq += 1;
+            self.write_buf.extend_from_slice(line.as_bytes());
+            self.write_buf.push(b'\n');
+        }
+        self.update_pause();
+    }
+
+    /// The bytes waiting to go out.
+    pub fn writable(&self) -> &[u8] {
+        &self.write_buf[self.write_pos..]
+    }
+
+    /// Acknowledge `n` bytes written (possibly a partial write).
+    pub fn consume(&mut self, n: usize) {
+        self.write_pos = (self.write_pos + n).min(self.write_buf.len());
+        if self.write_pos == self.write_buf.len() {
+            self.write_buf.clear();
+            self.write_pos = 0;
+        } else if self.write_pos > (64 << 10) {
+            self.write_buf.drain(..self.write_pos);
+            self.write_pos = 0;
+        }
+        self.update_pause();
+    }
+
+    fn update_pause(&mut self) {
+        let backlog = self.write_buf.len() - self.write_pos;
+        if backlog > self.high_water {
+            self.paused = true;
+        } else if backlog <= self.low_water {
+            self.paused = false;
+        }
+    }
+
+    /// Should the reactor read from this connection?
+    pub fn wants_read(&self) -> bool {
+        !self.read_eof && !self.closing && !self.paused
+    }
+
+    /// Is there anything to write?
+    pub fn wants_write(&self) -> bool {
+        self.write_pos < self.write_buf.len()
+    }
+
+    /// The peer half-closed its write side (read returned 0). Replies
+    /// already in flight still go out before the connection drops.
+    pub fn mark_eof(&mut self) {
+        self.read_eof = true;
+    }
+
+    pub fn read_eof(&self) -> bool {
+        self.read_eof
+    }
+
+    /// Close once everything pending has flushed (framing violation /
+    /// protocol-level close).
+    pub fn close_after_flush(&mut self) {
+        self.closing = true;
+    }
+
+    pub fn closing(&self) -> bool {
+        self.closing
+    }
+
+    /// No replies owed and nothing buffered: safe to drop the
+    /// connection (used at EOF and during shutdown drain).
+    pub fn drained(&self) -> bool {
+        self.slots.is_empty() && !self.wants_write()
+    }
+
+    /// Requests whose replies have not yet drained to the wire.
+    pub fn in_flight(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+impl Default for ConnState {
+    fn default() -> Self {
+        ConnState::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partial_reads_frame_lines_incrementally() {
+        let mut c = ConnState::new();
+        assert_eq!(c.on_bytes(b"{\"op\":\"pi").unwrap(), Vec::<String>::new());
+        let lines = c.on_bytes(b"ng\"}\n{\"op\":").unwrap();
+        assert_eq!(lines, vec!["{\"op\":\"ping\"}".to_string()]);
+        let lines = c.on_bytes(b"\"stats\"}\r\n\n  \n").unwrap();
+        // CR stripped, blank/whitespace lines skipped.
+        assert_eq!(lines, vec!["{\"op\":\"stats\"}".to_string()]);
+        // Several complete lines in one read.
+        let lines = c.on_bytes(b"a\nb\nc\n").unwrap();
+        assert_eq!(lines, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn oversized_unterminated_line_is_a_framing_violation() {
+        let mut c = ConnState::with_limits(16, 1 << 20, 1 << 10);
+        assert!(c.on_bytes(b"0123456789").is_ok());
+        let err = c.on_bytes(b"0123456789").unwrap_err();
+        assert!(err.contains("16 bytes"), "{err}");
+    }
+
+    #[test]
+    fn pipelined_replies_drain_in_request_order() {
+        let mut c = ConnState::new();
+        let s0 = c.begin_request();
+        let s1 = c.begin_request();
+        let s2 = c.begin_request();
+        assert_eq!((s0, s1, s2), (0, 1, 2));
+        assert_eq!(c.in_flight(), 3);
+        // Completing out of order holds the reply back...
+        c.complete(s1, "one".to_string());
+        assert!(!c.wants_write(), "reply 1 must wait for reply 0");
+        // ...until the head completes, then the prefix drains at once.
+        c.complete(s0, "zero".to_string());
+        assert_eq!(c.writable(), b"zero\none\n");
+        c.complete(s2, "two".to_string());
+        assert_eq!(c.writable(), b"zero\none\ntwo\n");
+        assert_eq!(c.in_flight(), 0);
+        // Stale/duplicate completions are ignored.
+        c.complete(s1, "dup".to_string());
+        assert_eq!(c.writable(), b"zero\none\ntwo\n");
+        // Partial writes advance without reordering.
+        c.consume(3);
+        assert_eq!(c.writable(), b"o\none\ntwo\n");
+        c.consume(100);
+        assert!(!c.wants_write());
+        assert!(c.drained());
+    }
+
+    #[test]
+    fn slow_reader_backpressure_pauses_reads_with_hysteresis() {
+        let mut c = ConnState::with_limits(1 << 20, 64, 16);
+        assert!(c.wants_read());
+        let seq = c.begin_request();
+        c.complete(seq, "x".repeat(100));
+        assert!(c.wants_write());
+        assert!(!c.wants_read(), "past high water: reads pause");
+        // Draining a little is not enough (hysteresis)...
+        c.consume(20);
+        assert!(!c.wants_read());
+        // ...but below low water reads resume.
+        c.consume(70);
+        assert!(c.wants_read());
+    }
+
+    #[test]
+    fn eof_and_close_let_pending_replies_flush_first() {
+        let mut c = ConnState::new();
+        let seq = c.begin_request();
+        c.mark_eof();
+        assert!(!c.wants_read());
+        assert!(!c.drained(), "reply still owed after EOF");
+        c.complete(seq, "late".to_string());
+        assert!(c.wants_write());
+        assert!(!c.drained());
+        let n = c.writable().len();
+        c.consume(n);
+        assert!(c.drained(), "flushed + no slots = safe to drop");
+        // close_after_flush stops reads immediately.
+        let mut c = ConnState::new();
+        c.close_after_flush();
+        assert!(!c.wants_read());
+        assert!(c.closing());
+    }
+}

@@ -1,41 +1,60 @@
-//! `manticore loadgen` — the closed-loop demand side of the serve
-//! subsystem: N client threads, each holding one connection, firing
-//! requests back-to-back until the shared request budget is spent.
+//! `manticore loadgen` — the demand side of the serve subsystem, in
+//! two modes:
+//!
+//! * **Closed loop** (default): N client threads, each holding one
+//!   connection, firing requests back-to-back until the shared
+//!   request budget is spent. Simple, but latency measured this way
+//!   suffers *coordinated omission* — a slow reply delays the next
+//!   send, so the schedule itself hides server stalls.
+//! * **Open loop** (`--rate R`): requests follow a fixed arrival
+//!   schedule (request k is due at `t0 + k/R`, dealt round-robin to
+//!   the connections), senders sleep until each due time and write
+//!   regardless of outstanding replies, and latency is measured from
+//!   the *scheduled* send time — a stalled server keeps accumulating
+//!   due requests and the stall lands in the percentiles. The report
+//!   carries schedule health: `late sends` (the sender itself fell
+//!   behind the schedule) and `dropped` (sends that never got a
+//!   reply).
 //!
 //! Each request gets fresh random inputs built from the local artifact
 //! manifest. Latency lands in a client-side [`Histogram`] (and a raw
 //! sample list for exact mean/median/stddev); one response is
 //! cross-checked bit-exactly against a direct in-process `Runtime`
 //! run — the wire's f64 literals round-trip exactly, so any deviation
-//! is a real serving bug, not JSON noise. The final report can be
-//! written as `util::bench`-schema JSON, diffable across runs with
-//! `manticore bench-diff`.
+//! is a real serving bug, not JSON noise. Typed `overloaded` refusals
+//! (admission control backpressure) are counted separately from
+//! errors. The final report can be written as `util::bench`-schema
+//! JSON, diffable across runs with `manticore bench-diff`.
 
 use crate::runtime::{
-    backend_by_name, load_manifest, tensor_for_spec, Runtime, Tensor,
+    backend_by_name, load_manifest, tensor_for_spec, ArtifactMeta, Runtime,
+    Tensor,
 };
 use crate::serve::metrics::{Histogram, StatsSnapshot};
-use crate::serve::protocol::{Reply, Request};
+use crate::serve::protocol::{ErrCode, Reply, Request};
 use crate::util::bench::{BenchOpts, Report, Sample, Table};
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
-use std::collections::BTreeSet;
+use std::collections::{BTreeSet, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Loadgen configuration (the `manticore loadgen` flags).
 #[derive(Debug, Clone)]
 pub struct LoadgenConfig {
     pub addr: String,
     pub artifact: String,
-    /// Closed-loop client connections.
+    /// Client connections (closed-loop workers, or open-loop
+    /// round-robin deal targets).
     pub concurrency: usize,
     /// Total requests across all clients.
     pub requests: usize,
+    /// Open-loop target arrival rate [req/s]; 0 = closed loop.
+    pub rate: f64,
     pub seed: u64,
     /// Local artifacts dir (input specs + the cross-check runtime).
     pub artifacts_dir: String,
@@ -55,6 +74,7 @@ impl Default for LoadgenConfig {
             artifact: "matmul_f64_64".to_string(),
             concurrency: 8,
             requests: 100,
+            rate: 0.0,
             seed: 0,
             artifacts_dir: "artifacts".to_string(),
             json_path: None,
@@ -68,6 +88,15 @@ impl Default for LoadgenConfig {
 pub struct LoadgenReport {
     pub ok_requests: u64,
     pub errors: u64,
+    /// Requests refused by admission control (typed `overloaded`).
+    pub rejected: u64,
+    /// Open loop: sends that left the sender later than the schedule
+    /// tolerates (2 inter-arrival intervals, min 10 ms).
+    pub late_sends: u64,
+    /// Open loop: sends that never received a reply.
+    pub dropped: u64,
+    /// Open-loop target arrival rate (0 = closed loop).
+    pub target_rps: f64,
     pub wall_s: f64,
     /// Client-observed requests/s.
     pub rps: f64,
@@ -97,6 +126,24 @@ impl LoadgenReport {
         let row = |t: &mut Table, k: &str, v: String| {
             t.row(vec![k.to_string(), v]);
         };
+        row(
+            &mut t,
+            "mode",
+            if self.target_rps > 0.0 {
+                format!("open-loop @ {:.1} req/s target", self.target_rps)
+            } else {
+                "closed-loop".to_string()
+            },
+        );
+        row(
+            &mut t,
+            "rejected (overloaded)",
+            self.rejected.to_string(),
+        );
+        if self.target_rps > 0.0 {
+            row(&mut t, "late sends", self.late_sends.to_string());
+            row(&mut t, "dropped (no reply)", self.dropped.to_string());
+        }
         row(&mut t, "throughput", format!("{:.1} req/s", self.rps));
         row(&mut t, "latency mean", format!("{:.3} ms", self.mean_ms));
         row(&mut t, "latency p50", format!("{:.3} ms", self.p50_ms));
@@ -134,10 +181,14 @@ impl LoadgenReport {
     }
 }
 
+#[derive(Default)]
 struct ThreadStats {
     latencies: Vec<f64>,
     ok: u64,
     errors: u64,
+    rejected: u64,
+    late: u64,
+    dropped: u64,
     slots: BTreeSet<usize>,
     energy_j: f64,
 }
@@ -157,7 +208,189 @@ fn roundtrip(
     Reply::parse(&line)
 }
 
-/// Run one closed-loop burst against a serve endpoint.
+/// Fresh random inputs for one (client, request) pair — deterministic
+/// in `(seed, client_id, attempt)` so reruns are reproducible.
+fn inputs_for(
+    meta: &ArtifactMeta,
+    seed: u64,
+    client_id: usize,
+    attempt: u64,
+) -> Result<Vec<Tensor>> {
+    let mut rng = Rng::new(seed ^ ((client_id as u64) << 32) ^ attempt);
+    meta.inputs
+        .iter()
+        .map(|spec| tensor_for_spec(spec, |_| rng.normal() * 0.1))
+        .collect()
+}
+
+/// Record one `run`/error reply into the thread stats. `sent` is the
+/// latency origin: actual send time (closed loop) or *scheduled* send
+/// time (open loop — that is what defeats coordinated omission).
+fn record_reply(
+    st: &mut ThreadStats,
+    reply: Reply,
+    sent: Instant,
+    inputs: Option<Vec<Tensor>>,
+    sample: &Mutex<Option<(Vec<Tensor>, Vec<Tensor>)>>,
+) {
+    match reply {
+        Reply::Run(run) => {
+            // Latency samples cover *completed* requests only — the
+            // JSON report's `iters` is therefore the completed-request
+            // count the CI smoke gate asserts on.
+            st.latencies.push(sent.elapsed().as_secs_f64());
+            st.ok += 1;
+            if let Some(slot) = run.slot {
+                st.slots.insert(slot.id);
+            }
+            if let Some(sim) = run.sim {
+                st.energy_j += sim.energy_j;
+            }
+            if let Some(inputs) = inputs {
+                let mut guard = sample.lock().unwrap();
+                if guard.is_none() {
+                    *guard = Some((inputs, run.outputs));
+                }
+            }
+        }
+        Reply::Err(e) if e.code == ErrCode::Overloaded => {
+            st.rejected += 1;
+        }
+        Reply::Err(e) => {
+            eprintln!("loadgen: server error: {}", e.msg);
+            st.errors += 1;
+        }
+        other => {
+            eprintln!("loadgen: unexpected reply {other:?}");
+            st.errors += 1;
+        }
+    }
+}
+
+/// One open-loop client: a sender thread that writes each request at
+/// its scheduled due time (sleeping, never waiting for replies) and a
+/// receiver thread that matches replies to the FIFO of outstanding
+/// sends. Requests `client_id, client_id+conc, ...` of the global
+/// schedule belong to this client; request k is due at `t0 + k/rate`.
+#[allow(clippy::too_many_arguments)]
+fn open_loop_client(
+    addr: &str,
+    artifact: &str,
+    meta: &ArtifactMeta,
+    seed: u64,
+    client_id: usize,
+    conc: usize,
+    requests: usize,
+    rate: f64,
+    t0: Instant,
+    sample: Arc<Mutex<Option<(Vec<Tensor>, Vec<Tensor>)>>>,
+) -> Result<ThreadStats> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to {addr}"))?;
+    let _ = stream.set_nodelay(true);
+    let reader_stream = stream.try_clone().context("cloning stream")?;
+    // A stalled server must not wedge the burst forever: the receiver
+    // gives up after a generous timeout and the unanswered sends are
+    // reported as dropped.
+    reader_stream
+        .set_read_timeout(Some(Duration::from_secs(20)))
+        .context("setting read timeout")?;
+
+    // FIFO of outstanding sends (due time + the inputs kept for the
+    // cross-check sample), plus the sender-finished flag. Replies come
+    // back in request order on one connection, so front-of-FIFO is
+    // always the reply's request.
+    type Outstanding = VecDeque<(Instant, Option<Vec<Tensor>>)>;
+    let inflight: Arc<(Mutex<Outstanding>, AtomicBool)> =
+        Arc::new((Mutex::new(VecDeque::new()), AtomicBool::new(false)));
+
+    let recv = {
+        let inflight = inflight.clone();
+        let sample = sample.clone();
+        std::thread::spawn(move || -> ThreadStats {
+            let mut reader = BufReader::new(reader_stream);
+            let mut st = ThreadStats::default();
+            loop {
+                if inflight.0.lock().unwrap().is_empty() {
+                    if inflight.1.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                    continue;
+                }
+                let mut line = String::new();
+                match reader.read_line(&mut line) {
+                    Ok(0) | Err(_) => break,
+                    Ok(_) => {}
+                }
+                let (due, kept) = inflight
+                    .0
+                    .lock()
+                    .unwrap()
+                    .pop_front()
+                    .expect("reply without an outstanding send");
+                match Reply::parse(&line) {
+                    Ok(reply) => {
+                        record_reply(&mut st, reply, due, kept, &sample)
+                    }
+                    Err(e) => {
+                        eprintln!("loadgen: bad reply line: {e}");
+                        st.errors += 1;
+                    }
+                }
+            }
+            // Everything still outstanding never got an answer.
+            st.dropped += inflight.0.lock().unwrap().len() as u64;
+            st
+        })
+    };
+
+    let interval = 1.0 / rate;
+    let late_after = Duration::from_secs_f64((2.0 * interval).max(0.010));
+    let schedule: Vec<usize> =
+        (client_id..requests).step_by(conc.max(1)).collect();
+    let total = schedule.len();
+    let mut writer = stream;
+    let mut sent = 0usize;
+    let mut late = 0u64;
+    for (i, k) in schedule.iter().enumerate() {
+        let due = t0 + Duration::from_secs_f64(*k as f64 * interval);
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        let inputs = inputs_for(meta, seed, client_id, i as u64)?;
+        // Only the very first request keeps its inputs, for the
+        // single cross-check sample.
+        let keep = client_id == 0 && i == 0;
+        inflight.0.lock().unwrap().push_back((
+            due,
+            if keep { Some(inputs.clone()) } else { None },
+        ));
+        let req = Request::Run {
+            artifact: artifact.to_string(),
+            inputs,
+        };
+        if writeln!(writer, "{}", req.to_line()).is_err() {
+            // Connection died mid-burst: withdraw the entry just
+            // queued; the rest of this client's schedule is dropped.
+            inflight.0.lock().unwrap().pop_back();
+            break;
+        }
+        if Instant::now().saturating_duration_since(due) > late_after {
+            late += 1;
+        }
+        sent += 1;
+    }
+    inflight.1.store(true, Ordering::SeqCst);
+    let mut st = recv.join().expect("loadgen receiver panicked");
+    st.late += late;
+    st.dropped += (total - sent) as u64;
+    Ok(st)
+}
+
+/// Run one burst against a serve endpoint — closed loop by default,
+/// open loop when `cfg.rate > 0`.
 pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let manifest =
         load_manifest(Path::new(&cfg.artifacts_dir), "loadgen")?;
@@ -168,17 +401,27 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         })?
         .clone();
 
+    let conc = cfg.concurrency.max(1);
     let budget = Arc::new(AtomicU64::new(cfg.requests as u64));
     // First completed (inputs, outputs) pair, kept for the cross-check.
     let sample: Arc<Mutex<Option<(Vec<Tensor>, Vec<Tensor>)>>> =
         Arc::new(Mutex::new(None));
     let t0 = Instant::now();
     let mut handles = Vec::new();
-    for client_id in 0..cfg.concurrency.max(1) {
+    for client_id in 0..conc {
         let (budget, sample) = (budget.clone(), sample.clone());
         let (addr, artifact, meta) =
             (cfg.addr.clone(), cfg.artifact.clone(), meta.clone());
-        let seed = cfg.seed;
+        let (seed, rate, requests) = (cfg.seed, cfg.rate, cfg.requests);
+        if rate > 0.0 {
+            handles.push(std::thread::spawn(move || {
+                open_loop_client(
+                    &addr, &artifact, &meta, seed, client_id, conc,
+                    requests, rate, t0, sample,
+                )
+            }));
+            continue;
+        }
         handles.push(std::thread::spawn(move || -> Result<ThreadStats> {
             let stream = TcpStream::connect(&addr)
                 .with_context(|| format!("connecting to {addr}"))?;
@@ -186,13 +429,7 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                 stream.try_clone().context("cloning stream")?,
             );
             let mut writer = stream;
-            let mut st = ThreadStats {
-                latencies: Vec::new(),
-                ok: 0,
-                errors: 0,
-                slots: BTreeSet::new(),
-                energy_j: 0.0,
-            };
+            let mut st = ThreadStats::default();
             let mut attempt: u64 = 0;
             loop {
                 // Claim one request from the shared budget.
@@ -207,16 +444,8 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                     break;
                 }
                 // Unique inputs per (client, request) pair.
-                let mut rng =
-                    Rng::new(seed ^ ((client_id as u64) << 32) ^ attempt);
+                let inputs = inputs_for(&meta, seed, client_id, attempt)?;
                 attempt += 1;
-                let inputs: Vec<Tensor> = meta
-                    .inputs
-                    .iter()
-                    .map(|spec| {
-                        tensor_for_spec(spec, |_| rng.normal() * 0.1)
-                    })
-                    .collect::<Result<_>>()?;
                 let sent = Instant::now();
                 let reply = roundtrip(
                     &mut reader,
@@ -226,34 +455,7 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                         inputs: inputs.clone(),
                     },
                 )?;
-                match reply {
-                    Reply::Run(run) => {
-                        // Latency samples cover *completed* requests
-                        // only — the JSON report's `iters` is therefore
-                        // the completed-request count the CI smoke gate
-                        // asserts on.
-                        st.latencies.push(sent.elapsed().as_secs_f64());
-                        st.ok += 1;
-                        if let Some(slot) = run.slot {
-                            st.slots.insert(slot.id);
-                        }
-                        if let Some(sim) = run.sim {
-                            st.energy_j += sim.energy_j;
-                        }
-                        let mut guard = sample.lock().unwrap();
-                        if guard.is_none() {
-                            *guard = Some((inputs, run.outputs));
-                        }
-                    }
-                    Reply::Err(msg) => {
-                        eprintln!("loadgen: server error: {msg}");
-                        st.errors += 1;
-                    }
-                    other => {
-                        eprintln!("loadgen: unexpected reply {other:?}");
-                        st.errors += 1;
-                    }
-                }
+                record_reply(&mut st, reply, sent, Some(inputs), &sample);
             }
             Ok(st)
         }));
@@ -263,6 +465,9 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let mut latencies: Vec<f64> = Vec::new();
     let mut ok = 0u64;
     let mut errors = 0u64;
+    let mut rejected = 0u64;
+    let mut late_sends = 0u64;
+    let mut dropped = 0u64;
     let mut slots = BTreeSet::new();
     let mut energy = 0.0f64;
     for h in handles {
@@ -273,6 +478,9 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         latencies.extend_from_slice(&st.latencies);
         ok += st.ok;
         errors += st.errors;
+        rejected += st.rejected;
+        late_sends += st.late;
+        dropped += st.dropped;
         slots.extend(st.slots);
         energy += st.energy_j;
     }
@@ -334,6 +542,10 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let report = LoadgenReport {
         ok_requests: ok,
         errors,
+        rejected,
+        late_sends,
+        dropped,
+        target_rps: cfg.rate,
         wall_s,
         rps: ok as f64 / wall_s,
         mean_ms: hist.mean_s() * 1e3,
@@ -375,8 +587,16 @@ fn write_json_report(
     }
     let mut summary = rep.table();
     summary.title = format!(
-        "loadgen {} x{} @ {} — {}",
-        cfg.artifact, cfg.requests, cfg.concurrency, cfg.addr
+        "loadgen {} x{} @ {} — {}{}",
+        cfg.artifact,
+        cfg.requests,
+        cfg.concurrency,
+        cfg.addr,
+        if cfg.rate > 0.0 {
+            format!(" (open-loop {} req/s)", cfg.rate)
+        } else {
+            String::new()
+        }
     );
     out.table(summary);
     if let Some(s) = &rep.server_stats {
@@ -458,6 +678,46 @@ mod tests {
         assert!(final_stats.j_per_request > 0.0);
         assert!(final_stats.occupancy > 0.0);
         assert!(final_stats.energy_j > 0.0);
+    }
+
+    /// Open-loop mode: every request of a modest fixed-rate schedule
+    /// completes, the cross-check still runs, and the report carries
+    /// the schedule-health accounting.
+    #[test]
+    fn open_loop_burst_completes_on_schedule() {
+        if !artifacts_present() {
+            return;
+        }
+        let server = Server::start(
+            &ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                backend: "sim".to_string(),
+                ..ServeConfig::default()
+            },
+            &Config::default(),
+        )
+        .expect("server start");
+        let rep = run_loadgen(&LoadgenConfig {
+            addr: server.addr().to_string(),
+            requests: 16,
+            concurrency: 4,
+            rate: 200.0,
+            shutdown: true,
+            ..LoadgenConfig::default()
+        })
+        .expect("open-loop run");
+        let final_stats = server.wait();
+        assert_eq!(
+            rep.ok_requests + rep.errors + rep.rejected + rep.dropped,
+            16,
+            "every scheduled request is accounted for"
+        );
+        assert_eq!(rep.ok_requests, 16, "modest rate completes everything");
+        assert!(rep.crosschecked);
+        assert_eq!(rep.target_rps, 200.0);
+        assert_eq!(final_stats.requests, 16);
+        // 16 requests at 200/s span 75 ms of schedule.
+        assert!(rep.wall_s >= 0.07, "open loop paces the schedule");
     }
 
     /// The JSON report lands on disk in the bench schema.

@@ -1,6 +1,10 @@
 //! Fleet-level serving metrics: a lock-protected aggregate the
-//! connection and worker threads update, snapshotted on `stats`
-//! requests and printed on shutdown.
+//! reactor and worker threads update, snapshotted on `stats`
+//! requests and printed on shutdown. Besides the latency/throughput
+//! counters this carries the front-end health gauges: open
+//! connections, admitted-in-flight requests, admission-control
+//! rejections, and the process OS-thread count (the number the
+//! reactor design keeps flat as connections scale).
 //!
 //! Latencies go into a geometric-bucket [`Histogram`] (1 µs lower
 //! edge, 25 % growth, ~120 buckets ≈ 1 µs..50 ks) — constant memory,
@@ -155,6 +159,20 @@ pub struct StatsSnapshot {
     pub occupancy: f64,
     pub slots: usize,
     pub slot_clusters: usize,
+    /// Requests refused by admission control (`overloaded` replies).
+    pub rejected: u64,
+    /// Currently open client connections.
+    pub open_conns: u64,
+    /// Requests admitted but not yet replied (queue + executing).
+    pub pending: u64,
+    /// Reactor (front-end I/O) threads in the pool.
+    pub reactor_threads: usize,
+    /// Worker (execution) threads in the pool.
+    pub worker_threads: usize,
+    /// OS threads of the whole process at snapshot time (Linux; 0
+    /// where unavailable). The bounded-thread-count check at high
+    /// connection counts reads this.
+    pub os_threads: u64,
 }
 
 impl StatsSnapshot {
@@ -176,6 +194,15 @@ impl StatsSnapshot {
             ("occupancy", Value::Num(self.occupancy)),
             ("slots", Value::Num(self.slots as f64)),
             ("slot_clusters", Value::Num(self.slot_clusters as f64)),
+            ("rejected", Value::Num(self.rejected as f64)),
+            ("open_conns", Value::Num(self.open_conns as f64)),
+            ("pending", Value::Num(self.pending as f64)),
+            (
+                "reactor_threads",
+                Value::Num(self.reactor_threads as f64),
+            ),
+            ("worker_threads", Value::Num(self.worker_threads as f64)),
+            ("os_threads", Value::Num(self.os_threads as f64)),
         ])
     }
 
@@ -184,6 +211,9 @@ impl StatsSnapshot {
             v.get(k)
                 .and_then(Value::as_f64)
                 .with_context(|| format!("stats missing '{k}'"))
+        };
+        let opt = |k: &str| -> f64 {
+            v.get(k).and_then(Value::as_f64).unwrap_or(0.0)
         };
         Ok(StatsSnapshot {
             backend: v
@@ -206,6 +236,14 @@ impl StatsSnapshot {
             occupancy: num("occupancy")?,
             slots: num("slots")? as usize,
             slot_clusters: num("slot_clusters")? as usize,
+            // Front-end gauges default to 0 when parsing replies from
+            // older servers.
+            rejected: opt("rejected") as u64,
+            open_conns: opt("open_conns") as u64,
+            pending: opt("pending") as u64,
+            reactor_threads: opt("reactor_threads") as usize,
+            worker_threads: opt("worker_threads") as usize,
+            os_threads: opt("os_threads") as u64,
         })
     }
 
@@ -223,6 +261,21 @@ impl StatsSnapshot {
         };
         row(&mut t, "requests", self.requests.to_string());
         row(&mut t, "errors", self.errors.to_string());
+        row(
+            &mut t,
+            "rejected (overloaded)",
+            self.rejected.to_string(),
+        );
+        row(&mut t, "open connections", self.open_conns.to_string());
+        row(&mut t, "admitted in flight", self.pending.to_string());
+        row(
+            &mut t,
+            "os threads",
+            format!(
+                "{} ({} reactor + {} worker)",
+                self.os_threads, self.reactor_threads, self.worker_threads
+            ),
+        );
         row(&mut t, "uptime", format!("{:.2} s", self.uptime_s));
         row(&mut t, "throughput", format!("{:.1} req/s", self.rps));
         row(&mut t, "latency p50", format!("{:.3} ms", self.p50_ms));
@@ -259,11 +312,37 @@ impl StatsSnapshot {
 struct Counters {
     requests: u64,
     errors: u64,
+    rejected: u64,
+    open_conns: i64,
     batches: u64,
     batched_requests: u64,
     hist: Histogram,
     energy_j: f64,
     cycles: f64,
+}
+
+/// Current OS thread count of this process (Linux reads
+/// `/proc/self/status`; elsewhere 0 = unknown). This is the number
+/// the reactor front-end keeps flat as open connections scale.
+pub fn os_threads() -> u64 {
+    #[cfg(target_os = "linux")]
+    fn imp() -> u64 {
+        if let Ok(s) = std::fs::read_to_string("/proc/self/status") {
+            for line in s.lines() {
+                if let Some(rest) = line.strip_prefix("Threads:") {
+                    if let Ok(n) = rest.trim().parse::<u64>() {
+                        return n;
+                    }
+                }
+            }
+        }
+        0
+    }
+    #[cfg(not(target_os = "linux"))]
+    fn imp() -> u64 {
+        0
+    }
+    imp()
 }
 
 /// The live, shared metrics aggregate.
@@ -306,6 +385,19 @@ impl Metrics {
         self.inner.lock().unwrap().errors += 1;
     }
 
+    /// One request refused by admission control.
+    pub fn record_reject(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn conn_opened(&self) {
+        self.inner.lock().unwrap().open_conns += 1;
+    }
+
+    pub fn conn_closed(&self) {
+        self.inner.lock().unwrap().open_conns -= 1;
+    }
+
     /// One micro-batch of `size` requests dispatched to a worker.
     pub fn record_batch(&self, size: usize) {
         let mut c = self.inner.lock().unwrap();
@@ -314,13 +406,17 @@ impl Metrics {
     }
 
     /// Consistent snapshot; the caller supplies the allocator state
-    /// (occupancy + geometry) and the backend name.
+    /// (occupancy + geometry), the backend name, the admitted
+    /// in-flight gauge, and the front-end thread-pool geometry.
     pub fn snapshot(
         &self,
         backend: &str,
         occupancy: f64,
         slots: usize,
         slot_clusters: usize,
+        pending: u64,
+        reactor_threads: usize,
+        worker_threads: usize,
     ) -> StatsSnapshot {
         let c = self.inner.lock().unwrap();
         let uptime_s = self.started.elapsed().as_secs_f64().max(1e-9);
@@ -349,6 +445,12 @@ impl Metrics {
             occupancy,
             slots,
             slot_clusters,
+            rejected: c.rejected,
+            open_conns: c.open_conns.max(0) as u64,
+            pending,
+            reactor_threads,
+            worker_threads,
+            os_threads: os_threads(),
         }
     }
 }
@@ -408,10 +510,18 @@ mod tests {
         m.record_request(2e-3, Some(&rep));
         m.record_request(4e-3, None);
         m.record_error();
+        m.record_reject();
         m.record_batch(2);
-        let s = m.snapshot("sim", 0.25, 16, 32);
+        m.conn_opened();
+        m.conn_opened();
+        m.conn_closed();
+        let s = m.snapshot("sim", 0.25, 16, 32, 5, 2, 4);
         assert_eq!(s.requests, 2);
         assert_eq!(s.errors, 1);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.open_conns, 1);
+        assert_eq!(s.pending, 5);
+        assert_eq!((s.reactor_threads, s.worker_threads), (2, 4));
         assert_eq!(s.batches, 1);
         assert!((s.mean_batch - 2.0).abs() < 1e-12);
         assert!(s.energy_j > 0.0);
@@ -420,8 +530,35 @@ mod tests {
         // Wire round-trip.
         let back = StatsSnapshot::from_json(&s.to_json()).unwrap();
         assert_eq!(back, s);
+        // A legacy stats object (no gauge fields) still parses.
+        let legacy = {
+            let mut stripped = s.clone();
+            stripped.rejected = 0;
+            stripped.open_conns = 0;
+            stripped.pending = 0;
+            stripped.reactor_threads = 0;
+            stripped.worker_threads = 0;
+            stripped.os_threads = 0;
+            stripped
+        };
+        let mut v = s.to_json();
+        if let crate::util::json::Value::Obj(m) = &mut v {
+            for k in [
+                "rejected",
+                "open_conns",
+                "pending",
+                "reactor_threads",
+                "worker_threads",
+                "os_threads",
+            ] {
+                m.remove(k);
+            }
+        }
+        assert_eq!(StatsSnapshot::from_json(&v).unwrap(), legacy);
         // Table renders all core rows.
         let t = s.table();
         assert!(t.rows.iter().any(|r| r[0] == "sim energy / request"));
+        assert!(t.rows.iter().any(|r| r[0] == "os threads"));
+        assert!(t.rows.iter().any(|r| r[0] == "rejected (overloaded)"));
     }
 }

@@ -1,25 +1,42 @@
 //! The serve subsystem: a dependency-free (std-only) concurrent
-//! inference server in front of the artifact runtime, plus the
-//! closed-loop load generator that drives it — `manticore serve` /
-//! `manticore loadgen`.
+//! inference server in front of the artifact runtime, plus the load
+//! generator that drives it — `manticore serve` / `manticore
+//! loadgen`.
 //!
 //! Pipeline of one request:
 //!
 //! ```text
-//! TCP client ──line-JSON──▶ connection thread (parse + manifest check)
+//! TCP client ──line-JSON──▶ reactor thread (nonblocking socket,
+//!     │                     line framing, parse + manifest check,
+//!     │                     admission control: bounded in-flight
+//!     │                     budget, typed `overloaded` refusals)
 //!     │                                 │ enqueue
 //!     │                        micro-batching queue (same-artifact
 //!     │                        grouping within --batch-window-ms)
 //!     │                                 │ pop_batch
 //!     │                        worker thread: lease a ClusterSlot,
 //!     │                        compile-once executable cache,
-//!     │                        Executable::execute_placed per request
+//!     │                        Executable::execute_placed per request,
+//!     │                        encode reply, post completion
+//!     │                                 │ inbox
+//!     │                        reactor: per-connection write queue
+//!     │                        (in-order replies for pipelining,
+//!     │                        slow-reader backpressure)
 //!     ◀──line-JSON reply (outputs + slot + per-request sim report)
 //! ```
 //!
 //! * [`protocol`] — the newline-delimited JSON request/response format
 //!   (artifact name + input tensors in, outputs + placement + sim
-//!   summary out; `stats` and `shutdown` control ops).
+//!   summary out; typed error codes; `stats` and `shutdown` control
+//!   ops).
+//! * [`conn`] — the pure per-connection state machine: incremental
+//!   line framing, sequence-numbered in-order reply slots, partial
+//!   writes, high/low-watermark backpressure.
+//! * [`reactor`] — the fixed pool of readiness-loop threads
+//!   multiplexing every connection (`poll(2)` on Linux, a timed
+//!   condvar scan elsewhere), with an inbox per reactor for
+//!   connection handoff and async reply completions, and graceful
+//!   drain on shutdown.
 //! * [`placement`] — the cluster-slot allocator: leases disjoint
 //!   contiguous cluster ranges of the configured `SystemConfig`
 //!   (default 512 clusters ÷ 32-cluster slots = 16 concurrent leases),
@@ -27,15 +44,20 @@
 //!   time-weighted occupancy for the fleet stats.
 //! * [`batch`] — the micro-batching queue grouping same-artifact
 //!   requests within a configurable window so one worker/slot lease
-//!   amortizes over the group.
+//!   amortizes over the group; its [`batch::ReplyTo`] routes each
+//!   finished request back to the reactor (or a sync channel).
 //! * [`metrics`] — fleet-level aggregates: requests/s, latency
-//!   histogram (p50/p95), simulated J/request, batch sizes, occupancy.
-//! * [`server`] — the TCP front-end (thread per connection), worker
-//!   pool, executable cache, and shutdown sequencing.
-//! * [`loadgen`] — closed-loop clients with configurable concurrency,
-//!   a latency histogram, a numeric cross-check of one response
-//!   against a direct `Runtime` run, and a JSON report in the
-//!   `util::bench` schema (diffable with `manticore bench-diff`).
+//!   histogram (p50/p95), simulated J/request, batch sizes,
+//!   occupancy, plus front-end gauges (open connections, in-flight,
+//!   rejections, OS thread count).
+//! * [`server`] — wires it together: accept thread, reactor pool,
+//!   worker pool, executable cache, admission control, shutdown
+//!   sequencing.
+//! * [`loadgen`] — closed-loop clients (fixed concurrency) or
+//!   open-loop arrival schedule (`--rate`, immune to coordinated
+//!   omission), a latency histogram, a numeric cross-check of one
+//!   response against a direct `Runtime` run, and a JSON report in
+//!   the `util::bench` schema (diffable with `manticore bench-diff`).
 //!
 //! With `--backend sim` every response carries the per-request
 //! [`crate::coordinator::OpStreamReport`] priced on *that request's
@@ -44,10 +66,12 @@
 //! stats report simulated energy per request.
 
 pub mod batch;
+pub mod conn;
 pub mod loadgen;
 pub mod metrics;
 pub mod placement;
 pub mod protocol;
+pub mod reactor;
 pub mod server;
 
 pub use loadgen::{run_loadgen, LoadgenConfig, LoadgenReport};

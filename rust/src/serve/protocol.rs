@@ -11,13 +11,18 @@
 //! {"op":"shutdown"}         stop accepting, drain, print stats
 //! ```
 //!
-//! Replies are `{"ok":true,...}` / `{"ok":false,"error":"..."}`; a run
-//! reply carries the output tensors, the micro-batch size it rode in,
-//! the leased [`ClusterSlot`] and (sim backend) the per-request
-//! schedule summary. f64 payloads round-trip exactly: the JSON writer
-//! emits shortest-round-trip literals and the parser reads them back
-//! bit-identically, which is what lets `loadgen` cross-check a served
-//! response against a direct `Runtime` run.
+//! Replies are `{"ok":true,...}` /
+//! `{"ok":false,"code":"...","error":"..."}`; a run reply carries the
+//! output tensors, the micro-batch size it rode in, the leased
+//! [`ClusterSlot`] and (sim backend) the per-request schedule summary.
+//! Error replies are *typed* ([`ErrCode`]): a malformed line is
+//! `bad_request` (the connection stays open — one bad line never
+//! costs the session), admission-control refusals are `overloaded`
+//! and carry a `retry_after_ms` backpressure hint, and a draining
+//! server answers `shutting_down`. f64 payloads round-trip exactly:
+//! the JSON writer emits shortest-round-trip literals and the parser
+//! reads them back bit-identically, which is what lets `loadgen`
+//! cross-check a served response against a direct `Runtime` run.
 
 use crate::coordinator::OpStreamReport;
 use crate::runtime::Tensor;
@@ -95,6 +100,70 @@ fn slot_from_json(v: &Value) -> Result<ClusterSlot> {
         first_cluster: field("first_cluster")?,
         n_clusters: field("n_clusters")?,
     })
+}
+
+/// Machine-readable class of an error reply. Clients dispatch on the
+/// code (retry on `Overloaded`, give up on `ShuttingDown`, fix the
+/// request on the rest); the human-readable message is for logs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrCode {
+    /// The line failed to parse (bad JSON, unknown op, bad tensor
+    /// encoding). The connection stays open: one malformed line never
+    /// costs the session.
+    BadRequest,
+    /// `run` named an artifact missing from the server manifest.
+    UnknownArtifact,
+    /// Input tensors do not match the artifact's input spec.
+    BadInputs,
+    /// Admission control refused the request: the pending-request
+    /// budget is spent. The reply carries a `retry_after_ms` hint.
+    Overloaded,
+    /// The server is draining; no new work is accepted.
+    ShuttingDown,
+    /// Compile or execution failure inside the worker.
+    Internal,
+}
+
+impl ErrCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrCode::BadRequest => "bad_request",
+            ErrCode::UnknownArtifact => "unknown_artifact",
+            ErrCode::BadInputs => "bad_inputs",
+            ErrCode::Overloaded => "overloaded",
+            ErrCode::ShuttingDown => "shutting_down",
+            ErrCode::Internal => "internal",
+        }
+    }
+
+    /// Unknown / absent codes degrade to `Internal` so older peers
+    /// still parse.
+    fn from_code(s: &str) -> ErrCode {
+        match s {
+            "bad_request" => ErrCode::BadRequest,
+            "unknown_artifact" => ErrCode::UnknownArtifact,
+            "bad_inputs" => ErrCode::BadInputs,
+            "overloaded" => ErrCode::Overloaded,
+            "shutting_down" => ErrCode::ShuttingDown,
+            _ => ErrCode::Internal,
+        }
+    }
+}
+
+/// A typed error reply (`{"ok":false,"code":...,"error":...}`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ErrorReply {
+    pub code: ErrCode,
+    pub msg: String,
+    /// Backpressure hint [ms]: present on `Overloaded` replies — how
+    /// long the client should wait before retrying.
+    pub retry_after_ms: Option<f64>,
+}
+
+impl ErrorReply {
+    pub fn new(code: ErrCode, msg: impl Into<String>) -> ErrorReply {
+        ErrorReply { code, msg: msg.into(), retry_after_ms: None }
+    }
 }
 
 /// One client request.
@@ -229,10 +298,24 @@ pub enum Reply {
     Stats(StatsSnapshot),
     /// Ack for ping/shutdown.
     Ok,
-    Err(String),
+    Err(ErrorReply),
 }
 
 impl Reply {
+    /// A typed error reply.
+    pub fn err(code: ErrCode, msg: impl Into<String>) -> Reply {
+        Reply::Err(ErrorReply::new(code, msg))
+    }
+
+    /// The admission-control backpressure reply.
+    pub fn overloaded(retry_after_ms: f64) -> Reply {
+        Reply::Err(ErrorReply {
+            code: ErrCode::Overloaded,
+            msg: "server overloaded: pending-request budget spent"
+                .to_string(),
+            retry_after_ms: Some(retry_after_ms),
+        })
+    }
     /// Serialize as one JSON line (no trailing newline).
     pub fn to_line(&self) -> String {
         let v = match self {
@@ -267,10 +350,17 @@ impl Reply {
                 ("ok", Value::Bool(true)),
                 ("kind", Value::Str("ok".into())),
             ]),
-            Reply::Err(msg) => obj(vec![
-                ("ok", Value::Bool(false)),
-                ("error", Value::Str(msg.clone())),
-            ]),
+            Reply::Err(e) => {
+                let mut pairs = vec![
+                    ("ok", Value::Bool(false)),
+                    ("code", Value::Str(e.code.as_str().to_string())),
+                    ("error", Value::Str(e.msg.clone())),
+                ];
+                if let Some(ms) = e.retry_after_ms {
+                    pairs.push(("retry_after_ms", Value::Num(ms)));
+                }
+                obj(pairs)
+            }
         };
         json::write(&v)
     }
@@ -286,7 +376,18 @@ impl Reply {
                     .get("error")
                     .and_then(Value::as_str)
                     .unwrap_or("unknown server error");
-                return Ok(Reply::Err(msg.to_string()));
+                let code = v
+                    .get("code")
+                    .and_then(Value::as_str)
+                    .map(ErrCode::from_code)
+                    .unwrap_or(ErrCode::Internal);
+                return Ok(Reply::Err(ErrorReply {
+                    code,
+                    msg: msg.to_string(),
+                    retry_after_ms: v
+                        .get("retry_after_ms")
+                        .and_then(Value::as_f64),
+                }));
             }
             _ => bail!("reply missing 'ok'"),
         }
@@ -394,8 +495,74 @@ mod tests {
                 fpu_util: 0.8,
             }),
         });
-        for r in [run, Reply::Ok, Reply::Err("boom".into())] {
+        for r in [
+            run,
+            Reply::Ok,
+            Reply::err(ErrCode::Internal, "boom"),
+            Reply::err(ErrCode::BadRequest, "bad json"),
+            Reply::err(ErrCode::ShuttingDown, "draining"),
+            Reply::overloaded(12.5),
+        ] {
             assert_eq!(Reply::parse(&r.to_line()).unwrap(), r);
+        }
+    }
+
+    /// A malformed request line must map onto a parse error the server
+    /// can answer with a typed `bad_request` reply — and that reply
+    /// must round-trip with its code intact, so clients can tell "my
+    /// line was bad, the connection is still fine" from a server
+    /// failure.
+    #[test]
+    fn malformed_requests_map_to_typed_errors() {
+        for bad in [
+            "not json at all",
+            "{\"op\":\"dance\"}",
+            "{\"artifact\":\"m\"}",
+            "{\"op\":\"run\",\"artifact\":\"m\"}",
+            "{\"op\":\"run\",\"artifact\":\"m\",\"inputs\":[{\"dtype\":\
+             \"float64\"}]}",
+        ] {
+            let err = Request::parse(bad).expect_err("must not parse");
+            let reply =
+                Reply::err(ErrCode::BadRequest, format!("{err}"));
+            let back = Reply::parse(&reply.to_line()).unwrap();
+            match back {
+                Reply::Err(e) => {
+                    assert_eq!(e.code, ErrCode::BadRequest);
+                    assert!(e.retry_after_ms.is_none());
+                    assert!(!e.msg.is_empty());
+                }
+                other => panic!("expected error reply, got {other:?}"),
+            }
+        }
+    }
+
+    /// The overloaded reply carries its retry-after hint; a reply
+    /// with an unknown or absent code degrades to `Internal` instead
+    /// of failing to parse.
+    #[test]
+    fn error_codes_are_forward_compatible() {
+        let r = Reply::parse(
+            "{\"ok\":false,\"code\":\"overloaded\",\"error\":\"full\",\
+             \"retry_after_ms\":40}",
+        )
+        .unwrap();
+        match r {
+            Reply::Err(e) => {
+                assert_eq!(e.code, ErrCode::Overloaded);
+                assert_eq!(e.retry_after_ms, Some(40.0));
+            }
+            other => panic!("{other:?}"),
+        }
+        // Absent and unknown codes still parse (legacy peers).
+        for line in [
+            "{\"ok\":false,\"error\":\"old-style\"}",
+            "{\"ok\":false,\"code\":\"from_the_future\",\"error\":\"x\"}",
+        ] {
+            match Reply::parse(line).unwrap() {
+                Reply::Err(e) => assert_eq!(e.code, ErrCode::Internal),
+                other => panic!("{other:?}"),
+            }
         }
     }
 }

@@ -1,18 +1,26 @@
-//! The TCP front-end and worker pool behind `manticore serve`.
+//! The event-driven front-end and worker pool behind `manticore
+//! serve`.
 //!
-//! Thread structure: one accept thread, one detached thread per
-//! client connection (the protocol is blocking line-JSON), and a
-//! fixed worker pool draining the micro-batch queue. Workers lease a
-//! [`crate::system::ClusterSlot`] per batch and execute through
-//! `Executable::execute_placed`, so every in-flight batch occupies a
-//! disjoint part of the simulated machine and each request's reply
-//! carries its own schedule report. Executables are compiled once per
+//! Thread structure: one accept thread, a small fixed pool of
+//! reactor threads multiplexing *every* client connection
+//! ([`crate::serve::reactor`]), and a fixed worker pool draining the
+//! micro-batch queue — so total thread count is
+//! O(reactors + workers) no matter how many connections are open.
+//! Requests parse on the reactor, pass admission control (a bounded
+//! in-flight budget; refusals answer with a typed `overloaded`
+//! backpressure reply carrying `retry_after_ms`), and enter the
+//! [`BatchQueue`]. Workers lease a [`crate::system::ClusterSlot`]
+//! per batch, execute through `Executable::execute_placed`, encode
+//! the reply line on the worker thread, and post it back to the
+//! owning reactor, whose per-connection write queue restores request
+//! order for pipelined clients. Executables are compiled once per
 //! artifact into a shared cache.
 //!
 //! Shutdown: a `shutdown` request (or [`Server::shutdown`]) flips the
-//! stop flag, stops the queue (drain-then-end), and unblocks the
-//! accept loop with a self-connection; [`Server::wait`] joins the
-//! accept and worker threads and returns the final stats snapshot.
+//! stop flag, stops the queue (drain-then-end), signals every
+//! reactor to drain (stop reading, flush owed replies, close), and
+//! unblocks the accept loop with a self-connection; [`Server::wait`]
+//! joins accept + reactors + workers and returns the final stats.
 
 use crate::config::Config;
 use crate::runtime::sim::SimBackend;
@@ -20,19 +28,21 @@ use crate::runtime::{
     backend_by_name, check_inputs, load_manifest, ArtifactMeta, Backend,
     Executable, Tensor,
 };
-use crate::serve::batch::{BatchQueue, Pending, RunDone};
+use crate::serve::batch::{BatchQueue, Pending, ReplyTo, RunDone};
 use crate::serve::metrics::{Metrics, StatsSnapshot};
 use crate::serve::placement::SlotPool;
 use crate::serve::protocol::{
-    Reply, Request, RunReply, SimSummary, DEFAULT_PORT,
+    ErrCode, ErrorReply, Reply, Request, DEFAULT_PORT,
+};
+use crate::serve::reactor::{
+    CompletionHandle, Handler, Inbox, LineOutcome, Reactor,
 };
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -53,6 +63,11 @@ pub struct ServeConfig {
     pub slot_clusters: usize,
     /// Worker threads; 0 = one per slot, capped at 8.
     pub workers: usize,
+    /// Reactor (front-end I/O) threads; 0 = auto (cores/4, 1..=8).
+    pub reactor_threads: usize,
+    /// Admission budget: max run requests admitted but not yet
+    /// replied; 0 = auto (4 x workers x max_batch, at least 16).
+    pub max_pending: usize,
 }
 
 impl Default for ServeConfig {
@@ -65,6 +80,8 @@ impl Default for ServeConfig {
             max_batch: 8,
             slot_clusters: 32,
             workers: 0,
+            reactor_threads: 0,
+            max_pending: 0,
         }
     }
 }
@@ -103,6 +120,18 @@ struct Shared {
     metrics: Metrics,
     stopping: AtomicBool,
     addr: SocketAddr,
+    /// Admission gauge: requests admitted but not yet replied.
+    /// Incremented under `fetch_update` (so a burst cannot overshoot
+    /// the budget), decremented by [`ReplyTo::send`].
+    admitted: Arc<AtomicUsize>,
+    max_pending: usize,
+    /// Backpressure hint on `overloaded` replies [ms].
+    retry_after_ms: f64,
+    /// Reactor inboxes, filled once after the pool starts; shutdown
+    /// signals every reactor through these.
+    inboxes: Mutex<Vec<Arc<Inbox>>>,
+    n_reactors: usize,
+    n_workers: usize,
 }
 
 impl Shared {
@@ -128,17 +157,127 @@ impl Shared {
             self.pool.occupancy(),
             self.pool.n_slots(),
             self.pool.slot_clusters(),
+            self.admitted.load(Ordering::SeqCst) as u64,
+            self.n_reactors,
+            self.n_workers,
         )
     }
 
-    /// Idempotent shutdown trigger: stop the queue (drain-then-end)
-    /// and unblock the accept loop with a self-connection.
+    /// Idempotent shutdown trigger: stop the queue (drain-then-end),
+    /// signal every reactor to drain, and unblock the accept loop
+    /// with a self-connection.
     fn begin_shutdown(&self) {
         if self.stopping.swap(true, Ordering::SeqCst) {
             return;
         }
         self.queue.stop();
+        for ib in self.inboxes.lock().unwrap().iter() {
+            ib.begin_shutdown();
+        }
         let _ = TcpStream::connect(self.addr);
+    }
+
+    /// Validate, admit, and enqueue one `run` request; replies flow
+    /// back through the reactor asynchronously.
+    fn admit_run(
+        &self,
+        artifact: String,
+        inputs: Vec<Tensor>,
+        done: CompletionHandle,
+    ) -> LineOutcome {
+        let Some(meta) = self.manifest.get(&artifact) else {
+            self.metrics.record_error();
+            return LineOutcome::Reply(
+                Reply::err(
+                    ErrCode::UnknownArtifact,
+                    format!("unknown artifact '{artifact}' (not in manifest)"),
+                )
+                .to_line(),
+            );
+        };
+        if let Err(e) = check_inputs(self.backend.name(), meta, &inputs) {
+            self.metrics.record_error();
+            return LineOutcome::Reply(
+                Reply::err(ErrCode::BadInputs, format!("{e}")).to_line(),
+            );
+        }
+        // Admission control: refuse atomically once the in-flight
+        // budget is spent, instead of queueing without bound.
+        let admit = self.admitted.fetch_update(
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+            |n| {
+                if n >= self.max_pending {
+                    None
+                } else {
+                    Some(n + 1)
+                }
+            },
+        );
+        if admit.is_err() {
+            self.metrics.record_reject();
+            return LineOutcome::Reply(
+                Reply::overloaded(self.retry_after_ms).to_line(),
+            );
+        }
+        let pending = Pending {
+            artifact: artifact.clone(),
+            inputs,
+            enqueued: Instant::now(),
+            reply: ReplyTo::Reactor {
+                done,
+                artifact,
+                admitted: self.admitted.clone(),
+            },
+        };
+        if let Err(refused) = self.queue.push(pending) {
+            // Stopped between the flag check and the push: deliver the
+            // typed refusal through the normal completion path.
+            refused.reply.send(Err(ErrorReply::new(
+                ErrCode::ShuttingDown,
+                "server is shutting down",
+            )));
+        }
+        LineOutcome::Async
+    }
+}
+
+impl Handler for Shared {
+    fn handle_line(&self, line: &str, done: CompletionHandle) -> LineOutcome {
+        let req = match Request::parse(line) {
+            Ok(r) => r,
+            Err(e) => {
+                // One malformed line never costs the session: typed
+                // error, connection stays open.
+                self.metrics.record_error();
+                return LineOutcome::Reply(
+                    Reply::err(ErrCode::BadRequest, format!("{e}")).to_line(),
+                );
+            }
+        };
+        match req {
+            Request::Ping => LineOutcome::Reply(Reply::Ok.to_line()),
+            Request::Stats => {
+                LineOutcome::Reply(Reply::Stats(self.stats()).to_line())
+            }
+            Request::Shutdown => {
+                // The ack rides the normal write queue; the reactor
+                // flushes it during drain before closing.
+                self.begin_shutdown();
+                LineOutcome::Reply(Reply::Ok.to_line())
+            }
+            Request::Run { artifact, inputs } => {
+                self.admit_run(artifact, inputs, done)
+            }
+        }
+    }
+
+    fn on_conn_open(&self) {
+        self.metrics.conn_opened();
+    }
+
+    fn on_conn_close(&self) {
+        self.metrics.conn_closed();
     }
 }
 
@@ -146,11 +285,13 @@ impl Shared {
 pub struct Server {
     shared: Arc<Shared>,
     accept: Option<JoinHandle<()>>,
+    reactor: Option<Reactor>,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl Server {
-    /// Bind, spawn the worker pool and the accept thread.
+    /// Bind, spawn the worker pool, the reactor pool, and the accept
+    /// thread.
     pub fn start(cfg: &ServeConfig, sys: &Config) -> Result<Server> {
         let backend = build_backend(&cfg.backend, sys)?;
         let dir = PathBuf::from(&cfg.artifacts_dir);
@@ -165,14 +306,26 @@ impl Server {
             cfg.workers
         }
         .max(1);
+        let cores = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1);
+        // I/O is cheap relative to execution: a handful of reactors
+        // multiplexes thousands of sockets.
+        let n_reactors = if cfg.reactor_threads == 0 {
+            (cores / 4).clamp(1, 8)
+        } else {
+            cfg.reactor_threads
+        };
+        let max_pending = if cfg.max_pending == 0 {
+            (4 * n_workers * cfg.max_batch.max(1)).max(16)
+        } else {
+            cfg.max_pending
+        };
         // Divide the host's cores between the concurrent workers'
         // GEMMs: n_workers in-flight requests each spawning
         // all-core GEMM threads would oversubscribe the machine on
         // the exact req/s path serving cares about. An explicit
         // --native-threads / MANTICORE_NATIVE_THREADS setting wins.
-        let cores = std::thread::available_parallelism()
-            .map(|p| p.get())
-            .unwrap_or(1);
         crate::runtime::native::set_native_threads_if_unset(
             (cores / n_workers).max(1),
         );
@@ -189,6 +342,12 @@ impl Server {
             metrics: Metrics::new(),
             stopping: AtomicBool::new(false),
             addr,
+            admitted: Arc::new(AtomicUsize::new(0)),
+            max_pending,
+            retry_after_ms: (cfg.window_ms as f64 * 4.0).max(10.0),
+            inboxes: Mutex::new(Vec::new()),
+            n_reactors,
+            n_workers,
         });
         let workers = (0..n_workers)
             .map(|_| {
@@ -196,11 +355,20 @@ impl Server {
                 std::thread::spawn(move || worker_loop(&sh))
             })
             .collect();
+        let handler: Arc<dyn Handler> = shared.clone();
+        let reactor = Reactor::start(n_reactors, handler);
+        *shared.inboxes.lock().unwrap() = reactor.inboxes();
         let accept = {
             let sh = shared.clone();
-            std::thread::spawn(move || accept_loop(&sh, listener))
+            let registrar = reactor.registrar();
+            std::thread::spawn(move || accept_loop(&sh, listener, registrar))
         };
-        Ok(Server { shared, accept: Some(accept), workers })
+        Ok(Server {
+            shared,
+            accept: Some(accept),
+            reactor: Some(reactor),
+            workers,
+        })
     }
 
     /// The actually-bound address (resolves port 0).
@@ -220,6 +388,12 @@ impl Server {
         self.shared.stats()
     }
 
+    /// The admission-control budget: in-flight requests admitted
+    /// before new `run`s get a typed `overloaded` refusal.
+    pub fn max_pending(&self) -> usize {
+        self.shared.max_pending
+    }
+
     /// Trigger shutdown programmatically (same path as the protocol's
     /// `shutdown` request).
     pub fn shutdown(&self) {
@@ -231,6 +405,9 @@ impl Server {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
+        if let Some(mut r) = self.reactor.take() {
+            r.join();
+        }
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
@@ -238,16 +415,17 @@ impl Server {
     }
 }
 
-fn accept_loop(shared: &Arc<Shared>, listener: TcpListener) {
+fn accept_loop(
+    shared: &Arc<Shared>,
+    listener: TcpListener,
+    registrar: crate::serve::reactor::Registrar,
+) {
     for stream in listener.incoming() {
         if shared.stopping.load(Ordering::SeqCst) {
             break;
         }
         match stream {
-            Ok(s) => {
-                let sh = shared.clone();
-                std::thread::spawn(move || handle_conn(&sh, s));
-            }
+            Ok(s) => registrar.register(s),
             Err(_) => {
                 if shared.stopping.load(Ordering::SeqCst) {
                     break;
@@ -257,88 +435,8 @@ fn accept_loop(shared: &Arc<Shared>, listener: TcpListener) {
     }
 }
 
-/// One blocking line-JSON session.
-fn handle_conn(shared: &Arc<Shared>, stream: TcpStream) {
-    let reader = match stream.try_clone() {
-        Ok(s) => BufReader::new(s),
-        Err(_) => return,
-    };
-    let mut writer = stream;
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => break,
-        };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let reply = match Request::parse(&line) {
-            Err(e) => {
-                shared.metrics.record_error();
-                Reply::Err(format!("{e}"))
-            }
-            Ok(Request::Ping) => Reply::Ok,
-            Ok(Request::Stats) => Reply::Stats(shared.stats()),
-            Ok(Request::Shutdown) => {
-                // Ack first so the client sees the reply, then stop.
-                let _ = writeln!(writer, "{}", Reply::Ok.to_line());
-                shared.begin_shutdown();
-                return;
-            }
-            Ok(Request::Run { artifact, inputs }) => {
-                run_request(shared, artifact, inputs)
-            }
-        };
-        if writeln!(writer, "{}", reply.to_line()).is_err() {
-            break;
-        }
-    }
-}
-
-/// Validate, enqueue, and wait for the worker's result.
-fn run_request(
-    shared: &Shared,
-    artifact: String,
-    inputs: Vec<Tensor>,
-) -> Reply {
-    let Some(meta) = shared.manifest.get(&artifact) else {
-        shared.metrics.record_error();
-        return Reply::Err(format!(
-            "unknown artifact '{artifact}' (not in manifest)"
-        ));
-    };
-    if let Err(e) = check_inputs(shared.backend.name(), meta, &inputs) {
-        shared.metrics.record_error();
-        return Reply::Err(format!("{e}"));
-    }
-    let (tx, rx) = mpsc::channel();
-    let pending = Pending {
-        artifact: artifact.clone(),
-        inputs,
-        enqueued: Instant::now(),
-        reply: tx,
-    };
-    if !shared.queue.push(pending) {
-        return Reply::Err("server is shutting down".to_string());
-    }
-    match rx.recv() {
-        Ok(Ok(done)) => Reply::Run(RunReply {
-            artifact,
-            outputs: done.outputs,
-            server_us: done.server_us,
-            batch: done.batch,
-            slot: Some(done.slot),
-            sim: done.report.as_ref().map(SimSummary::of),
-        }),
-        Ok(Err(msg)) => Reply::Err(msg),
-        Err(_) => {
-            Reply::Err("worker dropped the request (server stopping)".into())
-        }
-    }
-}
-
 /// Worker: drain micro-batches, lease a slot per batch, execute each
-/// request on it, reply per request.
+/// request on it, post each reply back through its [`ReplyTo`].
 fn worker_loop(shared: &Shared) {
     while let Some(batch) = shared.queue.pop_batch() {
         if batch.is_empty() {
@@ -349,10 +447,10 @@ fn worker_loop(shared: &Shared) {
         let exe = match shared.executable(&batch[0].artifact) {
             Ok(e) => e,
             Err(e) => {
-                let msg = format!("{e}");
+                let err = ErrorReply::new(ErrCode::Internal, format!("{e}"));
                 for p in batch {
                     shared.metrics.record_error();
-                    let _ = p.reply.send(Err(msg.clone()));
+                    p.reply.send(Err(err.clone()));
                 }
                 continue;
             }
@@ -365,7 +463,7 @@ fn worker_loop(shared: &Shared) {
                     shared
                         .metrics
                         .record_request(server_s, out.report.as_ref());
-                    let _ = p.reply.send(Ok(RunDone {
+                    p.reply.send(Ok(RunDone {
                         outputs: out.outputs,
                         report: out.report,
                         slot: lease.slot,
@@ -375,7 +473,10 @@ fn worker_loop(shared: &Shared) {
                 }
                 Err(e) => {
                     shared.metrics.record_error();
-                    let _ = p.reply.send(Err(format!("{e}")));
+                    p.reply.send(Err(ErrorReply::new(
+                        ErrCode::Internal,
+                        format!("{e}"),
+                    )));
                 }
             }
         }
@@ -387,6 +488,7 @@ mod tests {
     use super::*;
     use crate::runtime::Runtime;
     use crate::util::rng::Rng;
+    use std::io::{BufRead, BufReader, Write};
 
     fn artifacts_present() -> bool {
         if std::path::Path::new("artifacts/manifest.json").exists() {
@@ -414,6 +516,9 @@ mod tests {
     impl Client {
         fn connect(addr: SocketAddr) -> Client {
             let stream = TcpStream::connect(addr).expect("connect");
+            stream
+                .set_read_timeout(Some(Duration::from_secs(30)))
+                .unwrap();
             Client {
                 reader: BufReader::new(stream.try_clone().unwrap()),
                 writer: stream,
@@ -422,10 +527,22 @@ mod tests {
 
         fn roundtrip(&mut self, req: &Request) -> Reply {
             writeln!(self.writer, "{}", req.to_line()).unwrap();
+            self.read_reply()
+        }
+
+        fn read_reply(&mut self) -> Reply {
             let mut line = String::new();
             self.reader.read_line(&mut line).unwrap();
             Reply::parse(&line).expect("parsable reply")
         }
+    }
+
+    fn matmul_inputs(seed: u64) -> Vec<Tensor> {
+        let mut rng = Rng::new(seed);
+        vec![
+            Tensor::F64(rng.normal_vec(64 * 64), vec![64, 64]),
+            Tensor::F64(rng.normal_vec(64 * 64), vec![64, 64]),
+        ]
     }
 
     #[test]
@@ -440,11 +557,7 @@ mod tests {
         let mut client = Client::connect(addr);
         assert_eq!(client.roundtrip(&Request::Ping), Reply::Ok);
 
-        let mut rng = Rng::new(42);
-        let inputs = vec![
-            Tensor::F64(rng.normal_vec(64 * 64), vec![64, 64]),
-            Tensor::F64(rng.normal_vec(64 * 64), vec![64, 64]),
-        ];
+        let inputs = matmul_inputs(42);
         let reply = client.roundtrip(&Request::Run {
             artifact: "matmul_f64_64".into(),
             inputs: inputs.clone(),
@@ -467,23 +580,37 @@ mod tests {
         let want = rt.execute("matmul_f64_64", &inputs).unwrap();
         assert_eq!(run.outputs, want);
 
-        // Error paths: unknown artifact, bad shapes, garbage line.
+        // Error paths are typed — and none of them costs the
+        // connection: unknown artifact, bad shapes, garbage line, all
+        // on the same session.
         let r = client.roundtrip(&Request::Run {
             artifact: "nope".into(),
             inputs: vec![],
         });
-        assert!(matches!(r, Reply::Err(ref m) if m.contains("unknown artifact")), "{r:?}");
+        assert!(
+            matches!(r, Reply::Err(ref e) if e.code == ErrCode::UnknownArtifact
+                && e.msg.contains("unknown artifact")),
+            "{r:?}"
+        );
         let r = client.roundtrip(&Request::Run {
             artifact: "matmul_f64_64".into(),
             inputs: vec![Tensor::F64(vec![0.0], vec![1])],
         });
-        assert!(matches!(r, Reply::Err(_)), "{r:?}");
+        assert!(
+            matches!(r, Reply::Err(ref e) if e.code == ErrCode::BadInputs),
+            "{r:?}"
+        );
         writeln!(client.writer, "garbage").unwrap();
-        let mut line = String::new();
-        client.reader.read_line(&mut line).unwrap();
-        assert!(matches!(Reply::parse(&line).unwrap(), Reply::Err(_)));
+        let r = client.read_reply();
+        assert!(
+            matches!(r, Reply::Err(ref e) if e.code == ErrCode::BadRequest),
+            "{r:?}"
+        );
+        // The session survived all three: ping still answers.
+        assert_eq!(client.roundtrip(&Request::Ping), Reply::Ok);
 
-        // Stats reflect the one completed request.
+        // Stats reflect the one completed request and the front-end
+        // gauges.
         let stats = match client.roundtrip(&Request::Stats) {
             Reply::Stats(s) => s,
             other => panic!("expected stats reply, got {other:?}"),
@@ -492,6 +619,14 @@ mod tests {
         // unknown artifact + bad shape + garbage line.
         assert_eq!(stats.errors, 3);
         assert_eq!(stats.backend, "native");
+        assert_eq!(stats.open_conns, 1);
+        assert!(stats.reactor_threads >= 1);
+        assert!(stats.worker_threads >= 1);
+        #[cfg(target_os = "linux")]
+        assert!(
+            stats.os_threads >= 3,
+            "accept + reactor + worker at minimum: {stats:?}"
+        );
 
         // Shutdown is acked, then the server winds down.
         assert_eq!(client.roundtrip(&Request::Shutdown), Reply::Ok);
@@ -508,11 +643,7 @@ mod tests {
         let server =
             Server::start(&ephemeral("sim"), &cfg).expect("server start");
         let mut client = Client::connect(server.addr());
-        let mut rng = Rng::new(7);
-        let inputs = vec![
-            Tensor::F64(rng.normal_vec(64 * 64), vec![64, 64]),
-            Tensor::F64(rng.normal_vec(64 * 64), vec![64, 64]),
-        ];
+        let inputs = matmul_inputs(7);
         let reply = client.roundtrip(&Request::Run {
             artifact: "matmul_f64_64".into(),
             inputs: inputs.clone(),
@@ -547,5 +678,94 @@ mod tests {
         assert_eq!(stats.requests, 1);
         assert!(stats.j_per_request > 0.0, "sim J/request in fleet stats");
         assert!(stats.occupancy > 0.0);
+    }
+
+    /// Pipelining a burst far past the admission budget must produce
+    /// typed `overloaded` replies with a retry hint — never unbounded
+    /// queueing, never a dropped request.
+    #[test]
+    fn overload_returns_typed_backpressure() {
+        if !artifacts_present() {
+            return;
+        }
+        let cfg = Config::default();
+        let mut scfg = ephemeral("native");
+        scfg.max_pending = 2;
+        scfg.workers = 1;
+        scfg.window_ms = 150;
+        scfg.max_batch = 64;
+        let server = Server::start(&scfg, &cfg).expect("server start");
+        let mut client = Client::connect(server.addr());
+        let line = Request::Run {
+            artifact: "matmul_f64_64".into(),
+            inputs: matmul_inputs(3),
+        }
+        .to_line();
+        const N: usize = 24;
+        for _ in 0..N {
+            writeln!(client.writer, "{line}").unwrap();
+        }
+        let (mut ok, mut rejected) = (0u64, 0u64);
+        for _ in 0..N {
+            match client.read_reply() {
+                Reply::Run(_) => ok += 1,
+                Reply::Err(e) => {
+                    assert_eq!(e.code, ErrCode::Overloaded, "{e:?}");
+                    let hint = e.retry_after_ms.expect("retry hint");
+                    assert!(hint > 0.0);
+                    rejected += 1;
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!(ok + rejected, N as u64, "every request got a reply");
+        assert!(ok >= 2, "admitted requests must complete (ok={ok})");
+        assert!(
+            rejected > 0,
+            "a budget of 2 must reject inside a {N}-burst"
+        );
+        let stats = match client.roundtrip(&Request::Stats) {
+            Reply::Stats(s) => s,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(stats.rejected, rejected);
+        assert_eq!(stats.requests, ok);
+        server.shutdown();
+        server.wait();
+    }
+
+    /// A `run` pipelined directly ahead of `shutdown` still completes:
+    /// the drain flushes the owed reply and the ack, then closes.
+    #[test]
+    fn shutdown_drains_in_flight_replies() {
+        if !artifacts_present() {
+            return;
+        }
+        let cfg = Config::default();
+        let mut scfg = ephemeral("native");
+        scfg.window_ms = 50;
+        let server = Server::start(&scfg, &cfg).expect("server start");
+        let mut client = Client::connect(server.addr());
+        let run_line = Request::Run {
+            artifact: "matmul_f64_64".into(),
+            inputs: matmul_inputs(11),
+        }
+        .to_line();
+        // One write, two pipelined requests.
+        writeln!(
+            client.writer,
+            "{run_line}\n{}",
+            Request::Shutdown.to_line()
+        )
+        .unwrap();
+        let r = client.read_reply();
+        assert!(matches!(r, Reply::Run(_)), "{r:?}");
+        assert_eq!(client.read_reply(), Reply::Ok);
+        // Then a clean EOF: drained, not reset.
+        let mut rest = String::new();
+        let n = client.reader.read_line(&mut rest).expect("clean EOF");
+        assert_eq!(n, 0, "expected EOF after drain, got {rest:?}");
+        let stats = server.wait();
+        assert_eq!(stats.requests, 1);
     }
 }

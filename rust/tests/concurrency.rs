@@ -3,12 +3,15 @@
 //! bit-identical outputs to a single-threaded run on both the native
 //! and sim backends, and (b) on the sim backend, hand every caller the
 //! schedule report of *its own* call (per-request independence), priced
-//! on the caller's own cluster slot.
+//! on the caller's own cluster slot. The last test closes the loop
+//! through the event-driven front-end: pipelined requests over real
+//! sockets come back in order and bit-identical to direct execution.
 
 use manticore::runtime::{backend_by_name, Backend, Executable};
 use manticore::runtime::{Runtime, Tensor};
 use manticore::system::ClusterSlot;
 use manticore::util::rng::Rng;
+use std::io::{BufRead, BufReader, Write};
 
 const N: usize = 24;
 
@@ -186,4 +189,100 @@ fn artifact_executables_are_thread_safe() {
             assert!(out.report.is_some());
         }
     }
+}
+
+/// End to end through the reactor front-end: several connections each
+/// pipeline a burst of requests (all writes up front, reads after), and
+/// every reply is bit-identical to executing the same inputs directly
+/// on the compiled artifact — i.e. the nonblocking framing, admission
+/// path, micro-batching, and per-connection in-order write queue
+/// preserve the numerics and the request order exactly (skips without
+/// artifacts/).
+#[test]
+fn reactor_server_replies_are_bit_identical_to_direct_execution() {
+    use manticore::config::Config;
+    use manticore::serve::protocol::{Reply, Request};
+    use manticore::serve::{ServeConfig, Server};
+
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        return;
+    }
+    let text = std::fs::read_to_string("artifacts/matmul_f64_64.hlo.txt")
+        .unwrap();
+    let exe = backend_by_name("native")
+        .unwrap()
+        .compile("matmul_f64_64", &text)
+        .unwrap();
+    let inputs_for = |client: u64, i: u64| -> Vec<Tensor> {
+        let mut rng = Rng::new(9000 + (client << 16) + i);
+        vec![
+            Tensor::F64(rng.normal_vec(64 * 64), vec![64, 64]),
+            Tensor::F64(rng.normal_vec(64 * 64), vec![64, 64]),
+        ]
+    };
+
+    let server = Server::start(
+        &ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            // One reactor thread multiplexing all the connections makes
+            // the O(reactors + workers) claim load-bearing here.
+            reactor_threads: 1,
+            ..ServeConfig::default()
+        },
+        &Config::default(),
+    )
+    .expect("server start");
+    let addr = server.addr();
+
+    std::thread::scope(|s| {
+        for client in 0..THREADS {
+            let exe = &exe;
+            s.spawn(move || {
+                let stream = std::net::TcpStream::connect(addr).unwrap();
+                stream
+                    .set_read_timeout(Some(std::time::Duration::from_secs(30)))
+                    .unwrap();
+                let mut reader =
+                    BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                // Pipeline the whole burst before reading anything.
+                for i in 0..ITERS as u64 {
+                    let req = Request::Run {
+                        artifact: "matmul_f64_64".to_string(),
+                        inputs: inputs_for(client, i),
+                    };
+                    writeln!(writer, "{}", req.to_line()).unwrap();
+                }
+                // Replies must come back in request order, each
+                // bit-identical to a direct run of the same inputs.
+                for i in 0..ITERS as u64 {
+                    let mut line = String::new();
+                    let n = reader.read_line(&mut line).unwrap();
+                    assert!(n > 0, "client {client}: early EOF at reply {i}");
+                    let want = exe.execute(&inputs_for(client, i)).unwrap();
+                    match Reply::parse(&line).unwrap() {
+                        Reply::Run(run) => assert_eq!(
+                            run.outputs, want,
+                            "client {client} reply {i}: outputs diverged"
+                        ),
+                        other => panic!(
+                            "client {client} reply {i}: unexpected {other:?}"
+                        ),
+                    }
+                }
+            });
+        }
+    });
+
+    // Shut the server down and confirm every pipelined request landed.
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writeln!(writer, "{}", Request::Shutdown.to_line()).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let stats = server.wait();
+    assert_eq!(stats.requests, THREADS * ITERS as u64);
+    assert_eq!(stats.errors, 0);
 }
