@@ -10,7 +10,7 @@ PYTHON ?= python3
 BENCH_OUT ?= bench-results
 
 .PHONY: help build test artifacts fmt fmt-check clippy bench bench-smoke \
-        perf serve-smoke lower-smoke pytest clean
+        perf serve-smoke trace-smoke lower-smoke pytest clean
 
 help:
 	@echo "targets:"
@@ -21,7 +21,8 @@ help:
 	@echo "  fmt-check    cargo fmt --check"
 	@echo "  clippy       cargo clippy --all-targets -- -D warnings"
 	@echo "  bench        run every bench target"
-	@echo "  bench-smoke  perf_hotpath + native_exec + sim_price run through"
+	@echo "  bench-smoke  perf_hotpath + native_exec + sim_price + obs_overhead"
+	@echo "               run through"
 	@echo "               scripts/bench_ab.sh: interleaved HEAD-vs-baseline A/B"
 	@echo "               rounds (baseline binary stashed in $(BENCH_OUT)/bin/),"
 	@echo "               per-iteration samples pooled with 'manticore"
@@ -43,7 +44,13 @@ help:
 	@echo "               then a 512-connection open-loop burst at a fixed"
 	@echo "               arrival rate ($(BENCH_OUT)/serve_highconn.json) —"
 	@echo "               the reactor front-end must absorb both with a"
-	@echo "               pool-sized thread count — then shut the server down"
+	@echo "               pool-sized thread count — then shut the server down;"
+	@echo "               the server runs with --trace-out, and the exported"
+	@echo "               span trace is validated with 'manticore trace-check'"
+	@echo "  trace-smoke  'manticore trace matmul_f64_64': price the sim schedule"
+	@echo "               and render it as a virtual-time Perfetto/Chrome trace"
+	@echo "               ($(BENCH_OUT)/virtual_trace.json), then validate it"
+	@echo "               with 'manticore trace-check'"
 	@echo "  pytest       python L1/L2 tests (skip cleanly when JAX absent)"
 	@echo "  clean        remove build products"
 
@@ -69,7 +76,9 @@ bench:
 	$(CARGO) bench
 
 # Statistical interleaved A/B perf gate (scripts/bench_ab.sh): each
-# hotpath bench (perf_hotpath, native_exec, sim_price) alternates the
+# hotpath bench (perf_hotpath, native_exec, sim_price, obs_overhead —
+# the last one is what holds the obs layer's disabled-path cost under
+# the gate) alternates the
 # HEAD bench binary with the baseline binary stashed under
 # $(BENCH_OUT)/bin/ by the previous accepted run, pools each side's
 # per-iteration samples with `manticore bench-merge`, and gates with
@@ -83,7 +92,7 @@ bench:
 # its previous JSON (its smoke timings are noisy).
 bench-smoke:
 	mkdir -p $(BENCH_OUT)
-	@for f in perf_hotpath native_exec sim_price; do \
+	@for f in perf_hotpath native_exec sim_price obs_overhead; do \
 	  echo "== $$f: interleaved A/B (3 rounds, gate 25% + Welch p<0.01) =="; \
 	  CARGO="$(CARGO)" sh scripts/bench_ab.sh $$f $(BENCH_OUT) 3 0.25 \
 	    || exit 1; \
@@ -120,11 +129,17 @@ perf:
 #      embedded for the CI assertion.
 # loadgen exits non-zero when no request completes or the numeric
 # cross-check fails; the second burst's --shutdown winds the server
-# down and `wait` collects it.
+# down and `wait` collects it. The server runs with span tracing on
+# (--trace-out) and per-request stage timing echoes (--debug-timing):
+# on shutdown it writes the buffered spans of the whole 512-connection
+# burst as $(BENCH_OUT)/serve_trace.json, which `manticore trace-check`
+# then validates as Chrome-trace-event JSON (CI uploads it — drop the
+# file on ui.perfetto.dev to see the burst's request timeline).
 SERVE_PORT ?= 7433
 serve-smoke: build
 	mkdir -p $(BENCH_OUT)
-	./target/release/manticore serve --port $(SERVE_PORT) --backend sim & \
+	./target/release/manticore serve --port $(SERVE_PORT) --backend sim \
+	  --trace-out $(BENCH_OUT)/serve_trace.json --debug-timing & \
 	server_pid=$$!; \
 	sleep 2; \
 	./target/release/manticore loadgen --addr 127.0.0.1:$(SERVE_PORT) \
@@ -136,6 +151,17 @@ serve-smoke: build
 	  --rate 250 --json $(BENCH_OUT)/serve_highconn.json --shutdown \
 	  || { kill $$server_pid 2>/dev/null; exit 1; }; \
 	wait $$server_pid
+	./target/release/manticore trace-check $(BENCH_OUT)/serve_trace.json
+
+# Virtual-time trace smoke: price the sim schedule for one artifact and
+# render it as a per-slot Perfetto timeline (DMA vs compute vs fused
+# slices + the fpu_util counter track), then validate the JSON. This is
+# the offline twin of serve-smoke's wall-clock trace.
+trace-smoke: build
+	mkdir -p $(BENCH_OUT)
+	./target/release/manticore trace matmul_f64_64 \
+	  --out $(BENCH_OUT)/virtual_trace.json
+	./target/release/manticore trace-check $(BENCH_OUT)/virtual_trace.json
 
 # Lowering smoke: `manticore lower all --check` compiles every
 # checked-in artifact through the pass pipeline, runs one calibration

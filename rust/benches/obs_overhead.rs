@@ -1,0 +1,125 @@
+//! obs_overhead bench: the cost of the observability layer (DESIGN.md
+//! §2g), in two tiers.
+//!
+//! 1. Primitive costs — a disabled span (one relaxed atomic load), an
+//!    enabled span (ring push), a counter increment, and a histogram
+//!    record — measured in tight loops so regressions in the
+//!    per-event constants show up directly.
+//! 2. The end-to-end claim — `execute_planned` on the dot-heavy
+//!    artifact with tracing off vs on. The off sample rides the
+//!    Welch-gated `bench-diff` A/B in CI, which is what enforces the
+//!    "<1% disabled-path overhead" acceptance bar: instrumented code
+//!    with tracing off must be statistically indistinguishable from
+//!    the pre-obs baseline.
+//!
+//! `--smoke` caps iterations (CI smoke job); `--json <path>` writes
+//! the sample report for `manticore bench-diff`.
+
+use manticore::obs;
+use manticore::runtime::native::NativeBackend;
+use manticore::runtime::{inputs_for_meta, load_manifest};
+use manticore::util::bench::{fmt_ns, BenchOpts, Report};
+use std::path::Path;
+
+/// Events per bench closure for the primitive-cost samples: large
+/// enough that the sample timer measures the primitive, not the
+/// harness.
+const BATCH: u64 = 1024;
+
+fn main() {
+    let mut rep = Report::new(BenchOpts::from_env_args());
+
+    // -- Tier 1: primitive costs (per BATCH events) -------------------
+    obs::set_tracing(false);
+    rep.bench("obs_overhead/span_disabled", || {
+        for i in 0..BATCH {
+            let mut sp = obs::span("bench.noop", "bench");
+            sp.arg("i", i as f64);
+            std::hint::black_box(&sp);
+        }
+    });
+
+    obs::set_tracing(true);
+    rep.bench("obs_overhead/span_enabled", || {
+        for i in 0..BATCH {
+            let mut sp = obs::span("bench.noop", "bench");
+            sp.arg("i", i as f64);
+            std::hint::black_box(&sp);
+        }
+    });
+    obs::set_tracing(false);
+    // Throw away the ring contents so the next enabled-path user
+    // starts from an empty window.
+    let chunk = obs::drain();
+    println!(
+        "  -> enabled-span sample buffered {} events ({} evicted)\n",
+        chunk.events.len(),
+        chunk.dropped
+    );
+
+    let ctr = obs::counter("bench.obs_overhead.ticks");
+    rep.bench("obs_overhead/counter_inc", || {
+        for _ in 0..BATCH {
+            ctr.inc();
+        }
+        std::hint::black_box(ctr.get());
+    });
+
+    let hist = obs::histogram("bench.obs_overhead.lat_us");
+    rep.bench("obs_overhead/hist_record", || {
+        for i in 0..BATCH {
+            hist.record(i);
+        }
+        std::hint::black_box(hist.count());
+    });
+
+    // -- Tier 2: instrumented hot path, tracing off vs on -------------
+    let manifest = match load_manifest(Path::new("artifacts"), "bench") {
+        Ok(m) => m,
+        Err(e) => {
+            println!("(skipping obs_overhead exec tier: {e})");
+            rep.finish().expect("writing bench report");
+            return;
+        }
+    };
+    let name = "matmul_f64_64";
+    let (Some(meta), Ok(text)) = (
+        manifest.get(name),
+        std::fs::read_to_string(format!("artifacts/{name}.hlo.txt")),
+    ) else {
+        println!("(skipping obs_overhead exec tier: {name} unavailable)");
+        rep.finish().expect("writing bench report");
+        return;
+    };
+    let exe = NativeBackend::new()
+        .compile_native(name, &text)
+        .expect("compile");
+    let inputs = inputs_for_meta(meta, 3).expect("manifest dtype");
+
+    obs::set_tracing(false);
+    exe.execute_planned(&inputs).expect("warmup");
+    let off = rep.bench("obs_overhead/exec_tracing_off", || {
+        std::hint::black_box(exe.execute_planned(&inputs).unwrap());
+    });
+
+    obs::set_tracing(true);
+    exe.execute_planned(&inputs).expect("warmup");
+    let on = rep.bench("obs_overhead/exec_tracing_on", || {
+        std::hint::black_box(exe.execute_planned(&inputs).unwrap());
+    });
+    obs::set_tracing(false);
+    let chunk = obs::drain();
+
+    println!(
+        "  -> {name}: tracing off {} ± {} vs on {} ± {} \
+         ({:+.2}% enabled cost, {} spans buffered)\n",
+        fmt_ns(off.mean_ns),
+        fmt_ns(off.stddev_ns),
+        fmt_ns(on.mean_ns),
+        fmt_ns(on.stddev_ns),
+        (on.mean_ns / off.mean_ns.max(1.0) - 1.0) * 100.0,
+        chunk.events.len(),
+    );
+
+    rep.finish().expect("writing bench report");
+}

@@ -29,6 +29,7 @@ pub mod interconnect;
 pub mod isa;
 pub mod lower;
 pub mod mem;
+pub mod obs;
 pub mod power;
 pub mod repro;
 pub mod roofline;

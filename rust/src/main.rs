@@ -4,7 +4,12 @@
 //!   repro <fig5|fig6|fig8|fig9|fig10|fig3|area|peaks|simops|all>
 //!   run <artifact> [--iters N]          execute an AOT artifact
 //!   serve [--port P] [--backend B]      concurrent batching inference server
+//!         [--trace-out f.json] [--debug-timing]
 //!   loadgen [--concurrency N] [--requests N] [--rate R]   load generator
+//!   stats [--addr A] [--format json|prometheus]   query a running server
+//!   trace <artifact> [--out f.json]     virtual-time Perfetto trace of the
+//!                                       priced sim schedule
+//!   trace-check <file.json>             validate a Chrome-trace JSON file
 //!   simulate gemm --m --k --n           schedule a GEMM on the system model
 //!   simulate kernel --name <dot|matvec|gemm|axpy>   cycle-level run
 //!   train [--steps N] [--lr F]          tiny end-to-end training loop
@@ -87,6 +92,9 @@ fn run_cli() -> Result<()> {
         Some("lower") => cmd_lower(&args, &artifacts_dir, &cfg),
         Some("serve") => cmd_serve(&args, &artifacts_dir, &cfg),
         Some("loadgen") => cmd_loadgen(&args, &artifacts_dir),
+        Some("stats") => cmd_stats(&args),
+        Some("trace") => cmd_trace(&args, &artifacts_dir, &cfg),
+        Some("trace-check") => cmd_trace_check(&args),
         Some("simulate") => cmd_simulate(&args, &cfg),
         Some("train") => cmd_train(&args, &artifacts_dir, &cfg),
         Some("backends") => cmd_backends(),
@@ -111,11 +119,22 @@ fn print_help() {
          lower <artifact|all> [--check] [--stats out.md] [--ops N]\n  \
          serve [--port 7433] [--host 127.0.0.1] [--batch-window-ms 2]\n        \
          [--max-batch 8] [--slot-clusters 32] [--workers N]\n        \
-         [--reactor-threads N] [--max-pending N]\n  \
+         [--reactor-threads N] [--max-pending N]\n        \
+         [--trace-out f.json] (record spans; write Perfetto JSON on\n        \
+         shutdown; clients can flush early with {{\"op\":\"trace\"}})\n        \
+         [--debug-timing] (echo queue/execute µs into run replies)\n  \
          loadgen [--addr 127.0.0.1:7433] [--artifact NAME] \
          [--concurrency 8]\n          \
          [--requests 100] [--rate R] [--json out.json] [--shutdown]\n          \
-         (--rate R > 0: open-loop fixed arrival schedule @ R req/s)\n  \
+         (--rate R > 0: open-loop fixed arrival schedule @ R req/s;\n          \
+         against a --debug-timing server the report adds per-stage\n          \
+         queue-wait / execute / reply-flush percentiles)\n  \
+         stats [--addr 127.0.0.1:7433] [--format json|prometheus]\n  \
+         trace <artifact> [--out NAME.trace.json] [--slots 4] [--seed 0]\n        \
+         (virtual-time Perfetto trace of the priced sim schedule:\n        \
+         one track per cluster slot, DMA/compute/fused slices,\n        \
+         FPU-util counter track)\n  \
+         trace-check <file.json> (validate Chrome-trace-event JSON)\n  \
          simulate gemm --m M --k K --n N | simulate kernel --name <..>\n  \
          train [--steps N] [--lr F]\n  \
          backends\n  \
@@ -149,6 +168,8 @@ fn cmd_serve(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> 
         workers: args.get_usize("workers", 0)?,
         reactor_threads: args.get_usize("reactor-threads", 0)?,
         max_pending: args.get_usize("max-pending", 0)?,
+        trace_out: args.get("trace-out").map(str::to_string),
+        debug_timing: args.has_flag("debug-timing"),
     };
     let server = Server::start(&serve_cfg, cfg)?;
     println!(
@@ -176,9 +197,127 @@ fn cmd_serve(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> 
         startup.reactor_threads,
         server.max_pending()
     );
+    if let Some(path) = &serve_cfg.trace_out {
+        println!(
+            "  tracing: spans on, Perfetto JSON -> {path} at shutdown \
+             (or flush early with {{\"op\":\"trace\"}})"
+        );
+    }
+    if serve_cfg.debug_timing {
+        println!("  debug-timing: run replies echo queue/execute µs");
+    }
     println!("  stop with: {{\"op\":\"shutdown\"}} or `manticore loadgen --shutdown`");
     let stats = server.wait();
+    if let Some(path) = &serve_cfg.trace_out {
+        let trace = manticore::obs::drain_chrome_trace();
+        std::fs::write(path, json::write(&trace))
+            .with_context(|| format!("writing trace {path}"))?;
+        println!("wrote span trace to {path} (open in ui.perfetto.dev)");
+    }
     stats.table().print();
+    Ok(())
+}
+
+/// `manticore stats` — query a running server's fleet stats over one
+/// connection, as the human table (json wire format) or Prometheus
+/// text exposition.
+fn cmd_stats(args: &cli::Args) -> Result<()> {
+    use manticore::serve::protocol::{Reply, Request, StatsFormat};
+    use std::io::{BufRead, BufReader, Write};
+
+    let addr = args.get_or(
+        "addr",
+        &format!("127.0.0.1:{}", manticore::serve::protocol::DEFAULT_PORT),
+    );
+    let format = match args.get_or("format", "json").as_str() {
+        "prometheus" => StatsFormat::Prometheus,
+        "json" => StatsFormat::Json,
+        other => bail!("unknown stats format '{other}' (json|prometheus)"),
+    };
+    let stream = std::net::TcpStream::connect(&addr)
+        .with_context(|| format!("connecting to {addr}"))?;
+    let mut reader =
+        BufReader::new(stream.try_clone().context("cloning stream")?);
+    let mut writer = stream;
+    writeln!(writer, "{}", Request::Stats { format }.to_line())
+        .context("sending stats request")?;
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading stats reply")?;
+    match Reply::parse(&line)? {
+        Reply::Stats(s) => s.table().print(),
+        Reply::Text(t) => print!("{t}"),
+        Reply::Err(e) => bail!("server error: {}", e.msg),
+        other => bail!("unexpected reply {other:?}"),
+    }
+    Ok(())
+}
+
+/// `manticore trace <artifact>` — compile the artifact through the sim
+/// backend, price its fused schedule, and export the result as a
+/// *virtual-time* Perfetto trace: simulated microseconds, one
+/// compute + one DMA track per cluster slot, and the per-op FPU
+/// utilization as a counter track. The written file is validated
+/// before this returns.
+fn cmd_trace(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> {
+    let Some(arg) = args.positional.first() else {
+        bail!(
+            "usage: manticore trace <artifact> [--out f.json] \
+             [--slots 4] [--seed 0]"
+        );
+    };
+    let (dir, name) = resolve_artifact(arg, artifacts_dir);
+    let manifest = load_manifest(std::path::Path::new(&dir), "trace")?;
+    let meta = manifest
+        .get(&name)
+        .with_context(|| format!("artifact '{name}' not in {dir}/manifest.json"))?;
+    let backend = SimBackend::from_config(cfg);
+    let path = format!("{dir}/{name}.hlo.txt");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {path}"))?;
+    let exe = backend.compile_sim(&name, &text)?;
+    let inputs = inputs_for_meta(meta, args.get_usize("seed", 0)? as u64)?;
+    // One calibration execution resolves dynamic trip counts, then the
+    // compiled schedule is priced once — same pipeline as `lower`.
+    let (_outputs, profile) = exe.profile_execution(&inputs)?;
+    let report = exe.price_compiled(Some(&profile), true)?;
+    let slots = args.get_usize("slots", 4)?.max(1);
+    let trace = manticore::obs::virt::virtual_trace(&report, slots);
+    let out = args.get_or("out", &format!("{name}.trace.json"));
+    let rendered = json::write(&trace);
+    let summary = manticore::obs::validate_chrome_trace(&rendered)
+        .map_err(|e| anyhow::anyhow!("generated trace is invalid: {e}"))?;
+    std::fs::write(&out, &rendered)
+        .with_context(|| format!("writing {out}"))?;
+    println!(
+        "{name}: {} ops over {slots} slot(s) -> {out} ({} events: {} \
+         slices, {} counter samples; virtual time {:.3} ms, FPU util \
+         {:.1} %)",
+        report.ops.len(),
+        summary.events,
+        summary.spans,
+        summary.counters,
+        report.total_time_s * 1e3,
+        report.fpu_util * 100.0
+    );
+    println!("open in ui.perfetto.dev or chrome://tracing");
+    Ok(())
+}
+
+/// `manticore trace-check <file>` — validate a Chrome-trace-event JSON
+/// file (the CI guard that exported traces actually load in Perfetto).
+fn cmd_trace_check(args: &cli::Args) -> Result<()> {
+    let Some(path) = args.positional.first() else {
+        bail!("usage: manticore trace-check <file.json>");
+    };
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {path}"))?;
+    let s = manticore::obs::validate_chrome_trace(&text)
+        .map_err(|e| anyhow::anyhow!("{path}: invalid chrome trace: {e}"))?;
+    println!(
+        "{path}: valid chrome trace — {} events ({} spans, {} counter \
+         samples, {} metadata)",
+        s.events, s.spans, s.counters, s.metadata
+    );
     Ok(())
 }
 

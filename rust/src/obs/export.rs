@@ -1,0 +1,224 @@
+//! Chrome-trace-event JSON export and validation.
+//!
+//! The export target is the JSON Object Format of the Trace Event
+//! spec — `{"traceEvents":[...]}` — which both chrome://tracing and
+//! Perfetto load directly. Spans drain as `ph:"X"` complete events
+//! (one object per span: start `ts` + `dur`, microseconds), each
+//! carrying its span/parent/request ids in `args` so the request tree
+//! survives the export; thread names ride as `ph:"M"` metadata
+//! events. [`validate_chrome_trace`] is the shape checker behind
+//! `manticore trace-check` (CI runs it on the serve-smoke export).
+
+use crate::obs::span::{drain, Event, TraceChunk};
+use crate::util::json::{self, Value};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+fn obj(fields: Vec<(&str, Value)>) -> Value {
+    Value::Obj(
+        fields
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+fn meta_event(pid: u64, tid: u64, name: &str, value: &str) -> Value {
+    obj(vec![
+        ("ph", Value::Str("M".into())),
+        ("pid", Value::Num(pid as f64)),
+        ("tid", Value::Num(tid as f64)),
+        ("name", Value::Str(name.into())),
+        (
+            "args",
+            obj(vec![("name", Value::Str(value.into()))]),
+        ),
+    ])
+}
+
+fn span_event(pid: u64, e: &Event) -> Value {
+    let mut args = vec![
+        ("span", Value::Num(e.id as f64)),
+        ("parent", Value::Num(e.parent as f64)),
+        ("req", Value::Num(e.req as f64)),
+    ];
+    for (k, v) in &e.args {
+        args.push((*k, Value::Num(*v)));
+    }
+    obj(vec![
+        ("ph", Value::Str("X".into())),
+        ("pid", Value::Num(pid as f64)),
+        ("tid", Value::Num(e.tid as f64)),
+        ("name", Value::Str(e.name.into())),
+        ("cat", Value::Str(e.cat.into())),
+        ("ts", Value::Num(e.ts_us as f64)),
+        ("dur", Value::Num(e.dur_us.max(1) as f64)),
+        ("args", obj(args)),
+    ])
+}
+
+/// Render one drained [`TraceChunk`] as a Chrome-trace object.
+pub fn chrome_trace(chunk: &TraceChunk) -> Value {
+    const PID: u64 = 1;
+    let mut events =
+        vec![meta_event(PID, 0, "process_name", "manticore")];
+    for (tid, name) in &chunk.threads {
+        events.push(meta_event(PID, *tid, "thread_name", name));
+    }
+    for e in &chunk.events {
+        events.push(span_event(PID, e));
+    }
+    obj(vec![
+        ("traceEvents", Value::Arr(events)),
+        ("displayTimeUnit", Value::Str("ms".into())),
+        ("droppedEvents", Value::Num(chunk.dropped as f64)),
+    ])
+}
+
+/// Drain every ring and render the result (the `--trace-out` /
+/// `trace` protocol-op path).
+pub fn drain_chrome_trace() -> Value {
+    chrome_trace(&drain())
+}
+
+/// What [`validate_chrome_trace`] verified (and `trace-check` prints).
+#[derive(Debug, Default, PartialEq)]
+pub struct TraceSummary {
+    pub events: usize,
+    pub spans: usize,
+    pub counters: usize,
+    pub metadata: usize,
+}
+
+/// Check that `text` is structurally valid Chrome-trace-event JSON:
+/// an object with a `traceEvents` array whose members each carry a
+/// known `ph`, a string `name`, numeric `pid`/`tid`, a numeric
+/// non-negative `ts` (except metadata), and `dur` on complete events.
+pub fn validate_chrome_trace(text: &str) -> Result<TraceSummary> {
+    let v = json::parse(text)
+        .map_err(|e| anyhow::anyhow!("trace is not valid JSON: {e}"))?;
+    let events = match v.get("traceEvents").and_then(Value::as_arr) {
+        Some(a) => a,
+        None => bail!("top-level object has no traceEvents array"),
+    };
+    let mut sum = TraceSummary::default();
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow::anyhow!("event {i}: missing ph"))?;
+        if ev.get("name").and_then(Value::as_str).is_none() {
+            bail!("event {i} (ph {ph}): missing string name");
+        }
+        for key in ["pid", "tid"] {
+            if ev.get(key).and_then(Value::as_f64).is_none() {
+                bail!("event {i} (ph {ph}): missing numeric {key}");
+            }
+        }
+        match ph {
+            "M" => sum.metadata += 1,
+            "X" | "B" | "E" | "C" | "i" | "I" => {
+                let ts = ev
+                    .get("ts")
+                    .and_then(Value::as_f64)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("event {i} (ph {ph}): missing ts")
+                    })?;
+                if !ts.is_finite() || ts < 0.0 {
+                    bail!("event {i} (ph {ph}): bad ts {ts}");
+                }
+                match ph {
+                    "X" => {
+                        let dur =
+                            ev.get("dur").and_then(Value::as_f64).ok_or_else(
+                                || {
+                                    anyhow::anyhow!(
+                                        "event {i}: X event missing dur"
+                                    )
+                                },
+                            )?;
+                        if !dur.is_finite() || dur < 0.0 {
+                            bail!("event {i}: bad dur {dur}");
+                        }
+                        sum.spans += 1;
+                    }
+                    "C" => sum.counters += 1,
+                    _ => sum.spans += 1,
+                }
+            }
+            other => bail!("event {i}: unknown ph {other:?}"),
+        }
+        sum.events += 1;
+    }
+    if sum.events == 0 {
+        bail!("traceEvents is empty");
+    }
+    Ok(sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::{
+        new_request_ctx, set_tracing, span, span_with, test_lock,
+    };
+
+    #[test]
+    fn drained_spans_export_as_valid_chrome_trace() {
+        let _g = test_lock();
+        set_tracing(true);
+        let ctx = new_request_ctx();
+        {
+            let _outer = span_with("request", "serve", ctx);
+            let _inner = span("execute", "serve");
+        }
+        set_tracing(false);
+        let trace = drain_chrome_trace();
+        let text = json::write(&trace);
+        let sum = validate_chrome_trace(&text).expect("valid trace");
+        assert!(sum.spans >= 2, "{sum:?}");
+        assert!(sum.metadata >= 1, "{sum:?}");
+        // The request tree survives: find our two spans by req id and
+        // check the child points at the parent.
+        let events = trace.get("traceEvents").unwrap().as_arr().unwrap();
+        let ours: Vec<_> = events
+            .iter()
+            .filter(|e| {
+                e.get("args")
+                    .and_then(|a| a.get("req"))
+                    .and_then(Value::as_f64)
+                    == Some(ctx.req as f64)
+            })
+            .collect();
+        assert_eq!(ours.len(), 2, "{ours:?}");
+        let outer = ours
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("request"))
+            .unwrap();
+        let inner = ours
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("execute"))
+            .unwrap();
+        assert_eq!(
+            inner.get("args").unwrap().get("parent").unwrap().as_f64(),
+            outer.get("args").unwrap().get("span").unwrap().as_f64(),
+        );
+    }
+
+    #[test]
+    fn validator_rejects_malformed_traces() {
+        assert!(validate_chrome_trace("not json").is_err());
+        assert!(validate_chrome_trace("{}").is_err());
+        assert!(validate_chrome_trace(r#"{"traceEvents":[]}"#).is_err());
+        // Missing dur on an X event.
+        let bad = r#"{"traceEvents":[{"ph":"X","name":"a","pid":1,"tid":1,"ts":0}]}"#;
+        assert!(validate_chrome_trace(bad).is_err());
+        // Unknown phase.
+        let bad = r#"{"traceEvents":[{"ph":"Z","name":"a","pid":1,"tid":1}]}"#;
+        assert!(validate_chrome_trace(bad).is_err());
+        // Minimal valid trace passes.
+        let ok = r#"{"traceEvents":[{"ph":"X","name":"a","cat":"t","pid":1,"tid":1,"ts":5,"dur":2}]}"#;
+        let sum = validate_chrome_trace(ok).unwrap();
+        assert_eq!(sum.spans, 1);
+    }
+}

@@ -1,0 +1,57 @@
+//! Unified observability layer: tracing spans, a metrics registry,
+//! and Perfetto/Chrome-trace exporters shared by serve, the runtime,
+//! and the simulator.
+//!
+//! The paper argues its headline numbers (>90 % FPU utilization via
+//! SSR+FREP, 5× energy efficiency) from *measured per-phase traces*,
+//! not end-to-end means. This module gives the repro the same lens:
+//!
+//! * [`registry`] — a process-wide registry of named atomic counters
+//!   and log₂-bucketed histograms, renderable as Prometheus text
+//!   (`manticore stats --format prometheus`). Recording is a relaxed
+//!   atomic op; the registry is always on.
+//! * [`span`] — structured spans: RAII guards that write one
+//!   complete-event (begin + duration) into a bounded per-thread ring
+//!   buffer, carrying span/request ids so one request's spans stitch
+//!   across the reactor, batcher, and worker threads ([`SpanCtx`] is
+//!   the explicit id handoff). Tracing is globally gated: the
+//!   disabled path is a single relaxed atomic load, proven <1 % on
+//!   `native_exec` by the `obs_overhead` bench (which rides the
+//!   Welch-gated bench A/B in CI).
+//! * [`export`] — drains the rings into Chrome-trace-event JSON
+//!   (`{"traceEvents":[...]}`) that loads directly in Perfetto /
+//!   chrome://tracing, plus the validator behind
+//!   `manticore trace-check`.
+//! * [`virt`] — exports a priced `LoweredProgram` schedule
+//!   ([`crate::coordinator::OpStreamReport`]) as a *virtual-time*
+//!   Perfetto trace: one track per cluster slot, DMA vs compute vs
+//!   fused-kernel slices, and the per-op FPU utilization as a counter
+//!   track (`manticore trace <artifact>`). Simulated and wall-clock
+//!   timelines open in the same UI.
+//!
+//! Span taxonomy (wall-clock traces; `cat` in parentheses):
+//!
+//! ```text
+//! request (serve)                 reactor: validate + admit, one per line
+//! ├─ queue_wait (serve)           batch queue residency (retroactive,
+//! │                               recorded by the worker at pop)
+//! ├─ execute (serve)              worker: one request on its slot
+//! │  └─ plan.execute (runtime)    PlanExecutor over the compiled plan
+//! │     └─ gemm (runtime)         one batched GEMM call (dims in args)
+//! └─ reply (serve)                worker: encode + post completion
+//!
+//! batch (serve)                   worker-track span over the whole
+//!                                 popped batch (no request id)
+//! ```
+
+pub mod export;
+pub mod registry;
+pub mod span;
+pub mod virt;
+
+pub use export::{chrome_trace, drain_chrome_trace, validate_chrome_trace};
+pub use registry::{counter, histogram, render_prometheus};
+pub use span::{
+    current_ctx, drain, new_request_ctx, now_us, record_span, set_tracing,
+    span, span_with, tracing_enabled, SpanCtx, SpanGuard, TraceChunk,
+};

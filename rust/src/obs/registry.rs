@@ -1,0 +1,257 @@
+//! Process-wide metrics registry: named counters and log₂-bucketed
+//! histograms, rendered as Prometheus text exposition.
+//!
+//! Recording is always on — one relaxed atomic RMW, cheap enough that
+//! no gate is worth its branch. The cost discipline is on *lookup*:
+//! [`counter`]/[`histogram`] take a registry lock, so hot paths call
+//! them once (e.g. through a `OnceLock`) and hold the returned
+//! `&'static` handle; recording through the handle touches no lock.
+//!
+//! Histograms bucket by `floor(log2(v))+1` over `u64` values (bucket
+//! 0 holds v=0), 65 buckets total — coarse but monotone, saturation-
+//! free, and exactly what the Prometheus cumulative-`le` rendering
+//! wants. By convention histogram names end in their unit (`_ns`,
+//! `_bytes`) so the raw `le` thresholds read unambiguously.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+const HIST_BUCKETS: usize = 65;
+
+/// A monotonically increasing named counter.
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// A log₂-bucketed histogram over `u64` values.
+pub struct LogHist {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl LogHist {
+    #[inline]
+    fn bucket(v: u64) -> usize {
+        (64 - v.leading_zeros()) as usize
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        // Saturating sum: a stuck-at-max sum beats a wrapped one.
+        let _ = self.sum.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |s| Some(s.saturating_add(v)),
+        );
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Non-cumulative bucket counts (index = `floor(log2 v)+1`, 0 for
+    /// v=0); upper edge of bucket `i>0` is `2^i - 1`.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect()
+    }
+}
+
+struct Registry {
+    counters: BTreeMap<&'static str, &'static Counter>,
+    hists: BTreeMap<&'static str, &'static LogHist>,
+}
+
+static REGISTRY: Mutex<Option<Registry>> = Mutex::new(None);
+
+fn with_registry<T>(f: impl FnOnce(&mut Registry) -> T) -> T {
+    let mut g = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    let reg = g.get_or_insert_with(|| Registry {
+        counters: BTreeMap::new(),
+        hists: BTreeMap::new(),
+    });
+    f(reg)
+}
+
+/// Look up (or create) the named counter. Takes the registry lock —
+/// call once per site and keep the `&'static` handle.
+pub fn counter(name: &'static str) -> &'static Counter {
+    with_registry(|reg| {
+        *reg.counters.entry(name).or_insert_with(|| {
+            Box::leak(Box::new(Counter {
+                v: AtomicU64::new(0),
+            }))
+        })
+    })
+}
+
+/// Look up (or create) the named histogram. Same locking discipline
+/// as [`counter`].
+pub fn histogram(name: &'static str) -> &'static LogHist {
+    with_registry(|reg| {
+        *reg.hists.entry(name).or_insert_with(|| {
+            Box::leak(Box::new(LogHist {
+                buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+                count: AtomicU64::new(0),
+                sum: AtomicU64::new(0),
+            }))
+        })
+    })
+}
+
+/// Current counter values, sorted by name (test/diagnostic surface).
+pub fn snapshot_counters() -> Vec<(String, u64)> {
+    with_registry(|reg| {
+        reg.counters
+            .iter()
+            .map(|(k, c)| (k.to_string(), c.get()))
+            .collect()
+    })
+}
+
+/// `a.b-c` → `manticore_a_b_c` (Prometheus metric-name charset).
+fn prom_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 10);
+    out.push_str("manticore_");
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+/// Render the whole registry — plus caller-supplied gauges (e.g. a
+/// serve [`crate::serve::StatsSnapshot`]) — as Prometheus text
+/// exposition format.
+pub fn render_prometheus(extra_gauges: &[(&str, f64)]) -> String {
+    let mut out = String::new();
+    with_registry(|reg| {
+        for (name, c) in &reg.counters {
+            let p = prom_name(name);
+            out.push_str(&format!("# TYPE {p} counter\n{p} {}\n", c.get()));
+        }
+        for (name, h) in &reg.hists {
+            let p = prom_name(name);
+            out.push_str(&format!("# TYPE {p} histogram\n"));
+            let mut cum = 0u64;
+            for (i, n) in h.bucket_counts().iter().enumerate() {
+                if *n == 0 {
+                    continue;
+                }
+                cum += n;
+                // Upper edge of log2 bucket i (i=0 holds only v=0;
+                // the top bucket's edge saturates at u64::MAX).
+                let le = if i == 0 {
+                    0
+                } else if i >= 64 {
+                    u64::MAX
+                } else {
+                    (1u64 << i) - 1
+                };
+                out.push_str(&format!("{p}_bucket{{le=\"{le}\"}} {cum}\n"));
+            }
+            out.push_str(&format!(
+                "{p}_bucket{{le=\"+Inf\"}} {}\n{p}_sum {}\n{p}_count {}\n",
+                h.count(),
+                h.sum(),
+                h.count()
+            ));
+        }
+    });
+    for (name, v) in extra_gauges {
+        let p = prom_name(name);
+        out.push_str(&format!("# TYPE {p} gauge\n{p} {v}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_identity_and_accumulation() {
+        let c1 = counter("test.reg.counter_a");
+        let c2 = counter("test.reg.counter_a");
+        assert!(std::ptr::eq(c1, c2), "same name → same counter");
+        let before = c1.get();
+        c1.inc();
+        c2.add(4);
+        assert_eq!(c1.get(), before + 5);
+    }
+
+    #[test]
+    fn hist_bucketing_is_log2() {
+        assert_eq!(LogHist::bucket(0), 0);
+        assert_eq!(LogHist::bucket(1), 1);
+        assert_eq!(LogHist::bucket(2), 2);
+        assert_eq!(LogHist::bucket(3), 2);
+        assert_eq!(LogHist::bucket(4), 3);
+        assert_eq!(LogHist::bucket(u64::MAX), 64);
+        let h = histogram("test.reg.hist_ns");
+        h.record(0);
+        h.record(3);
+        h.record(3);
+        h.record(1024);
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 1030);
+        let b = h.bucket_counts();
+        assert_eq!(b[0], 1);
+        assert_eq!(b[2], 2);
+        assert_eq!(b[11], 1); // 1024 = 2^10 → bucket 11
+    }
+
+    #[test]
+    fn prometheus_rendering_shape() {
+        counter("test.prom.requests").add(7);
+        let h = histogram("test.prom.lat_ns");
+        h.record(5);
+        h.record(900);
+        let txt = render_prometheus(&[("test.prom.occupancy", 0.5)]);
+        assert!(txt.contains("# TYPE manticore_test_prom_requests counter"));
+        assert!(txt.contains("manticore_test_prom_requests 7"));
+        assert!(txt.contains("# TYPE manticore_test_prom_lat_ns histogram"));
+        assert!(txt.contains("manticore_test_prom_lat_ns_bucket{le=\"7\"} 1"));
+        assert!(txt.contains("manticore_test_prom_lat_ns_bucket{le=\"+Inf\"} 2"));
+        assert!(txt.contains("manticore_test_prom_lat_ns_sum 905"));
+        assert!(txt.contains("manticore_test_prom_lat_ns_count 2"));
+        assert!(txt.contains("# TYPE manticore_test_prom_occupancy gauge"));
+        assert!(txt.contains("manticore_test_prom_occupancy 0.5"));
+        // Every line is NAME VALUE or a # comment (exposition format).
+        for line in txt.lines() {
+            assert!(
+                line.starts_with('#') || line.split(' ').count() == 2,
+                "bad exposition line: {line:?}"
+            );
+        }
+    }
+}

@@ -514,6 +514,11 @@ pub fn gemm_batched(
     if bsz == 0 || m == 0 || n == 0 {
         return;
     }
+    let mut sp = crate::obs::span("gemm", "runtime");
+    sp.arg("bsz", bsz as f64);
+    sp.arg("m", m as f64);
+    sp.arg("k", k as f64);
+    sp.arg("n", n as f64);
     gemm_driver::<f64>(bsz, m, k, n, a, b, out);
 }
 
@@ -535,6 +540,12 @@ pub fn gemm_batched_f32(
     if bsz == 0 || m == 0 || n == 0 {
         return;
     }
+    let mut sp = crate::obs::span("gemm", "runtime");
+    sp.arg("bsz", bsz as f64);
+    sp.arg("m", m as f64);
+    sp.arg("k", k as f64);
+    sp.arg("n", n as f64);
+    sp.arg("f32", 1.0);
     let mut a32 = arena::lease::<f32>(bsz * m * k);
     for (dst, &v) in a32.iter_mut().zip(a) {
         *dst = v as f32;

@@ -162,6 +162,8 @@ impl NativeExecutable {
     /// [`NativeExecutable::execute_reference`], so parity tests and
     /// benches compare the two paths no matter the ambient env.
     pub fn execute_planned(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let mut sp = crate::obs::span("plan.execute", "runtime");
+        sp.arg("inputs", inputs.len() as f64);
         let args: Vec<Value> = inputs.iter().map(tensor_to_value).collect();
         // Buffers leased below this point come from (and return to)
         // this executable's pool; the scope is per-thread, so every

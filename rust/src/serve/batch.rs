@@ -18,8 +18,11 @@
 //! callers) keeps the classic blocked-channel shape.
 
 use crate::coordinator::OpStreamReport;
+use crate::obs::SpanCtx;
 use crate::runtime::Tensor;
-use crate::serve::protocol::{ErrorReply, Reply, RunReply, SimSummary};
+use crate::serve::protocol::{
+    ErrorReply, Reply, RunReply, SimSummary, StageTiming,
+};
 use crate::serve::reactor::CompletionHandle;
 use crate::system::ClusterSlot;
 use std::collections::VecDeque;
@@ -38,6 +41,9 @@ pub struct RunDone {
     pub batch: usize,
     /// Queue + execute time on the server [µs].
     pub server_us: f64,
+    /// Per-stage breakdown, filled only when the server runs with
+    /// `--debug-timing` (echoed into the run reply).
+    pub timing: Option<StageTiming>,
 }
 
 /// What a worker sends back per request: outputs or a typed error.
@@ -81,6 +87,7 @@ impl ReplyTo {
                             batch: r.batch,
                             slot: Some(r.slot),
                             sim,
+                            timing: r.timing,
                         })
                     }
                     Err(e) => Reply::Err(e),
@@ -99,6 +106,10 @@ pub struct Pending {
     pub inputs: Vec<Tensor>,
     pub enqueued: Instant,
     pub reply: ReplyTo,
+    /// Span handoff from the admitting reactor: the worker's spans
+    /// stitch under the request's admission span (inert ids when
+    /// tracing is off).
+    pub ctx: SpanCtx,
 }
 
 struct QueueState {
@@ -206,6 +217,7 @@ mod tests {
                 inputs: Vec::new(),
                 enqueued: Instant::now(),
                 reply: ReplyTo::Sync(tx),
+                ctx: SpanCtx::none(),
             },
             rx,
         )

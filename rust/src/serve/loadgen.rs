@@ -31,7 +31,7 @@ use crate::runtime::{
     Tensor,
 };
 use crate::serve::metrics::{Histogram, StatsSnapshot};
-use crate::serve::protocol::{ErrCode, Reply, Request};
+use crate::serve::protocol::{ErrCode, Reply, Request, StatsFormat};
 use crate::util::bench::{BenchOpts, Report, Sample, Table};
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
@@ -112,6 +112,48 @@ pub struct LoadgenReport {
     pub crosschecked: bool,
     /// Server-side fleet snapshot fetched after the burst.
     pub server_stats: Option<StatsSnapshot>,
+    /// Per-stage latency decomposition, populated only when the server
+    /// runs with `--debug-timing` (replies then echo queue/execute µs).
+    pub stages: StageBreakdown,
+}
+
+/// Where each request's latency went, stage by stage: queue-wait and
+/// execute are server-reported; reply-flush is the client-observed
+/// remainder (wire + reactor write-queue + reader wakeup). All in
+/// seconds, one entry per completed request that carried timing.
+#[derive(Debug, Default)]
+pub struct StageBreakdown {
+    pub queue_s: Vec<f64>,
+    pub execute_s: Vec<f64>,
+    pub flush_s: Vec<f64>,
+}
+
+impl StageBreakdown {
+    pub fn is_empty(&self) -> bool {
+        self.queue_s.is_empty()
+    }
+
+    fn merge(&mut self, other: &StageBreakdown) {
+        self.queue_s.extend_from_slice(&other.queue_s);
+        self.execute_s.extend_from_slice(&other.execute_s);
+        self.flush_s.extend_from_slice(&other.flush_s);
+    }
+}
+
+/// (mean, p50, p95) of a sample list, in milliseconds. Exact
+/// (sort-based) — loadgen sample counts are small.
+fn stage_ms(xs: &[f64]) -> (f64, f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).expect("finite stage times"));
+    let q = |q: f64| -> f64 {
+        let rank = ((q * s.len() as f64).ceil() as usize).clamp(1, s.len());
+        s[rank - 1] * 1e3
+    };
+    let mean = s.iter().sum::<f64>() / s.len() as f64 * 1e3;
+    (mean, q(0.50), q(0.95))
 }
 
 impl LoadgenReport {
@@ -177,6 +219,22 @@ impl LoadgenReport {
             );
             row(&mut t, "server mean batch", format!("{:.2}", s.mean_batch));
         }
+        if !self.stages.is_empty() {
+            for (name, xs) in [
+                ("queue wait", &self.stages.queue_s),
+                ("execute", &self.stages.execute_s),
+                ("reply flush", &self.stages.flush_s),
+            ] {
+                let (mean, p50, p95) = stage_ms(xs);
+                row(
+                    &mut t,
+                    &format!("stage {name}"),
+                    format!(
+                        "mean {mean:.3} / p50 {p50:.3} / p95 {p95:.3} ms"
+                    ),
+                );
+            }
+        }
         t
     }
 }
@@ -191,6 +249,7 @@ struct ThreadStats {
     dropped: u64,
     slots: BTreeSet<usize>,
     energy_j: f64,
+    stages: StageBreakdown,
 }
 
 /// One line-JSON round trip on an open connection.
@@ -238,8 +297,20 @@ fn record_reply(
             // Latency samples cover *completed* requests only — the
             // JSON report's `iters` is therefore the completed-request
             // count the CI smoke gate asserts on.
-            st.latencies.push(sent.elapsed().as_secs_f64());
+            let latency_s = sent.elapsed().as_secs_f64();
+            st.latencies.push(latency_s);
             st.ok += 1;
+            if let Some(t) = run.timing {
+                // Server-side stages, plus the client-observed
+                // remainder (wire + write queue + reader wakeup).
+                // Open loop measures from the *scheduled* send, which
+                // can predate the server's enqueue — clamp at 0.
+                st.stages.queue_s.push(t.queue_us / 1e6);
+                st.stages.execute_s.push(t.execute_us / 1e6);
+                st.stages
+                    .flush_s
+                    .push((latency_s - run.server_us / 1e6).max(0.0));
+            }
             if let Some(slot) = run.slot {
                 st.slots.insert(slot.id);
             }
@@ -470,6 +541,7 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let mut dropped = 0u64;
     let mut slots = BTreeSet::new();
     let mut energy = 0.0f64;
+    let mut stages = StageBreakdown::default();
     for h in handles {
         let st = h.join().expect("loadgen client panicked")?;
         for &l in &st.latencies {
@@ -483,6 +555,7 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         dropped += st.dropped;
         slots.extend(st.slots);
         energy += st.energy_j;
+        stages.merge(&st.stages);
     }
     let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
 
@@ -529,9 +602,11 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         let mut reader =
             BufReader::new(stream.try_clone().context("cloning stream")?);
         let mut writer = stream;
-        if let Ok(Reply::Stats(s)) =
-            roundtrip(&mut reader, &mut writer, &Request::Stats)
-        {
+        if let Ok(Reply::Stats(s)) = roundtrip(
+            &mut reader,
+            &mut writer,
+            &Request::Stats { format: StatsFormat::Json },
+        ) {
             server_stats = Some(s);
         }
         if cfg.shutdown {
@@ -556,6 +631,7 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         sim_energy_j: energy,
         crosschecked,
         server_stats,
+        stages,
     };
 
     if let Some(path) = &cfg.json_path {
@@ -584,6 +660,21 @@ fn write_json_report(
             &format!("loadgen_{}_latency", cfg.artifact),
             latencies.iter().map(|l| l * 1e9).collect(),
         ));
+    }
+    // Per-stage samples (present only under `serve --debug-timing`):
+    // each stage diffable on its own, so a regression shows *where*
+    // the latency moved, not just that it moved.
+    for (stage, xs) in [
+        ("queue_wait", &rep.stages.queue_s),
+        ("execute", &rep.stages.execute_s),
+        ("reply_flush", &rep.stages.flush_s),
+    ] {
+        if !xs.is_empty() {
+            out.push_sample(Sample::from_times(
+                &format!("loadgen_{}_{stage}", cfg.artifact),
+                xs.iter().map(|l| l * 1e9).collect(),
+            ));
+        }
     }
     let mut summary = rep.table();
     summary.title = format!(
@@ -660,6 +751,57 @@ mod tests {
         assert!(rep.server_stats.is_some());
         assert_eq!(final_stats.requests, 24);
         assert!(final_stats.mean_batch >= 1.0);
+    }
+
+    /// With `--debug-timing` on the server, every reply echoes its
+    /// queue/execute split and the report decomposes client latency
+    /// into queue-wait / execute / reply-flush stages.
+    #[test]
+    fn debug_timing_decomposes_latency_per_stage() {
+        if !artifacts_present() {
+            return;
+        }
+        let server = Server::start(
+            &ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                debug_timing: true,
+                ..ServeConfig::default()
+            },
+            &Config::default(),
+        )
+        .expect("server start");
+        let rep = run_loadgen(&LoadgenConfig {
+            addr: server.addr().to_string(),
+            requests: 8,
+            concurrency: 2,
+            shutdown: true,
+            ..LoadgenConfig::default()
+        })
+        .expect("loadgen run");
+        server.wait();
+        assert_eq!(rep.ok_requests, 8);
+        assert_eq!(rep.stages.queue_s.len(), 8, "every reply carries timing");
+        assert_eq!(rep.stages.execute_s.len(), 8);
+        assert_eq!(rep.stages.flush_s.len(), 8);
+        for i in 0..8 {
+            let (q, e, f) = (
+                rep.stages.queue_s[i],
+                rep.stages.execute_s[i],
+                rep.stages.flush_s[i],
+            );
+            assert!(q >= 0.0 && e > 0.0 && f >= 0.0, "q={q} e={e} f={f}");
+        }
+        // The stage rows make it into the report table.
+        let t = rep.table();
+        assert!(t.rows.iter().any(|r| r[0] == "stage queue wait"));
+        assert!(t.rows.iter().any(|r| r[0] == "stage execute"));
+        assert!(t.rows.iter().any(|r| r[0] == "stage reply flush"));
+        // Stage arithmetic: queue + execute ≈ the server_us total, so
+        // neither stage can exceed the client-observed latency by more
+        // than clock noise. (Closed loop: client latency ≥ server
+        // time.)
+        let (mean_ms, _, _) = stage_ms(&rep.stages.execute_s);
+        assert!(mean_ms * 1e-3 <= rep.wall_s, "sane magnitudes");
     }
 
     /// Sim-backend burst: every reply carries per-request energy, the

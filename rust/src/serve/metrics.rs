@@ -56,7 +56,11 @@ impl Histogram {
             return 0;
         }
         let b = (seconds / HIST_LO).ln() / HIST_GROWTH.ln();
-        (b.floor() as usize).min(HIST_BUCKETS - 1)
+        // .max(0.0) guards the float boundary just above HIST_LO,
+        // where rounding could push the log ratio fractionally
+        // negative — casting that to usize would be UB-adjacent
+        // nonsense (it saturates to 0, but be explicit).
+        (b.floor().max(0.0) as usize).min(HIST_BUCKETS - 1)
     }
 
     /// Upper edge of a bucket [s].
@@ -68,8 +72,11 @@ impl Histogram {
         if !seconds.is_finite() || seconds < 0.0 {
             return;
         }
-        self.counts[Self::bucket(seconds)] += 1;
-        self.count += 1;
+        // Saturating: a counter stuck at u64::MAX beats a wrap (or a
+        // debug-build overflow panic) in a long-lived server.
+        let b = Self::bucket(seconds);
+        self.counts[b] = self.counts[b].saturating_add(1);
+        self.count = self.count.saturating_add(1);
         self.sum_s += seconds;
         self.min_s = self.min_s.min(seconds);
         self.max_s = self.max_s.max(seconds);
@@ -79,9 +86,9 @@ impl Histogram {
     /// per-client histograms this way).
     pub fn merge(&mut self, other: &Histogram) {
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
-            *a += b;
+            *a = a.saturating_add(*b);
         }
-        self.count += other.count;
+        self.count = self.count.saturating_add(other.count);
         self.sum_s += other.sum_s;
         self.min_s = self.min_s.min(other.min_s);
         self.max_s = self.max_s.max(other.max_s);
@@ -306,6 +313,29 @@ impl StatsSnapshot {
         }
         t
     }
+
+    /// Prometheus text exposition: the whole obs registry (counters +
+    /// histograms) followed by this snapshot's fleet gauges — the
+    /// payload behind `stats --format prometheus`.
+    pub fn to_prometheus(&self) -> String {
+        crate::obs::render_prometheus(&[
+            ("serve.requests", self.requests as f64),
+            ("serve.errors", self.errors as f64),
+            ("serve.rejected", self.rejected as f64),
+            ("serve.batches", self.batches as f64),
+            ("serve.mean_batch", self.mean_batch),
+            ("serve.open_conns", self.open_conns as f64),
+            ("serve.pending", self.pending as f64),
+            ("serve.occupancy", self.occupancy),
+            ("serve.rps", self.rps),
+            ("serve.latency_p50_ms", self.p50_ms),
+            ("serve.latency_p95_ms", self.p95_ms),
+            ("serve.latency_mean_ms", self.mean_ms),
+            ("serve.uptime_s", self.uptime_s),
+            ("serve.energy_j", self.energy_j),
+            ("serve.os_threads", self.os_threads as f64),
+        ])
+    }
 }
 
 #[derive(Debug, Default)]
@@ -481,6 +511,106 @@ mod tests {
         h.record(f64::NAN);
         h.record(-1.0);
         assert_eq!(h.count(), 100);
+    }
+
+    #[test]
+    fn histogram_empty_window_is_all_zeros() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_s(), 0.0);
+        assert_eq!(h.min_s(), 0.0);
+        assert_eq!(h.max_s(), 0.0);
+        for q in [0.0, 0.5, 0.95, 1.0] {
+            assert_eq!(h.quantile_s(q), 0.0, "q={q}");
+        }
+        // Merging two empties stays empty (min stays well-defined).
+        let mut a = Histogram::new();
+        a.merge(&h);
+        assert_eq!(a.count(), 0);
+        assert_eq!(a.min_s(), 0.0);
+    }
+
+    #[test]
+    fn histogram_single_sample_quantiles_are_exact() {
+        let mut h = Histogram::new();
+        h.record(3.7e-3);
+        // Every quantile of a one-sample window is that sample: the
+        // bucket's upper edge overshoots, but the observed-max clamp
+        // pulls it back.
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile_s(q), 3.7e-3, "q={q}");
+        }
+        assert_eq!(h.min_s(), 3.7e-3);
+        assert_eq!(h.mean_s(), 3.7e-3);
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries_are_monotone_and_bounded() {
+        // bucket() must be monotone in its argument, tolerate values
+        // straddling every geometric edge, and clamp the far tail.
+        let mut prev = 0;
+        let mut s = 1e-7;
+        while s < 1e5 {
+            let b = Histogram::bucket(s);
+            assert!(b >= prev, "bucket not monotone at {s}");
+            assert!(b < HIST_BUCKETS);
+            prev = b;
+            s *= 1.05;
+        }
+        assert_eq!(Histogram::bucket(0.0), 0);
+        assert_eq!(Histogram::bucket(HIST_LO), 0);
+        // Just above the lower edge: the log ratio is a tiny positive
+        // (or, with float rounding, ~0) — must stay in bucket 0/1, not
+        // wrap.
+        assert!(Histogram::bucket(HIST_LO * 1.0000001) <= 1);
+        assert_eq!(Histogram::bucket(1e12), HIST_BUCKETS - 1);
+        assert_eq!(Histogram::bucket(f64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_counters_saturate_instead_of_wrapping() {
+        let mut h = Histogram::new();
+        h.record(1e-3);
+        // Force the counters to the brink and verify record/merge
+        // saturate rather than wrap (which would panic in debug).
+        h.count = u64::MAX - 1;
+        let b = Histogram::bucket(1e-3);
+        h.counts[b] = u64::MAX - 1;
+        h.record(1e-3);
+        h.record(1e-3);
+        assert_eq!(h.count(), u64::MAX);
+        assert_eq!(h.counts[b], u64::MAX);
+        let mut other = Histogram::new();
+        other.record(1e-3);
+        h.merge(&other);
+        assert_eq!(h.count(), u64::MAX, "merge saturates too");
+    }
+
+    #[test]
+    fn snapshot_prometheus_exposition_carries_fleet_gauges() {
+        let m = Metrics::new();
+        m.record_request(2e-3, None);
+        let s = m.snapshot("native", 0.5, 16, 32, 1, 2, 4);
+        let txt = s.to_prometheus();
+        assert!(txt.contains("# TYPE manticore_serve_requests gauge"));
+        assert!(txt.contains("manticore_serve_requests 1"));
+        assert!(txt.contains("manticore_serve_occupancy 0.5"));
+        for line in txt.lines() {
+            assert!(
+                line.starts_with('#') || line.split(' ').count() == 2,
+                "bad exposition line: {line:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn open_conns_gauge_clamps_below_zero() {
+        let m = Metrics::new();
+        // A close without a matching open (e.g. a race at shutdown)
+        // must not wrap the u64 gauge in the snapshot.
+        m.conn_closed();
+        let s = m.snapshot("native", 0.0, 1, 1, 0, 1, 1);
+        assert_eq!(s.open_conns, 0);
     }
 
     #[test]

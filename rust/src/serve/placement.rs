@@ -112,12 +112,16 @@ impl SlotPool {
         self.state.lock().unwrap().busy
     }
 
-    /// Time-weighted mean fraction of slots occupied since creation.
+    /// Time-weighted mean fraction of slots occupied since creation,
+    /// clamped to [0,1]: an empty window (pool just created) divides a
+    /// zero integral by a near-zero elapsed, and clock granularity can
+    /// nudge the ratio past 1 — neither may leak out as a nonsense
+    /// gauge.
     pub fn occupancy(&self) -> f64 {
         let mut st = self.state.lock().unwrap();
         self.integrate(&mut st);
         let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
-        st.busy_integral / (elapsed * self.n_slots as f64)
+        (st.busy_integral / (elapsed * self.n_slots as f64)).clamp(0.0, 1.0)
     }
 }
 
@@ -193,6 +197,22 @@ mod tests {
         h.join().unwrap();
         assert!(got.load(Ordering::SeqCst));
         assert!(pool.occupancy() > 0.0);
+    }
+
+    #[test]
+    fn occupancy_stays_in_unit_interval() {
+        let pool = SlotPool::new(&SystemConfig::default(), 512);
+        // Empty window: no leases yet, near-zero elapsed.
+        let o = pool.occupancy();
+        assert!((0.0..=1.0).contains(&o), "empty-window occupancy {o}");
+        // Saturated: hold the only slot across a measurable window.
+        let lease = pool.lease();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let o = pool.occupancy();
+        assert!(o > 0.0, "busy pool must show occupancy, got {o}");
+        assert!(o <= 1.0, "occupancy must clamp to 1, got {o}");
+        drop(lease);
+        assert!(pool.occupancy() <= 1.0);
     }
 
     #[test]

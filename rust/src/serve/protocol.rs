@@ -6,8 +6,10 @@
 //! Requests:
 //! ```text
 //! {"op":"run","artifact":"matmul_f64_64","inputs":[{"dtype":"float64","shape":[64,64],"data":[...]}, ...]}
-//! {"op":"stats"}            fleet metrics snapshot
+//! {"op":"stats"}            fleet metrics snapshot (JSON)
+//! {"op":"stats","format":"prometheus"}   as Prometheus text
 //! {"op":"ping"}             liveness check
+//! {"op":"trace"}            flush buffered spans as a Chrome trace
 //! {"op":"shutdown"}         stop accepting, drain, print stats
 //! ```
 //!
@@ -166,15 +168,29 @@ impl ErrorReply {
     }
 }
 
+/// How a `stats` reply should be rendered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StatsFormat {
+    /// Structured [`StatsSnapshot`] JSON (the default).
+    #[default]
+    Json,
+    /// Prometheus text exposition (snapshot gauges + the obs
+    /// registry), delivered as a [`Reply::Text`].
+    Prometheus,
+}
+
 /// One client request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     /// Execute `artifact` with the given input tensors.
     Run { artifact: String, inputs: Vec<Tensor> },
     /// Fleet metrics snapshot.
-    Stats,
+    Stats { format: StatsFormat },
     /// Liveness check.
     Ping,
+    /// Flush the server's buffered spans as a Chrome-trace object
+    /// (tracing must be enabled server-side via `--trace-out`).
+    Trace,
     /// Stop the server (reply acked before the listener winds down).
     Shutdown,
 }
@@ -191,8 +207,18 @@ impl Request {
                     Value::Arr(inputs.iter().map(tensor_to_json).collect()),
                 ),
             ]),
-            Request::Stats => obj(vec![("op", Value::Str("stats".into()))]),
+            Request::Stats { format } => {
+                let mut pairs = vec![("op", Value::Str("stats".into()))];
+                if *format == StatsFormat::Prometheus {
+                    pairs.push((
+                        "format",
+                        Value::Str("prometheus".into()),
+                    ));
+                }
+                obj(pairs)
+            }
             Request::Ping => obj(vec![("op", Value::Str("ping".into()))]),
+            Request::Trace => obj(vec![("op", Value::Str("trace".into()))]),
             Request::Shutdown => {
                 obj(vec![("op", Value::Str("shutdown".into()))])
             }
@@ -224,8 +250,16 @@ impl Request {
                     .collect::<Result<Vec<_>>>()?;
                 Ok(Request::Run { artifact, inputs })
             }
-            "stats" => Ok(Request::Stats),
+            "stats" => {
+                let format = match v.get("format").and_then(Value::as_str) {
+                    Some("prometheus") => StatsFormat::Prometheus,
+                    // Unknown formats degrade to JSON (legacy peers).
+                    _ => StatsFormat::Json,
+                };
+                Ok(Request::Stats { format })
+            }
             "ping" => Ok(Request::Ping),
+            "trace" => Ok(Request::Trace),
             "shutdown" => Ok(Request::Shutdown),
             other => bail!("unknown request op '{other}'"),
         }
@@ -276,6 +310,40 @@ impl SimSummary {
     }
 }
 
+/// Server-side per-stage timing echoed in a run reply when the
+/// server runs with `--debug-timing`: where `server_us` went.
+/// Sourced from the same span clock the trace exporter uses, so the
+/// breakdown and the timeline agree. The client derives reply-flush
+/// time as its measured latency minus `server_us`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageTiming {
+    /// Batch-queue residency (admission → worker pop) [µs].
+    pub queue_us: f64,
+    /// Slot-lease + execute time on the worker [µs].
+    pub execute_us: f64,
+}
+
+impl StageTiming {
+    fn to_json(self) -> Value {
+        obj(vec![
+            ("queue_us", Value::Num(self.queue_us)),
+            ("execute_us", Value::Num(self.execute_us)),
+        ])
+    }
+
+    fn from_json(v: &Value) -> Result<StageTiming> {
+        let field = |k: &str| -> Result<f64> {
+            v.get(k)
+                .and_then(Value::as_f64)
+                .with_context(|| format!("timing missing '{k}'"))
+        };
+        Ok(StageTiming {
+            queue_us: field("queue_us")?,
+            execute_us: field("execute_us")?,
+        })
+    }
+}
+
 /// A successful `run` reply.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunReply {
@@ -289,6 +357,9 @@ pub struct RunReply {
     pub slot: Option<ClusterSlot>,
     /// Present iff the backend models execution (sim).
     pub sim: Option<SimSummary>,
+    /// Per-stage breakdown (present iff the server runs with
+    /// `--debug-timing`).
+    pub timing: Option<StageTiming>,
 }
 
 /// One server reply.
@@ -296,6 +367,10 @@ pub struct RunReply {
 pub enum Reply {
     Run(RunReply),
     Stats(StatsSnapshot),
+    /// A flushed Chrome-trace object (`trace` op).
+    Trace(Value),
+    /// Preformatted text (e.g. Prometheus exposition) as one line.
+    Text(String),
     /// Ack for ping/shutdown.
     Ok,
     Err(ErrorReply),
@@ -339,12 +414,25 @@ impl Reply {
                 if let Some(s) = &r.sim {
                     pairs.push(("sim", s.to_json()));
                 }
+                if let Some(t) = &r.timing {
+                    pairs.push(("timing", t.to_json()));
+                }
                 obj(pairs)
             }
             Reply::Stats(s) => obj(vec![
                 ("ok", Value::Bool(true)),
                 ("kind", Value::Str("stats".into())),
                 ("stats", s.to_json()),
+            ]),
+            Reply::Trace(t) => obj(vec![
+                ("ok", Value::Bool(true)),
+                ("kind", Value::Str("trace".into())),
+                ("trace", t.clone()),
+            ]),
+            Reply::Text(s) => obj(vec![
+                ("ok", Value::Bool(true)),
+                ("kind", Value::Str("text".into())),
+                ("text", Value::Str(s.clone())),
             ]),
             Reply::Ok => obj(vec![
                 ("ok", Value::Bool(true)),
@@ -400,6 +488,17 @@ impl Reply {
             "stats" => Ok(Reply::Stats(StatsSnapshot::from_json(
                 v.get("stats").context("stats reply missing 'stats'")?,
             )?)),
+            "trace" => Ok(Reply::Trace(
+                v.get("trace")
+                    .context("trace reply missing 'trace'")?
+                    .clone(),
+            )),
+            "text" => Ok(Reply::Text(
+                v.get("text")
+                    .and_then(Value::as_str)
+                    .context("text reply missing 'text'")?
+                    .to_string(),
+            )),
             "run" => {
                 let artifact = v
                     .get("artifact")
@@ -430,6 +529,10 @@ impl Reply {
                     },
                     sim: match v.get("sim") {
                         Some(s) => Some(SimSummary::from_json(s)?),
+                        None => None,
+                    },
+                    timing: match v.get("timing") {
+                        Some(t) => Some(StageTiming::from_json(t)?),
                         None => None,
                     },
                 }))
@@ -466,8 +569,10 @@ mod tests {
                 artifact: "matmul_f64_64".into(),
                 inputs: vec![Tensor::F64(vec![1.0, 2.0], vec![2])],
             },
-            Request::Stats,
+            Request::Stats { format: StatsFormat::Json },
+            Request::Stats { format: StatsFormat::Prometheus },
             Request::Ping,
+            Request::Trace,
             Request::Shutdown,
         ];
         for r in reqs {
@@ -477,6 +582,12 @@ mod tests {
         }
         assert!(Request::parse("{\"op\":\"dance\"}").is_err());
         assert!(Request::parse("not json").is_err());
+        // Unknown stats formats degrade to JSON (legacy peers).
+        assert_eq!(
+            Request::parse("{\"op\":\"stats\",\"format\":\"exotic\"}")
+                .unwrap(),
+            Request::Stats { format: StatsFormat::Json },
+        );
     }
 
     #[test]
@@ -494,9 +605,20 @@ mod tests {
                 energy_j: 2.5e-3,
                 fpu_util: 0.8,
             }),
+            timing: Some(StageTiming {
+                queue_us: 250.0,
+                execute_us: 562.5,
+            }),
         });
+        let trace = Reply::Trace(
+            json::parse(r#"{"traceEvents":[]}"#).unwrap(),
+        );
+        let text =
+            Reply::Text("# TYPE manticore_requests counter\n".into());
         for r in [
             run,
+            trace,
+            text,
             Reply::Ok,
             Reply::err(ErrCode::Internal, "boom"),
             Reply::err(ErrCode::BadRequest, "bad json"),

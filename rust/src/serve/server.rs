@@ -23,6 +23,7 @@
 //! joins accept + reactors + workers and returns the final stats.
 
 use crate::config::Config;
+use crate::obs;
 use crate::runtime::sim::SimBackend;
 use crate::runtime::{
     backend_by_name, check_inputs, load_manifest, ArtifactMeta, Backend,
@@ -32,7 +33,8 @@ use crate::serve::batch::{BatchQueue, Pending, ReplyTo, RunDone};
 use crate::serve::metrics::{Metrics, StatsSnapshot};
 use crate::serve::placement::SlotPool;
 use crate::serve::protocol::{
-    ErrCode, ErrorReply, Reply, Request, DEFAULT_PORT,
+    ErrCode, ErrorReply, Reply, Request, StageTiming, StatsFormat,
+    DEFAULT_PORT,
 };
 use crate::serve::reactor::{
     CompletionHandle, Handler, Inbox, LineOutcome, Reactor,
@@ -68,6 +70,13 @@ pub struct ServeConfig {
     /// Admission budget: max run requests admitted but not yet
     /// replied; 0 = auto (4 x workers x max_batch, at least 16).
     pub max_pending: usize,
+    /// Enable span tracing; on shutdown the CLI writes the buffered
+    /// spans to this path as Chrome-trace JSON. Clients can also
+    /// flush mid-flight with the `trace` protocol op.
+    pub trace_out: Option<String>,
+    /// Echo per-stage server timing (queue-wait / execute µs) into
+    /// every run reply, for `loadgen`'s latency breakdown.
+    pub debug_timing: bool,
 }
 
 impl Default for ServeConfig {
@@ -82,6 +91,8 @@ impl Default for ServeConfig {
             workers: 0,
             reactor_threads: 0,
             max_pending: 0,
+            trace_out: None,
+            debug_timing: false,
         }
     }
 }
@@ -132,6 +143,8 @@ struct Shared {
     inboxes: Mutex<Vec<Arc<Inbox>>>,
     n_reactors: usize,
     n_workers: usize,
+    /// Echo per-stage timing into run replies (`--debug-timing`).
+    debug_timing: bool,
 }
 
 impl Shared {
@@ -220,6 +233,12 @@ impl Shared {
                 Reply::overloaded(self.retry_after_ms).to_line(),
             );
         }
+        // Root span of the request's trace tree: parse + validation +
+        // admission on the reactor thread. Its ctx rides the Pending so
+        // the worker's queue_wait/execute spans stitch under it.
+        let mut sp =
+            obs::span_with("request", "serve", obs::new_request_ctx());
+        sp.arg("input_tensors", inputs.len() as f64);
         let pending = Pending {
             artifact: artifact.clone(),
             inputs,
@@ -229,6 +248,7 @@ impl Shared {
                 artifact,
                 admitted: self.admitted.clone(),
             },
+            ctx: sp.ctx(),
         };
         if let Err(refused) = self.queue.push(pending) {
             // Stopped between the flag check and the push: deliver the
@@ -257,8 +277,29 @@ impl Handler for Shared {
         };
         match req {
             Request::Ping => LineOutcome::Reply(Reply::Ok.to_line()),
-            Request::Stats => {
-                LineOutcome::Reply(Reply::Stats(self.stats()).to_line())
+            Request::Stats { format } => match format {
+                StatsFormat::Json => {
+                    LineOutcome::Reply(Reply::Stats(self.stats()).to_line())
+                }
+                StatsFormat::Prometheus => LineOutcome::Reply(
+                    Reply::Text(self.stats().to_prometheus()).to_line(),
+                ),
+            },
+            Request::Trace => {
+                if obs::tracing_enabled() {
+                    LineOutcome::Reply(
+                        Reply::Trace(obs::drain_chrome_trace()).to_line(),
+                    )
+                } else {
+                    LineOutcome::Reply(
+                        Reply::err(
+                            ErrCode::BadRequest,
+                            "tracing is disabled (start serve with \
+                             --trace-out)",
+                        )
+                        .to_line(),
+                    )
+                }
             }
             Request::Shutdown => {
                 // The ack rides the normal write queue; the reactor
@@ -329,6 +370,11 @@ impl Server {
         crate::runtime::native::set_native_threads_if_unset(
             (cores / n_workers).max(1),
         );
+        if cfg.trace_out.is_some() {
+            // Process-global: spans record from here on; the CLI
+            // drains them to the trace file after `wait()`.
+            obs::set_tracing(true);
+        }
         let shared = Arc::new(Shared {
             backend,
             manifest,
@@ -348,6 +394,7 @@ impl Server {
             inboxes: Mutex::new(Vec::new()),
             n_reactors,
             n_workers,
+            debug_timing: cfg.debug_timing,
         });
         let workers = (0..n_workers)
             .map(|_| {
@@ -444,6 +491,10 @@ fn worker_loop(shared: &Shared) {
         }
         shared.metrics.record_batch(batch.len());
         let n = batch.len();
+        // Batch-scoped span on the worker's own track; per-request
+        // spans below stitch to their reactor-side roots instead.
+        let mut batch_sp = obs::span("batch", "serve");
+        batch_sp.arg("batch", n as f64);
         let exe = match shared.executable(&batch[0].artifact) {
             Ok(e) => e,
             Err(e) => {
@@ -457,18 +508,41 @@ fn worker_loop(shared: &Shared) {
         };
         let lease = shared.pool.lease();
         for p in batch {
-            match exe.execute_placed(&p.inputs, Some(&lease.slot)) {
+            // Queue wait ended when this worker reached the request;
+            // record it retroactively under the request's root span.
+            let queue_us = p.enqueued.elapsed().as_secs_f64() * 1e6;
+            obs::record_span(
+                "queue_wait",
+                "serve",
+                p.ctx,
+                queue_us as u64,
+                vec![("batch", n as f64)],
+            );
+            let mut exec_sp = obs::span_with("execute", "serve", p.ctx);
+            exec_sp.arg("batch", n as f64);
+            let exec_start = Instant::now();
+            let result = exe.execute_placed(&p.inputs, Some(&lease.slot));
+            let execute_us = exec_start.elapsed().as_secs_f64() * 1e6;
+            drop(exec_sp);
+            match result {
                 Ok(out) => {
                     let server_s = p.enqueued.elapsed().as_secs_f64();
                     shared
                         .metrics
                         .record_request(server_s, out.report.as_ref());
+                    let timing = if shared.debug_timing {
+                        Some(StageTiming { queue_us, execute_us })
+                    } else {
+                        None
+                    };
+                    let _reply_sp = obs::span_with("reply", "serve", p.ctx);
                     p.reply.send(Ok(RunDone {
                         outputs: out.outputs,
                         report: out.report,
                         slot: lease.slot,
                         batch: n,
                         server_us: server_s * 1e6,
+                        timing,
                     }));
                 }
                 Err(e) => {
@@ -611,7 +685,7 @@ mod tests {
 
         // Stats reflect the one completed request and the front-end
         // gauges.
-        let stats = match client.roundtrip(&Request::Stats) {
+        let stats = match client.roundtrip(&Request::Stats { format: StatsFormat::Json }) {
             Reply::Stats(s) => s,
             other => panic!("expected stats reply, got {other:?}"),
         };
@@ -724,7 +798,7 @@ mod tests {
             rejected > 0,
             "a budget of 2 must reject inside a {N}-burst"
         );
-        let stats = match client.roundtrip(&Request::Stats) {
+        let stats = match client.roundtrip(&Request::Stats { format: StatsFormat::Json }) {
             Reply::Stats(s) => s,
             other => panic!("{other:?}"),
         };
