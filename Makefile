@@ -10,7 +10,7 @@ PYTHON ?= python3
 BENCH_OUT ?= bench-results
 
 .PHONY: help build test artifacts fmt fmt-check clippy bench bench-smoke \
-        perf serve-smoke trace-smoke lower-smoke pytest clean
+        perf serve-smoke chaos-smoke trace-smoke lower-smoke pytest clean
 
 help:
 	@echo "targets:"
@@ -47,6 +47,14 @@ help:
 	@echo "               pool-sized thread count — then shut the server down;"
 	@echo "               the server runs with --trace-out, and the exported"
 	@echo "               span trace is validated with 'manticore trace-check'"
+	@echo "  chaos-smoke  start 'manticore serve' under scripts/chaos_spec.json"
+	@echo "               (seeded worker panics, reply delays, conn drops, one"
+	@echo "               scheduled slot fault) and drive an open-loop retrying"
+	@echo "               loadgen burst through it; the report lands in"
+	@echo "               $(BENCH_OUT)/serve_chaos.json with a machine-readable"
+	@echo "               accounting table (CI asserts ok + errors + rejected +"
+	@echo "               expired + dropped == sent), then probe 'manticore"
+	@echo "               health' and shut the server down cleanly"
 	@echo "  trace-smoke  'manticore trace matmul_f64_64': price the sim schedule"
 	@echo "               and render it as a virtual-time Perfetto/Chrome trace"
 	@echo "               ($(BENCH_OUT)/virtual_trace.json), then validate it"
@@ -152,6 +160,36 @@ serve-smoke: build
 	  || { kill $$server_pid 2>/dev/null; exit 1; }; \
 	wait $$server_pid
 	./target/release/manticore trace-check $(BENCH_OUT)/serve_trace.json
+
+# Chaos smoke: the serve-smoke topology, but the server runs with
+# seeded fault injection (scripts/chaos_spec.json: worker panics,
+# reply delays, connection drops, one scheduled slot fault) and the
+# loadgen retries `overloaded` refusals with jittered backoff and
+# attaches a per-request deadline. Every injected fault must resolve
+# to a typed outcome — the accounting table in serve_chaos.json is the
+# artifact CI gates on — and the server must shut down cleanly with no
+# wedged thread (the final `wait` hangs otherwise). The health probe
+# runs best-effort: exit 1 just means "degraded", which is expected
+# after injected panics.
+CHAOS_PORT ?= 7434
+
+chaos-smoke: build
+	mkdir -p $(BENCH_OUT)
+	./target/release/manticore serve --port $(CHAOS_PORT) --backend sim \
+	  --chaos scripts/chaos_spec.json --idle-timeout-s 30 & \
+	server_pid=$$!; \
+	sleep 2; \
+	./target/release/manticore loadgen --addr 127.0.0.1:$(CHAOS_PORT) \
+	  --artifact matmul_f64_64 --concurrency 32 --requests 256 --rate 200 \
+	  --retries 3 --backoff-ms 10 --deadline-ms 2000 \
+	  --json $(BENCH_OUT)/serve_chaos.json \
+	  || { kill $$server_pid 2>/dev/null; exit 1; }; \
+	./target/release/manticore health --addr 127.0.0.1:$(CHAOS_PORT) \
+	  || true; \
+	./target/release/manticore loadgen --addr 127.0.0.1:$(CHAOS_PORT) \
+	  --artifact matmul_f64_64 --concurrency 1 --requests 4 --shutdown \
+	  || { kill $$server_pid 2>/dev/null; exit 1; }; \
+	wait $$server_pid
 
 # Virtual-time trace smoke: price the sim schedule for one artifact and
 # render it as a per-slot Perfetto timeline (DMA vs compute vs fused

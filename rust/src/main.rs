@@ -87,12 +87,13 @@ fn run_cli() -> Result<()> {
     }
 
     match sub.as_deref() {
-        Some("repro") => cmd_repro(&args, &artifacts_dir),
+        Some("repro") => cmd_repro(&args, &artifacts_dir, &cfg),
         Some("run") => cmd_run(&args, &artifacts_dir, &cfg),
         Some("lower") => cmd_lower(&args, &artifacts_dir, &cfg),
         Some("serve") => cmd_serve(&args, &artifacts_dir, &cfg),
         Some("loadgen") => cmd_loadgen(&args, &artifacts_dir),
         Some("stats") => cmd_stats(&args),
+        Some("health") => cmd_health(&args),
         Some("trace") => cmd_trace(&args, &artifacts_dir, &cfg),
         Some("trace-check") => cmd_trace_check(&args),
         Some("simulate") => cmd_simulate(&args, &cfg),
@@ -114,7 +115,10 @@ fn print_help() {
          chiplet architecture\n\n\
          USAGE: manticore <COMMAND> [OPTIONS]\n\n\
          COMMANDS:\n  \
-         repro <fig5|fig6|fig8|fig9|fig10|fig3|area|peaks|simops|all>\n  \
+         repro <fig5|fig6|fig8|fig9|fig10|fig3|area|peaks|simops|faults|all>\n        \
+         (faults: priced throughput / J-per-request degradation curve\n        \
+         vs cluster fault rate; [--rates 0,0.0625,..] [--slot-clusters 32]\n        \
+         [--dim 256] [--seed 42])\n  \
          run <artifact|path/to/x.hlo.txt> [--iters N] [--ops N]\n  \
          lower <artifact|all> [--check] [--stats out.md] [--ops N]\n  \
          serve [--port 7433] [--host 127.0.0.1] [--batch-window-ms 2]\n        \
@@ -122,14 +126,24 @@ fn print_help() {
          [--reactor-threads N] [--max-pending N]\n        \
          [--trace-out f.json] (record spans; write Perfetto JSON on\n        \
          shutdown; clients can flush early with {{\"op\":\"trace\"}})\n        \
-         [--debug-timing] (echo queue/execute µs into run replies)\n  \
+         [--debug-timing] (echo queue/execute µs into run replies)\n        \
+         [--idle-timeout-s S] (reap connections idle > S seconds)\n        \
+         [--fault-plan plan.json] (retire slots on faulty clusters)\n        \
+         [--chaos spec.json] (seeded fault injection: worker panics,\n        \
+         reply delays, connection drops, scheduled slot faults)\n  \
          loadgen [--addr 127.0.0.1:7433] [--artifact NAME] \
          [--concurrency 8]\n          \
          [--requests 100] [--rate R] [--json out.json] [--shutdown]\n          \
+         [--retries N] [--backoff-ms B] (on `overloaded`, retry up to\n          \
+         N times with capped jittered exponential backoff seeded from\n          \
+         the server's retry_after_ms hint)\n          \
+         [--deadline-ms D] (attach a completion deadline to each run)\n          \
          (--rate R > 0: open-loop fixed arrival schedule @ R req/s;\n          \
          against a --debug-timing server the report adds per-stage\n          \
          queue-wait / execute / reply-flush percentiles)\n  \
          stats [--addr 127.0.0.1:7433] [--format json|prometheus]\n  \
+         health [--addr 127.0.0.1:7433] (fault/degradation probe;\n         \
+         exit 1 when status != ok)\n  \
          trace <artifact> [--out NAME.trace.json] [--slots 4] [--seed 0]\n        \
          (virtual-time Perfetto trace of the priced sim schedule:\n        \
          one track per cluster slot, DMA/compute/fused slices,\n        \
@@ -170,6 +184,25 @@ fn cmd_serve(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> 
         max_pending: args.get_usize("max-pending", 0)?,
         trace_out: args.get("trace-out").map(str::to_string),
         debug_timing: args.has_flag("debug-timing"),
+        idle_timeout_s: args.get_f64("idle-timeout-s", 0.0)?,
+        fault_plan: match args.get("fault-plan") {
+            Some(path) => {
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("reading fault plan {path}"))?;
+                Some(
+                    manticore::system::FaultPlan::from_json(&text)
+                        .map_err(|e| anyhow::anyhow!("{e}"))?,
+                )
+            }
+            None => None,
+        },
+        chaos: match args.get("chaos") {
+            Some(path) => Some(
+                manticore::serve::ChaosSpec::load(path)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?,
+            ),
+            None => None,
+        },
     };
     let server = Server::start(&serve_cfg, cfg)?;
     println!(
@@ -206,8 +239,46 @@ fn cmd_serve(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> 
     if serve_cfg.debug_timing {
         println!("  debug-timing: run replies echo queue/execute µs");
     }
+    if serve_cfg.idle_timeout_s > 0.0 {
+        println!(
+            "  idle-timeout: reaping connections idle > {} s",
+            serve_cfg.idle_timeout_s
+        );
+    }
+    if let Some(plan) = &serve_cfg.fault_plan {
+        let h = server.health();
+        println!(
+            "  fault plan: {} faulty clusters -> {} of {} slots retired \
+             (status {})",
+            plan.n_faulty(),
+            h.retired_slots,
+            h.slots,
+            h.status.as_str()
+        );
+    }
+    if let Some(spec) = &serve_cfg.chaos {
+        println!(
+            "  chaos: seed {} (panic {:.0}%, delay {:.0}% x {} ms, drop \
+             {:.0}%, {} scheduled slot faults)",
+            spec.seed,
+            spec.worker_panic_rate * 100.0,
+            spec.reply_delay_rate * 100.0,
+            spec.reply_delay_ms,
+            spec.conn_drop_rate * 100.0,
+            spec.slot_faults.len()
+        );
+    }
     println!("  stop with: {{\"op\":\"shutdown\"}} or `manticore loadgen --shutdown`");
+    let chaos = server.chaos();
     let stats = server.wait();
+    if let Some(chaos) = chaos {
+        let parts: Vec<String> = chaos
+            .summary()
+            .iter()
+            .map(|(what, n)| format!("{n} {what}"))
+            .collect();
+        println!("chaos injected: {}", parts.join(", "));
+    }
     if let Some(path) = &serve_cfg.trace_out {
         let trace = manticore::obs::drain_chrome_trace();
         std::fs::write(path, json::write(&trace))
@@ -246,6 +317,57 @@ fn cmd_stats(args: &cli::Args) -> Result<()> {
     match Reply::parse(&line)? {
         Reply::Stats(s) => s.table().print(),
         Reply::Text(t) => print!("{t}"),
+        Reply::Err(e) => bail!("server error: {}", e.msg),
+        other => bail!("unexpected reply {other:?}"),
+    }
+    Ok(())
+}
+
+/// `manticore health` — probe a running server's fault/degradation
+/// state over one connection: status, retired slots, admission
+/// headroom, recovered panics, expired deadlines.
+fn cmd_health(args: &cli::Args) -> Result<()> {
+    use manticore::serve::protocol::{Reply, Request};
+    use std::io::{BufRead, BufReader, Write};
+
+    let addr = args.get_or(
+        "addr",
+        &format!("127.0.0.1:{}", manticore::serve::protocol::DEFAULT_PORT),
+    );
+    let stream = std::net::TcpStream::connect(&addr)
+        .with_context(|| format!("connecting to {addr}"))?;
+    let mut reader =
+        BufReader::new(stream.try_clone().context("cloning stream")?);
+    let mut writer = stream;
+    writeln!(writer, "{}", Request::Health.to_line())
+        .context("sending health request")?;
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading health reply")?;
+    match Reply::parse(&line)? {
+        Reply::Health(h) => {
+            println!("status: {}", h.status.as_str());
+            println!(
+                "slots: {} active, {} retired ({} faulty clusters)",
+                h.slots.saturating_sub(h.retired_slots),
+                h.retired_slots,
+                h.faulty_clusters
+            );
+            println!(
+                "admission: {} pending of {} budget ({} headroom)",
+                h.pending, h.max_pending, h.headroom
+            );
+            println!(
+                "faults absorbed: {} worker panics, {} expired deadlines",
+                h.worker_panics, h.expired
+            );
+            // Non-Ok state exits 1 so scripts can gate on degradation.
+            if !matches!(
+                h.status,
+                manticore::serve::protocol::HealthStatus::Ok
+            ) {
+                std::process::exit(1);
+            }
+        }
         Reply::Err(e) => bail!("server error: {}", e.msg),
         other => bail!("unexpected reply {other:?}"),
     }
@@ -341,15 +463,31 @@ fn cmd_loadgen(args: &cli::Args, artifacts_dir: &str) -> Result<()> {
         artifacts_dir: artifacts_dir.to_string(),
         json_path: args.get("json").map(str::to_string),
         shutdown: args.has_flag("shutdown"),
+        retries: args.get_usize("retries", 0)?,
+        backoff_ms: args.get_f64("backoff-ms", 10.0)?,
+        deadline_ms: args.get_f64("deadline-ms", 0.0)?,
     };
     println!(
-        "loadgen: {} x {} requests @ {} (concurrency {}{})",
+        "loadgen: {} x {} requests @ {} (concurrency {}{}{}{})",
         cfg.artifact,
         cfg.requests,
         cfg.addr,
         cfg.concurrency,
         if cfg.rate > 0.0 {
             format!(", open-loop {} req/s", cfg.rate)
+        } else {
+            String::new()
+        },
+        if cfg.retries > 0 {
+            format!(
+                ", retries {} (backoff {} ms base)",
+                cfg.retries, cfg.backoff_ms
+            )
+        } else {
+            String::new()
+        },
+        if cfg.deadline_ms > 0.0 {
+            format!(", deadline {} ms", cfg.deadline_ms)
         } else {
             String::new()
         }
@@ -468,7 +606,7 @@ fn cmd_bench_merge(args: &cli::Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_repro(args: &cli::Args, artifacts_dir: &str) -> Result<()> {
+fn cmd_repro(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> {
     let which = args
         .positional
         .first()
@@ -498,6 +636,27 @@ fn cmd_repro(args: &cli::Args, artifacts_dir: &str) -> Result<()> {
             b.print();
         }
         "fig3" => repro::fig3().print(),
+        "faults" => {
+            let rates: Vec<f64> = args
+                .get_or("rates", "0,0.0625,0.125,0.25,0.5")
+                .split(',')
+                .filter(|s| !s.trim().is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse::<f64>()
+                        .map_err(|e| anyhow::anyhow!("bad fault rate '{s}': {e}"))
+                })
+                .collect::<Result<_>>()?;
+            repro::faults(
+                &cfg.system,
+                cfg.vdd,
+                args.get_usize("slot-clusters", 32)?,
+                args.get_usize("dim", 256)?,
+                args.get_usize("seed", 42)? as u64,
+                &rates,
+            )
+            .print();
+        }
         "area" => repro::area().print(),
         "peaks" => repro::peaks_table().print(),
         "all" => {

@@ -477,6 +477,56 @@ pub fn sim_ops(
     Ok(rep.table(max_rows))
 }
 
+/// Degradation curve (`manticore repro faults`): throughput and
+/// J/request of the reference GEMM on the machine left after a seeded
+/// [`crate::system::FaultPlan`] retires the placement slots its
+/// faulty clusters intersect — the priced form of the serve layer's
+/// degraded-machine model.
+pub fn faults(
+    sys: &SystemConfig,
+    vdd: f64,
+    slot_clusters: usize,
+    dim: usize,
+    seed: u64,
+    rates: &[f64],
+) -> Table {
+    let pts = crate::system::degradation_curve(
+        sys,
+        vdd,
+        slot_clusters,
+        dim,
+        seed,
+        rates,
+    );
+    let mut t = Table::new(
+        &format!(
+            "degradation curve — {dim}^3 f64 GEMM, {slot_clusters}-cluster \
+             slots, fault seed {seed}"
+        ),
+        &[
+            "fault rate",
+            "faulty clusters",
+            "retired slots",
+            "surviving clusters",
+            "throughput",
+            "J/request",
+            "achieved",
+        ],
+    );
+    for p in &pts {
+        t.row(vec![
+            format!("{:.1} %", p.fault_rate * 100.0),
+            p.faulty_clusters.to_string(),
+            format!("{} of {}", p.retired_slots, p.retired_slots + p.active_slots),
+            p.surviving_clusters.to_string(),
+            format!("{:.1} req/s", p.throughput_rps),
+            format!("{:.4} J", p.j_per_request),
+            fmt_si(p.achieved_flops, "flop/s"),
+        ]);
+    }
+    t
+}
+
 /// Run every harness (the `repro all` command).
 pub fn all() -> Vec<Table> {
     let mut out = vec![fig5(2048), fig6()];
@@ -559,6 +609,22 @@ mod tests {
     fn all_runs() {
         let tables = all();
         assert!(tables.len() >= 9);
+    }
+
+    #[test]
+    fn faults_curve_prices_each_rate() {
+        let t = faults(
+            &SystemConfig::default(),
+            0.9,
+            32,
+            128,
+            1,
+            &[0.0, 0.0625, 0.25],
+        );
+        assert_eq!(t.rows.len(), 3);
+        assert_eq!(t.rows[0][0], "0.0 %");
+        // The healthy row retires nothing.
+        assert!(t.rows[0][2].starts_with("0 of "), "{:?}", t.rows[0]);
     }
 
     #[test]

@@ -105,11 +105,22 @@ pub struct Pending {
     pub artifact: String,
     pub inputs: Vec<Tensor>,
     pub enqueued: Instant,
+    /// Absolute service deadline (admission time + the request's
+    /// `deadline_ms`). Work found past it anywhere in the pipeline is
+    /// answered with `deadline_exceeded` instead of executed.
+    pub deadline: Option<Instant>,
     pub reply: ReplyTo,
     /// Span handoff from the admitting reactor: the worker's spans
     /// stitch under the request's admission span (inert ids when
     /// tracing is off).
     pub ctx: SpanCtx,
+}
+
+impl Pending {
+    /// Whether the request's deadline has passed at `now`.
+    pub fn expired_at(&self, now: Instant) -> bool {
+        matches!(self.deadline, Some(d) if now >= d)
+    }
 }
 
 struct QueueState {
@@ -189,6 +200,25 @@ impl BatchQueue {
         Some(batch)
     }
 
+    /// The queue-level deadline check: remove every queued request
+    /// whose deadline has already passed, so stale work never reaches
+    /// a slot lease. The caller answers each with a typed
+    /// `deadline_exceeded` through its [`ReplyTo`].
+    pub fn take_expired(&self) -> Vec<Pending> {
+        let now = Instant::now();
+        let mut st = self.state.lock().unwrap();
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < st.q.len() {
+            if st.q[i].expired_at(now) {
+                out.push(st.q.remove(i).expect("index in bounds"));
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
     /// Stop the queue: refuses new work, wakes every waiter; workers
     /// drain what is queued and then see `None`.
     pub fn stop(&self) {
@@ -216,6 +246,7 @@ mod tests {
                 artifact: artifact.to_string(),
                 inputs: Vec::new(),
                 enqueued: Instant::now(),
+                deadline: None,
                 reply: ReplyTo::Sync(tx),
                 ctx: SpanCtx::none(),
             },
@@ -274,6 +305,30 @@ mod tests {
         let batch = q.pop_batch().unwrap();
         assert_eq!(batch.len(), 2, "late same-artifact arrival joins");
         h.join().unwrap();
+    }
+
+    #[test]
+    fn expired_requests_are_swept_before_execution() {
+        let q = BatchQueue::new(Duration::from_millis(5), 8);
+        let now = Instant::now();
+        // One request already past its deadline, one with headroom,
+        // one with no deadline at all.
+        let (mut stale, _rx1) = pending("a");
+        stale.deadline = Some(now - Duration::from_millis(1));
+        let (mut live, _rx2) = pending("a");
+        live.deadline = Some(now + Duration::from_secs(60));
+        let (eternal, _rx3) = pending("a");
+        assert!(stale.expired_at(now));
+        assert!(!live.expired_at(now));
+        assert!(!eternal.expired_at(now));
+        let _ = q.push(stale);
+        let _ = q.push(live);
+        let _ = q.push(eternal);
+        let expired = q.take_expired();
+        assert_eq!(expired.len(), 1, "only the stale request is swept");
+        assert_eq!(q.len(), 2, "live requests stay queued in order");
+        let batch = q.pop_batch().unwrap();
+        assert_eq!(batch.len(), 2);
     }
 
     #[test]

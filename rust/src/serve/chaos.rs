@@ -1,0 +1,371 @@
+//! Deterministic chaos injection for the serve stack
+//! (`serve --chaos <spec.json>`).
+//!
+//! Every failure path the fault-tolerance layer claims to handle —
+//! worker panics, slot faults, slow replies, dropped connections —
+//! is exercisable on demand, seeded and reproducible: each injection
+//! stream draws its decisions from a counter-indexed hash of the spec
+//! seed, so the k-th executed request (or k-th request line) gets the
+//! same verdict on every run with the same spec, independent of
+//! thread interleaving.
+//!
+//! Spec schema (all fields optional; absent = no injection):
+//!
+//! ```json
+//! {
+//!   "seed": 42,
+//!   "worker_panic_rate": 0.05,
+//!   "reply_delay_rate": 0.10,
+//!   "reply_delay_ms": 15,
+//!   "conn_drop_rate": 0.02,
+//!   "slot_faults": [{"after_requests": 50, "slot": 3}]
+//! }
+//! ```
+//!
+//! * `worker_panic_rate` — probability an execution panics *inside*
+//!   the worker's `catch_unwind` region (exercises panic isolation
+//!   and poisoned-lock recovery).
+//! * `reply_delay_rate`/`reply_delay_ms` — probability a completed
+//!   request's reply is delayed, and by how long (exercises client
+//!   timeouts and deadline expiry).
+//! * `conn_drop_rate` — probability a request line answers with an
+//!   injected connection hangup (exercises client drop accounting
+//!   and reconnect/retry paths).
+//! * `slot_faults` — scheduled degradation: after the n-th completed
+//!   execution, retire the given slot (exercises `SlotPool`
+//!   retirement mid-burst).
+
+use crate::util::json::{self, Value};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// One scheduled slot fault: retire `slot` once `after_requests`
+/// executions have completed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlotFault {
+    pub after_requests: u64,
+    pub slot: usize,
+}
+
+/// Parsed chaos spec (see the module docs for the schema).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosSpec {
+    pub seed: u64,
+    pub worker_panic_rate: f64,
+    pub reply_delay_rate: f64,
+    pub reply_delay_ms: f64,
+    pub conn_drop_rate: f64,
+    pub slot_faults: Vec<SlotFault>,
+}
+
+impl Default for ChaosSpec {
+    fn default() -> Self {
+        ChaosSpec {
+            seed: 0,
+            worker_panic_rate: 0.0,
+            reply_delay_rate: 0.0,
+            reply_delay_ms: 0.0,
+            conn_drop_rate: 0.0,
+            slot_faults: Vec::new(),
+        }
+    }
+}
+
+fn rate(v: &Value, key: &str) -> Result<f64, String> {
+    match v.get(key).map(Value::as_f64) {
+        None => Ok(0.0),
+        Some(Some(r)) if (0.0..=1.0).contains(&r) => Ok(r),
+        Some(Some(r)) => {
+            Err(format!("chaos spec: {key} must be in [0,1], got {r}"))
+        }
+        Some(None) => Err(format!("chaos spec: {key} must be a number")),
+    }
+}
+
+impl ChaosSpec {
+    pub fn from_json(text: &str) -> Result<ChaosSpec, String> {
+        let v = json::parse(text).map_err(|e| format!("chaos spec: {e}"))?;
+        let obj = v.as_obj().ok_or("chaos spec: expected a JSON object")?;
+        for k in obj.keys() {
+            if !matches!(
+                k.as_str(),
+                "seed"
+                    | "worker_panic_rate"
+                    | "reply_delay_rate"
+                    | "reply_delay_ms"
+                    | "conn_drop_rate"
+                    | "slot_faults"
+            ) {
+                return Err(format!("chaos spec: unknown key {k:?}"));
+            }
+        }
+        let mut spec = ChaosSpec {
+            seed: v.get("seed").and_then(Value::as_f64).unwrap_or(0.0) as u64,
+            worker_panic_rate: rate(&v, "worker_panic_rate")?,
+            reply_delay_rate: rate(&v, "reply_delay_rate")?,
+            reply_delay_ms: v
+                .get("reply_delay_ms")
+                .and_then(Value::as_f64)
+                .unwrap_or(0.0)
+                .max(0.0),
+            conn_drop_rate: rate(&v, "conn_drop_rate")?,
+            slot_faults: Vec::new(),
+        };
+        if let Some(faults) = v.get("slot_faults") {
+            let arr = faults
+                .as_arr()
+                .ok_or("chaos spec: slot_faults must be an array")?;
+            for f in arr {
+                let after = f
+                    .get("after_requests")
+                    .and_then(Value::as_usize)
+                    .ok_or("chaos spec: slot fault needs after_requests")?;
+                let slot = f
+                    .get("slot")
+                    .and_then(Value::as_usize)
+                    .ok_or("chaos spec: slot fault needs slot")?;
+                spec.slot_faults
+                    .push(SlotFault { after_requests: after as u64, slot });
+            }
+            spec.slot_faults.sort_by_key(|f| f.after_requests);
+        }
+        Ok(spec)
+    }
+
+    pub fn load(path: &str) -> Result<ChaosSpec, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("chaos spec {path}: {e}"))?;
+        ChaosSpec::from_json(&text)
+    }
+
+    /// Whether this spec injects nothing at all.
+    pub fn is_noop(&self) -> bool {
+        self.worker_panic_rate == 0.0
+            && (self.reply_delay_rate == 0.0 || self.reply_delay_ms == 0.0)
+            && self.conn_drop_rate == 0.0
+            && self.slot_faults.is_empty()
+    }
+}
+
+/// splitmix64 — maps (seed, stream, index) to an iid-looking u64, so
+/// each injection stream is deterministic in its own event order.
+fn mix(seed: u64, stream: u64, n: u64) -> u64 {
+    let mut z = seed
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(stream.wrapping_mul(0xBF58_476D_1CE4_E5B9))
+        .wrapping_add(n.wrapping_add(1).wrapping_mul(0x94D0_49BB_1331_11EB));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+fn decide(seed: u64, stream: u64, n: u64, rate: f64) -> bool {
+    if rate <= 0.0 {
+        return false;
+    }
+    let u = (mix(seed, stream, n) >> 11) as f64 / (1u64 << 53) as f64;
+    u < rate
+}
+
+const STREAM_PANIC: u64 = 1;
+const STREAM_DELAY: u64 = 2;
+const STREAM_DROP: u64 = 3;
+
+/// The live injector threaded through the server. All state is
+/// atomic/lock-protected; decision sequences are per-stream counters
+/// so concurrent workers draw disjoint indices.
+pub struct Chaos {
+    spec: ChaosSpec,
+    exec_seq: AtomicU64,
+    delay_seq: AtomicU64,
+    line_seq: AtomicU64,
+    completed: AtomicU64,
+    injected_panics: AtomicU64,
+    injected_delays: AtomicU64,
+    injected_drops: AtomicU64,
+    /// Index of the next not-yet-fired scheduled slot fault.
+    next_fault: Mutex<usize>,
+}
+
+impl Chaos {
+    pub fn new(spec: ChaosSpec) -> Chaos {
+        Chaos {
+            spec,
+            exec_seq: AtomicU64::new(0),
+            delay_seq: AtomicU64::new(0),
+            line_seq: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            injected_panics: AtomicU64::new(0),
+            injected_delays: AtomicU64::new(0),
+            injected_drops: AtomicU64::new(0),
+            next_fault: Mutex::new(0),
+        }
+    }
+
+    pub fn spec(&self) -> &ChaosSpec {
+        &self.spec
+    }
+
+    /// Should the current execution panic? Called by the worker inside
+    /// its `catch_unwind` region, once per request execution.
+    pub fn inject_panic(&self) -> bool {
+        let n = self.exec_seq.fetch_add(1, Ordering::Relaxed);
+        let hit =
+            decide(self.spec.seed, STREAM_PANIC, n, self.spec.worker_panic_rate);
+        if hit {
+            self.injected_panics.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Delay to impose before sending the current reply, if any.
+    pub fn reply_delay(&self) -> Option<Duration> {
+        let n = self.delay_seq.fetch_add(1, Ordering::Relaxed);
+        if self.spec.reply_delay_ms <= 0.0
+            || !decide(
+                self.spec.seed,
+                STREAM_DELAY,
+                n,
+                self.spec.reply_delay_rate,
+            )
+        {
+            return None;
+        }
+        self.injected_delays.fetch_add(1, Ordering::Relaxed);
+        Some(Duration::from_secs_f64(self.spec.reply_delay_ms / 1e3))
+    }
+
+    /// Should the current request line answer with a connection
+    /// hangup? Called by the front-end once per parsed `run` line.
+    pub fn inject_conn_drop(&self) -> bool {
+        let n = self.line_seq.fetch_add(1, Ordering::Relaxed);
+        let hit =
+            decide(self.spec.seed, STREAM_DROP, n, self.spec.conn_drop_rate);
+        if hit {
+            self.injected_drops.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Mark one execution complete and collect any scheduled slot
+    /// faults that just became due. The caller retires the returned
+    /// slot ids on its pool.
+    pub fn on_request_done(&self) -> Vec<usize> {
+        let done = self.completed.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.spec.slot_faults.is_empty() {
+            return Vec::new();
+        }
+        let mut idx =
+            self.next_fault.lock().unwrap_or_else(|p| p.into_inner());
+        let mut due = Vec::new();
+        while *idx < self.spec.slot_faults.len()
+            && self.spec.slot_faults[*idx].after_requests <= done
+        {
+            due.push(self.spec.slot_faults[*idx].slot);
+            *idx += 1;
+        }
+        due
+    }
+
+    /// Injection totals for the shutdown log: (what, count).
+    pub fn summary(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("worker panics", self.injected_panics.load(Ordering::Relaxed)),
+            ("reply delays", self.injected_delays.load(Ordering::Relaxed)),
+            ("conn drops", self.injected_drops.load(Ordering::Relaxed)),
+            ("slot faults", {
+                let idx =
+                    self.next_fault.lock().unwrap_or_else(|p| p.into_inner());
+                *idx as u64
+            }),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_and_validates() {
+        let s = ChaosSpec::from_json(
+            r#"{"seed": 7, "worker_panic_rate": 0.5, "reply_delay_rate": 0.25,
+                "reply_delay_ms": 10, "conn_drop_rate": 0.1,
+                "slot_faults": [{"after_requests": 8, "slot": 1},
+                                 {"after_requests": 4, "slot": 0}]}"#,
+        )
+        .unwrap();
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.worker_panic_rate, 0.5);
+        // Faults are sorted by due time regardless of spec order.
+        assert_eq!(
+            s.slot_faults,
+            vec![
+                SlotFault { after_requests: 4, slot: 0 },
+                SlotFault { after_requests: 8, slot: 1 },
+            ]
+        );
+        assert!(!s.is_noop());
+        assert!(ChaosSpec::from_json("{}").unwrap().is_noop());
+        assert!(ChaosSpec::from_json(r#"{"worker_panic_rate": 1.5}"#).is_err());
+        assert!(ChaosSpec::from_json(r#"{"typo_rate": 0.1}"#).is_err());
+        assert!(ChaosSpec::from_json("[]").is_err());
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_rate_shaped() {
+        let spec = ChaosSpec {
+            seed: 42,
+            worker_panic_rate: 0.3,
+            ..ChaosSpec::default()
+        };
+        let a: Vec<bool> = {
+            let c = Chaos::new(spec.clone());
+            (0..1000).map(|_| c.inject_panic()).collect()
+        };
+        let b: Vec<bool> = {
+            let c = Chaos::new(spec.clone());
+            (0..1000).map(|_| c.inject_panic()).collect()
+        };
+        assert_eq!(a, b, "same seed, same verdict sequence");
+        let hits = a.iter().filter(|&&h| h).count();
+        assert!(
+            (200..400).contains(&hits),
+            "rate 0.3 over 1000 draws gave {hits}"
+        );
+        let other = Chaos::new(ChaosSpec { seed: 43, ..spec });
+        let c: Vec<bool> = (0..1000).map(|_| other.inject_panic()).collect();
+        assert_ne!(a, c, "different seeds should differ");
+    }
+
+    #[test]
+    fn zero_rates_never_fire() {
+        let c = Chaos::new(ChaosSpec::default());
+        for _ in 0..100 {
+            assert!(!c.inject_panic());
+            assert!(c.reply_delay().is_none());
+            assert!(!c.inject_conn_drop());
+            assert!(c.on_request_done().is_empty());
+        }
+        assert!(c.summary().iter().all(|&(_, n)| n == 0));
+    }
+
+    #[test]
+    fn scheduled_slot_faults_fire_once_in_order() {
+        let spec = ChaosSpec::from_json(
+            r#"{"slot_faults": [{"after_requests": 2, "slot": 5},
+                                 {"after_requests": 2, "slot": 6},
+                                 {"after_requests": 4, "slot": 7}]}"#,
+        )
+        .unwrap();
+        let c = Chaos::new(spec);
+        assert!(c.on_request_done().is_empty()); // 1 done
+        assert_eq!(c.on_request_done(), vec![5, 6]); // 2 done
+        assert!(c.on_request_done().is_empty()); // 3 done
+        assert_eq!(c.on_request_done(), vec![7]); // 4 done
+        assert!(c.on_request_done().is_empty());
+        let faults = c.summary().iter().find(|&&(k, _)| k == "slot faults").unwrap().1;
+        assert_eq!(faults, 3);
+    }
+}

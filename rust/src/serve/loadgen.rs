@@ -62,6 +62,16 @@ pub struct LoadgenConfig {
     pub json_path: Option<String>,
     /// Send a `shutdown` request after the burst.
     pub shutdown: bool,
+    /// Max retry attempts per request after a typed `overloaded`
+    /// refusal (0 = report the refusal and move on).
+    pub retries: usize,
+    /// Base retry backoff [ms]; the actual wait is
+    /// `max(server retry_after_ms hint, base * 2^attempt)` capped at
+    /// [`MAX_BACKOFF_MS`], with deterministic jitter.
+    pub backoff_ms: f64,
+    /// Per-request service deadline sent on every `run` [ms];
+    /// 0 = none.
+    pub deadline_ms: f64,
 }
 
 impl Default for LoadgenConfig {
@@ -79,8 +89,24 @@ impl Default for LoadgenConfig {
             artifacts_dir: "artifacts".to_string(),
             json_path: None,
             shutdown: false,
+            retries: 0,
+            backoff_ms: 10.0,
+            deadline_ms: 0.0,
         }
     }
+}
+
+/// Cap on one retry backoff sleep [ms].
+const MAX_BACKOFF_MS: f64 = 1000.0;
+
+/// How long to wait before retry attempt `attempt` (0-based): the
+/// larger of the server's `retry_after_ms` hint and capped binary
+/// exponential backoff, scaled by deterministic jitter in [0.5, 1.0)
+/// so retrying clients decorrelate instead of re-colliding.
+fn backoff(base_ms: f64, hint_ms: f64, attempt: u64, rng: &mut Rng) -> Duration {
+    let exp = base_ms.max(0.1) * (1u64 << attempt.min(10)) as f64;
+    let wait_ms = hint_ms.max(exp).min(MAX_BACKOFF_MS);
+    Duration::from_secs_f64(wait_ms * (0.5 + rng.f64() * 0.5) / 1e3)
 }
 
 /// What one burst produced.
@@ -88,12 +114,28 @@ impl Default for LoadgenConfig {
 pub struct LoadgenReport {
     pub ok_requests: u64,
     pub errors: u64,
-    /// Requests refused by admission control (typed `overloaded`).
+    /// Requests whose *final* reply was an admission-control refusal
+    /// (typed `overloaded`); retried-then-completed requests count in
+    /// `ok_requests` instead.
     pub rejected: u64,
+    /// Requests answered `deadline_exceeded` (the request carried
+    /// `--deadline-ms` and the server expired it).
+    pub expired: u64,
+    /// Total retry attempts sent (`--retries`).
+    pub retries: u64,
+    /// Requests that exhausted their retry budget still overloaded
+    /// (a subset of `rejected`).
+    pub gave_up: u64,
+    /// Completed requests that needed at least one retry; their
+    /// latencies (measured from the original send/due time, so the
+    /// backoff is included) are reported separately from
+    /// first-attempt completions.
+    pub retried_ok: u64,
     /// Open loop: sends that left the sender later than the schedule
     /// tolerates (2 inter-arrival intervals, min 10 ms).
     pub late_sends: u64,
-    /// Open loop: sends that never received a reply.
+    /// Sends that never received a reply (open-loop sends unanswered
+    /// at exit, and connections the server dropped mid-request).
     pub dropped: u64,
     /// Open-loop target arrival rate (0 = closed loop).
     pub target_rps: f64,
@@ -182,8 +224,18 @@ impl LoadgenReport {
             "rejected (overloaded)",
             self.rejected.to_string(),
         );
-        if self.target_rps > 0.0 {
-            row(&mut t, "late sends", self.late_sends.to_string());
+        if self.expired > 0 {
+            row(&mut t, "expired (deadline)", self.expired.to_string());
+        }
+        if self.retries > 0 || self.gave_up > 0 {
+            row(&mut t, "retry attempts", self.retries.to_string());
+            row(&mut t, "retried, then ok", self.retried_ok.to_string());
+            row(&mut t, "gave up (retries spent)", self.gave_up.to_string());
+        }
+        if self.target_rps > 0.0 || self.dropped > 0 {
+            if self.target_rps > 0.0 {
+                row(&mut t, "late sends", self.late_sends.to_string());
+            }
             row(&mut t, "dropped (no reply)", self.dropped.to_string());
         }
         row(&mut t, "throughput", format!("{:.1} req/s", self.rps));
@@ -241,10 +293,17 @@ impl LoadgenReport {
 
 #[derive(Default)]
 struct ThreadStats {
+    /// Latencies of requests completed on their first attempt.
     latencies: Vec<f64>,
+    /// Latencies of requests completed after >= 1 retry, measured
+    /// from the original send/due time (the backoff is inside).
+    retried_latencies: Vec<f64>,
     ok: u64,
     errors: u64,
     rejected: u64,
+    expired: u64,
+    retries: u64,
+    gave_up: u64,
     late: u64,
     dropped: u64,
     slots: BTreeSet<usize>,
@@ -289,6 +348,7 @@ fn record_reply(
     st: &mut ThreadStats,
     reply: Reply,
     sent: Instant,
+    retried: bool,
     inputs: Option<Vec<Tensor>>,
     sample: &Mutex<Option<(Vec<Tensor>, Vec<Tensor>)>>,
 ) {
@@ -296,9 +356,16 @@ fn record_reply(
         Reply::Run(run) => {
             // Latency samples cover *completed* requests only — the
             // JSON report's `iters` is therefore the completed-request
-            // count the CI smoke gate asserts on.
+            // count the CI smoke gate asserts on. Retried completions
+            // land in their own sample: their latency includes the
+            // backoff and would otherwise poison the first-attempt
+            // distribution.
             let latency_s = sent.elapsed().as_secs_f64();
-            st.latencies.push(latency_s);
+            if retried {
+                st.retried_latencies.push(latency_s);
+            } else {
+                st.latencies.push(latency_s);
+            }
             st.ok += 1;
             if let Some(t) = run.timing {
                 // Server-side stages, plus the client-observed
@@ -326,6 +393,12 @@ fn record_reply(
         }
         Reply::Err(e) if e.code == ErrCode::Overloaded => {
             st.rejected += 1;
+            if retried {
+                st.gave_up += 1;
+            }
+        }
+        Reply::Err(e) if e.code == ErrCode::DeadlineExceeded => {
+            st.expired += 1;
         }
         Reply::Err(e) => {
             eprintln!("loadgen: server error: {}", e.msg);
@@ -338,24 +411,61 @@ fn record_reply(
     }
 }
 
+/// One outstanding open-loop send: the *original* scheduled due time
+/// (the latency origin even across retries), how many retries it has
+/// consumed, its inputs (needed again on retry), and whether it is
+/// the kept cross-check sample.
+struct Outstanding {
+    due: Instant,
+    tries: u64,
+    inputs: Vec<Tensor>,
+    keep: bool,
+}
+
+/// A refused request waiting out its backoff before being resent.
+struct RetryAt {
+    resend_at: Instant,
+    entry: Outstanding,
+}
+
+/// Shared state between one open-loop client's sender and receiver.
+struct OpenLoopShared {
+    /// FIFO of outstanding sends. Replies come back in request order
+    /// on one connection, so front-of-FIFO is always the reply's
+    /// request.
+    inflight: Mutex<VecDeque<Outstanding>>,
+    /// Refusals the receiver scheduled for retry; the sender resends
+    /// them once due.
+    retryq: Mutex<Vec<RetryAt>>,
+    /// Sender finished (schedule spent and retry queue drained).
+    sender_done: AtomicBool,
+    /// Receiver exited (EOF / read timeout): the sender stops
+    /// feeding retries into a dead connection.
+    recv_dead: AtomicBool,
+}
+
 /// One open-loop client: a sender thread that writes each request at
 /// its scheduled due time (sleeping, never waiting for replies) and a
 /// receiver thread that matches replies to the FIFO of outstanding
 /// sends. Requests `client_id, client_id+conc, ...` of the global
 /// schedule belong to this client; request k is due at `t0 + k/rate`.
+/// With `--retries`, `overloaded` refusals re-enter through a backoff
+/// queue instead of resolving; latency of a retried completion is
+/// still measured from the original due time.
 #[allow(clippy::too_many_arguments)]
 fn open_loop_client(
     addr: &str,
     artifact: &str,
     meta: &ArtifactMeta,
-    seed: u64,
+    cfg: &LoadgenConfig,
     client_id: usize,
     conc: usize,
-    requests: usize,
-    rate: f64,
     t0: Instant,
     sample: Arc<Mutex<Option<(Vec<Tensor>, Vec<Tensor>)>>>,
 ) -> Result<ThreadStats> {
+    let (seed, requests, rate) = (cfg.seed, cfg.requests, cfg.rate);
+    let (max_retries, backoff_ms) = (cfg.retries as u64, cfg.backoff_ms);
+    let deadline_ms = (cfg.deadline_ms > 0.0).then_some(cfg.deadline_ms);
     let stream = TcpStream::connect(addr)
         .with_context(|| format!("connecting to {addr}"))?;
     let _ = stream.set_nodelay(true);
@@ -367,23 +477,24 @@ fn open_loop_client(
         .set_read_timeout(Some(Duration::from_secs(20)))
         .context("setting read timeout")?;
 
-    // FIFO of outstanding sends (due time + the inputs kept for the
-    // cross-check sample), plus the sender-finished flag. Replies come
-    // back in request order on one connection, so front-of-FIFO is
-    // always the reply's request.
-    type Outstanding = VecDeque<(Instant, Option<Vec<Tensor>>)>;
-    let inflight: Arc<(Mutex<Outstanding>, AtomicBool)> =
-        Arc::new((Mutex::new(VecDeque::new()), AtomicBool::new(false)));
+    let shared = Arc::new(OpenLoopShared {
+        inflight: Mutex::new(VecDeque::new()),
+        retryq: Mutex::new(Vec::new()),
+        sender_done: AtomicBool::new(false),
+        recv_dead: AtomicBool::new(false),
+    });
 
     let recv = {
-        let inflight = inflight.clone();
+        let shared = shared.clone();
         let sample = sample.clone();
+        let mut jitter =
+            Rng::new(seed ^ 0x0FF_BACC ^ ((client_id as u64) << 40));
         std::thread::spawn(move || -> ThreadStats {
             let mut reader = BufReader::new(reader_stream);
             let mut st = ThreadStats::default();
             loop {
-                if inflight.0.lock().unwrap().is_empty() {
-                    if inflight.1.load(Ordering::SeqCst) {
+                if shared.inflight.lock().unwrap().is_empty() {
+                    if shared.sender_done.load(Ordering::SeqCst) {
                         break;
                     }
                     std::thread::sleep(Duration::from_millis(1));
@@ -394,15 +505,43 @@ fn open_loop_client(
                     Ok(0) | Err(_) => break,
                     Ok(_) => {}
                 }
-                let (due, kept) = inflight
-                    .0
+                let out = shared
+                    .inflight
                     .lock()
                     .unwrap()
                     .pop_front()
                     .expect("reply without an outstanding send");
                 match Reply::parse(&line) {
+                    Ok(Reply::Err(e))
+                        if e.code == ErrCode::Overloaded
+                            && out.tries < max_retries =>
+                    {
+                        // Refused with retry budget left: back off per
+                        // the server's hint, then resend through the
+                        // sender. Not resolved yet — no stats move.
+                        let hint = e.retry_after_ms.unwrap_or(0.0);
+                        let wait = backoff(
+                            backoff_ms, hint, out.tries, &mut jitter,
+                        );
+                        st.retries += 1;
+                        shared.retryq.lock().unwrap().push(RetryAt {
+                            resend_at: Instant::now() + wait,
+                            entry: Outstanding {
+                                tries: out.tries + 1,
+                                ..out
+                            },
+                        });
+                    }
                     Ok(reply) => {
-                        record_reply(&mut st, reply, due, kept, &sample)
+                        let kept = out.keep.then_some(out.inputs);
+                        record_reply(
+                            &mut st,
+                            reply,
+                            out.due,
+                            out.tries > 0,
+                            kept,
+                            &sample,
+                        );
                     }
                     Err(e) => {
                         eprintln!("loadgen: bad reply line: {e}");
@@ -410,8 +549,9 @@ fn open_loop_client(
                     }
                 }
             }
+            shared.recv_dead.store(true, Ordering::SeqCst);
             // Everything still outstanding never got an answer.
-            st.dropped += inflight.0.lock().unwrap().len() as u64;
+            st.dropped += shared.inflight.lock().unwrap().len() as u64;
             st
         })
     };
@@ -424,28 +564,59 @@ fn open_loop_client(
     let mut writer = stream;
     let mut sent = 0usize;
     let mut late = 0u64;
-    for (i, k) in schedule.iter().enumerate() {
-        let due = t0 + Duration::from_secs_f64(*k as f64 * interval);
+    let mut dropped_retries = 0u64;
+
+    // Send one entry: push to the in-flight FIFO first (the reply can
+    // race back), withdraw it if the write fails.
+    let send_entry = |writer: &mut TcpStream, entry: Outstanding| -> bool {
+        let req = Request::Run {
+            artifact: artifact.to_string(),
+            inputs: entry.inputs.clone(),
+            deadline_ms,
+        };
+        let mut q = shared.inflight.lock().unwrap();
+        q.push_back(entry);
+        drop(q);
+        if writeln!(writer, "{}", req.to_line()).is_err() {
+            shared.inflight.lock().unwrap().pop_back();
+            return false;
+        }
+        true
+    };
+    // Pop a due retry, if any.
+    let due_retry = || -> Option<Outstanding> {
+        let mut q = shared.retryq.lock().unwrap();
         let now = Instant::now();
-        if due > now {
-            std::thread::sleep(due - now);
+        let i = q.iter().position(|r| r.resend_at <= now)?;
+        Some(q.swap_remove(i).entry)
+    };
+
+    'schedule: for (i, k) in schedule.iter().enumerate() {
+        let due = t0 + Duration::from_secs_f64(*k as f64 * interval);
+        // Feed due retries while pacing toward the next scheduled
+        // send — a retry's backoff must not wait out the schedule.
+        loop {
+            if let Some(entry) = due_retry() {
+                if !send_entry(&mut writer, entry) {
+                    dropped_retries += 1;
+                    break 'schedule;
+                }
+                continue;
+            }
+            let now = Instant::now();
+            if now >= due {
+                break;
+            }
+            std::thread::sleep((due - now).min(Duration::from_millis(1)));
         }
         let inputs = inputs_for(meta, seed, client_id, i as u64)?;
         // Only the very first request keeps its inputs, for the
         // single cross-check sample.
         let keep = client_id == 0 && i == 0;
-        inflight.0.lock().unwrap().push_back((
-            due,
-            if keep { Some(inputs.clone()) } else { None },
-        ));
-        let req = Request::Run {
-            artifact: artifact.to_string(),
-            inputs,
-        };
-        if writeln!(writer, "{}", req.to_line()).is_err() {
-            // Connection died mid-burst: withdraw the entry just
-            // queued; the rest of this client's schedule is dropped.
-            inflight.0.lock().unwrap().pop_back();
+        if !send_entry(
+            &mut writer,
+            Outstanding { due, tries: 0, inputs, keep },
+        ) {
             break;
         }
         if Instant::now().saturating_duration_since(due) > late_after {
@@ -453,10 +624,33 @@ fn open_loop_client(
         }
         sent += 1;
     }
-    inflight.1.store(true, Ordering::SeqCst);
+    // Schedule spent: drain the retry queue until every outstanding
+    // request resolves (or the receiver gives up).
+    loop {
+        if shared.recv_dead.load(Ordering::SeqCst) {
+            break;
+        }
+        if let Some(entry) = due_retry() {
+            if !send_entry(&mut writer, entry) {
+                dropped_retries += 1;
+                break;
+            }
+            continue;
+        }
+        if shared.retryq.lock().unwrap().is_empty()
+            && shared.inflight.lock().unwrap().is_empty()
+        {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // Retries never resent (dead receiver / dead connection) got no
+    // answer.
+    dropped_retries += shared.retryq.lock().unwrap().len() as u64;
+    shared.sender_done.store(true, Ordering::SeqCst);
     let mut st = recv.join().expect("loadgen receiver panicked");
     st.late += late;
-    st.dropped += (total - sent) as u64;
+    st.dropped += (total - sent) as u64 + dropped_retries;
     Ok(st)
 }
 
@@ -483,24 +677,38 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         let (budget, sample) = (budget.clone(), sample.clone());
         let (addr, artifact, meta) =
             (cfg.addr.clone(), cfg.artifact.clone(), meta.clone());
-        let (seed, rate, requests) = (cfg.seed, cfg.rate, cfg.requests);
-        if rate > 0.0 {
+        let cfg = cfg.clone();
+        if cfg.rate > 0.0 {
             handles.push(std::thread::spawn(move || {
                 open_loop_client(
-                    &addr, &artifact, &meta, seed, client_id, conc,
-                    requests, rate, t0, sample,
+                    &addr, &artifact, &meta, &cfg, client_id, conc, t0,
+                    sample,
                 )
             }));
             continue;
         }
         handles.push(std::thread::spawn(move || -> Result<ThreadStats> {
-            let stream = TcpStream::connect(&addr)
-                .with_context(|| format!("connecting to {addr}"))?;
-            let mut reader = BufReader::new(
-                stream.try_clone().context("cloning stream")?,
-            );
-            let mut writer = stream;
+            let (seed, max_retries) = (cfg.seed, cfg.retries as u64);
+            let deadline_ms =
+                (cfg.deadline_ms > 0.0).then_some(cfg.deadline_ms);
+            let connect = || -> Result<(BufReader<TcpStream>, TcpStream)> {
+                let stream = TcpStream::connect(&addr)
+                    .with_context(|| format!("connecting to {addr}"))?;
+                let _ = stream.set_nodelay(true);
+                stream
+                    .set_read_timeout(Some(Duration::from_secs(30)))
+                    .context("setting read timeout")?;
+                Ok((
+                    BufReader::new(
+                        stream.try_clone().context("cloning stream")?,
+                    ),
+                    stream,
+                ))
+            };
+            let (mut reader, mut writer) = connect()?;
             let mut st = ThreadStats::default();
+            let mut jitter =
+                Rng::new(seed ^ 0xBACC_0FF ^ ((client_id as u64) << 40));
             let mut attempt: u64 = 0;
             loop {
                 // Claim one request from the shared budget.
@@ -518,15 +726,62 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                 let inputs = inputs_for(&meta, seed, client_id, attempt)?;
                 attempt += 1;
                 let sent = Instant::now();
-                let reply = roundtrip(
-                    &mut reader,
-                    &mut writer,
-                    &Request::Run {
-                        artifact: artifact.clone(),
-                        inputs: inputs.clone(),
-                    },
-                )?;
-                record_reply(&mut st, reply, sent, Some(inputs), &sample);
+                // Inline retry loop: an `overloaded` refusal with
+                // budget left waits out the server's hint (or capped
+                // exponential backoff) and resends the same request.
+                let mut tries = 0u64;
+                let outcome = loop {
+                    let res = roundtrip(
+                        &mut reader,
+                        &mut writer,
+                        &Request::Run {
+                            artifact: artifact.clone(),
+                            inputs: inputs.clone(),
+                            deadline_ms,
+                        },
+                    );
+                    match res {
+                        Ok(Reply::Err(ref e))
+                            if e.code == ErrCode::Overloaded
+                                && tries < max_retries =>
+                        {
+                            let hint = e.retry_after_ms.unwrap_or(0.0);
+                            std::thread::sleep(backoff(
+                                cfg.backoff_ms,
+                                hint,
+                                tries,
+                                &mut jitter,
+                            ));
+                            tries += 1;
+                            st.retries += 1;
+                        }
+                        other => break other,
+                    }
+                };
+                match outcome {
+                    Ok(reply) => record_reply(
+                        &mut st,
+                        reply,
+                        sent,
+                        tries > 0,
+                        Some(inputs),
+                        &sample,
+                    ),
+                    Err(_) => {
+                        // The connection died mid-request (peer hangup,
+                        // e.g. injected by the chaos harness): the
+                        // in-flight request is dropped, not lost from
+                        // the accounting — reconnect and continue.
+                        st.dropped += 1;
+                        match connect() {
+                            Ok((r, w)) => {
+                                reader = r;
+                                writer = w;
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                }
             }
             Ok(st)
         }));
@@ -534,9 +789,13 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
 
     let mut hist = Histogram::new();
     let mut latencies: Vec<f64> = Vec::new();
+    let mut retried_latencies: Vec<f64> = Vec::new();
     let mut ok = 0u64;
     let mut errors = 0u64;
     let mut rejected = 0u64;
+    let mut expired = 0u64;
+    let mut retries = 0u64;
+    let mut gave_up = 0u64;
     let mut late_sends = 0u64;
     let mut dropped = 0u64;
     let mut slots = BTreeSet::new();
@@ -544,13 +803,20 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let mut stages = StageBreakdown::default();
     for h in handles {
         let st = h.join().expect("loadgen client panicked")?;
-        for &l in &st.latencies {
+        // The headline histogram covers every completion; the raw
+        // sample lists stay separate so the JSON report distinguishes
+        // first-attempt from retried latency.
+        for &l in st.latencies.iter().chain(&st.retried_latencies) {
             hist.record(l);
         }
         latencies.extend_from_slice(&st.latencies);
+        retried_latencies.extend_from_slice(&st.retried_latencies);
         ok += st.ok;
         errors += st.errors;
         rejected += st.rejected;
+        expired += st.expired;
+        retries += st.retries;
+        gave_up += st.gave_up;
         late_sends += st.late;
         dropped += st.dropped;
         slots.extend(st.slots);
@@ -618,6 +884,10 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         ok_requests: ok,
         errors,
         rejected,
+        expired,
+        retries,
+        gave_up,
+        retried_ok: retried_latencies.len() as u64,
         late_sends,
         dropped,
         target_rps: cfg.rate,
@@ -635,7 +905,7 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     };
 
     if let Some(path) = &cfg.json_path {
-        write_json_report(cfg, &report, &latencies, path)?;
+        write_json_report(cfg, &report, &latencies, &retried_latencies, path)?;
     }
     Ok(report)
 }
@@ -647,6 +917,7 @@ fn write_json_report(
     cfg: &LoadgenConfig,
     rep: &LoadgenReport,
     latencies: &[f64],
+    retried_latencies: &[f64],
     path: &str,
 ) -> Result<()> {
     let mut out = Report::new(BenchOpts {
@@ -659,6 +930,14 @@ fn write_json_report(
         out.push_sample(Sample::from_times(
             &format!("loadgen_{}_latency", cfg.artifact),
             latencies.iter().map(|l| l * 1e9).collect(),
+        ));
+    }
+    if !retried_latencies.is_empty() {
+        // Retried completions carry their backoff; a separate sample
+        // keeps the first-attempt distribution diffable on its own.
+        out.push_sample(Sample::from_times(
+            &format!("loadgen_{}_retried_latency", cfg.artifact),
+            retried_latencies.iter().map(|l| l * 1e9).collect(),
         ));
     }
     // Per-stage samples (present only under `serve --debug-timing`):
@@ -676,6 +955,24 @@ fn write_json_report(
             ));
         }
     }
+    // Raw outcome counters as one row per class, so CI can assert the
+    // accounting invariant (ok + errors + rejected + expired + dropped
+    // == sent) without parsing the human summary.
+    let mut acct = Table::new("loadgen accounting", &["outcome", "count"]);
+    for (k, v) in [
+        ("sent", cfg.requests as u64),
+        ("ok", rep.ok_requests),
+        ("errors", rep.errors),
+        ("rejected", rep.rejected),
+        ("expired", rep.expired),
+        ("dropped", rep.dropped),
+        ("retry_attempts", rep.retries),
+        ("retried_ok", rep.retried_ok),
+        ("gave_up", rep.gave_up),
+    ] {
+        acct.row(vec![k.to_string(), v.to_string()]);
+    }
+    out.table(acct);
     let mut summary = rep.table();
     summary.title = format!(
         "loadgen {} x{} @ {} — {}{}",

@@ -15,7 +15,7 @@ use crate::coordinator::OpStreamReport;
 use crate::util::bench::Table;
 use crate::util::json::Value;
 use anyhow::{Context, Result};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 use std::time::Instant;
 
 /// Geometric-bucket latency histogram over seconds.
@@ -168,6 +168,16 @@ pub struct StatsSnapshot {
     pub slot_clusters: usize,
     /// Requests refused by admission control (`overloaded` replies).
     pub rejected: u64,
+    /// Requests whose `deadline_ms` elapsed before execution
+    /// (`deadline_exceeded` replies).
+    pub expired: u64,
+    /// Worker panics caught by `catch_unwind` and answered with a
+    /// typed `internal` reply — the worker survived every one.
+    pub panics: u64,
+    /// Idle connections reaped by the reactor (`--idle-timeout-s`).
+    pub conns_reaped: u64,
+    /// Cluster slots retired by the fault plan / fault injection.
+    pub retired_slots: usize,
     /// Currently open client connections.
     pub open_conns: u64,
     /// Requests admitted but not yet replied (queue + executing).
@@ -202,6 +212,10 @@ impl StatsSnapshot {
             ("slots", Value::Num(self.slots as f64)),
             ("slot_clusters", Value::Num(self.slot_clusters as f64)),
             ("rejected", Value::Num(self.rejected as f64)),
+            ("expired", Value::Num(self.expired as f64)),
+            ("panics", Value::Num(self.panics as f64)),
+            ("conns_reaped", Value::Num(self.conns_reaped as f64)),
+            ("retired_slots", Value::Num(self.retired_slots as f64)),
             ("open_conns", Value::Num(self.open_conns as f64)),
             ("pending", Value::Num(self.pending as f64)),
             (
@@ -246,6 +260,10 @@ impl StatsSnapshot {
             // Front-end gauges default to 0 when parsing replies from
             // older servers.
             rejected: opt("rejected") as u64,
+            expired: opt("expired") as u64,
+            panics: opt("panics") as u64,
+            conns_reaped: opt("conns_reaped") as u64,
+            retired_slots: opt("retired_slots") as usize,
             open_conns: opt("open_conns") as u64,
             pending: opt("pending") as u64,
             reactor_threads: opt("reactor_threads") as usize,
@@ -273,6 +291,16 @@ impl StatsSnapshot {
             "rejected (overloaded)",
             self.rejected.to_string(),
         );
+        row(&mut t, "expired (deadline)", self.expired.to_string());
+        row(&mut t, "worker panics (recovered)", self.panics.to_string());
+        if self.retired_slots > 0 {
+            row(
+                &mut t,
+                "retired slots",
+                format!("{} of {}", self.retired_slots, self.slots),
+            );
+        }
+        row(&mut t, "conns reaped (idle)", self.conns_reaped.to_string());
         row(&mut t, "open connections", self.open_conns.to_string());
         row(&mut t, "admitted in flight", self.pending.to_string());
         row(
@@ -322,6 +350,10 @@ impl StatsSnapshot {
             ("serve.requests", self.requests as f64),
             ("serve.errors", self.errors as f64),
             ("serve.rejected", self.rejected as f64),
+            ("serve.expired", self.expired as f64),
+            ("serve.worker_panics", self.panics as f64),
+            ("serve.conns_reaped", self.conns_reaped as f64),
+            ("serve.retired_slots", self.retired_slots as f64),
             ("serve.batches", self.batches as f64),
             ("serve.mean_batch", self.mean_batch),
             ("serve.open_conns", self.open_conns as f64),
@@ -343,6 +375,9 @@ struct Counters {
     requests: u64,
     errors: u64,
     rejected: u64,
+    expired: u64,
+    panics: u64,
+    conns_reaped: u64,
     open_conns: i64,
     batches: u64,
     batched_requests: u64,
@@ -395,6 +430,14 @@ impl Metrics {
         }
     }
 
+    /// Poison-tolerant lock: one panicking recorder (e.g. a worker
+    /// dying mid-request) must not wedge every later stats call behind
+    /// a `PoisonError` — the counters are plain integers, always
+    /// consistent at any interleaving point.
+    fn lock(&self) -> MutexGuard<'_, Counters> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     /// One completed request: end-to-end latency plus (sim backend)
     /// the per-request schedule totals.
     pub fn record_request(
@@ -402,7 +445,7 @@ impl Metrics {
         latency_s: f64,
         report: Option<&OpStreamReport>,
     ) {
-        let mut c = self.inner.lock().unwrap();
+        let mut c = self.lock();
         c.requests += 1;
         c.hist.record(latency_s);
         if let Some(r) = report {
@@ -412,25 +455,50 @@ impl Metrics {
     }
 
     pub fn record_error(&self) {
-        self.inner.lock().unwrap().errors += 1;
+        self.lock().errors += 1;
     }
 
     /// One request refused by admission control.
     pub fn record_reject(&self) {
-        self.inner.lock().unwrap().rejected += 1;
+        self.lock().rejected += 1;
+    }
+
+    /// One request expired past its `deadline_ms` before execution.
+    pub fn record_expired(&self) {
+        self.lock().expired += 1;
+    }
+
+    /// One worker panic caught and converted to a typed reply.
+    pub fn record_panic(&self) {
+        self.lock().panics += 1;
+    }
+
+    /// One idle connection reaped by the reactor.
+    pub fn record_reaped(&self) {
+        self.lock().conns_reaped += 1;
+    }
+
+    /// Lifetime worker-panic count (health probe).
+    pub fn panics(&self) -> u64 {
+        self.lock().panics
+    }
+
+    /// Lifetime deadline-expiry count (health probe).
+    pub fn expired(&self) -> u64 {
+        self.lock().expired
     }
 
     pub fn conn_opened(&self) {
-        self.inner.lock().unwrap().open_conns += 1;
+        self.lock().open_conns += 1;
     }
 
     pub fn conn_closed(&self) {
-        self.inner.lock().unwrap().open_conns -= 1;
+        self.lock().open_conns -= 1;
     }
 
     /// One micro-batch of `size` requests dispatched to a worker.
     pub fn record_batch(&self, size: usize) {
-        let mut c = self.inner.lock().unwrap();
+        let mut c = self.lock();
         c.batches += 1;
         c.batched_requests += size as u64;
     }
@@ -438,17 +506,19 @@ impl Metrics {
     /// Consistent snapshot; the caller supplies the allocator state
     /// (occupancy + geometry), the backend name, the admitted
     /// in-flight gauge, and the front-end thread-pool geometry.
+    #[allow(clippy::too_many_arguments)]
     pub fn snapshot(
         &self,
         backend: &str,
         occupancy: f64,
         slots: usize,
         slot_clusters: usize,
+        retired_slots: usize,
         pending: u64,
         reactor_threads: usize,
         worker_threads: usize,
     ) -> StatsSnapshot {
-        let c = self.inner.lock().unwrap();
+        let c = self.lock();
         let uptime_s = self.started.elapsed().as_secs_f64().max(1e-9);
         StatsSnapshot {
             backend: backend.to_string(),
@@ -476,6 +546,10 @@ impl Metrics {
             slots,
             slot_clusters,
             rejected: c.rejected,
+            expired: c.expired,
+            panics: c.panics,
+            conns_reaped: c.conns_reaped,
+            retired_slots,
             open_conns: c.open_conns.max(0) as u64,
             pending,
             reactor_threads,
@@ -590,11 +664,14 @@ mod tests {
     fn snapshot_prometheus_exposition_carries_fleet_gauges() {
         let m = Metrics::new();
         m.record_request(2e-3, None);
-        let s = m.snapshot("native", 0.5, 16, 32, 1, 2, 4);
+        m.record_expired();
+        let s = m.snapshot("native", 0.5, 16, 32, 2, 1, 2, 4);
         let txt = s.to_prometheus();
         assert!(txt.contains("# TYPE manticore_serve_requests gauge"));
         assert!(txt.contains("manticore_serve_requests 1"));
         assert!(txt.contains("manticore_serve_occupancy 0.5"));
+        assert!(txt.contains("manticore_serve_expired 1"));
+        assert!(txt.contains("manticore_serve_retired_slots 2"));
         for line in txt.lines() {
             assert!(
                 line.starts_with('#') || line.split(' ').count() == 2,
@@ -609,7 +686,7 @@ mod tests {
         // A close without a matching open (e.g. a race at shutdown)
         // must not wrap the u64 gauge in the snapshot.
         m.conn_closed();
-        let s = m.snapshot("native", 0.0, 1, 1, 0, 1, 1);
+        let s = m.snapshot("native", 0.0, 1, 1, 0, 0, 1, 1);
         assert_eq!(s.open_conns, 0);
     }
 
@@ -641,14 +718,21 @@ mod tests {
         m.record_request(4e-3, None);
         m.record_error();
         m.record_reject();
+        m.record_expired();
+        m.record_panic();
+        m.record_reaped();
         m.record_batch(2);
         m.conn_opened();
         m.conn_opened();
         m.conn_closed();
-        let s = m.snapshot("sim", 0.25, 16, 32, 5, 2, 4);
+        let s = m.snapshot("sim", 0.25, 16, 32, 1, 5, 2, 4);
         assert_eq!(s.requests, 2);
         assert_eq!(s.errors, 1);
         assert_eq!(s.rejected, 1);
+        assert_eq!(s.expired, 1);
+        assert_eq!(s.panics, 1);
+        assert_eq!(s.conns_reaped, 1);
+        assert_eq!(s.retired_slots, 1);
         assert_eq!(s.open_conns, 1);
         assert_eq!(s.pending, 5);
         assert_eq!((s.reactor_threads, s.worker_threads), (2, 4));
@@ -664,6 +748,10 @@ mod tests {
         let legacy = {
             let mut stripped = s.clone();
             stripped.rejected = 0;
+            stripped.expired = 0;
+            stripped.panics = 0;
+            stripped.conns_reaped = 0;
+            stripped.retired_slots = 0;
             stripped.open_conns = 0;
             stripped.pending = 0;
             stripped.reactor_threads = 0;
@@ -675,6 +763,10 @@ mod tests {
         if let crate::util::json::Value::Obj(m) = &mut v {
             for k in [
                 "rejected",
+                "expired",
+                "panics",
+                "conns_reaped",
+                "retired_slots",
                 "open_conns",
                 "pending",
                 "reactor_threads",
@@ -690,5 +782,32 @@ mod tests {
         assert!(t.rows.iter().any(|r| r[0] == "sim energy / request"));
         assert!(t.rows.iter().any(|r| r[0] == "os threads"));
         assert!(t.rows.iter().any(|r| r[0] == "rejected (overloaded)"));
+        assert!(t.rows.iter().any(|r| r[0] == "expired (deadline)"));
+        assert!(t
+            .rows
+            .iter()
+            .any(|r| r[0] == "worker panics (recovered)"));
+        assert!(t.rows.iter().any(|r| r[0] == "retired slots"));
+        assert!(t.rows.iter().any(|r| r[0] == "conns reaped (idle)"));
+    }
+
+    /// A thread that panics while holding the metrics lock must not
+    /// poison it for every later recorder — the stats endpoint keeps
+    /// answering after a worker dies mid-request.
+    #[test]
+    fn metrics_survive_a_poisoned_lock() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        let m2 = m.clone();
+        let h = std::thread::spawn(move || {
+            let _guard = m2.inner.lock().unwrap();
+            panic!("injected: recorder dies holding the lock");
+        });
+        assert!(h.join().is_err());
+        m.record_request(1e-3, None);
+        m.record_panic();
+        let s = m.snapshot("native", 0.0, 1, 1, 0, 0, 1, 1);
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.panics, 1);
     }
 }

@@ -66,6 +66,7 @@
 //! stats report simulated energy per request.
 
 pub mod batch;
+pub mod chaos;
 pub mod conn;
 pub mod loadgen;
 pub mod metrics;
@@ -74,6 +75,7 @@ pub mod protocol;
 pub mod reactor;
 pub mod server;
 
+pub use chaos::{Chaos, ChaosSpec};
 pub use loadgen::{run_loadgen, LoadgenConfig, LoadgenReport};
 pub use metrics::{Metrics, StatsSnapshot};
 pub use placement::{SlotLease, SlotPool};

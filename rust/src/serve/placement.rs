@@ -6,15 +6,29 @@
 //! the simulated package, `lease` blocks when the machine is fully
 //! occupied (back-pressure instead of oversubscription), and the pool
 //! integrates time-weighted occupancy for the fleet stats.
+//!
+//! Fault tolerance: slots can be *retired* — at construction from a
+//! [`FaultPlan`] (clusters fused off at boot) or at runtime (chaos
+//! injection, health events). A retired slot never re-enters the free
+//! list; if it is busy when retired, the in-flight lease finishes and
+//! the release path quietly drops it. The pool refuses to retire its
+//! last active slot so `lease()` can never deadlock on an empty
+//! machine. All internal locking is poison-tolerant: a worker panic
+//! while the pool's mutex is held (or merely while a lease is live —
+//! unwinding drops the lease, which takes the lock) must not wedge
+//! every other worker behind a `PoisonError`.
 
-use crate::system::{ClusterSlot, SystemConfig};
-use std::sync::{Condvar, Mutex};
+use crate::system::{ClusterSlot, FaultPlan, SystemConfig};
+use std::collections::BTreeSet;
+use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::Instant;
 
 struct PoolState {
     /// Free slot ids (LIFO: hot slots are reused first).
     free: Vec<usize>,
     busy: usize,
+    /// Slot ids retired by a fault plan or runtime fault injection.
+    retired: BTreeSet<usize>,
     /// Integral of `busy` slots over time [slot·s].
     busy_integral: f64,
     last_change: Instant,
@@ -34,22 +48,49 @@ impl SlotPool {
     /// the machine; a remainder smaller than one slot is left
     /// unleased).
     pub fn new(sys: &SystemConfig, slot_clusters: usize) -> SlotPool {
+        SlotPool::with_faults(sys, slot_clusters, &FaultPlan::none())
+    }
+
+    /// Partition `sys` and immediately retire every slot whose cluster
+    /// range intersects the fault plan (one faulty cluster costs its
+    /// whole slot — contiguous leases cannot be placed around a hole).
+    /// At least one slot always survives.
+    pub fn with_faults(
+        sys: &SystemConfig,
+        slot_clusters: usize,
+        plan: &FaultPlan,
+    ) -> SlotPool {
         let total = sys.tree.total_clusters();
         let sc = slot_clusters.clamp(1, total);
         let n_slots = (total / sc).max(1);
         let now = Instant::now();
-        SlotPool {
+        let pool = SlotPool {
             slot_clusters: sc,
             n_slots,
             started: now,
             state: Mutex::new(PoolState {
                 free: (0..n_slots).rev().collect(),
                 busy: 0,
+                retired: BTreeSet::new(),
                 busy_integral: 0.0,
                 last_change: now,
             }),
             cv: Condvar::new(),
+        };
+        for id in 0..n_slots {
+            if plan.slot_is_faulty(&pool.slot(id)) {
+                pool.retire(id);
+            }
         }
+        pool
+    }
+
+    /// Poison-tolerant lock: a panicking thread that held the guard
+    /// leaves consistent counters behind (every mutation below is
+    /// complete before any call that could panic), so recover the
+    /// inner state instead of wedging the pool forever.
+    fn lock(&self) -> MutexGuard<'_, PoolState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
     }
 
     pub fn n_slots(&self) -> usize {
@@ -77,9 +118,9 @@ impl SlotPool {
 
     /// Lease a slot, blocking until one is free.
     pub fn lease(&self) -> SlotLease<'_> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock();
         while st.free.is_empty() {
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st).unwrap_or_else(|p| p.into_inner());
         }
         self.integrate(&mut st);
         st.busy += 1;
@@ -89,7 +130,7 @@ impl SlotPool {
 
     /// Lease a slot if one is free right now.
     pub fn try_lease(&self) -> Option<SlotLease<'_>> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock();
         if st.free.is_empty() {
             return None;
         }
@@ -100,25 +141,62 @@ impl SlotPool {
     }
 
     fn release(&self, id: usize) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock();
         self.integrate(&mut st);
         st.busy -= 1;
-        st.free.push(id);
-        self.cv.notify_one();
+        // A slot retired while leased dies here instead of returning
+        // to the free list.
+        if !st.retired.contains(&id) {
+            st.free.push(id);
+            self.cv.notify_one();
+        }
+    }
+
+    /// Retire a slot: remove it from circulation permanently (fault
+    /// plan at boot, or runtime fault injection). Returns `false` when
+    /// the id is out of range, already retired, or is the last active
+    /// slot — the pool refuses to strand `lease()` callers on a
+    /// machine with zero capacity.
+    pub fn retire(&self, id: usize) -> bool {
+        if id >= self.n_slots {
+            return false;
+        }
+        let mut st = self.lock();
+        if st.retired.contains(&id) {
+            return false;
+        }
+        if self.n_slots - st.retired.len() <= 1 {
+            return false;
+        }
+        st.retired.insert(id);
+        st.free.retain(|&f| f != id);
+        true
+    }
+
+    /// Slots retired so far.
+    pub fn retired(&self) -> usize {
+        self.lock().retired.len()
+    }
+
+    /// Slots still in circulation (free or leased).
+    pub fn active_slots(&self) -> usize {
+        let st = self.lock();
+        self.n_slots - st.retired.len()
     }
 
     /// Slots leased right now.
     pub fn busy(&self) -> usize {
-        self.state.lock().unwrap().busy
+        self.lock().busy
     }
 
     /// Time-weighted mean fraction of slots occupied since creation,
     /// clamped to [0,1]: an empty window (pool just created) divides a
     /// zero integral by a near-zero elapsed, and clock granularity can
     /// nudge the ratio past 1 — neither may leak out as a nonsense
-    /// gauge.
+    /// gauge. Denominated by the full partition (`n_slots`), so a
+    /// degraded pool reads as *less* occupancy headroom, not more.
     pub fn occupancy(&self) -> f64 {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock();
         self.integrate(&mut st);
         let elapsed = self.started.elapsed().as_secs_f64().max(1e-9);
         (st.busy_integral / (elapsed * self.n_slots as f64)).clamp(0.0, 1.0)
@@ -224,5 +302,66 @@ mod tests {
         let tiny = SlotPool::new(&sys, 0);
         assert_eq!(tiny.slot_clusters(), 1);
         assert_eq!(tiny.n_slots(), 512);
+    }
+
+    #[test]
+    fn fault_plan_retires_intersecting_slots_at_boot() {
+        let sys = SystemConfig::default();
+        // Cluster 33 lives in slot 1 (clusters 32..63).
+        let plan = FaultPlan::from_clusters([33]);
+        let pool = SlotPool::with_faults(&sys, 32, &plan);
+        assert_eq!(pool.retired(), 1);
+        assert_eq!(pool.active_slots(), 15);
+        // Slot 1 must never be leased.
+        let leases: Vec<_> =
+            std::iter::from_fn(|| pool.try_lease()).collect();
+        assert_eq!(leases.len(), 15);
+        assert!(leases.iter().all(|l| l.slot.id != 1));
+    }
+
+    #[test]
+    fn retire_while_leased_drops_slot_on_release() {
+        let pool = SlotPool::new(&SystemConfig::default(), 32);
+        let lease = pool.lease();
+        let id = lease.slot.id;
+        assert!(pool.retire(id), "retiring a busy slot is allowed");
+        assert_eq!(pool.retired(), 1);
+        drop(lease); // release path must NOT return it to the free list
+        assert_eq!(pool.busy(), 0);
+        let all: Vec<_> = std::iter::from_fn(|| pool.try_lease()).collect();
+        assert_eq!(all.len(), 15);
+        assert!(all.iter().all(|l| l.slot.id != id));
+    }
+
+    #[test]
+    fn last_active_slot_cannot_be_retired() {
+        let pool = SlotPool::new(&SystemConfig::default(), 32);
+        for id in 0..15 {
+            assert!(pool.retire(id));
+            assert!(!pool.retire(id), "double retire is a no-op");
+        }
+        assert!(!pool.retire(15), "last active slot must survive");
+        assert!(!pool.retire(99), "out-of-range id");
+        assert_eq!(pool.active_slots(), 1);
+        assert!(pool.try_lease().is_some(), "survivor still leases");
+    }
+
+    /// A panic on a thread that holds a lease (or even the pool lock)
+    /// must not poison the pool for everyone else: the lease unwinds,
+    /// the slot returns, and other threads keep leasing.
+    #[test]
+    fn pool_survives_a_panicking_leaseholder() {
+        use std::sync::Arc;
+        let pool = Arc::new(SlotPool::new(&SystemConfig::default(), 32));
+        let p = pool.clone();
+        let h = std::thread::spawn(move || {
+            let _lease = p.lease();
+            panic!("injected: leaseholder dies");
+        });
+        assert!(h.join().is_err());
+        // Unwind released the lease; nothing is poisoned or leaked.
+        assert_eq!(pool.busy(), 0);
+        let all: Vec<_> = std::iter::from_fn(|| pool.try_lease()).collect();
+        assert_eq!(all.len(), 16, "no slot leaked by the panic");
     }
 }

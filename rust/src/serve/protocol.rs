@@ -120,6 +120,9 @@ pub enum ErrCode {
     /// Admission control refused the request: the pending-request
     /// budget is spent. The reply carries a `retry_after_ms` hint.
     Overloaded,
+    /// The request's `deadline_ms` budget elapsed before execution
+    /// started; the server refused to burn a slot on stale work.
+    DeadlineExceeded,
     /// The server is draining; no new work is accepted.
     ShuttingDown,
     /// Compile or execution failure inside the worker.
@@ -133,6 +136,7 @@ impl ErrCode {
             ErrCode::UnknownArtifact => "unknown_artifact",
             ErrCode::BadInputs => "bad_inputs",
             ErrCode::Overloaded => "overloaded",
+            ErrCode::DeadlineExceeded => "deadline_exceeded",
             ErrCode::ShuttingDown => "shutting_down",
             ErrCode::Internal => "internal",
         }
@@ -146,6 +150,7 @@ impl ErrCode {
             "unknown_artifact" => ErrCode::UnknownArtifact,
             "bad_inputs" => ErrCode::BadInputs,
             "overloaded" => ErrCode::Overloaded,
+            "deadline_exceeded" => ErrCode::DeadlineExceeded,
             "shutting_down" => ErrCode::ShuttingDown,
             _ => ErrCode::Internal,
         }
@@ -183,9 +188,19 @@ pub enum StatsFormat {
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     /// Execute `artifact` with the given input tensors.
-    Run { artifact: String, inputs: Vec<Tensor> },
+    /// `deadline_ms` is an optional service budget, measured from
+    /// admission: once it elapses the server answers
+    /// `deadline_exceeded` instead of executing stale work.
+    Run {
+        artifact: String,
+        inputs: Vec<Tensor>,
+        deadline_ms: Option<f64>,
+    },
     /// Fleet metrics snapshot.
     Stats { format: StatsFormat },
+    /// Health probe: degraded/fault state, retired slots, in-flight
+    /// budget headroom — what a fleet registry polls per node.
+    Health,
     /// Liveness check.
     Ping,
     /// Flush the server's buffered spans as a Chrome-trace object
@@ -199,14 +214,22 @@ impl Request {
     /// Serialize as one JSON line (no trailing newline).
     pub fn to_line(&self) -> String {
         let v = match self {
-            Request::Run { artifact, inputs } => obj(vec![
-                ("op", Value::Str("run".into())),
-                ("artifact", Value::Str(artifact.clone())),
-                (
-                    "inputs",
-                    Value::Arr(inputs.iter().map(tensor_to_json).collect()),
-                ),
-            ]),
+            Request::Run { artifact, inputs, deadline_ms } => {
+                let mut pairs = vec![
+                    ("op", Value::Str("run".into())),
+                    ("artifact", Value::Str(artifact.clone())),
+                    (
+                        "inputs",
+                        Value::Arr(
+                            inputs.iter().map(tensor_to_json).collect(),
+                        ),
+                    ),
+                ];
+                if let Some(ms) = deadline_ms {
+                    pairs.push(("deadline_ms", Value::Num(*ms)));
+                }
+                obj(pairs)
+            }
             Request::Stats { format } => {
                 let mut pairs = vec![("op", Value::Str("stats".into()))];
                 if *format == StatsFormat::Prometheus {
@@ -216,6 +239,9 @@ impl Request {
                     ));
                 }
                 obj(pairs)
+            }
+            Request::Health => {
+                obj(vec![("op", Value::Str("health".into()))])
             }
             Request::Ping => obj(vec![("op", Value::Str("ping".into()))]),
             Request::Trace => obj(vec![("op", Value::Str("trace".into()))]),
@@ -248,7 +274,19 @@ impl Request {
                     .iter()
                     .map(tensor_from_json)
                     .collect::<Result<Vec<_>>>()?;
-                Ok(Request::Run { artifact, inputs })
+                let deadline_ms = match v.get("deadline_ms") {
+                    None => None,
+                    Some(d) => {
+                        let ms = d
+                            .as_f64()
+                            .context("run 'deadline_ms' must be a number")?;
+                        if !ms.is_finite() || ms < 0.0 {
+                            bail!("run 'deadline_ms' must be >= 0, got {ms}");
+                        }
+                        Some(ms)
+                    }
+                };
+                Ok(Request::Run { artifact, inputs, deadline_ms })
             }
             "stats" => {
                 let format = match v.get("format").and_then(Value::as_str) {
@@ -258,6 +296,7 @@ impl Request {
                 };
                 Ok(Request::Stats { format })
             }
+            "health" => Ok(Request::Health),
             "ping" => Ok(Request::Ping),
             "trace" => Ok(Request::Trace),
             "shutdown" => Ok(Request::Shutdown),
@@ -344,6 +383,103 @@ impl StageTiming {
     }
 }
 
+/// Coarse node condition reported by the `health` op. Forward
+/// compatible: a probe that sees an unknown status treats the node as
+/// `Degraded` (conservative — never route *more* traffic on a status
+/// it does not understand).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthStatus {
+    /// Full capacity, accepting work.
+    Ok,
+    /// Serving, but on reduced capacity (retired slots / recovered
+    /// worker panics).
+    Degraded,
+    /// Shutting down; no new work is accepted.
+    Draining,
+}
+
+impl HealthStatus {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            HealthStatus::Ok => "ok",
+            HealthStatus::Degraded => "degraded",
+            HealthStatus::Draining => "draining",
+        }
+    }
+
+    fn from_str(s: &str) -> HealthStatus {
+        match s {
+            "ok" => HealthStatus::Ok,
+            "draining" => HealthStatus::Draining,
+            _ => HealthStatus::Degraded,
+        }
+    }
+}
+
+/// The `health` reply: the per-node probe a fleet registry polls.
+/// Everything a router needs to decide "send traffic here?": the
+/// degraded/fault state, how much of the machine is retired, and how
+/// much in-flight budget headroom remains.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HealthReply {
+    pub status: HealthStatus,
+    /// Total cluster slots the machine was partitioned into.
+    pub slots: usize,
+    /// Slots retired by the fault plan / runtime fault injection.
+    pub retired_slots: usize,
+    /// Clusters marked faulty by the active fault plan.
+    pub faulty_clusters: usize,
+    /// Requests currently admitted (queued or executing).
+    pub pending: u64,
+    /// The admission budget (`--max-pending`).
+    pub max_pending: usize,
+    /// Budget headroom: admissions left before `overloaded` refusals.
+    pub headroom: u64,
+    /// Worker panics caught and recovered since start.
+    pub worker_panics: u64,
+    /// Requests expired past their deadline since start.
+    pub expired: u64,
+}
+
+impl HealthReply {
+    fn to_json(self) -> Value {
+        obj(vec![
+            ("status", Value::Str(self.status.as_str().to_string())),
+            ("slots", Value::Num(self.slots as f64)),
+            ("retired_slots", Value::Num(self.retired_slots as f64)),
+            ("faulty_clusters", Value::Num(self.faulty_clusters as f64)),
+            ("pending", Value::Num(self.pending as f64)),
+            ("max_pending", Value::Num(self.max_pending as f64)),
+            ("headroom", Value::Num(self.headroom as f64)),
+            ("worker_panics", Value::Num(self.worker_panics as f64)),
+            ("expired", Value::Num(self.expired as f64)),
+        ])
+    }
+
+    fn from_json(v: &Value) -> Result<HealthReply> {
+        let num = |k: &str| -> Result<f64> {
+            v.get(k)
+                .and_then(Value::as_f64)
+                .with_context(|| format!("health reply missing '{k}'"))
+        };
+        Ok(HealthReply {
+            status: HealthStatus::from_str(
+                v.get("status")
+                    .and_then(Value::as_str)
+                    .context("health reply missing 'status'")?,
+            ),
+            slots: num("slots")? as usize,
+            retired_slots: num("retired_slots")? as usize,
+            faulty_clusters: num("faulty_clusters")? as usize,
+            pending: num("pending")? as u64,
+            max_pending: num("max_pending")? as usize,
+            headroom: num("headroom")? as u64,
+            worker_panics: num("worker_panics")? as u64,
+            expired: num("expired")? as u64,
+        })
+    }
+}
+
 /// A successful `run` reply.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunReply {
@@ -367,6 +503,8 @@ pub struct RunReply {
 pub enum Reply {
     Run(RunReply),
     Stats(StatsSnapshot),
+    /// Node health probe (`health` op).
+    Health(HealthReply),
     /// A flushed Chrome-trace object (`trace` op).
     Trace(Value),
     /// Preformatted text (e.g. Prometheus exposition) as one line.
@@ -423,6 +561,11 @@ impl Reply {
                 ("ok", Value::Bool(true)),
                 ("kind", Value::Str("stats".into())),
                 ("stats", s.to_json()),
+            ]),
+            Reply::Health(h) => obj(vec![
+                ("ok", Value::Bool(true)),
+                ("kind", Value::Str("health".into())),
+                ("health", h.to_json()),
             ]),
             Reply::Trace(t) => obj(vec![
                 ("ok", Value::Bool(true)),
@@ -487,6 +630,9 @@ impl Reply {
             "ok" => Ok(Reply::Ok),
             "stats" => Ok(Reply::Stats(StatsSnapshot::from_json(
                 v.get("stats").context("stats reply missing 'stats'")?,
+            )?)),
+            "health" => Ok(Reply::Health(HealthReply::from_json(
+                v.get("health").context("health reply missing 'health'")?,
             )?)),
             "trace" => Ok(Reply::Trace(
                 v.get("trace")
@@ -568,9 +714,16 @@ mod tests {
             Request::Run {
                 artifact: "matmul_f64_64".into(),
                 inputs: vec![Tensor::F64(vec![1.0, 2.0], vec![2])],
+                deadline_ms: None,
+            },
+            Request::Run {
+                artifact: "matmul_f64_64".into(),
+                inputs: vec![Tensor::F64(vec![1.0, 2.0], vec![2])],
+                deadline_ms: Some(250.5),
             },
             Request::Stats { format: StatsFormat::Json },
             Request::Stats { format: StatsFormat::Prometheus },
+            Request::Health,
             Request::Ping,
             Request::Trace,
             Request::Shutdown,
@@ -582,6 +735,13 @@ mod tests {
         }
         assert!(Request::parse("{\"op\":\"dance\"}").is_err());
         assert!(Request::parse("not json").is_err());
+        // A negative or non-numeric deadline is a bad request, not a
+        // silently-ignored field.
+        assert!(Request::parse(
+            "{\"op\":\"run\",\"artifact\":\"m\",\"inputs\":[],\
+             \"deadline_ms\":-5}"
+        )
+        .is_err());
         // Unknown stats formats degrade to JSON (legacy peers).
         assert_eq!(
             Request::parse("{\"op\":\"stats\",\"format\":\"exotic\"}")
@@ -615,18 +775,37 @@ mod tests {
         );
         let text =
             Reply::Text("# TYPE manticore_requests counter\n".into());
+        let health = Reply::Health(HealthReply {
+            status: HealthStatus::Degraded,
+            slots: 16,
+            retired_slots: 2,
+            faulty_clusters: 3,
+            pending: 40,
+            max_pending: 256,
+            headroom: 216,
+            worker_panics: 1,
+            expired: 7,
+        });
         for r in [
             run,
             trace,
             text,
+            health,
             Reply::Ok,
             Reply::err(ErrCode::Internal, "boom"),
             Reply::err(ErrCode::BadRequest, "bad json"),
             Reply::err(ErrCode::ShuttingDown, "draining"),
+            Reply::err(ErrCode::DeadlineExceeded, "stale"),
             Reply::overloaded(12.5),
         ] {
             assert_eq!(Reply::parse(&r.to_line()).unwrap(), r);
         }
+        // Unknown health statuses degrade to Degraded: a probe must
+        // never route MORE traffic on a status it can't read.
+        assert_eq!(
+            HealthStatus::from_str("from_the_future"),
+            HealthStatus::Degraded
+        );
     }
 
     /// A malformed request line must map onto a parse error the server

@@ -55,6 +55,11 @@ pub enum LineOutcome {
     /// The request went to the worker pool; the handler's
     /// [`CompletionHandle`] will post the reply later.
     Async,
+    /// Drop the connection immediately, discarding buffered replies —
+    /// the chaos harness's injected connection failure. Real servers
+    /// hit the same path on a peer RST; clients must account such
+    /// requests as dropped, not lost.
+    Hangup,
 }
 
 /// Application hook the reactor dispatches request lines to. One
@@ -63,6 +68,18 @@ pub trait Handler: Send + Sync + 'static {
     fn handle_line(&self, line: &str, done: CompletionHandle) -> LineOutcome;
     fn on_conn_open(&self) {}
     fn on_conn_close(&self) {}
+    /// An idle connection was reaped by `idle_timeout` (also followed
+    /// by `on_conn_close`).
+    fn on_conn_reaped(&self) {}
+}
+
+/// Reactor-pool tuning knobs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReactorConfig {
+    /// Reap connections with no traffic and no work owed for this
+    /// long (`serve --idle-timeout-s`); `None` = never — half-open
+    /// clients then hold conn state forever.
+    pub idle_timeout: Option<Duration>,
 }
 
 /// Posts one request's encoded reply line back to the reactor that
@@ -185,6 +202,14 @@ pub struct Reactor {
 
 impl Reactor {
     pub fn start(n: usize, handler: Arc<dyn Handler>) -> Reactor {
+        Reactor::start_with(n, handler, ReactorConfig::default())
+    }
+
+    pub fn start_with(
+        n: usize,
+        handler: Arc<dyn Handler>,
+        cfg: ReactorConfig,
+    ) -> Reactor {
         let n = n.max(1);
         let mut inboxes = Vec::with_capacity(n);
         let mut threads = Vec::with_capacity(n);
@@ -200,7 +225,7 @@ impl Reactor {
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("reactor-{i}"))
-                    .spawn(move || reactor_loop(inbox, rx, h))
+                    .spawn(move || reactor_loop(inbox, rx, h, cfg))
                     .expect("spawn reactor thread"),
             );
         }
@@ -246,6 +271,9 @@ struct Conn {
     stream: TcpStream,
     state: ConnState,
     dead: bool,
+    /// Last time bytes moved on this connection (either direction) —
+    /// the idle-timeout clock.
+    last_activity: Instant,
 }
 
 /// Which connections the last readiness wait flagged.
@@ -255,7 +283,12 @@ enum Ready {
     Ids(Vec<u64>),
 }
 
-fn reactor_loop(inbox: Arc<Inbox>, wake_rx: wake::Rx, handler: Arc<dyn Handler>) {
+fn reactor_loop(
+    inbox: Arc<Inbox>,
+    wake_rx: wake::Rx,
+    handler: Arc<dyn Handler>,
+    cfg: ReactorConfig,
+) {
     let mut conns: BTreeMap<u64, Conn> = BTreeMap::new();
     let mut buf = vec![0u8; READ_CHUNK];
     let mut draining_since: Option<Instant> = None;
@@ -284,6 +317,7 @@ fn reactor_loop(inbox: Arc<Inbox>, wake_rx: wake::Rx, handler: Arc<dyn Handler>)
                     stream,
                     state: ConnState::new(),
                     dead: false,
+                    last_activity: Instant::now(),
                 },
             );
             ready.insert(id);
@@ -318,10 +352,23 @@ fn reactor_loop(inbox: Arc<Inbox>, wake_rx: wake::Rx, handler: Arc<dyn Handler>)
         let past_grace = draining_since
             .map(|t| t.elapsed() > DRAIN_GRACE)
             .unwrap_or(false);
+        let now = Instant::now();
         conns.retain(|_, c| {
             let finished = c.state.drained()
                 && (c.state.read_eof() || c.state.closing() || draining);
-            if c.dead || finished || past_grace {
+            // Idle reaping: no traffic for the limit AND nothing owed
+            // (a connection waiting on a slow execute is busy, not
+            // idle — `drained()` is false while replies are pending).
+            let idle = !draining
+                && !c.dead
+                && !finished
+                && c.state.drained()
+                && matches!(cfg.idle_timeout,
+                    Some(t) if now.duration_since(c.last_activity) > t);
+            if idle {
+                handler.on_conn_reaped();
+            }
+            if c.dead || finished || past_grace || idle {
                 handler.on_conn_close();
                 false
             } else {
@@ -347,7 +394,10 @@ fn flush_writes(c: &mut Conn) {
                 c.dead = true;
                 break;
             }
-            Ok(n) => c.state.consume(n),
+            Ok(n) => {
+                c.state.consume(n);
+                c.last_activity = Instant::now();
+            }
             Err(e) if e.kind() == ErrorKind::WouldBlock => break,
             Err(e) if e.kind() == ErrorKind::Interrupted => continue,
             Err(_) => {
@@ -376,6 +426,7 @@ fn read_and_dispatch(
             }
             Ok(n) => {
                 read_total += n;
+                c.last_activity = Instant::now();
                 match c.state.on_bytes(&buf[..n]) {
                     Ok(lines) => {
                         for line in lines {
@@ -388,6 +439,10 @@ fn read_and_dispatch(
                             match handler.handle_line(&line, done) {
                                 LineOutcome::Reply(r) => c.state.complete(seq, r),
                                 LineOutcome::Async => {}
+                                LineOutcome::Hangup => {
+                                    c.dead = true;
+                                    return;
+                                }
                             }
                         }
                     }
@@ -621,20 +676,27 @@ mod tests {
     /// Echoes lines back; lines starting `slow ` are completed from a
     /// detached thread after a delay (exercising the async path), and
     /// a `started` signal fires when the slow line is dispatched.
+    /// `hangup` lines drop the connection (the chaos path). Reaped
+    /// idle connections are counted.
     struct Echo {
         started: Mutex<Option<mpsc::Sender<()>>>,
+        reaped: std::sync::atomic::AtomicU64,
     }
 
     impl Echo {
         fn new() -> Echo {
             Echo {
                 started: Mutex::new(None),
+                reaped: std::sync::atomic::AtomicU64::new(0),
             }
         }
     }
 
     impl Handler for Echo {
         fn handle_line(&self, line: &str, done: CompletionHandle) -> LineOutcome {
+            if line == "hangup" {
+                return LineOutcome::Hangup;
+            }
             if let Some(rest) = line.strip_prefix("slow ") {
                 if let Some(tx) = self.started.lock().unwrap().as_ref() {
                     let _ = tx.send(());
@@ -648,6 +710,10 @@ mod tests {
             } else {
                 LineOutcome::Reply(format!("echo {line}"))
             }
+        }
+
+        fn on_conn_reaped(&self) {
+            self.reaped.fetch_add(1, Ordering::SeqCst);
         }
     }
 
@@ -701,6 +767,54 @@ mod tests {
             let mut r = BufReader::new(client.try_clone().unwrap());
             assert_eq!(read_line(&mut r), format!("echo conn {i}"));
         }
+        reactor.shutdown();
+        reactor.join();
+    }
+
+    #[test]
+    fn idle_connections_are_reaped_but_active_ones_survive() {
+        let echo = Arc::new(Echo::new());
+        let mut reactor = Reactor::start_with(
+            1,
+            echo.clone(),
+            ReactorConfig {
+                idle_timeout: Some(Duration::from_millis(300)),
+            },
+        );
+        let (idle_client, _l1) = hook_up(&reactor);
+        let (mut active, _l2) = hook_up(&reactor);
+        // Keep one connection chatty past the idle limit; leave the
+        // other silent.
+        let mut r = BufReader::new(active.try_clone().unwrap());
+        for _ in 0..6 {
+            std::thread::sleep(Duration::from_millis(150));
+            active.write_all(b"hi\n").unwrap();
+            assert_eq!(read_line(&mut r), "echo hi");
+        }
+        // The silent connection must have been reaped (EOF)…
+        let mut ri = BufReader::new(idle_client.try_clone().unwrap());
+        let mut rest = String::new();
+        let n = ri.read_line(&mut rest).expect("EOF, not a hang");
+        assert_eq!(n, 0, "idle conn should see EOF, got {rest:?}");
+        assert_eq!(echo.reaped.load(Ordering::SeqCst), 1);
+        // …while the chatty one still works.
+        active.write_all(b"still here\n").unwrap();
+        assert_eq!(read_line(&mut r), "echo still here");
+        reactor.shutdown();
+        reactor.join();
+    }
+
+    #[test]
+    fn hangup_outcome_drops_the_connection() {
+        let mut reactor = Reactor::start(1, Arc::new(Echo::new()));
+        let (mut client, _listener) = hook_up(&reactor);
+        client.write_all(b"a\n").unwrap();
+        let mut r = BufReader::new(client.try_clone().unwrap());
+        assert_eq!(read_line(&mut r), "echo a");
+        client.write_all(b"hangup\nnever answered\n").unwrap();
+        let mut rest = String::new();
+        let n = r.read_line(&mut rest).expect("EOF after hangup");
+        assert_eq!(n, 0, "expected dropped conn, got {rest:?}");
         reactor.shutdown();
         reactor.join();
     }

@@ -30,18 +30,21 @@ use crate::runtime::{
     Executable, Tensor,
 };
 use crate::serve::batch::{BatchQueue, Pending, ReplyTo, RunDone};
+use crate::serve::chaos::{Chaos, ChaosSpec};
 use crate::serve::metrics::{Metrics, StatsSnapshot};
 use crate::serve::placement::SlotPool;
 use crate::serve::protocol::{
-    ErrCode, ErrorReply, Reply, Request, StageTiming, StatsFormat,
-    DEFAULT_PORT,
+    ErrCode, ErrorReply, HealthReply, HealthStatus, Reply, Request,
+    StageTiming, StatsFormat, DEFAULT_PORT,
 };
 use crate::serve::reactor::{
-    CompletionHandle, Handler, Inbox, LineOutcome, Reactor,
+    CompletionHandle, Handler, Inbox, LineOutcome, Reactor, ReactorConfig,
 };
+use crate::system::FaultPlan;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -77,6 +80,14 @@ pub struct ServeConfig {
     /// Echo per-stage server timing (queue-wait / execute µs) into
     /// every run reply, for `loadgen`'s latency breakdown.
     pub debug_timing: bool,
+    /// Reap connections idle (no traffic, no work owed) for this many
+    /// seconds; 0 = never.
+    pub idle_timeout_s: f64,
+    /// Boot-time degraded-machine model: clusters this plan marks
+    /// faulty retire their placement slots before serving starts.
+    pub fault_plan: Option<FaultPlan>,
+    /// Deterministic fault injection (`serve --chaos <spec.json>`).
+    pub chaos: Option<ChaosSpec>,
 }
 
 impl Default for ServeConfig {
@@ -93,6 +104,9 @@ impl Default for ServeConfig {
             max_pending: 0,
             trace_out: None,
             debug_timing: false,
+            idle_timeout_s: 0.0,
+            fault_plan: None,
+            chaos: None,
         }
     }
 }
@@ -145,6 +159,10 @@ struct Shared {
     n_workers: usize,
     /// Echo per-stage timing into run replies (`--debug-timing`).
     debug_timing: bool,
+    /// The boot-time degraded-machine model (empty = healthy).
+    fault_plan: FaultPlan,
+    /// Deterministic fault injection; `None` = no chaos.
+    chaos: Option<Arc<Chaos>>,
 }
 
 impl Shared {
@@ -170,10 +188,37 @@ impl Shared {
             self.pool.occupancy(),
             self.pool.n_slots(),
             self.pool.slot_clusters(),
+            self.pool.retired(),
             self.admitted.load(Ordering::SeqCst) as u64,
             self.n_reactors,
             self.n_workers,
         )
+    }
+
+    /// The `health` probe: liveness plus the degraded-state picture a
+    /// load balancer routes on.
+    fn health(&self) -> HealthReply {
+        let retired = self.pool.retired();
+        let panics = self.metrics.panics();
+        let pending = self.admitted.load(Ordering::SeqCst) as u64;
+        let status = if self.stopping.load(Ordering::SeqCst) {
+            HealthStatus::Draining
+        } else if retired > 0 || !self.fault_plan.is_empty() || panics > 0 {
+            HealthStatus::Degraded
+        } else {
+            HealthStatus::Ok
+        };
+        HealthReply {
+            status,
+            slots: self.pool.n_slots(),
+            retired_slots: retired,
+            faulty_clusters: self.fault_plan.n_faulty(),
+            pending,
+            max_pending: self.max_pending,
+            headroom: (self.max_pending as u64).saturating_sub(pending),
+            worker_panics: panics,
+            expired: self.metrics.expired(),
+        }
     }
 
     /// Idempotent shutdown trigger: stop the queue (drain-then-end),
@@ -196,6 +241,7 @@ impl Shared {
         &self,
         artifact: String,
         inputs: Vec<Tensor>,
+        deadline_ms: Option<f64>,
         done: CompletionHandle,
     ) -> LineOutcome {
         let Some(meta) = self.manifest.get(&artifact) else {
@@ -212,6 +258,21 @@ impl Shared {
             self.metrics.record_error();
             return LineOutcome::Reply(
                 Reply::err(ErrCode::BadInputs, format!("{e}")).to_line(),
+            );
+        }
+        // The admission-time deadline check: an absolute deadline is
+        // fixed here and rides the Pending; a zero budget is already
+        // expired and never touches the admission gauge or the queue.
+        let now = Instant::now();
+        let deadline = deadline_ms.map(|ms| now + Duration::from_secs_f64(ms / 1e3));
+        if matches!(deadline, Some(d) if now >= d) {
+            self.metrics.record_expired();
+            return LineOutcome::Reply(
+                Reply::err(
+                    ErrCode::DeadlineExceeded,
+                    "deadline expired at admission",
+                )
+                .to_line(),
             );
         }
         // Admission control: refuse atomically once the in-flight
@@ -242,7 +303,8 @@ impl Shared {
         let pending = Pending {
             artifact: artifact.clone(),
             inputs,
-            enqueued: Instant::now(),
+            enqueued: now,
+            deadline,
             reply: ReplyTo::Reactor {
                 done,
                 artifact,
@@ -307,8 +369,19 @@ impl Handler for Shared {
                 self.begin_shutdown();
                 LineOutcome::Reply(Reply::Ok.to_line())
             }
-            Request::Run { artifact, inputs } => {
-                self.admit_run(artifact, inputs, done)
+            Request::Health => {
+                LineOutcome::Reply(Reply::Health(self.health()).to_line())
+            }
+            Request::Run { artifact, inputs, deadline_ms } => {
+                // Injected connection failure: answered *before* the
+                // admission gauge moves, so a dropped request never
+                // leaks budget.
+                if let Some(ch) = &self.chaos {
+                    if ch.inject_conn_drop() {
+                        return LineOutcome::Hangup;
+                    }
+                }
+                self.admit_run(artifact, inputs, deadline_ms, done)
             }
         }
     }
@@ -319,6 +392,10 @@ impl Handler for Shared {
 
     fn on_conn_close(&self) {
         self.metrics.conn_closed();
+    }
+
+    fn on_conn_reaped(&self) {
+        self.metrics.record_reaped();
     }
 }
 
@@ -337,7 +414,10 @@ impl Server {
         let backend = build_backend(&cfg.backend, sys)?;
         let dir = PathBuf::from(&cfg.artifacts_dir);
         let manifest = load_manifest(&dir, backend.name())?;
-        let pool = SlotPool::new(&sys.system, cfg.slot_clusters);
+        let fault_plan =
+            cfg.fault_plan.clone().unwrap_or_else(FaultPlan::none);
+        let pool =
+            SlotPool::with_faults(&sys.system, cfg.slot_clusters, &fault_plan);
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding {}", cfg.addr))?;
         let addr = listener.local_addr().context("reading bound address")?;
@@ -395,6 +475,12 @@ impl Server {
             n_reactors,
             n_workers,
             debug_timing: cfg.debug_timing,
+            fault_plan,
+            chaos: cfg
+                .chaos
+                .as_ref()
+                .filter(|s| !s.is_noop())
+                .map(|s| Arc::new(Chaos::new(s.clone()))),
         });
         let workers = (0..n_workers)
             .map(|_| {
@@ -403,7 +489,11 @@ impl Server {
             })
             .collect();
         let handler: Arc<dyn Handler> = shared.clone();
-        let reactor = Reactor::start(n_reactors, handler);
+        let rcfg = ReactorConfig {
+            idle_timeout: (cfg.idle_timeout_s > 0.0)
+                .then(|| Duration::from_secs_f64(cfg.idle_timeout_s)),
+        };
+        let reactor = Reactor::start_with(n_reactors, handler, rcfg);
         *shared.inboxes.lock().unwrap() = reactor.inboxes();
         let accept = {
             let sh = shared.clone();
@@ -433,6 +523,17 @@ impl Server {
 
     pub fn stats(&self) -> StatsSnapshot {
         self.shared.stats()
+    }
+
+    /// The same health picture the protocol's `health` op reports.
+    pub fn health(&self) -> HealthReply {
+        self.shared.health()
+    }
+
+    /// The live chaos injector, when the server runs under `--chaos`
+    /// (a handle: summaries survive [`Server::wait`]).
+    pub fn chaos(&self) -> Option<Arc<Chaos>> {
+        self.shared.chaos.clone()
     }
 
     /// The admission-control budget: in-flight requests admitted
@@ -482,10 +583,34 @@ fn accept_loop(
     }
 }
 
+/// Answer one request whose deadline passed before execution.
+fn expire(shared: &Shared, p: Pending) {
+    shared.metrics.record_expired();
+    obs::record_span("expired", "serve", p.ctx, 0, Vec::new());
+    p.reply.send(Err(ErrorReply::new(
+        ErrCode::DeadlineExceeded,
+        "deadline exceeded before execution",
+    )));
+}
+
 /// Worker: drain micro-batches, lease a slot per batch, execute each
-/// request on it, post each reply back through its [`ReplyTo`].
+/// request on it (inside a panic-isolation boundary), post each reply
+/// back through its [`ReplyTo`].
 fn worker_loop(shared: &Shared) {
     while let Some(batch) = shared.queue.pop_batch() {
+        // The queue-level deadline check: sweep whatever already
+        // expired while waiting, whatever its artifact — stale work
+        // never reaches a slot lease.
+        for p in shared.queue.take_expired() {
+            expire(shared, p);
+        }
+        // And the same check on the batch this worker just claimed.
+        let now = Instant::now();
+        let (batch, stale): (Vec<Pending>, Vec<Pending>) =
+            batch.into_iter().partition(|p| !p.expired_at(now));
+        for p in stale {
+            expire(shared, p);
+        }
         if batch.is_empty() {
             continue;
         }
@@ -508,6 +633,12 @@ fn worker_loop(shared: &Shared) {
         };
         let lease = shared.pool.lease();
         for p in batch {
+            // A deadline can expire during a predecessor's execution
+            // in the same batch: re-check while holding the lease.
+            if p.expired_at(Instant::now()) {
+                expire(shared, p);
+                continue;
+            }
             // Queue wait ended when this worker reached the request;
             // record it retroactively under the request's root span.
             let queue_us = p.enqueued.elapsed().as_secs_f64() * 1e6;
@@ -521,11 +652,27 @@ fn worker_loop(shared: &Shared) {
             let mut exec_sp = obs::span_with("execute", "serve", p.ctx);
             exec_sp.arg("batch", n as f64);
             let exec_start = Instant::now();
-            let result = exe.execute_placed(&p.inputs, Some(&lease.slot));
+            // Panic isolation: a panicking execution (a backend bug,
+            // or the chaos harness) unwinds to here, answers with a
+            // typed `internal`, and the worker — still holding its
+            // intact lease — moves on to the next request.
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                if let Some(ch) = &shared.chaos {
+                    if ch.inject_panic() {
+                        panic!("chaos: injected worker panic");
+                    }
+                }
+                exe.execute_placed(&p.inputs, Some(&lease.slot))
+            }));
             let execute_us = exec_start.elapsed().as_secs_f64() * 1e6;
             drop(exec_sp);
+            if let Some(ch) = &shared.chaos {
+                if let Some(delay) = ch.reply_delay() {
+                    std::thread::sleep(delay);
+                }
+            }
             match result {
-                Ok(out) => {
+                Ok(Ok(out)) => {
                     let server_s = p.enqueued.elapsed().as_secs_f64();
                     shared
                         .metrics
@@ -545,12 +692,27 @@ fn worker_loop(shared: &Shared) {
                         timing,
                     }));
                 }
-                Err(e) => {
+                Ok(Err(e)) => {
                     shared.metrics.record_error();
                     p.reply.send(Err(ErrorReply::new(
                         ErrCode::Internal,
                         format!("{e}"),
                     )));
+                }
+                Err(_) => {
+                    shared.metrics.record_panic();
+                    shared.metrics.record_error();
+                    p.reply.send(Err(ErrorReply::new(
+                        ErrCode::Internal,
+                        "worker panicked during execution (recovered)",
+                    )));
+                }
+            }
+            // Scheduled chaos degradation: retire slots that became
+            // due with this completion (takes effect at release).
+            if let Some(ch) = &shared.chaos {
+                for slot in ch.on_request_done() {
+                    shared.pool.retire(slot);
                 }
             }
         }
@@ -635,6 +797,7 @@ mod tests {
         let reply = client.roundtrip(&Request::Run {
             artifact: "matmul_f64_64".into(),
             inputs: inputs.clone(),
+            deadline_ms: None,
         });
         let run = match reply {
             Reply::Run(r) => r,
@@ -660,6 +823,7 @@ mod tests {
         let r = client.roundtrip(&Request::Run {
             artifact: "nope".into(),
             inputs: vec![],
+            deadline_ms: None,
         });
         assert!(
             matches!(r, Reply::Err(ref e) if e.code == ErrCode::UnknownArtifact
@@ -669,6 +833,7 @@ mod tests {
         let r = client.roundtrip(&Request::Run {
             artifact: "matmul_f64_64".into(),
             inputs: vec![Tensor::F64(vec![0.0], vec![1])],
+            deadline_ms: None,
         });
         assert!(
             matches!(r, Reply::Err(ref e) if e.code == ErrCode::BadInputs),
@@ -721,6 +886,7 @@ mod tests {
         let reply = client.roundtrip(&Request::Run {
             artifact: "matmul_f64_64".into(),
             inputs: inputs.clone(),
+            deadline_ms: None,
         });
         let run = match reply {
             Reply::Run(r) => r,
@@ -773,6 +939,7 @@ mod tests {
         let line = Request::Run {
             artifact: "matmul_f64_64".into(),
             inputs: matmul_inputs(3),
+            deadline_ms: None,
         }
         .to_line();
         const N: usize = 24;
@@ -823,6 +990,7 @@ mod tests {
         let run_line = Request::Run {
             artifact: "matmul_f64_64".into(),
             inputs: matmul_inputs(11),
+            deadline_ms: None,
         }
         .to_line();
         // One write, two pipelined requests.

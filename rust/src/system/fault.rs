@@ -1,0 +1,327 @@
+//! Fault plans: which clusters of the package are fused off.
+//!
+//! The paper's hierarchical cluster/quadrant organization is what lets
+//! a real Manticore keep serving with a few clusters disabled — per-die
+//! defects are expected at 4096-core scale (Occamy inherits the same
+//! chiplet structure). A [`FaultPlan`] is the explicit model of that
+//! state: a set of faulty cluster ids. Placement retires every slot
+//! whose cluster range intersects the plan (fault granularity is the
+//! cluster, retirement granularity is the slot — one bad cluster costs
+//! its whole slot, which is exactly the capacity amplification a
+//! degradation curve should show), and sim pricing re-slices the
+//! survivors onto a proportional sub-machine via
+//! [`SystemConfig::slice_clusters`], so throughput and J/request vs
+//! fault rate is a runnable curve, not a claim.
+
+use std::collections::BTreeSet;
+
+use crate::coordinator::{Coordinator, OpTask};
+use crate::system::{ClusterSlot, SystemConfig};
+use crate::util::json::{self, Value};
+use crate::util::rng::Rng;
+
+/// A set of faulty (fused-off) clusters of the package.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    faulty: BTreeSet<usize>,
+}
+
+impl FaultPlan {
+    /// The healthy machine.
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Mark an explicit set of clusters faulty.
+    pub fn from_clusters<I: IntoIterator<Item = usize>>(ids: I) -> Self {
+        FaultPlan { faulty: ids.into_iter().collect() }
+    }
+
+    /// Seeded random plan: each of `total_clusters` is faulty with
+    /// probability `rate`. Deterministic in `(seed, rate)`.
+    pub fn seeded(seed: u64, total_clusters: usize, rate: f64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xFA17_9A1D);
+        let faulty = (0..total_clusters)
+            .filter(|_| rng.f64() < rate)
+            .collect();
+        FaultPlan { faulty }
+    }
+
+    /// Parse a JSON fault spec. Two forms (combinable):
+    ///
+    /// ```json
+    /// {"faulty_clusters": [7, 40, 41]}
+    /// {"fault_rate": 0.02, "seed": 9, "total_clusters": 512}
+    /// ```
+    pub fn from_json(text: &str) -> Result<FaultPlan, String> {
+        let v = json::parse(text).map_err(|e| format!("fault plan: {e}"))?;
+        let obj = v.as_obj().ok_or("fault plan: expected a JSON object")?;
+        for k in obj.keys() {
+            if !matches!(
+                k.as_str(),
+                "faulty_clusters" | "fault_rate" | "seed" | "total_clusters"
+            ) {
+                return Err(format!("fault plan: unknown key {k:?}"));
+            }
+        }
+        let mut plan = FaultPlan::none();
+        if let Some(arr) = v.get("faulty_clusters") {
+            let arr = arr
+                .as_arr()
+                .ok_or("fault plan: faulty_clusters must be an array")?;
+            for c in arr {
+                let id = c
+                    .as_usize()
+                    .ok_or("fault plan: faulty_clusters entries must be ints")?;
+                plan.faulty.insert(id);
+            }
+        }
+        if let Some(rate) = v.get("fault_rate").and_then(Value::as_f64) {
+            let seed =
+                v.get("seed").and_then(Value::as_f64).unwrap_or(0.0) as u64;
+            let total = v
+                .get("total_clusters")
+                .and_then(Value::as_usize)
+                .unwrap_or_else(|| {
+                    SystemConfig::default().tree.total_clusters()
+                });
+            let r = FaultPlan::seeded(seed, total, rate);
+            plan.faulty.extend(r.faulty);
+        }
+        Ok(plan)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faulty.is_empty()
+    }
+
+    pub fn n_faulty(&self) -> usize {
+        self.faulty.len()
+    }
+
+    pub fn is_faulty(&self, cluster: usize) -> bool {
+        self.faulty.contains(&cluster)
+    }
+
+    /// Mark one more cluster faulty (runtime fault injection).
+    pub fn mark(&mut self, cluster: usize) {
+        self.faulty.insert(cluster);
+    }
+
+    pub fn faulty_clusters(&self) -> impl Iterator<Item = usize> + '_ {
+        self.faulty.iter().copied()
+    }
+
+    /// Whether any cluster of the slot's range is faulty — if so the
+    /// whole slot must be retired (leases are contiguous ranges; a
+    /// hole cannot be placed around).
+    pub fn slot_is_faulty(&self, slot: &ClusterSlot) -> bool {
+        self.faulty
+            .range(slot.first_cluster..=slot.last_cluster())
+            .next()
+            .is_some()
+    }
+
+    /// Clusters still usable out of `total`.
+    pub fn surviving(&self, total: usize) -> usize {
+        total - self.faulty.iter().filter(|&&c| c < total).count()
+    }
+
+    /// The sub-machine the survivors form, at slot granularity: every
+    /// slot touching a faulty cluster is written off entirely, and the
+    /// remaining capacity is re-sliced proportionally (HBM bandwidth,
+    /// L2, HBM capacity all scale with the surviving cluster share).
+    pub fn degraded_config(
+        &self,
+        sys: &SystemConfig,
+        slot_clusters: usize,
+    ) -> SystemConfig {
+        let total = sys.tree.total_clusters();
+        let sc = slot_clusters.clamp(1, total);
+        let n_slots = total / sc;
+        let alive = (0..n_slots)
+            .filter(|&i| {
+                !self.slot_is_faulty(&ClusterSlot {
+                    id: i,
+                    first_cluster: i * sc,
+                    n_clusters: sc,
+                })
+            })
+            .count()
+            .max(1);
+        sys.slice_clusters(alive * sc)
+    }
+}
+
+/// One point of the degradation curve: the machine with a seeded
+/// fault plan at `fault_rate`, pricing a reference GEMM on the
+/// surviving sub-machine.
+#[derive(Debug, Clone)]
+pub struct DegradationPoint {
+    pub fault_rate: f64,
+    pub faulty_clusters: usize,
+    pub retired_slots: usize,
+    pub active_slots: usize,
+    pub surviving_clusters: usize,
+    /// Reference-GEMM wall time on the degraded machine [s].
+    pub gemm_time_s: f64,
+    /// Requests/s the degraded machine sustains on the reference GEMM.
+    pub throughput_rps: f64,
+    /// Simulated energy per reference request [J].
+    pub j_per_request: f64,
+    /// Achieved flop/s on the degraded machine.
+    pub achieved_flops: f64,
+}
+
+/// Price "throughput and J/request vs fault rate" over seeded fault
+/// plans: for each rate, mark clusters faulty, retire every slot that
+/// intersects one, and price a reference `dim³` f64 GEMM on the
+/// re-sliced survivor machine (the same [`SystemConfig::slice_clusters`]
+/// sub-machine model the serve path leases against).
+pub fn degradation_curve(
+    sys: &SystemConfig,
+    vdd: f64,
+    slot_clusters: usize,
+    dim: usize,
+    seed: u64,
+    rates: &[f64],
+) -> Vec<DegradationPoint> {
+    let total = sys.tree.total_clusters();
+    let sc = slot_clusters.clamp(1, total);
+    let n_slots = total / sc;
+    rates
+        .iter()
+        .map(|&rate| {
+            let plan = FaultPlan::seeded(seed, total, rate);
+            let retired = (0..n_slots)
+                .filter(|&i| {
+                    plan.slot_is_faulty(&ClusterSlot {
+                        id: i,
+                        first_cluster: i * sc,
+                        n_clusters: sc,
+                    })
+                })
+                .count()
+                .min(n_slots.saturating_sub(1));
+            let active = n_slots - retired;
+            let degraded = sys.slice_clusters(active * sc);
+            let co = Coordinator::new(degraded, vdd);
+            let r = co
+                .simulate_task(&OpTask::dot("gemm", 1, dim, dim, dim, 8))
+                .expect("reference GEMM prices on any sub-machine");
+            DegradationPoint {
+                fault_rate: rate,
+                faulty_clusters: plan.surviving(total).abs_diff(total),
+                retired_slots: retired,
+                active_slots: active,
+                surviving_clusters: active * sc,
+                gemm_time_s: r.time_s,
+                throughput_rps: if r.time_s > 0.0 { 1.0 / r.time_s } else { 0.0 },
+                j_per_request: r.energy_j,
+                achieved_flops: r.achieved,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_identity() {
+        let sys = SystemConfig::default();
+        let p = FaultPlan::none();
+        assert!(p.is_empty());
+        assert_eq!(p.surviving(512), 512);
+        let d = p.degraded_config(&sys, 32);
+        assert_eq!(d.tree.total_clusters(), 512);
+    }
+
+    #[test]
+    fn slot_intersection_retires_whole_slot() {
+        let p = FaultPlan::from_clusters([33]);
+        let s0 = ClusterSlot { id: 0, first_cluster: 0, n_clusters: 32 };
+        let s1 = ClusterSlot { id: 1, first_cluster: 32, n_clusters: 32 };
+        assert!(!p.slot_is_faulty(&s0));
+        assert!(p.slot_is_faulty(&s1));
+        // One faulty cluster costs the whole 32-cluster slot.
+        let sys = SystemConfig::default();
+        let d = p.degraded_config(&sys, 32);
+        assert_eq!(d.tree.total_clusters(), 480);
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic() {
+        let a = FaultPlan::seeded(9, 512, 0.05);
+        let b = FaultPlan::seeded(9, 512, 0.05);
+        let c = FaultPlan::seeded(10, 512, 0.05);
+        assert_eq!(a, b);
+        assert!(a.n_faulty() > 0, "5% of 512 should mark some clusters");
+        assert_ne!(a, c, "different seeds should differ");
+    }
+
+    #[test]
+    fn json_spec_round_trip() {
+        let p =
+            FaultPlan::from_json(r#"{"faulty_clusters": [7, 40, 41]}"#).unwrap();
+        assert_eq!(p.n_faulty(), 3);
+        assert!(p.is_faulty(40) && !p.is_faulty(39));
+        let q = FaultPlan::from_json(
+            r#"{"fault_rate": 0.03, "seed": 4, "total_clusters": 512}"#,
+        )
+        .unwrap();
+        assert_eq!(q, FaultPlan::seeded(4, 512, 0.03));
+        assert!(FaultPlan::from_json(r#"{"bogus": 1}"#).is_err());
+        assert!(FaultPlan::from_json("[]").is_err());
+    }
+
+    /// Acceptance: retiring 1/16 slots prices a degradation on the
+    /// sliced sub-machine — less throughput, monotone non-increasing
+    /// achieved flops along the curve.
+    #[test]
+    fn one_retired_slot_prices_degradation() {
+        let sys = SystemConfig::default();
+        // Cluster 5 faulty -> slot 0 of 16 retired -> 480 clusters.
+        let plan = FaultPlan::from_clusters([5]);
+        let healthy = Coordinator::new(sys, 0.9);
+        let degraded =
+            Coordinator::new(plan.degraded_config(&sys, 32), 0.9);
+        let t = OpTask::dot("gemm", 1, 2048, 2048, 2048, 8);
+        let full = healthy.simulate_task(&t).unwrap();
+        let deg = degraded.simulate_task(&t).unwrap();
+        assert!(
+            deg.time_s > full.time_s,
+            "degraded GEMM must be slower: {} vs {}",
+            deg.time_s,
+            full.time_s
+        );
+        assert!(deg.achieved < full.achieved);
+    }
+
+    #[test]
+    fn degradation_curve_monotone_capacity() {
+        let sys = SystemConfig::default();
+        let pts = degradation_curve(
+            &sys,
+            0.9,
+            32,
+            1024,
+            7,
+            &[0.0, 0.01, 0.05, 0.2],
+        );
+        assert_eq!(pts.len(), 4);
+        assert_eq!(pts[0].retired_slots, 0);
+        assert_eq!(pts[0].active_slots, 16);
+        for w in pts.windows(2) {
+            assert!(
+                w[1].active_slots <= w[0].active_slots,
+                "higher fault rate cannot add capacity"
+            );
+            assert!(w[1].throughput_rps <= w[0].throughput_rps + 1e-9);
+        }
+        // At a 20% cluster fault rate, 32-cluster slots are almost
+        // surely all hit — but the model floors at one surviving slot.
+        assert!(pts[3].active_slots >= 1);
+    }
+}

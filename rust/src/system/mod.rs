@@ -5,6 +5,9 @@
 //! model into the paper's Fig. 9 machine.
 
 pub mod area;
+pub mod fault;
+
+pub use fault::{degradation_curve, DegradationPoint, FaultPlan};
 
 use crate::interconnect::{Tree, TreeConfig};
 use crate::power::DvfsModel;

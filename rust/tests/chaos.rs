@@ -1,0 +1,329 @@
+//! Fault-tolerance guarantees of the serve stack under deterministic
+//! chaos injection: every request in a chaos burst is accounted for
+//! exactly once (completed / rejected / expired / failed / dropped),
+//! injected worker panics are recovered without leaking a slot lease,
+//! non-injected replies stay bit-identical to direct execution, the
+//! `health` op reports the degraded state, and deadline expiry takes
+//! the typed `deadline_exceeded` path. All tests that need artifacts
+//! skip when `artifacts/` is absent (run `make artifacts`).
+
+use manticore::config::Config;
+use manticore::runtime::{backend_by_name, Tensor};
+use manticore::serve::chaos::{ChaosSpec, SlotFault};
+use manticore::serve::protocol::{ErrCode, HealthStatus, Reply, Request};
+use manticore::serve::{ServeConfig, Server};
+use manticore::system::FaultPlan;
+use manticore::util::rng::Rng;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+fn artifacts_present() -> bool {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        return true;
+    }
+    eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+    false
+}
+
+fn matmul_inputs(seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    vec![
+        Tensor::F64(rng.normal_vec(64 * 64), vec![64, 64]),
+        Tensor::F64(rng.normal_vec(64 * 64), vec![64, 64]),
+    ]
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    /// One request, one reply. `Err` means the connection died (write
+    /// failure, read failure, or injected hangup → EOF).
+    fn roundtrip(&mut self, req: &Request) -> Result<Reply, String> {
+        writeln!(self.writer, "{}", req.to_line())
+            .map_err(|e| format!("write: {e}"))?;
+        let mut line = String::new();
+        match self.reader.read_line(&mut line) {
+            Ok(0) => Err("eof".to_string()),
+            Ok(_) => Reply::parse(&line).map_err(|e| format!("parse: {e}")),
+            Err(e) => Err(format!("read: {e}")),
+        }
+    }
+}
+
+fn start_server(cfg: ServeConfig) -> Server {
+    Server::start(&cfg, &Config::default()).expect("server start")
+}
+
+fn run_req(seed: u64, deadline_ms: Option<f64>) -> Request {
+    Request::Run {
+        artifact: "matmul_f64_64".to_string(),
+        inputs: matmul_inputs(seed),
+        deadline_ms,
+    }
+}
+
+/// Injected worker panics with rate 1.0: every execution panics inside
+/// `catch_unwind`, every request gets a typed `internal` reply, and the
+/// server keeps serving — more sequential requests than the pool has
+/// slots proves each unwind released its lease (a leaked lease would
+/// exhaust the pool and wedge the burst).
+#[test]
+fn injected_panics_are_recovered_without_leaking_leases() {
+    if !artifacts_present() {
+        return;
+    }
+    let server = start_server(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        chaos: Some(ChaosSpec {
+            seed: 7,
+            worker_panic_rate: 1.0,
+            ..ChaosSpec::default()
+        }),
+        ..ServeConfig::default()
+    });
+    let addr = server.addr();
+    let n_slots = server.stats().slots;
+    let requests = (n_slots + 8) as u64;
+
+    let mut client = Client::connect(addr).unwrap();
+    for i in 0..requests {
+        match client.roundtrip(&run_req(100 + i, None)) {
+            Ok(Reply::Err(e)) => assert_eq!(
+                e.code,
+                ErrCode::Internal,
+                "request {i}: wrong error class: {}",
+                e.msg
+            ),
+            other => panic!("request {i}: expected internal error, got {other:?}"),
+        }
+    }
+    // The health probe sees the recovered panics as degradation.
+    match client.roundtrip(&Request::Health).unwrap() {
+        Reply::Health(h) => {
+            assert_eq!(h.status, HealthStatus::Degraded);
+            assert_eq!(h.worker_panics, requests);
+        }
+        other => panic!("expected health reply, got {other:?}"),
+    }
+    let _ = client.roundtrip(&Request::Shutdown);
+    let stats = server.wait();
+    assert_eq!(stats.panics, requests, "every execution panicked");
+    assert_eq!(stats.errors, requests, "every panic answered typed");
+    assert_eq!(stats.requests, 0, "no request may complete ok");
+}
+
+/// The headline invariant: under a mixed chaos burst (panics, reply
+/// delays, connection drops, a scheduled slot fault) every request
+/// resolves exactly once — ok, typed error, or observed drop — and the
+/// client-side tally matches the server's own counters.
+#[test]
+fn chaos_burst_accounts_for_every_request() {
+    if !artifacts_present() {
+        return;
+    }
+    let server = start_server(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        chaos: Some(ChaosSpec {
+            seed: 42,
+            worker_panic_rate: 0.2,
+            reply_delay_rate: 0.25,
+            reply_delay_ms: 2.0,
+            conn_drop_rate: 0.15,
+            slot_faults: vec![SlotFault { after_requests: 5, slot: 1 }],
+        }),
+        ..ServeConfig::default()
+    });
+    let addr = server.addr();
+
+    const CLIENTS: u64 = 4;
+    const PER_CLIENT: u64 = 15;
+    #[derive(Default)]
+    struct Tally {
+        ok: u64,
+        failed: u64,
+        rejected: u64,
+        expired: u64,
+        dropped: u64,
+    }
+    let tallies: Vec<Tally> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                s.spawn(move || {
+                    let mut t = Tally::default();
+                    let mut client = Client::connect(addr).ok();
+                    for i in 0..PER_CLIENT {
+                        let Some(cl) = client.as_mut() else {
+                            t.dropped += 1;
+                            client = Client::connect(addr).ok();
+                            continue;
+                        };
+                        match cl.roundtrip(&run_req((c << 16) + i, None)) {
+                            Ok(Reply::Run(_)) => t.ok += 1,
+                            Ok(Reply::Err(e)) => match e.code {
+                                ErrCode::Overloaded => t.rejected += 1,
+                                ErrCode::DeadlineExceeded => t.expired += 1,
+                                _ => t.failed += 1,
+                            },
+                            Ok(other) => {
+                                panic!("client {c}: unexpected {other:?}")
+                            }
+                            Err(_) => {
+                                // Injected hangup (or its wake: broken
+                                // pipe on the next write). Reconnect.
+                                t.dropped += 1;
+                                client = Client::connect(addr).ok();
+                            }
+                        }
+                    }
+                    t
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let sent = CLIENTS * PER_CLIENT;
+    let (mut ok, mut failed, mut rejected, mut expired, mut dropped) =
+        (0u64, 0u64, 0u64, 0u64, 0u64);
+    for t in &tallies {
+        ok += t.ok;
+        failed += t.failed;
+        rejected += t.rejected;
+        expired += t.expired;
+        dropped += t.dropped;
+    }
+    assert_eq!(
+        ok + failed + rejected + expired + dropped,
+        sent,
+        "every request must resolve exactly once \
+         (ok {ok}, failed {failed}, rejected {rejected}, expired {expired}, \
+         dropped {dropped})"
+    );
+    assert!(ok > 0, "a 20% panic rate must let most requests through");
+
+    let mut client = Client::connect(addr).unwrap();
+    let _ = client.roundtrip(&Request::Shutdown);
+    let stats = server.wait();
+    assert_eq!(stats.requests, ok, "server ok-count matches clients");
+    assert_eq!(stats.errors, failed, "server error-count matches clients");
+    assert_eq!(stats.rejected, rejected);
+    assert_eq!(stats.expired, expired);
+    // 60 requests minus drops is far past the fault's due count of 5.
+    assert!(
+        stats.retired_slots >= 1,
+        "scheduled slot fault must have retired a slot"
+    );
+}
+
+/// Chaos that only delays replies must not perturb numerics: every
+/// reply is bit-identical to executing the same inputs directly on the
+/// compiled artifact.
+#[test]
+fn non_injected_replies_are_bit_exact_under_chaos() {
+    if !artifacts_present() {
+        return;
+    }
+    let text =
+        std::fs::read_to_string("artifacts/matmul_f64_64.hlo.txt").unwrap();
+    let exe = backend_by_name("native")
+        .unwrap()
+        .compile("matmul_f64_64", &text)
+        .unwrap();
+    let server = start_server(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        chaos: Some(ChaosSpec {
+            seed: 3,
+            reply_delay_rate: 1.0,
+            reply_delay_ms: 1.0,
+            ..ChaosSpec::default()
+        }),
+        ..ServeConfig::default()
+    });
+    let mut client = Client::connect(server.addr()).unwrap();
+    for i in 0..8u64 {
+        let want = exe.execute(&matmul_inputs(900 + i)).unwrap();
+        match client.roundtrip(&run_req(900 + i, None)).unwrap() {
+            Reply::Run(run) => {
+                assert_eq!(run.outputs, want, "request {i}: outputs diverged")
+            }
+            other => panic!("request {i}: unexpected {other:?}"),
+        }
+    }
+    let _ = client.roundtrip(&Request::Shutdown);
+    server.wait();
+}
+
+/// A fault plan marking the first slot's clusters faulty retires that
+/// slot at startup; `health` reports the degraded capacity and the
+/// remaining slots still serve.
+#[test]
+fn fault_plan_retires_slots_and_health_reports_it() {
+    if !artifacts_present() {
+        return;
+    }
+    let server = start_server(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        // Clusters 0..32 = exactly slot 0 at the default 32
+        // clusters/slot.
+        fault_plan: Some(FaultPlan::from_clusters(0..32)),
+        ..ServeConfig::default()
+    });
+    let mut client = Client::connect(server.addr()).unwrap();
+    match client.roundtrip(&Request::Health).unwrap() {
+        Reply::Health(h) => {
+            assert_eq!(h.status, HealthStatus::Degraded);
+            assert_eq!(h.retired_slots, 1, "one slot covers clusters 0..32");
+            assert_eq!(h.faulty_clusters, 32);
+            assert!(h.slots > h.retired_slots, "capacity must survive");
+        }
+        other => panic!("expected health reply, got {other:?}"),
+    }
+    match client.roundtrip(&run_req(77, None)).unwrap() {
+        Reply::Run(_) => {}
+        other => panic!("degraded server must still serve, got {other:?}"),
+    }
+    let _ = client.roundtrip(&Request::Shutdown);
+    let stats = server.wait();
+    assert_eq!(stats.retired_slots, 1);
+    assert_eq!(stats.requests, 1);
+}
+
+/// Deadline taxonomy: an already-expired deadline is refused at
+/// admission with the typed `deadline_exceeded` code, a generous one
+/// completes, and the expiry shows up in the stats counter.
+#[test]
+fn expired_deadlines_take_the_typed_path() {
+    if !artifacts_present() {
+        return;
+    }
+    let server = start_server(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        ..ServeConfig::default()
+    });
+    let mut client = Client::connect(server.addr()).unwrap();
+    match client.roundtrip(&run_req(1, Some(0.0))).unwrap() {
+        Reply::Err(e) => assert_eq!(e.code, ErrCode::DeadlineExceeded),
+        other => panic!("expected deadline_exceeded, got {other:?}"),
+    }
+    match client.roundtrip(&run_req(2, Some(30_000.0))).unwrap() {
+        Reply::Run(_) => {}
+        other => panic!("generous deadline must complete, got {other:?}"),
+    }
+    let _ = client.roundtrip(&Request::Shutdown);
+    let stats = server.wait();
+    assert_eq!(stats.expired, 1);
+    assert_eq!(stats.requests, 1);
+}

@@ -251,6 +251,7 @@ fn reactor_server_replies_are_bit_identical_to_direct_execution() {
                     let req = Request::Run {
                         artifact: "matmul_f64_64".to_string(),
                         inputs: inputs_for(client, i),
+                        deadline_ms: None,
                     };
                     writeln!(writer, "{}", req.to_line()).unwrap();
                 }

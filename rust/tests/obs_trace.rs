@@ -137,6 +137,7 @@ fn traced_request_exports_expected_lifecycle_tree() {
     let reply = client.roundtrip(&Request::Run {
         artifact: "matmul_f64_64".into(),
         inputs: matmul_inputs(5),
+        deadline_ms: None,
     });
     assert!(matches!(reply, Reply::Run(_)), "{reply:?}");
     // The worker's reply span closes moments after the reply line is
@@ -255,6 +256,7 @@ fn trace_drain_consumes_the_window() {
     let reply = client.roundtrip(&Request::Run {
         artifact: "matmul_f64_64".into(),
         inputs: matmul_inputs(9),
+        deadline_ms: None,
     });
     assert!(matches!(reply, Reply::Run(_)), "{reply:?}");
     std::thread::sleep(Duration::from_millis(150));
