@@ -10,7 +10,8 @@ PYTHON ?= python3
 BENCH_OUT ?= bench-results
 
 .PHONY: help build test artifacts fmt fmt-check clippy bench bench-smoke \
-        perf serve-smoke chaos-smoke trace-smoke lower-smoke pytest clean
+        perf serve-smoke chaos-smoke trace-smoke lower-smoke scaling-smoke \
+        pytest clean
 
 help:
 	@echo "targets:"
@@ -21,7 +22,8 @@ help:
 	@echo "  fmt-check    cargo fmt --check"
 	@echo "  clippy       cargo clippy --all-targets -- -D warnings"
 	@echo "  bench        run every bench target"
-	@echo "  bench-smoke  perf_hotpath + native_exec + sim_price + obs_overhead"
+	@echo "  bench-smoke  perf_hotpath + native_exec + sim_price + obs_overhead +"
+	@echo "               shard_scaling"
 	@echo "               run through"
 	@echo "               scripts/bench_ab.sh: interleaved HEAD-vs-baseline A/B"
 	@echo "               rounds (baseline binary stashed in $(BENCH_OUT)/bin/),"
@@ -59,6 +61,11 @@ help:
 	@echo "               and render it as a virtual-time Perfetto/Chrome trace"
 	@echo "               ($(BENCH_OUT)/virtual_trace.json), then validate it"
 	@echo "               with 'manticore trace-check'"
+	@echo "  scaling-smoke  'manticore repro scaling': gang-sharded GEMM"
+	@echo "               latency/throughput/J-per-request for 1/2/4-chiplet"
+	@echo "               gangs over the modeled D2D fabric; the JSON lands in"
+	@echo "               $(BENCH_OUT)/scaling.json and CI asserts the 4-chiplet"
+	@echo "               latency beats 1-chiplet on the largest GEMM artifact"
 	@echo "  pytest       python L1/L2 tests (skip cleanly when JAX absent)"
 	@echo "  clean        remove build products"
 
@@ -100,7 +107,7 @@ bench:
 # its previous JSON (its smoke timings are noisy).
 bench-smoke:
 	mkdir -p $(BENCH_OUT)
-	@for f in perf_hotpath native_exec sim_price obs_overhead; do \
+	@for f in perf_hotpath native_exec sim_price obs_overhead shard_scaling; do \
 	  echo "== $$f: interleaved A/B (3 rounds, gate 25% + Welch p<0.01) =="; \
 	  CARGO="$(CARGO)" sh scripts/bench_ab.sh $$f $(BENCH_OUT) 3 0.25 \
 	    || exit 1; \
@@ -211,6 +218,16 @@ lower-smoke: build
 	mkdir -p $(BENCH_OUT)
 	./target/release/manticore lower all --check \
 	  --stats $(BENCH_OUT)/lower_fusion_stats.md
+
+# Multi-chiplet scaling smoke: price every GEMM artifact for 1/2/4
+# chiplet gangs on the compiled (LoweredProgram) path — large dots
+# row-shard with a modeled ring all-gather over the D2D links — and
+# write the table + JSON. CI asserts monotone latency improvement
+# 1 -> 2 -> 4 on the largest checked-in GEMM (matmul_f32_256).
+scaling-smoke: build
+	mkdir -p $(BENCH_OUT)
+	./target/release/manticore repro scaling --gangs 1,2,4 \
+	  --json $(BENCH_OUT)/scaling.json
 
 pytest:
 	$(PYTHON) -m pytest python/tests -q

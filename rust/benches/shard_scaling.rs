@@ -1,0 +1,110 @@
+//! shard_scaling bench: what the multi-chiplet gang path costs and
+//! buys. Two families of samples, JSON-gated by `bench-diff` like the
+//! other bench-smoke targets:
+//!
+//! * `price/*` — compiled pricing of the big GEMM artifact, unsharded
+//!   (`gang1`) vs gang-sharded over the D2D fabric (`gang4`). The
+//!   pricing itself must stay cheap (the serve fleet prices every
+//!   request); the *modeled* latency is the scaling-smoke claim and is
+//!   printed alongside.
+//! * `lease/*` — gang acquire+release on a free [`SlotPool`]: the
+//!   synchronization overhead a `--gang-max 4` server pays per
+//!   request over classic single-slot leasing.
+//!
+//! `--smoke` caps iterations (CI smoke job); `--json <path>` writes
+//! the report for `manticore bench-diff --fail-on-regression`.
+
+use manticore::runtime::sim::SimBackend;
+use manticore::runtime::{inputs_for_meta, load_manifest};
+use manticore::serve::SlotPool;
+use manticore::system::SystemConfig;
+use manticore::util::bench::{fmt_ns, BenchOpts, Report};
+use std::path::Path;
+
+fn main() {
+    let mut rep = Report::new(BenchOpts::from_env_args());
+
+    let manifest = match load_manifest(Path::new("artifacts"), "bench") {
+        Ok(m) => m,
+        Err(e) => {
+            println!("(skipping shard_scaling bench: {e})");
+            rep.finish().expect("writing bench report");
+            return;
+        }
+    };
+
+    let backend = SimBackend::new();
+    // The largest checked-in GEMM: the artifact the gang study shards.
+    for name in ["matmul_f32_256", "matmul_f64_64"] {
+        let Some(meta) = manifest.get(name) else {
+            println!("(skipping {name}: not in manifest)");
+            continue;
+        };
+        let text =
+            match std::fs::read_to_string(format!("artifacts/{name}.hlo.txt"))
+            {
+                Ok(t) => t,
+                Err(e) => {
+                    println!("(skipping {name}: {e})");
+                    continue;
+                }
+            };
+        let exe = match backend.compile_sim(name, &text) {
+            Ok(e) => e,
+            Err(e) => {
+                println!("(skipping {name}: {e})");
+                continue;
+            }
+        };
+        let inputs = inputs_for_meta(meta, 3).expect("manifest dtype");
+        let (_, profile) = exe.profile_execution(&inputs).expect("profile");
+
+        let (rep1, _) =
+            exe.price_gang(Some(&profile), 1).expect("gang-1 pricing");
+        let (rep4, plan) =
+            exe.price_gang(Some(&profile), 4).expect("gang-4 pricing");
+        println!(
+            "{name}: modeled latency {:.1} µs single -> {:.1} µs on a \
+             4-chiplet gang ({} of {} dots sharded)",
+            rep1.total_time_s * 1e6,
+            rep4.total_time_s * 1e6,
+            plan.sharded_dots(),
+            plan.decisions.len()
+        );
+
+        let single =
+            rep.bench(&format!("shard_scaling/price/gang1/{name}"), || {
+                std::hint::black_box(
+                    exe.price_gang(Some(&profile), 1).expect("pricing"),
+                );
+            });
+        let gang =
+            rep.bench(&format!("shard_scaling/price/gang4/{name}"), || {
+                std::hint::black_box(
+                    exe.price_gang(Some(&profile), 4).expect("pricing"),
+                );
+            });
+        println!(
+            "  -> pricing cost {} unsharded vs {} sharded\n",
+            fmt_ns(single.mean_ns),
+            fmt_ns(gang.mean_ns)
+        );
+    }
+
+    // Lease-path overhead on a free pool: single slot vs 4-slot gang
+    // (atomic acquire, chiplet spread, release).
+    let pool = SlotPool::new(&SystemConfig::default(), 32);
+    let single = rep.bench("shard_scaling/lease/single", || {
+        std::hint::black_box(pool.lease_gang(1));
+    });
+    let gang = rep.bench("shard_scaling/lease/gang4", || {
+        std::hint::black_box(pool.lease_gang(4));
+    });
+    println!(
+        "gang lease acquire+release: {} single vs {} gang-of-4",
+        fmt_ns(single.mean_ns),
+        fmt_ns(gang.mean_ns)
+    );
+
+    rep.finish().expect("writing bench report");
+}

@@ -142,10 +142,12 @@ impl Coordinator {
     /// A coordinator pricing work on one leased [`ClusterSlot`] instead
     /// of the whole machine: the serve subsystem gives each in-flight
     /// request its own disjoint sub-machine (proportional cores, HBM
-    /// bandwidth, power — see `SystemConfig::slice_clusters`).
+    /// bandwidth, power). The slice is chiplet-aware: a slot straddling
+    /// chiplets sees its cross-chiplet HBM share capped by the D2D link
+    /// (see `SystemConfig::slice_for_slot`).
     pub fn for_slot(&self, slot: &ClusterSlot) -> Coordinator {
         Coordinator {
-            sys: self.sys.slice_clusters(slot.n_clusters),
+            sys: self.sys.slice_for_slot(slot.first_cluster, slot.n_clusters),
             vdd: self.vdd,
             calib: self.calib,
             cluster: self.cluster,
@@ -207,6 +209,22 @@ impl Coordinator {
                     );
                     (time, 0.0, 0.0, power)
                 }
+            }
+            Placement::D2d => {
+                // Inter-chiplet collective traffic: priced against one
+                // die-to-die serial link (B/cycle x clock), never the
+                // HBM roofline. The lowering folds per-hop latency into
+                // the byte count (`topology::allgather_bytes`), so the
+                // mem_util-derated bandwidth division tracks the
+                // modeled ring cycles.
+                let bw = self.sys.tree.d2d_link.max(1e-9) * freq;
+                let time = t.bytes / (bw * self.calib.mem_util);
+                let power = self.sys.dvfs.power(
+                    self.vdd,
+                    self.sys.total_cores(),
+                    0.0,
+                );
+                (time, 0.0, 0.0, power)
             }
             Placement::Tcdm => {
                 // Single cluster: 8 FPUs against 32-bank TCDM (8 B/bank
@@ -519,5 +537,24 @@ mod tests {
         assert!(part.time_s > full.time_s);
         // Energy stays comparable: fewer cores for longer.
         assert!(part.energy_j > 0.0);
+    }
+
+    /// D2D-placed data tasks price against one die-to-die link, not
+    /// the HBM roofline: the same bytes over HBM finish much faster.
+    #[test]
+    fn d2d_tasks_price_against_the_link_not_hbm() {
+        let co = coord();
+        let freq = co.sys.freq(co.vdd);
+        let bytes = 64.0 * 1024.0 * 1024.0;
+        let t = OpTask::d2d_collective("allgather", bytes, 4);
+        let r = co.simulate_task(&t).unwrap();
+        let want = bytes
+            / (co.sys.tree.d2d_link * freq * co.calib.mem_util);
+        assert!((r.time_s / want - 1.0).abs() < 1e-9, "{} vs {want}", r.time_s);
+        assert_eq!(r.placement, Placement::D2d);
+        // Same payload through HBM is far cheaper on this machine.
+        let hbm = OpTask::data_coalesced("copy", bytes, 4, 1);
+        let rh = co.simulate_task(&hbm).unwrap();
+        assert!(rh.time_s < r.time_s, "{} !< {}", rh.time_s, r.time_s);
     }
 }

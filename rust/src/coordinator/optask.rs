@@ -61,6 +61,11 @@ pub enum Placement {
     /// Tiled across the whole system; slabs are DMA-streamed from
     /// HBM/L2 (the coordinator's double-buffered GEMM discipline).
     Hbm,
+    /// Inter-chiplet traffic over the die-to-die fabric (gang-sharded
+    /// collectives: the all-gather a row-sharded GEMM pays to
+    /// assemble its result). Priced against the `d2d_link` bandwidth,
+    /// not HBM.
+    D2d,
 }
 
 impl Placement {
@@ -68,6 +73,7 @@ impl Placement {
         match self {
             Placement::Tcdm => "tcdm",
             Placement::Hbm => "hbm",
+            Placement::D2d => "d2d",
         }
     }
 }
@@ -284,6 +290,29 @@ impl OpTask {
             placement: auto_place(bytes),
             count: 1,
             fused: members.max(1),
+            overlap: false,
+        }
+    }
+
+    /// Inter-chiplet collective traffic: the ring all-gather a
+    /// gang-sharded GEMM runs to assemble its full result on every
+    /// member. Zero flops; `bytes` is the per-slot die-to-die link
+    /// occupancy (the topology model folds per-hop latency in as
+    /// equivalent bytes, so pricing stays a bandwidth division).
+    /// Pair with [`Self::with_overlap`] to hide it behind the
+    /// adjacent sharded compute where double-buffering allows.
+    pub fn d2d_collective(name: &str, bytes: f64, elem_bytes: usize) -> OpTask {
+        let eb = elem_bytes.max(1);
+        OpTask {
+            name: name.to_string(),
+            kind: OpKind::Data,
+            out_elems: ((bytes / eb as f64) as usize).max(1),
+            elem_bytes: eb,
+            flops: 0.0,
+            bytes,
+            placement: Placement::D2d,
+            count: 1,
+            fused: 1,
             overlap: false,
         }
     }

@@ -36,6 +36,7 @@
 
 pub mod classify;
 pub mod passes;
+pub mod shard;
 
 use crate::coordinator::OpTask;
 use crate::runtime::native::eval::dot_dims;

@@ -1,0 +1,241 @@
+//! Gang partitioning: split large `dot` tasks in a lowered op stream
+//! across the member slots of a gang lease, one slot per chiplet.
+//!
+//! The transform is a *pricing-time* rewrite of the flattened task
+//! stream (`LoweredProgram::tasks` output) — the compiled `raw`/`opt`
+//! schedules are never mutated, so the `lower --check` trace-parity
+//! gate keeps comparing the same unsharded baseline. Numerical
+//! execution is untouched too: sharding changes what the machine
+//! model *charges* for a request, not what the interpreter computes,
+//! so sharded outputs are bit-identical to single-slot outputs by
+//! construction.
+//!
+//! Model (mirroring the paper's package: one slot per chiplet, HBM
+//! stack local to each):
+//!
+//! * A `dot` of `b×[m×k · k×n]` row-shards: each of the `G` slots
+//!   computes `ceil(m/G)` rows from its local HBM stack, then the
+//!   gang runs a ring all-gather of the full result over the D2D
+//!   links ([`crate::system::topology::allgather`]). The all-gather
+//!   task is marked for DMA double-buffer overlap, so the portion the
+//!   adjacent shard's compute can hide comes off the critical path.
+//! * Everything else (elementwise, reduce, data) is data-parallel
+//!   along the same row split — each slot handles `1/G` of the
+//!   stream — which is how layer chains pipeline across the gang
+//!   without extra traffic.
+//! * A dot shards only when the cost model says it pays: the
+//!   crossover compares the single-slot price against
+//!   `shard + all-gather` on the *same* per-slot coordinator, so
+//!   latency-bound small dots (the `G−1` hops cost
+//!   [`crate::system::topology::D2D_HOP_LATENCY_CYCLES`] each) stay
+//!   replicated at full cost on every member.
+
+use crate::coordinator::{Coordinator, OpKind, OpTask, Placement, TaskError};
+use crate::system::topology;
+
+/// The per-dot partitioning verdict, for `manticore lower --stats`.
+#[derive(Debug, Clone)]
+pub struct ShardDecision {
+    /// Source task name.
+    pub name: String,
+    /// Did the crossover choose to shard?
+    pub sharded: bool,
+    /// Gang size the decision was priced for.
+    pub gang: usize,
+    /// Ring all-gather payload per slot [bytes], hop latency folded
+    /// in as equivalent link occupancy (0 when unsharded).
+    pub allgather_bytes: f64,
+    /// Modeled all-gather cycles before overlap hiding.
+    pub allgather_cycles: f64,
+    /// Single-slot price of the dot [cycles].
+    pub single_cycles: f64,
+    /// Sharded price: shard compute + (overlap-hidden) all-gather
+    /// [cycles].
+    pub sharded_cycles: f64,
+}
+
+/// A sharded (or verbatim) task stream plus the decisions that
+/// produced it.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub tasks: Vec<OpTask>,
+    pub decisions: Vec<ShardDecision>,
+    pub gang: usize,
+}
+
+impl ShardPlan {
+    /// How many dots the crossover actually sharded.
+    pub fn sharded_dots(&self) -> usize {
+        self.decisions.iter().filter(|d| d.sharded).count()
+    }
+}
+
+/// Row-shard one dot task for a `gang`-way split: each slot computes
+/// `ceil(m/gang)` rows; traffic re-planned through the GEMM tiling
+/// for the smaller per-slot problem.
+fn shard_dot(t: &OpTask, gang: usize) -> Option<OpTask> {
+    let OpKind::Dot { b, m, k, n } = t.kind else { return None };
+    if t.placement != Placement::Hbm || m < gang || gang <= 1 {
+        return None;
+    }
+    let m_shard = m.div_ceil(gang);
+    let mut s = OpTask::dot(&t.name, b, m_shard, k, n, t.elem_bytes);
+    s.count = t.count;
+    s.fused = t.fused;
+    Some(s)
+}
+
+/// Partition a flattened task stream for a `gang`-slot gang, pricing
+/// every crossover on `co` — the *per-slot* coordinator of the gang's
+/// leader (each member slot is an identical sub-machine). `gang <= 1`
+/// returns the stream verbatim with per-dot decisions recorded as
+/// unsharded.
+pub fn shard_stream(
+    tasks: &[OpTask],
+    co: &Coordinator,
+    gang: usize,
+) -> Result<ShardPlan, TaskError> {
+    let gang = gang.max(1).min(topology::max_gang(&co.sys.tree).max(1));
+    let mut out = Vec::with_capacity(tasks.len() + 4);
+    let mut decisions = Vec::new();
+    let g = gang as f64;
+    for t in tasks {
+        let is_dot = matches!(t.kind, OpKind::Dot { .. });
+        if !is_dot {
+            // Data-parallel along the row split: each slot carries
+            // 1/G of the non-dot work (gang 1: verbatim).
+            let mut p = t.clone();
+            if gang > 1 {
+                p.flops /= g;
+                p.bytes /= g;
+            }
+            out.push(p);
+            continue;
+        }
+        let single = co.simulate_stream("single", std::slice::from_ref(t))?;
+        let (sharded, shard_cycles, ag) = match shard_dot(t, gang) {
+            None => (None, single.total_cycles, None),
+            Some(s) => {
+                let result_bytes =
+                    (t.out_elems * t.elem_bytes) as f64;
+                let ag_bytes = topology::allgather_bytes(
+                    &co.sys.tree,
+                    gang,
+                    result_bytes,
+                );
+                let mut ag_task = OpTask::d2d_collective(
+                    &format!("allgather({})", t.name),
+                    ag_bytes,
+                    t.elem_bytes,
+                )
+                .with_overlap();
+                ag_task.count = t.count;
+                let pair = [s.clone(), ag_task.clone()];
+                let priced = co.simulate_stream("sharded", &pair)?;
+                (Some((s, ag_task)), priced.total_cycles, Some(ag_bytes))
+            }
+        };
+        let shard_wins = shard_cycles < single.total_cycles;
+        let ag_cycles = ag
+            .map(|b| b / co.sys.tree.d2d_link.max(1e-9))
+            .unwrap_or(0.0);
+        decisions.push(ShardDecision {
+            name: t.name.clone(),
+            sharded: shard_wins,
+            gang,
+            allgather_bytes: if shard_wins { ag.unwrap_or(0.0) } else { 0.0 },
+            allgather_cycles: if shard_wins { ag_cycles } else { 0.0 },
+            single_cycles: single.total_cycles,
+            sharded_cycles: shard_cycles,
+        });
+        match (shard_wins, sharded) {
+            (true, Some((s, ag_task))) => {
+                out.push(s);
+                out.push(ag_task);
+            }
+            // Replicated: every member runs the full dot (no traffic,
+            // no benefit — the crossover said splitting loses).
+            _ => out.push(t.clone()),
+        }
+    }
+    Ok(ShardPlan { tasks: out, decisions, gang })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::system::{ClusterSlot, SystemConfig};
+
+    /// A gang member's sub-machine: one 128-cluster slot (= one
+    /// chiplet) of the default system.
+    fn slot_coord() -> Coordinator {
+        let co = Coordinator::new(SystemConfig::default(), 0.9);
+        co.for_slot(&ClusterSlot { id: 0, first_cluster: 0, n_clusters: 128 })
+    }
+
+    #[test]
+    fn big_dot_shards_and_beats_single_slot() {
+        let co = slot_coord();
+        let t = OpTask::dot("big", 1, 2048, 2048, 2048, 8);
+        let plan = shard_stream(&[t.clone()], &co, 4).unwrap();
+        assert_eq!(plan.sharded_dots(), 1, "{:?}", plan.decisions);
+        let d = &plan.decisions[0];
+        assert!(d.sharded);
+        assert!(d.sharded_cycles < d.single_cycles, "{d:?}");
+        assert!(d.allgather_bytes > 0.0);
+        // Stream gained the all-gather task, D2D-placed and
+        // overlap-marked next to its shard.
+        assert_eq!(plan.tasks.len(), 2);
+        assert_eq!(plan.tasks[1].placement, Placement::D2d);
+        assert!(plan.tasks[1].overlap);
+        assert!(plan.tasks[1].name.starts_with("allgather("));
+        // The shard really is the row split.
+        match plan.tasks[0].kind {
+            OpKind::Dot { m, .. } => assert_eq!(m, 512),
+            ref k => panic!("not a dot: {k:?}"),
+        }
+    }
+
+    #[test]
+    fn small_dot_stays_replicated() {
+        let co = slot_coord();
+        // Latency-bound: 3 ring hops at 512 cycles each dwarf the
+        // ~flop savings of splitting a 32^3 GEMM.
+        let t = OpTask::dot("small", 1, 32, 32, 32, 8);
+        let plan = shard_stream(&[t.clone()], &co, 4).unwrap();
+        assert_eq!(plan.sharded_dots(), 0, "{:?}", plan.decisions);
+        assert_eq!(plan.tasks.len(), 1);
+        assert!((plan.tasks[0].flops - t.flops).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gang_of_one_is_verbatim() {
+        let co = slot_coord();
+        let t = OpTask::dot("d", 1, 2048, 2048, 2048, 8);
+        let e = OpTask::elementwise("e", 1, 1 << 20, 1 << 20, 8);
+        let plan =
+            shard_stream(&[t.clone(), e.clone()], &co, 1).unwrap();
+        assert_eq!(plan.gang, 1);
+        assert_eq!(plan.sharded_dots(), 0);
+        assert_eq!(plan.tasks.len(), 2);
+        assert!((plan.tasks[0].flops - t.flops).abs() < 1e-9);
+        assert!((plan.tasks[1].bytes - e.bytes).abs() < 1e-9);
+    }
+
+    #[test]
+    fn non_dot_tasks_split_data_parallel() {
+        let co = slot_coord();
+        let e = OpTask::elementwise("e", 1, 1 << 20, 1 << 20, 8);
+        let plan = shard_stream(&[e.clone()], &co, 4).unwrap();
+        assert!((plan.tasks[0].flops - e.flops / 4.0).abs() < 1e-9);
+        assert!((plan.tasks[0].bytes - e.bytes / 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gang_clamps_to_chiplet_count() {
+        let co = slot_coord();
+        let t = OpTask::dot("d", 1, 2048, 2048, 2048, 8);
+        let plan = shard_stream(&[t], &co, 64).unwrap();
+        assert_eq!(plan.gang, 4);
+    }
+}

@@ -115,14 +115,20 @@ fn print_help() {
          chiplet architecture\n\n\
          USAGE: manticore <COMMAND> [OPTIONS]\n\n\
          COMMANDS:\n  \
-         repro <fig5|fig6|fig8|fig9|fig10|fig3|area|peaks|simops|faults|all>\n        \
+         repro <fig5|fig6|fig8|fig9|fig10|fig3|area|peaks|simops|faults|scaling|all>\n        \
          (faults: priced throughput / J-per-request degradation curve\n        \
          vs cluster fault rate; [--rates 0,0.0625,..] [--slot-clusters 32]\n        \
-         [--dim 256] [--seed 42])\n  \
+         [--dim 256] [--seed 42])\n        \
+         (scaling: gang-sharded GEMM latency/throughput/J-per-request\n        \
+         for 1/2/4-chiplet gangs; [--gangs 1,2,4] [--json out.json])\n  \
          run <artifact|path/to/x.hlo.txt> [--iters N] [--ops N]\n  \
-         lower <artifact|all> [--check] [--stats out.md] [--ops N]\n  \
+         lower <artifact|all> [--check] [--stats out.md] [--ops N]\n        \
+         [--gang 4] (report the per-dot gang partitioning verdicts:\n        \
+         sharded or replicated, all-gather bytes/cycles)\n  \
          serve [--port 7433] [--host 127.0.0.1] [--batch-window-ms 2]\n        \
          [--max-batch 8] [--slot-clusters 32] [--workers N]\n        \
+         [--gang-max N] (lease up to N slots per request, spread over\n        \
+         chiplets; large dots shard with a modeled D2D all-gather)\n        \
          [--reactor-threads N] [--max-pending N]\n        \
          [--trace-out f.json] (record spans; write Perfetto JSON on\n        \
          shutdown; clients can flush early with {{\"op\":\"trace\"}})\n        \
@@ -179,6 +185,7 @@ fn cmd_serve(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> 
         window_ms: args.get_usize("batch-window-ms", 2)? as u64,
         max_batch: args.get_usize("max-batch", 8)?,
         slot_clusters: args.get_usize("slot-clusters", 32)?,
+        gang_max: args.get_usize("gang-max", 1)?,
         workers: args.get_usize("workers", 0)?,
         reactor_threads: args.get_usize("reactor-threads", 0)?,
         max_pending: args.get_usize("max-pending", 0)?,
@@ -351,6 +358,10 @@ fn cmd_health(args: &cli::Args) -> Result<()> {
                 h.slots.saturating_sub(h.retired_slots),
                 h.retired_slots,
                 h.faulty_clusters
+            );
+            println!(
+                "gang capacity: up to {} slots leasable atomically",
+                h.gang_capacity
             );
             println!(
                 "admission: {} pending of {} budget ({} headroom)",
@@ -657,6 +668,25 @@ fn cmd_repro(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> 
             )
             .print();
         }
+        "scaling" => {
+            let gangs: Vec<usize> = args
+                .get_or("gangs", "1,2,4")
+                .split(',')
+                .filter(|s| !s.trim().is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse::<usize>()
+                        .map_err(|e| anyhow::anyhow!("bad gang size '{s}': {e}"))
+                })
+                .collect::<Result<_>>()?;
+            let (t, j) = repro::scaling(artifacts_dir, &gangs)?;
+            t.print();
+            if let Some(path) = args.get("json") {
+                std::fs::write(path, json::write(&j))
+                    .with_context(|| format!("writing {path}"))?;
+                println!("wrote scaling report to {path}");
+            }
+        }
         "area" => repro::area().print(),
         "peaks" => repro::peaks_table().print(),
         "all" => {
@@ -740,6 +770,9 @@ fn cmd_lower(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> 
     let check = args.has_flag("check");
     let ops = args.get_usize("ops", 16)?;
     let seed = args.get_usize("seed", 0)? as u64;
+    // Gang size the partitioning decisions are reported for
+    // (`--gang 1` silences them; clamped to the chiplet count).
+    let gang = args.get_usize("gang", 4)?;
     let backend = SimBackend::from_config(cfg);
     let co = Coordinator::new(cfg.system, cfg.vdd).with_cluster(cfg.cluster);
 
@@ -819,6 +852,31 @@ fn cmd_lower(args: &cli::Args, artifacts_dir: &str, cfg: &Config) -> Result<()> 
                 fmt_si(task.flops, "flop"),
                 kr.fpu_util * 100.0
             );
+        }
+        if gang > 1 {
+            // Per-dot gang partitioning verdicts on the compiled path
+            // (the same crossover `execute_gang` prices requests with).
+            let (_, plan) = exe.price_gang(Some(&profile), gang)?;
+            for d in &plan.decisions {
+                if d.sharded {
+                    println!(
+                        "  shard {}: gang {} — {:.0} cy single -> {:.0} cy \
+                         sharded (all-gather {} / {:.0} cy, overlapped)",
+                        d.name,
+                        d.gang,
+                        d.single_cycles,
+                        d.sharded_cycles,
+                        fmt_si(d.allgather_bytes, "B"),
+                        d.allgather_cycles
+                    );
+                } else {
+                    println!(
+                        "  shard {}: gang {} — replicated ({:.0} cy single \
+                         beats {:.0} cy sharded)",
+                        d.name, d.gang, d.single_cycles, d.sharded_cycles
+                    );
+                }
+            }
         }
         opt.table(ops).print();
 

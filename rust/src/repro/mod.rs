@@ -527,6 +527,110 @@ pub fn faults(
     t
 }
 
+/// `manticore repro scaling`: the multi-chiplet gang study. Every
+/// GEMM artifact in the manifest is compiled once, profiled once, and
+/// priced for each gang size via the compiled
+/// [`crate::runtime::sim::SimExecutable::price_gang`] path (no trace
+/// fallback): large dots row-shard across the gang with a modeled
+/// ring all-gather over the D2D fabric, so latency should improve
+/// monotonically 1 → 2 → 4 chiplets on the big artifacts while
+/// J/request grows (the all-gather and the extra active chiplets are
+/// not free). Throughput is machine-level: `chiplets / gang`
+/// concurrent gangs each finishing a request per latency.
+///
+/// Returns the printable table plus a JSON value (`--json <path>`,
+/// gated by the `scaling-smoke` CI job).
+pub fn scaling(
+    artifacts_dir: &str,
+    gangs: &[usize],
+) -> anyhow::Result<(Table, crate::util::json::Value)> {
+    use crate::runtime::sim::SimBackend;
+    use crate::runtime::{inputs_for_meta, load_manifest};
+    use crate::util::json::Value;
+    use std::collections::BTreeMap;
+    use std::path::Path;
+
+    let manifest = load_manifest(Path::new(artifacts_dir), "scaling")?;
+    // The gang study targets the GEMM artifacts, biggest first — the
+    // small ones document where the crossover refuses to shard.
+    let mut names: Vec<&String> =
+        manifest.keys().filter(|n| n.contains("matmul")).collect();
+    names.sort_by_key(|n| {
+        std::cmp::Reverse(
+            manifest[*n]
+                .inputs
+                .iter()
+                .map(|s| s.shape.iter().product::<usize>())
+                .sum::<usize>(),
+        )
+    });
+    let sys = SystemConfig::default();
+    let backend = SimBackend::new();
+    let mut t = Table::new(
+        "scaling — gang-sharded GEMMs over the D2D fabric (per request)",
+        &[
+            "artifact",
+            "gang",
+            "sharded dots",
+            "all-gather",
+            "latency",
+            "throughput",
+            "J/request",
+        ],
+    );
+    let mut artifacts_json = BTreeMap::new();
+    for name in names {
+        let meta = &manifest[name];
+        let text = std::fs::read_to_string(
+            Path::new(artifacts_dir).join(format!("{name}.hlo.txt")),
+        )?;
+        let exe = backend.compile_sim(name, &text)?;
+        let inputs = inputs_for_meta(meta, 3)?;
+        let (_, profile) = exe.profile_execution(&inputs)?;
+        let mut per_gang = BTreeMap::new();
+        for &g in gangs {
+            let (rep, plan) = exe.price_gang(Some(&profile), g)?;
+            let time = rep.total_time_s;
+            let concurrent = (sys.tree.chiplets / plan.gang.max(1)).max(1);
+            let rps = concurrent as f64 / time.max(1e-12);
+            let ag: f64 =
+                plan.decisions.iter().map(|d| d.allgather_bytes).sum();
+            let sharded = plan.sharded_dots();
+            t.row(vec![
+                name.clone(),
+                plan.gang.to_string(),
+                sharded.to_string(),
+                if ag > 0.0 { fmt_si(ag, "B") } else { "-".into() },
+                format!("{:.1} µs", time * 1e6),
+                format!("{rps:.0} req/s"),
+                format!("{:.6} J", rep.total_energy_j),
+            ]);
+            per_gang.insert(
+                plan.gang.to_string(),
+                Value::Obj(BTreeMap::from([
+                    ("latency_s".to_string(), Value::Num(time)),
+                    ("throughput_rps".to_string(), Value::Num(rps)),
+                    (
+                        "j_per_request".to_string(),
+                        Value::Num(rep.total_energy_j),
+                    ),
+                    (
+                        "sharded_dots".to_string(),
+                        Value::Num(sharded as f64),
+                    ),
+                    ("allgather_bytes".to_string(), Value::Num(ag)),
+                ])),
+            );
+        }
+        artifacts_json.insert(name.clone(), Value::Obj(per_gang));
+    }
+    let json = Value::Obj(BTreeMap::from([(
+        "artifacts".to_string(),
+        Value::Obj(artifacts_json),
+    )]));
+    Ok((t, json))
+}
+
 /// Run every harness (the `repro all` command).
 pub fn all() -> Vec<Table> {
     let mut out = vec![fig5(2048), fig6()];
@@ -625,6 +729,41 @@ mod tests {
         assert_eq!(t.rows[0][0], "0.0 %");
         // The healthy row retires nothing.
         assert!(t.rows[0][2].starts_with("0 of "), "{:?}", t.rows[0]);
+    }
+
+    /// Acceptance: on the largest checked-in GEMM the gang study's
+    /// latency improves monotonically 1 → 2 → 4 chiplets, and the
+    /// J/request honestly grows with the gang.
+    #[test]
+    fn scaling_latency_improves_monotonically_with_gang() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+            return;
+        }
+        let (t, j) = scaling("artifacts", &[1, 2, 4]).unwrap();
+        assert!(!t.rows.is_empty());
+        let a = j
+            .get("artifacts")
+            .and_then(|v| v.get("matmul_f32_256"))
+            .expect("largest GEMM in the study");
+        let field = |g: &str, k: &str| -> f64 {
+            a.get(g)
+                .and_then(|v| v.get(k))
+                .and_then(crate::util::json::Value::as_f64)
+                .unwrap_or_else(|| panic!("missing {k} for gang {g}"))
+        };
+        let (l1, l2, l4) = (
+            field("1", "latency_s"),
+            field("2", "latency_s"),
+            field("4", "latency_s"),
+        );
+        assert!(l2 < l1, "2-gang {l2} !< 1-gang {l1}");
+        assert!(l4 < l2, "4-gang {l4} !< 2-gang {l2}");
+        assert!(field("4", "sharded_dots") >= 1.0, "big GEMM must shard");
+        assert!(
+            field("4", "j_per_request") > field("1", "j_per_request"),
+            "gang energy must include every member"
+        );
     }
 
     #[test]

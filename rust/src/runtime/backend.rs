@@ -66,6 +66,21 @@ pub trait Executable: Send + Sync {
         let _ = slot;
         Ok(ExecOutcome { outputs: self.execute(inputs)?, report: None })
     }
+
+    /// Execute on a *gang* of leased slots (one per chiplet): backends
+    /// that model execution shard large dots across the members and
+    /// price the all-gather over the D2D fabric
+    /// (`lower::shard::shard_stream`). Numerics never change — the
+    /// gang is a pricing construct, so outputs stay bit-identical to
+    /// single-slot execution. The default adapts `execute_placed` on
+    /// the gang leader (the first slot), ignoring the other members.
+    fn execute_gang(
+        &self,
+        inputs: &[Tensor],
+        slots: &[ClusterSlot],
+    ) -> Result<ExecOutcome> {
+        self.execute_placed(inputs, slots.first())
+    }
 }
 
 /// An execution engine that compiles HLO text. `Send + Sync` so a

@@ -39,6 +39,7 @@ use super::Tensor;
 use crate::cluster::ClusterConfig;
 use crate::config::Config;
 use crate::coordinator::{Coordinator, OpStreamReport, OpTask};
+use crate::lower::shard::{self, ShardPlan};
 use crate::lower::{self, classify, LoweredProgram};
 use crate::system::{ClusterSlot, SystemConfig};
 use anyhow::{Context, Result};
@@ -146,7 +147,27 @@ pub struct SimExecutable {
     lowered: LoweredProgram,
     co: Coordinator,
     report: Mutex<Option<OpStreamReport>>,
-    price_cache: Mutex<Vec<((ExecProfile, Option<usize>), OpStreamReport)>>,
+    price_cache:
+        Mutex<Vec<((ExecProfile, Option<usize>, usize), OpStreamReport)>>,
+}
+
+/// Fold per-slot gang pricing into a whole-request report: latency is
+/// the (shared) per-slot critical path, but flops/bytes/energy happen
+/// on every member — `G` sub-machines burn power for the request's
+/// duration, so J-per-request scales with the gang even as latency
+/// drops.
+fn scale_gang_report(r: OpStreamReport, gang: usize) -> OpStreamReport {
+    if gang <= 1 {
+        return r;
+    }
+    let g = gang as f64;
+    let mut ops = r.ops;
+    for o in &mut ops {
+        o.flops *= g;
+        o.bytes *= g;
+        o.energy_j *= g;
+    }
+    OpStreamReport::new(&r.name, ops)
 }
 
 impl SimExecutable {
@@ -225,14 +246,18 @@ impl SimExecutable {
             .with_context(|| format!("[sim] scheduling '{}'", self.name))
     }
 
-    /// Cached compiled pricing on the whole machine or a slot's
-    /// sub-machine.
+    /// Cached compiled pricing on the whole machine, a slot's
+    /// sub-machine, or a `gang`-slot gang of identical sub-machines
+    /// (`gang > 1` shards large dots across the members and prices
+    /// the D2D all-gather — see `lower::shard`).
     fn priced(
         &self,
         profile: ExecProfile,
         slot: Option<&ClusterSlot>,
+        gang: usize,
     ) -> Result<OpStreamReport> {
-        let key = (profile, slot.map(|s| s.n_clusters));
+        let gang = gang.max(1);
+        let key = (profile, slot.map(|s| s.n_clusters), gang);
         if let Some(hit) = {
             let cache = self.price_cache.lock().unwrap();
             cache.iter().find(|(k, _)| *k == key).map(|(_, r)| r.clone())
@@ -247,13 +272,51 @@ impl SimExecutable {
             Some(s) => self.co.for_slot(s),
             None => self.co.clone(),
         };
+        let tasks = if gang > 1 {
+            shard::shard_stream(&tasks, &co, gang)
+                .with_context(|| format!("[sim] sharding '{}'", self.name))?
+                .tasks
+        } else {
+            tasks
+        };
         let report = co
             .simulate_stream(&self.name, &tasks)
             .with_context(|| format!("[sim] scheduling '{}'", self.name))?;
+        let report = scale_gang_report(report, gang);
         let mut cache = self.price_cache.lock().unwrap();
         cache.insert(0, (key, report.clone()));
         cache.truncate(PRICE_CACHE_CAP);
         Ok(report)
+    }
+
+    /// Price the compiled schedule for a `gang`-way chiplet gang —
+    /// each member is one full-chiplet slot — returning the report
+    /// (latency = per-slot critical path, energy/flops/bytes summed
+    /// over members) plus the per-dot partitioning decisions. Pure
+    /// pricing on the compiled `LoweredProgram`: no execution, no
+    /// trace fallback. The scaling study (`manticore repro scaling`)
+    /// and the `shard_scaling` bench drive this directly.
+    pub fn price_gang(
+        &self,
+        profile: Option<&ExecProfile>,
+        gang: usize,
+    ) -> Result<(OpStreamReport, ShardPlan)> {
+        let gang = gang.max(1);
+        let per_chiplet =
+            self.co.sys.tree.clusters_per_chiplet().max(1);
+        let slot =
+            ClusterSlot { id: 0, first_cluster: 0, n_clusters: per_chiplet };
+        let co = self.co.for_slot(&slot);
+        let tasks = self
+            .lowered
+            .tasks(profile, true)
+            .with_context(|| format!("[sim] pricing '{}'", self.name))?;
+        let plan = shard::shard_stream(&tasks, &co, gang)
+            .with_context(|| format!("[sim] sharding '{}'", self.name))?;
+        let report = co
+            .simulate_stream(&self.name, &plan.tasks)
+            .with_context(|| format!("[sim] scheduling '{}'", self.name))?;
+        Ok((scale_gang_report(report, plan.gang), plan))
     }
 }
 
@@ -301,7 +364,36 @@ impl Executable for SimExecutable {
         let out = px
             .run(&args)
             .with_context(|| format!("[sim] executing '{}'", self.name))?;
-        let report = self.priced(px.take_profile(), slot)?;
+        let report = self.priced(px.take_profile(), slot, 1)?;
+        *self.report.lock().unwrap() = Some(report.clone());
+        let outputs = value_to_tensors(out)?;
+        Ok(ExecOutcome { outputs, report: Some(report) })
+    }
+
+    /// Gang execution: numerics run once (bit-identical to
+    /// single-slot — the gang is a pricing construct), and the
+    /// schedule is priced sharded across the members on the gang
+    /// leader's sub-machine.
+    fn execute_gang(
+        &self,
+        inputs: &[Tensor],
+        slots: &[ClusterSlot],
+    ) -> Result<ExecOutcome> {
+        if slots.len() <= 1 {
+            return self.execute_placed(inputs, slots.first());
+        }
+        if reference_mode() {
+            // The trace path has no sharding pass; gang requests in
+            // reference mode price on the leader alone.
+            return self.execute_placed(inputs, slots.first());
+        }
+        let args: Vec<Value> = inputs.iter().map(tensor_to_value).collect();
+        let px = PlanExecutor::with_profile(&self.plan);
+        let out = px
+            .run(&args)
+            .with_context(|| format!("[sim] executing '{}'", self.name))?;
+        let report =
+            self.priced(px.take_profile(), slots.first(), slots.len())?;
         *self.report.lock().unwrap() = Some(report.clone());
         let outputs = value_to_tensors(out)?;
         Ok(ExecOutcome { outputs, report: Some(report) })
@@ -443,6 +535,63 @@ mod tests {
         // The loop-counter compare ran 4 times (3 true + 1 false).
         let cmp = rep.op("c").expect("compare op");
         assert_eq!(cmp.count, 4);
+    }
+
+    /// Gang execution is a pricing construct: outputs stay
+    /// bit-identical to single-slot execution, latency drops (the dot
+    /// shards across members), and J-per-request rises (every member
+    /// burns power for the request's duration).
+    #[test]
+    fn gang_execution_shards_pricing_and_keeps_numerics() {
+        use crate::system::ClusterSlot;
+        let n = 256;
+        let text = format!(
+            "HloModule jit_fn\n\
+             ENTRY main.5 {{\n\
+             \x20 Arg_0.1 = f64[{n},{n}]{{1,0}} parameter(0)\n\
+             \x20 Arg_1.2 = f64[{n},{n}]{{1,0}} parameter(1)\n\
+             \x20 dot.3 = f64[{n},{n}]{{1,0}} dot(Arg_0.1, Arg_1.2), \
+             lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+             \x20 ROOT tuple.4 = (f64[{n},{n}]{{1,0}}) tuple(dot.3)\n\
+             }}\n"
+        );
+        let exe = SimBackend::new().compile_sim("mm", &text).unwrap();
+        let mk = |seed: u64| {
+            let mut rng = crate::util::rng::Rng::new(seed);
+            Tensor::F64(
+                (0..n * n).map(|_| rng.normal() * 0.1).collect(),
+                vec![n, n],
+            )
+        };
+        let inputs = [mk(1), mk(2)];
+        let slot0 = ClusterSlot { id: 0, first_cluster: 0, n_clusters: 128 };
+        let slot1 =
+            ClusterSlot { id: 1, first_cluster: 128, n_clusters: 128 };
+        let single = exe.execute_placed(&inputs, Some(&slot0)).unwrap();
+        let gang = exe
+            .execute_gang(&inputs, &[slot0.clone(), slot1])
+            .unwrap();
+        assert_eq!(single.outputs, gang.outputs, "bit-identical outputs");
+        let (rs, rg) = (single.report.unwrap(), gang.report.unwrap());
+        assert!(
+            rg.total_time_s < rs.total_time_s,
+            "gang latency {} !< single {}",
+            rg.total_time_s,
+            rs.total_time_s
+        );
+        assert!(
+            rg.total_energy_j > rs.total_energy_j,
+            "gang energy {} !> single {}",
+            rg.total_energy_j,
+            rs.total_energy_j
+        );
+        // The compiled gang pricing path reports the sharded decision.
+        let (_, profile) = exe.profile_execution(&inputs).unwrap();
+        let (rep4, plan) = exe.price_gang(Some(&profile), 4).unwrap();
+        assert_eq!(plan.gang, 4);
+        assert_eq!(plan.sharded_dots(), 1, "{:?}", plan.decisions);
+        let (rep1, _) = exe.price_gang(Some(&profile), 1).unwrap();
+        assert!(rep4.total_time_s < rep1.total_time_s);
     }
 
     /// The compiled walk (production) and the PR-4 trace fold

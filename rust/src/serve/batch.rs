@@ -37,6 +37,9 @@ pub struct RunDone {
     pub outputs: Vec<Tensor>,
     pub report: Option<OpStreamReport>,
     pub slot: ClusterSlot,
+    /// Gang size the request executed on (1 = single-slot lease;
+    /// `slot` is the gang leader).
+    pub gang: usize,
     /// Size of the micro-batch this request was grouped into.
     pub batch: usize,
     /// Queue + execute time on the server [µs].
@@ -86,6 +89,7 @@ impl ReplyTo {
                             server_us: r.server_us,
                             batch: r.batch,
                             slot: Some(r.slot),
+                            gang: r.gang,
                             sim,
                             timing: r.timing,
                         })

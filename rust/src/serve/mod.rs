@@ -78,5 +78,5 @@ pub mod server;
 pub use chaos::{Chaos, ChaosSpec};
 pub use loadgen::{run_loadgen, LoadgenConfig, LoadgenReport};
 pub use metrics::{Metrics, StatsSnapshot};
-pub use placement::{SlotLease, SlotPool};
+pub use placement::{GangLease, SlotLease, SlotPool};
 pub use server::{ServeConfig, Server};

@@ -17,6 +17,19 @@
 //! while the pool's mutex is held (or merely while a lease is live —
 //! unwinding drops the lease, which takes the lock) must not wedge
 //! every other worker behind a `PoisonError`.
+//!
+//! Gang leases: a request sharded across chiplets acquires N slots
+//! *atomically* ([`SlotPool::lease_gang`]) — the pool never hands out
+//! a partial gang, so two gangs racing for overlapping slots cannot
+//! deadlock on half-acquired sets; the loser simply waits until the
+//! winner's whole gang returns. Members are picked to spread across
+//! distinct chiplets when the free list allows (one shard per chiplet
+//! is the intended shape — each shard streams its local HBM stack and
+//! only the all-gather crosses the D2D fabric). Fault retirement
+//! composes: a gang never includes a retired slot, and retiring any
+//! member of a busy gang retires the *whole* gang when it releases —
+//! a gang that lost a shard mid-flight is not a machine you place the
+//! next sharded request on.
 
 use crate::system::{ClusterSlot, FaultPlan, SystemConfig};
 use std::collections::BTreeSet;
@@ -38,6 +51,9 @@ struct PoolState {
 pub struct SlotPool {
     slot_clusters: usize,
     n_slots: usize,
+    /// Tree geometry constant: clusters per chiplet, for spreading
+    /// gang members across chiplets.
+    clusters_per_chiplet: usize,
     started: Instant,
     state: Mutex<PoolState>,
     cv: Condvar,
@@ -67,6 +83,7 @@ impl SlotPool {
         let pool = SlotPool {
             slot_clusters: sc,
             n_slots,
+            clusters_per_chiplet: sys.tree.clusters_per_chiplet().max(1),
             started: now,
             state: Mutex::new(PoolState {
                 free: (0..n_slots).rev().collect(),
@@ -145,11 +162,122 @@ impl SlotPool {
         self.integrate(&mut st);
         st.busy -= 1;
         // A slot retired while leased dies here instead of returning
-        // to the free list.
+        // to the free list. notify_all, not notify_one: waiters have
+        // heterogeneous demands (a gang waiter needs several frees),
+        // so waking the "wrong" single waiter could strand a
+        // satisfiable one.
         if !st.retired.contains(&id) {
             st.free.push(id);
-            self.cv.notify_one();
+            self.cv.notify_all();
         }
+    }
+
+    /// Pick `want` free slots, preferring members on distinct chiplets
+    /// (round-robin over the per-chiplet free lists): the gang shape
+    /// the sharding model prices is one shard per chiplet streaming
+    /// its local HBM stack. Removes the picks from the free list.
+    fn pick_gang(&self, st: &mut PoolState, want: usize) -> Vec<usize> {
+        let slots_per_chiplet =
+            (self.clusters_per_chiplet / self.slot_clusters).max(1);
+        let n_chiplets = self.n_slots.div_ceil(slots_per_chiplet);
+        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); n_chiplets];
+        for &id in &st.free {
+            buckets[id / slots_per_chiplet].push(id);
+        }
+        let mut picked = Vec::with_capacity(want);
+        while picked.len() < want {
+            let mut progressed = false;
+            for b in buckets.iter_mut() {
+                if picked.len() >= want {
+                    break;
+                }
+                if let Some(id) = b.pop() {
+                    picked.push(id);
+                    progressed = true;
+                }
+            }
+            debug_assert!(progressed, "free list shorter than gang");
+            if !progressed {
+                break;
+            }
+        }
+        st.free.retain(|id| !picked.contains(id));
+        picked.sort_unstable();
+        picked
+    }
+
+    /// Effective gang size for a request of `n`: clamped to the
+    /// machine that still exists (retirement shrinks the ceiling so a
+    /// gang demand larger than the surviving pool can't wait forever).
+    fn effective_gang(&self, st: &PoolState, n: usize) -> usize {
+        n.max(1).min(self.n_slots - st.retired.len()).max(1)
+    }
+
+    /// Atomically lease `n` slots (all-or-nothing), blocking until
+    /// that many are simultaneously free. The demand is re-clamped to
+    /// the surviving pool on every wakeup, so runtime retirement can
+    /// never strand a waiter. No partial acquisition ever occurs —
+    /// the all-or-nothing pop under one lock is what makes two gangs
+    /// racing for overlapping slots deadlock-free.
+    pub fn lease_gang(&self, n: usize) -> GangLease<'_> {
+        let mut st = self.lock();
+        loop {
+            let want = self.effective_gang(&st, n);
+            if st.free.len() >= want {
+                self.integrate(&mut st);
+                st.busy += want;
+                let ids = self.pick_gang(&mut st, want);
+                let slots = ids.iter().map(|&id| self.slot(id)).collect();
+                return GangLease { pool: self, slots };
+            }
+            st = self.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Atomically lease `n` slots if they are all free right now.
+    pub fn try_lease_gang(&self, n: usize) -> Option<GangLease<'_>> {
+        let mut st = self.lock();
+        let want = self.effective_gang(&st, n);
+        if st.free.len() < want {
+            return None;
+        }
+        self.integrate(&mut st);
+        st.busy += want;
+        let ids = self.pick_gang(&mut st, want);
+        let slots = ids.iter().map(|&id| self.slot(id)).collect();
+        Some(GangLease { pool: self, slots })
+    }
+
+    /// Release a whole gang. Gang-aware fault handling: if *any*
+    /// member was retired while the gang was busy, the whole gang
+    /// retires with it (subject to the keep-one-active rule) — the
+    /// sharded schedule that ran on it already lost a shard, so its
+    /// siblings are not re-trusted either.
+    fn release_gang(&self, ids: &[usize]) {
+        let mut st = self.lock();
+        self.integrate(&mut st);
+        st.busy -= ids.len();
+        let contaminated = ids.iter().any(|id| st.retired.contains(id));
+        for &id in ids {
+            if st.retired.contains(&id) {
+                continue; // already retired: never re-enters circulation
+            }
+            if contaminated && self.n_slots - st.retired.len() > 1 {
+                st.retired.insert(id);
+            } else {
+                st.free.push(id);
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    /// Largest gang a caller can eventually acquire: every surviving
+    /// slot freed at once. `health` reports this next to the retired
+    /// count so a router knows whether a 4-shard request can still be
+    /// placed here.
+    pub fn gang_capacity(&self) -> usize {
+        let st = self.lock();
+        self.n_slots - st.retired.len()
     }
 
     /// Retire a slot: remove it from circulation permanently (fault
@@ -220,6 +348,39 @@ impl std::ops::Deref for SlotLease<'_> {
 
     fn deref(&self) -> &ClusterSlot {
         &self.slot
+    }
+}
+
+/// An RAII gang lease: `n` slots acquired atomically, all returned
+/// (or retired together, if a member was retired mid-flight) on drop.
+pub struct GangLease<'a> {
+    pool: &'a SlotPool,
+    /// Members, sorted by slot id; `slots[0]` is the gang leader (the
+    /// representative sub-machine sharded pricing runs on).
+    pub slots: Vec<ClusterSlot>,
+}
+
+impl GangLease<'_> {
+    /// Gang size.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// The gang leader: the slot the per-shard schedule is priced on
+    /// (all members are identical sub-machines).
+    pub fn leader(&self) -> &ClusterSlot {
+        &self.slots[0]
+    }
+}
+
+impl Drop for GangLease<'_> {
+    fn drop(&mut self) {
+        let ids: Vec<usize> = self.slots.iter().map(|s| s.id).collect();
+        self.pool.release_gang(&ids);
     }
 }
 
@@ -344,6 +505,109 @@ mod tests {
         assert!(!pool.retire(99), "out-of-range id");
         assert_eq!(pool.active_slots(), 1);
         assert!(pool.try_lease().is_some(), "survivor still leases");
+    }
+
+    #[test]
+    fn gang_lease_is_atomic_disjoint_and_chiplet_spread() {
+        let pool = SlotPool::new(&SystemConfig::default(), 32);
+        // 16 slots, 4 per chiplet: a gang of 4 lands one per chiplet.
+        let gang = pool.try_lease_gang(4).expect("gang of 4");
+        assert_eq!(gang.len(), 4);
+        let tree = SystemConfig::default().tree;
+        let chiplets: std::collections::BTreeSet<usize> =
+            gang.slots.iter().map(|s| s.chiplet(&tree)).collect();
+        assert_eq!(chiplets.len(), 4, "one member per chiplet: {chiplets:?}");
+        for (i, a) in gang.slots.iter().enumerate() {
+            for b in gang.slots.iter().skip(i + 1) {
+                assert!(!a.overlaps(b));
+            }
+        }
+        assert_eq!(pool.busy(), 4);
+        // 12 singles remain; a second gang of 4 still fits…
+        let gang2 = pool.try_lease_gang(4).expect("second gang");
+        let singles: Vec<_> = std::iter::from_fn(|| pool.try_lease()).collect();
+        assert_eq!(singles.len(), 8);
+        // …and with the machine saturated a third gang fails with NO
+        // partial acquisition left behind.
+        assert!(pool.try_lease_gang(2).is_none());
+        assert_eq!(pool.busy(), 16);
+        drop((gang, gang2, singles));
+        assert_eq!(pool.busy(), 0);
+        let all: Vec<_> = std::iter::from_fn(|| pool.try_lease()).collect();
+        assert_eq!(all.len(), 16, "no slot leaked by gang churn");
+    }
+
+    #[test]
+    fn gang_demand_clamps_to_surviving_pool() {
+        let pool = SlotPool::new(&SystemConfig::default(), 128);
+        assert_eq!(pool.n_slots(), 4);
+        assert!(pool.retire(3));
+        assert_eq!(pool.gang_capacity(), 3);
+        // Demand 4 on a 3-slot machine: clamped, not stranded.
+        let gang = pool.lease_gang(4);
+        assert_eq!(gang.len(), 3);
+        drop(gang);
+        // Oversized demand is also clamped at the floor.
+        let g = pool.lease_gang(0);
+        assert_eq!(g.len(), 1);
+    }
+
+    /// Satellite: retiring any member of a busy gang retires the whole
+    /// gang when it releases — a gang that lost a shard mid-flight is
+    /// never partially re-trusted.
+    #[test]
+    fn retiring_one_member_retires_the_whole_gang_at_release() {
+        let pool = SlotPool::new(&SystemConfig::default(), 32);
+        let gang = pool.lease_gang(4);
+        let victim = gang.slots[1].id;
+        assert!(pool.retire(victim));
+        assert_eq!(pool.retired(), 1);
+        drop(gang);
+        assert_eq!(pool.retired(), 4, "whole gang retired at release");
+        assert_eq!(pool.busy(), 0);
+        let rest: Vec<_> = std::iter::from_fn(|| pool.try_lease()).collect();
+        assert_eq!(rest.len(), 12);
+        assert_eq!(pool.gang_capacity(), 12);
+    }
+
+    /// Gang-wide retirement still respects the keep-one-active rule:
+    /// when the whole machine is one gang, releasing a contaminated
+    /// gang keeps at least one slot in circulation.
+    #[test]
+    fn contaminated_full_machine_gang_keeps_one_active() {
+        let pool = SlotPool::new(&SystemConfig::default(), 128);
+        let gang = pool.lease_gang(4);
+        assert!(pool.retire(gang.slots[0].id));
+        drop(gang);
+        assert_eq!(pool.active_slots(), 1, "one survivor guaranteed");
+        assert!(pool.try_lease().is_some());
+    }
+
+    /// Two gangs racing for overlapping slots on a pool that can hold
+    /// only one at a time: all-or-nothing acquisition means one wins,
+    /// the other waits — never a deadlock on partial sets.
+    #[test]
+    fn racing_gangs_never_deadlock() {
+        use std::sync::Arc;
+        let pool = Arc::new(SlotPool::new(&SystemConfig::default(), 64));
+        assert_eq!(pool.n_slots(), 8);
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let p = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    let g = p.lease_gang(5); // two can never coexist
+                    assert_eq!(g.len(), 5);
+                    std::hint::black_box(&g);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("gang thread");
+        }
+        assert_eq!(pool.busy(), 0);
+        let all: Vec<_> = std::iter::from_fn(|| pool.try_lease()).collect();
+        assert_eq!(all.len(), 8, "no leaked slots after the race");
     }
 
     /// A panic on a thread that holds a lease (or even the pool lock)

@@ -439,6 +439,11 @@ pub struct HealthReply {
     pub worker_panics: u64,
     /// Requests expired past their deadline since start.
     pub expired: u64,
+    /// Largest gang (slot count) a request could atomically lease on
+    /// the surviving machine right now — retired slots shrink it, so
+    /// a router can tell "serves singles only" from "can still host a
+    /// 4-chiplet gang".
+    pub gang_capacity: usize,
 }
 
 impl HealthReply {
@@ -453,6 +458,7 @@ impl HealthReply {
             ("headroom", Value::Num(self.headroom as f64)),
             ("worker_panics", Value::Num(self.worker_panics as f64)),
             ("expired", Value::Num(self.expired as f64)),
+            ("gang_capacity", Value::Num(self.gang_capacity as f64)),
         ])
     }
 
@@ -476,6 +482,14 @@ impl HealthReply {
             headroom: num("headroom")? as u64,
             worker_panics: num("worker_panics")? as u64,
             expired: num("expired")? as u64,
+            // Legacy peers don't send it; derive the survivor count,
+            // which is exactly what the server would report.
+            gang_capacity: match v.get("gang_capacity").and_then(Value::as_usize)
+            {
+                Some(g) => g,
+                None => (num("slots")? as usize)
+                    .saturating_sub(num("retired_slots")? as usize),
+            },
         })
     }
 }
@@ -489,8 +503,13 @@ pub struct RunReply {
     pub server_us: f64,
     /// Size of the micro-batch this request was grouped into.
     pub batch: usize,
-    /// The cluster slot the request executed on.
+    /// The cluster slot the request executed on (the gang *leader*
+    /// when `gang > 1`).
     pub slot: Option<ClusterSlot>,
+    /// Gang size the request executed on: the number of slots leased
+    /// atomically for it (1 = classic single-slot serving). The sim
+    /// summary's cycles/energy already reflect the sharded schedule.
+    pub gang: usize,
     /// Present iff the backend models execution (sim).
     pub sim: Option<SimSummary>,
     /// Per-stage breakdown (present iff the server runs with
@@ -545,6 +564,7 @@ impl Reply {
                     ),
                     ("server_us", Value::Num(r.server_us)),
                     ("batch", Value::Num(r.batch as f64)),
+                    ("gang", Value::Num(r.gang as f64)),
                 ];
                 if let Some(s) = &r.slot {
                     pairs.push(("slot", slot_to_json(s)));
@@ -669,6 +689,10 @@ impl Reply {
                         .get("batch")
                         .and_then(Value::as_usize)
                         .unwrap_or(1),
+                    gang: v
+                        .get("gang")
+                        .and_then(Value::as_usize)
+                        .unwrap_or(1),
                     slot: match v.get("slot") {
                         Some(s) => Some(slot_from_json(s)?),
                         None => None,
@@ -759,6 +783,7 @@ mod tests {
             server_us: 812.5,
             batch: 3,
             slot: Some(slot),
+            gang: 2,
             sim: Some(SimSummary {
                 cycles: 1e6,
                 time_s: 1e-3,
@@ -785,6 +810,7 @@ mod tests {
             headroom: 216,
             worker_panics: 1,
             expired: 7,
+            gang_capacity: 14,
         });
         for r in [
             run,
@@ -806,6 +832,33 @@ mod tests {
             HealthStatus::from_str("from_the_future"),
             HealthStatus::Degraded
         );
+    }
+
+    /// Pre-gang peers omit the new fields; a run reply defaults to
+    /// gang 1 and a health reply derives capacity from the survivor
+    /// count instead of failing to parse.
+    #[test]
+    fn gang_fields_default_for_legacy_peers() {
+        let run = Reply::parse(
+            "{\"ok\":true,\"kind\":\"run\",\"artifact\":\"m\",\
+             \"outputs\":[],\"server_us\":10,\"batch\":1}",
+        )
+        .unwrap();
+        match run {
+            Reply::Run(r) => assert_eq!(r.gang, 1),
+            other => panic!("{other:?}"),
+        }
+        let health = Reply::parse(
+            "{\"ok\":true,\"kind\":\"health\",\"health\":{\
+             \"status\":\"ok\",\"slots\":16,\"retired_slots\":2,\
+             \"faulty_clusters\":0,\"pending\":0,\"max_pending\":64,\
+             \"headroom\":64,\"worker_panics\":0,\"expired\":0}}",
+        )
+        .unwrap();
+        match health {
+            Reply::Health(h) => assert_eq!(h.gang_capacity, 14),
+            other => panic!("{other:?}"),
+        }
     }
 
     /// A malformed request line must map onto a parse error the server

@@ -66,6 +66,11 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// Clusters per placement slot.
     pub slot_clusters: usize,
+    /// Gang size per batch: workers atomically lease this many slots
+    /// (all-or-nothing, spread across chiplets) and backends that
+    /// model execution shard large dots across the members
+    /// (`serve --gang-max N`). 1 = classic single-slot leasing.
+    pub gang_max: usize,
     /// Worker threads; 0 = one per slot, capped at 8.
     pub workers: usize,
     /// Reactor (front-end I/O) threads; 0 = auto (cores/4, 1..=8).
@@ -99,6 +104,7 @@ impl Default for ServeConfig {
             window_ms: 2,
             max_batch: 8,
             slot_clusters: 32,
+            gang_max: 1,
             workers: 0,
             reactor_threads: 0,
             max_pending: 0,
@@ -157,6 +163,9 @@ struct Shared {
     inboxes: Mutex<Vec<Arc<Inbox>>>,
     n_reactors: usize,
     n_workers: usize,
+    /// Slots leased per batch (≥ 1); the pool clamps the demand to
+    /// what the surviving machine can satisfy.
+    gang_max: usize,
     /// Echo per-stage timing into run replies (`--debug-timing`).
     debug_timing: bool,
     /// The boot-time degraded-machine model (empty = healthy).
@@ -218,6 +227,7 @@ impl Shared {
             headroom: (self.max_pending as u64).saturating_sub(pending),
             worker_panics: panics,
             expired: self.metrics.expired(),
+            gang_capacity: self.pool.gang_capacity(),
         }
     }
 
@@ -474,6 +484,7 @@ impl Server {
             inboxes: Mutex::new(Vec::new()),
             n_reactors,
             n_workers,
+            gang_max: cfg.gang_max.max(1),
             debug_timing: cfg.debug_timing,
             fault_plan,
             chaos: cfg
@@ -631,7 +642,11 @@ fn worker_loop(shared: &Shared) {
                 continue;
             }
         };
-        let lease = shared.pool.lease();
+        // Gang leasing is atomic (all-or-nothing) and clamps to the
+        // surviving pool, so a degraded machine still serves —
+        // `gang_max: 1` is the classic single-slot lease.
+        let lease = shared.pool.lease_gang(shared.gang_max);
+        let gang = lease.len();
         for p in batch {
             // A deadline can expire during a predecessor's execution
             // in the same batch: re-check while holding the lease.
@@ -662,7 +677,7 @@ fn worker_loop(shared: &Shared) {
                         panic!("chaos: injected worker panic");
                     }
                 }
-                exe.execute_placed(&p.inputs, Some(&lease.slot))
+                exe.execute_gang(&p.inputs, &lease.slots)
             }));
             let execute_us = exec_start.elapsed().as_secs_f64() * 1e6;
             drop(exec_sp);
@@ -686,7 +701,8 @@ fn worker_loop(shared: &Shared) {
                     p.reply.send(Ok(RunDone {
                         outputs: out.outputs,
                         report: out.report,
-                        slot: lease.slot,
+                        slot: *lease.leader(),
+                        gang,
                         batch: n,
                         server_us: server_s * 1e6,
                         timing,

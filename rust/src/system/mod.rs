@@ -6,8 +6,10 @@
 
 pub mod area;
 pub mod fault;
+pub mod topology;
 
 pub use fault::{degradation_curve, DegradationPoint, FaultPlan};
+pub use topology::{allgather, chiplet_span, AllGatherCost, ChipletSpan};
 
 use crate::interconnect::{Tree, TreeConfig};
 use crate::power::DvfsModel;
@@ -169,6 +171,29 @@ impl SystemConfig {
         c.hbm_bytes = ((self.hbm_bytes as f64) * frac).max(1.0) as usize;
         c
     }
+
+    /// Chiplet-aware slot slicing: like [`Self::slice_clusters`], but
+    /// the slice knows *where* on the package it sits. A slice that
+    /// fits on a single chiplet is priced exactly as before (its
+    /// proportional HBM share is local). A slice that straddles
+    /// chiplets has its working set homed on the first chiplet, so
+    /// every remote chiplet's HBM share is capped at one die-to-die
+    /// link ([`topology::effective_hbm_bw`]) — straddling a big slice
+    /// across the package is strictly worse than ganging one aligned
+    /// slot per chiplet and paying an explicit all-gather.
+    pub fn slice_for_slot(&self, first_cluster: usize, n_clusters: usize) -> SystemConfig {
+        let mut c = self.slice_clusters(n_clusters);
+        let span = topology::chiplet_span(&self.tree, first_cluster, n_clusters);
+        if span.single_chiplet() {
+            return c;
+        }
+        let eff = topology::effective_hbm_bw(&self.tree, first_cluster, n_clusters);
+        // The sliced tree may have re-factored into fewer chiplets;
+        // spread the effective bandwidth over its levels so
+        // `aggregate_hbm()` on the slice equals `eff`.
+        c.tree.hbm_per_chiplet = eff / c.tree.chiplets as f64;
+        c
+    }
 }
 
 /// Paper headline numbers, computed (not hard-coded) from the config —
@@ -266,6 +291,33 @@ mod tests {
         // Peak flops scale linearly with the slice.
         let s = c.slice_clusters(32);
         assert!((s.peak_dp(0.9) / c.peak_dp(0.9) - 32.0 / 512.0).abs() < 1e-12);
+    }
+
+    /// Satellite pin: a slice on a single chiplet is *identical* under
+    /// origin-aware slicing — same clusters, same bandwidth — while a
+    /// straddling slice loses bandwidth to the D2D cap instead of
+    /// inheriting a full proportional share of the aggregate HBM.
+    #[test]
+    fn slice_for_slot_pins_single_chiplet_and_caps_straddles() {
+        let c = SystemConfig::default();
+        for first in [0usize, 32, 96, 128, 384] {
+            let a = c.slice_clusters(32);
+            let b = c.slice_for_slot(first, 32);
+            assert_eq!(a.tree.total_clusters(), b.tree.total_clusters());
+            assert!(
+                (a.hbm_bw(1.0e9) - b.hbm_bw(1.0e9)).abs() < 1e-9,
+                "single-chiplet slice at {first} must be unchanged"
+            );
+        }
+        // A 256-cluster slice homed on chiplet 0: remote half capped
+        // at one D2D link.
+        let s = c.slice_for_slot(0, 256);
+        let proportional = c.slice_clusters(256);
+        let want = (c.tree.hbm_per_chiplet + c.tree.d2d_link) * 1.0e9;
+        assert!((s.hbm_bw(1.0e9) - want).abs() < 1e-3, "{}", s.hbm_bw(1.0e9));
+        assert!(s.hbm_bw(1.0e9) < proportional.hbm_bw(1.0e9));
+        // Compute capacity is unaffected — only locality changes.
+        assert_eq!(s.total_cores(), proportional.total_cores());
     }
 
     #[test]

@@ -1,0 +1,199 @@
+//! Inter-chiplet package topology: which clusters sit on which
+//! chiplet, what the die-to-die fabric can move, and the collective
+//! (ring all-gather) cost model that prices a row-sharded GEMM's
+//! result exchange over it.
+//!
+//! The package is 4 chiplets joined by die-to-die (D2D) serial links,
+//! one HBM stack pair per chiplet. Bandwidths live in
+//! [`TreeConfig`] (`d2d_link`, `hbm_per_chiplet`, in B/cycle); this
+//! module adds the *locality* view the flat tree does not express:
+//! a cluster range's per-chiplet occupancy, the effective HBM
+//! bandwidth of a slice whose data is homed on its first chiplet,
+//! and the per-hop latency of the D2D fabric.
+
+use crate::interconnect::TreeConfig;
+
+/// Fixed per-hop latency of one D2D transfer step [cycles]: link
+/// serialization + protocol round trip. One ring all-gather step pays
+/// it once regardless of payload, so small collectives are
+/// latency-bound and large ones bandwidth-bound.
+pub const D2D_HOP_LATENCY_CYCLES: f64 = 512.0;
+
+/// Per-chiplet occupancy of a contiguous cluster range.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChipletSpan {
+    /// Chiplet of the range's first cluster (where its operands are
+    /// homed in the locality model).
+    pub home: usize,
+    /// `per_chiplet[c]` = clusters of the range living on chiplet `c`.
+    pub per_chiplet: Vec<usize>,
+}
+
+impl ChipletSpan {
+    /// Number of chiplets the range touches.
+    pub fn n_chiplets(&self) -> usize {
+        self.per_chiplet.iter().filter(|&&n| n > 0).count()
+    }
+
+    /// Whether the range fits on a single chiplet.
+    pub fn single_chiplet(&self) -> bool {
+        self.n_chiplets() <= 1
+    }
+}
+
+/// Per-chiplet occupancy of the contiguous range
+/// `[first, first + n)` under a tree geometry.
+pub fn chiplet_span(cfg: &TreeConfig, first: usize, n: usize) -> ChipletSpan {
+    let per = cfg.clusters_per_chiplet().max(1);
+    let total = cfg.total_clusters();
+    let first = first.min(total.saturating_sub(1));
+    let last = (first + n.max(1) - 1).min(total.saturating_sub(1));
+    let mut per_chiplet = vec![0usize; cfg.chiplets.max(1)];
+    for (c, slot) in per_chiplet.iter_mut().enumerate() {
+        let lo = c * per;
+        let hi = lo + per - 1;
+        if last >= lo && first <= hi {
+            *slot = last.min(hi) - first.max(lo) + 1;
+        }
+    }
+    ChipletSpan { home: first / per, per_chiplet }
+}
+
+/// Effective HBM bandwidth [B/cycle] of a cluster range whose working
+/// set is homed on the range's first chiplet. Clusters on the home
+/// chiplet stream their proportional share of the local stack; the
+/// clusters of every *other* chiplet must reach that data through the
+/// D2D fabric, so each remote chiplet's share is capped at one
+/// `d2d_link`. (A gang avoids this cap entirely: each member slot
+/// lives on its own chiplet with its own shard, paying only the
+/// explicit all-gather — see [`allgather_bytes`].)
+pub fn effective_hbm_bw(cfg: &TreeConfig, first: usize, n: usize) -> f64 {
+    let span = chiplet_span(cfg, first, n);
+    let per = cfg.clusters_per_chiplet().max(1) as f64;
+    let mut bw = 0.0;
+    for (c, &occ) in span.per_chiplet.iter().enumerate() {
+        if occ == 0 {
+            continue;
+        }
+        let share = occ as f64 / per * cfg.hbm_per_chiplet;
+        bw += if c == span.home { share } else { share.min(cfg.d2d_link) };
+    }
+    bw
+}
+
+/// Priced ring all-gather of a `total_bytes` result sharded evenly
+/// over a `gang`-slot gang (one slot per chiplet).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AllGatherCost {
+    /// Bytes each slot receives over its D2D link:
+    /// `total · (G−1)/G` (it already holds its own shard).
+    pub bytes_per_slot: f64,
+    /// Modeled cycles on the critical path: `G−1` serialized ring
+    /// steps, each moving one `total/G` chunk at `d2d_link` B/cycle
+    /// plus [`D2D_HOP_LATENCY_CYCLES`].
+    pub cycles: f64,
+}
+
+/// Ring all-gather cost over the D2D fabric (the pattern each gang
+/// member runs after its row shard of a GEMM completes: `G−1` steps,
+/// forwarding one chunk per step around the ring). `gang <= 1` is
+/// free — there is nothing to exchange.
+pub fn allgather(cfg: &TreeConfig, gang: usize, total_bytes: f64) -> AllGatherCost {
+    if gang <= 1 || total_bytes <= 0.0 {
+        return AllGatherCost { bytes_per_slot: 0.0, cycles: 0.0 };
+    }
+    let g = gang as f64;
+    let chunk = total_bytes / g;
+    let steps = g - 1.0;
+    AllGatherCost {
+        bytes_per_slot: chunk * steps,
+        cycles: steps * (chunk / cfg.d2d_link.max(1e-9) + D2D_HOP_LATENCY_CYCLES),
+    }
+}
+
+/// Bytes each gang member moves over the D2D fabric in a ring
+/// all-gather of `total_bytes`, *including* the per-hop latency
+/// expressed as equivalent link-occupancy bytes — so a plain
+/// `bytes / d2d_link` division (what the op-stream pricer does for a
+/// `Placement::D2d` task) reproduces [`allgather`]'s cycle count.
+pub fn allgather_bytes(cfg: &TreeConfig, gang: usize, total_bytes: f64) -> f64 {
+    let c = allgather(cfg, gang, total_bytes);
+    c.cycles * cfg.d2d_link
+}
+
+/// Largest gang a pool of `slots_per_chiplet`-grouped slots can host:
+/// one slot per chiplet is the intended shape, so the cap is the
+/// chiplet count.
+pub fn max_gang(cfg: &TreeConfig) -> usize {
+    cfg.chiplets.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TreeConfig {
+        TreeConfig::default()
+    }
+
+    #[test]
+    fn span_counts_per_chiplet_occupancy() {
+        let c = cfg();
+        // Fully inside chiplet 0.
+        let s = chiplet_span(&c, 0, 32);
+        assert_eq!(s.home, 0);
+        assert_eq!(s.per_chiplet, vec![32, 0, 0, 0]);
+        assert!(s.single_chiplet());
+        // Straddling chiplets 0 and 1 (128 clusters per chiplet).
+        let s = chiplet_span(&c, 100, 56);
+        assert_eq!(s.home, 0);
+        assert_eq!(s.per_chiplet, vec![28, 28, 0, 0]);
+        assert_eq!(s.n_chiplets(), 2);
+        // Whole machine.
+        let s = chiplet_span(&c, 0, 512);
+        assert_eq!(s.per_chiplet, vec![128; 4]);
+    }
+
+    #[test]
+    fn single_chiplet_slice_keeps_proportional_bw() {
+        let c = cfg();
+        // 32 clusters on one chiplet: proportional share of the local
+        // stack, no D2D involved.
+        let want = 32.0 / 128.0 * c.hbm_per_chiplet;
+        assert!((effective_hbm_bw(&c, 0, 32) - want).abs() < 1e-12);
+        assert!((effective_hbm_bw(&c, 384, 32) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn straddling_slice_is_d2d_capped() {
+        let c = cfg();
+        // 256 clusters homed on chiplet 0: the 128 remote clusters'
+        // share (256 B/cycle) collapses to one d2d_link (64).
+        let eff = effective_hbm_bw(&c, 0, 256);
+        let proportional = 256.0 / 512.0 * c.aggregate_hbm();
+        assert!((eff - (c.hbm_per_chiplet + c.d2d_link)).abs() < 1e-12);
+        assert!(eff < proportional, "{eff} !< {proportional}");
+    }
+
+    #[test]
+    fn allgather_scales_with_gang() {
+        let c = cfg();
+        let total = 1024.0 * 1024.0;
+        assert_eq!(allgather(&c, 1, total).cycles, 0.0);
+        let g2 = allgather(&c, 2, total);
+        let g4 = allgather(&c, 4, total);
+        // Each slot receives (G-1)/G of the total.
+        assert!((g2.bytes_per_slot - total / 2.0).abs() < 1e-9);
+        assert!((g4.bytes_per_slot - total * 3.0 / 4.0).abs() < 1e-9);
+        // More hops, more latency and more bytes per slot.
+        assert!(g4.cycles > g2.cycles);
+        // Latency-equivalent bytes reproduce the cycle count exactly.
+        let eq = allgather_bytes(&c, 4, total);
+        assert!((eq / c.d2d_link - g4.cycles).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_gang_is_chiplet_count() {
+        assert_eq!(max_gang(&cfg()), 4);
+    }
+}

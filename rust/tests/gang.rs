@@ -1,0 +1,253 @@
+//! Multi-chiplet gang execution, end to end: sharded pricing must
+//! never change numerics (bit-exactness over every checked-in
+//! artifact), the serve layer must survive chaos panics and mid-gang
+//! slot retirements without deadlocking, and the wire protocol must
+//! carry the gang size and the pool's gang capacity.
+
+use manticore::runtime::sim::SimBackend;
+use manticore::runtime::{inputs_for_meta, load_manifest, Executable};
+use manticore::system::{ClusterSlot, SystemConfig};
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+fn artifacts_present() -> bool {
+    if Path::new("artifacts/manifest.json").exists() {
+        true
+    } else {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        false
+    }
+}
+
+/// One full-chiplet slot per chiplet: the gang shape `--gang-max 4`
+/// serving leases on the default machine.
+fn chiplet_slots() -> Vec<ClusterSlot> {
+    let tree = SystemConfig::default().tree;
+    let per = tree.clusters_per_chiplet();
+    (0..tree.chiplets)
+        .map(|c| ClusterSlot {
+            id: c,
+            first_cluster: c * per,
+            n_clusters: per,
+        })
+        .collect()
+}
+
+/// Tentpole acceptance: for EVERY checked-in artifact, gang execution
+/// is bit-identical to single-slot execution — sharding is a pricing
+/// construct and must never leak into numerics — while the gang's
+/// priced latency never exceeds the single-slot price (large dots
+/// shard, small ones are replicated at equal cost, non-dots split
+/// data-parallel).
+#[test]
+fn gang_outputs_bit_identical_across_all_artifacts() {
+    if !artifacts_present() {
+        return;
+    }
+    let manifest = load_manifest(Path::new("artifacts"), "gang").unwrap();
+    let backend = SimBackend::new();
+    let slots = chiplet_slots();
+    let leader = slots[0];
+    for (name, meta) in &manifest {
+        let text =
+            std::fs::read_to_string(format!("artifacts/{name}.hlo.txt"))
+                .unwrap();
+        let exe = backend.compile_sim(name, &text).unwrap();
+        let inputs = inputs_for_meta(meta, 7).unwrap();
+        let single = exe.execute_placed(&inputs, Some(&leader)).unwrap();
+        let gang = exe.execute_gang(&inputs, &slots).unwrap();
+        assert_eq!(
+            single.outputs, gang.outputs,
+            "{name}: sharded outputs diverged from single-slot"
+        );
+        let (rs, rg) = (
+            single.report.expect("single report"),
+            gang.report.expect("gang report"),
+        );
+        assert!(
+            rg.total_time_s <= rs.total_time_s * (1.0 + 1e-9),
+            "{name}: gang latency {} exceeds single-slot {}",
+            rg.total_time_s,
+            rs.total_time_s
+        );
+    }
+}
+
+/// The wire protocol carries the gang: a `--gang-max 2` server on
+/// four full-chiplet slots answers runs with `gang: 2` (slot = the
+/// leader), and `health` reports the pool's full gang capacity.
+#[test]
+fn run_replies_carry_gang_size_and_health_reports_capacity() {
+    use manticore::config::Config;
+    use manticore::serve::protocol::{Reply, Request};
+    use manticore::serve::{ServeConfig, Server};
+
+    if !artifacts_present() {
+        return;
+    }
+    let server = Server::start(
+        &ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            backend: "sim".to_string(),
+            slot_clusters: 128,
+            gang_max: 2,
+            ..ServeConfig::default()
+        },
+        &Config::default(),
+    )
+    .expect("server start");
+    let addr = server.addr();
+
+    let manifest = load_manifest(Path::new("artifacts"), "gang").unwrap();
+    let meta = manifest.get("matmul_f64_64").expect("artifact");
+    let inputs = inputs_for_meta(meta, 11).unwrap();
+
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(30)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let req = Request::Run {
+        artifact: "matmul_f64_64".to_string(),
+        inputs,
+        deadline_ms: None,
+    };
+    writeln!(writer, "{}", req.to_line()).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    match Reply::parse(&line).unwrap() {
+        Reply::Run(r) => {
+            assert_eq!(r.gang, 2, "gang size on the wire");
+            assert!(r.slot.is_some(), "leader slot on the wire");
+            assert!(r.sim.is_some(), "sim summary rides along");
+        }
+        other => panic!("unexpected reply {other:?}"),
+    }
+
+    writeln!(writer, "{}", Request::Health.to_line()).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    match Reply::parse(&line).unwrap() {
+        Reply::Health(h) => {
+            assert_eq!(h.slots, 4);
+            assert_eq!(h.gang_capacity, 4, "healthy pool: full gang");
+        }
+        other => panic!("unexpected reply {other:?}"),
+    }
+
+    writeln!(writer, "{}", Request::Shutdown.to_line()).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let stats = server.wait();
+    assert_eq!(stats.errors, 0);
+}
+
+/// Chaos, mid-gang: worker panics plus a scheduled slot fault on a
+/// whole-machine gang (`--gang-max 4` on 4 slots). Retiring a busy
+/// member retires the whole gang at release (keep-one-active leaves a
+/// survivor), and every request still gets a typed reply — no
+/// deadlock, no leaked lease, and the degraded pool's gang capacity
+/// shrinks accordingly.
+#[test]
+fn gang_server_survives_chaos_panics_and_member_retirement() {
+    use manticore::config::Config;
+    use manticore::serve::protocol::{Reply, Request};
+    use manticore::serve::{ChaosSpec, ServeConfig, Server};
+
+    if !artifacts_present() {
+        return;
+    }
+    let chaos = ChaosSpec {
+        seed: 7,
+        worker_panic_rate: 0.3,
+        slot_faults: vec![manticore::serve::chaos::SlotFault {
+            after_requests: 4,
+            slot: 1,
+        }],
+        ..ChaosSpec::default()
+    };
+    let server = Server::start(
+        &ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            backend: "native".to_string(),
+            slot_clusters: 128,
+            gang_max: 4,
+            chaos: Some(chaos),
+            ..ServeConfig::default()
+        },
+        &Config::default(),
+    )
+    .expect("server start");
+    let addr = server.addr();
+
+    let manifest = load_manifest(Path::new("artifacts"), "gang").unwrap();
+    let meta = manifest.get("matmul_f64_64").expect("artifact");
+
+    const REQUESTS: usize = 24;
+    let mut oks = 0usize;
+    let mut errs = 0usize;
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(30)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    for i in 0..REQUESTS {
+        let req = Request::Run {
+            artifact: "matmul_f64_64".to_string(),
+            inputs: inputs_for_meta(meta, 100 + i as u64).unwrap(),
+            deadline_ms: None,
+        };
+        writeln!(writer, "{}", req.to_line()).unwrap();
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).unwrap();
+        assert!(n > 0, "request {i}: connection died (deadlock or leak?)");
+        match Reply::parse(&line).unwrap() {
+            Reply::Run(r) => {
+                assert!(
+                    (1..=4).contains(&r.gang),
+                    "request {i}: gang {} out of range",
+                    r.gang
+                );
+                oks += 1;
+            }
+            Reply::Err(e) => {
+                // Injected panics surface as typed internal errors.
+                assert_eq!(
+                    e.code,
+                    manticore::serve::protocol::ErrCode::Internal,
+                    "request {i}: {}",
+                    e.msg
+                );
+                errs += 1;
+            }
+            other => panic!("request {i}: unexpected reply {other:?}"),
+        }
+    }
+    assert!(oks > 0, "no request survived the chaos");
+    assert!(errs > 0, "panic rate 0.3 over 24 requests injected nothing");
+
+    // The scheduled fault contaminated a busy whole-machine gang:
+    // gang-wide retirement (keep-one-active) shrinks the capacity.
+    writeln!(writer, "{}", Request::Health.to_line()).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    match Reply::parse(&line).unwrap() {
+        Reply::Health(h) => {
+            assert!(
+                h.gang_capacity >= 1 && h.gang_capacity < 4,
+                "expected a degraded (but serving) pool, got capacity {}",
+                h.gang_capacity
+            );
+            assert!(h.retired_slots > 0, "slot fault never landed");
+        }
+        other => panic!("unexpected reply {other:?}"),
+    }
+
+    writeln!(writer, "{}", Request::Shutdown.to_line()).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let stats = server.wait();
+    assert_eq!(stats.requests + stats.errors, REQUESTS as u64);
+}
